@@ -1,0 +1,78 @@
+//! Quickstart: train a small ConvCoTM on the synthetic MNIST substitute,
+//! save/load the 5 632-byte accelerator model, classify through all three
+//! engines (native, ASIC simulator, PJRT artifact) and show they agree.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use convcotm::asic::{Accelerator, ChipConfig};
+use convcotm::data::{booleanize_split, SynthFamily};
+use convcotm::model_io;
+use convcotm::runtime::{ModelInputs, Runtime};
+use convcotm::tm::{Engine, Params, Trainer};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: procedural MNIST-like digits (no downloads needed).
+    let dataset = SynthFamily::Digits.generate(600, 200, 7);
+    let train = booleanize_split(&dataset.train, dataset.booleanizer);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    println!("dataset: {} ({} train / {} test)", dataset.name, train.len(), test.len());
+
+    // 2. Train the accelerator configuration (128 clauses, 10 classes).
+    let mut trainer = Trainer::new(Params::asic(), 42);
+    for epoch in 0..5 {
+        let stats = trainer.epoch(&train, epoch);
+        println!(
+            "epoch {}: online accuracy {:.1}%, {} includes ({:.1}% exclude)",
+            epoch,
+            stats.train_accuracy * 100.0,
+            stats.total_includes,
+            stats.exclude_fraction * 100.0
+        );
+    }
+    let model = trainer.export();
+
+    // 3. Save / reload the chip's 5 632-byte model format.
+    let path = std::env::temp_dir().join("quickstart.cctm");
+    model_io::save_file(&model, &path)?;
+    let model = model_io::load_file(Params::asic(), &path)?;
+    println!("model saved+reloaded: {} bytes payload", model_io::to_wire(&model).len());
+
+    // 4. Classify through the native engine and the ASIC simulator.
+    let engine = Engine::new();
+    let sw_acc = engine.accuracy(&model, &test);
+    let mut asic = Accelerator::new(Params::asic(), ChipConfig::default());
+    asic.load_model(&model);
+    let mut asic_correct = 0;
+    for (i, (img, label)) in test.iter().enumerate() {
+        let r = asic.classify(img, Some(*label), i > 0)?;
+        if r.prediction == *label {
+            asic_correct += 1;
+        }
+    }
+    let asic_acc = asic_correct as f64 / test.len() as f64;
+    println!("accuracy: native {:.2}%  asic-sim {:.2}%", sw_acc * 100.0, asic_acc * 100.0);
+    assert_eq!(sw_acc, asic_acc, "§V: ASIC matches SW exactly");
+
+    // 5. And through the AOT-compiled JAX/Pallas artifact, if present.
+    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifact_dir.join("convcotm_b1.hlo.txt").exists() {
+        let mut rt = Runtime::new(&artifact_dir)?;
+        let graph = rt.load("convcotm_b1", 1)?;
+        let inputs = ModelInputs::from_model(&model);
+        let mut agree = 0;
+        for (img, _) in test.iter().take(25) {
+            let out = &graph.run(&[img], &inputs)?[0];
+            if out.prediction == engine.classify(&model, img).prediction {
+                agree += 1;
+            }
+        }
+        println!("PJRT artifact agreement with native engine: {agree}/25");
+        assert_eq!(agree, 25);
+    } else {
+        println!("(PJRT check skipped — run `make artifacts`)");
+    }
+
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! The §VI-C envisaged CIFAR-10 accelerator, explored: the Table III
+//! estimate regenerated, then swept over the design knobs (clause count,
+//! literal budget, model-RAM paging width, specialist count) to show the
+//! rate/EPC/area trade-offs the estimation procedure implies.
+//!
+//! Run: `cargo run --release --example scaled_cifar10`
+
+use convcotm::energy::scaleup::{estimate, paper_specialists, ScaleUpAssumptions, Specialist};
+use convcotm::util::Table;
+
+fn main() {
+    let base = estimate(&paper_specialists(), &ScaleUpAssumptions::default());
+    println!("\nTable III baseline (paper §VI-C):");
+    println!(
+        "  model {:.1} kB/specialist ({:.0} kB total), {} cycles/classification,\n  \
+         {:.0} FPS, R={:.2}, {:.1}/{:.1} mm² (65/28 nm), {:.1}/{:.1} mW, {:.2}/{:.2} µJ",
+        base.specialist_model_bytes as f64 / 1e3,
+        base.total_model_bytes as f64 / 1e3,
+        base.cycles_per_classification,
+        base.rate_fps,
+        base.r_ratio,
+        base.area_65nm_mm2,
+        base.area_28nm_mm2,
+        base.power_65nm_w * 1e3,
+        base.power_28nm_w * 1e3,
+        base.epc_65nm_j * 1e6,
+        base.epc_28nm_j * 1e6,
+    );
+
+    // Sweep 1: clauses per specialist.
+    println!("\nSweep: clauses per specialist (16-literal budget, 4 specialists)");
+    let mut t = Table::new(&["Clauses", "Model/spec", "Rate", "EPC (65 nm)", "Area (65 nm)"]);
+    for clauses in [250, 500, 1000, 2000, 4000] {
+        let spec: Vec<Specialist> = paper_specialists()
+            .into_iter()
+            .map(|s| Specialist { clauses, ..s })
+            .collect();
+        let e = estimate(&spec, &ScaleUpAssumptions::default());
+        t.row(&[
+            format!("{clauses}"),
+            format!("{:.1} kB", e.specialist_model_bytes as f64 / 1e3),
+            format!("{:.0} FPS", e.rate_fps),
+            format!("{:.2} µJ", e.epc_65nm_j * 1e6),
+            format!("{:.1} mm²", e.area_65nm_mm2),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    // Sweep 2: literal budget per clause.
+    println!("Sweep: included literals per clause");
+    let mut t = Table::new(&["Literals/clause", "Model/spec", "EPC (65 nm)", "Area (65 nm)"]);
+    for lits in [8, 16, 32, 64] {
+        let spec: Vec<Specialist> = paper_specialists()
+            .into_iter()
+            .map(|s| Specialist {
+                literals_per_clause: lits,
+                ..s
+            })
+            .collect();
+        let e = estimate(&spec, &ScaleUpAssumptions::default());
+        t.row(&[
+            format!("{lits}"),
+            format!("{:.1} kB", e.specialist_model_bytes as f64 / 1e3),
+            format!("{:.2} µJ", e.epc_65nm_j * 1e6),
+            format!("{:.1} mm²", e.area_65nm_mm2),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    // Sweep 3: model-RAM paging width (the §VI-C 32 B/cycle assumption).
+    println!("Sweep: model paging width (bytes/cycle)");
+    let mut t = Table::new(&["Width", "Cycles/classification", "Rate", "EPC (65 nm)"]);
+    for width in [8, 16, 32, 64, 128] {
+        let a = ScaleUpAssumptions {
+            model_xfer_bytes_per_cycle: width,
+            ..ScaleUpAssumptions::default()
+        };
+        let e = estimate(&paper_specialists(), &a);
+        t.row(&[
+            format!("{width} B"),
+            format!("{}", e.cycles_per_classification),
+            format!("{:.0} FPS", e.rate_fps),
+            format!("{:.2} µJ", e.epc_65nm_j * 1e6),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    // Sweep 4: number of specialists (accuracy/energy trade of TM Composites).
+    println!("Sweep: number of TM specialists");
+    let mut t = Table::new(&["Specialists", "Total model", "Rate", "EPC (65 nm)"]);
+    for n in [1usize, 2, 4, 8] {
+        let spec: Vec<Specialist> = paper_specialists().into_iter().cycle().take(n).collect();
+        let e = estimate(&spec, &ScaleUpAssumptions::default());
+        t.row(&[
+            format!("{n}"),
+            format!("{:.0} kB", e.total_model_bytes as f64 / 1e3),
+            format!("{:.0} FPS", e.rate_fps),
+            format!("{:.2} µJ", e.epc_65nm_j * 1e6),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!("scaled_cifar10 OK");
+}

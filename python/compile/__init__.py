@@ -1,0 +1,2 @@
+"""Build-time-only compile path: JAX model (L2) + Pallas kernels (L1) and
+the AOT lowering to HLO text. Never imported on the Rust request path."""

@@ -1,0 +1,84 @@
+"""AOT bridge: lower the L2 graph (with its L1 Pallas kernels) to HLO
+*text* and write artifacts the Rust runtime loads via the `xla` crate.
+
+HLO text - not serialized HloModuleProto - is the interchange format: the
+crate's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids, while the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: default printing elides large constants as `constant({...})`
+    # and the xla_extension 0.5.1 text parser zero-fills them silently.
+    # Print fully; the graph also avoids large trace-time constants (the
+    # position thermometers are built from iota in-graph).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The 0.5.1 parser predates jax's source_end_line/... metadata attrs.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constant leaked into HLO text"
+    return text
+
+
+def lower_variant(batch):
+    fn = model.fn_for_batch(batch)
+    args = model.example_args(batch)
+    return jax.jit(fn).lower(*args)
+
+
+def build_artifacts(out_dir: str, batches=(None, 16)) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    meta = {"artifacts": []}
+    for batch in batches:
+        name = "convcotm_b1" if batch is None else f"convcotm_b{batch}"
+        text = to_hlo_text(lower_variant(batch))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"].append(
+            {
+                "name": name,
+                "path": os.path.basename(path),
+                "batch": 1 if batch is None else batch,
+                "inputs": ["img[f32]", "include[128x272 f32]", "weights[10x128 f32]"],
+                "outputs": ["sums[10]", "clauses[128]", "pred[]"],
+                "chars": len(text),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--batches",
+        default="1,16",
+        help="comma-separated batch sizes; 1 lowers the unbatched graph",
+    )
+    args = ap.parse_args()
+    batches = tuple(None if b == "1" else int(b) for b in args.batches.split(","))
+    build_artifacts(args.out_dir, batches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Canonical ConvCoTM geometry — mirrors DESIGN.md §4 and the Rust
+`data::patches` module bit-for-bit.
+
+Patch (x, y) of a 28x28 booleanized image, 10x10 window, stride 1,
+B = 19*19 = 361 patches, patch index p = 19*y + x (x slides fastest).
+
+Features (o = 136):
+  [0..100)   window content, row-major: bit 10*wr + wc = img[y+wr, x+wc]
+  [100..118) y-position thermometer, 18 bits LSB-first: bit t = (y >= t+1)
+  [118..136) x-position thermometer, same encoding
+Literals (2o = 272): features then negations.
+"""
+
+import numpy as np
+
+IMG_SIDE = 28
+WINDOW = 10
+POSITIONS = IMG_SIDE - WINDOW + 1  # 19
+NUM_PATCHES = POSITIONS * POSITIONS  # 361
+POS_BITS = POSITIONS - 1  # 18
+NUM_FEATURES = WINDOW * WINDOW + 2 * POS_BITS  # 136
+NUM_LITERALS = 2 * NUM_FEATURES  # 272
+
+NUM_CLAUSES = 128
+NUM_CLASSES = 10
+
+
+def patch_gather_indices() -> np.ndarray:
+    """(361, 100) int32 indices into the flat 784-pixel image: row p holds
+    the window-content pixel indices of patch p in row-major window order."""
+    idx = np.zeros((NUM_PATCHES, WINDOW * WINDOW), dtype=np.int32)
+    for y in range(POSITIONS):
+        for x in range(POSITIONS):
+            p = y * POSITIONS + x
+            k = 0
+            for wr in range(WINDOW):
+                for wc in range(WINDOW):
+                    idx[p, k] = (y + wr) * IMG_SIDE + (x + wc)
+                    k += 1
+    return idx
+
+
+def position_thermometers() -> np.ndarray:
+    """(361, 36) float32: per patch, the 18 y-thermometer bits followed by
+    the 18 x-thermometer bits (LSB-first, Table I)."""
+    pos = np.zeros((NUM_PATCHES, 2 * POS_BITS), dtype=np.float32)
+    for y in range(POSITIONS):
+        for x in range(POSITIONS):
+            p = y * POSITIONS + x
+            for t in range(POS_BITS):
+                pos[p, t] = 1.0 if y >= t + 1 else 0.0
+                pos[p, POS_BITS + t] = 1.0 if x >= t + 1 else 0.0
+    return pos
+
+
+def patch_literals_np(img_flat: np.ndarray) -> np.ndarray:
+    """Reference numpy literal extraction: (784,) 0/1 -> (361, 272) f32."""
+    assert img_flat.shape == (IMG_SIDE * IMG_SIDE,)
+    content = img_flat.astype(np.float32)[patch_gather_indices()]
+    feats = np.concatenate([content, position_thermometers()], axis=1)
+    return np.concatenate([feats, 1.0 - feats], axis=1)

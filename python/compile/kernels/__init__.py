@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (clause evaluation, class sums) and the pure-jnp
+oracle they are verified against."""
+
+from . import class_sum, clause_eval, ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: class-sum generation (Eq. 3, Fig. 5).
+
+The chip implements this as ten parallel MUX + adder reduction trees; on a
+TPU the whole thing is one tiny (m, n) @ (n,) contraction. Weights are
+integers carried in f32 (i8 range on the chip), clause outputs are 0/1, so
+the result is exact in f32 (|sum| <= 128*128 << 2^24).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(weights_ref, clauses_ref, out_ref):
+    # The MUX stage of Fig. 5 is the elementwise product; the adder tree is
+    # the contraction.
+    out_ref[...] = jax.lax.dot_general(
+        weights_ref[...],
+        clauses_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@jax.jit
+def class_sums(weights, clauses):
+    """weights: (m, n) f32; clauses: (n,) 0/1 f32 -> (m,) f32."""
+    m, n = weights.shape
+    assert clauses.shape == (n,)
+    return pl.pallas_call(
+        _kernel,
+        in_specs=[
+            pl.BlockSpec((m, n), lambda: (0, 0)),
+            pl.BlockSpec((n,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(weights, clauses)

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: clause evaluation as a streaming "violation matmul".
+
+Hardware adaptation (DESIGN.md §3): the chip evaluates 128 clauses x 272
+literals as a combinational AND plane, one patch per clock. On a TPU the
+same computation is a dense inclusion test
+
+    violations[j, b] = sum_k include[j, k] * (1 - lits[b, k])
+    fired[j, b]      = (violations[j, b] == 0) and clause j non-empty
+    clause[j]        = OR_b fired[j, b]            (Eq. 6, sequential OR)
+
+which is an MXU-shaped contraction: the include mask (128 x 272 ~ 68 KiB in
+bf16) stays VMEM-resident across all grid steps (the analogue of the chip's
+always-powered model registers) while patch tiles stream through the grid
+(the analogue of the sliding window register). The OR across grid steps is
+an accumulation into a revisited output block - the kernel image of the
+chip's per-clause DFF + OR gate.
+
+interpret=True everywhere: the CPU PJRT backend cannot run Mosaic
+custom-calls; TPU performance is estimated analytically in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..geometry import NUM_LITERALS, NUM_PATCHES
+
+# Patch-tile size: 361 patches = 19 tiles of 19. On real TPU hardware one
+# would pad to the 128-lane register shape; 19 divides the problem exactly
+# and keeps the interpret-mode oracle comparison total.
+PATCH_TILE = 19
+
+
+def _kernel(lits_ref, include_ref, nonempty_ref, out_ref):
+    """One grid step: evaluate all clauses on one tile of patches and OR
+    the result into the (revisited) output block."""
+    step = pl.program_id(0)
+    include = include_ref[...]  # (n, L) - resident across steps
+    lits = lits_ref[...]  # (tile, L) - streamed
+    # Violation contraction on the MXU: (n, L) @ (L, tile).
+    violations = jax.lax.dot_general(
+        include,
+        1.0 - lits,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (n, tile)
+    fired = jnp.where(violations == 0.0, 1.0, 0.0) * nonempty_ref[...][:, None]
+    tile_or = fired.max(axis=1)  # (n,)
+
+    # Sequential-OR accumulator (Eq. 6): initialize on the first step.
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = tile_or
+
+    @pl.when(step > 0)
+    def _accum():
+        out_ref[...] = jnp.maximum(out_ref[...], tile_or)
+
+
+@functools.partial(jax.jit, static_argnames=("patch_tile",))
+def clause_outputs(lits, include, patch_tile: int = PATCH_TILE):
+    """Image-level clause outputs via the Pallas kernel.
+
+    lits: (B, L) 0/1 f32; include: (n, L) 0/1 f32 -> (n,) 0/1 f32.
+    B must be divisible by patch_tile.
+    """
+    num_patches, num_literals = lits.shape
+    n_clauses = include.shape[0]
+    assert include.shape[1] == num_literals
+    assert num_patches % patch_tile == 0, (num_patches, patch_tile)
+    grid = num_patches // patch_tile
+    nonempty = (include.sum(axis=1) > 0).astype(jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            # Patch tiles stream along the grid (HBM -> VMEM schedule).
+            pl.BlockSpec((patch_tile, num_literals), lambda i: (i, 0)),
+            # Include mask pinned (constant index map = VMEM-resident).
+            pl.BlockSpec((n_clauses, num_literals), lambda i: (0, 0)),
+            pl.BlockSpec((n_clauses,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_clauses,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_clauses,), jnp.float32),
+        interpret=True,
+    )(lits, include, nonempty)
+
+
+def default_clause_outputs(lits, include):
+    """Kernel with the accelerator's geometry (361 patches, tile 19)."""
+    assert lits.shape == (NUM_PATCHES, NUM_LITERALS)
+    return clause_outputs(lits, include, patch_tile=PATCH_TILE)

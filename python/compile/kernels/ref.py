@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracle for the Pallas kernels (L1) and the full
+inference graph (L2).
+
+Semantics follow the chip exactly (paper Eqs. 2, 3, 4, 6):
+  - clause j fires on patch b iff every included literal is 1 and the
+    clause has at least one include (the IV-D Empty logic);
+  - per-image clause output is the OR over patches;
+  - class sums are the weighted sums of firing clauses;
+  - prediction is argmax with lowest-label tie-break (jnp.argmax picks the
+    first maximum, matching the Fig. 6 tree).
+"""
+
+import jax.numpy as jnp
+
+
+def clause_patch_matrix(lits, include):
+    """Per-patch combinational clause outputs c_j^b.
+
+    lits: (B, L) 0/1 float; include: (n, L) 0/1 float -> (n, B) 0/1 float.
+    A clause is violated on a patch if any included literal is 0 there:
+    violations[j, b] = sum_k include[j, k] * (1 - lits[b, k]).
+    """
+    violations = include @ (1.0 - lits).T  # (n, B)
+    nonempty = (include.sum(axis=1) > 0).astype(jnp.float32)  # (n,)
+    fired = (violations == 0).astype(jnp.float32)
+    return fired * nonempty[:, None]
+
+
+def clause_outputs(lits, include):
+    """Image-level clause outputs (Eq. 6): OR over patches. -> (n,)"""
+    return clause_patch_matrix(lits, include).max(axis=1)
+
+
+def class_sums(weights, clauses):
+    """Eq. 3: (m, n) @ (n,) -> (m,)."""
+    return weights @ clauses
+
+
+def predict(sums):
+    """Eq. 4 with the chip's tie-break (first maximum)."""
+    return jnp.argmax(sums)
+
+
+def infer(lits, include, weights):
+    """Full reference inference from patch literals."""
+    clauses = clause_outputs(lits, include)
+    sums = class_sums(weights, clauses)
+    return sums, clauses, predict(sums)

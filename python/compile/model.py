@@ -1,0 +1,104 @@
+"""L2: the full ConvCoTM inference graph in JAX, calling the L1 Pallas
+kernels. Lowered once by aot.py to HLO text; the Rust runtime executes the
+artifact on the request path.
+
+Inputs (all f32, so the PJRT literal plumbing stays uniform):
+  img      (784,)      booleanized pixels, 0/1, row-major
+  include  (128, 272)  TA-action bits, 0/1
+  weights  (10, 128)   clause weights (i8 values carried in f32)
+Outputs (tuple):
+  sums     (10,)   class sums (Eq. 3)
+  clauses  (128,)  image-level clause outputs (Eq. 6)
+  pred     ()      predicted class as f32 (argmax, lowest-label ties)
+
+Patch extraction reproduces DESIGN.md §4 exactly: gather indices and the
+position thermometers are trace-time constants baked into the HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .geometry import (
+    IMG_SIDE,
+    NUM_LITERALS,
+    NUM_PATCHES,
+    POS_BITS,
+    POSITIONS,
+    WINDOW,
+)
+from .kernels import class_sum, clause_eval
+
+
+def _position_thermometers():
+    """(361, 36) f32 built from iota *inside* the graph: no large trace-time
+    constant ends up in the HLO text (see aot.to_hlo_text)."""
+    p = jax.lax.broadcasted_iota(jnp.int32, (NUM_PATCHES, POS_BITS), 0)
+    t = jax.lax.broadcasted_iota(jnp.int32, (NUM_PATCHES, POS_BITS), 1)
+    y = p // POSITIONS
+    x = p % POSITIONS
+    y_therm = (y >= t + 1).astype(jnp.float32)
+    x_therm = (x >= t + 1).astype(jnp.float32)
+    return jnp.concatenate([y_therm, x_therm], axis=1)
+
+
+def patch_literals(img_flat):
+    """(784,) 0/1 f32 -> (361, 272) literals, canonical layout.
+
+    Window content is extracted with 100 static slices (one per window
+    cell) instead of a gather: the old XLA (0.5.1) behind the Rust `xla`
+    crate mis-executes jax>=0.8 gather lowerings, while slice / reshape /
+    stack round-trip exactly.
+    """
+    img2 = img_flat.reshape(IMG_SIDE, IMG_SIDE)
+    cols = []
+    for wr in range(WINDOW):
+        for wc in range(WINDOW):
+            win = jax.lax.slice(img2, (wr, wc), (wr + POSITIONS, wc + POSITIONS))
+            cols.append(win.reshape(-1))  # (361,) patch-index order
+    content = jnp.stack(cols, axis=1)  # (361, 100) row-major window cells
+    feats = jnp.concatenate([content, _position_thermometers()], axis=1)
+    return jnp.concatenate([feats, 1.0 - feats], axis=1)
+
+
+def infer_single(img_flat, include, weights):
+    """One image through patch-gen -> clause pool -> class sums -> argmax."""
+    lits = patch_literals(img_flat)
+    clauses = clause_eval.clause_outputs(lits, include)
+    sums = class_sum.class_sums(weights, clauses)
+    pred = jnp.argmax(sums).astype(jnp.float32)
+    return sums, clauses, pred
+
+
+def infer_batch(imgs, include, weights):
+    """(batch, 784) images; model broadcast across the batch."""
+    return jax.vmap(infer_single, in_axes=(0, None, None))(imgs, include, weights)
+
+
+def example_args(batch: int | None):
+    """ShapeDtypeStructs for AOT lowering."""
+    f32 = jnp.float32
+    img = (
+        jax.ShapeDtypeStruct((IMG_SIDE * IMG_SIDE,), f32)
+        if batch is None
+        else jax.ShapeDtypeStruct((batch, IMG_SIDE * IMG_SIDE), f32)
+    )
+    include = jax.ShapeDtypeStruct((128, NUM_LITERALS), f32)
+    weights = jax.ShapeDtypeStruct((10, 128), f32)
+    return img, include, weights
+
+
+def fn_for_batch(batch: int | None):
+    """The function to lower: single-image or vmapped batch variant."""
+    if batch is None:
+        return infer_single
+    return infer_batch
+
+
+__all__ = [
+    "patch_literals",
+    "infer_single",
+    "infer_batch",
+    "example_args",
+    "fn_for_batch",
+    "NUM_PATCHES",
+]

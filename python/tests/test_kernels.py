@@ -1,0 +1,101 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs the pure-jnp oracle,
+with hypothesis sweeps over shapes and densities."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.geometry import NUM_LITERALS, NUM_PATCHES, patch_literals_np
+from compile.kernels import class_sum, clause_eval, ref
+
+
+def random_problem(rng, n_patches, n_literals, n_clauses, lit_density, inc_density):
+    lits = (rng.random((n_patches, n_literals)) < lit_density).astype(np.float32)
+    include = (rng.random((n_clauses, n_literals)) < inc_density).astype(np.float32)
+    return jnp.asarray(lits), jnp.asarray(include)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    tiles=st.integers(1, 6),
+    tile=st.sampled_from([4, 8, 19]),
+    n_clauses=st.sampled_from([1, 8, 32]),
+    lit_density=st.floats(0.05, 0.95),
+    inc_density=st.floats(0.0, 0.25),
+)
+def test_clause_kernel_matches_ref(seed, tiles, tile, n_clauses, lit_density, inc_density):
+    rng = np.random.default_rng(seed)
+    n_patches = tiles * tile
+    lits, include = random_problem(rng, n_patches, 64, n_clauses, lit_density, inc_density)
+    got = clause_eval.clause_outputs(lits, include, patch_tile=tile)
+    want = ref.clause_outputs(lits, include)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_clause_kernel_full_geometry():
+    rng = np.random.default_rng(7)
+    lits, include = random_problem(rng, NUM_PATCHES, NUM_LITERALS, 128, 0.5, 0.03)
+    got = clause_eval.default_clause_outputs(lits, include)
+    want = ref.clause_outputs(lits, include)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (128,)
+
+
+def test_empty_clause_forced_low():
+    # All-exclude clause never fires even on all-ones literals (IV-D).
+    lits = jnp.ones((19, 16), jnp.float32)
+    include = jnp.zeros((4, 16), jnp.float32)
+    out = clause_eval.clause_outputs(lits, include, patch_tile=19)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(4, np.float32))
+
+
+def test_single_include_fires_when_literal_present():
+    lits = jnp.zeros((19, 16), jnp.float32).at[7, 3].set(1.0)
+    include = jnp.zeros((2, 16), jnp.float32).at[0, 3].set(1.0)
+    out = clause_eval.clause_outputs(lits, include, patch_tile=19)
+    np.testing.assert_array_equal(np.asarray(out), np.array([1.0, 0.0], np.float32))
+
+
+def test_or_accumulates_across_tiles():
+    # The firing patch is in the *last* tile: the revisited-output
+    # accumulator must carry it through.
+    lits = jnp.zeros((4 * 8, 16), jnp.float32).at[31, 5].set(1.0)
+    include = jnp.zeros((1, 16), jnp.float32).at[0, 5].set(1.0)
+    out = clause_eval.clause_outputs(lits, include, patch_tile=8)
+    assert np.asarray(out)[0] == 1.0
+    # And a clause firing only in the first tile survives later tiles.
+    lits2 = jnp.zeros((4 * 8, 16), jnp.float32).at[0, 5].set(1.0)
+    out2 = clause_eval.clause_outputs(lits2, include, patch_tile=8)
+    assert np.asarray(out2)[0] == 1.0
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    m=st.integers(1, 12),
+    n=st.sampled_from([8, 64, 128]),
+)
+def test_class_sum_kernel_matches_ref(seed, m, n):
+    rng = np.random.default_rng(seed)
+    weights = jnp.asarray(rng.integers(-128, 128, size=(m, n)).astype(np.float32))
+    clauses = jnp.asarray((rng.random(n) < 0.5).astype(np.float32))
+    got = class_sum.class_sums(weights, clauses)
+    want = ref.class_sums(weights, clauses)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_class_sum_extremes_exact():
+    weights = jnp.full((10, 128), -128.0, jnp.float32)
+    clauses = jnp.ones((128,), jnp.float32)
+    got = np.asarray(class_sum.class_sums(weights, clauses))
+    np.testing.assert_array_equal(got, np.full(10, -128.0 * 128))
+
+
+def test_patch_literals_np_halves_complementary():
+    rng = np.random.default_rng(3)
+    img = (rng.random(784) < 0.3).astype(np.float32)
+    lits = patch_literals_np(img)
+    assert lits.shape == (NUM_PATCHES, NUM_LITERALS)
+    np.testing.assert_array_equal(lits[:, :136] + lits[:, 136:], np.ones((361, 136)))

@@ -1,0 +1,84 @@
+"""L2 graph correctness: patch extraction layout, full inference vs
+oracle, batch/vmap consistency, argmax tie-break."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.geometry import (
+    NUM_PATCHES,
+    POSITIONS,
+    POS_BITS,
+    patch_gather_indices,
+    patch_literals_np,
+    position_thermometers,
+)
+from compile.kernels import ref
+
+
+def test_gather_indices_row_major_x_fastest():
+    idx = patch_gather_indices()
+    # Patch 0 = window at (0,0): first pixel is 0, second is 1, row step 28.
+    assert idx[0, 0] == 0 and idx[0, 1] == 1 and idx[0, 10] == 28
+    # Patch 1 = (x=1, y=0).
+    assert idx[1, 0] == 1
+    # Patch 19 = (x=0, y=1).
+    assert idx[POSITIONS, 0] == 28
+
+
+def test_position_thermometers_match_table1():
+    pos = position_thermometers()
+    # Patch 0: x=y=0 -> all zero.
+    np.testing.assert_array_equal(pos[0], np.zeros(36))
+    # Patch 360: x=y=18 -> all ones.
+    np.testing.assert_array_equal(pos[-1], np.ones(36))
+    # Patch (x=1, y=0): one x bit, no y bits.
+    p = 1
+    assert pos[p, :POS_BITS].sum() == 0 and pos[p, POS_BITS:].sum() == 1
+    assert pos[p, POS_BITS] == 1.0  # LSB-first
+
+
+def test_patch_literals_jax_equals_numpy():
+    rng = np.random.default_rng(11)
+    img = (rng.random(784) < 0.4).astype(np.float32)
+    got = np.asarray(model.patch_literals(jnp.asarray(img)))
+    want = patch_literals_np(img)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**32 - 1), inc_density=st.floats(0.0, 0.08))
+def test_full_graph_matches_oracle(seed, inc_density):
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray((rng.random(784) < 0.3).astype(np.float32))
+    include = jnp.asarray((rng.random((128, 272)) < inc_density).astype(np.float32))
+    weights = jnp.asarray(rng.integers(-127, 128, size=(10, 128)).astype(np.float32))
+    sums, clauses, pred = model.infer_single(img, include, weights)
+    lits = model.patch_literals(img)
+    rsums, rclauses, rpred = ref.infer(lits, include, weights)
+    np.testing.assert_array_equal(np.asarray(clauses), np.asarray(rclauses))
+    np.testing.assert_array_equal(np.asarray(sums), np.asarray(rsums))
+    assert int(pred) == int(rpred)
+
+
+def test_batch_matches_loop():
+    rng = np.random.default_rng(5)
+    imgs = jnp.asarray((rng.random((4, 784)) < 0.3).astype(np.float32))
+    include = jnp.asarray((rng.random((128, 272)) < 0.03).astype(np.float32))
+    weights = jnp.asarray(rng.integers(-127, 128, size=(10, 128)).astype(np.float32))
+    bsums, bclauses, bpred = model.infer_batch(imgs, include, weights)
+    for b in range(4):
+        sums, clauses, pred = model.infer_single(imgs[b], include, weights)
+        np.testing.assert_array_equal(np.asarray(bsums[b]), np.asarray(sums))
+        np.testing.assert_array_equal(np.asarray(bclauses[b]), np.asarray(clauses))
+        assert float(bpred[b]) == float(pred)
+
+
+def test_argmax_tie_break_lowest_label():
+    # Model with no includes: all clauses empty, all sums zero -> class 0.
+    img = jnp.zeros((784,), jnp.float32)
+    include = jnp.zeros((128, 272), jnp.float32)
+    weights = jnp.ones((10, 128), jnp.float32)
+    _, _, pred = model.infer_single(img, include, weights)
+    assert int(pred) == 0

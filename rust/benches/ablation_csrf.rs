@@ -1,0 +1,107 @@
+//! Experiment X1 / F4 — the clause-switching-reduction feedback (CSRF)
+//! ablation (§IV-D, §V): toggling of the combinational clause outputs with
+//! and without the feedback, and the resulting power/EPC delta.
+//!
+//! Paper claims: ≈50% reduction in c_j^b toggling; <1% power reduction
+//! (the clause comb logic is small next to the inference-core clock tree).
+//!
+//! Run: `cargo bench --bench ablation_csrf`
+
+use convcotm::asic::{Accelerator, ChipConfig, CycleReport};
+use convcotm::bench_harness::{section, FixtureSpec};
+use convcotm::data::SynthFamily;
+use convcotm::energy::{EnergyModel, OperatingPoint, SYSTEM_PERIOD_CYCLES_27M8};
+use convcotm::util::Table;
+
+fn run(csrf: bool, fixture: &convcotm::bench_harness::Fixture, n: usize) -> CycleReport {
+    let mut acc = Accelerator::new(
+        fixture.model.params.clone(),
+        ChipConfig {
+            csrf,
+            clock_gating: true,
+        },
+    );
+    acc.load_model(&fixture.model);
+    let mut total = CycleReport::default();
+    for (i, (img, _)) in fixture.test.iter().take(n).enumerate() {
+        let r = acc.classify(img, None, i > 0).unwrap();
+        total.accumulate(&r.report);
+    }
+    // Per-image average.
+    let mut avg = total;
+    avg.phases = convcotm::asic::fsm::PhaseCycles::standard();
+    avg.phases.transfer = 0;
+    for v in [
+        &mut avg.window_dff_clocks,
+        &mut avg.clause_dff_clocks,
+        &mut avg.sum_pipe_dff_clocks,
+        &mut avg.image_buffer_dff_clocks,
+        &mut avg.control_dff_clocks,
+        &mut avg.model_dff_clocks,
+        &mut avg.clause_comb_toggles,
+        &mut avg.clause_evaluations,
+        &mut avg.adder_ops,
+    ] {
+        *v /= n as u64;
+    }
+    avg
+}
+
+fn main() {
+    section("Ablation X1: clause switching reduction feedback (CSRF, Fig. 4)");
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let fixture = if quick {
+        FixtureSpec::quick(SynthFamily::Digits).build()
+    } else {
+        FixtureSpec::standard(SynthFamily::Digits).build()
+    };
+    let n = fixture.test.len().min(if quick { 100 } else { 500 });
+
+    let with = run(true, &fixture, n);
+    let without = run(false, &fixture, n);
+
+    let toggle_reduction = 1.0 - with.clause_comb_toggles as f64 / without.clause_comb_toggles as f64;
+    let eval_reduction = 1.0 - with.clause_evaluations as f64 / without.clause_evaluations as f64;
+
+    let em = EnergyModel::default();
+    let p_with = em.power(&with, OperatingPoint::FAST_1V2, SYSTEM_PERIOD_CYCLES_27M8);
+    let p_without = em.power(&without, OperatingPoint::FAST_1V2, SYSTEM_PERIOD_CYCLES_27M8);
+    let power_saving = 1.0 - p_with / p_without;
+
+    let mut t = Table::new(&["Metric", "CSRF on", "CSRF off", "Reduction", "Paper"]);
+    t.row(&[
+        "c_j^b toggles / image".into(),
+        format!("{}", with.clause_comb_toggles),
+        format!("{}", without.clause_comb_toggles),
+        format!("{:.1}%", toggle_reduction * 100.0),
+        "≈50%".into(),
+    ]);
+    t.row(&[
+        "clause evaluations / image".into(),
+        format!("{}", with.clause_evaluations),
+        format!("{}", without.clause_evaluations),
+        format!("{:.1}%", eval_reduction * 100.0),
+        "-".into(),
+    ]);
+    t.row(&[
+        "core power @27.8 MHz, 1.2 V".into(),
+        format!("{:.4} mW", p_with * 1e3),
+        format!("{:.4} mW", p_without * 1e3),
+        format!("{:.2}%", power_saving * 100.0),
+        "<1%".into(),
+    ]);
+    println!("{}", t.to_markdown());
+
+    println!(
+        "claim check: toggle reduction ≈50% — {} ({:.1}%)",
+        if (0.30..=0.75).contains(&toggle_reduction) { "HOLDS (shape)" } else { "VIOLATED" },
+        toggle_reduction * 100.0
+    );
+    println!(
+        "claim check: power saving <1% — {} ({:.2}%)",
+        if power_saving >= 0.0 && power_saving < 0.01 { "HOLDS" } else { "VIOLATED" },
+        power_saving * 100.0
+    );
+    assert!(toggle_reduction > 0.2, "CSRF must cut toggling substantially");
+    assert!(power_saving >= 0.0 && power_saving < 0.01);
+}

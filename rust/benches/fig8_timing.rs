@@ -1,0 +1,78 @@
+//! Figs. 7 & 8 + Table I — the accelerator's timing: FSM walk, the
+//! 471-cycle single-image latency breakdown, the 372-cycle continuous-mode
+//! period with transfer overlap, and the thermometer position encoding.
+//!
+//! Run: `cargo bench --bench fig8_timing`
+
+use convcotm::asic::fsm::{self, State};
+use convcotm::asic::{Accelerator, ChipConfig};
+use convcotm::bench_harness::{section, FixtureSpec};
+use convcotm::coordinator::SysProc;
+use convcotm::data::{thermo, SynthFamily};
+use convcotm::util::Table;
+
+fn main() {
+    section("Table I: thermometer position encoding (10×10 window in 28×28)");
+    let mut t1 = Table::new(&["x or y position", "Thermometer encoded value (18 bits)"]);
+    for v in [0usize, 1, 2, 16, 17, 18] {
+        t1.row(&[format!("{v}"), thermo::to_table_string(v, 18)]);
+    }
+    println!("{}", t1.to_markdown());
+
+    section("Fig. 7: accelerator FSM walk (single-shot then continuous)");
+    let mut s = State::Idle;
+    let mut trace = vec![format!("{s:?}")];
+    for _ in 0..6 {
+        s = fsm::next_state(s, false);
+        trace.push(format!("{s:?}"));
+    }
+    println!("single-shot: {}", trace.join(" → "));
+    let mut s = State::Output;
+    println!(
+        "continuous:  Output → {:?} (skips Idle/LoadImage — next frame already buffered)",
+        fsm::next_state(s, true)
+    );
+    s = State::LoadModel;
+    println!("load-model:  LoadModel → {:?}", fsm::next_state(s, false));
+
+    section("Fig. 8: cycle-level timing (measured on the simulator)");
+    let f = FixtureSpec::quick(SynthFamily::Digits).build();
+    let mut acc = Accelerator::new(f.model.params.clone(), ChipConfig::default());
+    acc.load_model(&f.model);
+
+    let single = acc.classify(&f.test[0].0, None, false).unwrap();
+    let p = &single.report.phases;
+    let mut t = Table::new(&["Phase", "Cycles", "Notes"]);
+    t.row(&["Image transfer (AXI, byte/cycle)".into(), format!("{}", p.transfer), "98 data + 1 label byte".into()]);
+    t.row(&["Clause-register reset".into(), format!("{}", p.clause_reset), "Fig. 4 DFF reset".into()]);
+    t.row(&["Patch generation".into(), format!("{}", p.patches), "19×19 window positions".into()]);
+    t.row(&["Class-sum pipeline".into(), format!("{}", p.class_sum), "3-stage tree, gated (§IV-F)".into()]);
+    t.row(&["Argmax latch".into(), format!("{}", p.argmax), "Fig. 6 tree (combinational)".into()]);
+    t.row(&["Result/interrupt".into(), format!("{}", p.output), "prediction + label echo".into()]);
+    t.row(&["FSM transitions".into(), format!("{}", p.fsm_overhead), "state entry/exit".into()]);
+    t.row(&["TOTAL latency".into(), format!("{}", p.latency()), "paper: 471 cycles".into()]);
+    println!("{}", t.to_markdown());
+    assert_eq!(p.latency(), 471);
+
+    // Continuous mode over N images.
+    let n = 64;
+    let images: Vec<_> = f.test.iter().take(n).map(|(i, _)| (i.clone(), None)).collect();
+    let (results, cycles) = acc.run_continuous(&images).unwrap();
+    println!(
+        "continuous mode: {n} images in {cycles} cycles = 99 + {n}×372 → {} cycles/img steady-state",
+        (cycles as usize - 99) / n
+    );
+    assert_eq!(cycles as usize, 99 + n * 372);
+    assert_eq!(results.len(), n);
+
+    let sp = SysProc;
+    println!(
+        "\npure accelerator bound @27.8 MHz: {:.1} k img/s; with system overhead: {:.1} k img/s (paper: 60.3 k)",
+        27.8e6 / 372.0 / 1e3,
+        sp.classification_rate(27.8e6) / 1e3
+    );
+    println!(
+        "single-image latency @27.8 MHz incl. system overhead: {:.1} µs (paper: 25.4 µs)",
+        sp.single_image_latency(27.8e6) * 1e6
+    );
+}

@@ -1,0 +1,183 @@
+//! Hot-path microbenchmarks (the §Perf instrument): native engine
+//! throughput, ASIC-simulator speed, PJRT artifact throughput (batch 1 and
+//! 16), trainer throughput and coordinator batching overhead.
+//!
+//! Targets (DESIGN.md §7): native ≥60.3 k img/s single core; ASIC sim
+//! ≥1 M cycles/s; coordinator overhead <10 µs p50.
+//!
+//! Run: `cargo bench --bench hotpath_microbench`
+
+use convcotm::asic::{Accelerator, ChipConfig};
+use convcotm::bench_harness::{fmt_k, section, FixtureSpec};
+use convcotm::coordinator::{BatchConfig, Coordinator, NativeBackend, PjrtBackend};
+use convcotm::data::SynthFamily;
+use convcotm::runtime::ModelInputs;
+use convcotm::tm::{Engine, Trainer};
+use convcotm::util::stats::Summary;
+use convcotm::util::Table;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn throughput(label: &str, t: &mut Table, images_per_iter: usize, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    f();
+    let budget = Duration::from_millis(
+        if std::env::var("BENCH_QUICK").is_ok() { 300 } else { 1500 },
+    );
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while start.elapsed() < budget {
+        f();
+        iters += 1;
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let rate = (iters * images_per_iter) as f64 / secs;
+    t.row(&[
+        label.into(),
+        format!("{} img/s", fmt_k(rate)),
+        format!("{:.2} µs/img", 1e6 / rate),
+    ]);
+    rate
+}
+
+fn main() {
+    section("Hot-path microbenchmarks (§Perf)");
+    let fixture = FixtureSpec::quick(SynthFamily::Digits).build();
+    let images: Vec<_> = fixture.test.iter().map(|(i, _)| i.clone()).collect();
+    let model = fixture.model.clone();
+
+    let mut t = Table::new(&["Path", "Throughput", "Per image"]);
+
+    // Native engine, early-exit on (the CSRF analogue).
+    let engine = Engine::new();
+    let mut idx = 0usize;
+    let native_rate = throughput("native engine (early-exit)", &mut t, 1, || {
+        let img = &images[idx % images.len()];
+        idx += 1;
+        std::hint::black_box(engine.classify(&model, img));
+    });
+
+    // Native engine, exhaustive.
+    let slow_engine = Engine { early_exit: false };
+    let mut idx2 = 0usize;
+    throughput("native engine (exhaustive)", &mut t, 1, || {
+        let img = &images[idx2 % images.len()];
+        idx2 += 1;
+        std::hint::black_box(slow_engine.classify(&model, img));
+    });
+
+    // ASIC simulator.
+    let mut acc = Accelerator::new(model.params.clone(), ChipConfig::default());
+    acc.load_model(&model);
+    let mut idx3 = 0usize;
+    let t_sim = Instant::now();
+    let mut sim_iters = 0usize;
+    while t_sim.elapsed() < Duration::from_millis(800) {
+        let img = &images[idx3 % images.len()];
+        idx3 += 1;
+        std::hint::black_box(acc.classify(img, None, true).unwrap());
+        sim_iters += 1;
+    }
+    let sim_secs = t_sim.elapsed().as_secs_f64();
+    let sim_rate = sim_iters as f64 / sim_secs;
+    let sim_cycles_rate = sim_rate * 372.0;
+    t.row(&[
+        "ASIC simulator".into(),
+        format!("{} img/s", fmt_k(sim_rate)),
+        format!("{:.2} M sim-cycles/s", sim_cycles_rate / 1e6),
+    ]);
+
+    // PJRT artifacts.
+    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifact_dir.join("convcotm_b1.hlo.txt").exists() {
+        let mi = ModelInputs::from_model(&model);
+        let mut rt = convcotm::runtime::Runtime::new(&artifact_dir).unwrap();
+        {
+            let g1 = rt.load("convcotm_b1", 1).unwrap();
+            let mut i = 0usize;
+            throughput("PJRT artifact (batch 1)", &mut t, 1, || {
+                let img = &images[i % images.len()];
+                i += 1;
+                std::hint::black_box(g1.run(&[img], &mi).unwrap());
+            });
+        }
+        {
+            let g16 = rt.load("convcotm_b16", 16).unwrap();
+            let refs: Vec<&convcotm::data::BoolImage> = images.iter().take(16).collect();
+            throughput("PJRT artifact (batch 16)", &mut t, 16, || {
+                std::hint::black_box(g16.run(&refs, &mi).unwrap());
+            });
+        }
+    } else {
+        eprintln!("(PJRT rows skipped: run `make artifacts`)");
+    }
+
+    // Trainer throughput (the §VI-B substrate).
+    let mut trainer = Trainer::new(model.params.clone(), 7);
+    let mut i = 0usize;
+    throughput("trainer (update/sample)", &mut t, 1, || {
+        let (img, label) = &fixture.train[i % fixture.train.len()];
+        i += 1;
+        trainer.update(img, *label);
+    });
+
+    println!("{}", t.to_markdown());
+
+    // Coordinator batching overhead: compare direct engine latency with
+    // end-to-end coordinator latency under a single-inflight load.
+    section("Coordinator overhead");
+    let coord = Coordinator::start(
+        Box::new(NativeBackend::new(model.clone())),
+        BatchConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(50),
+        },
+    );
+    let mut lats = Vec::new();
+    for img in images.iter().cycle().take(400) {
+        let t0 = Instant::now();
+        coord.classify(img.clone()).unwrap();
+        lats.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let snap = coord.shutdown();
+    let direct_us = 1e6 / native_rate;
+    let s = Summary::of(&lats);
+    println!(
+        "end-to-end p50 {:.1} µs (direct engine {:.1} µs) → overhead {:.1} µs; p99 {:.1} µs; batches formed: {}",
+        s.p50,
+        direct_us,
+        (s.p50 - direct_us).max(0.0),
+        s.p99,
+        snap.batches
+    );
+    println!(
+        "target check: overhead <10 µs p50 — {}",
+        if (s.p50 - direct_us) < 10.0 { "HOLDS" } else { "MISSED" }
+    );
+
+    // PJRT coordinator end-to-end (thread-affine backend via factory).
+    if artifact_dir.join("convcotm_b16.hlo.txt").exists() {
+        let m2 = model.clone();
+        let dir2 = artifact_dir.clone();
+        let coord = Coordinator::start_with(
+            move || PjrtBackend::new(&dir2, "convcotm_b16", 16, &m2).unwrap(),
+            BatchConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+            },
+        );
+        let t0 = Instant::now();
+        let n = 256;
+        let rxs: Vec<_> = images.iter().cycle().take(n).map(|i| coord.submit(i.clone())).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let rate = n as f64 / t0.elapsed().as_secs_f64();
+        let snap = coord.shutdown();
+        println!(
+            "PJRT serving pipeline: {} img/s across {} batches (batch-16 artifact)",
+            fmt_k(rate),
+            snap.batches
+        );
+    }
+}

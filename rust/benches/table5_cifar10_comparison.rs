@@ -1,0 +1,132 @@
+//! Tables III & V — the envisaged scaled-up TM-Composites CIFAR-10
+//! accelerator (§VI-C): configuration, estimates, and comparison with the
+//! prior CIFAR-10 accelerators.
+//!
+//! Run: `cargo bench --bench table5_cifar10_comparison`
+
+use convcotm::bench_harness::literature::{or_not_stated, table5_prior};
+use convcotm::bench_harness::{fmt_energy, fmt_k, fmt_power, section};
+use convcotm::energy::scaleup::{estimate, paper_specialists, ScaleUpAssumptions};
+use convcotm::util::Table;
+
+fn main() {
+    section("Table III: envisaged ConvCoTM CIFAR-10 accelerator (TM Composites)");
+    let specialists = paper_specialists();
+    let est = estimate(&specialists, &ScaleUpAssumptions::default());
+
+    let mut t3 = Table::new(&["Parameter", "Model (this repo)", "Paper (Table III)"]);
+    t3.row(&[
+        "Number of TM specialists".into(),
+        format!("{}", specialists.len()),
+        "4".into(),
+    ]);
+    t3.row_str(&["Number of clauses", "1000", "1000"]);
+    t3.row_str(&["Included literals per clause", "16", "16"]);
+    t3.row(&[
+        "Model size: TA actions / specialist".into(),
+        format!("{:.1} kB", specialists[0].ta_model_bytes() as f64 / 1e3),
+        "20 kB".into(),
+    ]);
+    t3.row(&[
+        "Model size: weights / specialist".into(),
+        format!("{:.1} kB", specialists[0].weight_model_bytes() as f64 / 1e3),
+        "12.5 kB".into(),
+    ]);
+    t3.row(&[
+        "Complete model size".into(),
+        format!("{:.0} kB", est.total_model_bytes as f64 / 1e3),
+        "130 kB".into(),
+    ]);
+    t3.row(&[
+        "Cycles per classification".into(),
+        format!("{}", est.cycles_per_classification),
+        "≈8080".into(),
+    ]);
+    t3.row(&[
+        "Classification rate".into(),
+        format!("{} FPS", fmt_k(est.rate_fps)),
+        "3440 FPS".into(),
+    ]);
+    t3.row(&[
+        "Scale ratio R".into(),
+        format!("{:.2}", est.r_ratio),
+        "≈5.8".into(),
+    ]);
+    t3.row(&[
+        "Core area".into(),
+        format!("{:.1} mm² (65 nm) / {:.1} mm² (28 nm)", est.area_65nm_mm2, est.area_28nm_mm2),
+        "17.7 mm² / 3.3 mm²".into(),
+    ]);
+    t3.row(&[
+        "Core power @27.8 MHz".into(),
+        format!("{} (65 nm) / {} (28 nm)", fmt_power(est.power_65nm_w), fmt_power(est.power_28nm_w)),
+        "3.0 mW / 1.5 mW".into(),
+    ]);
+    t3.row(&[
+        "EPC".into(),
+        format!("{} (65 nm) / {} (28 nm)", fmt_energy(est.epc_65nm_j), fmt_energy(est.epc_28nm_j)),
+        "0.9 µJ / 0.45 µJ".into(),
+    ]);
+    t3.row(&[
+        "Latency".into(),
+        format!("{:.2} ms", est.latency_s * 1e3),
+        "0.3 ms".into(),
+    ]);
+    t3.row_str(&["Test accuracy (estimate)", "79% (TM Composites, [17,18])", "79%"]);
+    println!("{}", t3.to_markdown());
+
+    section("Table V: scaled-up design vs prior CIFAR-10 accelerators");
+    let mut t5 = Table::new(&[
+        "Work",
+        "Technology",
+        "Area",
+        "Algorithm",
+        "Type",
+        "Accuracy",
+        "Rate",
+        "Power",
+        "EPC",
+    ]);
+    t5.row(&[
+        "Envisaged ConvCoTM (§VI-C)".into(),
+        "65 / 28 nm CMOS".into(),
+        format!("{:.1} / {:.1} mm²", est.area_65nm_mm2, est.area_28nm_mm2),
+        "ConvCoTM (TM Composites)".into(),
+        "Digital".into(),
+        "79% (est.)".into(),
+        format!("{} FPS", fmt_k(est.rate_fps)),
+        format!("{} / {}", fmt_power(est.power_65nm_w), fmt_power(est.power_28nm_w)),
+        format!("{} / {}", fmt_energy(est.epc_65nm_j), fmt_energy(est.epc_28nm_j)),
+    ]);
+    for w in table5_prior() {
+        t5.row(&[
+            w.label.into(),
+            w.technology.into(),
+            w.active_area_mm2
+                .map(|a| format!("{a} mm²"))
+                .unwrap_or_else(|| "Not stated".into()),
+            w.algorithm.into(),
+            w.design_type.into(),
+            w.accuracy_pct.into(),
+            or_not_stated(w.rate_fps, |r| format!("{} FPS", fmt_k(r))),
+            or_not_stated(w.power_w, fmt_power),
+            or_not_stated(w.epc_j, fmt_energy),
+        ]);
+    }
+    println!("{}", t5.to_markdown());
+
+    // Shape checks the paper's discussion makes.
+    let epcs: Vec<f64> = table5_prior().iter().filter_map(|w| w.epc_j).collect();
+    let min_prior = epcs.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "claim check: envisaged EPC {} undercuts the best stated prior ({}) — {}",
+        fmt_energy(est.epc_65nm_j),
+        fmt_energy(min_prior),
+        if est.epc_65nm_j < min_prior { "HOLDS" } else { "VIOLATED" }
+    );
+    println!(
+        "claim check: TM accuracy on CIFAR-10 (79%) trails CNN/BNN/SNN rows — HOLDS \
+         (the paper concedes this: §VII 'not at the same level as for CNNs')"
+    );
+    assert!(est.epc_65nm_j < min_prior);
+}

@@ -1,0 +1,102 @@
+//! Table VI — overview of TM-based hardware solutions, with this work's
+//! row regenerated from the model, plus the §VI-B on-device-training
+//! extension estimate (experiment X5).
+//!
+//! Run: `cargo bench --bench table6_tm_hw_overview`
+
+use convcotm::bench_harness::literature::{or_not_stated, table6_prior};
+use convcotm::bench_harness::{fmt_energy, fmt_k, fmt_power, section};
+use convcotm::coordinator::SysProc;
+use convcotm::util::Table;
+
+fn main() {
+    section("Table VI: overview of TM-based hardware solutions");
+    let sp = SysProc;
+    let rate = sp.classification_rate(27.8e6);
+
+    let mut t = Table::new(&[
+        "Work",
+        "Platform",
+        "Algorithm",
+        "Operation",
+        "Dataset",
+        "Accuracy",
+        "Rate",
+        "Power",
+        "EPC",
+    ]);
+    t.row(&[
+        "This work".into(),
+        "ASIC 65 nm (modeled)".into(),
+        "ConvCoTM".into(),
+        "Inference".into(),
+        "MNIST/FMNIST/KMNIST (synth subst.)".into(),
+        "97.42/84.54/82.55% (paper)".into(),
+        format!("{} img/s", fmt_k(rate)),
+        fmt_power(0.52e-3),
+        fmt_energy(8.6e-9),
+    ]);
+    for w in table6_prior() {
+        t.row(&[
+            w.label.into(),
+            w.platform.into(),
+            w.algorithm.into(),
+            w.operation.into(),
+            w.dataset.into(),
+            w.accuracy_pct.into(),
+            or_not_stated(w.rate_fps, |r| format!("{} img/s", fmt_k(r))),
+            or_not_stated(w.power_w, |p| {
+                if p > 1.0 {
+                    format!("{p:.2} W")
+                } else {
+                    fmt_power(p)
+                }
+            }),
+            or_not_stated(w.epc_j, fmt_energy),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    // Claim: lowest EPC among TM hardware with stated EPC... except the
+    // simulated ReRAM IMC concept [35] at 13.9 nJ — ours is lower still.
+    let ours = 8.6e-9;
+    let better: Vec<_> = table6_prior()
+        .into_iter()
+        .filter(|w| w.epc_j.map(|e| e < ours).unwrap_or(false))
+        .collect();
+    println!(
+        "claim check: lowest EPC among TM HW solutions with stated EPC — {}",
+        if better.is_empty() { "HOLDS" } else { "VIOLATED" }
+    );
+    assert!(better.is_empty());
+
+    section("§VI-B extension: on-device training estimate (X5)");
+    // The FPGA in [12] trains 40k samples/s at 50 MHz; the same architecture
+    // at this ASIC's 27.8 MHz scales to ≈22.2k samples/s.
+    let fpga_rate = 40e3;
+    let est = fpga_rate * 27.8e6 / 50e6;
+    println!(
+        "training throughput (FPGA-scaled): {} samples/s at 27.8 MHz (paper: ≈22.2k)",
+        fmt_k(est)
+    );
+    assert!((est - 22.24e3).abs() < 50.0);
+    // And from our §VI-B hardware model (asic::train_ext).
+    use convcotm::asic::train_ext;
+    use convcotm::tm::Params;
+    let res = train_ext::resources(&Params::asic());
+    let timing = train_ext::TrainTiming::standard(&Params::asic());
+    println!(
+        "hardware-model schedule: {} cycles/sample → {} samples/s at 27.8 MHz",
+        timing.cycles_per_sample(),
+        fmt_k(timing.samples_per_second(27.8e6))
+    );
+    println!(
+        "resources: {} TA RAMs × {} rows ({} kb TAs), patch RAM {} kb, {} LFSRs, +{:.1} mm²",
+        res.ta_rams,
+        res.ta_ram_rows,
+        res.ta_bits / 1024,
+        res.patch_ram_bits / 1024,
+        res.lfsrs,
+        res.extra_area_mm2
+    );
+}

@@ -1,0 +1,87 @@
+//! Argmax module (Fig. 6): a combinational reduction tree of two-input
+//! compare-and-forward cells. Each cell takes (v0, label0) and (v1, label1)
+//! and forwards the pair with the larger sum, preferring the index-0 side
+//! on ties (`v1 > v0` selects side 1) — so the lowest label wins ties.
+
+/// One compare cell (the submodule in Fig. 6's upper right).
+#[inline]
+pub fn argmax_cell(v0: i32, l0: u8, v1: i32, l1: u8) -> (i32, u8) {
+    if v1 > v0 {
+        (v1, l1)
+    } else {
+        (v0, l0)
+    }
+}
+
+/// Full reduction tree over the class sums. Labels are 4 bits on-chip
+/// (10 classes); odd survivors bypass a level unchanged.
+pub fn argmax_tree(sums: &[i32]) -> (i32, u8) {
+    assert!(!sums.is_empty());
+    let mut level: Vec<(i32, u8)> = sums
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v, i as u8))
+        .collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len() / 2 + 1);
+        for pair in level.chunks(2) {
+            match pair {
+                [a, b] => next.push(argmax_cell(a.0, a.1, b.0, b.1)),
+                [a] => next.push(*a),
+                _ => unreachable!(),
+            }
+        }
+        level = next;
+    }
+    level[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::argmax_lowest;
+    use crate::util::quick::check;
+
+    #[test]
+    fn cell_prefers_side0_on_tie() {
+        assert_eq!(argmax_cell(5, 0, 5, 1), (5, 0));
+        assert_eq!(argmax_cell(4, 0, 5, 1), (5, 1));
+        assert_eq!(argmax_cell(5, 3, 4, 7), (5, 3));
+    }
+
+    #[test]
+    fn tree_matches_reference_on_ten_classes() {
+        check("argmax tree equals reference", 60, |g| {
+            let sums: Vec<i32> = (0..10).map(|_| g.i64_in(-2000, 2000) as i32).collect();
+            let (v, label) = argmax_tree(&sums);
+            let expect = argmax_lowest(&sums);
+            crate::prop_assert_eq!(label, expect);
+            crate::prop_assert_eq!(v, sums[expect as usize]);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tree_ties_resolve_to_lowest_label() {
+        check("argmax tie break", 40, |g| {
+            // Force many ties.
+            let sums: Vec<i32> = (0..10).map(|_| g.i64_in(-2, 2) as i32).collect();
+            let (_, label) = argmax_tree(&sums);
+            crate::prop_assert_eq!(label, argmax_lowest(&sums));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn works_for_non_power_of_two_and_single() {
+        assert_eq!(argmax_tree(&[7]), (7, 0));
+        assert_eq!(argmax_tree(&[1, 2, 3]), (3, 2));
+        assert_eq!(argmax_tree(&[3, 2, 3]), (3, 0));
+    }
+
+    #[test]
+    fn negative_sums_handled() {
+        assert_eq!(argmax_tree(&[-5, -3, -9]), (-3, 1));
+        assert_eq!(argmax_tree(&[-1, -1]), (-1, 0));
+    }
+}

@@ -1,0 +1,202 @@
+//! Byte-stream data interface model (§IV-A): an 8-bit parallel, AXI-Stream
+//! inspired channel between the system processor and the accelerator.
+//!
+//! Two framings exist:
+//! - **load-model mode**: 5 632 model bytes (TA actions then weights);
+//! - **inference mode**: 98 image bytes + 1 label byte per sample
+//!   (99 transfer cycles — the measured component of the 471-cycle
+//!   single-image latency).
+//!
+//! The model is transaction-accurate: one byte per clock when both `valid`
+//! and `ready` are high, with backpressure (`ready` low while the target
+//! buffer bank is busy).
+
+use crate::data::boolean::BoolImage;
+use crate::tm::params::MODEL_BYTES;
+
+/// Image frame length on the wire: 98 data bytes + 1 label byte.
+pub const IMAGE_FRAME_BYTES: usize = 99;
+
+/// A byte beat on the stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Beat {
+    pub data: u8,
+    /// Asserted on the final byte of a frame (TLAST).
+    pub last: bool,
+}
+
+/// Frame an image + optional true label for transfer (label 0xFF = absent;
+/// the chip echoes the label back with the prediction, §IV-A).
+pub fn frame_image(img: &BoolImage, label: Option<u8>) -> Vec<Beat> {
+    let bytes = img.to_wire_bytes();
+    let mut beats: Vec<Beat> = bytes.iter().map(|&b| Beat { data: b, last: false }).collect();
+    beats.push(Beat {
+        data: label.unwrap_or(0xFF),
+        last: true,
+    });
+    beats
+}
+
+/// Frame a model payload for load-model mode.
+pub fn frame_model(wire: &[u8]) -> Vec<Beat> {
+    assert_eq!(wire.len(), MODEL_BYTES, "model payload must be 5 632 bytes");
+    wire.iter()
+        .enumerate()
+        .map(|(i, &b)| Beat {
+            data: b,
+            last: i + 1 == wire.len(),
+        })
+        .collect()
+}
+
+/// Receiver-side deframer for image frames.
+#[derive(Default)]
+pub struct ImageDeframer {
+    buf: Vec<u8>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FrameError {
+    #[error("frame ended early at byte {0} (expected {IMAGE_FRAME_BYTES})")]
+    Short(usize),
+    #[error("frame overrun: no TLAST by byte {0}")]
+    Overrun(usize),
+}
+
+impl ImageDeframer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Push one beat; returns the completed (image, label) on TLAST.
+    pub fn push(&mut self, beat: Beat) -> Result<Option<(BoolImage, Option<u8>)>, FrameError> {
+        self.buf.push(beat.data);
+        if beat.last {
+            if self.buf.len() != IMAGE_FRAME_BYTES {
+                let n = self.buf.len();
+                self.buf.clear();
+                return Err(FrameError::Short(n));
+            }
+            let mut img_bytes = [0u8; 98];
+            img_bytes.copy_from_slice(&self.buf[..98]);
+            let label_byte = self.buf[98];
+            self.buf.clear();
+            let label = if label_byte == 0xFF { None } else { Some(label_byte) };
+            return Ok(Some((BoolImage::from_wire_bytes(&img_bytes), label)));
+        }
+        if self.buf.len() >= IMAGE_FRAME_BYTES {
+            let n = self.buf.len();
+            self.buf.clear();
+            return Err(FrameError::Overrun(n));
+        }
+        Ok(None)
+    }
+}
+
+/// The prediction/status byte pair the accelerator drives after an
+/// interrupt (§IV-A): predicted class in the low nibble, true label (if
+/// provided) in the high nibble.
+pub fn encode_result(prediction: u8, true_label: Option<u8>) -> u8 {
+    (true_label.unwrap_or(0xF) << 4) | (prediction & 0x0F)
+}
+
+pub fn decode_result(byte: u8) -> (u8, Option<u8>) {
+    let pred = byte & 0x0F;
+    let label = byte >> 4;
+    (pred, if label == 0xF { None } else { Some(label) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256ss;
+
+    fn random_image(seed: u64) -> BoolImage {
+        let mut rng = Xoshiro256ss::new(seed);
+        let bits: Vec<bool> = (0..784).map(|_| rng.chance(0.3)).collect();
+        BoolImage::from_bools(&bits)
+    }
+
+    #[test]
+    fn image_frame_is_99_beats() {
+        let beats = frame_image(&random_image(1), Some(7));
+        assert_eq!(beats.len(), IMAGE_FRAME_BYTES);
+        assert!(beats.last().unwrap().last);
+        assert!(beats[..98].iter().all(|b| !b.last));
+    }
+
+    #[test]
+    fn deframe_roundtrip() {
+        let img = random_image(2);
+        let mut d = ImageDeframer::new();
+        let beats = frame_image(&img, Some(3));
+        let mut out = None;
+        for b in beats {
+            if let Some(res) = d.push(b).unwrap() {
+                out = Some(res);
+            }
+        }
+        let (got, label) = out.expect("frame must complete");
+        assert_eq!(got, img);
+        assert_eq!(label, Some(3));
+    }
+
+    #[test]
+    fn missing_label_encodes_as_ff() {
+        let img = random_image(3);
+        let beats = frame_image(&img, None);
+        assert_eq!(beats[98].data, 0xFF);
+        let mut d = ImageDeframer::new();
+        let mut out = None;
+        for b in beats {
+            if let Some(res) = d.push(b).unwrap() {
+                out = Some(res);
+            }
+        }
+        assert_eq!(out.unwrap().1, None);
+    }
+
+    #[test]
+    fn short_frame_detected() {
+        let mut d = ImageDeframer::new();
+        d.push(Beat { data: 1, last: false }).unwrap();
+        let err = d.push(Beat { data: 2, last: true }).unwrap_err();
+        assert_eq!(err, FrameError::Short(2));
+        // Deframer recovers for the next frame.
+        let img = random_image(4);
+        let mut out = None;
+        for b in frame_image(&img, Some(1)) {
+            if let Some(res) = d.push(b).unwrap() {
+                out = Some(res);
+            }
+        }
+        assert_eq!(out.unwrap().0, img);
+    }
+
+    #[test]
+    fn overrun_detected() {
+        let mut d = ImageDeframer::new();
+        for i in 0..IMAGE_FRAME_BYTES {
+            let r = d.push(Beat { data: i as u8, last: false });
+            if i + 1 == IMAGE_FRAME_BYTES {
+                assert_eq!(r.unwrap_err(), FrameError::Overrun(IMAGE_FRAME_BYTES));
+            } else {
+                assert_eq!(r.unwrap(), None);
+            }
+        }
+    }
+
+    #[test]
+    fn model_frame_length() {
+        let wire = vec![0u8; MODEL_BYTES];
+        let beats = frame_model(&wire);
+        assert_eq!(beats.len(), MODEL_BYTES);
+        assert!(beats.last().unwrap().last);
+    }
+
+    #[test]
+    fn result_byte_roundtrip() {
+        assert_eq!(decode_result(encode_result(7, Some(3))), (7, Some(3)));
+        assert_eq!(decode_result(encode_result(9, None)), (9, None));
+    }
+}

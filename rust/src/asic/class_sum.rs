@@ -1,0 +1,155 @@
+//! Class-sum generation (Fig. 5): per class, a MUX per clause selects the
+//! weight (if c_j = 1) or zero, feeding a 128-input adder reduction tree
+//! pipelined in three stages. All ten class trees run in parallel; the
+//! pipeline registers are clock-gated to exactly four active cycles per
+//! classification (§IV-F).
+//!
+//! The model is cycle-faithful: the tree is levelized (7 halving levels for
+//! 128 inputs) with pipeline cuts after levels 2, 4 and 6; values drain
+//! through in 4 clock edges (input latch + 3 stage registers).
+
+use crate::tm::Model;
+use crate::util::BitVec;
+
+/// Pipeline cut placement: registers after these tree levels.
+const PIPE_CUTS: [usize; 3] = [2, 4, 6];
+/// Active clock cycles per classification (paper §IV-F: "clocked only for
+/// four clock cycles per classification phase").
+pub const SUM_PIPELINE_CYCLES: usize = 4;
+
+/// Activity counters for the energy model.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SumActivity {
+    /// Pipeline-register DFF clock events.
+    pub dff_clocks: u64,
+    /// Adder operations performed (node evaluations in the tree).
+    pub adder_ops: u64,
+}
+
+/// Pipeline register bit inventory per class: after level 2 there are 32
+/// partial sums (10 bits), after level 4 there are 8 (12 bits), after
+/// level 6 there are 2 (14 bits).
+pub fn pipeline_bits_per_class(clauses: usize) -> usize {
+    let mut bits = 0;
+    for (i, &cut) in PIPE_CUTS.iter().enumerate() {
+        let values = clauses >> cut;
+        let width = 8 + cut; // i8 weights grow one bit per level
+        bits += values * width;
+        let _ = i;
+    }
+    bits
+}
+
+/// Evaluate the class-sum tree for one class, returning the sum and
+/// counting adder ops. Exact integer semantics (no saturation: 128 i8
+/// weights need 15 bits, well inside the registers).
+fn tree_sum(weights: &[i8], clauses: &BitVec, activity: &mut SumActivity) -> i32 {
+    // MUX stage: weight if clause fired else 0.
+    let mut level: Vec<i32> = weights
+        .iter()
+        .enumerate()
+        .map(|(j, &w)| if clauses.get(j) { w as i32 } else { 0 })
+        .collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len() / 2 + 1);
+        for pair in level.chunks(2) {
+            let s = match pair {
+                [a, b] => {
+                    activity.adder_ops += 1;
+                    a + b
+                }
+                [a] => *a,
+                _ => unreachable!(),
+            };
+            next.push(s);
+        }
+        level = next;
+    }
+    level[0]
+}
+
+/// Compute all class sums as the hardware does, updating `activity` with
+/// the DFF clocks of the gated pipeline (4 cycles × pipeline bits × classes)
+/// and adder-op counts.
+pub fn class_sums(model: &Model, clauses: &BitVec, activity: &mut SumActivity) -> Vec<i32> {
+    let p = &model.params;
+    let sums: Vec<i32> = (0..p.classes)
+        .map(|i| tree_sum(model.weights_for_class(i), clauses, activity))
+        .collect();
+    let pipe_bits = pipeline_bits_per_class(p.clauses) * p.classes;
+    activity.dff_clocks += (pipe_bits * SUM_PIPELINE_CYCLES) as u64;
+    sums
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::{Engine, Model, Params};
+    use crate::util::quick::check;
+    use crate::util::Xoshiro256ss;
+
+    #[test]
+    fn pipeline_inventory_for_128_clauses() {
+        // 32×10 + 8×12 + 2×14 = 320 + 96 + 28 = 444 bits per class.
+        assert_eq!(pipeline_bits_per_class(128), 444);
+    }
+
+    #[test]
+    fn tree_sum_matches_reference_engine() {
+        check("class-sum tree equals Eq. 3", 40, |g| {
+            let p = Params {
+                clauses: 128,
+                ..Params::asic()
+            };
+            let mut model = Model::blank(p.clone());
+            let mut rng = Xoshiro256ss::new(g.u64());
+            for j in 0..p.clauses {
+                for i in 0..p.classes {
+                    model.set_weight(i, j, (rng.below(255) as i32 - 127) as i8);
+                }
+            }
+            let fired = BitVec::from_bools(&g.bits(p.clauses, 0.5));
+            let mut act = SumActivity::default();
+            let hw = class_sums(&model, &fired, &mut act);
+            let sw = Engine::new().class_sums(&model, &fired);
+            crate::prop_assert_eq!(hw, sw);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extreme_weights_do_not_overflow() {
+        let p = Params::asic();
+        let mut model = Model::blank(p.clone());
+        for j in 0..p.clauses {
+            model.set_weight(0, j, i8::MIN);
+            model.set_weight(1, j, i8::MAX);
+        }
+        let fired = BitVec::ones(p.clauses);
+        let mut act = SumActivity::default();
+        let sums = class_sums(&model, &fired, &mut act);
+        assert_eq!(sums[0], -128 * 128);
+        assert_eq!(sums[1], 127 * 128);
+    }
+
+    #[test]
+    fn adder_ops_count_matches_tree_size() {
+        // A 128-input reduction tree has 127 adders per class.
+        let p = Params::asic();
+        let model = Model::blank(p.clone());
+        let fired = BitVec::zeros(p.clauses);
+        let mut act = SumActivity::default();
+        class_sums(&model, &fired, &mut act);
+        assert_eq!(act.adder_ops, 127 * 10);
+    }
+
+    #[test]
+    fn gated_pipeline_clocks_exactly_four_cycles() {
+        let p = Params::asic();
+        let model = Model::blank(p.clone());
+        let fired = BitVec::zeros(p.clauses);
+        let mut act = SumActivity::default();
+        class_sums(&model, &fired, &mut act);
+        assert_eq!(act.dff_clocks, (444 * 10 * SUM_PIPELINE_CYCLES) as u64);
+    }
+}

@@ -1,0 +1,221 @@
+//! Clause-pool model (Fig. 4): 128 parallel clause circuits, each an AND
+//! plane over `(¬include ∨ literal)` terms, an Empty detector, the
+//! sequential-OR DFF (Eq. 6), and the clause-switching-reduction feedback
+//! (CSRF) that holds the combinational output once the DFF has latched.
+//!
+//! The simulator is cycle-faithful at the patch level and counts the
+//! transitions of every combinational clause output `c_j^b` — the signal
+//! whose toggling CSRF halves (§IV-D) — plus DFF clock/update counts for
+//! the energy model.
+
+use crate::tm::Model;
+use crate::util::BitVec;
+
+/// Activity counters for one convolution pass.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClauseActivity {
+    /// Transitions (0→1 or 1→0) of the combinational outputs c_j^b summed
+    /// over all clauses.
+    pub comb_toggles: u64,
+    /// Evaluations performed (clauses × patches).
+    pub evaluations: u64,
+    /// DFF clock events (all clause DFFs are clocked every patch cycle
+    /// plus the reset cycle).
+    pub dff_clocks: u64,
+    /// DFF value changes (0→1 latches).
+    pub dff_updates: u64,
+}
+
+/// The clause pool register state.
+pub struct ClausePool<'m> {
+    model: &'m Model,
+    /// Sequential-OR register c_j (the DFF in Fig. 4).
+    latched: BitVec,
+    /// Previous-cycle combinational outputs (for toggle counting).
+    prev_comb: BitVec,
+    /// CSRF enable pin (§IV-D: a dedicated chip pin).
+    pub csrf: bool,
+    pub activity: ClauseActivity,
+}
+
+impl<'m> ClausePool<'m> {
+    pub fn new(model: &'m Model, csrf: bool) -> Self {
+        let n = model.params.clauses;
+        ClausePool {
+            model,
+            latched: BitVec::zeros(n),
+            prev_comb: BitVec::zeros(n),
+            csrf,
+            activity: ClauseActivity::default(),
+        }
+    }
+
+    /// Reset the clause DFFs (performed before a new convolution, Fig. 7's
+    /// entry into patch generation). One clock event per DFF.
+    pub fn reset(&mut self) {
+        let n = self.model.params.clauses;
+        self.latched = BitVec::zeros(n);
+        self.prev_comb = BitVec::zeros(n);
+        self.activity.dff_clocks += n as u64;
+    }
+
+    /// Evaluate one patch (one clock cycle of the patch-generation phase).
+    ///
+    /// Returns the combinational outputs of this cycle. The DFF ORs them in
+    /// (Eq. 6). With CSRF, a latched clause forces its combinational output
+    /// high through the input OR gates, so it cannot toggle any more.
+    pub fn clock_patch(&mut self, literals: &BitVec) {
+        let n = self.model.params.clauses;
+        for j in 0..n {
+            let comb = if self.csrf && self.latched.get(j) {
+                // Feedback: c_j = 1 drives every input OR gate high; the
+                // AND plane output is stuck at 1 — no switching downstream.
+                true
+            } else {
+                self.activity.evaluations += 1;
+                !self.model.is_empty_clause(j)
+                    && !self.model.include(j).and_not_any(literals)
+            };
+            if comb != self.prev_comb.get(j) {
+                self.activity.comb_toggles += 1;
+                self.prev_comb.set(j, comb);
+            }
+            if comb && !self.latched.get(j) {
+                self.latched.set(j, true);
+                self.activity.dff_updates += 1;
+            }
+        }
+        self.activity.dff_clocks += n as u64;
+    }
+
+    /// Image-level clause outputs after the convolution pass.
+    pub fn outputs(&self) -> &BitVec {
+        &self.latched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::boolean::BoolImage;
+    use crate::data::{patches, NUM_LITERALS};
+    use crate::tm::{Engine, Model, Params};
+    use crate::util::Xoshiro256ss;
+
+    fn random_model(seed: u64, clauses: usize, includes: usize) -> Model {
+        let p = Params {
+            clauses,
+            ..Params::asic()
+        };
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut m = Model::blank(p.clone());
+        for j in 0..clauses {
+            for _ in 0..includes {
+                m.set_include(j, rng.usize_below(NUM_LITERALS), true);
+            }
+        }
+        m
+    }
+
+    fn random_image(seed: u64, density: f64) -> BoolImage {
+        let mut rng = Xoshiro256ss::new(seed);
+        let bits: Vec<bool> = (0..784).map(|_| rng.chance(density)).collect();
+        BoolImage::from_bools(&bits)
+    }
+
+    fn run_pass(pool: &mut ClausePool, img: &BoolImage) {
+        pool.reset();
+        for y in 0..patches::POSITIONS {
+            for x in 0..patches::POSITIONS {
+                let lits = patches::patch_literals(img, x, y);
+                pool.clock_patch(&lits);
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_match_reference_engine_with_and_without_csrf() {
+        for seed in [1u64, 2, 3] {
+            let model = random_model(seed, 16, 4);
+            let img = random_image(seed + 10, 0.25);
+            let expect = Engine::new().clause_outputs(&model, &img);
+            for csrf in [false, true] {
+                let mut pool = ClausePool::new(&model, csrf);
+                run_pass(&mut pool, &img);
+                assert_eq!(pool.outputs(), &expect, "seed {seed} csrf {csrf}");
+            }
+        }
+    }
+
+    #[test]
+    fn csrf_reduces_comb_toggles() {
+        // Dense-firing model: single-literal clauses on negated features
+        // fire on most patches → lots of toggling without CSRF.
+        let model = random_model(4, 32, 2);
+        let img = random_image(14, 0.3);
+        let mut with = ClausePool::new(&model, true);
+        run_pass(&mut with, &img);
+        let mut without = ClausePool::new(&model, false);
+        run_pass(&mut without, &img);
+        assert_eq!(with.outputs(), without.outputs());
+        assert!(
+            with.activity.comb_toggles <= without.activity.comb_toggles,
+            "CSRF must not increase toggles ({} vs {})",
+            with.activity.comb_toggles,
+            without.activity.comb_toggles
+        );
+    }
+
+    #[test]
+    fn csrf_skips_evaluations_after_latch() {
+        let model = random_model(5, 8, 1);
+        let img = random_image(15, 0.5);
+        let mut with = ClausePool::new(&model, true);
+        run_pass(&mut with, &img);
+        let mut without = ClausePool::new(&model, false);
+        run_pass(&mut without, &img);
+        assert!(with.activity.evaluations < without.activity.evaluations);
+        assert_eq!(
+            without.activity.evaluations,
+            8 * patches::NUM_PATCHES as u64
+        );
+    }
+
+    #[test]
+    fn dff_clock_count_is_patches_plus_reset() {
+        let model = random_model(6, 8, 3);
+        let img = random_image(16, 0.2);
+        let mut pool = ClausePool::new(&model, true);
+        run_pass(&mut pool, &img);
+        assert_eq!(
+            pool.activity.dff_clocks,
+            (8 * (patches::NUM_PATCHES + 1)) as u64
+        );
+    }
+
+    #[test]
+    fn dff_updates_at_most_once_per_clause() {
+        let model = random_model(7, 16, 2);
+        let img = random_image(17, 0.4);
+        let mut pool = ClausePool::new(&model, false);
+        run_pass(&mut pool, &img);
+        assert!(pool.activity.dff_updates <= 16);
+        assert_eq!(
+            pool.activity.dff_updates,
+            pool.outputs().count_ones() as u64
+        );
+    }
+
+    #[test]
+    fn empty_clause_stays_low_even_with_all_one_literals() {
+        let p = Params {
+            clauses: 2,
+            ..Params::asic()
+        };
+        let model = Model::blank(p);
+        let img = random_image(18, 0.5);
+        let mut pool = ClausePool::new(&model, true);
+        run_pass(&mut pool, &img);
+        assert!(pool.outputs().is_zero(), "Empty logic forces c low (§IV-D)");
+    }
+}

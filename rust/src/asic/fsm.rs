@@ -1,0 +1,178 @@
+//! Accelerator control FSM and cycle accounting (Fig. 7 / Fig. 8).
+//!
+//! Measured timing the model reproduces exactly (§IV-E):
+//! - single-image latency **471 cycles** = 99 transfer + 372 processing;
+//! - continuous-mode period **372 cycles** (transfer of the next image
+//!   overlaps processing via the double-buffered image memory, §IV-C).
+//!
+//! The paper gives the aggregates (99, 372, 471); the per-phase split below
+//! is our documented modeling allocation consistent with the architecture
+//! description: the first 10 datarows preload into the window register
+//! during the (longer) transfer, so the 372 processing cycles divide into
+//! clause reset, 361 patch cycles, the 4 gated class-sum pipeline cycles
+//! (§IV-F), the argmax/result latch, the interrupt cycle and 4 FSM state
+//! transition cycles.
+
+/// Image transfer beats (98 data + 1 label) — §IV-E: "99 clock cycles for
+/// transferring the 98 image bytes and the label byte".
+pub const TRANSFER_CYCLES: usize = 99;
+
+/// Clause-output register reset (Fig. 4 DFF reset).
+pub const CLAUSE_RESET_CYCLES: usize = 1;
+/// One patch evaluated per clock (§IV-C): 19×19 positions.
+pub const PATCH_CYCLES: usize = 361;
+/// Gated class-sum pipeline active cycles (§IV-F).
+pub const SUM_CYCLES: usize = 4;
+/// Argmax output latch.
+pub const ARGMAX_CYCLES: usize = 1;
+/// Result/interrupt drive.
+pub const OUTPUT_CYCLES: usize = 1;
+/// FSM state-entry/exit overhead distributed across the phase boundaries.
+pub const FSM_OVERHEAD_CYCLES: usize = 4;
+
+/// Total processing cycles per classification (§IV-E: 372).
+pub const PROCESS_CYCLES: usize = CLAUSE_RESET_CYCLES
+    + PATCH_CYCLES
+    + SUM_CYCLES
+    + ARGMAX_CYCLES
+    + OUTPUT_CYCLES
+    + FSM_OVERHEAD_CYCLES;
+
+/// Single-image latency (§IV-E: 471), first transfer not overlapped.
+pub const LATENCY_CYCLES: usize = TRANSFER_CYCLES + PROCESS_CYCLES;
+
+/// Continuous-mode per-image period (§IV-E: "processed every 372'th clock
+/// cycle").
+pub const PERIOD_CYCLES: usize = PROCESS_CYCLES;
+
+/// The simplified state machine of Fig. 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum State {
+    Idle,
+    LoadModel,
+    LoadImage,
+    ClauseReset,
+    PatchGen,
+    ClassSum,
+    Argmax,
+    Output,
+}
+
+/// Legal transitions of the simplified diagram (self-loops while a phase
+/// is in progress are implicit).
+pub fn next_state(s: State, continuous: bool) -> State {
+    match s {
+        State::Idle => State::LoadImage,
+        State::LoadModel => State::Idle,
+        State::LoadImage => State::ClauseReset,
+        State::ClauseReset => State::PatchGen,
+        State::PatchGen => State::ClassSum,
+        State::ClassSum => State::Argmax,
+        State::Argmax => State::Output,
+        State::Output => {
+            if continuous {
+                // Next image already buffered: straight back to processing.
+                State::ClauseReset
+            } else {
+                State::Idle
+            }
+        }
+    }
+}
+
+/// Per-phase cycle counts of one classification.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseCycles {
+    pub transfer: usize,
+    pub clause_reset: usize,
+    pub patches: usize,
+    pub class_sum: usize,
+    pub argmax: usize,
+    pub output: usize,
+    pub fsm_overhead: usize,
+}
+
+impl PhaseCycles {
+    /// Standard single-classification cycle breakdown.
+    pub fn standard() -> Self {
+        PhaseCycles {
+            transfer: TRANSFER_CYCLES,
+            clause_reset: CLAUSE_RESET_CYCLES,
+            patches: PATCH_CYCLES,
+            class_sum: SUM_CYCLES,
+            argmax: ARGMAX_CYCLES,
+            output: OUTPUT_CYCLES,
+            fsm_overhead: FSM_OVERHEAD_CYCLES,
+        }
+    }
+
+    /// Processing cycles (transfer excluded — it overlaps in continuous
+    /// mode).
+    pub fn processing(&self) -> usize {
+        self.clause_reset + self.patches + self.class_sum + self.argmax + self.output
+            + self.fsm_overhead
+    }
+
+    /// End-to-end latency when the transfer is not overlapped.
+    pub fn latency(&self) -> usize {
+        self.transfer + self.processing()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_constants_match_paper() {
+        assert_eq!(TRANSFER_CYCLES, 99, "98 image bytes + 1 label byte");
+        assert_eq!(PROCESS_CYCLES, 372, "§IV-E processing cycles");
+        assert_eq!(LATENCY_CYCLES, 471, "§IV-E single-image latency");
+        assert_eq!(PERIOD_CYCLES, 372, "continuous-mode period");
+    }
+
+    #[test]
+    fn standard_breakdown_sums_correctly() {
+        let p = PhaseCycles::standard();
+        assert_eq!(p.processing(), PROCESS_CYCLES);
+        assert_eq!(p.latency(), LATENCY_CYCLES);
+    }
+
+    #[test]
+    fn fsm_walks_the_classify_loop() {
+        let mut s = State::Idle;
+        let trace: Vec<State> = (0..7)
+            .map(|_| {
+                s = next_state(s, false);
+                s
+            })
+            .collect();
+        assert_eq!(
+            trace,
+            vec![
+                State::LoadImage,
+                State::ClauseReset,
+                State::PatchGen,
+                State::ClassSum,
+                State::Argmax,
+                State::Output,
+                State::Idle
+            ]
+        );
+    }
+
+    #[test]
+    fn continuous_mode_skips_idle_and_load() {
+        assert_eq!(next_state(State::Output, true), State::ClauseReset);
+        assert_eq!(next_state(State::Output, false), State::Idle);
+    }
+
+    #[test]
+    fn throughput_at_27_8_mhz_is_74_7k_before_system_overhead() {
+        // The pure accelerator bound: 27.8 MHz / 372 ≈ 74.7 k img/s. The
+        // measured 60.3 k img/s includes system-processor overhead, modeled
+        // in the coordinator (§V).
+        let rate = 27.8e6 / PERIOD_CYCLES as f64;
+        assert!((rate - 74_731.2).abs() < 1.0);
+    }
+}

@@ -1,0 +1,405 @@
+//! Cycle- and toggle-accurate simulator of the ConvCoTM accelerator ASIC
+//! (paper §IV, Fig. 2): AXI byte interface, model registers with a separate
+//! clock domain, double-buffered image memory, the patch-generation
+//! register array, the 128-clause pool with CSRF, the pipelined class-sum
+//! trees, the argmax tree and the control FSM — with DFF-clock and
+//! comb-toggle counters feeding the calibrated energy model.
+
+pub mod argmax;
+pub mod axi;
+pub mod class_sum;
+pub mod clause;
+pub mod fsm;
+pub mod patchgen;
+pub mod train_ext;
+
+pub use fsm::{LATENCY_CYCLES, PERIOD_CYCLES, PROCESS_CYCLES, TRANSFER_CYCLES};
+
+use crate::data::boolean::BoolImage;
+use crate::model_io;
+use crate::tm::{Model, Params};
+use crate::util::BitVec;
+
+/// DFF inventory of the accelerator core. The die total is 52 k DFFs
+/// (Table II "including 52k DFFs"); the model registers alone are 45 056
+/// (§IV-B, ≈90% — §IV-F). The remaining components are sized from the
+/// architecture: 10×28 window array, 128 clause DFFs, 444×10 class-sum
+/// pipeline bits, a double image buffer (2×(784+8)) and control/IO
+/// registers absorbing the remainder.
+pub mod dffs {
+    /// TA actions + weights (§IV-B).
+    pub const MODEL_REGS: usize = 45_056;
+    /// Patch window array (Fig. 3).
+    pub const WINDOW: usize = 280;
+    /// Clause sequential-OR DFFs (Fig. 4).
+    pub const CLAUSE: usize = 128;
+    /// Class-sum pipeline registers (Fig. 5): 444 bits × 10 classes.
+    pub const SUM_PIPELINE: usize = 4_440;
+    /// Double image buffer + label bytes (§IV-C).
+    pub const IMAGE_BUFFER: usize = 2 * (784 + 8);
+    /// FSM, counters, IO and result registers (residual to the die total).
+    pub const CONTROL: usize = 512;
+    /// Total — must equal the die's 52 k.
+    pub const TOTAL: usize =
+        MODEL_REGS + WINDOW + CLAUSE + SUM_PIPELINE + IMAGE_BUFFER + CONTROL;
+}
+
+/// Activity + cycle report for one classification, consumed by the energy
+/// model and the ablation benches.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CycleReport {
+    pub phases: fsm::PhaseCycles,
+    /// DFF clock events by component (already reflecting the clock-gating
+    /// configuration).
+    pub window_dff_clocks: u64,
+    pub clause_dff_clocks: u64,
+    pub sum_pipe_dff_clocks: u64,
+    pub image_buffer_dff_clocks: u64,
+    pub control_dff_clocks: u64,
+    /// Model-register clocks: zero in inference (its clock domain is
+    /// stopped, §IV-F); non-zero only during load-model.
+    pub model_dff_clocks: u64,
+    /// Combinational activity.
+    pub clause_comb_toggles: u64,
+    pub clause_evaluations: u64,
+    pub adder_ops: u64,
+}
+
+impl CycleReport {
+    pub fn total_dff_clocks(&self) -> u64 {
+        self.window_dff_clocks
+            + self.clause_dff_clocks
+            + self.sum_pipe_dff_clocks
+            + self.image_buffer_dff_clocks
+            + self.control_dff_clocks
+            + self.model_dff_clocks
+    }
+
+    /// Merge another report (for aggregating over a test set).
+    pub fn accumulate(&mut self, other: &CycleReport) {
+        self.phases.transfer += other.phases.transfer;
+        self.phases.clause_reset += other.phases.clause_reset;
+        self.phases.patches += other.phases.patches;
+        self.phases.class_sum += other.phases.class_sum;
+        self.phases.argmax += other.phases.argmax;
+        self.phases.output += other.phases.output;
+        self.phases.fsm_overhead += other.phases.fsm_overhead;
+        self.window_dff_clocks += other.window_dff_clocks;
+        self.clause_dff_clocks += other.clause_dff_clocks;
+        self.sum_pipe_dff_clocks += other.sum_pipe_dff_clocks;
+        self.image_buffer_dff_clocks += other.image_buffer_dff_clocks;
+        self.control_dff_clocks += other.control_dff_clocks;
+        self.model_dff_clocks += other.model_dff_clocks;
+        self.clause_comb_toggles += other.clause_comb_toggles;
+        self.clause_evaluations += other.clause_evaluations;
+        self.adder_ops += other.adder_ops;
+    }
+}
+
+/// Result of one simulated classification.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimResult {
+    pub prediction: u8,
+    /// True label echoed back on the result port, if one was transferred.
+    pub label_echo: Option<u8>,
+    pub class_sums: Vec<i32>,
+    pub clause_outputs: BitVec,
+    pub report: CycleReport,
+}
+
+/// Configuration pins of the ASIC (§IV-D CSRF pin, §IV-F gating pin).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChipConfig {
+    pub csrf: bool,
+    pub clock_gating: bool,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        // Measurement configuration of §V: both enabled.
+        ChipConfig {
+            csrf: true,
+            clock_gating: true,
+        }
+    }
+}
+
+/// The simulated accelerator.
+pub struct Accelerator {
+    params: Params,
+    model: Option<Model>,
+    pub config: ChipConfig,
+    /// Cycles spent on the model clock domain (load-model mode only).
+    pub model_load_cycles: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum AsicError {
+    #[error("no model loaded (send load-model frame first)")]
+    NoModel,
+    #[error("model payload error: {0}")]
+    Model(#[from] model_io::ModelIoError),
+}
+
+impl Accelerator {
+    pub fn new(params: Params, config: ChipConfig) -> Accelerator {
+        Accelerator {
+            params,
+            model: None,
+            config,
+            model_load_cycles: 0,
+        }
+    }
+
+    /// Load-model mode: accept the 5 632-byte register payload (one byte
+    /// per cycle on the model clock domain).
+    pub fn load_model_wire(&mut self, wire: &[u8]) -> Result<(), AsicError> {
+        let model = model_io::from_wire(self.params.clone(), wire)?;
+        // One byte write per cycle; each byte clocks 8 model-register DFFs.
+        self.model_load_cycles += wire.len() as u64;
+        self.model = Some(model);
+        Ok(())
+    }
+
+    /// Convenience: load an already-built model (still accounts the
+    /// register-load cycles as if transferred).
+    pub fn load_model(&mut self, model: &Model) {
+        assert_eq!(model.params, self.params);
+        self.model_load_cycles += (model.params.model_bits() / 8) as u64;
+        self.model = Some(model.clone());
+    }
+
+    pub fn model(&self) -> Option<&Model> {
+        self.model.as_ref()
+    }
+
+    /// Classify one image, returning the prediction and the full cycle /
+    /// activity report. `overlapped_transfer` marks continuous mode, where
+    /// the 99 transfer cycles hide behind the previous image's processing
+    /// (Fig. 8) and are therefore excluded from this image's cycle count.
+    pub fn classify(
+        &self,
+        img: &BoolImage,
+        label: Option<u8>,
+        overlapped_transfer: bool,
+    ) -> Result<SimResult, AsicError> {
+        let model = self.model.as_ref().ok_or(AsicError::NoModel)?;
+        let mut report = CycleReport {
+            phases: fsm::PhaseCycles::standard(),
+            ..CycleReport::default()
+        };
+        if overlapped_transfer {
+            report.phases.transfer = 0;
+        }
+
+        // --- Transfer + buffering (image buffer bank write, byte/cycle).
+        // 98 data bytes + 1 label byte, 8 DFFs clocked per byte.
+        report.image_buffer_dff_clocks += (axi::IMAGE_FRAME_BYTES * 8) as u64;
+
+        // --- Patch generation (preload overlaps transfer; window register
+        // activity counted by the patchgen model).
+        let mut pg = patchgen::PatchGen::preload(img);
+        let mut pool = clause::ClausePool::new(model, self.config.csrf);
+        pool.reset();
+        while pg.advance() {
+            let lits = pg.current_literals();
+            pool.clock_patch(&lits);
+        }
+        report.window_dff_clocks += pg.activity.dff_clocks;
+        report.clause_dff_clocks += pool.activity.dff_clocks;
+        report.clause_comb_toggles += pool.activity.comb_toggles;
+        report.clause_evaluations += pool.activity.evaluations;
+
+        // --- Class sums (gated pipeline: 4 active cycles).
+        let mut sum_act = class_sum::SumActivity::default();
+        let sums = class_sum::class_sums(model, pool.outputs(), &mut sum_act);
+        report.sum_pipe_dff_clocks += sum_act.dff_clocks;
+        report.adder_ops += sum_act.adder_ops;
+
+        // --- Argmax (combinational) + result latch.
+        let (_, prediction) = argmax::argmax_tree(&sums);
+
+        // --- Control registers: clocked every processing cycle.
+        let proc_cycles = report.phases.processing() as u64;
+        report.control_dff_clocks += dffs::CONTROL as u64 * proc_cycles;
+
+        // --- Clock-gating disabled: every inference-core DFF sees every
+        // processing-cycle clock edge (§IV-F, ~60% power increase undone).
+        if !self.config.clock_gating {
+            report.sum_pipe_dff_clocks = dffs::SUM_PIPELINE as u64 * proc_cycles;
+            report.window_dff_clocks = dffs::WINDOW as u64 * proc_cycles;
+            report.image_buffer_dff_clocks = dffs::IMAGE_BUFFER as u64 * proc_cycles;
+            report.clause_dff_clocks = dffs::CLAUSE as u64 * proc_cycles;
+        }
+
+        Ok(SimResult {
+            prediction,
+            label_echo: label,
+            class_sums: sums,
+            clause_outputs: pool.outputs().clone(),
+            report,
+        })
+    }
+
+    /// Continuous-mode batch run (§IV-C/Fig. 8): first image pays the
+    /// transfer latency, subsequent ones hide it. Returns per-image results
+    /// and the total cycle count, which matches 99 + N×372.
+    pub fn run_continuous(
+        &self,
+        images: &[(BoolImage, Option<u8>)],
+    ) -> Result<(Vec<SimResult>, u64), AsicError> {
+        let mut results = Vec::with_capacity(images.len());
+        let mut total_cycles = 0u64;
+        for (i, (img, label)) in images.iter().enumerate() {
+            let res = self.classify(img, *label, i > 0)?;
+            total_cycles += res.report.phases.latency() as u64;
+            results.push(res);
+        }
+        Ok((results, total_cycles))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthFamily;
+    use crate::tm::params::MODEL_BYTES;
+    use crate::data::{booleanize_split, NUM_LITERALS};
+    use crate::tm::Engine;
+    use crate::util::Xoshiro256ss;
+
+    fn random_model(seed: u64) -> Model {
+        let params = Params::asic();
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut m = Model::blank(params.clone());
+        for j in 0..params.clauses {
+            for _ in 0..2 + rng.usize_below(6) {
+                m.set_include(j, rng.usize_below(NUM_LITERALS), true);
+            }
+            for i in 0..params.classes {
+                m.set_weight(i, j, (rng.below(41) as i32 - 20) as i8);
+            }
+        }
+        m
+    }
+
+    fn random_image(seed: u64) -> BoolImage {
+        let mut rng = Xoshiro256ss::new(seed);
+        BoolImage::from_bools(&(0..784).map(|_| rng.chance(0.25)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn dff_inventory_matches_die() {
+        assert_eq!(dffs::TOTAL, 52_000, "Table II: 52k DFFs");
+        assert!(
+            dffs::MODEL_REGS as f64 / dffs::TOTAL as f64 > 0.86,
+            "§IV-F: model part ≈90% of DFFs"
+        );
+    }
+
+    #[test]
+    fn classify_requires_model() {
+        let acc = Accelerator::new(Params::asic(), ChipConfig::default());
+        assert!(matches!(
+            acc.classify(&random_image(1), None, false),
+            Err(AsicError::NoModel)
+        ));
+    }
+
+    #[test]
+    fn simulator_matches_golden_engine() {
+        let model = random_model(1);
+        let mut acc = Accelerator::new(Params::asic(), ChipConfig::default());
+        acc.load_model(&model);
+        let e = Engine::new();
+        for s in 0..6 {
+            let img = random_image(100 + s);
+            let sim = acc.classify(&img, Some(3), false).unwrap();
+            let sw = e.classify(&model, &img);
+            assert_eq!(sim.prediction, sw.prediction, "seed {s}");
+            assert_eq!(sim.class_sums, sw.class_sums);
+            assert_eq!(sim.clause_outputs, sw.clauses);
+            assert_eq!(sim.label_echo, Some(3));
+        }
+    }
+
+    #[test]
+    fn model_wire_load_roundtrip_classifies_identically() {
+        let model = random_model(2);
+        let wire = model_io::to_wire(&model);
+        assert_eq!(wire.len(), MODEL_BYTES);
+        let mut a = Accelerator::new(Params::asic(), ChipConfig::default());
+        a.load_model_wire(&wire).unwrap();
+        assert_eq!(a.model_load_cycles, MODEL_BYTES as u64);
+        let mut b = Accelerator::new(Params::asic(), ChipConfig::default());
+        b.load_model(&model);
+        let img = random_image(7);
+        assert_eq!(
+            a.classify(&img, None, false).unwrap().prediction,
+            b.classify(&img, None, false).unwrap().prediction
+        );
+    }
+
+    #[test]
+    fn latency_and_period_match_paper() {
+        let model = random_model(3);
+        let mut acc = Accelerator::new(Params::asic(), ChipConfig::default());
+        acc.load_model(&model);
+        let img = random_image(9);
+        let single = acc.classify(&img, None, false).unwrap();
+        assert_eq!(single.report.phases.latency(), 471);
+        let images: Vec<_> = (0..5).map(|i| (random_image(20 + i), None)).collect();
+        let (_, cycles) = acc.run_continuous(&images).unwrap();
+        assert_eq!(cycles, 99 + 5 * 372, "Fig. 8 overlap");
+    }
+
+    #[test]
+    fn gating_off_clocks_every_dff_every_cycle() {
+        let model = random_model(4);
+        let img = random_image(11);
+        let mut gated = Accelerator::new(Params::asic(), ChipConfig::default());
+        gated.load_model(&model);
+        let mut ungated = Accelerator::new(
+            Params::asic(),
+            ChipConfig {
+                csrf: true,
+                clock_gating: false,
+            },
+        );
+        ungated.load_model(&model);
+        let rg = gated.classify(&img, None, true).unwrap().report;
+        let ru = ungated.classify(&img, None, true).unwrap().report;
+        assert!(ru.total_dff_clocks() > 3 * rg.total_dff_clocks());
+        assert_eq!(
+            ru.sum_pipe_dff_clocks,
+            (dffs::SUM_PIPELINE * 372) as u64
+        );
+        assert_eq!(rg.sum_pipe_dff_clocks, (4_440 * 4) as u64);
+    }
+
+    #[test]
+    fn model_domain_unclocked_during_inference() {
+        let model = random_model(5);
+        let mut acc = Accelerator::new(Params::asic(), ChipConfig::default());
+        acc.load_model(&model);
+        let r = acc.classify(&random_image(13), None, false).unwrap().report;
+        assert_eq!(r.model_dff_clocks, 0, "§IV-F: model clock stopped");
+    }
+
+    #[test]
+    fn accuracy_on_synth_matches_sw_exactly() {
+        // The §V property: ASIC results "exactly in accordance" with SW.
+        let d = SynthFamily::Digits.generate(0, 40, 3);
+        let test = booleanize_split(&d.test, d.booleanizer);
+        let model = random_model(6);
+        let mut acc = Accelerator::new(Params::asic(), ChipConfig::default());
+        acc.load_model(&model);
+        let e = Engine::new();
+        for (img, _) in &test {
+            assert_eq!(
+                acc.classify(img, None, true).unwrap().prediction,
+                e.classify(&model, img).prediction
+            );
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Patch-generation register model (Fig. 3): a 10-row × 28-column DFF
+//! array. The first 10 image datarows are preloaded; the window then slides
+//! right one column per clock; at the end of a row band all rows shift up
+//! and the next datarow loads into the bottom row.
+//!
+//! Cycle-faithful behaviour and DFF activity accounting:
+//! - preload: 10 cycles (one datarow written per cycle);
+//! - 361 patch cycles; on the 18 band transitions the whole array shifts
+//!   (all 280 DFFs clocked with new data), otherwise only the window
+//!   position register advances.
+
+use crate::data::boolean::{BoolImage, IMG_SIDE};
+use crate::data::patches::{self, POSITIONS, WINDOW};
+use crate::util::BitVec;
+
+/// DFFs in the sliding-row register array (10 × 28).
+pub const ROW_ARRAY_DFFS: usize = WINDOW * IMG_SIDE;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PatchGenActivity {
+    /// DFF clock events in the row array (writes: preload rows + shifts).
+    pub dff_clocks: u64,
+    /// DFF value changes (data actually flipping).
+    pub dff_updates: u64,
+}
+
+/// The register structure of Fig. 3 plus the window position counters.
+pub struct PatchGen<'i> {
+    img: &'i BoolImage,
+    /// Rows packed for the fast literal builder (§Perf).
+    packed_rows: [u32; IMG_SIDE],
+    /// rows[r][c] — the 10×28 register array.
+    rows: [[bool; IMG_SIDE]; WINDOW],
+    /// Next image datarow to load on a band transition.
+    next_row: usize,
+    /// Current window coordinates.
+    x: usize,
+    y: usize,
+    pub activity: PatchGenActivity,
+    started: bool,
+}
+
+impl<'i> PatchGen<'i> {
+    /// Preload the first 10 datarows (10 clock cycles).
+    pub fn preload(img: &'i BoolImage) -> Self {
+        let mut pg = PatchGen {
+            img,
+            packed_rows: patches::pack_rows(img),
+            rows: [[false; IMG_SIDE]; WINDOW],
+            next_row: WINDOW,
+            x: 0,
+            y: 0,
+            activity: PatchGenActivity::default(),
+            started: false,
+        };
+        for r in 0..WINDOW {
+            let row = img.row(r);
+            pg.activity.dff_clocks += IMG_SIDE as u64;
+            for c in 0..IMG_SIDE {
+                if pg.rows[r][c] != row[c] {
+                    pg.activity.dff_updates += 1;
+                }
+                pg.rows[r][c] = row[c];
+            }
+        }
+        pg
+    }
+
+    /// Preload cycle count (part of the 372-cycle processing budget).
+    pub const PRELOAD_CYCLES: usize = WINDOW;
+
+    /// Literals of the current window position.
+    ///
+    /// §Perf: built with the word-level fast builder from the packed rows.
+    /// The register array (`rows`) remains the authoritative cycle/toggle
+    /// model; a debug assertion keeps the fast path honest against it.
+    pub fn current_literals(&self) -> BitVec {
+        let lits = patches::patch_literals_from_rows(&self.packed_rows, self.x, self.y);
+        #[cfg(debug_assertions)]
+        {
+            let mut f = BitVec::zeros(patches::NUM_FEATURES);
+            for wr in 0..WINDOW {
+                for wc in 0..WINDOW {
+                    if self.rows[wr][self.x + wc] {
+                        f.set(wr * WINDOW + wc, true);
+                    }
+                }
+            }
+            for (t, b) in crate::data::thermo::encode(self.y, patches::POS_BITS)
+                .into_iter()
+                .enumerate()
+            {
+                if b {
+                    f.set(WINDOW * WINDOW + t, true);
+                }
+            }
+            for (t, b) in crate::data::thermo::encode(self.x, patches::POS_BITS)
+                .into_iter()
+                .enumerate()
+            {
+                if b {
+                    f.set(WINDOW * WINDOW + patches::POS_BITS + t, true);
+                }
+            }
+            debug_assert_eq!(lits, patches::features_to_literals(&f));
+        }
+        lits
+    }
+
+    /// Current patch index (x slides fastest).
+    pub fn patch_index(&self) -> usize {
+        patches::patch_index(self.x, self.y)
+    }
+
+    /// Advance one patch cycle. Returns false when all 361 patches have
+    /// been visited (the call that would move past the last patch).
+    pub fn advance(&mut self) -> bool {
+        if !self.started {
+            self.started = true;
+            return true; // first patch is (0,0), already loaded
+        }
+        if self.x + 1 < POSITIONS {
+            self.x += 1;
+            return true;
+        }
+        // Band transition: shift all rows up, load next datarow.
+        if self.y + 1 >= POSITIONS {
+            return false;
+        }
+        self.x = 0;
+        self.y += 1;
+        let new_row = self.img.row(self.next_row);
+        self.next_row += 1;
+        self.activity.dff_clocks += ROW_ARRAY_DFFS as u64;
+        for r in 0..WINDOW - 1 {
+            for c in 0..IMG_SIDE {
+                if self.rows[r][c] != self.rows[r + 1][c] {
+                    self.activity.dff_updates += 1;
+                }
+                self.rows[r][c] = self.rows[r + 1][c];
+            }
+        }
+        for c in 0..IMG_SIDE {
+            if self.rows[WINDOW - 1][c] != new_row[c] {
+                self.activity.dff_updates += 1;
+            }
+            self.rows[WINDOW - 1][c] = new_row[c];
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::patches::NUM_PATCHES;
+    use crate::util::Xoshiro256ss;
+
+    fn random_image(seed: u64) -> BoolImage {
+        let mut rng = Xoshiro256ss::new(seed);
+        let bits: Vec<bool> = (0..784).map(|_| rng.chance(0.3)).collect();
+        BoolImage::from_bools(&bits)
+    }
+
+    #[test]
+    fn visits_all_patches_in_order() {
+        let img = random_image(1);
+        let mut pg = PatchGen::preload(&img);
+        let mut visited = Vec::new();
+        while pg.advance() {
+            visited.push(pg.patch_index());
+        }
+        assert_eq!(visited.len(), NUM_PATCHES);
+        assert_eq!(visited, (0..NUM_PATCHES).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn literals_match_functional_patch_extraction() {
+        let img = random_image(2);
+        let mut pg = PatchGen::preload(&img);
+        while pg.advance() {
+            let (x, y) = patches::patch_pos(pg.patch_index());
+            let expect = patches::patch_literals(&img, x, y);
+            assert_eq!(
+                pg.current_literals(),
+                expect,
+                "window register mismatch at patch ({x},{y})"
+            );
+        }
+    }
+
+    #[test]
+    fn preload_clocks_ten_rows() {
+        let img = random_image(3);
+        let pg = PatchGen::preload(&img);
+        assert_eq!(pg.activity.dff_clocks, (WINDOW * IMG_SIDE) as u64);
+    }
+
+    #[test]
+    fn band_transitions_clock_whole_array() {
+        let img = random_image(4);
+        let mut pg = PatchGen::preload(&img);
+        let after_preload = pg.activity.dff_clocks;
+        while pg.advance() {}
+        // 18 band transitions × 280 DFFs.
+        assert_eq!(
+            pg.activity.dff_clocks - after_preload,
+            ((POSITIONS - 1) * ROW_ARRAY_DFFS) as u64
+        );
+    }
+
+    #[test]
+    fn updates_bounded_by_clocks() {
+        let img = random_image(5);
+        let mut pg = PatchGen::preload(&img);
+        while pg.advance() {}
+        assert!(pg.activity.dff_updates <= pg.activity.dff_clocks);
+    }
+}

@@ -1,0 +1,259 @@
+//! Literature comparison rows for Tables IV, V and VI — the published
+//! figures of the prior works the paper compares against. These are
+//! constants transcribed from the paper's own comparison tables (they are
+//! reference points, not measurements of this repository).
+
+/// A row in a comparison table; `None` renders as "Not stated".
+#[derive(Clone, Debug)]
+pub struct PriorWork {
+    pub label: &'static str,
+    pub technology: &'static str,
+    pub active_area_mm2: Option<f64>,
+    pub algorithm: &'static str,
+    pub design_type: &'static str,
+    pub dataset: &'static str,
+    pub accuracy_pct: &'static str,
+    pub rate_fps: Option<f64>,
+    pub power_w: Option<f64>,
+    pub epc_j: Option<f64>,
+}
+
+/// Table IV prior works (MNIST-class ULP accelerators).
+pub fn table4_prior() -> Vec<PriorWork> {
+    vec![
+        PriorWork {
+            label: "Zhao [20] (TCAS-I'25)",
+            technology: "28 nm CMOS",
+            active_area_mm2: Some(0.261),
+            algorithm: "CNN",
+            design_type: "Analog, time domain",
+            dataset: "MNIST",
+            accuracy_pct: "97.9%",
+            rate_fps: Some(3508.0),
+            power_w: Some(11.6e-6),
+            epc_j: Some(3.32e-9),
+        },
+        PriorWork {
+            label: "Yejun [21] (TCAS-II'23)",
+            technology: "65 nm CMOS",
+            active_area_mm2: Some(0.57),
+            algorithm: "SNN",
+            design_type: "Neuromorphic mixed-signal",
+            dataset: "MNIST",
+            accuracy_pct: "95.35%",
+            rate_fps: Some(40e3), // 0.7 V operating point
+            power_w: Some(0.517e-3),
+            epc_j: Some(12.92e-9),
+        },
+        PriorWork {
+            label: "Yang [9] (JSSC'23)",
+            technology: "40 nm CMOS",
+            active_area_mm2: Some(0.98),
+            algorithm: "Ternary CNN",
+            design_type: "IMC mixed-signal",
+            dataset: "MNIST",
+            accuracy_pct: "97.1%",
+            rate_fps: Some(549.0),
+            power_w: Some(96e-6),
+            epc_j: Some(0.18e-6),
+        },
+    ]
+}
+
+/// Table V prior works (CIFAR-10 accelerators).
+pub fn table5_prior() -> Vec<PriorWork> {
+    vec![
+        PriorWork {
+            label: "Mauro [6] (TCAS-I'20)",
+            technology: "22 nm FD-SOI",
+            active_area_mm2: Some(2.3),
+            algorithm: "BNN",
+            design_type: "Digital SoC",
+            dataset: "CIFAR-10",
+            accuracy_pct: "99% of nominal",
+            rate_fps: Some(15.4),
+            power_w: Some(674e-6),
+            epc_j: Some(43.8e-6),
+        },
+        PriorWork {
+            label: "Knag [7] (JSSC'21)",
+            technology: "10 nm FinFET",
+            active_area_mm2: Some(0.39),
+            algorithm: "BNN",
+            design_type: "Digital",
+            dataset: "CIFAR-10",
+            accuracy_pct: "86%",
+            rate_fps: None,
+            power_w: Some(5.6e-3),
+            epc_j: None,
+        },
+        PriorWork {
+            label: "Bankman [5] (TCAS-I'20)",
+            technology: "28 nm CMOS",
+            active_area_mm2: Some(4.6),
+            algorithm: "BNN",
+            design_type: "IMC mixed-signal",
+            dataset: "CIFAR-10",
+            accuracy_pct: "86%",
+            rate_fps: Some(237.0),
+            power_w: Some(0.9e-3),
+            epc_j: Some(3.8e-6),
+        },
+        PriorWork {
+            label: "Park [26] (TCAS-I'25)",
+            technology: "65 nm CMOS",
+            active_area_mm2: Some(0.17),
+            algorithm: "SNN (spiking VGG-16)",
+            design_type: "Analog time-domain IMC",
+            dataset: "CIFAR-10",
+            accuracy_pct: "91.13%",
+            rate_fps: None,
+            power_w: Some(0.55e-3),
+            epc_j: None,
+        },
+        PriorWork {
+            label: "Yoshioka [27] (JSSC'25)",
+            technology: "65 nm CMOS",
+            active_area_mm2: Some(0.48),
+            algorithm: "CNN / Transformer",
+            design_type: "Analog IMC",
+            dataset: "CIFAR-10",
+            accuracy_pct: "91.7% / 95.8%",
+            rate_fps: None,
+            power_w: None,
+            epc_j: None,
+        },
+    ]
+}
+
+/// Table VI: TM hardware solutions.
+#[derive(Clone, Debug)]
+pub struct TmHwWork {
+    pub label: &'static str,
+    pub platform: &'static str,
+    pub algorithm: &'static str,
+    pub operation: &'static str,
+    pub dataset: &'static str,
+    pub accuracy_pct: &'static str,
+    pub rate_fps: Option<f64>,
+    pub power_w: Option<f64>,
+    pub epc_j: Option<f64>,
+}
+
+pub fn table6_prior() -> Vec<TmHwWork> {
+    vec![
+        TmHwWork {
+            label: "Wheeldon [11] (Phil.Trans.A'20)",
+            platform: "ASIC 65 nm (silicon)",
+            algorithm: "Vanilla TM",
+            operation: "Train + inference",
+            dataset: "Binary IRIS",
+            accuracy_pct: "97.0%",
+            rate_fps: None,
+            power_w: None,
+            epc_j: None,
+        },
+        TmHwWork {
+            label: "Mao [31] (TCAS-I'25)",
+            platform: "FPGA",
+            algorithm: "Vanilla TM / CoTM",
+            operation: "Train + inference",
+            dataset: "MNIST/FMNIST/KMNIST",
+            accuracy_pct: "97.74/86.38/83.11%",
+            rate_fps: Some(22.4e3),
+            power_w: Some(1.65),
+            epc_j: Some(73.6e-6),
+        },
+        TmHwWork {
+            label: "Tunheim [12] (TCAS-I'25)",
+            platform: "FPGA",
+            algorithm: "ConvCoTM",
+            operation: "Train + inference",
+            dataset: "MNIST/FMNIST/KMNIST",
+            accuracy_pct: "97.6/84.1/82.8%",
+            rate_fps: Some(134e3),
+            power_w: Some(1.8),
+            epc_j: Some(13.3e-6),
+        },
+        TmHwWork {
+            label: "Sahu [29] (ISTM'23)",
+            platform: "FPGA",
+            algorithm: "Vanilla TM",
+            operation: "Inference",
+            dataset: "MNIST",
+            accuracy_pct: "97.71%",
+            rate_fps: None,
+            power_w: None,
+            epc_j: None,
+        },
+        TmHwWork {
+            label: "Tunheim [28] (MICPRO'23)",
+            platform: "FPGA",
+            algorithm: "CTM",
+            operation: "Train + inference",
+            dataset: "2D Noisy XOR",
+            accuracy_pct: "99.9%",
+            rate_fps: Some(4.4e6),
+            power_w: Some(2.529),
+            epc_j: Some(0.6e-6),
+        },
+        TmHwWork {
+            label: "Ghazal [35] (ISLPED'23)",
+            platform: "ASIC simulation (ReRAM IMC)",
+            algorithm: "Vanilla TM",
+            operation: "Inference",
+            dataset: "MNIST/FMNIST/KMNIST/KWS-6",
+            accuracy_pct: "96.48/87.67/88.6/87.1%",
+            rate_fps: None,
+            power_w: None,
+            epc_j: Some(13.9e-9),
+        },
+        TmHwWork {
+            label: "Ghazal [36] (Phil.Trans.A'25)",
+            platform: "ASIC simulation (Y-flash IMC)",
+            algorithm: "CoTM",
+            operation: "Inference",
+            dataset: "MNIST",
+            accuracy_pct: "96.3%",
+            rate_fps: None,
+            power_w: None,
+            epc_j: None,
+        },
+    ]
+}
+
+/// Render an optional metric or the paper's "Not stated".
+pub fn or_not_stated(x: Option<f64>, fmt: impl Fn(f64) -> String) -> String {
+    x.map(fmt).unwrap_or_else(|| "Not stated".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_expected_rows() {
+        assert_eq!(table4_prior().len(), 3);
+        assert_eq!(table5_prior().len(), 5);
+        assert_eq!(table6_prior().len(), 7);
+    }
+
+    #[test]
+    fn headline_claim_holds_in_constants() {
+        // The paper's claim: 8.6 nJ is the second-lowest EPC on MNIST —
+        // only Zhao [20] (3.32 nJ) is lower among Table IV works.
+        let ours = 8.6e-9;
+        let lower: Vec<_> = table4_prior()
+            .into_iter()
+            .filter(|w| w.epc_j.map(|e| e < ours).unwrap_or(false))
+            .collect();
+        assert_eq!(lower.len(), 1);
+        assert_eq!(lower[0].label, "Zhao [20] (TCAS-I'25)");
+    }
+
+    #[test]
+    fn or_not_stated_formats() {
+        assert_eq!(or_not_stated(None, |x| format!("{x}")), "Not stated");
+        assert_eq!(or_not_stated(Some(2.0), |x| format!("{x}")), "2");
+    }
+}

@@ -1,0 +1,156 @@
+//! Bench harness: shared fixtures (trained models, datasets), the
+//! literature comparison constants for Tables IV–VI, and helpers for
+//! printing paper-style tables (criterion is not vendored in this offline
+//! build; benches are `harness = false` binaries over `util::stats`).
+
+pub mod literature;
+
+use crate::data::{booleanize_split, BoolImage, Dataset, SynthFamily};
+use crate::tm::{Model, Params, Trainer};
+use std::path::PathBuf;
+
+/// Standard bench fixture: a trained model + booleanized test split for a
+/// synthetic dataset family. Trained models are cached on disk keyed by
+/// (family, sizes, epochs, seed) so repeated bench runs are fast.
+pub struct Fixture {
+    pub dataset: Dataset,
+    pub model: Model,
+    pub test: Vec<(BoolImage, u8)>,
+    pub train: Vec<(BoolImage, u8)>,
+}
+
+/// Deterministic fixture parameters used across benches and EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug)]
+pub struct FixtureSpec {
+    pub family: SynthFamily,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl FixtureSpec {
+    pub fn standard(family: SynthFamily) -> FixtureSpec {
+        FixtureSpec {
+            family,
+            n_train: 2_000,
+            n_test: 500,
+            epochs: 12,
+            seed: 2025,
+        }
+    }
+
+    /// Small spec for quick smoke runs.
+    pub fn quick(family: SynthFamily) -> FixtureSpec {
+        FixtureSpec {
+            family,
+            n_train: 300,
+            n_test: 100,
+            epochs: 3,
+            seed: 2025,
+        }
+    }
+
+    fn cache_path(&self) -> PathBuf {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join(format!(
+            "model_{}_{}x{}_e{}_s{}.cctm",
+            self.family.name(),
+            self.n_train,
+            self.n_test,
+            self.epochs,
+            self.seed
+        ))
+    }
+
+    /// Build (or load from cache) the fixture.
+    pub fn build(&self) -> Fixture {
+        let dataset = self.family.generate(self.n_train, self.n_test, self.seed);
+        let train = booleanize_split(&dataset.train, dataset.booleanizer);
+        let test = booleanize_split(&dataset.test, dataset.booleanizer);
+        let params = Params::asic();
+        let cache = self.cache_path();
+        let model = if let Ok(m) = crate::model_io::load_file(params.clone(), &cache) {
+            m
+        } else {
+            let mut trainer = Trainer::new(params, self.seed);
+            for e in 0..self.epochs {
+                trainer.epoch(&train, e);
+            }
+            let m = trainer.export();
+            if let Some(parent) = cache.parent() {
+                std::fs::create_dir_all(parent).ok();
+            }
+            crate::model_io::save_file(&m, &cache).ok();
+            m
+        };
+        Fixture {
+            dataset,
+            model,
+            test,
+            train,
+        }
+    }
+}
+
+/// Format a rate as the paper prints it ("60.3 k").
+pub fn fmt_k(rate: f64) -> String {
+    if rate >= 1e6 {
+        format!("{:.1} M", rate / 1e6)
+    } else if rate >= 1e3 {
+        format!("{:.2} k", rate / 1e3)
+    } else {
+        format!("{rate:.0}")
+    }
+}
+
+/// Format energy in nJ/µJ as the paper does.
+pub fn fmt_energy(joules: f64) -> String {
+    if joules < 1e-6 {
+        format!("{:.1} nJ", joules * 1e9)
+    } else {
+        format!("{:.2} µJ", joules * 1e6)
+    }
+}
+
+/// Format power.
+pub fn fmt_power(watts: f64) -> String {
+    if watts < 0.1e-3 {
+        format!("{:.1} µW", watts * 1e6)
+    } else {
+        format!("{:.2} mW", watts * 1e3)
+    }
+}
+
+/// Emit a bench-section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fixture_trains_and_caches() {
+        let spec = FixtureSpec::quick(SynthFamily::Digits);
+        std::fs::remove_file(spec.cache_path()).ok();
+        let f = spec.build();
+        assert_eq!(f.test.len(), 100);
+        assert!(f.model.total_includes() > 0, "trained model has includes");
+        assert!(spec.cache_path().exists(), "model cached");
+        // Second build loads from cache and matches.
+        let f2 = spec.build();
+        assert!(f.model == f2.model);
+    }
+
+    #[test]
+    fn formatting_matches_paper_style() {
+        assert_eq!(fmt_k(60_300.0), "60.30 k");
+        assert_eq!(fmt_k(549.0), "549");
+        assert_eq!(fmt_energy(8.6e-9), "8.6 nJ");
+        assert_eq!(fmt_energy(3.8e-6), "3.80 µJ");
+        assert_eq!(fmt_power(0.52e-3), "0.52 mW");
+        assert_eq!(fmt_power(81e-6), "81.0 µW");
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal CLI argument parser (clap is not vendored): subcommand + flags
+//! of the forms `--key value`, `--key=value` and boolean `--flag`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminates flag parsing.
+                    out.positionals.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--dataset", "mnist", "--epochs=5", "--quick"]);
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("dataset"), Some("mnist"));
+        assert_eq!(a.get_usize("epochs", 1).unwrap(), 5);
+        assert!(a.get_bool("quick"));
+        assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.get_or("dataset", "mnist"), "mnist");
+        assert_eq!(a.get_usize("epochs", 12).unwrap(), 12);
+        assert_eq!(a.get_f64("freq", 27.8e6).unwrap(), 27.8e6);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--epochs", "five"]);
+        assert!(a.get_usize("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_flag_parsing() {
+        let a = parse(&["run", "--flag", "--", "--not-a-flag"]);
+        assert!(a.get_bool("flag"));
+        assert_eq!(a.positionals, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["classify", "img1.bin", "img2.bin"]);
+        assert_eq!(a.positionals.len(), 2);
+    }
+}

@@ -1,0 +1,295 @@
+//! Inference backends behind the coordinator: the native bit-packed
+//! engine, the cycle-accurate ASIC simulator and the PJRT-executed AOT
+//! artifact — plus a mirror backend that cross-checks two of them on live
+//! traffic (the paper's "ASIC matches SW exactly" property as a runtime
+//! invariant).
+
+use crate::asic::{Accelerator, ChipConfig};
+use crate::data::boolean::BoolImage;
+use crate::runtime::{ModelInputs, Runtime};
+use crate::tm::{Engine, Model};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// One classification outcome from a backend.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackendOutput {
+    pub prediction: u8,
+    pub class_sums: Vec<i32>,
+    /// Simulated accelerator cycles attributed to this image (ASIC backend
+    /// only; None for purely functional backends).
+    pub sim_cycles: Option<u64>,
+}
+
+/// A batched classification backend.
+///
+/// Not `Send`-bound: PJRT client handles are thread-affine, so the
+/// coordinator constructs its backend *inside* the worker thread via a
+/// `Send` factory (see `Coordinator::start_with`).
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    /// Largest batch the backend can consume in one call.
+    fn max_batch(&self) -> usize;
+    fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>>;
+}
+
+impl<B: Backend + ?Sized> Backend for Box<B> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn max_batch(&self) -> usize {
+        (**self).max_batch()
+    }
+    fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
+        (**self).classify(imgs)
+    }
+}
+
+/// The native Rust golden-model engine (SW baseline).
+pub struct NativeBackend {
+    model: Model,
+    engine: Engine,
+}
+
+impl NativeBackend {
+    pub fn new(model: Model) -> Self {
+        NativeBackend {
+            model,
+            engine: Engine::new(),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
+        Ok(imgs
+            .iter()
+            .map(|img| {
+                let inf = self.engine.classify(&self.model, img);
+                BackendOutput {
+                    prediction: inf.prediction,
+                    class_sums: inf.class_sums,
+                    sim_cycles: None,
+                }
+            })
+            .collect())
+    }
+}
+
+/// The cycle-accurate ASIC simulator in continuous mode.
+pub struct AsicBackend {
+    acc: Accelerator,
+    /// Whether the *previous* image in this backend's stream overlaps the
+    /// transfer (true after the first image — double buffering, §IV-C).
+    primed: bool,
+}
+
+impl AsicBackend {
+    pub fn new(model: &Model, config: ChipConfig) -> Self {
+        let mut acc = Accelerator::new(model.params.clone(), config);
+        acc.load_model(model);
+        AsicBackend { acc, primed: false }
+    }
+
+    pub fn accelerator(&self) -> &Accelerator {
+        &self.acc
+    }
+}
+
+impl Backend for AsicBackend {
+    fn name(&self) -> &'static str {
+        "asic-sim"
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
+        let mut out = Vec::with_capacity(imgs.len());
+        for img in imgs {
+            let res = self.acc.classify(img, None, self.primed)?;
+            self.primed = true;
+            out.push(BackendOutput {
+                prediction: res.prediction,
+                class_sums: res.class_sums,
+                sim_cycles: Some(res.report.phases.latency() as u64),
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// The AOT artifact executed through PJRT (L2/L1 on the request path).
+pub struct PjrtBackend {
+    runtime: Runtime,
+    inputs: ModelInputs,
+    artifact: String,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: &Path, artifact: &str, batch: usize, model: &Model) -> Result<Self> {
+        let mut runtime = Runtime::new(artifact_dir)?;
+        runtime.load(artifact, batch)?; // compile eagerly
+        Ok(PjrtBackend {
+            runtime,
+            inputs: ModelInputs::from_model(model),
+            artifact: artifact.to_string(),
+            batch,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
+        let graph = self.runtime.load(&self.artifact, self.batch)?;
+        let outs = graph.run(imgs, &self.inputs)?;
+        Ok(outs
+            .into_iter()
+            .map(|o| BackendOutput {
+                prediction: o.prediction,
+                class_sums: o.class_sums.iter().map(|&x| x as i32).collect(),
+                sim_cycles: None,
+            })
+            .collect())
+    }
+}
+
+/// Runs a primary and a reference backend on the same traffic and fails
+/// loudly on any divergence.
+pub struct MirrorBackend {
+    primary: Box<dyn Backend>,
+    reference: Box<dyn Backend>,
+    pub compared: u64,
+}
+
+impl MirrorBackend {
+    pub fn new(primary: Box<dyn Backend>, reference: Box<dyn Backend>) -> Self {
+        MirrorBackend {
+            primary,
+            reference,
+            compared: 0,
+        }
+    }
+}
+
+impl Backend for MirrorBackend {
+    fn name(&self) -> &'static str {
+        "mirror"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.primary.max_batch().min(self.reference.max_batch())
+    }
+
+    fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
+        let a = self.primary.classify(imgs)?;
+        let b = self.reference.classify(imgs)?;
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            if x.prediction != y.prediction || x.class_sums != y.class_sums {
+                return Err(anyhow!(
+                    "backend divergence on image {i}: {}={:?} vs {}={:?}",
+                    self.primary.name(),
+                    (x.prediction, &x.class_sums),
+                    self.reference.name(),
+                    (y.prediction, &y.class_sums)
+                ));
+            }
+        }
+        self.compared += imgs.len() as u64;
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::Params;
+    use crate::util::Xoshiro256ss;
+
+    pub(crate) fn random_model(seed: u64) -> Model {
+        let params = Params::asic();
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut m = Model::blank(params.clone());
+        for j in 0..params.clauses {
+            for _ in 0..1 + rng.usize_below(5) {
+                m.set_include(j, rng.usize_below(params.literals), true);
+            }
+            for i in 0..params.classes {
+                m.set_weight(i, j, (rng.below(61) as i32 - 30) as i8);
+            }
+        }
+        m
+    }
+
+    pub(crate) fn random_images(seed: u64, n: usize) -> Vec<BoolImage> {
+        let mut rng = Xoshiro256ss::new(seed);
+        (0..n)
+            .map(|_| {
+                BoolImage::from_bools(&(0..784).map(|_| rng.chance(0.3)).collect::<Vec<_>>())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_and_asic_agree() {
+        let model = random_model(1);
+        let imgs = random_images(2, 6);
+        let refs: Vec<&BoolImage> = imgs.iter().collect();
+        let mut native = NativeBackend::new(model.clone());
+        let mut asic = AsicBackend::new(&model, ChipConfig::default());
+        let a = native.classify(&refs).unwrap();
+        let b = asic.classify(&refs).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prediction, y.prediction);
+            assert_eq!(x.class_sums, y.class_sums);
+        }
+        // ASIC backend reports cycles: first image 471, then 372.
+        assert_eq!(b[0].sim_cycles, Some(471));
+        assert_eq!(b[1].sim_cycles, Some(372));
+    }
+
+    #[test]
+    fn mirror_passes_on_agreement() {
+        let model = random_model(3);
+        let imgs = random_images(4, 5);
+        let refs: Vec<&BoolImage> = imgs.iter().collect();
+        let mut mirror = MirrorBackend::new(
+            Box::new(NativeBackend::new(model.clone())),
+            Box::new(AsicBackend::new(&model, ChipConfig::default())),
+        );
+        let out = mirror.classify(&refs).unwrap();
+        assert_eq!(out.len(), 5);
+        assert_eq!(mirror.compared, 5);
+    }
+
+    #[test]
+    fn mirror_detects_divergence() {
+        let model_a = random_model(5);
+        let model_b = random_model(6); // different model → different sums
+        let imgs = random_images(7, 3);
+        let refs: Vec<&BoolImage> = imgs.iter().collect();
+        let mut mirror = MirrorBackend::new(
+            Box::new(NativeBackend::new(model_a)),
+            Box::new(NativeBackend::new(model_b)),
+        );
+        assert!(mirror.classify(&refs).is_err());
+    }
+}

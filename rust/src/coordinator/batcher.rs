@@ -1,0 +1,121 @@
+//! Dynamic batcher: collects requests from the queue until the batch is
+//! full or the wait deadline expires — the software analogue of the chip's
+//! double-buffered continuous mode, where the next frame's transfer hides
+//! behind the current frame's processing (Fig. 8).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Maximum images per backend call.
+    pub max_batch: usize,
+    /// Maximum time the first request in a batch may wait.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Collect the next batch from `rx`. Blocks for the first item (or returns
+/// `None` when the channel is closed and drained), then fills greedily
+/// with whatever is already queued, up to `max_batch`.
+///
+/// §Perf: an earlier version waited up to `max_wait` for stragglers after
+/// the first item; on a single-core host that added the full wait to every
+/// single-inflight request's latency (~50 µs of a ~130 µs p50) without
+/// improving batch formation — pipelined clients enqueue before the worker
+/// wakes, so the greedy drain already batches them. `max_wait` is now only
+/// honored when the queue was non-empty but under-filled (bursty arrivals
+/// mid-flight), and it is skipped entirely when the first drain got
+/// nothing.
+pub fn next_batch<T>(rx: &Receiver<T>, cfg: &BatchConfig) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    // Greedy drain of everything already enqueued.
+    while batch.len() < cfg.max_batch {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            Err(_) => break,
+        }
+    }
+    // Only if traffic is clearly concurrent (we drained extra items but the
+    // batch is still small) give stragglers a short window.
+    if batch.len() > 1 && batch.len() < cfg.max_batch && !cfg.max_wait.is_zero() {
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let cfg = BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+        };
+        let b1 = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b1, vec![0, 1, 2, 3]);
+        let b2 = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn short_batch_on_timeout() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        };
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b, vec![42]);
+    }
+
+    #[test]
+    fn returns_none_when_closed_and_empty() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchConfig::default()).is_none());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let cfg = BatchConfig {
+            max_batch: 10,
+            max_wait: Duration::from_millis(1),
+        };
+        assert_eq!(next_batch(&rx, &cfg).unwrap(), vec![1, 2]);
+        assert!(next_batch(&rx, &cfg).is_none());
+    }
+}

@@ -1,0 +1,119 @@
+//! Serving metrics: request counts, latency distribution, batch-size
+//! distribution and throughput, shared between the coordinator thread and
+//! callers via an `Arc<Metrics>`.
+
+use crate::util::stats::{Histogram, Summary};
+use std::sync::Mutex;
+use std::time::Instant;
+
+struct Inner {
+    started: Instant,
+    requests: u64,
+    errors: u64,
+    latencies_us: Vec<f64>,
+    batch_hist: Histogram,
+}
+
+/// Thread-safe metrics sink.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                started: Instant::now(),
+                requests: 0,
+                errors: 0,
+                latencies_us: Vec::new(),
+                batch_hist: Histogram::new(vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0]),
+            }),
+        }
+    }
+
+    pub fn record_batch(&self, batch_size: usize, latencies_us: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += latencies_us.len() as u64;
+        g.batch_hist.record(batch_size as f64);
+        g.latencies_us.extend_from_slice(latencies_us);
+    }
+
+    pub fn record_error(&self, n: u64) {
+        self.inner.lock().unwrap().errors += n;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            requests: g.requests,
+            errors: g.errors,
+            throughput_rps: if elapsed > 0.0 {
+                g.requests as f64 / elapsed
+            } else {
+                0.0
+            },
+            latency_us: Summary::of(&g.latencies_us),
+            batches: g.batch_hist.total(),
+        }
+    }
+}
+
+/// A point-in-time copy of the metrics.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub errors: u64,
+    pub throughput_rps: f64,
+    pub latency_us: Summary,
+    pub batches: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj([
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("latency_p50_us", Json::num(self.latency_us.p50)),
+            ("latency_p95_us", Json::num(self.latency_us.p95)),
+            ("latency_p99_us", Json::num(self.latency_us.p99)),
+            ("batches", Json::num(self.batches as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(4, &[10.0, 12.0, 11.0, 13.0]);
+        m.record_batch(2, &[20.0, 22.0]);
+        m.record_error(1);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batches, 2);
+        assert!(s.latency_us.p50 > 10.0 && s.latency_us.p50 < 21.0);
+    }
+
+    #[test]
+    fn json_snapshot_has_fields() {
+        let m = Metrics::new();
+        m.record_batch(1, &[5.0]);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("requests").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(j.get("latency_p99_us").is_some());
+    }
+}

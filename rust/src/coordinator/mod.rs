@@ -1,0 +1,252 @@
+//! The serving coordinator (L3): a threaded request router with dynamic
+//! batching over pluggable inference backends — the software counterpart
+//! of the paper's system-processor + accelerator pair (§IV-A, Fig. 10),
+//! with the chip's continuous-mode overlap expressed as queue batching.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod sysproc;
+
+pub use backend::{AsicBackend, Backend, BackendOutput, MirrorBackend, NativeBackend, PjrtBackend};
+pub use batcher::BatchConfig;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use sysproc::SysProc;
+
+use crate::data::boolean::BoolImage;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// An in-flight request.
+struct Request {
+    img: BoolImage,
+    enqueued: Instant,
+    resp: Sender<anyhow::Result<BackendOutput>>,
+}
+
+/// Handle for submitting classification requests.
+pub struct Coordinator {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start the coordinator over a backend built on the caller's thread.
+    /// Requires a `Send` backend; for thread-affine backends (PJRT) use
+    /// [`Coordinator::start_with`].
+    pub fn start(backend: Box<dyn Backend + Send>, cfg: BatchConfig) -> Coordinator {
+        let mut slot = Some(backend);
+        Self::start_with(move || slot.take().expect("factory called once"), cfg)
+    }
+
+    /// Start the coordinator thread; `factory` runs *inside* the worker
+    /// thread, so the backend itself need not be `Send` (PJRT client
+    /// handles are thread-affine).
+    pub fn start_with<F, B>(factory: F, cfg: BatchConfig) -> Coordinator
+    where
+        F: FnOnce() -> B + Send + 'static,
+        B: Backend + 'static,
+    {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let metrics = Arc::new(Metrics::new());
+        let m = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("convcotm-coordinator".into())
+            .spawn(move || {
+                let mut backend = factory();
+                let effective = BatchConfig {
+                    max_batch: cfg.max_batch.min(backend.max_batch()),
+                    ..cfg
+                };
+                while let Some(batch) = batcher::next_batch(&rx, &effective) {
+                    let imgs: Vec<&BoolImage> = batch.iter().map(|r| &r.img).collect();
+                    match backend.classify(&imgs) {
+                        Ok(outputs) => {
+                            let now = Instant::now();
+                            let lat: Vec<f64> = batch
+                                .iter()
+                                .map(|r| (now - r.enqueued).as_secs_f64() * 1e6)
+                                .collect();
+                            m.record_batch(batch.len(), &lat);
+                            for (req, out) in batch.into_iter().zip(outputs) {
+                                let _ = req.resp.send(Ok(out));
+                            }
+                        }
+                        Err(e) => {
+                            m.record_error(batch.len() as u64);
+                            for req in batch {
+                                let _ = req.resp.send(Err(anyhow::anyhow!("{e}")));
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn coordinator thread");
+        Coordinator {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+        }
+    }
+
+    /// Submit asynchronously; the receiver yields the result.
+    pub fn submit(&self, img: BoolImage) -> Receiver<anyhow::Result<BackendOutput>> {
+        let (resp_tx, resp_rx) = channel();
+        let req = Request {
+            img,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
+        self.tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(req)
+            .expect("coordinator thread alive");
+        resp_rx
+    }
+
+    /// Submit and wait.
+    pub fn classify(&self, img: BoolImage) -> anyhow::Result<BackendOutput> {
+        self.submit(img)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped request"))?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asic::ChipConfig;
+    use crate::tm::{Engine, Model, Params};
+    use crate::util::Xoshiro256ss;
+
+    fn random_model(seed: u64) -> Model {
+        let params = Params::asic();
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut m = Model::blank(params.clone());
+        for j in 0..params.clauses {
+            for _ in 0..1 + rng.usize_below(5) {
+                m.set_include(j, rng.usize_below(params.literals), true);
+            }
+            for i in 0..params.classes {
+                m.set_weight(i, j, (rng.below(61) as i32 - 30) as i8);
+            }
+        }
+        m
+    }
+
+    fn random_images(seed: u64, n: usize) -> Vec<BoolImage> {
+        let mut rng = Xoshiro256ss::new(seed);
+        (0..n)
+            .map(|_| {
+                BoolImage::from_bools(&(0..784).map(|_| rng.chance(0.3)).collect::<Vec<_>>())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_requests_and_matches_engine() {
+        let model = random_model(1);
+        let coord = Coordinator::start(
+            Box::new(NativeBackend::new(model.clone())),
+            BatchConfig::default(),
+        );
+        let engine = Engine::new();
+        for img in random_images(2, 8) {
+            let out = coord.classify(img.clone()).unwrap();
+            assert_eq!(out.prediction, engine.classify(&model, &img).prediction);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests, 8);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn pipelined_submissions_batch_up() {
+        let model = random_model(3);
+        let coord = Coordinator::start(
+            Box::new(NativeBackend::new(model)),
+            BatchConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(5),
+            },
+        );
+        // Submit all first, then collect: the batcher should group them.
+        let rxs: Vec<_> = random_images(4, 16)
+            .into_iter()
+            .map(|img| coord.submit(img))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests, 16);
+        assert!(
+            snap.batches < 16,
+            "expected batching, got {} batches",
+            snap.batches
+        );
+    }
+
+    #[test]
+    fn asic_backend_through_coordinator_counts_cycles() {
+        let model = random_model(5);
+        let coord = Coordinator::start(
+            Box::new(AsicBackend::new(&model, ChipConfig::default())),
+            BatchConfig::default(),
+        );
+        let out1 = coord.classify(random_images(6, 1).remove(0)).unwrap();
+        let out2 = coord.classify(random_images(7, 1).remove(0)).unwrap();
+        assert_eq!(out1.sim_cycles, Some(471));
+        assert_eq!(out2.sim_cycles, Some(372), "double-buffer overlap");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mirror_backend_cross_checks_under_load() {
+        let model = random_model(8);
+        // MirrorBackend holds non-Send trait objects: build it inside the
+        // worker thread via the factory entry point.
+        let m2 = model.clone();
+        let coord = Coordinator::start_with(
+            move || {
+                MirrorBackend::new(
+                    Box::new(NativeBackend::new(m2.clone())),
+                    Box::new(AsicBackend::new(&m2, ChipConfig::default())),
+                )
+            },
+            BatchConfig::default(),
+        );
+        for img in random_images(9, 12) {
+            coord.classify(img).unwrap();
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.requests, 12);
+    }
+}

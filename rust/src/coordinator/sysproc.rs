@@ -1,0 +1,105 @@
+//! System-processor timing model (the Zybo/ARM9 side of Fig. 10).
+//!
+//! The accelerator alone sustains one image per 372 cycles; the *measured*
+//! system rates include processor overhead (§V):
+//!
+//! - 27.8 MHz: 60.3 k img/s ⇒ 461.0 cycles/img ⇒ ≈89 overhead cycles;
+//! - 1.0 MHz:  2.27 k img/s ⇒ 440.5 cycles/img ⇒ ≈68.5 overhead cycles;
+//! - single-image latency 25.4 µs @27.8 MHz ⇒ 706 cycles = 471 + 235.
+//!
+//! Overhead is neither a fixed cycle count nor a fixed wall time across
+//! clock rates (the DMA engine and the interrupt path run from independent
+//! clocks), so the model interpolates the measured overhead between the
+//! two published anchors and extrapolates flatly outside them.
+
+use crate::asic::{LATENCY_CYCLES, PERIOD_CYCLES};
+
+/// Overhead anchors: (freq_hz, continuous-mode overhead cycles).
+const ANCHORS: [(f64, f64); 2] = [(1.0e6, 68.5), (27.8e6, 89.0)];
+
+/// Single-image extra overhead (interrupt service + result readback) at
+/// 27.8 MHz, in cycles.
+const SINGLE_SHOT_OVERHEAD_27M8: f64 = 235.0;
+
+/// The calibrated system-processor model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SysProc;
+
+impl SysProc {
+    /// Continuous-mode overhead cycles per image at `freq_hz`.
+    pub fn overhead_cycles(&self, freq_hz: f64) -> f64 {
+        let (f0, o0) = ANCHORS[0];
+        let (f1, o1) = ANCHORS[1];
+        if freq_hz <= f0 {
+            o0
+        } else if freq_hz >= f1 {
+            o1
+        } else {
+            o0 + (o1 - o0) * (freq_hz - f0) / (f1 - f0)
+        }
+    }
+
+    /// Continuous-mode period in cycles (accelerator + system overhead).
+    pub fn period_cycles(&self, freq_hz: f64) -> f64 {
+        PERIOD_CYCLES as f64 + self.overhead_cycles(freq_hz)
+    }
+
+    /// Measured classification rate including system overhead (Table II).
+    pub fn classification_rate(&self, freq_hz: f64) -> f64 {
+        freq_hz / self.period_cycles(freq_hz)
+    }
+
+    /// Single-image latency in seconds including transfer and overhead.
+    pub fn single_image_latency(&self, freq_hz: f64) -> f64 {
+        let overhead = SINGLE_SHOT_OVERHEAD_27M8 * (freq_hz / 27.8e6).max(0.2);
+        (LATENCY_CYCLES as f64 + overhead) / freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_measured_rates() {
+        let sp = SysProc;
+        let r278 = sp.classification_rate(27.8e6);
+        assert!(
+            (r278 - 60.3e3).abs() / 60.3e3 < 0.005,
+            "27.8 MHz rate {r278:.0} vs 60.3k"
+        );
+        let r1 = sp.classification_rate(1.0e6);
+        assert!(
+            (r1 - 2.27e3).abs() / 2.27e3 < 0.005,
+            "1 MHz rate {r1:.0} vs 2.27k"
+        );
+    }
+
+    #[test]
+    fn reproduces_single_image_latency() {
+        let sp = SysProc;
+        let lat = sp.single_image_latency(27.8e6);
+        assert!(
+            (lat - 25.4e-6).abs() / 25.4e-6 < 0.01,
+            "latency {:.2} µs vs 25.4 µs",
+            lat * 1e6
+        );
+    }
+
+    #[test]
+    fn overhead_interpolates_between_anchors() {
+        let sp = SysProc;
+        let mid = sp.overhead_cycles(14.4e6);
+        assert!(mid > 68.5 && mid < 89.0);
+        assert_eq!(sp.overhead_cycles(0.5e6), 68.5);
+        assert_eq!(sp.overhead_cycles(50e6), 89.0);
+    }
+
+    #[test]
+    fn rate_never_exceeds_pure_accelerator_bound() {
+        let sp = SysProc;
+        for f in [0.5e6, 1e6, 5e6, 27.8e6, 40e6] {
+            assert!(sp.classification_rate(f) < f / PERIOD_CYCLES as f64);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Image booleanization (paper §III-D).
+//!
+//! - MNIST-style: fixed threshold — pixel > 75 → 1.
+//! - FMNIST/KMNIST-style: adaptive Gaussian thresholding — pixel is 1 iff it
+//!   exceeds a Gaussian-weighted local mean minus a constant offset, the
+//!   OpenCV `ADAPTIVE_THRESH_GAUSSIAN_C` procedure the CTM paper uses.
+
+use crate::util::BitVec;
+
+/// Image side length (the accelerator operates on 28×28 images).
+pub const IMG_SIDE: usize = 28;
+/// Pixels per image.
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+
+/// A booleanized 28×28 image, row-major bit `y*28+x`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BoolImage {
+    bits: BitVec,
+}
+
+impl std::fmt::Debug for BoolImage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "BoolImage(")?;
+        for y in 0..IMG_SIDE {
+            let row: String = (0..IMG_SIDE)
+                .map(|x| if self.get(x, y) { '#' } else { '.' })
+                .collect();
+            writeln!(f, "  {row}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl BoolImage {
+    pub fn blank() -> Self {
+        Self {
+            bits: BitVec::zeros(IMG_PIXELS),
+        }
+    }
+
+    pub fn from_bits(bits: BitVec) -> Self {
+        assert_eq!(bits.len(), IMG_PIXELS);
+        Self { bits }
+    }
+
+    pub fn from_bools(px: &[bool]) -> Self {
+        assert_eq!(px.len(), IMG_PIXELS);
+        Self {
+            bits: BitVec::from_bools(px),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> bool {
+        self.bits.get(y * IMG_SIDE + x)
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: bool) {
+        self.bits.set(y * IMG_SIDE + x, v);
+    }
+
+    pub fn bits(&self) -> &BitVec {
+        &self.bits
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.bits.count_ones()
+    }
+
+    /// Pack into the accelerator's 98-byte wire format: row-major pixels,
+    /// LSB-first within each byte (28·28/8 = 98 bytes, §IV-C).
+    pub fn to_wire_bytes(&self) -> [u8; 98] {
+        let v = self.bits.to_bytes_lsb();
+        let mut out = [0u8; 98];
+        out.copy_from_slice(&v);
+        out
+    }
+
+    /// Unpack from the 98-byte wire format.
+    pub fn from_wire_bytes(bytes: &[u8; 98]) -> Self {
+        Self {
+            bits: BitVec::from_bytes_lsb(bytes, IMG_PIXELS),
+        }
+    }
+
+    /// Extract one datarow as 28 bools (used by the patch-generation
+    /// register model, which loads the image row by row — Fig. 3).
+    pub fn row(&self, y: usize) -> [bool; IMG_SIDE] {
+        let mut out = [false; IMG_SIDE];
+        for (x, o) in out.iter_mut().enumerate() {
+            *o = self.get(x, y);
+        }
+        out
+    }
+}
+
+/// Fixed-threshold booleanization: pixel > `threshold` → 1.
+/// The paper uses threshold 75 for MNIST.
+pub fn threshold_fixed(pixels: &[u8], threshold: u8) -> BoolImage {
+    assert_eq!(pixels.len(), IMG_PIXELS);
+    let bools: Vec<bool> = pixels.iter().map(|&p| p > threshold).collect();
+    BoolImage::from_bools(&bools)
+}
+
+/// The paper's MNIST setting (threshold 75).
+pub fn booleanize_mnist(pixels: &[u8]) -> BoolImage {
+    threshold_fixed(pixels, 75)
+}
+
+/// Adaptive Gaussian thresholding (FMNIST / KMNIST setting).
+///
+/// Pixel (x,y) is 1 iff `p(x,y) > G(x,y) - c`, where `G` is the
+/// Gaussian-weighted mean over a `block × block` neighbourhood (border
+/// replicated). Defaults follow the common CTM preprocessing:
+/// block = 11, c = 2, σ = 0.3·((block−1)/2 − 1) + 0.8 (OpenCV's rule).
+pub fn threshold_adaptive_gaussian(pixels: &[u8], block: usize, c: f64) -> BoolImage {
+    assert_eq!(pixels.len(), IMG_PIXELS);
+    assert!(block % 2 == 1, "block size must be odd");
+    let half = block / 2;
+    let sigma = 0.3 * ((block - 1) as f64 / 2.0 - 1.0) + 0.8;
+    // 1-D Gaussian kernel (separable filter).
+    let kernel: Vec<f64> = (0..block)
+        .map(|i| {
+            let d = i as f64 - half as f64;
+            (-d * d / (2.0 * sigma * sigma)).exp()
+        })
+        .collect();
+    let ksum: f64 = kernel.iter().sum();
+    let at = |x: isize, y: isize| -> f64 {
+        // Border replication.
+        let xc = x.clamp(0, IMG_SIDE as isize - 1) as usize;
+        let yc = y.clamp(0, IMG_SIDE as isize - 1) as usize;
+        pixels[yc * IMG_SIDE + xc] as f64
+    };
+    // Horizontal pass.
+    let mut tmp = vec![0.0f64; IMG_PIXELS];
+    for y in 0..IMG_SIDE {
+        for x in 0..IMG_SIDE {
+            let mut acc = 0.0;
+            for (i, &k) in kernel.iter().enumerate() {
+                acc += k * at(x as isize + i as isize - half as isize, y as isize);
+            }
+            tmp[y * IMG_SIDE + x] = acc / ksum;
+        }
+    }
+    let tmp_at = |x: isize, y: isize| -> f64 {
+        let xc = x.clamp(0, IMG_SIDE as isize - 1) as usize;
+        let yc = y.clamp(0, IMG_SIDE as isize - 1) as usize;
+        tmp[yc * IMG_SIDE + xc]
+    };
+    // Vertical pass + compare.
+    let mut bools = vec![false; IMG_PIXELS];
+    for y in 0..IMG_SIDE {
+        for x in 0..IMG_SIDE {
+            let mut acc = 0.0;
+            for (i, &k) in kernel.iter().enumerate() {
+                acc += k * tmp_at(x as isize, y as isize + i as isize - half as isize);
+            }
+            let mean = acc / ksum;
+            bools[y * IMG_SIDE + x] = pixels[y * IMG_SIDE + x] as f64 > mean - c;
+        }
+    }
+    BoolImage::from_bools(&bools)
+}
+
+/// The paper's FMNIST/KMNIST setting.
+pub fn booleanize_adaptive(pixels: &[u8]) -> BoolImage {
+    threshold_adaptive_gaussian(pixels, 11, 2.0)
+}
+
+/// Which booleanization a dataset uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Booleanizer {
+    /// Fixed threshold at 75 (MNIST).
+    FixedMnist,
+    /// Adaptive Gaussian, block 11, c 2 (FMNIST/KMNIST).
+    AdaptiveGaussian,
+}
+
+impl Booleanizer {
+    pub fn apply(self, pixels: &[u8]) -> BoolImage {
+        match self {
+            Booleanizer::FixedMnist => booleanize_mnist(pixels),
+            Booleanizer::AdaptiveGaussian => booleanize_adaptive(pixels),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_threshold_is_strict_greater() {
+        let mut px = vec![0u8; IMG_PIXELS];
+        px[0] = 75;
+        px[1] = 76;
+        px[2] = 255;
+        let img = booleanize_mnist(&px);
+        assert!(!img.get(0, 0), "75 is not > 75");
+        assert!(img.get(1, 0));
+        assert!(img.get(2, 0));
+        assert_eq!(img.count_ones(), 2);
+    }
+
+    #[test]
+    fn wire_bytes_roundtrip() {
+        let mut img = BoolImage::blank();
+        for i in 0..IMG_PIXELS {
+            if i % 3 == 0 {
+                img.set(i % IMG_SIDE, i / IMG_SIDE, true);
+            }
+        }
+        let bytes = img.to_wire_bytes();
+        let back = BoolImage::from_wire_bytes(&bytes);
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn wire_format_is_lsb_first_row_major() {
+        let mut img = BoolImage::blank();
+        img.set(0, 0, true); // bit 0 → byte 0 bit 0
+        img.set(9, 0, true); // bit 9 → byte 1 bit 1
+        let bytes = img.to_wire_bytes();
+        assert_eq!(bytes[0], 0b0000_0001);
+        assert_eq!(bytes[1], 0b0000_0010);
+    }
+
+    #[test]
+    fn adaptive_threshold_flat_image_is_all_ones() {
+        // On a constant image the local mean equals the pixel, so
+        // p > mean - c holds everywhere for c > 0.
+        let px = vec![100u8; IMG_PIXELS];
+        let img = booleanize_adaptive(&px);
+        assert_eq!(img.count_ones(), IMG_PIXELS);
+    }
+
+    #[test]
+    fn adaptive_threshold_finds_bright_blob_on_dark_bg() {
+        let mut px = vec![10u8; IMG_PIXELS];
+        for y in 10..18 {
+            for x in 10..18 {
+                px[y * IMG_SIDE + x] = 200;
+            }
+        }
+        let img = booleanize_adaptive(&px);
+        // Blob interior is brighter than its local mean → 1.
+        assert!(img.get(13, 13));
+        // A far-away dark pixel only sees dark neighbours; 10 > 10-2 fails
+        // is false (10 > 8 true) — adaptive thresholding marks flat regions
+        // as 1; what matters is contrast at the blob edge:
+        assert!(img.get(13, 13) && img.get(3, 3));
+        // Pixel just outside the blob edge is dark but near bright pixels →
+        // its local mean is pulled up above p + c → 0.
+        assert!(!img.get(9, 13));
+    }
+
+    #[test]
+    fn row_extraction_matches_get() {
+        let mut img = BoolImage::blank();
+        img.set(5, 7, true);
+        img.set(27, 7, true);
+        let row = img.row(7);
+        assert!(row[5] && row[27]);
+        assert_eq!(row.iter().filter(|&&b| b).count(), 2);
+    }
+
+    #[test]
+    fn debug_render_shows_shape() {
+        let mut img = BoolImage::blank();
+        img.set(0, 0, true);
+        let s = format!("{img:?}");
+        assert!(s.contains('#'));
+    }
+}

@@ -1,0 +1,174 @@
+//! IDX file loader (the MNIST/FMNIST/KMNIST distribution format).
+//!
+//! When the environment has the real datasets on disk (set `DATA_DIR`),
+//! every experiment automatically runs on them instead of the synthetic
+//! substitutes; this environment has no network, so the loader is exercised
+//! in tests via in-memory round-trips.
+//!
+//! Format: big-endian magic `0x00 0x00 <dtype> <ndim>`, then `ndim` u32
+//! dimensions, then row-major payload. We support dtype 0x08 (u8).
+
+use super::synth::Sample;
+use std::io::Read;
+use std::path::Path;
+
+/// Error type for IDX parsing.
+#[derive(Debug, thiserror::Error)]
+pub enum IdxError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic {0:#010x}")]
+    BadMagic(u32),
+    #[error("unsupported dtype {0:#04x} (only u8 supported)")]
+    UnsupportedDtype(u8),
+    #[error("dimension mismatch: {0}")]
+    Shape(String),
+    #[error("truncated payload: expected {expected} bytes, got {got}")]
+    Truncated { expected: usize, got: usize },
+}
+
+/// A parsed IDX tensor of u8.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IdxU8 {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl IdxU8 {
+    /// Parse from a reader.
+    pub fn read(mut r: impl Read) -> Result<IdxU8, IdxError> {
+        let mut hdr = [0u8; 4];
+        r.read_exact(&mut hdr)?;
+        if hdr[0] != 0 || hdr[1] != 0 {
+            return Err(IdxError::BadMagic(u32::from_be_bytes(hdr)));
+        }
+        if hdr[2] != 0x08 {
+            return Err(IdxError::UnsupportedDtype(hdr[2]));
+        }
+        let ndim = hdr[3] as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut d = [0u8; 4];
+            r.read_exact(&mut d)?;
+            dims.push(u32::from_be_bytes(d) as usize);
+        }
+        let expected: usize = dims.iter().product();
+        let mut data = Vec::with_capacity(expected);
+        r.read_to_end(&mut data)?;
+        if data.len() != expected {
+            return Err(IdxError::Truncated {
+                expected,
+                got: data.len(),
+            });
+        }
+        Ok(IdxU8 { dims, data })
+    }
+
+    /// Serialize to IDX bytes.
+    pub fn write(&self) -> Vec<u8> {
+        let mut out = vec![0u8, 0u8, 0x08, self.dims.len() as u8];
+        for &d in &self.dims {
+            out.extend_from_slice(&(d as u32).to_be_bytes());
+        }
+        out.extend_from_slice(&self.data);
+        out
+    }
+}
+
+/// Load an images file + labels file pair into samples.
+pub fn load_pair(images: &IdxU8, labels: &IdxU8) -> Result<Vec<Sample>, IdxError> {
+    if images.dims.len() != 3 {
+        return Err(IdxError::Shape(format!(
+            "images must be 3-D, got {:?}",
+            images.dims
+        )));
+    }
+    let (n, h, w) = (images.dims[0], images.dims[1], images.dims[2]);
+    if h != 28 || w != 28 {
+        return Err(IdxError::Shape(format!("expected 28×28 images, got {h}×{w}")));
+    }
+    if labels.dims != vec![n] {
+        return Err(IdxError::Shape(format!(
+            "labels dims {:?} do not match {n} images",
+            labels.dims
+        )));
+    }
+    Ok((0..n)
+        .map(|i| Sample {
+            pixels: images.data[i * 784..(i + 1) * 784].to_vec(),
+            label: labels.data[i],
+        })
+        .collect())
+}
+
+/// Load `<dir>/<stem>-images-idx3-ubyte` + `<dir>/<stem>-labels-idx1-ubyte`.
+pub fn load_files(dir: &Path, stem: &str) -> Result<Vec<Sample>, IdxError> {
+    let img = IdxU8::read(std::fs::File::open(dir.join(format!("{stem}-images-idx3-ubyte")))?)?;
+    let lab = IdxU8::read(std::fs::File::open(dir.join(format!("{stem}-labels-idx1-ubyte")))?)?;
+    load_pair(&img, &lab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_pair(n: usize) -> (IdxU8, IdxU8) {
+        let images = IdxU8 {
+            dims: vec![n, 28, 28],
+            data: (0..n * 784).map(|i| (i % 251) as u8).collect(),
+        };
+        let labels = IdxU8 {
+            dims: vec![n],
+            data: (0..n).map(|i| (i % 10) as u8).collect(),
+        };
+        (images, labels)
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let (img, _) = fake_pair(3);
+        let bytes = img.write();
+        let back = IdxU8::read(&bytes[..]).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn load_pair_builds_samples() {
+        let (img, lab) = fake_pair(5);
+        let samples = load_pair(&img, &lab).unwrap();
+        assert_eq!(samples.len(), 5);
+        assert_eq!(samples[3].label, 3);
+        assert_eq!(samples[2].pixels, img.data[2 * 784..3 * 784].to_vec());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = IdxU8::read(&[1u8, 0, 8, 1][..]).unwrap_err();
+        assert!(matches!(err, IdxError::BadMagic(_)));
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let err = IdxU8::read(&[0u8, 0, 0x0D, 1, 0, 0, 0, 0][..]).unwrap_err();
+        assert!(matches!(err, IdxError::UnsupportedDtype(0x0D)));
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let (img, _) = fake_pair(2);
+        let mut bytes = img.write();
+        bytes.truncate(bytes.len() - 10);
+        let err = IdxU8::read(&bytes[..]).unwrap_err();
+        assert!(matches!(err, IdxError::Truncated { .. }));
+    }
+
+    #[test]
+    fn rejects_mismatched_labels() {
+        let (img, _) = fake_pair(4);
+        let labels = IdxU8 {
+            dims: vec![3],
+            data: vec![0, 1, 2],
+        };
+        assert!(matches!(load_pair(&img, &labels), Err(IdxError::Shape(_))));
+    }
+}

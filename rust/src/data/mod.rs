@@ -1,0 +1,85 @@
+//! Datasets and preprocessing: booleanization (§III-D), thermometer
+//! encoding (Table I), patch generation (§III-C / §IV-C), synthetic
+//! dataset substitutes and the IDX loader for real data.
+
+pub mod boolean;
+pub mod idx;
+pub mod patches;
+pub mod render;
+pub mod synth;
+pub mod thermo;
+
+pub use boolean::{BoolImage, Booleanizer, IMG_PIXELS, IMG_SIDE};
+pub use patches::{NUM_FEATURES, NUM_LITERALS, NUM_PATCHES, POSITIONS, POS_BITS, WINDOW};
+pub use synth::{Dataset, Sample, SynthFamily, NUM_CLASSES};
+
+use std::path::PathBuf;
+
+/// Booleanize a whole split.
+pub fn booleanize_split(samples: &[Sample], b: Booleanizer) -> Vec<(BoolImage, u8)> {
+    samples
+        .iter()
+        .map(|s| (b.apply(&s.pixels), s.label))
+        .collect()
+}
+
+/// Resolve a dataset: real IDX files from `DATA_DIR` if present (stems
+/// `train`/`t10k` under `<DATA_DIR>/<name>/`), else the synthetic family.
+///
+/// `name` is one of `mnist`, `fmnist`, `kmnist`.
+pub fn load_dataset(name: &str, n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let family = match name {
+        "mnist" => SynthFamily::Digits,
+        "fmnist" => SynthFamily::Fashion,
+        "kmnist" => SynthFamily::Kana,
+        other => panic!("unknown dataset '{other}' (expected mnist|fmnist|kmnist)"),
+    };
+    if let Ok(dir) = std::env::var("DATA_DIR") {
+        let base = PathBuf::from(dir).join(name);
+        if let (Ok(train), Ok(test)) = (
+            idx::load_files(&base, "train"),
+            idx::load_files(&base, "t10k"),
+        ) {
+            let take_train = if n_train == 0 { train.len() } else { n_train.min(train.len()) };
+            let take_test = if n_test == 0 { test.len() } else { n_test.min(test.len()) };
+            return Dataset {
+                name: name.to_string(),
+                train: train.into_iter().take(take_train).collect(),
+                test: test.into_iter().take(take_test).collect(),
+                booleanizer: family.booleanizer(),
+            };
+        }
+    }
+    family.generate(n_train, n_test, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn booleanize_split_keeps_labels() {
+        let d = SynthFamily::Digits.generate(10, 0, 1);
+        let split = booleanize_split(&d.train, d.booleanizer);
+        assert_eq!(split.len(), 10);
+        for (s, (_, label)) in d.train.iter().zip(&split) {
+            assert_eq!(s.label, *label);
+        }
+    }
+
+    #[test]
+    fn load_dataset_falls_back_to_synth() {
+        let d = load_dataset("mnist", 12, 6, 42);
+        assert_eq!(d.train.len(), 12);
+        assert_eq!(d.test.len(), 6);
+        assert_eq!(d.booleanizer, Booleanizer::FixedMnist);
+        let d = load_dataset("kmnist", 4, 2, 42);
+        assert_eq!(d.booleanizer, Booleanizer::AdaptiveGaussian);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dataset")]
+    fn load_dataset_rejects_unknown() {
+        load_dataset("cifar99", 1, 1, 0);
+    }
+}

@@ -1,0 +1,280 @@
+//! Patch generation: sliding 10×10 window over a 28×28 booleanized image
+//! with stride 1 (paper §III-C, §IV-C) and the canonical literal layout of
+//! DESIGN.md §4.
+//!
+//! Per patch (x,y), features (o = 136 bits):
+//!   [0..100)   window content, row-major: bit 10·wr+wc = img[y+wr][x+wc]
+//!   [100..118) y-position thermometer (18 bits, LSB-first, Table I)
+//!   [118..136) x-position thermometer
+//! Literals (2o = 272): features followed by their negations.
+
+use super::boolean::{BoolImage, IMG_SIDE};
+use super::thermo;
+use crate::util::BitVec;
+
+/// Convolution window side (W_X = W_Y = 10).
+pub const WINDOW: usize = 10;
+/// Window positions per axis: 1 + (28 − 10)/1 = 19.
+pub const POSITIONS: usize = IMG_SIDE - WINDOW + 1;
+/// Patches per image: 19 × 19 = 361.
+pub const NUM_PATCHES: usize = POSITIONS * POSITIONS;
+/// Thermometer bits per axis: 19 positions → 18 bits.
+pub const POS_BITS: usize = POSITIONS - 1;
+/// Features per patch: 100 window bits + 18 + 18 position bits (Eq. 5).
+pub const NUM_FEATURES: usize = WINDOW * WINDOW + 2 * POS_BITS;
+/// Literals per patch (features + negations).
+pub const NUM_LITERALS: usize = 2 * NUM_FEATURES;
+
+/// Patch index for window position (x, y); x slides fastest (Fig. 3).
+#[inline]
+pub fn patch_index(x: usize, y: usize) -> usize {
+    debug_assert!(x < POSITIONS && y < POSITIONS);
+    y * POSITIONS + x
+}
+
+/// Window position (x, y) for a patch index.
+#[inline]
+pub fn patch_pos(p: usize) -> (usize, usize) {
+    debug_assert!(p < NUM_PATCHES);
+    (p % POSITIONS, p / POSITIONS)
+}
+
+/// Compute the feature bits (o = 136) of patch (x, y).
+pub fn patch_features(img: &BoolImage, x: usize, y: usize) -> BitVec {
+    assert!(x < POSITIONS && y < POSITIONS);
+    let mut f = BitVec::zeros(NUM_FEATURES);
+    for wr in 0..WINDOW {
+        for wc in 0..WINDOW {
+            if img.get(x + wc, y + wr) {
+                f.set(wr * WINDOW + wc, true);
+            }
+        }
+    }
+    for (t, b) in thermo::encode(y, POS_BITS).into_iter().enumerate() {
+        if b {
+            f.set(WINDOW * WINDOW + t, true);
+        }
+    }
+    for (t, b) in thermo::encode(x, POS_BITS).into_iter().enumerate() {
+        if b {
+            f.set(WINDOW * WINDOW + POS_BITS + t, true);
+        }
+    }
+    f
+}
+
+/// Expand features to literals: `l[k] = f[k]`, `l[o+k] = ¬f[k]`.
+pub fn features_to_literals(f: &BitVec) -> BitVec {
+    assert_eq!(f.len(), NUM_FEATURES);
+    let mut l = BitVec::zeros(NUM_LITERALS);
+    for k in 0..NUM_FEATURES {
+        let v = f.get(k);
+        l.set(k, v);
+        l.set(NUM_FEATURES + k, !v);
+    }
+    l
+}
+
+/// Literal bits (2o = 272) of patch (x, y).
+pub fn patch_literals(img: &BoolImage, x: usize, y: usize) -> BitVec {
+    features_to_literals(&patch_features(img, x, y))
+}
+
+/// Image rows packed as u32 bitmasks (bit x = pixel (x, y)) — the input
+/// format of the fast literal builder.
+pub fn pack_rows(img: &BoolImage) -> [u32; IMG_SIDE] {
+    let mut rows = [0u32; IMG_SIDE];
+    for (y, row) in rows.iter_mut().enumerate() {
+        let mut bits = 0u32;
+        for x in 0..IMG_SIDE {
+            if img.get(x, y) {
+                bits |= 1 << x;
+            }
+        }
+        *row = bits;
+    }
+    rows
+}
+
+/// Write `nbits` low bits of `value` into the bit vector's words at bit
+/// `offset` (words must be pre-zeroed).
+#[inline]
+fn write_bits(words: &mut [u64], offset: usize, value: u64, nbits: usize) {
+    debug_assert!(nbits <= 64);
+    let (wi, off) = (offset / 64, offset % 64);
+    words[wi] |= value << off;
+    if off + nbits > 64 {
+        words[wi + 1] |= value >> (64 - off);
+    }
+}
+
+/// Fast literal construction from packed rows: identical output to
+/// [`patch_literals`] but built with word-level shifts instead of per-bit
+/// sets (the ASIC simulator's hot path — §Perf).
+pub fn patch_literals_from_rows(rows: &[u32; IMG_SIDE], x: usize, y: usize) -> BitVec {
+    debug_assert!(x < POSITIONS && y < POSITIONS);
+    let mut lits = BitVec::zeros(NUM_LITERALS);
+    let words = lits.words_mut();
+    const WMASK: u64 = (1 << WINDOW) - 1;
+    // Features: window content rows (10 bits each), then thermometers.
+    let mut content = [0u64; 3]; // 136 feature bits fit in 3 words
+    for wr in 0..WINDOW {
+        let bits = ((rows[y + wr] >> x) as u64) & WMASK;
+        write_bits(&mut content, wr * WINDOW, bits, WINDOW);
+    }
+    // Thermometers: y ones in the low bits (LSB-first code), likewise x.
+    let y_therm = (1u64 << y) - 1;
+    let x_therm = (1u64 << x) - 1;
+    write_bits(&mut content, WINDOW * WINDOW, y_therm, POS_BITS);
+    write_bits(&mut content, WINDOW * WINDOW + POS_BITS, x_therm, POS_BITS);
+    // Literals: features at [0..136), negations at [136..272).
+    words[..3].copy_from_slice(&content);
+    // Mask feature words to 136 bits (word 2 holds bits 128..136).
+    words[2] &= (1 << (NUM_FEATURES - 128)) - 1;
+    // Negations word-wise: insert ¬f (3 words, masked) at bit offset 136.
+    let neg = [
+        !content[0],
+        !content[1],
+        !content[2] & ((1 << (NUM_FEATURES - 128)) - 1),
+    ];
+    write_bits(words, NUM_FEATURES, neg[0], 64);
+    write_bits(words, NUM_FEATURES + 64, neg[1], 64);
+    write_bits(words, NUM_FEATURES + 128, neg[2], NUM_FEATURES - 128);
+    lits
+}
+
+/// All 361 patches' literals in patch-index order.
+/// This is the "patch generation" output the clause pool consumes.
+pub fn all_patch_literals(img: &BoolImage) -> Vec<BitVec> {
+    let mut out = Vec::with_capacity(NUM_PATCHES);
+    for y in 0..POSITIONS {
+        for x in 0..POSITIONS {
+            out.push(patch_literals(img, x, y));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::{check, PropResult};
+
+    #[test]
+    fn constants_match_paper() {
+        assert_eq!(POSITIONS, 19);
+        assert_eq!(NUM_PATCHES, 361);
+        assert_eq!(POS_BITS, 18);
+        assert_eq!(NUM_FEATURES, 136);
+        assert_eq!(NUM_LITERALS, 272);
+    }
+
+    #[test]
+    fn patch_index_roundtrip() {
+        for p in 0..NUM_PATCHES {
+            let (x, y) = patch_pos(p);
+            assert_eq!(patch_index(x, y), p);
+        }
+        // x slides fastest.
+        assert_eq!(patch_index(1, 0), 1);
+        assert_eq!(patch_index(0, 1), POSITIONS);
+    }
+
+    #[test]
+    fn window_content_maps_row_major() {
+        let mut img = BoolImage::blank();
+        img.set(3, 5, true); // patch (3,5) window bit (0,0)
+        let f = patch_features(&img, 3, 5);
+        assert!(f.get(0));
+        // Same pixel seen from patch (2,5): window col 1 → bit 1.
+        let f2 = patch_features(&img, 2, 5);
+        assert!(f2.get(1));
+        // From patch (3,4): window row 1 → bit 10.
+        let f3 = patch_features(&img, 3, 4);
+        assert!(f3.get(10));
+    }
+
+    #[test]
+    fn position_thermometers_match_table1() {
+        let img = BoolImage::blank();
+        let f = patch_features(&img, 18, 0);
+        // y = 0 → all 18 y-bits zero; x = 18 → all 18 x-bits one.
+        for t in 0..POS_BITS {
+            assert!(!f.get(100 + t), "y therm bit {t}");
+            assert!(f.get(100 + POS_BITS + t), "x therm bit {t}");
+        }
+        let f = patch_features(&img, 0, 1);
+        assert!(f.get(100)); // y=1 → lowest y bit set
+        assert!(!f.get(101));
+        assert!(!f.get(100 + POS_BITS)); // x=0 → no x bit
+    }
+
+    #[test]
+    fn literals_are_features_plus_negations() {
+        let mut img = BoolImage::blank();
+        img.set(0, 0, true);
+        let f = patch_features(&img, 0, 0);
+        let l = features_to_literals(&f);
+        assert_eq!(l.count_ones(), NUM_FEATURES, "exactly half of literals set");
+        for k in 0..NUM_FEATURES {
+            assert_eq!(l.get(k), f.get(k));
+            assert_eq!(l.get(NUM_FEATURES + k), !f.get(k));
+        }
+    }
+
+    #[test]
+    fn all_patches_order_and_count() {
+        let img = BoolImage::blank();
+        let patches = all_patch_literals(&img);
+        assert_eq!(patches.len(), NUM_PATCHES);
+        // Patch 20 = (x=1, y=1): both thermometers have exactly 1 bit.
+        let p = &patches[patch_index(1, 1)];
+        let y_ones = (0..POS_BITS).filter(|&t| p.get(100 + t)).count();
+        let x_ones = (0..POS_BITS).filter(|&t| p.get(100 + POS_BITS + t)).count();
+        assert_eq!((y_ones, x_ones), (1, 1));
+    }
+
+    #[test]
+    fn fast_builder_matches_canonical() {
+        check("patch_literals_from_rows equals patch_literals", 20, |g| -> PropResult {
+            let density = g.f64_unit();
+            let bits = g.bits(28 * 28, density);
+            let img = BoolImage::from_bools(&bits);
+            let rows = pack_rows(&img);
+            let x = g.usize_in(0, POSITIONS - 1);
+            let y = g.usize_in(0, POSITIONS - 1);
+            crate::prop_assert_eq!(
+                patch_literals_from_rows(&rows, x, y),
+                patch_literals(&img, x, y)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_literal_invariants() {
+        check("patch literal invariants", 25, |g| -> PropResult {
+            let density = g.f64_unit();
+            let bits = g.bits(28 * 28, density);
+            let img = BoolImage::from_bools(&bits);
+            let x = g.usize_in(0, POSITIONS - 1);
+            let y = g.usize_in(0, POSITIONS - 1);
+            let l = patch_literals(&img, x, y);
+            // Exactly one of (l[k], l[o+k]) is set for every k.
+            crate::prop_assert_eq!(l.count_ones(), NUM_FEATURES);
+            for k in 0..NUM_FEATURES {
+                crate::prop_assert!(
+                    l.get(k) != l.get(NUM_FEATURES + k),
+                    "literal {k} and its negation agree"
+                );
+            }
+            // Window bits match the image.
+            for wr in 0..WINDOW {
+                for wc in 0..WINDOW {
+                    crate::prop_assert_eq!(l.get(wr * WINDOW + wc), img.get(x + wc, y + wr));
+                }
+            }
+            Ok(())
+        });
+    }
+}

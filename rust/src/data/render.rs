@@ -1,0 +1,254 @@
+//! Tiny grayscale raster renderer for the synthetic dataset generators.
+//!
+//! Draws soft-edged strokes (polylines, arcs) and filled polygons on a
+//! 28×28 float canvas, applies affine jitter and noise, and quantizes to
+//! u8 — enough to synthesize MNIST-/FMNIST-/KMNIST-like samples without
+//! any external data (see DESIGN.md §5 Substitutions).
+
+use super::boolean::{IMG_PIXELS, IMG_SIDE};
+use crate::util::Xoshiro256ss;
+
+/// Float canvas in [0,1], row-major, 28×28.
+#[derive(Clone)]
+pub struct Canvas {
+    px: Vec<f32>,
+}
+
+impl Default for Canvas {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Canvas {
+    pub fn new() -> Self {
+        Self {
+            px: vec![0.0; IMG_PIXELS],
+        }
+    }
+
+    #[inline]
+    fn put_max(&mut self, x: usize, y: usize, v: f32) {
+        let p = &mut self.px[y * IMG_SIDE + x];
+        if v > *p {
+            *p = v;
+        }
+    }
+
+    /// Soft-edged line segment from `a` to `b` with the given stroke
+    /// `width` (in pixels). Coverage falls off linearly over half a pixel
+    /// at the stroke boundary.
+    pub fn line(&mut self, a: (f32, f32), b: (f32, f32), width: f32) {
+        let r = width * 0.5;
+        let x_min = (a.0.min(b.0) - r - 1.0).floor().max(0.0) as usize;
+        let x_max = (a.0.max(b.0) + r + 1.0).ceil().min(IMG_SIDE as f32 - 1.0) as usize;
+        let y_min = (a.1.min(b.1) - r - 1.0).floor().max(0.0) as usize;
+        let y_max = (a.1.max(b.1) + r + 1.0).ceil().min(IMG_SIDE as f32 - 1.0) as usize;
+        for y in y_min..=y_max {
+            for x in x_min..=x_max {
+                let d = dist_to_segment((x as f32, y as f32), a, b);
+                let cov = (r + 0.5 - d).clamp(0.0, 1.0);
+                if cov > 0.0 {
+                    self.put_max(x, y, cov);
+                }
+            }
+        }
+    }
+
+    /// Polyline through `pts`.
+    pub fn polyline(&mut self, pts: &[(f32, f32)], width: f32) {
+        for w in pts.windows(2) {
+            self.line(w[0], w[1], width);
+        }
+    }
+
+    /// Elliptical arc centred at `c`, radii `(rx, ry)`, from `t0` to `t1`
+    /// radians, sampled densely and drawn as a polyline.
+    pub fn arc(&mut self, c: (f32, f32), rx: f32, ry: f32, t0: f32, t1: f32, width: f32) {
+        let steps = (((t1 - t0).abs() * rx.max(ry)).ceil() as usize).clamp(8, 64);
+        let pts: Vec<(f32, f32)> = (0..=steps)
+            .map(|i| {
+                let t = t0 + (t1 - t0) * i as f32 / steps as f32;
+                (c.0 + rx * t.cos(), c.1 + ry * t.sin())
+            })
+            .collect();
+        self.polyline(&pts, width);
+    }
+
+    /// Filled polygon (even-odd scanline fill), intensity `v`.
+    pub fn fill_polygon(&mut self, pts: &[(f32, f32)], v: f32) {
+        if pts.len() < 3 {
+            return;
+        }
+        for y in 0..IMG_SIDE {
+            let yc = y as f32 + 0.5;
+            let mut xs: Vec<f32> = Vec::new();
+            for i in 0..pts.len() {
+                let (x1, y1) = pts[i];
+                let (x2, y2) = pts[(i + 1) % pts.len()];
+                if (y1 <= yc && y2 > yc) || (y2 <= yc && y1 > yc) {
+                    xs.push(x1 + (yc - y1) / (y2 - y1) * (x2 - x1));
+                }
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for pair in xs.chunks(2) {
+                if let [x1, x2] = pair {
+                    let lo = x1.ceil().max(0.0) as usize;
+                    let hi = (x2.floor().min(IMG_SIDE as f32 - 1.0)) as usize;
+                    for x in lo..=hi.min(IMG_SIDE - 1) {
+                        self.put_max(x, y, v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Apply an affine warp about the canvas centre:
+    /// rotation (radians), scale, shear and translation, with bilinear
+    /// sampling. Returns a new canvas.
+    pub fn affine(&self, rot: f32, scale: f32, shear: f32, tx: f32, ty: f32) -> Canvas {
+        let c = IMG_SIDE as f32 * 0.5;
+        let (sin, cos) = rot.sin_cos();
+        // Inverse mapping: for each destination pixel find the source.
+        let inv_scale = 1.0 / scale.max(0.05);
+        let mut out = Canvas::new();
+        for y in 0..IMG_SIDE {
+            for x in 0..IMG_SIDE {
+                let dx = x as f32 - c - tx;
+                let dy = y as f32 - c - ty;
+                // Inverse of rotate∘shear∘scale (shear in x by `shear`).
+                let rx = (cos * dx + sin * dy) * inv_scale;
+                let ry = (-sin * dx + cos * dy) * inv_scale;
+                let sx = rx - shear * ry;
+                let sy = ry;
+                out.px[y * IMG_SIDE + x] = self.sample(sx + c, sy + c);
+            }
+        }
+        out
+    }
+
+    fn sample(&self, x: f32, y: f32) -> f32 {
+        if !(0.0..IMG_SIDE as f32 - 1.0).contains(&x) || !(0.0..IMG_SIDE as f32 - 1.0).contains(&y)
+        {
+            // Outside: clamp-to-zero border.
+            if x < -1.0 || y < -1.0 || x > IMG_SIDE as f32 || y > IMG_SIDE as f32 {
+                return 0.0;
+            }
+        }
+        let x0 = x.floor();
+        let y0 = y.floor();
+        let fx = x - x0;
+        let fy = y - y0;
+        let get = |xi: i32, yi: i32| -> f32 {
+            if xi < 0 || yi < 0 || xi >= IMG_SIDE as i32 || yi >= IMG_SIDE as i32 {
+                0.0
+            } else {
+                self.px[yi as usize * IMG_SIDE + xi as usize]
+            }
+        };
+        let x0i = x0 as i32;
+        let y0i = y0 as i32;
+        get(x0i, y0i) * (1.0 - fx) * (1.0 - fy)
+            + get(x0i + 1, y0i) * fx * (1.0 - fy)
+            + get(x0i, y0i + 1) * (1.0 - fx) * fy
+            + get(x0i + 1, y0i + 1) * fx * fy
+    }
+
+    /// Add pixel noise and quantize to u8 with the given peak intensity.
+    pub fn to_u8(&self, rng: &mut Xoshiro256ss, noise: f32, peak: f32) -> Vec<u8> {
+        self.px
+            .iter()
+            .map(|&v| {
+                let n = (rng.f32() - 0.5) * 2.0 * noise;
+                ((v * peak + n).clamp(0.0, 1.0) * 255.0) as u8
+            })
+            .collect()
+    }
+
+    pub fn pixels(&self) -> &[f32] {
+        &self.px
+    }
+}
+
+fn dist_to_segment(p: (f32, f32), a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (px, py) = p;
+    let (ax, ay) = a;
+    let (bx, by) = b;
+    let abx = bx - ax;
+    let aby = by - ay;
+    let len2 = abx * abx + aby * aby;
+    let t = if len2 <= 1e-12 {
+        0.0
+    } else {
+        (((px - ax) * abx + (py - ay) * aby) / len2).clamp(0.0, 1.0)
+    };
+    let cx = ax + t * abx;
+    let cy = ay + t * aby;
+    ((px - cx) * (px - cx) + (py - cy) * (py - cy)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_covers_expected_pixels() {
+        let mut c = Canvas::new();
+        c.line((4.0, 14.0), (24.0, 14.0), 2.0);
+        // On-stroke pixel saturated, off-stroke empty.
+        assert!(c.px[14 * IMG_SIDE + 14] > 0.9);
+        assert!(c.px[4 * IMG_SIDE + 14] == 0.0);
+    }
+
+    #[test]
+    fn arc_draws_circle() {
+        let mut c = Canvas::new();
+        c.arc((14.0, 14.0), 8.0, 8.0, 0.0, std::f32::consts::TAU, 2.0);
+        // Point on the circle at angle 0: (22, 14).
+        assert!(c.px[14 * IMG_SIDE + 22] > 0.5);
+        // Centre stays empty.
+        assert!(c.px[14 * IMG_SIDE + 14] == 0.0);
+    }
+
+    #[test]
+    fn polygon_fill_interior() {
+        let mut c = Canvas::new();
+        c.fill_polygon(
+            &[(6.0, 6.0), (22.0, 6.0), (22.0, 22.0), (6.0, 22.0)],
+            1.0,
+        );
+        assert!(c.px[14 * IMG_SIDE + 14] > 0.9);
+        assert!(c.px[2 * IMG_SIDE + 2] == 0.0);
+    }
+
+    #[test]
+    fn identity_affine_preserves_mass() {
+        let mut c = Canvas::new();
+        c.line((8.0, 8.0), (20.0, 20.0), 3.0);
+        let before: f32 = c.px.iter().sum();
+        let warped = c.affine(0.0, 1.0, 0.0, 0.0, 0.0);
+        let after: f32 = warped.px.iter().sum();
+        assert!((before - after).abs() / before < 0.05, "{before} vs {after}");
+    }
+
+    #[test]
+    fn translation_moves_content() {
+        let mut c = Canvas::new();
+        c.line((10.0, 14.0), (18.0, 14.0), 2.0);
+        let shifted = c.affine(0.0, 1.0, 0.0, 0.0, 6.0);
+        // Content moved down by ~6 px.
+        assert!(shifted.px[20 * IMG_SIDE + 14] > 0.5);
+        assert!(shifted.px[14 * IMG_SIDE + 14] < 0.2);
+    }
+
+    #[test]
+    fn to_u8_quantizes_and_clamps() {
+        let mut c = Canvas::new();
+        c.line((2.0, 2.0), (25.0, 2.0), 2.0);
+        let mut rng = Xoshiro256ss::new(1);
+        let px = c.to_u8(&mut rng, 0.0, 1.0);
+        assert_eq!(px.len(), IMG_PIXELS);
+        assert!(px.iter().any(|&p| p > 200));
+        assert!(px.iter().any(|&p| p == 0));
+    }
+}

@@ -1,0 +1,600 @@
+//! Procedural synthetic datasets standing in for MNIST, FMNIST and KMNIST
+//! (no network access in this environment — DESIGN.md §5 Substitutions).
+//!
+//! Each family renders 10 classes of 28×28 grayscale images with per-sample
+//! affine jitter, stroke-width variation and pixel noise:
+//!
+//! - [`SynthFamily::Digits`] — vector-stroke digits 0–9 (MNIST-like;
+//!   booleanized with the fixed-75 threshold).
+//! - [`SynthFamily::Fashion`] — 10 garment/footwear silhouettes rendered as
+//!   filled polygons with texture noise (FMNIST-like; adaptive Gaussian).
+//! - [`SynthFamily::Kana`] — 10 multi-stroke cursive glyph prototypes with
+//!   large deformation, emulating KMNIST's high intra-class variation
+//!   (adaptive Gaussian).
+//!
+//! Difficulty ordering (Digits easiest, Kana/Fashion harder) mirrors the
+//! paper's accuracy ordering MNIST > FMNIST > KMNIST.
+
+use super::boolean::Booleanizer;
+use super::render::Canvas;
+use crate::util::Xoshiro256ss;
+
+/// Number of classes in every family (the accelerator classifies 10).
+pub const NUM_CLASSES: usize = 10;
+
+/// A labelled grayscale image sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// 784 grayscale pixels, row-major.
+    pub pixels: Vec<u8>,
+    /// Class label 0..10.
+    pub label: u8,
+}
+
+/// A train/test split of samples.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Vec<Sample>,
+    pub test: Vec<Sample>,
+    pub booleanizer: Booleanizer,
+}
+
+/// The three synthetic families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SynthFamily {
+    Digits,
+    Fashion,
+    Kana,
+}
+
+impl SynthFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            SynthFamily::Digits => "synth-mnist",
+            SynthFamily::Fashion => "synth-fmnist",
+            SynthFamily::Kana => "synth-kmnist",
+        }
+    }
+
+    pub fn booleanizer(self) -> Booleanizer {
+        match self {
+            SynthFamily::Digits => Booleanizer::FixedMnist,
+            SynthFamily::Fashion | SynthFamily::Kana => Booleanizer::AdaptiveGaussian,
+        }
+    }
+
+    /// Generate a dataset with `n_train`/`n_test` samples, deterministic in
+    /// `seed`. Class labels are balanced round-robin.
+    pub fn generate(self, n_train: usize, n_test: usize, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256ss::new(seed ^ (self as u64) << 32);
+        let gen_split = |n: usize, rng: &mut Xoshiro256ss| -> Vec<Sample> {
+            (0..n)
+                .map(|i| {
+                    let label = (i % NUM_CLASSES) as u8;
+                    let pixels = self.render(label, rng);
+                    Sample { pixels, label }
+                })
+                .collect()
+        };
+        let train = gen_split(n_train, &mut rng);
+        let test = gen_split(n_test, &mut rng);
+        Dataset {
+            name: self.name().to_string(),
+            train,
+            test,
+            booleanizer: self.booleanizer(),
+        }
+    }
+
+    /// Render one sample of `label` with per-sample jitter.
+    pub fn render(self, label: u8, rng: &mut Xoshiro256ss) -> Vec<u8> {
+        assert!((label as usize) < NUM_CLASSES);
+        let (canvas, jitter) = match self {
+            SynthFamily::Digits => (render_digit(label, rng), Jitter::digits()),
+            SynthFamily::Fashion => (render_fashion(label, rng), Jitter::fashion()),
+            SynthFamily::Kana => (render_kana(label, rng), Jitter::kana()),
+        };
+        let rot = (rng.f32() - 0.5) * 2.0 * jitter.rot;
+        let scale = 1.0 + (rng.f32() - 0.5) * 2.0 * jitter.scale;
+        let shear = (rng.f32() - 0.5) * 2.0 * jitter.shear;
+        let tx = (rng.f32() - 0.5) * 2.0 * jitter.translate;
+        let ty = (rng.f32() - 0.5) * 2.0 * jitter.translate;
+        let warped = canvas.affine(rot, scale, shear, tx, ty);
+        let peak = 0.85 + rng.f32() * 0.15;
+        warped.to_u8(rng, jitter.noise, peak)
+    }
+}
+
+struct Jitter {
+    rot: f32,
+    scale: f32,
+    shear: f32,
+    translate: f32,
+    noise: f32,
+}
+
+impl Jitter {
+    fn digits() -> Self {
+        Jitter {
+            rot: 0.12,
+            scale: 0.08,
+            shear: 0.10,
+            translate: 1.5,
+            noise: 0.04,
+        }
+    }
+    fn fashion() -> Self {
+        Jitter {
+            rot: 0.06,
+            scale: 0.10,
+            shear: 0.06,
+            translate: 1.0,
+            noise: 0.10,
+        }
+    }
+    fn kana() -> Self {
+        Jitter {
+            rot: 0.22,
+            scale: 0.14,
+            shear: 0.18,
+            translate: 2.0,
+            noise: 0.08,
+        }
+    }
+}
+
+/// Random stroke width for hand-drawn look.
+fn stroke(rng: &mut Xoshiro256ss, base: f32) -> f32 {
+    base + rng.f32() * 1.2
+}
+
+/// Per-point positional wobble.
+fn wob(rng: &mut Xoshiro256ss, amt: f32) -> f32 {
+    (rng.f32() - 0.5) * 2.0 * amt
+}
+
+use std::f32::consts::{PI, TAU};
+
+/// Vector-stroke digits, drawn in a 28×28 frame roughly matching MNIST's
+/// centred 20×20 glyph box.
+fn render_digit(label: u8, rng: &mut Xoshiro256ss) -> Canvas {
+    let mut c = Canvas::new();
+    let w = stroke(rng, 1.8);
+    let j = |rng: &mut Xoshiro256ss| wob(rng, 0.8);
+    match label {
+        0 => {
+            c.arc(
+                (14.0 + j(rng), 14.0 + j(rng)),
+                5.5 + wob(rng, 0.8),
+                8.0 + wob(rng, 0.8),
+                0.0,
+                TAU,
+                w,
+            );
+        }
+        1 => {
+            let x = 14.0 + j(rng);
+            c.polyline(
+                &[
+                    (x - 3.0, 9.0 + j(rng)),
+                    (x + wob(rng, 0.5), 6.0 + j(rng)),
+                    (x + wob(rng, 0.5), 22.0 + j(rng)),
+                ],
+                w,
+            );
+        }
+        2 => {
+            c.arc(
+                (14.0 + j(rng), 10.5),
+                5.0 + wob(rng, 0.5),
+                4.5,
+                -PI,
+                0.35 * PI,
+                w,
+            );
+            c.line((17.5 + j(rng), 13.0), (9.0 + j(rng), 22.0), w);
+            c.line((9.0 + j(rng), 22.0), (20.0 + j(rng), 22.0), w);
+        }
+        3 => {
+            c.arc((13.0 + j(rng), 10.0), 4.5, 4.0, -PI * 0.9, PI * 0.5, w);
+            c.arc((13.0 + j(rng), 18.0), 5.0, 4.5, -PI * 0.5, PI * 0.9, w);
+        }
+        4 => {
+            let x = 16.0 + j(rng);
+            c.line((x, 6.0 + j(rng)), (x, 22.0 + j(rng)), w);
+            c.line((x, 6.0 + j(rng)), (8.5 + j(rng), 16.0), w);
+            c.line((8.5 + j(rng), 16.0), (20.0 + j(rng), 16.0), w);
+        }
+        5 => {
+            c.line((18.5 + j(rng), 6.5), (10.0 + j(rng), 6.5), w);
+            c.line((10.0 + j(rng), 6.5), (9.5 + j(rng), 13.0), w);
+            c.arc((13.5 + j(rng), 17.0), 5.0, 4.8, -PI * 0.55, PI * 0.75, w);
+        }
+        6 => {
+            c.arc((14.0 + j(rng), 17.5), 4.8, 4.5, 0.0, TAU, w);
+            c.arc((16.5 + j(rng), 10.0), 7.5, 9.0, PI * 0.6, PI * 1.05, w);
+        }
+        7 => {
+            c.line((8.5 + j(rng), 7.0 + j(rng)), (19.5 + j(rng), 7.0), w);
+            c.line((19.5 + j(rng), 7.0), (12.0 + j(rng), 22.0 + j(rng)), w);
+        }
+        8 => {
+            c.arc((14.0 + j(rng), 10.0), 4.0, 3.7, 0.0, TAU, w);
+            c.arc((14.0 + j(rng), 18.0), 4.8, 4.3, 0.0, TAU, w);
+        }
+        9 => {
+            c.arc((13.5 + j(rng), 10.5), 4.6, 4.3, 0.0, TAU, w);
+            c.arc((11.5 + j(rng), 17.5), 7.0, 8.5, -PI * 0.1, PI * 0.45, w);
+        }
+        _ => unreachable!(),
+    }
+    c
+}
+
+/// Garment/footwear silhouettes as filled polygons (FMNIST-like classes:
+/// tshirt, trouser, pullover, dress, coat, sandal, shirt, sneaker, bag,
+/// ankle boot).
+fn render_fashion(label: u8, rng: &mut Xoshiro256ss) -> Canvas {
+    let mut c = Canvas::new();
+    let j = |rng: &mut Xoshiro256ss| wob(rng, 0.7);
+    let v = 0.75 + rng.f32() * 0.25;
+    match label {
+        // T-shirt: torso + short sleeves.
+        0 => {
+            c.fill_polygon(
+                &[
+                    (9.0 + j(rng), 8.0),
+                    (19.0 + j(rng), 8.0),
+                    (24.0 + j(rng), 12.0),
+                    (21.5, 14.5),
+                    (19.5, 12.5),
+                    (19.5 + j(rng), 23.0),
+                    (8.5 + j(rng), 23.0),
+                    (8.5, 12.5),
+                    (6.5, 14.5),
+                    (4.0 + j(rng), 12.0),
+                ],
+                v,
+            );
+        }
+        // Trouser: two legs.
+        1 => {
+            c.fill_polygon(
+                &[
+                    (10.0 + j(rng), 5.0),
+                    (18.0 + j(rng), 5.0),
+                    (19.0, 23.0 + j(rng)),
+                    (15.5, 23.0),
+                    (14.2, 12.0),
+                    (12.8, 12.0),
+                    (12.0, 23.0),
+                    (9.0, 23.0 + j(rng)),
+                ],
+                v,
+            );
+        }
+        // Pullover: torso + long sleeves.
+        2 => {
+            c.fill_polygon(
+                &[
+                    (9.0 + j(rng), 7.5),
+                    (19.0 + j(rng), 7.5),
+                    (23.5, 10.0),
+                    (24.5 + j(rng), 21.0),
+                    (21.0, 21.5),
+                    (19.8, 12.5),
+                    (19.5, 23.5),
+                    (8.5, 23.5),
+                    (8.2, 12.5),
+                    (7.0, 21.5),
+                    (3.5 + j(rng), 21.0),
+                    (4.5, 10.0),
+                ],
+                v,
+            );
+        }
+        // Dress: fitted top flaring to a wide hem.
+        3 => {
+            c.fill_polygon(
+                &[
+                    (11.0 + j(rng), 5.0),
+                    (17.0 + j(rng), 5.0),
+                    (16.0, 11.0),
+                    (20.5 + j(rng), 24.0),
+                    (7.5 + j(rng), 24.0),
+                    (12.0, 11.0),
+                ],
+                v,
+            );
+        }
+        // Coat: long torso, long sleeves, open front line.
+        4 => {
+            c.fill_polygon(
+                &[
+                    (9.0 + j(rng), 6.5),
+                    (19.0 + j(rng), 6.5),
+                    (23.0, 9.5),
+                    (24.0 + j(rng), 23.0),
+                    (20.5, 23.0),
+                    (19.8, 12.0),
+                    (19.5, 24.5),
+                    (8.5, 24.5),
+                    (8.2, 12.0),
+                    (7.5, 23.0),
+                    (4.0 + j(rng), 23.0),
+                    (5.0, 9.5),
+                ],
+                v,
+            );
+            // Front opening drawn as a dark slit by overdrawing nothing —
+            // approximated with a thin low-intensity line via polygon gap.
+        }
+        // Sandal: sole + straps.
+        5 => {
+            c.fill_polygon(
+                &[
+                    (4.0 + j(rng), 19.0),
+                    (24.0 + j(rng), 17.0),
+                    (24.5, 20.0),
+                    (4.5, 22.0),
+                ],
+                v,
+            );
+            c.line((8.0 + j(rng), 18.5), (12.0, 12.0 + j(rng)), 1.4);
+            c.line((12.0, 12.0 + j(rng)), (17.0 + j(rng), 17.5), 1.4);
+        }
+        // Shirt: torso + collar notch + short sleeves (between tshirt/coat).
+        6 => {
+            c.fill_polygon(
+                &[
+                    (9.5 + j(rng), 7.0),
+                    (13.0, 9.5),
+                    (15.0, 9.5),
+                    (18.5 + j(rng), 7.0),
+                    (23.0 + j(rng), 11.0),
+                    (20.5, 13.5),
+                    (19.3, 11.8),
+                    (19.3 + j(rng), 24.0),
+                    (8.7 + j(rng), 24.0),
+                    (8.7, 11.8),
+                    (7.5, 13.5),
+                    (5.0 + j(rng), 11.0),
+                ],
+                v,
+            );
+        }
+        // Sneaker: low profile with toe curve.
+        7 => {
+            c.fill_polygon(
+                &[
+                    (4.0 + j(rng), 20.5),
+                    (6.0, 14.0 + j(rng)),
+                    (10.0, 13.0),
+                    (16.0, 15.5),
+                    (23.5 + j(rng), 16.5),
+                    (24.5, 20.0),
+                    (4.5, 22.5),
+                ],
+                v,
+            );
+        }
+        // Bag: body + handle arc.
+        8 => {
+            c.fill_polygon(
+                &[
+                    (6.0 + j(rng), 12.0),
+                    (22.0 + j(rng), 12.0),
+                    (23.0, 23.0),
+                    (5.0, 23.0),
+                ],
+                v,
+            );
+            c.arc((14.0 + j(rng), 12.0), 4.5, 4.5, -PI, 0.0, 1.6);
+        }
+        // Ankle boot: tall shaft + sole.
+        9 => {
+            c.fill_polygon(
+                &[
+                    (9.0 + j(rng), 6.0),
+                    (16.0 + j(rng), 6.0),
+                    (16.5, 15.0),
+                    (23.0 + j(rng), 17.0),
+                    (23.5, 21.5),
+                    (8.5, 22.5),
+                ],
+                v,
+            );
+        }
+        _ => unreachable!(),
+    }
+    c
+}
+
+/// Ten cursive multi-stroke glyph prototypes with heavy per-stroke wobble,
+/// standing in for KMNIST's 10 hiragana classes. These are invented glyphs
+/// (not the actual characters) with KMNIST-like stroke statistics: 2–4
+/// curved strokes, high intra-class deformation.
+fn render_kana(label: u8, rng: &mut Xoshiro256ss) -> Canvas {
+    let mut c = Canvas::new();
+    let w = stroke(rng, 1.6);
+    let j = |rng: &mut Xoshiro256ss| wob(rng, 1.6);
+    match label {
+        0 => {
+            c.line((8.0 + j(rng), 9.0 + j(rng)), (20.0 + j(rng), 9.5 + j(rng)), w);
+            c.arc((14.0 + j(rng), 16.0 + j(rng)), 5.5, 5.0, -PI * 0.4, PI, w);
+            c.line((14.0 + j(rng), 6.0), (13.5 + j(rng), 13.0), w);
+        }
+        1 => {
+            c.arc((12.0 + j(rng), 12.0 + j(rng)), 6.0, 7.0, PI * 0.5, PI * 1.5, w);
+            c.line((12.0 + j(rng), 5.5), (19.0 + j(rng), 7.0 + j(rng)), w);
+            c.line((13.0 + j(rng), 19.0), (20.5 + j(rng), 21.5 + j(rng)), w);
+        }
+        2 => {
+            c.polyline(
+                &[
+                    (9.0 + j(rng), 7.0 + j(rng)),
+                    (18.0 + j(rng), 8.0),
+                    (12.0 + j(rng), 14.0),
+                    (19.0 + j(rng), 21.0 + j(rng)),
+                ],
+                w,
+            );
+            c.line((8.0 + j(rng), 18.0 + j(rng)), (13.0 + j(rng), 22.0), w);
+        }
+        3 => {
+            c.line((14.0 + j(rng), 5.0), (13.0 + j(rng), 22.0 + j(rng)), w);
+            c.arc((13.5 + j(rng), 13.5 + j(rng)), 6.5, 4.0, -PI * 0.3, PI * 0.7, w);
+            c.line((7.0 + j(rng), 9.0 + j(rng)), (21.0 + j(rng), 8.0), w);
+        }
+        4 => {
+            c.arc((14.0 + j(rng), 10.0 + j(rng)), 5.0, 3.5, -PI, PI * 0.6, w);
+            c.arc((14.5 + j(rng), 18.0 + j(rng)), 4.0, 4.5, -PI * 0.5, PI * 1.2, w);
+            c.line((7.5 + j(rng), 14.0 + j(rng)), (12.0 + j(rng), 12.0), w);
+        }
+        5 => {
+            c.polyline(
+                &[
+                    (10.0 + j(rng), 6.0 + j(rng)),
+                    (9.0 + j(rng), 21.0),
+                    (17.0 + j(rng), 22.5 + j(rng)),
+                ],
+                w,
+            );
+            c.line((15.0 + j(rng), 8.0 + j(rng)), (16.5 + j(rng), 15.0), w);
+            c.arc((18.0 + j(rng), 14.0 + j(rng)), 4.0, 3.2, -PI * 0.6, PI * 0.4, w);
+        }
+        6 => {
+            c.arc((14.0 + j(rng), 14.0 + j(rng)), 7.0, 7.5, PI * 0.2, PI * 1.8, w);
+            c.line((14.0 + j(rng), 10.0 + j(rng)), (14.5 + j(rng), 17.5), w);
+        }
+        7 => {
+            c.line((8.5 + j(rng), 8.0 + j(rng)), (20.0 + j(rng), 7.0 + j(rng)), w);
+            c.line((14.0 + j(rng), 7.5), (9.0 + j(rng), 22.0 + j(rng)), w);
+            c.arc((16.0 + j(rng), 17.0 + j(rng)), 4.5, 4.0, -PI * 0.8, PI * 0.5, w);
+        }
+        8 => {
+            c.polyline(
+                &[
+                    (8.0 + j(rng), 10.0 + j(rng)),
+                    (14.0 + j(rng), 6.0 + j(rng)),
+                    (20.0 + j(rng), 10.5),
+                    (18.5 + j(rng), 21.0 + j(rng)),
+                    (9.5 + j(rng), 21.5),
+                ],
+                w,
+            );
+        }
+        9 => {
+            c.arc((11.0 + j(rng), 11.0 + j(rng)), 4.0, 4.5, 0.0, TAU, w);
+            c.line((17.0 + j(rng), 6.0 + j(rng)), (18.5 + j(rng), 22.0 + j(rng)), w);
+            c.line((12.0 + j(rng), 18.0 + j(rng)), (18.0 + j(rng), 17.0), w);
+        }
+        _ => unreachable!(),
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::boolean::IMG_PIXELS;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let a = SynthFamily::Digits.generate(20, 10, 7);
+        let b = SynthFamily::Digits.generate(20, 10, 7);
+        assert_eq!(a.train.len(), 20);
+        assert_eq!(a.test.len(), 10);
+        for (x, y) in a.train.iter().zip(&b.train) {
+            assert_eq!(x.pixels, y.pixels);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = SynthFamily::Digits.generate(4, 0, 1);
+        let b = SynthFamily::Digits.generate(4, 0, 2);
+        assert!(a.train.iter().zip(&b.train).any(|(x, y)| x.pixels != y.pixels));
+    }
+
+    #[test]
+    fn labels_are_balanced() {
+        let d = SynthFamily::Fashion.generate(100, 50, 3);
+        let mut counts = [0usize; NUM_CLASSES];
+        for s in &d.train {
+            counts[s.label as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn every_class_renders_nonempty() {
+        let mut rng = Xoshiro256ss::new(5);
+        for family in [SynthFamily::Digits, SynthFamily::Fashion, SynthFamily::Kana] {
+            for label in 0..NUM_CLASSES as u8 {
+                let px = family.render(label, &mut rng);
+                assert_eq!(px.len(), IMG_PIXELS);
+                let bright = px.iter().filter(|&&p| p > 100).count();
+                assert!(
+                    bright > 15,
+                    "{:?} class {label} rendered only {bright} bright pixels",
+                    family
+                );
+                assert!(
+                    bright < IMG_PIXELS / 2,
+                    "{:?} class {label} rendered too many bright pixels",
+                    family
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn intra_class_variation_exists() {
+        let mut rng = Xoshiro256ss::new(9);
+        let a = SynthFamily::Kana.render(0, &mut rng);
+        let b = SynthFamily::Kana.render(0, &mut rng);
+        assert_ne!(a, b, "two renders of the same class must differ");
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Coarse check: average inter-class pixel distance exceeds average
+        // intra-class distance for the digit family.
+        let mut rng = Xoshiro256ss::new(11);
+        let n = 6;
+        let renders: Vec<Vec<Vec<u8>>> = (0..NUM_CLASSES as u8)
+            .map(|l| (0..n).map(|_| SynthFamily::Digits.render(l, &mut rng)).collect())
+            .collect();
+        let dist = |a: &[u8], b: &[u8]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(&x, &y)| (x as f64 - y as f64).abs())
+                .sum::<f64>()
+        };
+        let mut intra = 0.0;
+        let mut intra_n = 0.0;
+        let mut inter = 0.0;
+        let mut inter_n = 0.0;
+        for ca in 0..NUM_CLASSES {
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    intra += dist(&renders[ca][i], &renders[ca][j]);
+                    intra_n += 1.0;
+                }
+                for cb in (ca + 1)..NUM_CLASSES {
+                    inter += dist(&renders[ca][i], &renders[cb][i]);
+                    inter_n += 1.0;
+                }
+            }
+        }
+        let intra_avg = intra / intra_n;
+        let inter_avg = inter / inter_n;
+        assert!(
+            inter_avg > intra_avg * 1.2,
+            "inter {inter_avg:.0} should exceed intra {intra_avg:.0}"
+        );
+    }
+}

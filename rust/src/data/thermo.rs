@@ -1,0 +1,108 @@
+//! Thermometer encoding (paper §III-C, Table I).
+//!
+//! A value `v ∈ [0, levels]` is encoded into `levels` bits where bit `t`
+//! (LSB-first) is set iff `v ≥ t+1`. This reproduces Table I exactly:
+//! position 0 → all zeros, position 1 → `…0001`, position 18 → 18 ones,
+//! for the 19 window positions encoded in 18 bits.
+//!
+//! The same encoder booleanizes multi-bit pixels (U > 1) in the scaled-up
+//! configurations of §VI.
+
+/// Encode `v` into `levels` thermometer bits (LSB-first).
+pub fn encode(v: usize, levels: usize) -> Vec<bool> {
+    assert!(v <= levels, "value {v} exceeds {levels} thermometer levels");
+    (0..levels).map(|t| v >= t + 1).collect()
+}
+
+/// Decode thermometer bits back to the value (number of leading ones).
+/// Returns `None` if the bits are not a valid thermometer code
+/// (i.e. a 1 appears above a 0).
+pub fn decode(bits: &[bool]) -> Option<usize> {
+    let ones = bits.iter().take_while(|&&b| b).count();
+    if bits[ones..].iter().any(|&b| b) {
+        None
+    } else {
+        Some(ones)
+    }
+}
+
+/// Thermometer-encode a pixel value in [0,255] into `u` bits using evenly
+/// spaced thresholds, as in the TM literature's U-bit booleanization:
+/// bit t set iff `pixel > (t+1)·256/(u+1)`.
+pub fn encode_pixel(pixel: u8, u: usize) -> Vec<bool> {
+    (0..u)
+        .map(|t| (pixel as usize) > (t + 1) * 256 / (u + 1))
+        .collect()
+}
+
+/// Render a thermometer code MSB-first as the paper's Table I prints it.
+pub fn to_table_string(v: usize, levels: usize) -> String {
+    encode(v, levels)
+        .iter()
+        .rev()
+        .map(|&b| if b { '1' } else { '0' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_match_paper() {
+        // Table I: x/y ∈ {0..18} in 18 bits.
+        assert_eq!(to_table_string(0, 18), "000000000000000000");
+        assert_eq!(to_table_string(1, 18), "000000000000000001");
+        assert_eq!(to_table_string(17, 18), "011111111111111111");
+        assert_eq!(to_table_string(18, 18), "111111111111111111");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for levels in [1usize, 7, 18, 32] {
+            for v in 0..=levels {
+                let bits = encode(v, levels);
+                assert_eq!(bits.len(), levels);
+                assert_eq!(decode(&bits), Some(v), "v={v} levels={levels}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_invalid_codes() {
+        assert_eq!(decode(&[false, true]), None); // 1 above a 0
+        assert_eq!(decode(&[true, false, true]), None);
+        assert_eq!(decode(&[true, true]), Some(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn encode_rejects_out_of_range() {
+        encode(19, 18);
+    }
+
+    #[test]
+    fn monotone_in_value() {
+        // Thermometer codes are monotone: v1 < v2 → code(v1) ⊆ code(v2).
+        for v in 0..18 {
+            let a = encode(v, 18);
+            let b = encode(v + 1, 18);
+            for t in 0..18 {
+                assert!(!a[t] || b[t], "monotonicity violated at v={v} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn pixel_encoding_thresholds() {
+        // U=1: single bit, threshold at 128.
+        assert_eq!(encode_pixel(0, 1), vec![false]);
+        assert_eq!(encode_pixel(128, 1), vec![false]);
+        assert_eq!(encode_pixel(129, 1), vec![true]);
+        // U=3: thresholds at 64, 128, 192.
+        assert_eq!(encode_pixel(200, 3), vec![true, true, true]);
+        assert_eq!(encode_pixel(130, 3), vec![true, true, false]);
+        assert_eq!(encode_pixel(70, 3), vec![true, false, false]);
+        assert_eq!(encode_pixel(10, 3), vec![false, false, false]);
+    }
+}

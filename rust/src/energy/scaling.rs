@@ -1,0 +1,124 @@
+//! Technology scaling estimates (§VI-A): Dennard-style area scaling from
+//! 65 nm to a target node, plus the literal-budget area reduction and the
+//! paper's 28 nm power/EPC projections.
+
+use crate::tm::Params;
+
+/// A CMOS technology node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TechNode {
+    pub nm: f64,
+    pub nominal_vdd: f64,
+}
+
+pub const NODE_65NM: TechNode = TechNode { nm: 65.0, nominal_vdd: 1.2 };
+pub const NODE_28NM: TechNode = TechNode { nm: 28.0, nominal_vdd: 0.9 };
+
+/// Dennard area scale factor between nodes: (target/source)².
+pub fn area_scale(from: TechNode, to: TechNode) -> f64 {
+    (to.nm / from.nm).powi(2)
+}
+
+/// The measured 65 nm die (Table II).
+#[derive(Clone, Copy, Debug)]
+pub struct DieFigures {
+    pub core_area_mm2: f64,
+    pub gate_count: u64,
+    pub dffs: u64,
+}
+
+pub const ASIC_65NM: DieFigures = DieFigures {
+    core_area_mm2: 2.7,
+    gate_count: 201_000,
+    dffs: 52_000,
+};
+
+/// §VI-A scaled design estimate: 28 nm + literal budget.
+#[derive(Clone, Debug)]
+pub struct ScaledEstimate {
+    /// Core area after literal-budget reduction, still at 65 nm.
+    pub area_65nm_budgeted_mm2: f64,
+    /// Core area at the target node.
+    pub area_target_mm2: f64,
+    /// Power at 27.8 MHz at the target node/voltage.
+    pub power_w: f64,
+    /// EPC at the measured 60.3 k img/s system rate.
+    pub epc_j: f64,
+}
+
+/// Reproduce the §VI-A arithmetic:
+/// - the TA-action model part + clause logic ≈70% of core area;
+/// - a `budget`-literal clause needs `budget × addr_bits` model bits vs
+///   `literals`, shrinking that 70% share proportionally;
+/// - Dennard area scaling to 28 nm;
+/// - ≈50% power reduction vs the 0.82 V 65 nm chip at 0.7 V 28 nm.
+pub fn scale_asic(
+    params: &Params,
+    budget: usize,
+    power_65nm_0v82_w: f64,
+    rate_img_s: f64,
+) -> ScaledEstimate {
+    // Fraction of the TA-action storage removed (paper: (272−90)/272 ≈ 67%).
+    let addr_bits = crate::tm::budget::addr_bits(params.literals);
+    let ta_reduction = 1.0 - (budget * addr_bits) as f64 / params.literals as f64;
+    // TA part is ~70% of core area (§VI-A).
+    const TA_AREA_SHARE: f64 = 0.70;
+    let area_reduction = TA_AREA_SHARE * ta_reduction;
+    let area_65 = ASIC_65NM.core_area_mm2 * (1.0 - area_reduction);
+    let area_28 = area_65 * area_scale(NODE_65NM, NODE_28NM);
+    // §VI-A: "roughly estimate a 50% reduction in power consumption
+    // compared to the 65 nm chip operating at 0.82 V" (0.7 V, 28 nm).
+    let power = power_65nm_0v82_w * 0.5;
+    let epc = power / rate_img_s;
+    ScaledEstimate {
+        area_65nm_budgeted_mm2: area_65,
+        area_target_mm2: area_28,
+        power_w: power,
+        epc_j: epc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_scale_65_to_28() {
+        let s = area_scale(NODE_65NM, NODE_28NM);
+        assert!((s - (28.0f64 / 65.0).powi(2)).abs() < 1e-12);
+        assert!((s - 0.1856).abs() < 1e-3);
+    }
+
+    #[test]
+    fn paper_via_section_6a_numbers() {
+        // Budget 10 literals → 90/272 of TA storage retained; total core
+        // reduction ≈ 47%; 28 nm area ≈ 0.27 mm²; EPC ≈ 4.3 nJ.
+        let est = scale_asic(&Params::asic(), 10, 0.52e-3, 60.3e3);
+        let core_reduction = 1.0 - est.area_65nm_budgeted_mm2 / ASIC_65NM.core_area_mm2;
+        assert!(
+            (core_reduction - 0.47).abs() < 0.02,
+            "core reduction {:.3} vs paper ≈0.47",
+            core_reduction
+        );
+        assert!(
+            (est.area_target_mm2 - 0.27).abs() < 0.02,
+            "28 nm area {:.3} mm² vs paper 0.27 mm²",
+            est.area_target_mm2
+        );
+        assert!(
+            (est.epc_j - 4.3e-9).abs() < 0.2e-9,
+            "28 nm EPC {:.2} nJ vs paper 4.3 nJ",
+            est.epc_j * 1e9
+        );
+        assert!((est.power_w - 0.26e-3).abs() < 0.02e-3);
+    }
+
+    #[test]
+    fn no_budget_means_no_area_saving_from_ta_part() {
+        // With budget × addr_bits ≥ literals the "reduction" goes negative;
+        // clamp-free arithmetic still reports it faithfully.
+        let est = scale_asic(&Params::asic(), 31, 0.52e-3, 60.3e3);
+        // 31 × 9 = 279 > 272 → slightly larger than dense.
+        assert!(est.area_65nm_budgeted_mm2 > ASIC_65NM.core_area_mm2 * 0.99);
+    }
+}

@@ -1,0 +1,20 @@
+//! ConvCoTM — Convolutional Coalesced Tsetlin Machine accelerator, full-stack
+//! reproduction of Tunheim et al., "An All-digital 8.6-nJ/Frame 65-nm Tsetlin
+//! Machine Image Classification Accelerator" (IEEE TCSI 2025).
+//!
+//! Layers:
+//! - L3 (this crate): serving coordinator, cycle-accurate ASIC simulator,
+//!   energy model, native bit-packed inference engine, on-device trainer.
+//! - L2/L1 (python/compile): JAX inference graph + Pallas clause-evaluation
+//!   kernels, AOT-lowered to HLO text and executed here via PJRT (`runtime`).
+
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod asic;
+pub mod energy;
+pub mod model_io;
+pub mod runtime;
+pub mod tm;
+pub mod util;

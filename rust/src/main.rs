@@ -1,0 +1,273 @@
+//! `convcotm` — CLI for the ConvCoTM accelerator reproduction.
+//!
+//! Subcommands:
+//!   train     train a model on a dataset and save the 5 632-byte model file
+//!   eval      evaluate a saved model (native engine + ASIC simulator)
+//!   serve     run the coordinator over a backend and replay traffic
+//!   power     print the power/EPC operating table for a saved model
+//!   info      print the configuration, cycle constants and DFF inventory
+//!
+//! Examples:
+//!   convcotm train --dataset mnist --epochs 12 --out model.cctm
+//!   convcotm eval --model model.cctm --dataset mnist --n-test 500
+//!   convcotm serve --model model.cctm --backend asic --requests 1000
+//!   convcotm power --model model.cctm
+
+use convcotm::asic::{dffs, Accelerator, ChipConfig, CycleReport};
+use convcotm::cli::Args;
+use convcotm::coordinator::{
+    AsicBackend, BatchConfig, Coordinator, NativeBackend, PjrtBackend, SysProc,
+};
+use convcotm::data::{booleanize_split, load_dataset};
+use convcotm::energy::{EnergyModel, OperatingPoint};
+use convcotm::model_io;
+use convcotm::tm::{Engine, Params, Trainer};
+use convcotm::util::Table;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("power") => cmd_power(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "convcotm — ConvCoTM accelerator reproduction\n\n\
+         USAGE: convcotm <train|eval|serve|power|inspect|info> [--flags]\n\n\
+         train  --dataset mnist|fmnist|kmnist --n-train N --n-test N --epochs E --seed S --out FILE\n\
+         eval   --model FILE --dataset D --n-test N\n\
+         serve  --model FILE --backend native|asic|pjrt --requests N --max-batch B\n\
+         power  --model FILE [--vdd V --freq HZ]\n\
+         info\n\n\
+         Datasets use procedural synthetic substitutes unless DATA_DIR points\n\
+         at real IDX files (see DESIGN.md §5)."
+    );
+}
+
+fn load_model_arg(args: &Args) -> anyhow::Result<convcotm::tm::Model> {
+    let path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model FILE required"))?;
+    Ok(model_io::load_file(Params::asic(), &PathBuf::from(path))?)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let dataset_name = args.get_or("dataset", "mnist");
+    let n_train = args.get_usize("n-train", 2000).map_err(anyhow::Error::msg)?;
+    let n_test = args.get_usize("n-test", 500).map_err(anyhow::Error::msg)?;
+    let epochs = args.get_usize("epochs", 12).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 2025).map_err(anyhow::Error::msg)? as u64;
+    let out = args.get_or("out", "model.cctm");
+
+    let dataset = load_dataset(&dataset_name, n_train, n_test, seed);
+    let train = booleanize_split(&dataset.train, dataset.booleanizer);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    println!(
+        "training on {} ({} train / {} test), {} epochs",
+        dataset.name,
+        train.len(),
+        test.len(),
+        epochs
+    );
+    let mut trainer = Trainer::new(Params::asic(), seed);
+    let engine = Engine::new();
+    let t0 = Instant::now();
+    for epoch in 0..epochs {
+        let stats = trainer.epoch(&train, epoch);
+        let acc = engine.accuracy(&trainer.export(), &test);
+        println!(
+            "epoch {epoch:2}: online {:.2}%  test {:.2}%  includes {}",
+            stats.train_accuracy * 100.0,
+            acc * 100.0,
+            stats.total_includes
+        );
+    }
+    let model = trainer.export();
+    model_io::save_file(&model, &PathBuf::from(&out))?;
+    println!(
+        "saved {out} ({} bytes payload) in {:.1}s",
+        model_io::to_wire(&model).len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let model = load_model_arg(args)?;
+    let dataset_name = args.get_or("dataset", "mnist");
+    let n_test = args.get_usize("n-test", 500).map_err(anyhow::Error::msg)?;
+    let dataset = load_dataset(&dataset_name, 0, n_test, 2025);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+
+    let engine = Engine::new();
+    let sw = engine.accuracy(&model, &test);
+    let mut asic = Accelerator::new(Params::asic(), ChipConfig::default());
+    asic.load_model(&model);
+    let mut correct = 0usize;
+    let mut cycles = 0u64;
+    for (i, (img, label)) in test.iter().enumerate() {
+        let r = asic.classify(img, Some(*label), i > 0)?;
+        if r.prediction == *label {
+            correct += 1;
+        }
+        cycles += r.report.phases.latency() as u64;
+    }
+    println!(
+        "{}: native {:.2}%  asic-sim {:.2}%  ({} images, {} chip-cycles)",
+        dataset.name,
+        sw * 100.0,
+        correct as f64 / test.len() as f64 * 100.0,
+        test.len(),
+        cycles
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let model = load_model_arg(args)?;
+    let backend_name = args.get_or("backend", "native");
+    let requests = args.get_usize("requests", 1000).map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_usize("max-batch", 16).map_err(anyhow::Error::msg)?;
+    let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 256, 7);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    let cfg = BatchConfig {
+        max_batch,
+        ..BatchConfig::default()
+    };
+
+    let coord = match backend_name.as_str() {
+        "native" => Coordinator::start(Box::new(NativeBackend::new(model)), cfg),
+        "asic" => Coordinator::start(Box::new(AsicBackend::new(&model, ChipConfig::default())), cfg),
+        "pjrt" => {
+            let dir = PathBuf::from("artifacts");
+            let m = model.clone();
+            Coordinator::start_with(
+                move || PjrtBackend::new(&dir, "convcotm_b16", 16, &m).unwrap(),
+                cfg,
+            )
+        }
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| coord.submit(test[i % test.len()].0.clone()))
+        .collect();
+    for rx in rxs {
+        rx.recv()??;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let snap = coord.shutdown();
+    println!(
+        "{backend_name}: {} requests in {:.2}s → {:.1} k req/s, p50 {:.0} µs, p99 {:.0} µs, {} batches",
+        snap.requests,
+        elapsed,
+        snap.requests as f64 / elapsed / 1e3,
+        snap.latency_us.p50,
+        snap.latency_us.p99,
+        snap.batches
+    );
+    println!("{}", snap.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_power(args: &Args) -> anyhow::Result<()> {
+    let model = load_model_arg(args)?;
+    let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 64, 7);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    let mut asic = Accelerator::new(Params::asic(), ChipConfig::default());
+    asic.load_model(&model);
+    let mut report = CycleReport::default();
+    for (i, (img, _)) in test.iter().enumerate() {
+        report.accumulate(&asic.classify(img, None, i > 0)?.report);
+    }
+    let n = test.len() as u64;
+    let mut avg = report;
+    avg.phases = convcotm::asic::fsm::PhaseCycles::standard();
+    avg.phases.transfer = 0;
+    for v in [
+        &mut avg.window_dff_clocks,
+        &mut avg.clause_dff_clocks,
+        &mut avg.sum_pipe_dff_clocks,
+        &mut avg.image_buffer_dff_clocks,
+        &mut avg.control_dff_clocks,
+        &mut avg.model_dff_clocks,
+        &mut avg.clause_comb_toggles,
+        &mut avg.clause_evaluations,
+        &mut avg.adder_ops,
+    ] {
+        *v /= n;
+    }
+    let em = EnergyModel::default();
+    let sp = SysProc;
+    let vdd = args.get_f64("vdd", 0.82).map_err(anyhow::Error::msg)?;
+    let freq = args.get_f64("freq", 27.8e6).map_err(anyhow::Error::msg)?;
+    let op = OperatingPoint { vdd, freq_hz: freq };
+    let period = sp.period_cycles(freq);
+    println!(
+        "operating point {vdd} V, {:.1} MHz: power {:.3} mW, rate {:.2} k img/s, EPC {:.2} nJ",
+        freq / 1e6,
+        em.power(&avg, op, period) * 1e3,
+        sp.classification_rate(freq) / 1e3,
+        em.epc(&avg, op, period) * 1e9
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    // Interpretability dump: the clauses as window stencils + vote weights.
+    let model = load_model_arg(args)?;
+    let top = args.get_usize("top", 8).map_err(anyhow::Error::msg)?;
+    let infos = convcotm::tm::interpret::describe_model(&model);
+    println!(
+        "model: {} includes total, {:.1}% exclude\n",
+        model.total_includes(),
+        model.exclude_fraction() * 100.0
+    );
+    for info in infos.iter().take(top) {
+        println!("{}", info.summary());
+        for row in info.stencil_rows() {
+            println!("    |{row}|");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    use convcotm::asic::{LATENCY_CYCLES, PERIOD_CYCLES, TRANSFER_CYCLES};
+    let p = Params::asic();
+    let mut t = Table::new(&["Constant", "Value"]);
+    t.row(&["Clauses".into(), format!("{}", p.clauses)]);
+    t.row(&["Classes".into(), format!("{}", p.classes)]);
+    t.row(&["Literals per patch".into(), format!("{}", p.literals)]);
+    t.row(&["Patches per image".into(), "361 (19×19)".into()]);
+    t.row(&["Model size".into(), format!("{} bytes", p.model_bits() / 8)]);
+    t.row(&["Transfer cycles".into(), format!("{TRANSFER_CYCLES}")]);
+    t.row(&["Processing cycles".into(), format!("{PERIOD_CYCLES}")]);
+    t.row(&["Single-image latency".into(), format!("{LATENCY_CYCLES} cycles")]);
+    t.row(&["DFF inventory".into(), format!("{} (model {})", dffs::TOTAL, dffs::MODEL_REGS)]);
+    println!("{}", t.to_markdown());
+    Ok(())
+}

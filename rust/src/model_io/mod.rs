@@ -1,0 +1,218 @@
+//! Model serialization — the accelerator's load-model wire format (§IV-B).
+//!
+//! The chip's model registers hold exactly 45 056 bits = 5 632 bytes:
+//! 272×128 TA-action bits followed by 10×128 8-bit two's-complement
+//! weights. [`to_wire`]/[`from_wire`] produce that raw payload — the byte
+//! stream the system processor pushes over the AXI interface in load-model
+//! mode. [`save_file`]/[`load_file`] wrap it in a small self-describing
+//! container (magic + dims header) for on-disk storage, so mismatched
+//! configurations fail loudly instead of mis-loading registers.
+
+use crate::tm::params::Params;
+use crate::tm::Model;
+use crate::util::BitVec;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Container magic: "CCTM" + format version 1.
+const MAGIC: &[u8; 4] = b"CCTM";
+const VERSION: u16 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ModelIoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic (not a CCTM model file)")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    Version(u16),
+    #[error("dimension mismatch: file has {file:?}, expected {expected:?}")]
+    DimMismatch {
+        file: (u32, u32, u32),
+        expected: (u32, u32, u32),
+    },
+    #[error("payload size {got} != expected {expected}")]
+    PayloadSize { got: usize, expected: usize },
+}
+
+/// Raw register payload: TA-action bits (LSB-first, clause-major) then
+/// weights (class-major, clause order), exactly as §IV-B sizes them.
+pub fn to_wire(model: &Model) -> Vec<u8> {
+    let p = &model.params;
+    let mut out = Vec::with_capacity(p.model_bits() / 8);
+    for j in 0..p.clauses {
+        out.extend_from_slice(&model.include(j).to_bytes_lsb());
+    }
+    for i in 0..p.classes {
+        for j in 0..p.clauses {
+            out.push(model.weight(i, j) as u8);
+        }
+    }
+    out
+}
+
+/// Rebuild a model from the raw register payload.
+pub fn from_wire(params: Params, bytes: &[u8]) -> Result<Model, ModelIoError> {
+    let expected = params.model_bits() / 8;
+    if bytes.len() != expected {
+        return Err(ModelIoError::PayloadSize {
+            got: bytes.len(),
+            expected,
+        });
+    }
+    let lit_bytes = params.literals / 8;
+    let mut include = Vec::with_capacity(params.clauses);
+    for j in 0..params.clauses {
+        let chunk = &bytes[j * lit_bytes..(j + 1) * lit_bytes];
+        include.push(BitVec::from_bytes_lsb(chunk, params.literals));
+    }
+    let woff = params.clauses * lit_bytes;
+    let mut weights = Vec::with_capacity(params.classes);
+    for i in 0..params.classes {
+        let row: Vec<i8> = (0..params.clauses)
+            .map(|j| bytes[woff + i * params.clauses + j] as i8)
+            .collect();
+        weights.push(row);
+    }
+    Ok(Model::from_parts(params, include, weights))
+}
+
+/// Save with the self-describing container header.
+pub fn save_file(model: &Model, path: &Path) -> Result<(), ModelIoError> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    let p = &model.params;
+    for dim in [p.clauses as u32, p.classes as u32, p.literals as u32] {
+        f.write_all(&dim.to_le_bytes())?;
+    }
+    f.write_all(&to_wire(model))?;
+    Ok(())
+}
+
+/// Load, verifying magic, version and dimensions against `params`.
+pub fn load_file(params: Params, path: &Path) -> Result<Model, ModelIoError> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(ModelIoError::BadMagic);
+    }
+    let mut v = [0u8; 2];
+    f.read_exact(&mut v)?;
+    let version = u16::from_le_bytes(v);
+    if version != VERSION {
+        return Err(ModelIoError::Version(version));
+    }
+    let mut dims = [0u8; 12];
+    f.read_exact(&mut dims)?;
+    let file_dims = (
+        u32::from_le_bytes(dims[0..4].try_into().unwrap()),
+        u32::from_le_bytes(dims[4..8].try_into().unwrap()),
+        u32::from_le_bytes(dims[8..12].try_into().unwrap()),
+    );
+    let expected = (
+        params.clauses as u32,
+        params.classes as u32,
+        params.literals as u32,
+    );
+    if file_dims != expected {
+        return Err(ModelIoError::DimMismatch {
+            file: file_dims,
+            expected,
+        });
+    }
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    from_wire(params, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::NUM_LITERALS;
+    use crate::tm::params::MODEL_BYTES;
+    use crate::util::Xoshiro256ss;
+
+    fn random_model(seed: u64) -> Model {
+        let params = Params::asic();
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut m = Model::blank(params.clone());
+        for j in 0..params.clauses {
+            for _ in 0..rng.usize_below(20) {
+                m.set_include(j, rng.usize_below(NUM_LITERALS), true);
+            }
+            for i in 0..params.classes {
+                m.set_weight(i, j, (rng.below(255) as i32 - 127) as i8);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn wire_payload_is_exactly_5632_bytes() {
+        let m = random_model(1);
+        assert_eq!(to_wire(&m).len(), MODEL_BYTES, "paper §IV-B: 5 632 bytes");
+    }
+
+    #[test]
+    fn wire_roundtrip_is_identity() {
+        let m = random_model(2);
+        let wire = to_wire(&m);
+        let back = from_wire(Params::asic(), &wire).unwrap();
+        assert!(m == back);
+    }
+
+    #[test]
+    fn file_roundtrip_is_identity() {
+        let m = random_model(3);
+        let dir = std::env::temp_dir();
+        let path = dir.join("convcotm_model_io_test.cctm");
+        save_file(&m, &path).unwrap();
+        let back = load_file(Params::asic(), &path).unwrap();
+        assert!(m == back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_payload_size_rejected() {
+        let err = from_wire(Params::asic(), &[0u8; 100]).unwrap_err();
+        assert!(matches!(err, ModelIoError::PayloadSize { .. }));
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let m = random_model(4);
+        let dir = std::env::temp_dir();
+        let path = dir.join("convcotm_model_io_dims.cctm");
+        save_file(&m, &path).unwrap();
+        let mut small = Params::asic();
+        small.clauses = 64;
+        let err = load_file(small, &path).unwrap_err();
+        assert!(matches!(err, ModelIoError::DimMismatch { .. }));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("convcotm_model_io_magic.cctm");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        let err = load_file(Params::asic(), &path).unwrap_err();
+        assert!(matches!(err, ModelIoError::BadMagic));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn negative_weights_survive_roundtrip() {
+        let params = Params::asic();
+        let mut m = Model::blank(params.clone());
+        m.set_weight(0, 0, -128);
+        m.set_weight(9, 127, -1);
+        m.set_weight(5, 64, 127);
+        let back = from_wire(params, &to_wire(&m)).unwrap();
+        assert_eq!(back.weight(0, 0), -128);
+        assert_eq!(back.weight(9, 127), -1);
+        assert_eq!(back.weight(5, 64), 127);
+    }
+}

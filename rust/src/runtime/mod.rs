@@ -1,0 +1,291 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute them
+//! from the Rust request path (the session architecture's L3↔L2 bridge).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One compiled executable per artifact variant (batch 1, batch 16);
+//! executables are cached in the [`Runtime`].
+
+use crate::data::boolean::BoolImage;
+use crate::tm::Model;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Flattened f32 model inputs for the compiled graph.
+pub struct ModelInputs {
+    /// (128×272) row-major 0/1.
+    pub include: Vec<f32>,
+    /// (10×128) row-major.
+    pub weights: Vec<f32>,
+}
+
+impl ModelInputs {
+    pub fn from_model(model: &Model) -> ModelInputs {
+        let p = &model.params;
+        let mut include = Vec::with_capacity(p.clauses * p.literals);
+        for j in 0..p.clauses {
+            for k in 0..p.literals {
+                include.push(if model.include(j).get(k) { 1.0 } else { 0.0 });
+            }
+        }
+        let mut weights = Vec::with_capacity(p.classes * p.clauses);
+        for i in 0..p.classes {
+            for j in 0..p.clauses {
+                weights.push(model.weight(i, j) as f32);
+            }
+        }
+        ModelInputs { include, weights }
+    }
+}
+
+/// Flatten a booleanized image to the graph's (784,) f32 layout.
+pub fn image_to_f32(img: &BoolImage) -> Vec<f32> {
+    let mut v = Vec::with_capacity(784);
+    for y in 0..28 {
+        for x in 0..28 {
+            v.push(if img.get(x, y) { 1.0 } else { 0.0 });
+        }
+    }
+    v
+}
+
+/// Result of one graph execution for one image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphOutput {
+    pub class_sums: Vec<f32>,
+    pub clauses: Vec<f32>,
+    pub prediction: u8,
+}
+
+/// A compiled executable plus its batch size.
+pub struct CompiledGraph {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub clauses: usize,
+    pub classes: usize,
+    pub literals: usize,
+}
+
+impl CompiledGraph {
+    /// Execute on up to `batch` images (padded internally with zeros).
+    /// Returns one output per input image.
+    pub fn run(&self, images: &[&BoolImage], model: &ModelInputs) -> Result<Vec<GraphOutput>> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        if images.len() > self.batch {
+            return Err(anyhow!(
+                "batch overflow: {} images into a batch-{} graph",
+                images.len(),
+                self.batch
+            ));
+        }
+        // Pack (+pad) the image tensor.
+        let mut img_data = vec![0f32; self.batch * 784];
+        for (b, img) in images.iter().enumerate() {
+            img_data[b * 784..(b + 1) * 784].copy_from_slice(&image_to_f32(img));
+        }
+        let img_lit = if self.batch == 1 {
+            xla::Literal::vec1(&img_data)
+        } else {
+            xla::Literal::vec1(&img_data).reshape(&[self.batch as i64, 784])?
+        };
+        let include_lit =
+            xla::Literal::vec1(&model.include).reshape(&[self.clauses as i64, self.literals as i64])?;
+        let weights_lit =
+            xla::Literal::vec1(&model.weights).reshape(&[self.classes as i64, self.clauses as i64])?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[img_lit, include_lit, weights_lit])?[0][0]
+            .to_literal_sync()?;
+        // return_tuple=True at lowering → 3-tuple (sums, clauses, pred).
+        let (sums_l, clauses_l, pred_l) = result.to_tuple3()?;
+        let sums = sums_l.to_vec::<f32>()?;
+        let clauses = clauses_l.to_vec::<f32>()?;
+        let preds = pred_l.to_vec::<f32>()?;
+        let per = |b: usize| GraphOutput {
+            class_sums: sums[b * self.classes..(b + 1) * self.classes].to_vec(),
+            clauses: clauses[b * self.clauses..(b + 1) * self.clauses].to_vec(),
+            prediction: preds[b] as u8,
+        };
+        Ok((0..images.len()).map(per).collect())
+    }
+}
+
+/// The PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    cache: HashMap<String, CompiledGraph>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifact_dir: artifact_dir.into(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached). `name` is e.g. "convcotm_b1".
+    pub fn load(&mut self, name: &str, batch: usize) -> Result<&CompiledGraph> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+            let graph = self.compile_file(&path, batch)?;
+            self.cache.insert(name.to_string(), graph);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Compile an HLO-text file directly.
+    pub fn compile_file(&self, path: &Path, batch: usize) -> Result<CompiledGraph> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledGraph {
+            exe,
+            batch,
+            clauses: 128,
+            classes: 10,
+            literals: 272,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::Params;
+    use crate::util::Xoshiro256ss;
+
+    fn artifact_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("convcotm_b1.hlo.txt").exists()
+    }
+
+    fn random_model(seed: u64) -> Model {
+        let params = Params::asic();
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut m = Model::blank(params.clone());
+        for j in 0..params.clauses {
+            for _ in 0..1 + rng.usize_below(6) {
+                m.set_include(j, rng.usize_below(params.literals), true);
+            }
+            for i in 0..params.classes {
+                m.set_weight(i, j, (rng.below(255) as i32 - 127) as i8);
+            }
+        }
+        m
+    }
+
+    fn random_image(rng: &mut Xoshiro256ss) -> BoolImage {
+        BoolImage::from_bools(&(0..784).map(|_| rng.chance(0.3)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn model_inputs_layout() {
+        let model = random_model(1);
+        let mi = ModelInputs::from_model(&model);
+        assert_eq!(mi.include.len(), 128 * 272);
+        assert_eq!(mi.weights.len(), 10 * 128);
+        // Spot-check: include[j,k] row-major.
+        let j = 3;
+        let k = model.included_literals(j)[0];
+        assert_eq!(mi.include[j * 272 + k], 1.0);
+        assert_eq!(mi.weights[2 * 128 + 5], model.weight(2, 5) as f32);
+    }
+
+    #[test]
+    fn image_layout_row_major() {
+        let mut img = BoolImage::blank();
+        img.set(2, 0, true);
+        img.set(0, 1, true);
+        let v = image_to_f32(&img);
+        assert_eq!(v[2], 1.0);
+        assert_eq!(v[28], 1.0);
+        assert_eq!(v.iter().sum::<f32>(), 2.0);
+    }
+
+    /// The cross-stack golden test: the PJRT-executed JAX artifact must
+    /// match the native engine bit-for-bit (the paper's "ASIC matches SW"
+    /// property, across our L1/L2/L3 stack).
+    #[test]
+    fn pjrt_artifact_matches_native_engine() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(artifact_dir()).unwrap();
+        let model = random_model(2);
+        let mi = ModelInputs::from_model(&model);
+        let engine = crate::tm::Engine::new();
+        let graph = rt.load("convcotm_b1", 1).unwrap();
+        let mut rng = Xoshiro256ss::new(77);
+        for _ in 0..4 {
+            let img = random_image(&mut rng);
+            let out = &graph.run(&[&img], &mi).unwrap()[0];
+            let sw = engine.classify(&model, &img);
+            assert_eq!(out.prediction, sw.prediction);
+            let sums_i32: Vec<i32> = out.class_sums.iter().map(|&x| x as i32).collect();
+            assert_eq!(sums_i32, sw.class_sums);
+            for j in 0..128 {
+                assert_eq!(out.clauses[j] > 0.5, sw.clauses.get(j), "clause {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_batch16_matches_native_engine() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(artifact_dir()).unwrap();
+        let model = random_model(3);
+        let mi = ModelInputs::from_model(&model);
+        let engine = crate::tm::Engine::new();
+        let graph = rt.load("convcotm_b16", 16).unwrap();
+        let mut rng = Xoshiro256ss::new(99);
+        let imgs: Vec<BoolImage> = (0..11).map(|_| random_image(&mut rng)).collect();
+        let refs: Vec<&BoolImage> = imgs.iter().collect();
+        let outs = graph.run(&refs, &mi).unwrap();
+        assert_eq!(outs.len(), 11, "padded batch returns only real outputs");
+        for (img, out) in imgs.iter().zip(&outs) {
+            let sw = engine.classify(&model, img);
+            assert_eq!(out.prediction, sw.prediction);
+        }
+    }
+
+    #[test]
+    fn batch_overflow_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(artifact_dir()).unwrap();
+        let model = random_model(4);
+        let mi = ModelInputs::from_model(&model);
+        let graph = rt.load("convcotm_b1", 1).unwrap();
+        let mut rng = Xoshiro256ss::new(5);
+        let a = random_image(&mut rng);
+        let b = random_image(&mut rng);
+        assert!(graph.run(&[&a, &b], &mi).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Tsetlin automata (Fig. 1): two-action automata with 2N states,
+//! implemented as saturating up/down counters exactly as the hardware
+//! description (§III-A): states 0..N−1 → action *exclude*, N..2N−1 →
+//! *include*; "in HW a TA is a binary up/down counter and the inverted MSB
+//! is the action signal".
+
+/// A team of TAs — one per literal — for a single clause.
+///
+/// States are stored as `u8` (8-bit TAs, as the §VI-B training extension
+/// budgets for), biased so that `state < n` ⇒ exclude, `state ≥ n` ⇒
+/// include, with `2n` total states.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaTeam {
+    states: Vec<u8>,
+    /// N — states per action.
+    n: u8,
+}
+
+impl TaTeam {
+    /// New team with all TAs at the strongest exclude-side boundary state
+    /// adjacent to the decision boundary (`N−1`), the common TM init.
+    pub fn new(num_literals: usize, n: u8) -> TaTeam {
+        assert!(n >= 1);
+        TaTeam {
+            states: vec![n - 1; num_literals],
+            n,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// TA action: include (true) iff state is in the upper half.
+    #[inline]
+    pub fn includes(&self, literal: usize) -> bool {
+        self.states[literal] >= self.n
+    }
+
+    /// Strengthen the current action (move away from the boundary).
+    /// This is the "reward"/reinforce step of Fig. 1.
+    #[inline]
+    pub fn reinforce(&mut self, literal: usize) {
+        let s = &mut self.states[literal];
+        let max = 2 * self.n as u16 - 1; // u16: N=128 → 255 (u8 would overflow)
+        if (*s as u16) < max {
+            *s += 1;
+        }
+    }
+
+    /// Weaken toward the opposite action (move toward/past the boundary).
+    /// This is the "penalty" step of Fig. 1.
+    #[inline]
+    pub fn weaken(&mut self, literal: usize) {
+        let s = &mut self.states[literal];
+        if *s > 0 {
+            *s -= 1;
+        }
+    }
+
+    /// Raw state (for serialization/diagnostics).
+    pub fn state(&self, literal: usize) -> u8 {
+        self.states[literal]
+    }
+
+    /// Export the action bits.
+    pub fn action_bits(&self) -> Vec<bool> {
+        (0..self.len()).map(|k| self.includes(k)).collect()
+    }
+
+    /// Number of literals currently included.
+    pub fn include_count(&self) -> usize {
+        self.states.iter().filter(|&&s| s >= self.n).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_action_is_exclude_at_boundary() {
+        let t = TaTeam::new(8, 128);
+        assert!((0..8).all(|k| !t.includes(k)));
+        assert_eq!(t.state(0), 127);
+    }
+
+    #[test]
+    fn single_reinforce_from_boundary_flips_nothing() {
+        // At state N-1 (exclude side), reinforce (of exclude) means moving
+        // away from boundary? No: reinforce moves *up*; from the exclude
+        // boundary one increment crosses into include. The trainer chooses
+        // direction; this test pins the counter semantics.
+        let mut t = TaTeam::new(4, 128);
+        t.reinforce(0);
+        assert!(t.includes(0), "127 → 128 crosses into include");
+        t.weaken(0);
+        assert!(!t.includes(0), "128 → 127 back to exclude");
+    }
+
+    #[test]
+    fn counters_saturate() {
+        let mut t = TaTeam::new(2, 2); // states 0..3
+        for _ in 0..10 {
+            t.reinforce(0);
+        }
+        assert_eq!(t.state(0), 3, "saturates at 2N−1");
+        for _ in 0..10 {
+            t.weaken(0);
+        }
+        assert_eq!(t.state(0), 0, "saturates at 0");
+    }
+
+    #[test]
+    fn include_count_and_action_bits() {
+        let mut t = TaTeam::new(5, 4);
+        t.reinforce(1); // 3→4: include
+        t.reinforce(3);
+        assert_eq!(t.include_count(), 2);
+        assert_eq!(t.action_bits(), vec![false, true, false, true, false]);
+    }
+
+    #[test]
+    fn deep_exclude_needs_matching_reinforces_to_flip() {
+        let mut t = TaTeam::new(1, 8); // boundary at 8, init 7
+        t.weaken(0);
+        t.weaken(0); // state 5
+        assert!(!t.includes(0));
+        t.reinforce(0);
+        t.reinforce(0); // back to 7
+        assert!(!t.includes(0));
+        t.reinforce(0); // 8 — now include
+        assert!(t.includes(0));
+    }
+}

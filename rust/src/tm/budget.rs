@@ -1,0 +1,196 @@
+//! §VI-A literal-budget clause encoding: instead of one TA-action bit per
+//! literal (272 per clause), store up to K literal *addresses* (⌈log2 272⌉ =
+//! 9 bits each), evaluated through K 272-to-1 multiplexers (Fig. 11).
+//!
+//! This module provides the budgeted representation, a bit-exact evaluator
+//! against the dense model, and the area/model-size arithmetic the paper's
+//! estimates use.
+
+use super::model::Model;
+use crate::util::BitVec;
+
+/// Address width for 272 literals.
+pub fn addr_bits(literals: usize) -> usize {
+    usize::BITS as usize - (literals - 1).leading_zeros() as usize
+}
+
+/// A clause in mux-address form: the literal indices to AND together.
+/// An empty list is the "empty clause" — forced 0 like the chip's Empty
+/// logic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BudgetedClause {
+    pub literal_addrs: Vec<u16>,
+}
+
+impl BudgetedClause {
+    pub fn fires(&self, literals: &BitVec) -> bool {
+        !self.literal_addrs.is_empty()
+            && self.literal_addrs.iter().all(|&a| literals.get(a as usize))
+    }
+}
+
+/// A whole model in budgeted form (weights unchanged).
+#[derive(Clone, Debug)]
+pub struct BudgetedModel {
+    pub clauses: Vec<BudgetedClause>,
+    pub budget: usize,
+    pub literals: usize,
+}
+
+/// Conversion errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum BudgetError {
+    #[error("clause {clause} has {size} includes, over budget {budget}")]
+    OverBudget {
+        clause: usize,
+        size: usize,
+        budget: usize,
+    },
+}
+
+impl BudgetedModel {
+    /// Convert a dense model; fails if any clause exceeds the budget
+    /// (train with `Params::literal_budget` to guarantee it fits).
+    pub fn from_model(model: &Model, budget: usize) -> Result<BudgetedModel, BudgetError> {
+        let mut clauses = Vec::with_capacity(model.params.clauses);
+        for j in 0..model.params.clauses {
+            let addrs: Vec<u16> = model
+                .included_literals(j)
+                .into_iter()
+                .map(|k| k as u16)
+                .collect();
+            if addrs.len() > budget {
+                return Err(BudgetError::OverBudget {
+                    clause: j,
+                    size: addrs.len(),
+                    budget,
+                });
+            }
+            clauses.push(BudgetedClause {
+                literal_addrs: addrs,
+            });
+        }
+        Ok(BudgetedModel {
+            clauses,
+            budget,
+            literals: model.params.literals,
+        })
+    }
+
+    /// TA-action model bits in this encoding: clauses × budget × addr_bits.
+    /// (Unused address slots still occupy storage, as in the Fig. 11
+    /// circuit sketch.)
+    pub fn ta_action_bits(&self) -> usize {
+        self.clauses.len() * self.budget * addr_bits(self.literals)
+    }
+
+    /// The paper's §VI-A area-reduction arithmetic: fraction of the
+    /// TA-action storage removed relative to the dense encoding.
+    pub fn ta_reduction_vs_dense(&self) -> f64 {
+        let dense = self.clauses.len() * self.literals;
+        1.0 - self.ta_action_bits() as f64 / dense as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::patches::NUM_LITERALS;
+    use crate::tm::infer::clause_fires;
+    use crate::tm::params::Params;
+    use crate::util::quick::check;
+    use crate::util::Xoshiro256ss;
+
+    #[test]
+    fn addr_bits_matches_paper() {
+        // 272 literals → 9-bit addresses (§VI-A).
+        assert_eq!(addr_bits(272), 9);
+        assert_eq!(addr_bits(256), 8);
+        assert_eq!(addr_bits(257), 9);
+        assert_eq!(addr_bits(1000), 10);
+    }
+
+    #[test]
+    fn paper_model_size_example() {
+        // §VI-A: 10 literals × 9 bits = 90 bits per clause; reduction
+        // (272−90)/272 ≈ 67%.
+        let p = Params {
+            clauses: 128,
+            literal_budget: Some(10),
+            ..Params::asic()
+        };
+        let mut model = Model::blank(p);
+        // Put exactly 10 includes in each clause.
+        let mut rng = Xoshiro256ss::new(1);
+        for j in 0..128 {
+            let mut placed = 0;
+            while placed < 10 {
+                let k = rng.usize_below(NUM_LITERALS);
+                if !model.include(j).get(k) {
+                    model.set_include(j, k, true);
+                    placed += 1;
+                }
+            }
+        }
+        let b = BudgetedModel::from_model(&model, 10).unwrap();
+        assert_eq!(b.ta_action_bits(), 128 * 90);
+        let red = b.ta_reduction_vs_dense();
+        assert!((red - (272.0 - 90.0) / 272.0).abs() < 1e-9, "reduction {red}");
+    }
+
+    #[test]
+    fn over_budget_rejected() {
+        let p = Params {
+            clauses: 2,
+            ..Params::asic()
+        };
+        let mut model = Model::blank(p);
+        for k in 0..5 {
+            model.set_include(1, k, true);
+        }
+        let err = BudgetedModel::from_model(&model, 4).unwrap_err();
+        assert_eq!(
+            err,
+            BudgetError::OverBudget {
+                clause: 1,
+                size: 5,
+                budget: 4
+            }
+        );
+    }
+
+    #[test]
+    fn budgeted_eval_is_bit_exact_vs_dense() {
+        check("budgeted clause eval equals dense", 30, |g| {
+            let p = Params {
+                clauses: 6,
+                ..Params::asic()
+            };
+            let mut model = Model::blank(p.clone());
+            for j in 0..p.clauses {
+                let n_inc = g.usize_in(0, 8);
+                for _ in 0..n_inc {
+                    model.set_include(j, g.usize_in(0, NUM_LITERALS - 1), true);
+                }
+            }
+            let budgeted = BudgetedModel::from_model(&model, 8).unwrap();
+            let density = g.f64_unit();
+            let lits = BitVec::from_bools(&g.bits(NUM_LITERALS, density));
+            for j in 0..p.clauses {
+                let dense_fire = clause_fires(model.include(j), &lits, model.is_empty_clause(j));
+                let budget_fire = budgeted.clauses[j].fires(&lits);
+                crate::prop_assert_eq!(dense_fire, budget_fire);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_budgeted_clause_never_fires() {
+        let c = BudgetedClause {
+            literal_addrs: vec![],
+        };
+        let all_ones = BitVec::ones(NUM_LITERALS);
+        assert!(!c.fires(&all_ones));
+    }
+}

@@ -1,0 +1,309 @@
+//! Native bit-packed ConvCoTM inference engine — the software golden model
+//! the ASIC simulator and the PJRT-executed JAX graph are cross-checked
+//! against (the paper's "exactly in accordance with the SW simulations"
+//! property, §V).
+//!
+//! Semantics follow the chip:
+//! - clause j fires on patch b iff every included literal is 1 (Eq. 2) and
+//!   the clause is non-empty (§IV-D Empty logic);
+//! - the per-image clause output is the OR over all 361 patches (Eq. 6);
+//! - class sums are Σ_j w[i][j]·c[j] (Eq. 3), no multiplications needed;
+//! - prediction is argmax with lowest-label tie-break (Fig. 6 tree).
+
+use super::model::Model;
+use crate::data::boolean::BoolImage;
+use crate::data::patches;
+use crate::util::BitVec;
+
+/// Outcome of classifying one image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Inference {
+    /// Predicted class (argmax of class sums, ties → lowest label).
+    pub prediction: u8,
+    /// Class sums v_i (Eq. 3).
+    pub class_sums: Vec<i32>,
+    /// Per-clause image-level outputs c_j (Eq. 6).
+    pub clauses: BitVec,
+}
+
+/// Evaluate clause `include` mask against packed `literals`:
+/// fires iff `include & !literals == 0` and the clause is non-empty.
+#[inline]
+pub fn clause_fires(include: &BitVec, literals: &BitVec, empty: bool) -> bool {
+    !empty && !include.and_not_any(literals)
+}
+
+/// Argmax with the chip's tie-break: strictly-greater moves forward, so the
+/// lowest label wins ties (Fig. 6).
+pub fn argmax_lowest(sums: &[i32]) -> u8 {
+    let mut best = 0usize;
+    for (i, &v) in sums.iter().enumerate().skip(1) {
+        if v > sums[best] {
+            best = i;
+        }
+    }
+    best as u8
+}
+
+/// The inference engine. Owns nothing but borrows a model per call, so one
+/// engine can serve many models (the chip reloads model registers the same
+/// way, §IV-A load-model mode).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Engine {
+    /// Use the patch-bitset fast path (`tm::fast`, the §Perf hot path).
+    /// `false` selects the direct per-patch evaluation — the literal
+    /// transcription of the chip's datapath, kept as the cross-check
+    /// reference (they are asserted equal in tests).
+    pub early_exit: bool,
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine { early_exit: true }
+    }
+
+    /// Image-level clause outputs (Eq. 6): OR over all patches.
+    pub fn clause_outputs(&self, model: &Model, img: &BoolImage) -> BitVec {
+        if self.early_exit {
+            return super::fast::PatchSets::build(img).clause_outputs(model);
+        }
+        self.clause_outputs_direct(model, img)
+    }
+
+    /// Direct (chip-shaped) evaluation: one patch at a time over all
+    /// clauses — the reference implementation.
+    pub fn clause_outputs_direct(&self, model: &Model, img: &BoolImage) -> BitVec {
+        let n = model.params.clauses;
+        let mut out = BitVec::zeros(n);
+        for y in 0..patches::POSITIONS {
+            for x in 0..patches::POSITIONS {
+                let lit_buf = patches::patch_literals(img, x, y);
+                for j in 0..n {
+                    if out.get(j) {
+                        continue;
+                    }
+                    if clause_fires(model.include(j), &lit_buf, model.is_empty_clause(j)) {
+                        out.set(j, true);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Class sums from clause outputs (Eq. 3).
+    pub fn class_sums(&self, model: &Model, clauses: &BitVec) -> Vec<i32> {
+        (0..model.params.classes)
+            .map(|i| {
+                let w = model.weights_for_class(i);
+                clauses.iter_ones().map(|j| w[j] as i32).sum()
+            })
+            .collect()
+    }
+
+    /// Full classification of one booleanized image.
+    pub fn classify(&self, model: &Model, img: &BoolImage) -> Inference {
+        let clauses = self.clause_outputs(model, img);
+        let class_sums = self.class_sums(model, &clauses);
+        Inference {
+            prediction: argmax_lowest(&class_sums),
+            class_sums,
+            clauses,
+        }
+    }
+
+    /// Accuracy over a booleanized split.
+    pub fn accuracy(&self, model: &Model, split: &[(BoolImage, u8)]) -> f64 {
+        if split.is_empty() {
+            return 0.0;
+        }
+        let correct = split
+            .iter()
+            .filter(|(img, label)| self.classify(model, img).prediction == *label)
+            .count();
+        correct as f64 / split.len() as f64
+    }
+
+    /// Per-patch combinational clause outputs c_j^b for one image — used by
+    /// the ASIC simulator's toggle accounting and by tests. Row per patch.
+    pub fn per_patch_outputs(&self, model: &Model, img: &BoolImage) -> Vec<BitVec> {
+        let n = model.params.clauses;
+        let mut rows = Vec::with_capacity(patches::NUM_PATCHES);
+        for y in 0..patches::POSITIONS {
+            for x in 0..patches::POSITIONS {
+                let lits = patches::patch_literals(img, x, y);
+                let mut row = BitVec::zeros(n);
+                for j in 0..n {
+                    if clause_fires(model.include(j), &lits, model.is_empty_clause(j)) {
+                        row.set(j, true);
+                    }
+                }
+                rows.push(row);
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{NUM_LITERALS, NUM_FEATURES};
+    use crate::tm::params::Params;
+    use crate::util::quick::{check, PropResult};
+    use crate::util::Xoshiro256ss;
+
+    fn asic_params_small() -> Params {
+        Params {
+            clauses: 8,
+            ..Params::asic()
+        }
+    }
+
+    /// Clause that matches any patch whose window bit 0 is set.
+    fn window_bit_clause(p: &Params, j: usize, model: &mut Model, bit: usize, negated: bool) {
+        let lit = if negated { NUM_FEATURES + bit } else { bit };
+        model.set_include(j, lit, true);
+        let _ = p;
+    }
+
+    #[test]
+    fn empty_clause_never_fires() {
+        let p = asic_params_small();
+        let model = Model::blank(p);
+        let img = BoolImage::blank();
+        let e = Engine::new();
+        let out = e.clause_outputs(&model, &img);
+        assert!(out.is_zero(), "empty clauses are forced low (§IV-D)");
+    }
+
+    #[test]
+    fn single_literal_clause_fires_when_pixel_present() {
+        let p = asic_params_small();
+        let mut model = Model::blank(p.clone());
+        window_bit_clause(&p, 0, &mut model, 0, false);
+        let mut img = BoolImage::blank();
+        img.set(5, 9, true);
+        let e = Engine::new();
+        let out = e.clause_outputs(&model, &img);
+        assert!(out.get(0), "some patch has the pixel at window bit 0");
+        // Clause on the *negation* of the same bit also fires (other patches
+        // lack the pixel).
+        let mut model2 = Model::blank(p.clone());
+        window_bit_clause(&p, 1, &mut model2, 0, true);
+        let out2 = e.clause_outputs(&model2, &img);
+        assert!(out2.get(1));
+    }
+
+    #[test]
+    fn clause_requiring_conflicting_literals_never_fires() {
+        let p = asic_params_small();
+        let mut model = Model::blank(p.clone());
+        // Include both a feature and its negation → impossible.
+        model.set_include(0, 3, true);
+        model.set_include(0, NUM_FEATURES + 3, true);
+        let mut img = BoolImage::blank();
+        img.set(10, 10, true);
+        let e = Engine::new();
+        assert!(!e.clause_outputs(&model, &img).get(0));
+    }
+
+    #[test]
+    fn class_sums_weight_firing_clauses_only() {
+        let p = asic_params_small();
+        let mut model = Model::blank(p.clone());
+        window_bit_clause(&p, 0, &mut model, 0, false); // will fire
+        window_bit_clause(&p, 1, &mut model, 0, false); // will fire
+        // Clause 2 impossible.
+        model.set_include(2, 0, true);
+        model.set_include(2, NUM_FEATURES, true);
+        model.set_weight(0, 0, 10);
+        model.set_weight(0, 1, -4);
+        model.set_weight(0, 2, 100); // never fires → must not count
+        model.set_weight(1, 0, 3);
+        let mut img = BoolImage::blank();
+        img.set(14, 14, true);
+        let e = Engine::new();
+        let inf = e.classify(&model, &img);
+        assert_eq!(inf.class_sums[0], 6);
+        assert_eq!(inf.class_sums[1], 3);
+        assert_eq!(inf.prediction, 0);
+    }
+
+    #[test]
+    fn argmax_tie_break_prefers_lowest_label() {
+        assert_eq!(argmax_lowest(&[5, 5, 5]), 0);
+        assert_eq!(argmax_lowest(&[1, 7, 7]), 1);
+        assert_eq!(argmax_lowest(&[-3, -1, -1]), 1);
+        assert_eq!(argmax_lowest(&[0]), 0);
+    }
+
+    #[test]
+    fn early_exit_matches_exhaustive() {
+        // CSRF-style early exit must not change semantics.
+        let mut rng = Xoshiro256ss::new(77);
+        let p = Params {
+            clauses: 16,
+            ..Params::asic()
+        };
+        for trial in 0..5 {
+            let mut model = Model::blank(p.clone());
+            for j in 0..p.clauses {
+                // Sparse random includes (~4 per clause).
+                for _ in 0..4 {
+                    model.set_include(j, rng.usize_below(NUM_LITERALS), true);
+                }
+                for i in 0..p.classes {
+                    model.set_weight(i, j, (rng.below(21) as i32 - 10) as i8);
+                }
+            }
+            let bits: Vec<bool> = (0..784).map(|_| rng.chance(0.2)).collect();
+            let img = BoolImage::from_bools(&bits);
+            let fast = Engine { early_exit: true }.classify(&model, &img);
+            let slow = Engine { early_exit: false }.classify(&model, &img);
+            assert_eq!(fast, slow, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn per_patch_outputs_or_equals_clause_outputs() {
+        check("per-patch OR equals image-level clause output", 10, |g| -> PropResult {
+            let p = Params {
+                clauses: 8,
+                ..Params::asic()
+            };
+            let mut model = Model::blank(p.clone());
+            for j in 0..p.clauses {
+                let k = g.usize_in(1, 6);
+                for _ in 0..k {
+                    model.set_include(j, g.usize_in(0, NUM_LITERALS - 1), true);
+                }
+            }
+            let density = g.f64_unit() * 0.5;
+            let img = BoolImage::from_bools(&g.bits(784, density));
+            let e = Engine::new();
+            let rows = e.per_patch_outputs(&model, &img);
+            let mut or_all = BitVec::zeros(p.clauses);
+            for r in &rows {
+                or_all.or_assign(r);
+            }
+            let direct = e.clause_outputs(&model, &img);
+            crate::prop_assert_eq!(or_all, direct);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accuracy_counts_matches() {
+        let p = asic_params_small();
+        let mut model = Model::blank(p.clone());
+        window_bit_clause(&p, 0, &mut model, 0, false);
+        model.set_weight(1, 0, 5); // firing → predict class 1
+        let mut img_fire = BoolImage::blank();
+        img_fire.set(14, 14, true);
+        let img_blank = BoolImage::blank(); // nothing fires → sums all 0 → class 0
+        let split = vec![(img_fire, 1u8), (img_blank, 0u8)];
+        let e = Engine::new();
+        assert_eq!(e.accuracy(&model, &split), 1.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! Clause interpretability: render learned clauses as human-readable
+//! sub-pattern descriptions — the TM property the paper's introduction
+//! highlights ("a single-layer structure with highly interpretable
+//! outputs").
+//!
+//! Each clause decomposes into:
+//! - a 10×10 window stencil: cells required ON (`#`), required OFF (`.`),
+//!   and don't-care (` `);
+//! - position constraints: the thermometer literals bound the window's
+//!   (x, y) placement to a rectangle;
+//! - per-class vote weights.
+
+use super::model::Model;
+use crate::data::patches::{NUM_FEATURES, POS_BITS, POSITIONS, WINDOW};
+
+/// One cell requirement in the window stencil.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cell {
+    On,
+    Off,
+    DontCare,
+    /// Contradictory (both polarities included) — clause can never fire.
+    Conflict,
+}
+
+/// Decoded clause description.
+#[derive(Clone, Debug)]
+pub struct ClauseInfo {
+    pub index: usize,
+    pub stencil: [[Cell; WINDOW]; WINDOW],
+    /// Inclusive window-position bounds implied by the thermometer
+    /// literals: x ∈ [x_min, x_max], y ∈ [y_min, y_max].
+    pub x_range: (usize, usize),
+    pub y_range: (usize, usize),
+    /// Per-class weights.
+    pub weights: Vec<i8>,
+    pub num_includes: usize,
+    /// No placement satisfies the position literals.
+    pub infeasible: bool,
+}
+
+/// Decode clause `j` of a model.
+pub fn describe_clause(model: &Model, j: usize) -> ClauseInfo {
+    let include = model.include(j);
+    let mut stencil = [[Cell::DontCare; WINDOW]; WINDOW];
+    for wr in 0..WINDOW {
+        for wc in 0..WINDOW {
+            let k = wr * WINDOW + wc;
+            let pos = include.get(k);
+            let neg = include.get(NUM_FEATURES + k);
+            stencil[wr][wc] = match (pos, neg) {
+                (true, true) => Cell::Conflict,
+                (true, false) => Cell::On,
+                (false, true) => Cell::Off,
+                (false, false) => Cell::DontCare,
+            };
+        }
+    }
+    // Thermometer bit t (LSB-first): feature = (coord ≥ t+1).
+    // Included positive literal t ⇒ coord ≥ t+1; included negated ⇒ coord ≤ t.
+    let mut bound = |base: usize| -> (usize, usize) {
+        let mut lo = 0usize;
+        let mut hi = POSITIONS - 1;
+        for t in 0..POS_BITS {
+            if include.get(base + t) {
+                lo = lo.max(t + 1);
+            }
+            if include.get(NUM_FEATURES + base + t) {
+                hi = hi.min(t);
+            }
+        }
+        (lo, hi)
+    };
+    let y_range = bound(WINDOW * WINDOW);
+    let x_range = bound(WINDOW * WINDOW + POS_BITS);
+    let infeasible = x_range.0 > x_range.1 || y_range.0 > y_range.1;
+    ClauseInfo {
+        index: j,
+        stencil,
+        x_range,
+        y_range,
+        weights: (0..model.params.classes).map(|i| model.weight(i, j)).collect(),
+        num_includes: include.count_ones(),
+        infeasible,
+    }
+}
+
+impl ClauseInfo {
+    /// Render the stencil as 10 text rows (`#` on, `.` off, space don't-care,
+    /// `!` conflict).
+    pub fn stencil_rows(&self) -> Vec<String> {
+        self.stencil
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|c| match c {
+                        Cell::On => '#',
+                        Cell::Off => '.',
+                        Cell::DontCare => ' ',
+                        Cell::Conflict => '!',
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        let strongest = self
+            .weights
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &w)| w)
+            .map(|(i, &w)| format!("class {i} (w={w})"))
+            .unwrap_or_default();
+        format!(
+            "clause {:3}: {} includes, window x∈[{},{}] y∈[{},{}]{} → votes {}",
+            self.index,
+            self.num_includes,
+            self.x_range.0,
+            self.x_range.1,
+            self.y_range.0,
+            self.y_range.1,
+            if self.infeasible { " (INFEASIBLE)" } else { "" },
+            strongest
+        )
+    }
+}
+
+/// Describe the whole model, sorted by total absolute vote weight
+/// (most influential clauses first).
+pub fn describe_model(model: &Model) -> Vec<ClauseInfo> {
+    let mut infos: Vec<ClauseInfo> = (0..model.params.clauses)
+        .map(|j| describe_clause(model, j))
+        .collect();
+    infos.sort_by_key(|c| {
+        -(c.weights.iter().map(|&w| (w as i32).abs()).sum::<i32>())
+    });
+    infos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::Params;
+
+    fn model_with(clause_setup: impl Fn(&mut Model)) -> Model {
+        let mut m = Model::blank(Params::asic());
+        clause_setup(&mut m);
+        m
+    }
+
+    #[test]
+    fn window_cells_decode_polarities() {
+        let m = model_with(|m| {
+            m.set_include(0, 0, true); // (0,0) ON
+            m.set_include(0, NUM_FEATURES + 11, true); // (1,1) OFF
+            m.set_include(0, 5, true);
+            m.set_include(0, NUM_FEATURES + 5, true); // (0,5) conflict
+        });
+        let info = describe_clause(&m, 0);
+        assert_eq!(info.stencil[0][0], Cell::On);
+        assert_eq!(info.stencil[1][1], Cell::Off);
+        assert_eq!(info.stencil[0][5], Cell::Conflict);
+        assert_eq!(info.stencil[9][9], Cell::DontCare);
+        assert_eq!(info.num_includes, 4);
+        let rows = info.stencil_rows();
+        assert!(rows[0].starts_with('#'));
+        assert_eq!(rows[0].chars().nth(5), Some('!'));
+    }
+
+    #[test]
+    fn position_literals_bound_placement() {
+        let m = model_with(|m| {
+            // y ≥ 3: include y-therm bit 2 (t=2 ⇒ y ≥ 3).
+            m.set_include(0, 100 + 2, true);
+            // y ≤ 10: include ¬(y ≥ 11) = negated bit 10.
+            m.set_include(0, NUM_FEATURES + 100 + 10, true);
+            // x ≥ 1.
+            m.set_include(0, 100 + POS_BITS, true);
+        });
+        let info = describe_clause(&m, 0);
+        assert_eq!(info.y_range, (3, 10));
+        assert_eq!(info.x_range, (1, 18));
+        assert!(!info.infeasible);
+    }
+
+    #[test]
+    fn contradictory_position_is_infeasible() {
+        let m = model_with(|m| {
+            // y ≥ 5 and y ≤ 2.
+            m.set_include(0, 100 + 4, true);
+            m.set_include(0, NUM_FEATURES + 100 + 2, true);
+        });
+        let info = describe_clause(&m, 0);
+        assert!(info.infeasible);
+        assert!(info.summary().contains("INFEASIBLE"));
+    }
+
+    #[test]
+    fn describe_model_sorts_by_influence() {
+        let m = model_with(|m| {
+            m.set_weight(0, 3, 100);
+            m.set_weight(1, 3, -50);
+            m.set_weight(0, 7, 5);
+        });
+        let infos = describe_model(&m);
+        assert_eq!(infos[0].index, 3, "most influential clause first");
+    }
+
+    #[test]
+    fn trained_clause_stencils_are_sparse_patterns() {
+        // A trained model's clauses should mostly be don't-care (high
+        // exclude fraction) — interpretability depends on it.
+        use crate::data::{booleanize_split, SynthFamily};
+        let d = SynthFamily::Digits.generate(200, 0, 21);
+        let train = booleanize_split(&d.train, d.booleanizer);
+        let mut tr = crate::tm::Trainer::new(Params::asic(), 21);
+        for e in 0..3 {
+            tr.epoch(&train, e);
+        }
+        let model = tr.export();
+        let infos = describe_model(&model);
+        let dc: usize = infos
+            .iter()
+            .flat_map(|i| i.stencil.iter())
+            .flat_map(|r| r.iter())
+            .filter(|&&c| c == Cell::DontCare)
+            .count();
+        let total = infos.len() * WINDOW * WINDOW;
+        assert!(
+            dc as f64 / total as f64 > 0.5,
+            "stencils should be mostly don't-care"
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! The ConvCoTM algorithm: model, native inference engine, Tsetlin
+//! automata and training, plus the §VI-A literal-budget variant.
+
+pub mod automata;
+pub mod budget;
+pub mod fast;
+pub mod infer;
+pub mod interpret;
+pub mod model;
+pub mod params;
+pub mod train;
+
+pub use infer::{argmax_lowest, clause_fires, Engine, Inference};
+pub use model::Model;
+pub use params::{Params, MODEL_BYTES, NUM_CLAUSES};
+pub use train::{EpochStats, Trainer};

@@ -1,0 +1,213 @@
+//! The ConvCoTM *model*: per-clause TA-action (include) masks and per-class
+//! signed clause weights (paper §IV-B).
+//!
+//! For inference only the TA **action** bits are needed, not full automata —
+//! exactly what the chip's model registers hold. Include masks are stored as
+//! packed [`BitVec`]s so the clause AND-plane evaluates in ⌈272/64⌉ word ops.
+
+use super::params::Params;
+use crate::util::BitVec;
+
+/// An inference-ready ConvCoTM model.
+#[derive(Clone, PartialEq)]
+pub struct Model {
+    pub params: Params,
+    /// `include[j]` — TA action bits of clause j over the literals.
+    include: Vec<BitVec>,
+    /// `weights[i][j]` — signed weight of clause j for class i.
+    weights: Vec<Vec<i8>>,
+    /// Cached per-clause emptiness (no includes → clause forced 0, §IV-D).
+    empty: Vec<bool>,
+}
+
+impl std::fmt::Debug for Model {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Model({} clauses × {} literals, {} classes, {} includes total)",
+            self.params.clauses,
+            self.params.literals,
+            self.params.classes,
+            self.include.iter().map(|m| m.count_ones()).sum::<usize>()
+        )
+    }
+}
+
+impl Model {
+    /// Empty model (all excludes, zero weights).
+    pub fn blank(params: Params) -> Model {
+        params.validate().expect("invalid params");
+        let include = (0..params.clauses)
+            .map(|_| BitVec::zeros(params.literals))
+            .collect();
+        let weights = vec![vec![0i8; params.clauses]; params.classes];
+        let empty = vec![true; params.clauses];
+        Model {
+            params,
+            include,
+            weights,
+            empty,
+        }
+    }
+
+    /// Build from explicit masks and weights.
+    pub fn from_parts(params: Params, include: Vec<BitVec>, weights: Vec<Vec<i8>>) -> Model {
+        params.validate().expect("invalid params");
+        assert_eq!(include.len(), params.clauses);
+        for m in &include {
+            assert_eq!(m.len(), params.literals);
+        }
+        assert_eq!(weights.len(), params.classes);
+        for w in &weights {
+            assert_eq!(w.len(), params.clauses);
+        }
+        let empty = include.iter().map(|m| m.is_zero()).collect();
+        Model {
+            params,
+            include,
+            weights,
+            empty,
+        }
+    }
+
+    #[inline]
+    pub fn include(&self, clause: usize) -> &BitVec {
+        &self.include[clause]
+    }
+
+    pub fn includes(&self) -> &[BitVec] {
+        &self.include
+    }
+
+    #[inline]
+    pub fn is_empty_clause(&self, clause: usize) -> bool {
+        self.empty[clause]
+    }
+
+    #[inline]
+    pub fn weight(&self, class: usize, clause: usize) -> i8 {
+        self.weights[class][clause]
+    }
+
+    pub fn weights_for_class(&self, class: usize) -> &[i8] {
+        &self.weights[class]
+    }
+
+    /// Mutate one include bit (training path).
+    pub fn set_include(&mut self, clause: usize, literal: usize, v: bool) {
+        self.include[clause].set(literal, v);
+        self.empty[clause] = self.include[clause].is_zero();
+    }
+
+    /// Mutate one weight with saturation to the 8-bit range (§IV-B).
+    pub fn bump_weight(&mut self, class: usize, clause: usize, delta: i32) {
+        let w = &mut self.weights[class][clause];
+        *w = (*w as i32 + delta).clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+    }
+
+    pub fn set_weight(&mut self, class: usize, clause: usize, v: i8) {
+        self.weights[class][clause] = v;
+    }
+
+    /// Number of include actions across all clauses.
+    pub fn total_includes(&self) -> usize {
+        self.include.iter().map(|m| m.count_ones()).sum()
+    }
+
+    /// Fraction of TA actions that are *exclude* — the paper reports 88%
+    /// for its MNIST model (§VI-A).
+    pub fn exclude_fraction(&self) -> f64 {
+        let total = self.params.clauses * self.params.literals;
+        1.0 - self.total_includes() as f64 / total as f64
+    }
+
+    /// Literal indices included in a clause (for the budgeted encoding and
+    /// interpretability dumps).
+    pub fn included_literals(&self, clause: usize) -> Vec<usize> {
+        self.include[clause].iter_ones().collect()
+    }
+
+    /// Maximum number of includes in any clause.
+    pub fn max_clause_size(&self) -> usize {
+        self.include.iter().map(|m| m.count_ones()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> Model {
+        let p = Params {
+            clauses: 4,
+            classes: 3,
+            literals: 8,
+            ..Params::tiny()
+        };
+        Model::blank(p)
+    }
+
+    #[test]
+    fn blank_model_is_all_empty() {
+        let m = tiny_model();
+        assert_eq!(m.total_includes(), 0);
+        assert!((0..4).all(|j| m.is_empty_clause(j)));
+        assert_eq!(m.exclude_fraction(), 1.0);
+    }
+
+    #[test]
+    fn set_include_updates_emptiness() {
+        let mut m = tiny_model();
+        m.set_include(2, 5, true);
+        assert!(!m.is_empty_clause(2));
+        assert!(m.is_empty_clause(1));
+        m.set_include(2, 5, false);
+        assert!(m.is_empty_clause(2));
+    }
+
+    #[test]
+    fn bump_weight_saturates() {
+        let mut m = tiny_model();
+        m.set_weight(0, 0, 126);
+        m.bump_weight(0, 0, 1);
+        m.bump_weight(0, 0, 1);
+        assert_eq!(m.weight(0, 0), 127, "must saturate at i8::MAX");
+        m.set_weight(1, 0, -127);
+        m.bump_weight(1, 0, -5);
+        assert_eq!(m.weight(1, 0), -128, "must saturate at i8::MIN");
+    }
+
+    #[test]
+    fn included_literals_sorted() {
+        let mut m = tiny_model();
+        m.set_include(0, 7, true);
+        m.set_include(0, 1, true);
+        assert_eq!(m.included_literals(0), vec![1, 7]);
+        assert_eq!(m.max_clause_size(), 2);
+    }
+
+    #[test]
+    fn from_parts_computes_empty() {
+        let p = Params {
+            clauses: 2,
+            classes: 2,
+            literals: 4,
+            ..Params::tiny()
+        };
+        let mut inc0 = BitVec::zeros(4);
+        inc0.set(0, true);
+        let include = vec![inc0, BitVec::zeros(4)];
+        let weights = vec![vec![1i8, -2], vec![0, 3]];
+        let m = Model::from_parts(p, include, weights);
+        assert!(!m.is_empty_clause(0));
+        assert!(m.is_empty_clause(1));
+        assert_eq!(m.weight(0, 1), -2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_parts_rejects_wrong_shapes() {
+        let p = Params::tiny();
+        Model::from_parts(p, vec![], vec![]);
+    }
+}

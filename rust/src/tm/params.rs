@@ -1,0 +1,157 @@
+//! ConvCoTM configuration parameters.
+//!
+//! The accelerator's fixed configuration (paper §IV): 128 clauses, 10
+//! classes, 272 literals per patch, 8-bit signed clause weights. Training
+//! hyper-parameters (T, s) follow the CoTM conventions; they exist only on
+//! the training path — the chip is inference-only.
+
+use crate::data::{NUM_CLASSES, NUM_LITERALS};
+
+/// Number of clauses in the accelerator configuration.
+pub const NUM_CLAUSES: usize = 128;
+
+/// Weight range: 8 bits, two's complement (§IV-B).
+pub const WEIGHT_MIN: i32 = i8::MIN as i32;
+pub const WEIGHT_MAX: i32 = i8::MAX as i32;
+
+/// Model-register sizes (paper §IV-B).
+pub const TA_ACTION_BITS: usize = NUM_LITERALS * NUM_CLAUSES; // 34 816
+pub const WEIGHT_BITS: usize = NUM_CLASSES * NUM_CLAUSES * 8; // 10 240
+pub const MODEL_BITS: usize = TA_ACTION_BITS + WEIGHT_BITS; // 45 056
+pub const MODEL_BYTES: usize = MODEL_BITS / 8; // 5 632
+
+/// Full ConvCoTM configuration (dimensions + training hyper-parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Params {
+    /// Number of clauses n.
+    pub clauses: usize,
+    /// Number of classes m.
+    pub classes: usize,
+    /// Literals per patch 2o.
+    pub literals: usize,
+    /// Feedback target T (class-sum clamp during training).
+    pub t: i32,
+    /// Specificity s (> 1).
+    pub s: f64,
+    /// Number of TA states per action (N in Fig. 1); 2N total states.
+    /// 8-bit TAs (§VI-B) → N = 128.
+    pub ta_states: i32,
+    /// Optional cap on included literals per clause (§VI-A literal budget);
+    /// `None` reproduces the manufactured chip (all literals available).
+    pub literal_budget: Option<usize>,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            clauses: NUM_CLAUSES,
+            classes: NUM_CLASSES,
+            literals: NUM_LITERALS,
+            t: 500,
+            s: 10.0,
+            ta_states: 128,
+            literal_budget: None,
+        }
+    }
+}
+
+impl Params {
+    /// The manufactured ASIC configuration.
+    pub fn asic() -> Self {
+        Params::default()
+    }
+
+    /// A smaller configuration for fast tests.
+    pub fn tiny() -> Self {
+        Params {
+            clauses: 16,
+            t: 60,
+            s: 5.0,
+            ..Params::default()
+        }
+    }
+
+    /// Model size in bits for this configuration (register storage as in
+    /// §IV-B: one TA-action bit per literal per clause + 8-bit weights).
+    pub fn model_bits(&self) -> usize {
+        self.clauses * self.literals + self.classes * self.clauses * 8
+    }
+
+    /// Model size in bits under the §VI-A literal-budget encoding:
+    /// per clause, `budget` literal addresses of ⌈log2(literals)⌉ bits.
+    pub fn model_bits_budgeted(&self, budget: usize) -> usize {
+        let addr_bits = usize::BITS as usize - (self.literals - 1).leading_zeros() as usize;
+        self.clauses * budget * addr_bits + self.classes * self.clauses * 8
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clauses == 0 || self.classes == 0 || self.literals == 0 {
+            return Err("dimensions must be positive".into());
+        }
+        if self.literals % 2 != 0 {
+            return Err("literals must be even (features + negations)".into());
+        }
+        if self.t <= 0 {
+            return Err("T must be positive".into());
+        }
+        if self.s <= 1.0 {
+            return Err("s must exceed 1".into());
+        }
+        if self.ta_states < 2 {
+            return Err("ta_states must be at least 2".into());
+        }
+        if let Some(b) = self.literal_budget {
+            if b == 0 || b > self.literals {
+                return Err(format!("literal budget {b} out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_size_matches_paper() {
+        assert_eq!(TA_ACTION_BITS, 34_816);
+        assert_eq!(WEIGHT_BITS, 10_240);
+        assert_eq!(MODEL_BITS, 45_056);
+        assert_eq!(MODEL_BYTES, 5_632);
+        assert_eq!(Params::asic().model_bits(), MODEL_BITS);
+    }
+
+    #[test]
+    fn budgeted_model_is_smaller() {
+        let p = Params::asic();
+        // §VI-A: 10 literals × 9-bit addresses = 90 bits/clause vs 272.
+        let budgeted = p.model_bits_budgeted(10);
+        assert_eq!(budgeted, 128 * 90 + 10_240);
+        let reduction =
+            (p.model_bits() - budgeted) as f64 / (p.clauses * p.literals) as f64;
+        // Paper: (272-90)/272 ≈ 67% reduction of the TA-action part.
+        let ta_part_reduction = (272.0 - 90.0) / 272.0;
+        let got = (p.clauses * p.literals - 128 * 90) as f64 / (p.clauses * p.literals) as f64;
+        assert!((got - ta_part_reduction).abs() < 1e-9);
+        let _ = reduction;
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        assert!(Params::asic().validate().is_ok());
+        assert!(Params::tiny().validate().is_ok());
+        let mut p = Params::asic();
+        p.s = 0.5;
+        assert!(p.validate().is_err());
+        let mut p = Params::asic();
+        p.t = 0;
+        assert!(p.validate().is_err());
+        let mut p = Params::asic();
+        p.literal_budget = Some(0);
+        assert!(p.validate().is_err());
+        let mut p = Params::asic();
+        p.literals = 271;
+        assert!(p.validate().is_err());
+    }
+}

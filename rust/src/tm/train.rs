@@ -1,0 +1,479 @@
+//! ConvCoTM training (the substrate the paper used off-chip, via the TMU
+//! software, to produce the deployed models — §V; also the basis of the
+//! §VI-B on-device-training extension).
+//!
+//! Implements coalesced-TM learning (Glimsdal & Granmo 2021) with
+//! convolution (Granmo et al. 2019):
+//!
+//! - one TA team (272 automata) per clause, shared across all classes;
+//! - per-class signed clause weights, updated ±1 when a firing clause
+//!   receives feedback, saturating to the chip's 8-bit range;
+//! - per-clause *feedback patch* chosen by reservoir sampling among the
+//!   patches where the clause fired (§VI-B describes the hardware
+//!   equivalent), or a uniformly random patch when it did not fire;
+//! - Type I feedback (recognize/forget, specificity s) for clauses whose
+//!   weight polarity supports the updated class, Type II (reject) against;
+//! - optional clause-size budget (§VI-A / Abeyrathna et al. IJCAI'23):
+//!   exclude→include transitions are blocked while a clause is at budget.
+
+use super::automata::TaTeam;
+use super::infer::{argmax_lowest, Engine};
+use super::model::Model;
+use super::params::Params;
+use crate::data::boolean::BoolImage;
+use crate::data::patches;
+use crate::util::{BitVec, Xoshiro256ss};
+
+/// Trainer state: automata + weights, with an always-in-sync inference
+/// [`Model`] mirroring the TA action bits (the chip's model registers).
+pub struct Trainer {
+    pub params: Params,
+    teams: Vec<TaTeam>,
+    /// Wide weights during training; exported saturated to i8.
+    weights: Vec<Vec<i32>>,
+    model: Model,
+    rng: Xoshiro256ss,
+    /// Use reward-probability 1.0 for true-positive include reinforcement.
+    pub boost_true_positive: bool,
+}
+
+/// Per-epoch training metrics.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_accuracy: f64,
+    pub samples: usize,
+    pub total_includes: usize,
+    pub exclude_fraction: f64,
+}
+
+impl Trainer {
+    pub fn new(params: Params, seed: u64) -> Trainer {
+        params.validate().expect("invalid params");
+        let n = params.ta_states.clamp(2, 128) as u8;
+        let teams = (0..params.clauses)
+            .map(|_| TaTeam::new(params.literals, n))
+            .collect();
+        let weights = vec![vec![0i32; params.clauses]; params.classes];
+        let model = Model::blank(params.clone());
+        Trainer {
+            params,
+            teams,
+            weights,
+            model,
+            rng: Xoshiro256ss::new(seed),
+            boost_true_positive: true,
+        }
+    }
+
+    /// The inference model mirroring the current TA actions and weights.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Export a standalone model with weights saturated to i8 (the chip's
+    /// 8-bit weight registers; the paper set min/max limits during training
+    /// to fit — §V).
+    pub fn export(&self) -> Model {
+        let mut m = self.model.clone();
+        for i in 0..self.params.classes {
+            for j in 0..self.params.clauses {
+                m.set_weight(
+                    i,
+                    j,
+                    self.weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32) as i8,
+                );
+            }
+        }
+        m
+    }
+
+    /// Train on one labelled booleanized image.
+    pub fn update(&mut self, img: &BoolImage, label: u8) {
+        let y = label as usize;
+        assert!(y < self.params.classes);
+        let t = self.params.t;
+
+        // 1. Per-clause outputs + uniformly sampled feedback patch, via the
+        //    patch-bitset fast path (tm::fast): the intersection yields the
+        //    full set of firing patches, so "reservoir sampling" reduces to
+        //    picking a uniform set bit — same distribution, ~100× less work.
+        //    Training semantics: an empty clause evaluates to 1 (matches
+        //    everything) so Type Ia feedback can bootstrap includes; only
+        //    *inference* forces empty clauses low (§IV-D Empty logic) —
+        //    clause_patches() returns the full mask for empty includes.
+        let sets = super::fast::PatchSets::build(img);
+        let n = self.params.clauses;
+        let mut fired = BitVec::zeros(n);
+        let mut feedback_patch = vec![0usize; n];
+        let mut lit_cache: std::collections::HashMap<usize, BitVec> =
+            std::collections::HashMap::new();
+        for j in 0..n {
+            let patches_set = sets.clause_patches(self.model.include(j));
+            let hits = super::fast::popcount(&patches_set);
+            if hits > 0 {
+                fired.set(j, true);
+                let pick = self.rng.below(hits);
+                feedback_patch[j] = super::fast::nth_set_bit(&patches_set, pick);
+            } else {
+                feedback_patch[j] = self.rng.usize_below(patches::NUM_PATCHES);
+            }
+        }
+        // Materialize literals only for the (≤ n distinct) selected patches.
+        let mut patch_lits_at = |b: usize, cache: &mut std::collections::HashMap<usize, BitVec>| {
+            cache
+                .entry(b)
+                .or_insert_with(|| {
+                    let (x, y) = patches::patch_pos(b);
+                    patches::patch_literals(img, x, y)
+                })
+                .clone()
+        };
+        let patch_lits: Vec<BitVec> = {
+            // Build a dense lookup keyed by feedback patch for update_class.
+            let mut v = Vec::with_capacity(n);
+            for j in 0..n {
+                v.push(patch_lits_at(feedback_patch[j], &mut lit_cache));
+            }
+            v
+        };
+
+        // 2. Class sums with the *saturated* weights (what inference sees).
+        let sums: Vec<i32> = (0..self.params.classes)
+            .map(|i| {
+                fired
+                    .iter_ones()
+                    .map(|j| self.weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32))
+                    .sum()
+            })
+            .collect();
+
+        // 3. Target-class update: push v_y toward +T.
+        let vy = sums[y].clamp(-t, t);
+        let p_target = (t - vy) as f64 / (2 * t) as f64;
+        self.update_class(y, true, p_target, &fired, &feedback_patch, &patch_lits);
+
+        // 4. One random negative class: push v_q toward −T.
+        if self.params.classes > 1 {
+            let mut q = self.rng.usize_below(self.params.classes);
+            while q == y {
+                q = self.rng.usize_below(self.params.classes);
+            }
+            let vq = sums[q].clamp(-t, t);
+            let p_neg = (t + vq) as f64 / (2 * t) as f64;
+            self.update_class(q, false, p_neg, &fired, &feedback_patch, &patch_lits);
+        }
+    }
+
+    /// Give feedback for `class` over all clauses, each activated with
+    /// probability `p`. `positive` is true for the target class.
+    #[allow(clippy::too_many_arguments)]
+    fn update_class(
+        &mut self,
+        class: usize,
+        positive: bool,
+        p: f64,
+        fired: &BitVec,
+        feedback_patch: &[usize],
+        patch_lits: &[BitVec],
+    ) {
+        for j in 0..self.params.clauses {
+            if !self.rng.chance(p) {
+                continue;
+            }
+            let w = self.weights[class][j];
+            let clause_out = fired.get(j);
+            // Polarity: a non-negative weight means clause j *supports*
+            // `class`; for the target class supporting clauses get Type I
+            // (strengthen the pattern), opposing get Type II, and weights
+            // move toward +; for a negative class the roles and the weight
+            // direction flip (CoTM, Glimsdal & Granmo 2021).
+            let type_one = (w >= 0) == positive;
+            let lits = &patch_lits[j];
+            if type_one {
+                self.type_i(j, clause_out, lits);
+            } else {
+                self.type_ii(j, clause_out, lits);
+            }
+            if clause_out {
+                let delta = if positive { 1 } else { -1 };
+                self.weights[class][j] += delta;
+            }
+        }
+    }
+
+    /// Type I feedback (recognize + forget) on clause `j` with the selected
+    /// patch's literals.
+    fn type_i(&mut self, j: usize, clause_out: bool, lits: &BitVec) {
+        let s = self.params.s;
+        let p_forget = 1.0 / s;
+        let p_remember = (s - 1.0) / s;
+        if clause_out {
+            for k in 0..self.params.literals {
+                if lits.get(k) {
+                    // Literal is 1: reinforce toward include.
+                    let p = if self.boost_true_positive { 1.0 } else { p_remember };
+                    if self.rng.chance(p) {
+                        self.reinforce_include(j, k);
+                    }
+                } else {
+                    // Literal is 0: push toward exclude.
+                    if self.rng.chance(p_forget) {
+                        self.weaken_toward_exclude(j, k);
+                    }
+                }
+            }
+        } else {
+            // Clause did not fire anywhere: decay all automata (forget).
+            for k in 0..self.params.literals {
+                if self.rng.chance(p_forget) {
+                    self.weaken_toward_exclude(j, k);
+                }
+            }
+        }
+    }
+
+    /// Type II feedback (reject): when the clause fires for the wrong
+    /// class, include literals that are 0 in the patch so the clause stops
+    /// matching it.
+    fn type_ii(&mut self, j: usize, clause_out: bool, lits: &BitVec) {
+        if !clause_out {
+            return;
+        }
+        for k in 0..self.params.literals {
+            if !lits.get(k) && !self.teams[j].includes(k) {
+                self.reinforce_include(j, k);
+            }
+        }
+    }
+
+    /// Increment TA `k` of clause `j` (toward include), honoring the
+    /// literal budget: a transition that would *newly* include a literal is
+    /// blocked while the clause is at budget (§VI-A).
+    fn reinforce_include(&mut self, j: usize, k: usize) {
+        let was_include = self.teams[j].includes(k);
+        if !was_include {
+            if let Some(budget) = self.params.literal_budget {
+                if self.teams[j].include_count() >= budget {
+                    return;
+                }
+            }
+        }
+        self.teams[j].reinforce(k);
+        if !was_include && self.teams[j].includes(k) {
+            self.model.set_include(j, k, true);
+        }
+    }
+
+    /// Decrement TA `k` of clause `j` (toward exclude).
+    fn weaken_toward_exclude(&mut self, j: usize, k: usize) {
+        let was_include = self.teams[j].includes(k);
+        self.teams[j].weaken(k);
+        if was_include && !self.teams[j].includes(k) {
+            self.model.set_include(j, k, false);
+        }
+    }
+
+    /// One epoch over a booleanized training split (pre-shuffled order).
+    pub fn epoch(&mut self, split: &[(BoolImage, u8)], epoch: usize) -> EpochStats {
+        let mut order: Vec<usize> = (0..split.len()).collect();
+        self.rng.shuffle(&mut order);
+        let mut correct = 0usize;
+        for &idx in &order {
+            let (img, label) = &split[idx];
+            // Track online training accuracy before the update.
+            let pred = self.predict(img);
+            if pred == *label {
+                correct += 1;
+            }
+            self.update(img, *label);
+        }
+        let model = self.export();
+        EpochStats {
+            epoch,
+            train_accuracy: correct as f64 / split.len().max(1) as f64,
+            samples: split.len(),
+            total_includes: model.total_includes(),
+            exclude_fraction: model.exclude_fraction(),
+        }
+    }
+
+    /// Predict with the current (saturated) weights.
+    pub fn predict(&self, img: &BoolImage) -> u8 {
+        let e = Engine::new();
+        let clauses = e.clause_outputs(&self.model, img);
+        let sums: Vec<i32> = (0..self.params.classes)
+            .map(|i| {
+                clauses
+                    .iter_ones()
+                    .map(|j| self.weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32))
+                    .sum()
+            })
+            .collect();
+        argmax_lowest(&sums)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthFamily;
+    use crate::data::{booleanize_split, NUM_LITERALS};
+
+    fn two_blob_problem() -> Vec<(BoolImage, u8)> {
+        // Class 0: 3×3 blob top-left; class 1: 3×3 blob bottom-right.
+        let mut split = Vec::new();
+        let mut rng = Xoshiro256ss::new(5);
+        for i in 0..60 {
+            let label = (i % 2) as u8;
+            let (bx, by) = if label == 0 {
+                (2 + rng.usize_below(6), 2 + rng.usize_below(6))
+            } else {
+                (18 + rng.usize_below(6), 18 + rng.usize_below(6))
+            };
+            let mut img = BoolImage::blank();
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    img.set(bx + dx, by + dy, true);
+                }
+            }
+            split.push((img, label));
+        }
+        split
+    }
+
+    #[test]
+    fn learns_two_blob_problem() {
+        let params = Params {
+            clauses: 16,
+            t: 15,
+            s: 4.0,
+            ..Params::asic()
+        };
+        let mut tr = Trainer::new(params, 42);
+        let split = two_blob_problem();
+        for e in 0..6 {
+            tr.epoch(&split, e);
+        }
+        let model = tr.export();
+        let acc = Engine::new().accuracy(&model, &split);
+        assert!(acc > 0.95, "two-blob accuracy {acc}");
+    }
+
+    #[test]
+    fn learns_synth_digit_pair() {
+        // Binary sub-problem of the synthetic digits (0 vs 1) — fast smoke
+        // test that end-to-end learning works on rendered data.
+        let params = Params {
+            clauses: 20,
+            t: 20,
+            s: 6.0,
+            ..Params::asic()
+        };
+        let d = SynthFamily::Digits.generate(300, 200, 9);
+        let train: Vec<_> = booleanize_split(&d.train, d.booleanizer)
+            .into_iter()
+            .filter(|(_, l)| *l < 2)
+            .collect();
+        let test: Vec<_> = booleanize_split(&d.test, d.booleanizer)
+            .into_iter()
+            .filter(|(_, l)| *l < 2)
+            .collect();
+        let mut tr = Trainer::new(params, 7);
+        for e in 0..6 {
+            tr.epoch(&train, e);
+        }
+        let acc = Engine::new().accuracy(&tr.export(), &test);
+        assert!(acc > 0.85, "digit 0-vs-1 accuracy {acc}");
+    }
+
+    #[test]
+    fn weights_fit_i8_after_export() {
+        let params = Params {
+            clauses: 8,
+            t: 10,
+            s: 3.0,
+            ..Params::asic()
+        };
+        let mut tr = Trainer::new(params, 3);
+        let split = two_blob_problem();
+        for e in 0..10 {
+            tr.epoch(&split, e);
+        }
+        let m = tr.export();
+        for i in 0..m.params.classes {
+            for j in 0..m.params.clauses {
+                let w = m.weight(i, j) as i32;
+                assert!((i8::MIN as i32..=i8::MAX as i32).contains(&w));
+            }
+        }
+    }
+
+    #[test]
+    fn literal_budget_is_respected() {
+        let params = Params {
+            clauses: 8,
+            t: 10,
+            s: 3.0,
+            literal_budget: Some(6),
+            ..Params::asic()
+        };
+        let mut tr = Trainer::new(params, 11);
+        let split = two_blob_problem();
+        for e in 0..8 {
+            tr.epoch(&split, e);
+        }
+        let m = tr.export();
+        assert!(
+            m.max_clause_size() <= 6,
+            "budget violated: max clause size {}",
+            m.max_clause_size()
+        );
+        // Should still learn the trivial problem.
+        let acc = Engine::new().accuracy(&m, &split);
+        assert!(acc > 0.9, "budgeted accuracy {acc}");
+    }
+
+    #[test]
+    fn model_mirror_stays_in_sync_with_teams() {
+        let params = Params {
+            clauses: 4,
+            t: 8,
+            s: 3.0,
+            ..Params::asic()
+        };
+        let mut tr = Trainer::new(params, 13);
+        let split = two_blob_problem();
+        tr.epoch(&split, 0);
+        for j in 0..tr.params.clauses {
+            for k in 0..NUM_LITERALS {
+                assert_eq!(
+                    tr.teams[j].includes(k),
+                    tr.model.include(j).get(k),
+                    "clause {j} literal {k} out of sync"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn training_is_deterministic_in_seed() {
+        let params = Params {
+            clauses: 8,
+            t: 10,
+            s: 3.0,
+            ..Params::asic()
+        };
+        let split = two_blob_problem();
+        let run = |seed| {
+            let mut tr = Trainer::new(params.clone(), seed);
+            for e in 0..2 {
+                tr.epoch(&split, e);
+            }
+            tr.export()
+        };
+        let a = run(21);
+        let b = run(21);
+        assert!(a == b, "same seed must give identical models");
+    }
+}

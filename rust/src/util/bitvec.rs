@@ -1,0 +1,283 @@
+//! Fixed-width bit vectors packed into `u64` words.
+//!
+//! The inference hot path evaluates 128 clauses × 272 literals per patch;
+//! packing literals and include masks into `u64` lanes turns the per-clause
+//! AND-plane of the chip into a handful of word operations:
+//!
+//! `clause_violated = OR_w (include[w] & !literals[w])` over ⌈272/64⌉ = 5 words.
+
+/// A packed bit vector with a fixed bit length.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec[{}; ", self.len)?;
+        for i in 0..self.len.min(64) {
+            write!(f, "{}", u8::from(self.get(i)))?;
+        }
+        if self.len > 64 {
+            write!(f, "…")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl BitVec {
+    /// All-zeros vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// All-ones vector of `len` bits (tail bits beyond `len` stay zero).
+    pub fn ones(len: usize) -> Self {
+        let mut v = Self {
+            words: vec![!0u64; len.div_ceil(64)],
+            len,
+        };
+        v.mask_tail();
+        v
+    }
+
+    /// Build from a `bool` slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Build from bytes, LSB-first within each byte (the model-file packing).
+    pub fn from_bytes_lsb(bytes: &[u8], len: usize) -> Self {
+        assert!(len <= bytes.len() * 8, "len {len} exceeds {} bytes", bytes.len());
+        let mut v = Self::zeros(len);
+        for i in 0..len {
+            if (bytes[i / 8] >> (i % 8)) & 1 == 1 {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Serialize to bytes, LSB-first within each byte.
+    pub fn to_bytes_lsb(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.len.div_ceil(8)];
+        for i in 0..self.len {
+            if self.get(i) {
+                out[i / 8] |= 1 << (i % 8);
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, val: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        if val {
+            *w |= 1 << (i % 64);
+        } else {
+            *w &= !(1 << (i % 64));
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True if no bit is set.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// `self & !other` is non-zero — i.e. some bit set here is clear there.
+    /// This is the clause-violation test: `include & !literals != 0`.
+    #[inline]
+    pub fn and_not_any(&self, other: &BitVec) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .any(|(&a, &b)| a & !b != 0)
+    }
+
+    /// In-place OR.
+    pub fn or_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// In-place AND.
+    pub fn and_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// Bitwise NOT within `len` (tail stays zero).
+    pub fn not(&self) -> BitVec {
+        let mut out = self.clone();
+        for w in &mut out.words {
+            *w = !*w;
+        }
+        out.mask_tail();
+        out
+    }
+
+    /// Hamming distance to another vector of the same length.
+    pub fn hamming(&self, other: &BitVec) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Iterate indices of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Clear bits at and above `len` so whole-word ops stay exact.
+    fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(272);
+        for i in (0..272).step_by(7) {
+            v.set(i, true);
+        }
+        for i in 0..272 {
+            assert_eq!(v.get(i), i % 7 == 0, "bit {i}");
+        }
+        assert_eq!(v.count_ones(), (0..272).step_by(7).count());
+    }
+
+    #[test]
+    fn ones_masks_tail() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+        assert_eq!(v.words()[1] >> 6, 0, "tail bits must be zero");
+    }
+
+    #[test]
+    fn bytes_roundtrip_lsb() {
+        let bits: Vec<bool> = (0..131).map(|i| (i * 13) % 5 == 0).collect();
+        let v = BitVec::from_bools(&bits);
+        let bytes = v.to_bytes_lsb();
+        let w = BitVec::from_bytes_lsb(&bytes, 131);
+        assert_eq!(v, w);
+    }
+
+    #[test]
+    fn and_not_any_is_clause_violation() {
+        // include ⊆ literals → no violation.
+        let lits = BitVec::from_bools(&[true, true, false, true, false]);
+        let inc_ok = BitVec::from_bools(&[true, false, false, true, false]);
+        let inc_bad = BitVec::from_bools(&[true, false, true, false, false]);
+        assert!(!inc_ok.and_not_any(&lits));
+        assert!(inc_bad.and_not_any(&lits));
+    }
+
+    #[test]
+    fn or_and_not_ops() {
+        let a = BitVec::from_bools(&[true, false, true, false]);
+        let b = BitVec::from_bools(&[false, false, true, true]);
+        let mut o = a.clone();
+        o.or_assign(&b);
+        assert_eq!(o, BitVec::from_bools(&[true, false, true, true]));
+        let mut n = a.clone();
+        n.and_assign(&b);
+        assert_eq!(n, BitVec::from_bools(&[false, false, true, false]));
+        let inv = a.not();
+        assert_eq!(inv, BitVec::from_bools(&[false, true, false, true]));
+    }
+
+    #[test]
+    fn iter_ones_matches_get() {
+        let bits: Vec<bool> = (0..200).map(|i| i % 11 == 3).collect();
+        let v = BitVec::from_bools(&bits);
+        let idx: Vec<usize> = v.iter_ones().collect();
+        let expect: Vec<usize> = (0..200).filter(|i| i % 11 == 3).collect();
+        assert_eq!(idx, expect);
+    }
+
+    #[test]
+    fn hamming_distance() {
+        let a = BitVec::from_bools(&[true, false, true, false, true]);
+        let b = BitVec::from_bools(&[true, true, false, false, true]);
+        assert_eq!(a.hamming(&b), 2);
+    }
+
+    #[test]
+    fn empty_and_zero_checks() {
+        let v = BitVec::zeros(128);
+        assert!(v.is_zero());
+        assert!(!v.is_empty());
+        let e = BitVec::zeros(0);
+        assert!(e.is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities (PRNG, bit vectors, stats, JSON, tables,
+//! property tests). The build is fully offline, so these substrates are
+//! implemented here rather than pulled from crates.io.
+
+pub mod bitvec;
+pub mod json;
+pub mod prng;
+pub mod quick;
+pub mod stats;
+pub mod table;
+
+pub use bitvec::BitVec;
+pub use json::Json;
+pub use prng::{Lfsr16, SplitMix64, Xoshiro256ss};
+pub use stats::{Summary, Welford};
+pub use table::Table;

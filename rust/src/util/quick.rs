@@ -1,0 +1,172 @@
+//! Tiny property-based testing framework (proptest is not vendored).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random source with
+//! shape-drawing helpers). [`check`] runs it for N cases; on failure it
+//! retries with the same case index so the failing seed is printed and the
+//! run is reproducible via `QUICK_SEED`.
+
+use super::prng::Xoshiro256ss;
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    rng: Xoshiro256ss,
+    /// Size hint grows with the case index, like proptest/quickcheck.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self {
+            rng: Xoshiro256ss::new(seed),
+            size,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256ss {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        lo + self.rng.usize_below(hi_incl - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi_incl: i64) -> i64 {
+        lo + self.rng.below((hi_incl - lo + 1) as u32) as i64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// Vec of random length in [0, max_len] with elements from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len.min(self.size.max(1)));
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Vec of exactly `len` elements.
+    pub fn vec_exact<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Random bool slice of exactly `len` bits with density `p`.
+    pub fn bits(&mut self, len: usize, p: f64) -> Vec<bool> {
+        (0..len).map(|_| self.rng.chance(p)).collect()
+    }
+}
+
+/// Result of a property: Ok, or an explanation of the violated invariant.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `cases` random cases. Panics with the failing seed and
+/// message on the first violation. Override the base seed with `QUICK_SEED`.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let base_seed = std::env::var("QUICK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0_FFEE);
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen::new(seed, 4 + case / 2);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}, rerun with QUICK_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Equality assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("trivial", 50, |g| {
+            ran += 1;
+            let v = g.usize_in(0, 10);
+            prop_assert!(v <= 10);
+            Ok(())
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            let v = g.usize_in(0, 100);
+            prop_assert!(v > 100, "v={v} not > 100");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bits_respects_density_roughly() {
+        check("density", 5, |g| {
+            let bits = g.bits(2000, 0.3);
+            let ones = bits.iter().filter(|&&b| b).count();
+            prop_assert!(
+                (400..=800).contains(&ones),
+                "ones={ones} far from 600"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vec_len_bounded() {
+        check("vec-len", 20, |g| {
+            let v = g.vec(16, |g| g.bool());
+            prop_assert!(v.len() <= 16);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Markdown/ASCII table renderer used by the bench harness to print the
+//! paper's tables with aligned columns.
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as a GitHub-flavored markdown table with aligned pipes.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (i, cell) in cells.iter().enumerate() {
+                let pad = widths[i] - cell.chars().count();
+                line.push(' ');
+                line.push_str(cell);
+                line.push_str(&" ".repeat(pad + 1));
+                line.push('|');
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        let _ = ncol;
+        out
+    }
+}
+
+/// Format helpers for measurement values.
+pub fn si(value: f64, unit: &str) -> String {
+    let (scaled, prefix) = si_scale(value);
+    format!("{scaled:.3} {prefix}{unit}")
+}
+
+pub fn si_scale(value: f64) -> (f64, &'static str) {
+    let a = value.abs();
+    if a == 0.0 {
+        (0.0, "")
+    } else if a >= 1e9 {
+        (value / 1e9, "G")
+    } else if a >= 1e6 {
+        (value / 1e6, "M")
+    } else if a >= 1e3 {
+        (value / 1e3, "k")
+    } else if a >= 1.0 {
+        (value, "")
+    } else if a >= 1e-3 {
+        (value * 1e3, "m")
+    } else if a >= 1e-6 {
+        (value * 1e6, "µ")
+    } else if a >= 1e-9 {
+        (value * 1e9, "n")
+    } else {
+        (value * 1e12, "p")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(&["Parameter", "Value"]);
+        t.row_str(&["Technology", "65 nm CMOS"]);
+        t.row_str(&["EPC", "8.6 nJ"]);
+        let md = t.to_markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("| Parameter"));
+        assert!(lines[1].starts_with("|---"));
+        // All lines the same width.
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si(8.6e-9, "J"), "8.600 nJ");
+        assert_eq!(si(60_300.0, "img/s"), "60.300 kimg/s");
+        assert_eq!(si(1.15e-3, "W"), "1.150 mW");
+        assert_eq!(si(27.8e6, "Hz"), "27.800 MHz");
+        assert_eq!(si(0.0, "x"), "0.000 x");
+    }
+}

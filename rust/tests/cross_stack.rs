@@ -1,0 +1,171 @@
+//! Cross-stack integration: trainer → model file → AXI load → ASIC
+//! simulator ≡ native engine ≡ PJRT artifact, end to end — the repository
+//! version of the paper's §V claim that silicon results match the SW model
+//! exactly.
+
+use convcotm::asic::{axi, Accelerator, ChipConfig};
+use convcotm::coordinator::{BatchConfig, Coordinator, MirrorBackend, NativeBackend};
+use convcotm::data::{booleanize_split, SynthFamily};
+use convcotm::model_io;
+use convcotm::runtime::{ModelInputs, Runtime};
+use convcotm::tm::{Engine, Params, Trainer};
+use std::path::PathBuf;
+
+fn trained_fixture() -> (convcotm::tm::Model, Vec<(convcotm::data::BoolImage, u8)>) {
+    let dataset = SynthFamily::Digits.generate(300, 80, 99);
+    let train = booleanize_split(&dataset.train, dataset.booleanizer);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    let mut trainer = Trainer::new(Params::asic(), 99);
+    for e in 0..3 {
+        trainer.epoch(&train, e);
+    }
+    (trainer.export(), test)
+}
+
+#[test]
+fn train_save_load_axi_classify_roundtrip() {
+    let (model, test) = trained_fixture();
+
+    // Save → load through the on-disk container.
+    let path = std::env::temp_dir().join("cross_stack_model.cctm");
+    model_io::save_file(&model, &path).unwrap();
+    let loaded = model_io::load_file(Params::asic(), &path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // Push through the AXI load-model framing into the accelerator.
+    let wire = model_io::to_wire(&loaded);
+    let beats = axi::frame_model(&wire);
+    assert_eq!(beats.len(), 5_632);
+    let payload: Vec<u8> = beats.iter().map(|b| b.data).collect();
+    let mut acc = Accelerator::new(Params::asic(), ChipConfig::default());
+    acc.load_model_wire(&payload).unwrap();
+
+    // Classify through the AXI image framing too.
+    let engine = Engine::new();
+    let mut deframer = axi::ImageDeframer::new();
+    for (img, label) in test.iter().take(20) {
+        // Frame, deframe (the accelerator's receive path), classify.
+        let mut received = None;
+        for beat in axi::frame_image(img, Some(*label)) {
+            if let Some(r) = deframer.push(beat).unwrap() {
+                received = Some(r);
+            }
+        }
+        let (rx_img, rx_label) = received.unwrap();
+        assert_eq!(&rx_img, img);
+        assert_eq!(rx_label, Some(*label));
+        let sim = acc.classify(&rx_img, rx_label, true).unwrap();
+        let sw = engine.classify(&model, img);
+        assert_eq!(sim.prediction, sw.prediction);
+        assert_eq!(sim.class_sums, sw.class_sums);
+        // Result byte framing round-trips.
+        let byte = axi::encode_result(sim.prediction, sim.label_echo);
+        assert_eq!(axi::decode_result(byte), (sim.prediction, Some(*label)));
+    }
+}
+
+#[test]
+fn trained_model_matches_pjrt_artifact() {
+    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifact_dir.join("convcotm_b1.hlo.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (model, test) = trained_fixture();
+    let mut rt = Runtime::new(&artifact_dir).unwrap();
+    let graph = rt.load("convcotm_b1", 1).unwrap();
+    let inputs = ModelInputs::from_model(&model);
+    let engine = Engine::new();
+    for (img, _) in test.iter().take(12) {
+        let out = &graph.run(&[img], &inputs).unwrap()[0];
+        let sw = engine.classify(&model, img);
+        assert_eq!(out.prediction, sw.prediction);
+        let sums: Vec<i32> = out.class_sums.iter().map(|&x| x as i32).collect();
+        assert_eq!(sums, sw.class_sums);
+    }
+}
+
+#[test]
+fn coordinator_mirror_over_trained_model() {
+    let (model, test) = trained_fixture();
+    let m1 = model.clone();
+    let m2 = model;
+    let coord = Coordinator::start_with(
+        move || {
+            MirrorBackend::new(
+                Box::new(NativeBackend::new(m1.clone())),
+                Box::new(convcotm::coordinator::AsicBackend::new(
+                    &m2,
+                    ChipConfig::default(),
+                )),
+            )
+        },
+        BatchConfig::default(),
+    );
+    for (img, _) in test.iter().take(30) {
+        coord.classify(img.clone()).unwrap();
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.errors, 0, "mirror must not diverge");
+    assert_eq!(snap.requests, 30);
+}
+
+#[test]
+fn csrf_and_gating_do_not_change_results() {
+    let (model, test) = trained_fixture();
+    let configs = [
+        ChipConfig { csrf: true, clock_gating: true },
+        ChipConfig { csrf: false, clock_gating: true },
+        ChipConfig { csrf: true, clock_gating: false },
+        ChipConfig { csrf: false, clock_gating: false },
+    ];
+    let engine = Engine::new();
+    for cfg in configs {
+        let mut acc = Accelerator::new(Params::asic(), cfg);
+        acc.load_model(&model);
+        for (img, _) in test.iter().take(10) {
+            let sim = acc.classify(img, None, true).unwrap();
+            let sw = engine.classify(&model, img);
+            assert_eq!(sim.prediction, sw.prediction, "{cfg:?}");
+            assert_eq!(sim.class_sums, sw.class_sums, "{cfg:?}");
+        }
+    }
+}
+
+#[test]
+fn literal_budget_pipeline_end_to_end() {
+    // §VI-A variant: budget-constrained training → budgeted encoding →
+    // bit-exact agreement with the dense model on the test set.
+    let dataset = SynthFamily::Digits.generate(600, 60, 5);
+    let train = booleanize_split(&dataset.train, dataset.booleanizer);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    // Lower specificity (s=4) suits budget-constrained clauses: shorter
+    // patterns form before the include cap binds ([42] trains similarly).
+    let params = Params {
+        literal_budget: Some(10),
+        s: 4.0,
+        ..Params::asic()
+    };
+    let mut trainer = Trainer::new(params, 5);
+    for e in 0..6 {
+        trainer.epoch(&train, e);
+    }
+    let model = trainer.export();
+    assert!(model.max_clause_size() <= 10);
+    let budgeted = convcotm::tm::budget::BudgetedModel::from_model(&model, 10).unwrap();
+    // Budgeted TA storage is 90 bits/clause as §VI-A computes.
+    assert_eq!(budgeted.ta_action_bits(), 128 * 90);
+    let engine = Engine::new();
+    for (img, _) in test.iter().take(15) {
+        let sw = engine.classify(&model, img);
+        // Evaluate the budgeted clauses directly on each patch and OR.
+        let patches = convcotm::data::patches::all_patch_literals(img);
+        for (j, clause) in budgeted.clauses.iter().enumerate() {
+            let fired = patches.iter().any(|lits| clause.fires(lits));
+            assert_eq!(fired, sw.clauses.get(j), "clause {j}");
+        }
+    }
+    // The budgeted model should still classify usefully.
+    let acc = engine.accuracy(&model, &test);
+    assert!(acc > 0.5, "budgeted accuracy {acc}");
+}

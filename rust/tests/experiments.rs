@@ -1,0 +1,173 @@
+//! Experiment-level regression tests: the paper's headline numbers and
+//! qualitative claims, pinned as assertions (the table/figure benches print
+//! the full artifacts; these tests keep them true under refactoring).
+
+use convcotm::asic::{Accelerator, ChipConfig, CycleReport, LATENCY_CYCLES, PERIOD_CYCLES};
+use convcotm::coordinator::SysProc;
+use convcotm::data::{booleanize_split, SynthFamily};
+use convcotm::energy::scaleup::{estimate, paper_specialists, ScaleUpAssumptions};
+use convcotm::energy::scaling::scale_asic;
+use convcotm::energy::{EnergyModel, OperatingPoint, SYSTEM_PERIOD_CYCLES_27M8};
+use convcotm::tm::{Engine, Params, Trainer};
+
+fn reference_report() -> CycleReport {
+    let dataset = SynthFamily::Digits.generate(200, 48, 77);
+    let train = booleanize_split(&dataset.train, dataset.booleanizer);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    let mut trainer = Trainer::new(Params::asic(), 77);
+    for e in 0..3 {
+        trainer.epoch(&train, e);
+    }
+    let model = trainer.export();
+    let mut acc = Accelerator::new(Params::asic(), ChipConfig::default());
+    acc.load_model(&model);
+    let mut total = CycleReport::default();
+    for (i, (img, _)) in test.iter().enumerate() {
+        total.accumulate(&acc.classify(img, None, i > 0).unwrap().report);
+    }
+    let n = test.len() as u64;
+    let mut avg = total;
+    avg.phases = convcotm::asic::fsm::PhaseCycles::standard();
+    avg.phases.transfer = 0;
+    for v in [
+        &mut avg.window_dff_clocks,
+        &mut avg.clause_dff_clocks,
+        &mut avg.sum_pipe_dff_clocks,
+        &mut avg.image_buffer_dff_clocks,
+        &mut avg.control_dff_clocks,
+        &mut avg.model_dff_clocks,
+        &mut avg.clause_comb_toggles,
+        &mut avg.clause_evaluations,
+        &mut avg.adder_ops,
+    ] {
+        *v /= n;
+    }
+    avg
+}
+
+#[test]
+fn headline_epc_8_6_nj() {
+    // Table II / abstract: 8.6 nJ per classification at 0.82 V, 27.8 MHz.
+    let em = EnergyModel::default();
+    let r = reference_report();
+    let epc = em.epc(&r, OperatingPoint::FAST_0V82, SYSTEM_PERIOD_CYCLES_27M8);
+    assert!(
+        (epc - 8.6e-9).abs() / 8.6e-9 < 0.12,
+        "EPC {:.2} nJ vs paper 8.6 nJ",
+        epc * 1e9
+    );
+}
+
+#[test]
+fn headline_rate_and_latency() {
+    let sp = SysProc;
+    assert!((sp.classification_rate(27.8e6) - 60.3e3).abs() < 300.0);
+    assert!((sp.single_image_latency(27.8e6) - 25.4e-6).abs() < 0.3e-6);
+    assert_eq!(PERIOD_CYCLES, 372);
+    assert_eq!(LATENCY_CYCLES, 471);
+}
+
+#[test]
+fn accuracy_ordering_matches_paper() {
+    // Paper: MNIST (97.42) > FMNIST (84.54) > KMNIST (82.55). The synthetic
+    // substitutes must reproduce the ordering (easiest → hardest).
+    let mut accs = Vec::new();
+    for family in [SynthFamily::Digits, SynthFamily::Fashion, SynthFamily::Kana] {
+        let dataset = family.generate(800, 120, 31);
+        let train = booleanize_split(&dataset.train, dataset.booleanizer);
+        let test = booleanize_split(&dataset.test, dataset.booleanizer);
+        let mut trainer = Trainer::new(Params::asic(), 31);
+        for e in 0..6 {
+            trainer.epoch(&train, e);
+        }
+        accs.push(Engine::new().accuracy(&trainer.export(), &test));
+    }
+    assert!(
+        accs[0] > accs[2],
+        "digits ({:.3}) must beat kana ({:.3})",
+        accs[0],
+        accs[2]
+    );
+    // At this reduced training budget the bar is lower than the standard
+    // fixture (which reaches 98.8/93.6/91.0% — see EXPERIMENTS.md); what
+    // matters here is that every family is learnable and ordered.
+    assert!(accs.iter().all(|&a| a > 0.5), "all families learnable: {accs:?}");
+}
+
+#[test]
+fn model_sparsity_is_high_like_paper() {
+    // §VI-A: 88% of TA actions are exclude in the paper's MNIST model.
+    let dataset = SynthFamily::Digits.generate(600, 0, 13);
+    let train = booleanize_split(&dataset.train, dataset.booleanizer);
+    let mut trainer = Trainer::new(Params::asic(), 13);
+    for e in 0..5 {
+        trainer.epoch(&train, e);
+    }
+    let frac = trainer.export().exclude_fraction();
+    assert!(
+        frac > 0.70,
+        "trained TM models are highly sparse (paper: 88%), got {frac:.3}"
+    );
+}
+
+#[test]
+fn section_6a_28nm_estimates() {
+    let est = scale_asic(&Params::asic(), 10, 0.52e-3, 60.3e3);
+    assert!((est.area_target_mm2 - 0.27).abs() < 0.02);
+    assert!((est.epc_j - 4.3e-9).abs() < 0.3e-9);
+}
+
+#[test]
+fn table3_scaleup_estimates() {
+    let est = estimate(&paper_specialists(), &ScaleUpAssumptions::default());
+    assert!((est.rate_fps - 3440.0).abs() / 3440.0 < 0.03);
+    assert!((est.epc_65nm_j - 0.9e-6).abs() < 0.05e-6);
+    assert_eq!(est.total_model_bytes, 130_000);
+}
+
+#[test]
+fn energy_claims_gating_and_csrf() {
+    // §V: gating ≈60%, CSRF <1%.
+    let em = EnergyModel::default();
+    let dataset = SynthFamily::Digits.generate(200, 32, 7);
+    let train = booleanize_split(&dataset.train, dataset.booleanizer);
+    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    let mut trainer = Trainer::new(Params::asic(), 7);
+    for e in 0..3 {
+        trainer.epoch(&train, e);
+    }
+    let model = trainer.export();
+    let run = |cfg: ChipConfig| {
+        let mut acc = Accelerator::new(Params::asic(), cfg);
+        acc.load_model(&model);
+        let mut total = CycleReport::default();
+        for (i, (img, _)) in test.iter().enumerate() {
+            total.accumulate(&acc.classify(img, None, i > 0).unwrap().report);
+        }
+        let n = test.len() as u64;
+        let mut avg = total;
+        avg.phases = convcotm::asic::fsm::PhaseCycles::standard();
+        avg.phases.transfer = 0;
+        for v in [
+            &mut avg.window_dff_clocks,
+            &mut avg.clause_dff_clocks,
+            &mut avg.sum_pipe_dff_clocks,
+            &mut avg.image_buffer_dff_clocks,
+            &mut avg.control_dff_clocks,
+            &mut avg.model_dff_clocks,
+            &mut avg.clause_comb_toggles,
+            &mut avg.clause_evaluations,
+            &mut avg.adder_ops,
+        ] {
+            *v /= n;
+        }
+        em.power(&avg, OperatingPoint::FAST_1V2, SYSTEM_PERIOD_CYCLES_27M8)
+    };
+    let base = run(ChipConfig::default());
+    let ungated = run(ChipConfig { csrf: true, clock_gating: false });
+    let no_csrf = run(ChipConfig { csrf: false, clock_gating: true });
+    let gating_saving = 1.0 - base / ungated;
+    let csrf_saving = 1.0 - base / no_csrf;
+    assert!((0.50..0.70).contains(&gating_saving), "gating saving {gating_saving:.3}");
+    assert!((0.0..0.01).contains(&csrf_saving), "csrf saving {csrf_saving:.4}");
+}
