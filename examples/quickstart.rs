@@ -7,9 +7,7 @@
 use convcotm::asic::{Accelerator, ChipConfig};
 use convcotm::data::{booleanize_split, SynthFamily};
 use convcotm::model_io;
-use convcotm::runtime::{ModelInputs, Runtime};
 use convcotm::tm::{Engine, Params, Trainer};
-use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     // 1. Data: procedural MNIST-like digits (no downloads needed).
@@ -54,24 +52,32 @@ fn main() -> anyhow::Result<()> {
     println!("accuracy: native {:.2}%  asic-sim {:.2}%", sw_acc * 100.0, asic_acc * 100.0);
     assert_eq!(sw_acc, asic_acc, "§V: ASIC matches SW exactly");
 
-    // 5. And through the AOT-compiled JAX/Pallas artifact, if present.
-    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifact_dir.join("convcotm_b1.hlo.txt").exists() {
-        let mut rt = Runtime::new(&artifact_dir)?;
-        let graph = rt.load("convcotm_b1", 1)?;
-        let inputs = ModelInputs::from_model(&model);
-        let mut agree = 0;
-        for (img, _) in test.iter().take(25) {
-            let out = &graph.run(&[img], &inputs)?[0];
-            if out.prediction == engine.classify(&model, img).prediction {
-                agree += 1;
+    // 5. And through the AOT-compiled JAX/Pallas artifact, if present
+    //    (requires building with `--features pjrt`).
+    #[cfg(feature = "pjrt")]
+    {
+        use convcotm::runtime::{ModelInputs, Runtime};
+        let artifact_dir =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifact_dir.join("convcotm_b1.hlo.txt").exists() {
+            let mut rt = Runtime::new(&artifact_dir)?;
+            let graph = rt.load("convcotm_b1", 1)?;
+            let inputs = ModelInputs::from_model(&model);
+            let mut agree = 0;
+            for (img, _) in test.iter().take(25) {
+                let out = &graph.run(&[img], &inputs)?[0];
+                if out.prediction == engine.classify(&model, img).prediction {
+                    agree += 1;
+                }
             }
+            println!("PJRT artifact agreement with native engine: {agree}/25");
+            assert_eq!(agree, 25);
+        } else {
+            println!("(PJRT check skipped — run `make artifacts`)");
         }
-        println!("PJRT artifact agreement with native engine: {agree}/25");
-        assert_eq!(agree, 25);
-    } else {
-        println!("(PJRT check skipped — run `make artifacts`)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(PJRT check skipped — build with --features pjrt)");
 
     println!("quickstart OK");
     Ok(())

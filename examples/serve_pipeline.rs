@@ -7,13 +7,12 @@
 
 use convcotm::asic::ChipConfig;
 use convcotm::coordinator::{
-    AsicBackend, BatchConfig, Coordinator, MirrorBackend, NativeBackend, PjrtBackend, SysProc,
+    AsicBackend, BatchConfig, Coordinator, MirrorBackend, NativeBackend, SysProc,
 };
 use convcotm::data::{booleanize_split, SynthFamily};
 use convcotm::tm::{Params, Trainer};
 use convcotm::util::Table;
-use std::path::PathBuf;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     // Train a model for the service.
@@ -77,23 +76,29 @@ fn main() -> anyhow::Result<()> {
         sp.classification_rate(27.8e6) / 1e3,
     );
 
-    // --- PJRT artifact service (thread-affine: factory entry point).
-    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifact_dir.join("convcotm_b16.hlo.txt").exists() {
-        let m4 = model.clone();
-        let dir = artifact_dir.clone();
-        run_backend(
-            "pjrt (batch 16)",
-            &mut t,
-            &images[..64.min(images.len())],
-            Coordinator::start_with(
-                move || PjrtBackend::new(&dir, "convcotm_b16", 16, &m4).unwrap(),
-                BatchConfig {
-                    max_batch: 16,
-                    max_wait: Duration::from_micros(500),
-                },
-            ),
-        );
+    // --- PJRT artifact service (thread-affine: factory entry point;
+    // requires building with `--features pjrt`).
+    #[cfg(feature = "pjrt")]
+    {
+        use convcotm::coordinator::PjrtBackend;
+        let artifact_dir =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifact_dir.join("convcotm_b16.hlo.txt").exists() {
+            let m4 = model.clone();
+            let dir = artifact_dir.clone();
+            run_backend(
+                "pjrt (batch 16)",
+                &mut t,
+                &images[..64.min(images.len())],
+                Coordinator::start_with(
+                    move || PjrtBackend::new(&dir, "convcotm_b16", 16, &m4).unwrap(),
+                    BatchConfig {
+                        max_batch: 16,
+                        max_wait: std::time::Duration::from_micros(500),
+                    },
+                ),
+            );
+        }
     }
 
     // --- Mirrored cross-check: native vs ASIC sim on the same traffic.

@@ -9,7 +9,17 @@ Features (o = 136):
   [100..118) y-position thermometer, 18 bits LSB-first: bit t = (y >= t+1)
   [118..136) x-position thermometer, same encoding
 Literals (2o = 272): features then negations.
+
+Note: the Rust side is now **runtime-parameterized** — `data::Geometry
+{img_side, window, stride}` carries these dimensions through the data,
+tm, asic and serving layers, and `Geometry::asic()` reproduces the
+module constants below (DESIGN.md §2). The AOT-compiled JAX/Pallas
+artifacts in this package remain fixed to the ASIC geometry; the
+`Geometry` dataclass here mirrors the Rust derivations for tooling that
+needs other shapes.
 """
+
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -23,6 +33,39 @@ NUM_LITERALS = 2 * NUM_FEATURES  # 272
 
 NUM_CLAUSES = 128
 NUM_CLASSES = 10
+
+
+@dataclass(frozen=True)
+class Geometry:
+    """Runtime patch geometry, mirroring Rust `data::Geometry`.
+
+    ``Geometry()`` is the ASIC configuration; derived quantities follow
+    DESIGN.md §2 (positions = 1 + (side - window) // stride, etc.).
+    """
+
+    img_side: int = IMG_SIDE
+    window: int = WINDOW
+    stride: int = 1
+
+    @property
+    def positions(self) -> int:
+        return (self.img_side - self.window) // self.stride + 1
+
+    @property
+    def num_patches(self) -> int:
+        return self.positions * self.positions
+
+    @property
+    def pos_bits(self) -> int:
+        return self.positions - 1
+
+    @property
+    def num_features(self) -> int:
+        return self.window * self.window + 2 * self.pos_bits
+
+    @property
+    def num_literals(self) -> int:
+        return 2 * self.num_features
 
 
 def patch_gather_indices() -> np.ndarray:

@@ -9,13 +9,11 @@
 
 use convcotm::asic::{Accelerator, ChipConfig};
 use convcotm::bench_harness::{fmt_k, section, FixtureSpec};
-use convcotm::coordinator::{BatchConfig, Coordinator, NativeBackend, PjrtBackend};
+use convcotm::coordinator::{Backend, BatchConfig, Coordinator, NativeBackend};
 use convcotm::data::SynthFamily;
-use convcotm::runtime::ModelInputs;
 use convcotm::tm::{Engine, Trainer};
 use convcotm::util::stats::Summary;
 use convcotm::util::Table;
-use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 fn throughput(label: &str, t: &mut Table, images_per_iter: usize, mut f: impl FnMut()) -> f64 {
@@ -87,9 +85,38 @@ fn main() {
         format!("{:.2} M sim-cycles/s", sim_cycles_rate / 1e6),
     ]);
 
+    // Batch classification through the NativeBackend: serial vs parallel
+    // over the batch (the coordinator's multi-core path).
+    {
+        let refs: Vec<&convcotm::data::BoolImage> = images.iter().collect();
+        let mut serial = NativeBackend::with_threads(model.clone(), 1);
+        throughput(
+            &format!("NativeBackend batch={} (1 thread)", refs.len()),
+            &mut t,
+            refs.len(),
+            || {
+                std::hint::black_box(serial.classify(&refs).unwrap());
+            },
+        );
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut parallel = NativeBackend::with_threads(model.clone(), cores);
+        throughput(
+            &format!("NativeBackend batch={} ({cores} threads)", refs.len()),
+            &mut t,
+            refs.len(),
+            || {
+                std::hint::black_box(parallel.classify(&refs).unwrap());
+            },
+        );
+    }
+
     // PJRT artifacts.
-    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    #[cfg(feature = "pjrt")]
+    let artifact_dir =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    #[cfg(feature = "pjrt")]
     if artifact_dir.join("convcotm_b1.hlo.txt").exists() {
+        use convcotm::runtime::ModelInputs;
         let mi = ModelInputs::from_model(&model);
         let mut rt = convcotm::runtime::Runtime::new(&artifact_dir).unwrap();
         {
@@ -156,7 +183,9 @@ fn main() {
     );
 
     // PJRT coordinator end-to-end (thread-affine backend via factory).
+    #[cfg(feature = "pjrt")]
     if artifact_dir.join("convcotm_b16.hlo.txt").exists() {
+        use convcotm::coordinator::PjrtBackend;
         let m2 = model.clone();
         let dir2 = artifact_dir.clone();
         let coord = Coordinator::start_with(

@@ -2,19 +2,21 @@
 //! inspired channel between the system processor and the accelerator.
 //!
 //! Two framings exist:
-//! - **load-model mode**: 5 632 model bytes (TA actions then weights);
-//! - **inference mode**: 98 image bytes + 1 label byte per sample
-//!   (99 transfer cycles — the measured component of the 471-cycle
-//!   single-image latency).
+//! - **load-model mode**: the model payload bytes (TA actions then
+//!   weights — 5 632 bytes in the ASIC configuration);
+//! - **inference mode**: the image wire bytes + 1 label byte per sample
+//!   (98 + 1 = 99 transfer cycles in the ASIC geometry — the measured
+//!   component of the 471-cycle single-image latency).
 //!
 //! The model is transaction-accurate: one byte per clock when both `valid`
 //! and `ready` are high, with backpressure (`ready` low while the target
-//! buffer bank is busy).
+//! buffer bank is busy). Frame lengths follow the runtime [`Geometry`].
 
 use crate::data::boolean::BoolImage;
-use crate::tm::params::MODEL_BYTES;
+use crate::data::Geometry;
 
-/// Image frame length on the wire: 98 data bytes + 1 label byte.
+/// Image frame length on the wire in the default ASIC geometry:
+/// 98 data bytes + 1 label byte.
 pub const IMAGE_FRAME_BYTES: usize = 99;
 
 /// A byte beat on the stream.
@@ -26,7 +28,8 @@ pub struct Beat {
 }
 
 /// Frame an image + optional true label for transfer (label 0xFF = absent;
-/// the chip echoes the label back with the prediction, §IV-A).
+/// the chip echoes the label back with the prediction, §IV-A). The frame
+/// length is the image's wire size + 1, whatever its geometry.
 pub fn frame_image(img: &BoolImage, label: Option<u8>) -> Vec<Beat> {
     let bytes = img.to_wire_bytes();
     let mut beats: Vec<Beat> = bytes.iter().map(|&b| Beat { data: b, last: false }).collect();
@@ -37,9 +40,16 @@ pub fn frame_image(img: &BoolImage, label: Option<u8>) -> Vec<Beat> {
     beats
 }
 
-/// Frame a model payload for load-model mode.
-pub fn frame_model(wire: &[u8]) -> Vec<Beat> {
-    assert_eq!(wire.len(), MODEL_BYTES, "model payload must be 5 632 bytes");
+/// Frame a model payload for load-model mode. `expected_len` is the
+/// configuration's wire size (`Params::model_wire_bytes()`, 5 632 bytes on
+/// the ASIC) — a mis-sized payload is caught here, at framing time, not
+/// after it has been streamed into the model registers.
+pub fn frame_model(wire: &[u8], expected_len: usize) -> Vec<Beat> {
+    assert_eq!(
+        wire.len(),
+        expected_len,
+        "model payload must be exactly {expected_len} bytes"
+    );
     wire.iter()
         .enumerate()
         .map(|(i, &b)| Beat {
@@ -49,42 +59,62 @@ pub fn frame_model(wire: &[u8]) -> Vec<Beat> {
         .collect()
 }
 
-/// Receiver-side deframer for image frames.
-#[derive(Default)]
+/// Receiver-side deframer for image frames of one geometry.
 pub struct ImageDeframer {
+    geometry: Geometry,
+    frame_bytes: usize,
     buf: Vec<u8>,
+}
+
+impl Default for ImageDeframer {
+    fn default() -> Self {
+        Self::for_geometry(Geometry::asic())
+    }
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum FrameError {
-    #[error("frame ended early at byte {0} (expected {IMAGE_FRAME_BYTES})")]
-    Short(usize),
+    #[error("frame ended early at byte {got} (expected {expected})")]
+    Short { got: usize, expected: usize },
     #[error("frame overrun: no TLAST by byte {0}")]
     Overrun(usize),
 }
 
 impl ImageDeframer {
+    /// Deframer for the default ASIC geometry (99-byte frames).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Deframer for a runtime geometry.
+    pub fn for_geometry(geometry: Geometry) -> Self {
+        ImageDeframer {
+            geometry,
+            frame_bytes: geometry.frame_bytes(),
+            buf: Vec::new(),
+        }
     }
 
     /// Push one beat; returns the completed (image, label) on TLAST.
     pub fn push(&mut self, beat: Beat) -> Result<Option<(BoolImage, Option<u8>)>, FrameError> {
         self.buf.push(beat.data);
         if beat.last {
-            if self.buf.len() != IMAGE_FRAME_BYTES {
+            if self.buf.len() != self.frame_bytes {
                 let n = self.buf.len();
                 self.buf.clear();
-                return Err(FrameError::Short(n));
+                return Err(FrameError::Short {
+                    got: n,
+                    expected: self.frame_bytes,
+                });
             }
-            let mut img_bytes = [0u8; 98];
-            img_bytes.copy_from_slice(&self.buf[..98]);
-            let label_byte = self.buf[98];
+            let data_bytes = self.frame_bytes - 1;
+            let label_byte = self.buf[data_bytes];
+            let img = BoolImage::from_wire_bytes(&self.buf[..data_bytes], self.geometry.img_side);
             self.buf.clear();
             let label = if label_byte == 0xFF { None } else { Some(label_byte) };
-            return Ok(Some((BoolImage::from_wire_bytes(&img_bytes), label)));
+            return Ok(Some((img, label)));
         }
-        if self.buf.len() >= IMAGE_FRAME_BYTES {
+        if self.buf.len() >= self.frame_bytes {
             let n = self.buf.len();
             self.buf.clear();
             return Err(FrameError::Overrun(n));
@@ -142,6 +172,27 @@ mod tests {
     }
 
     #[test]
+    fn deframe_roundtrip_cifar_geometry() {
+        let g = Geometry::cifar10();
+        let mut rng = Xoshiro256ss::new(4);
+        let img = BoolImage::from_bools(
+            &(0..g.img_pixels()).map(|_| rng.chance(0.4)).collect::<Vec<_>>(),
+        );
+        let beats = frame_image(&img, Some(5));
+        assert_eq!(beats.len(), g.frame_bytes());
+        let mut d = ImageDeframer::for_geometry(g);
+        let mut out = None;
+        for b in beats {
+            if let Some(res) = d.push(b).unwrap() {
+                out = Some(res);
+            }
+        }
+        let (got, label) = out.expect("frame must complete");
+        assert_eq!(got, img);
+        assert_eq!(label, Some(5));
+    }
+
+    #[test]
     fn missing_label_encodes_as_ff() {
         let img = random_image(3);
         let beats = frame_image(&img, None);
@@ -161,7 +212,13 @@ mod tests {
         let mut d = ImageDeframer::new();
         d.push(Beat { data: 1, last: false }).unwrap();
         let err = d.push(Beat { data: 2, last: true }).unwrap_err();
-        assert_eq!(err, FrameError::Short(2));
+        assert_eq!(
+            err,
+            FrameError::Short {
+                got: 2,
+                expected: IMAGE_FRAME_BYTES
+            }
+        );
         // Deframer recovers for the next frame.
         let img = random_image(4);
         let mut out = None;
@@ -188,10 +245,17 @@ mod tests {
 
     #[test]
     fn model_frame_length() {
-        let wire = vec![0u8; MODEL_BYTES];
-        let beats = frame_model(&wire);
-        assert_eq!(beats.len(), MODEL_BYTES);
+        let wire = vec![0u8; crate::tm::params::MODEL_BYTES];
+        let beats = frame_model(&wire, crate::tm::params::MODEL_BYTES);
+        assert_eq!(beats.len(), crate::tm::params::MODEL_BYTES);
         assert!(beats.last().unwrap().last);
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly")]
+    fn model_frame_rejects_mis_sized_payload() {
+        let wire = vec![0u8; 100];
+        frame_model(&wire, crate::tm::params::MODEL_BYTES);
     }
 
     #[test]

@@ -124,10 +124,11 @@ mod tests {
     }
 
     fn run_pass(pool: &mut ClausePool, img: &BoolImage) {
+        let g = crate::data::Geometry::asic();
         pool.reset();
-        for y in 0..patches::POSITIONS {
-            for x in 0..patches::POSITIONS {
-                let lits = patches::patch_literals(img, x, y);
+        for y in 0..g.positions() {
+            for x in 0..g.positions() {
+                let lits = patches::patch_literals(g, img, x, y);
                 pool.clock_patch(&lits);
             }
         }

@@ -13,9 +13,37 @@
 //! (§IV-F), the argmax/result latch, the interrupt cycle and 4 FSM state
 //! transition cycles.
 
+use crate::data::Geometry;
+
 /// Image transfer beats (98 data + 1 label) — §IV-E: "99 clock cycles for
 /// transferring the 98 image bytes and the label byte".
 pub const TRANSFER_CYCLES: usize = 99;
+
+/// Image transfer beats for a geometry: wire bytes + 1 label byte.
+pub fn transfer_cycles(g: Geometry) -> usize {
+    g.frame_bytes()
+}
+
+/// Patch-phase cycles for a geometry: one cycle per patch, plus band-
+/// transition stalls for strided windows. A band transition shifts the
+/// row array `stride` times (one datarow load each, single-port); the
+/// first shift overlaps the transition's patch cycle — as in the stride-1
+/// chip, where transitions are free — leaving `stride − 1` stall cycles
+/// per transition.
+pub fn patch_phase_cycles(g: Geometry) -> usize {
+    g.num_patches() + (g.positions() - 1) * (g.stride - 1)
+}
+
+/// Processing cycles per classification for a geometry (patch phase as
+/// above; the other phase costs are geometry-independent).
+pub fn process_cycles(g: Geometry) -> usize {
+    CLAUSE_RESET_CYCLES
+        + patch_phase_cycles(g)
+        + SUM_CYCLES
+        + ARGMAX_CYCLES
+        + OUTPUT_CYCLES
+        + FSM_OVERHEAD_CYCLES
+}
 
 /// Clause-output register reset (Fig. 4 DFF reset).
 pub const CLAUSE_RESET_CYCLES: usize = 1;
@@ -93,12 +121,19 @@ pub struct PhaseCycles {
 }
 
 impl PhaseCycles {
-    /// Standard single-classification cycle breakdown.
+    /// Standard single-classification cycle breakdown (ASIC geometry).
     pub fn standard() -> Self {
+        Self::for_geometry(Geometry::asic())
+    }
+
+    /// Cycle breakdown for a runtime geometry: one cycle per patch (plus
+    /// strided band-transition stalls, see [`patch_phase_cycles`]), one
+    /// transfer beat per image byte + label.
+    pub fn for_geometry(g: Geometry) -> Self {
         PhaseCycles {
-            transfer: TRANSFER_CYCLES,
+            transfer: transfer_cycles(g),
             clause_reset: CLAUSE_RESET_CYCLES,
-            patches: PATCH_CYCLES,
+            patches: patch_phase_cycles(g),
             class_sum: SUM_CYCLES,
             argmax: ARGMAX_CYCLES,
             output: OUTPUT_CYCLES,
@@ -136,6 +171,33 @@ mod tests {
         let p = PhaseCycles::standard();
         assert_eq!(p.processing(), PROCESS_CYCLES);
         assert_eq!(p.latency(), LATENCY_CYCLES);
+        // The geometry-derived breakdown reproduces the constants exactly.
+        assert_eq!(PhaseCycles::for_geometry(Geometry::asic()), p);
+        assert_eq!(transfer_cycles(Geometry::asic()), TRANSFER_CYCLES);
+        assert_eq!(process_cycles(Geometry::asic()), PROCESS_CYCLES);
+    }
+
+    #[test]
+    fn cifar_geometry_cycle_budget() {
+        // §VI-C shape: 529 patches, 128 wire bytes + label.
+        let g = Geometry::cifar10();
+        let p = PhaseCycles::for_geometry(g);
+        assert_eq!(p.transfer, 129);
+        assert_eq!(p.patches, 529);
+        assert_eq!(p.processing(), 529 + 372 - 361);
+        assert_eq!(p.latency(), p.processing() + 129);
+    }
+
+    #[test]
+    fn strided_geometry_pays_band_transition_stalls() {
+        // 28×10 stride 2: 100 patches + 9 transitions × 1 extra row-load
+        // cycle each (the first of the two shifts overlaps the patch
+        // cycle, as in the stride-1 chip where transitions are free).
+        let g = Geometry::new(28, 10, 2).unwrap();
+        assert_eq!(patch_phase_cycles(g), 100 + 9);
+        assert_eq!(patch_phase_cycles(Geometry::asic()), 361, "stride 1 unchanged");
+        let p = PhaseCycles::for_geometry(g);
+        assert_eq!(p.patches, 109);
     }
 
     #[test]

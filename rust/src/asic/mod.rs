@@ -143,6 +143,10 @@ pub enum AsicError {
 
 impl Accelerator {
     pub fn new(params: Params, config: ChipConfig) -> Accelerator {
+        assert!(
+            params.literals_match_geometry(),
+            "accelerator literals must derive from the patch geometry"
+        );
         Accelerator {
             params,
             model: None,
@@ -165,7 +169,7 @@ impl Accelerator {
     /// register-load cycles as if transferred).
     pub fn load_model(&mut self, model: &Model) {
         assert_eq!(model.params, self.params);
-        self.model_load_cycles += (model.params.model_bits() / 8) as u64;
+        self.model_load_cycles += model.params.model_wire_bytes() as u64;
         self.model = Some(model.clone());
     }
 
@@ -184,8 +188,9 @@ impl Accelerator {
         overlapped_transfer: bool,
     ) -> Result<SimResult, AsicError> {
         let model = self.model.as_ref().ok_or(AsicError::NoModel)?;
+        let g = self.params.geometry;
         let mut report = CycleReport {
-            phases: fsm::PhaseCycles::standard(),
+            phases: fsm::PhaseCycles::for_geometry(g),
             ..CycleReport::default()
         };
         if overlapped_transfer {
@@ -193,12 +198,13 @@ impl Accelerator {
         }
 
         // --- Transfer + buffering (image buffer bank write, byte/cycle).
-        // 98 data bytes + 1 label byte, 8 DFFs clocked per byte.
-        report.image_buffer_dff_clocks += (axi::IMAGE_FRAME_BYTES * 8) as u64;
+        // Wire bytes + 1 label byte, 8 DFFs clocked per byte (98 + 1 in the
+        // ASIC geometry).
+        report.image_buffer_dff_clocks += (g.frame_bytes() * 8) as u64;
 
         // --- Patch generation (preload overlaps transfer; window register
         // activity counted by the patchgen model).
-        let mut pg = patchgen::PatchGen::preload(img);
+        let mut pg = patchgen::PatchGen::preload(g, img);
         let mut pool = clause::ClausePool::new(model, self.config.csrf);
         pool.reset();
         while pg.advance() {
@@ -225,11 +231,15 @@ impl Accelerator {
 
         // --- Clock-gating disabled: every inference-core DFF sees every
         // processing-cycle clock edge (§IV-F, ~60% power increase undone).
+        // DFF counts derive from the configuration (equal to the `dffs`
+        // inventory in the ASIC geometry).
         if !self.config.clock_gating {
-            report.sum_pipe_dff_clocks = dffs::SUM_PIPELINE as u64 * proc_cycles;
-            report.window_dff_clocks = dffs::WINDOW as u64 * proc_cycles;
-            report.image_buffer_dff_clocks = dffs::IMAGE_BUFFER as u64 * proc_cycles;
-            report.clause_dff_clocks = dffs::CLAUSE as u64 * proc_cycles;
+            let sum_pipeline =
+                class_sum::pipeline_bits_per_class(self.params.clauses) * self.params.classes;
+            report.sum_pipe_dff_clocks = sum_pipeline as u64 * proc_cycles;
+            report.window_dff_clocks = patchgen::row_array_dffs(g) as u64 * proc_cycles;
+            report.image_buffer_dff_clocks = (2 * (g.img_pixels() + 8)) as u64 * proc_cycles;
+            report.clause_dff_clocks = self.params.clauses as u64 * proc_cycles;
         }
 
         Ok(SimResult {
@@ -384,6 +394,42 @@ mod tests {
         acc.load_model(&model);
         let r = acc.classify(&random_image(13), None, false).unwrap().report;
         assert_eq!(r.model_dff_clocks, 0, "§IV-F: model clock stopped");
+    }
+
+    #[test]
+    fn simulator_matches_engine_on_cifar_geometry() {
+        // §VI-C shape runs end-to-end through the cycle model: same
+        // results as the golden engine, geometry-derived cycle counts.
+        let g = crate::data::Geometry::cifar10();
+        let params = Params::for_geometry(g);
+        let mut rng = Xoshiro256ss::new(9);
+        let mut m = Model::blank(params.clone());
+        for j in 0..params.clauses {
+            for _ in 0..2 + rng.usize_below(6) {
+                m.set_include(j, rng.usize_below(params.literals), true);
+            }
+            for i in 0..params.classes {
+                m.set_weight(i, j, (rng.below(41) as i32 - 20) as i8);
+            }
+        }
+        let mut acc = Accelerator::new(params.clone(), ChipConfig::default());
+        acc.load_model(&m);
+        assert_eq!(acc.model_load_cycles, params.model_wire_bytes() as u64);
+        let e = Engine::new();
+        for s in 0..3 {
+            let img = BoolImage::from_bools(
+                &(0..g.img_pixels())
+                    .map(|_| rng.chance(0.25))
+                    .collect::<Vec<_>>(),
+            );
+            let sim = acc.classify(&img, None, false).unwrap();
+            let sw = e.classify(&m, &img);
+            assert_eq!(sim.prediction, sw.prediction, "img {s}");
+            assert_eq!(sim.class_sums, sw.class_sums);
+            assert_eq!(sim.clause_outputs, sw.clauses);
+            assert_eq!(sim.report.phases.patches, 529);
+            assert_eq!(sim.report.phases.transfer, 129);
+        }
     }
 
     #[test]

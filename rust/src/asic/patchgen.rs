@@ -1,20 +1,27 @@
-//! Patch-generation register model (Fig. 3): a 10-row × 28-column DFF
-//! array. The first 10 image datarows are preloaded; the window then slides
-//! right one column per clock; at the end of a row band all rows shift up
-//! and the next datarow loads into the bottom row.
+//! Patch-generation register model (Fig. 3): a window × img_side DFF
+//! array (10×28 in the ASIC geometry). The first `window` image datarows
+//! are preloaded; the window then slides right one position per clock; at
+//! the end of a row band the array shifts up by `stride` rows and `stride`
+//! new datarows load into the bottom.
 //!
 //! Cycle-faithful behaviour and DFF activity accounting:
-//! - preload: 10 cycles (one datarow written per cycle);
-//! - 361 patch cycles; on the 18 band transitions the whole array shifts
-//!   (all 280 DFFs clocked with new data), otherwise only the window
-//!   position register advances.
+//! - preload: `window` cycles (one datarow written per cycle);
+//! - one patch per cycle; on each of the `positions − 1` band transitions
+//!   the whole array shifts `stride` times (all DFFs clocked with new data
+//!   per shift step), otherwise only the window position register advances.
 
-use crate::data::boolean::{BoolImage, IMG_SIDE};
-use crate::data::patches::{self, POSITIONS, WINDOW};
+use crate::data::boolean::BoolImage;
+use crate::data::{patches, Geometry};
 use crate::util::BitVec;
 
-/// DFFs in the sliding-row register array (10 × 28).
-pub const ROW_ARRAY_DFFS: usize = WINDOW * IMG_SIDE;
+/// DFFs in the sliding-row register array of the default ASIC geometry
+/// (10 × 28).
+pub const ROW_ARRAY_DFFS: usize = 280;
+
+/// DFFs in the sliding-row register array for a geometry.
+pub fn row_array_dffs(g: Geometry) -> usize {
+    g.window * g.img_side
+}
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PatchGenActivity {
@@ -26,14 +33,15 @@ pub struct PatchGenActivity {
 
 /// The register structure of Fig. 3 plus the window position counters.
 pub struct PatchGen<'i> {
+    g: Geometry,
     img: &'i BoolImage,
     /// Rows packed for the fast literal builder (§Perf).
-    packed_rows: [u32; IMG_SIDE],
-    /// rows[r][c] — the 10×28 register array.
-    rows: [[bool; IMG_SIDE]; WINDOW],
+    packed_rows: Vec<u64>,
+    /// rows[r·img_side + c] — the window × img_side register array.
+    rows: Vec<bool>,
     /// Next image datarow to load on a band transition.
     next_row: usize,
-    /// Current window coordinates.
+    /// Current window coordinates (in positions, not pixels).
     x: usize,
     y: usize,
     pub activity: PatchGenActivity,
@@ -41,33 +49,44 @@ pub struct PatchGen<'i> {
 }
 
 impl<'i> PatchGen<'i> {
-    /// Preload the first 10 datarows (10 clock cycles).
-    pub fn preload(img: &'i BoolImage) -> Self {
+    /// Preload the first `window` datarows (`window` clock cycles).
+    pub fn preload(g: Geometry, img: &'i BoolImage) -> Self {
+        assert_eq!(img.side(), g.img_side, "image does not match geometry {g}");
+        let side = g.img_side;
         let mut pg = PatchGen {
+            g,
             img,
-            packed_rows: patches::pack_rows(img),
-            rows: [[false; IMG_SIDE]; WINDOW],
-            next_row: WINDOW,
+            packed_rows: patches::pack_rows(g, img),
+            rows: vec![false; g.window * side],
+            next_row: g.window,
             x: 0,
             y: 0,
             activity: PatchGenActivity::default(),
             started: false,
         };
-        for r in 0..WINDOW {
+        for r in 0..g.window {
             let row = img.row(r);
-            pg.activity.dff_clocks += IMG_SIDE as u64;
-            for c in 0..IMG_SIDE {
-                if pg.rows[r][c] != row[c] {
+            pg.activity.dff_clocks += side as u64;
+            for c in 0..side {
+                if pg.rows[r * side + c] != row[c] {
                     pg.activity.dff_updates += 1;
                 }
-                pg.rows[r][c] = row[c];
+                pg.rows[r * side + c] = row[c];
             }
         }
         pg
     }
 
-    /// Preload cycle count (part of the 372-cycle processing budget).
-    pub const PRELOAD_CYCLES: usize = WINDOW;
+    /// Preload cycle count (part of the per-image processing budget — 10
+    /// of the 372 cycles in the ASIC geometry, hidden behind the transfer).
+    pub fn preload_cycles(&self) -> usize {
+        self.g.window
+    }
+
+    /// The geometry driving this register model.
+    pub fn geometry(&self) -> Geometry {
+        self.g
+    }
 
     /// Literals of the current window position.
     ///
@@ -75,78 +94,85 @@ impl<'i> PatchGen<'i> {
     /// The register array (`rows`) remains the authoritative cycle/toggle
     /// model; a debug assertion keeps the fast path honest against it.
     pub fn current_literals(&self) -> BitVec {
-        let lits = patches::patch_literals_from_rows(&self.packed_rows, self.x, self.y);
+        let lits = patches::patch_literals_from_rows(self.g, &self.packed_rows, self.x, self.y);
         #[cfg(debug_assertions)]
         {
-            let mut f = BitVec::zeros(patches::NUM_FEATURES);
-            for wr in 0..WINDOW {
-                for wc in 0..WINDOW {
-                    if self.rows[wr][self.x + wc] {
-                        f.set(wr * WINDOW + wc, true);
+            let g = self.g;
+            let (w, pb, side) = (g.window, g.pos_bits(), g.img_side);
+            let mut f = BitVec::zeros(g.num_features());
+            for wr in 0..w {
+                for wc in 0..w {
+                    if self.rows[wr * side + self.x * g.stride + wc] {
+                        f.set(wr * w + wc, true);
                     }
                 }
             }
-            for (t, b) in crate::data::thermo::encode(self.y, patches::POS_BITS)
-                .into_iter()
-                .enumerate()
-            {
+            for (t, b) in crate::data::thermo::encode(self.y, pb).into_iter().enumerate() {
                 if b {
-                    f.set(WINDOW * WINDOW + t, true);
+                    f.set(w * w + t, true);
                 }
             }
-            for (t, b) in crate::data::thermo::encode(self.x, patches::POS_BITS)
-                .into_iter()
-                .enumerate()
-            {
+            for (t, b) in crate::data::thermo::encode(self.x, pb).into_iter().enumerate() {
                 if b {
-                    f.set(WINDOW * WINDOW + patches::POS_BITS + t, true);
+                    f.set(w * w + pb + t, true);
                 }
             }
-            debug_assert_eq!(lits, patches::features_to_literals(&f));
+            debug_assert_eq!(lits, patches::features_to_literals(g, &f));
         }
         lits
     }
 
     /// Current patch index (x slides fastest).
     pub fn patch_index(&self) -> usize {
-        patches::patch_index(self.x, self.y)
+        self.g.patch_index(self.x, self.y)
     }
 
-    /// Advance one patch cycle. Returns false when all 361 patches have
-    /// been visited (the call that would move past the last patch).
+    /// Advance one patch cycle. Returns false when all patches have been
+    /// visited (the call that would move past the last patch).
     pub fn advance(&mut self) -> bool {
         if !self.started {
             self.started = true;
             return true; // first patch is (0,0), already loaded
         }
-        if self.x + 1 < POSITIONS {
+        let positions = self.g.positions();
+        if self.x + 1 < positions {
             self.x += 1;
             return true;
         }
-        // Band transition: shift all rows up, load next datarow.
-        if self.y + 1 >= POSITIONS {
+        // Band transition: shift the array up by `stride` rows, loading a
+        // new datarow per shift step.
+        if self.y + 1 >= positions {
             return false;
         }
         self.x = 0;
         self.y += 1;
-        let new_row = self.img.row(self.next_row);
-        self.next_row += 1;
-        self.activity.dff_clocks += ROW_ARRAY_DFFS as u64;
-        for r in 0..WINDOW - 1 {
-            for c in 0..IMG_SIDE {
-                if self.rows[r][c] != self.rows[r + 1][c] {
-                    self.activity.dff_updates += 1;
-                }
-                self.rows[r][c] = self.rows[r + 1][c];
-            }
-        }
-        for c in 0..IMG_SIDE {
-            if self.rows[WINDOW - 1][c] != new_row[c] {
-                self.activity.dff_updates += 1;
-            }
-            self.rows[WINDOW - 1][c] = new_row[c];
+        for _ in 0..self.g.stride {
+            self.shift_one_row();
         }
         true
+    }
+
+    /// One shift step: every row takes the next row's value and the bottom
+    /// row loads the next image datarow (all array DFFs clocked).
+    fn shift_one_row(&mut self) {
+        let (w, side) = (self.g.window, self.g.img_side);
+        let new_row = self.img.row(self.next_row);
+        self.next_row += 1;
+        self.activity.dff_clocks += row_array_dffs(self.g) as u64;
+        for r in 0..w - 1 {
+            for c in 0..side {
+                if self.rows[r * side + c] != self.rows[(r + 1) * side + c] {
+                    self.activity.dff_updates += 1;
+                }
+                self.rows[r * side + c] = self.rows[(r + 1) * side + c];
+            }
+        }
+        for c in 0..side {
+            if self.rows[(w - 1) * side + c] != new_row[c] {
+                self.activity.dff_updates += 1;
+            }
+            self.rows[(w - 1) * side + c] = new_row[c];
+        }
     }
 }
 
@@ -156,16 +182,18 @@ mod tests {
     use crate::data::patches::NUM_PATCHES;
     use crate::util::Xoshiro256ss;
 
-    fn random_image(seed: u64) -> BoolImage {
+    const G: Geometry = Geometry::asic();
+
+    fn random_image(seed: u64, g: Geometry) -> BoolImage {
         let mut rng = Xoshiro256ss::new(seed);
-        let bits: Vec<bool> = (0..784).map(|_| rng.chance(0.3)).collect();
+        let bits: Vec<bool> = (0..g.img_pixels()).map(|_| rng.chance(0.3)).collect();
         BoolImage::from_bools(&bits)
     }
 
     #[test]
     fn visits_all_patches_in_order() {
-        let img = random_image(1);
-        let mut pg = PatchGen::preload(&img);
+        let img = random_image(1, G);
+        let mut pg = PatchGen::preload(G, &img);
         let mut visited = Vec::new();
         while pg.advance() {
             visited.push(pg.patch_index());
@@ -176,11 +204,11 @@ mod tests {
 
     #[test]
     fn literals_match_functional_patch_extraction() {
-        let img = random_image(2);
-        let mut pg = PatchGen::preload(&img);
+        let img = random_image(2, G);
+        let mut pg = PatchGen::preload(G, &img);
         while pg.advance() {
-            let (x, y) = patches::patch_pos(pg.patch_index());
-            let expect = patches::patch_literals(&img, x, y);
+            let (x, y) = patches::patch_pos(G, pg.patch_index());
+            let expect = patches::patch_literals(G, &img, x, y);
             assert_eq!(
                 pg.current_literals(),
                 expect,
@@ -190,29 +218,66 @@ mod tests {
     }
 
     #[test]
-    fn preload_clocks_ten_rows() {
-        let img = random_image(3);
-        let pg = PatchGen::preload(&img);
-        assert_eq!(pg.activity.dff_clocks, (WINDOW * IMG_SIDE) as u64);
+    fn literals_match_on_nondefault_geometries() {
+        for (seed, g) in [
+            (21, Geometry::cifar10()),
+            (22, Geometry::new(28, 10, 2).unwrap()),
+            (23, Geometry::new(16, 4, 3).unwrap()),
+        ] {
+            let img = random_image(seed, g);
+            let mut pg = PatchGen::preload(g, &img);
+            let mut visited = 0;
+            while pg.advance() {
+                let (x, y) = patches::patch_pos(g, pg.patch_index());
+                assert_eq!(
+                    pg.current_literals(),
+                    patches::patch_literals(g, &img, x, y),
+                    "{g} patch ({x},{y})"
+                );
+                visited += 1;
+            }
+            assert_eq!(visited, g.num_patches(), "{g}");
+        }
+    }
+
+    #[test]
+    fn preload_clocks_window_rows() {
+        let img = random_image(3, G);
+        let pg = PatchGen::preload(G, &img);
+        assert_eq!(pg.activity.dff_clocks, row_array_dffs(G) as u64);
+        assert_eq!(pg.preload_cycles(), 10);
     }
 
     #[test]
     fn band_transitions_clock_whole_array() {
-        let img = random_image(4);
-        let mut pg = PatchGen::preload(&img);
+        let img = random_image(4, G);
+        let mut pg = PatchGen::preload(G, &img);
         let after_preload = pg.activity.dff_clocks;
         while pg.advance() {}
-        // 18 band transitions × 280 DFFs.
+        // 18 band transitions × 280 DFFs (stride 1: one shift each).
         assert_eq!(
             pg.activity.dff_clocks - after_preload,
-            ((POSITIONS - 1) * ROW_ARRAY_DFFS) as u64
+            ((G.positions() - 1) * ROW_ARRAY_DFFS) as u64
+        );
+    }
+
+    #[test]
+    fn strided_band_transitions_shift_stride_times() {
+        let g = Geometry::new(28, 10, 2).unwrap();
+        let img = random_image(5, g);
+        let mut pg = PatchGen::preload(g, &img);
+        let after_preload = pg.activity.dff_clocks;
+        while pg.advance() {}
+        assert_eq!(
+            pg.activity.dff_clocks - after_preload,
+            ((g.positions() - 1) * g.stride * row_array_dffs(g)) as u64
         );
     }
 
     #[test]
     fn updates_bounded_by_clocks() {
-        let img = random_image(5);
-        let mut pg = PatchGen::preload(&img);
+        let img = random_image(5, G);
+        let mut pg = PatchGen::preload(G, &img);
         while pg.advance() {}
         assert!(pg.activity.dff_updates <= pg.activity.dff_clocks);
     }

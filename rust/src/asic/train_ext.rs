@@ -13,16 +13,16 @@
 //! paper's throughput estimate (≈22.2 k samples/s at 27.8 MHz, scaled from
 //! the FPGA's 40 k at 50 MHz).
 
-use crate::data::patches::{NUM_FEATURES, NUM_PATCHES};
 use crate::tm::Params;
 use crate::util::Lfsr16;
 
 /// Resource inventory of the training extension (§VI-B).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainExtResources {
-    /// Patch RAM: 361 patches × 136 feature bits.
+    /// Patch RAM: patches × feature bits (361 × 136 in the ASIC geometry).
     pub patch_ram_bits: usize,
-    /// Reservoir-address register bits: 9 per clause.
+    /// Reservoir-address register bits: ⌈log2 patches⌉ per clause (9 for
+    /// the ASIC's 361 patches).
     pub reservoir_reg_bits: usize,
     /// TA RAM modules (single-port, 64-bit words, 8 TAs per word).
     pub ta_rams: usize,
@@ -36,16 +36,20 @@ pub struct TrainExtResources {
     pub extra_area_mm2: f64,
 }
 
-/// Build the inventory for a configuration.
+use crate::tm::budget::addr_bits;
+
+/// Build the inventory for a configuration (patch RAM and reservoir
+/// registers scale with the runtime geometry).
 pub fn resources(params: &Params) -> TrainExtResources {
+    let g = params.geometry;
     let ta_bits_per_literal = 8; // 8-bit TAs (Fig. 1 counter)
     let tas_per_word = 64 / ta_bits_per_literal; // 8
     let ta_rams = params.literals.div_ceil(tas_per_word * ta_bits_per_literal / 8);
     // 272 literals / 8 TAs per 64-bit word = 34 RAMs (paper's number).
     let ta_rams = ta_rams.max(params.literals / tas_per_word);
     TrainExtResources {
-        patch_ram_bits: NUM_PATCHES * NUM_FEATURES,
-        reservoir_reg_bits: params.clauses * 9,
+        patch_ram_bits: g.num_patches() * g.num_features(),
+        reservoir_reg_bits: params.clauses * addr_bits(g.num_patches()),
         ta_rams,
         ta_ram_rows: params.clauses,
         ta_bits: params.clauses * params.literals * ta_bits_per_literal,
@@ -76,11 +80,14 @@ pub struct TrainTiming {
 
 impl TrainTiming {
     pub fn standard(params: &Params) -> TrainTiming {
+        let g = params.geometry;
         TrainTiming {
-            // 361 patches + 10-row preload + reset, as in inference.
+            // Patch phase (incl. strided band-transition stalls) +
+            // window-row preload + reset, as in inference
+            // (361 + 10 + 1 in the ASIC geometry).
             patch_phase: super::fsm::CLAUSE_RESET_CYCLES
-                + crate::asic::patchgen::PatchGen::PRELOAD_CYCLES
-                + NUM_PATCHES,
+                + g.window
+                + super::fsm::patch_phase_cycles(g),
             sum_phase: super::class_sum::SUM_PIPELINE_CYCLES + 2,
             // Single-port RAM: read + write per clause row; all 34 RAMs
             // operate in parallel across the literals (one row = one clause).

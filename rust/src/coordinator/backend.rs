@@ -1,15 +1,18 @@
 //! Inference backends behind the coordinator: the native bit-packed
 //! engine, the cycle-accurate ASIC simulator and the PJRT-executed AOT
-//! artifact — plus a mirror backend that cross-checks two of them on live
-//! traffic (the paper's "ASIC matches SW exactly" property as a runtime
-//! invariant).
+//! artifact (feature `pjrt`) — plus a mirror backend that cross-checks two
+//! of them on live traffic (the paper's "ASIC matches SW exactly" property
+//! as a runtime invariant).
+//!
+//! Every backend validates request geometry against its loaded model: a
+//! 32×32 request against a 28×28 model is rejected as an error instead of
+//! panicking deep inside patch generation.
 
 use crate::asic::{Accelerator, ChipConfig};
 use crate::data::boolean::BoolImage;
-use crate::runtime::{ModelInputs, Runtime};
+use crate::data::Geometry;
 use crate::tm::{Engine, Model};
 use anyhow::{anyhow, Result};
-use std::path::Path;
 
 /// One classification outcome from a backend.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +33,8 @@ pub trait Backend {
     fn name(&self) -> &'static str;
     /// Largest batch the backend can consume in one call.
     fn max_batch(&self) -> usize;
+    /// The patch geometry this backend serves (requests must match).
+    fn geometry(&self) -> Geometry;
     fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>>;
 }
 
@@ -40,22 +45,65 @@ impl<B: Backend + ?Sized> Backend for Box<B> {
     fn max_batch(&self) -> usize {
         (**self).max_batch()
     }
+    fn geometry(&self) -> Geometry {
+        (**self).geometry()
+    }
     fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
         (**self).classify(imgs)
     }
 }
 
-/// The native Rust golden-model engine (SW baseline).
+/// Reject images whose side does not match the model's geometry.
+fn validate_geometry(name: &str, g: Geometry, imgs: &[&BoolImage]) -> Result<()> {
+    for (i, img) in imgs.iter().enumerate() {
+        if img.side() != g.img_side {
+            return Err(anyhow!(
+                "backend {name}: image {i} is {}x{} but the loaded model expects {}x{} \
+                 (geometry {g})",
+                img.side(),
+                img.side(),
+                g.img_side,
+                g.img_side
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The native Rust golden-model engine (SW baseline). Batches are
+/// classified in parallel across worker threads (scoped; images are
+/// independent), which is what lets the coordinator's dynamic batching
+/// use more than one core.
 pub struct NativeBackend {
     model: Model,
     engine: Engine,
+    threads: usize,
 }
 
 impl NativeBackend {
     pub fn new(model: Model) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::with_threads(model, threads)
+    }
+
+    /// Explicit worker-thread cap (1 = serial; used by benches to measure
+    /// the batch-parallel speedup).
+    pub fn with_threads(model: Model, threads: usize) -> Self {
         NativeBackend {
             model,
             engine: Engine::new(),
+            threads: threads.max(1),
+        }
+    }
+
+    fn classify_one(&self, img: &BoolImage) -> BackendOutput {
+        let inf = self.engine.classify(&self.model, img);
+        BackendOutput {
+            prediction: inf.prediction,
+            class_sums: inf.class_sums,
+            sim_cycles: None,
         }
     }
 }
@@ -69,18 +117,34 @@ impl Backend for NativeBackend {
         64
     }
 
+    fn geometry(&self) -> Geometry {
+        self.model.params.geometry
+    }
+
     fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
-        Ok(imgs
-            .iter()
-            .map(|img| {
-                let inf = self.engine.classify(&self.model, img);
-                BackendOutput {
-                    prediction: inf.prediction,
-                    class_sums: inf.class_sums,
-                    sim_cycles: None,
-                }
-            })
-            .collect())
+        validate_geometry(self.name(), self.geometry(), imgs)?;
+        let threads = self.threads.min(imgs.len());
+        // Scoped threads are spawned per batch; below this size the spawn
+        // cost exceeds the ~µs-scale per-image engine work, so stay serial.
+        const MIN_PARALLEL_BATCH: usize = 8;
+        if threads <= 1 || imgs.len() < MIN_PARALLEL_BATCH {
+            return Ok(imgs.iter().map(|img| self.classify_one(img)).collect());
+        }
+        // Chunk the batch across scoped threads; &self (model + engine) is
+        // shared read-only, so no cloning on the hot path.
+        let chunk = imgs.len().div_ceil(threads);
+        let this = &*self;
+        let outputs = std::thread::scope(|s| {
+            let handles: Vec<_> = imgs
+                .chunks(chunk)
+                .map(|part| s.spawn(move || part.iter().map(|img| this.classify_one(img)).collect::<Vec<_>>()))
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("batch worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        Ok(outputs)
     }
 }
 
@@ -113,7 +177,15 @@ impl Backend for AsicBackend {
         64
     }
 
+    fn geometry(&self) -> Geometry {
+        self.acc
+            .model()
+            .map(|m| m.params.geometry)
+            .unwrap_or_default()
+    }
+
     fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
+        validate_geometry(self.name(), self.geometry(), imgs)?;
         let mut out = Vec::with_capacity(imgs.len());
         for img in imgs {
             let res = self.acc.classify(img, None, self.primed)?;
@@ -129,26 +201,40 @@ impl Backend for AsicBackend {
 }
 
 /// The AOT artifact executed through PJRT (L2/L1 on the request path).
+/// The compiled graphs are fixed to the ASIC geometry.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
-    runtime: Runtime,
-    inputs: ModelInputs,
+    runtime: crate::runtime::Runtime,
+    inputs: crate::runtime::ModelInputs,
     artifact: String,
     batch: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
-    pub fn new(artifact_dir: &Path, artifact: &str, batch: usize, model: &Model) -> Result<Self> {
-        let mut runtime = Runtime::new(artifact_dir)?;
+    pub fn new(
+        artifact_dir: &std::path::Path,
+        artifact: &str,
+        batch: usize,
+        model: &Model,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            model.params.geometry == Geometry::asic(),
+            "PJRT artifacts are compiled for the ASIC geometry, model has {}",
+            model.params.geometry
+        );
+        let mut runtime = crate::runtime::Runtime::new(artifact_dir)?;
         runtime.load(artifact, batch)?; // compile eagerly
         Ok(PjrtBackend {
             runtime,
-            inputs: ModelInputs::from_model(model),
+            inputs: crate::runtime::ModelInputs::from_model(model),
             artifact: artifact.to_string(),
             batch,
         })
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Backend for PjrtBackend {
     fn name(&self) -> &'static str {
         "pjrt"
@@ -158,7 +244,12 @@ impl Backend for PjrtBackend {
         self.batch
     }
 
+    fn geometry(&self) -> Geometry {
+        Geometry::asic()
+    }
+
     fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
+        validate_geometry(self.name(), self.geometry(), imgs)?;
         let graph = self.runtime.load(&self.artifact, self.batch)?;
         let outs = graph.run(imgs, &self.inputs)?;
         Ok(outs
@@ -197,6 +288,10 @@ impl Backend for MirrorBackend {
 
     fn max_batch(&self) -> usize {
         self.primary.max_batch().min(self.reference.max_batch())
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.primary.geometry()
     }
 
     fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
@@ -267,6 +362,35 @@ mod tests {
     }
 
     #[test]
+    fn parallel_native_matches_serial() {
+        let model = random_model(2);
+        let imgs = random_images(3, 24);
+        let refs: Vec<&BoolImage> = imgs.iter().collect();
+        let mut serial = NativeBackend::with_threads(model.clone(), 1);
+        let mut parallel = NativeBackend::with_threads(model, 4);
+        assert_eq!(
+            serial.classify(&refs).unwrap(),
+            parallel.classify(&refs).unwrap(),
+            "batch parallelism must not change results or order"
+        );
+    }
+
+    #[test]
+    fn geometry_mismatch_is_an_error_not_a_panic() {
+        let model = random_model(4); // 28×28 model
+        let wrong = BoolImage::blank_sized(32);
+        let right = BoolImage::blank();
+        let refs: Vec<&BoolImage> = vec![&right, &wrong];
+        let mut native = NativeBackend::new(model.clone());
+        let err = native.classify(&refs).unwrap_err();
+        assert!(err.to_string().contains("32x32"), "{err}");
+        let mut asic = AsicBackend::new(&model, ChipConfig::default());
+        assert!(asic.classify(&refs).is_err());
+        // Matching geometry still classifies.
+        assert_eq!(native.classify(&[&right]).unwrap().len(), 1);
+    }
+
+    #[test]
     fn mirror_passes_on_agreement() {
         let model = random_model(3);
         let imgs = random_images(4, 5);
@@ -278,6 +402,7 @@ mod tests {
         let out = mirror.classify(&refs).unwrap();
         assert_eq!(out.len(), 5);
         assert_eq!(mirror.compared, 5);
+        assert_eq!(mirror.geometry(), Geometry::asic());
     }
 
     #[test]

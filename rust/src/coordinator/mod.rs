@@ -8,7 +8,9 @@ pub mod batcher;
 pub mod metrics;
 pub mod sysproc;
 
-pub use backend::{AsicBackend, Backend, BackendOutput, MirrorBackend, NativeBackend, PjrtBackend};
+pub use backend::{AsicBackend, Backend, BackendOutput, MirrorBackend, NativeBackend};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
 pub use batcher::BatchConfig;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use sysproc::SysProc;
@@ -61,7 +63,26 @@ impl Coordinator {
                     max_batch: cfg.max_batch.min(backend.max_batch()),
                     ..cfg
                 };
+                let geometry = backend.geometry();
                 while let Some(batch) = batcher::next_batch(&rx, &effective) {
+                    // Reject wrong-geometry requests individually so one bad
+                    // client cannot poison the co-batched valid requests.
+                    let (batch, bad): (Vec<Request>, Vec<Request>) = batch
+                        .into_iter()
+                        .partition(|r| r.img.side() == geometry.img_side);
+                    for req in bad {
+                        m.record_error(1);
+                        let side = req.img.side();
+                        let _ = req.resp.send(Err(anyhow::anyhow!(
+                            "request image is {side}x{side} but the served model expects \
+                             {}x{} (geometry {geometry})",
+                            geometry.img_side,
+                            geometry.img_side
+                        )));
+                    }
+                    if batch.is_empty() {
+                        continue;
+                    }
                     let imgs: Vec<&BoolImage> = batch.iter().map(|r| &r.img).collect();
                     match backend.classify(&imgs) {
                         Ok(outputs) => {
@@ -211,6 +232,33 @@ mod tests {
             "expected batching, got {} batches",
             snap.batches
         );
+    }
+
+    #[test]
+    fn wrong_geometry_request_fails_alone_not_the_batch() {
+        let model = random_model(11);
+        let coord = Coordinator::start(
+            Box::new(NativeBackend::new(model)),
+            BatchConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(5),
+            },
+        );
+        // Submit valid 28×28 traffic with one 32×32 request interleaved so
+        // it lands in a batch with valid requests.
+        let mut rxs = Vec::new();
+        for (i, img) in random_images(12, 9).into_iter().enumerate() {
+            if i == 4 {
+                rxs.push(coord.submit(crate::data::BoolImage::blank_sized(32)));
+            }
+            rxs.push(coord.submit(img));
+        }
+        let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let errors: Vec<_> = results.iter().filter(|r| r.is_err()).collect();
+        assert_eq!(errors.len(), 1, "only the mismatched request fails");
+        assert!(errors[0].as_ref().unwrap_err().to_string().contains("32x32"));
+        let snap = coord.shutdown();
+        assert_eq!(snap.errors, 1);
     }
 
     #[test]

@@ -4,25 +4,37 @@
 //! - FMNIST/KMNIST-style: adaptive Gaussian thresholding — pixel is 1 iff it
 //!   exceeds a Gaussian-weighted local mean minus a constant offset, the
 //!   OpenCV `ADAPTIVE_THRESH_GAUSSIAN_C` procedure the CTM paper uses.
+//!
+//! Images are square but their side length is a runtime value (see
+//! [`crate::data::Geometry`]); the accelerator default is 28×28.
 
 use crate::util::BitVec;
 
-/// Image side length (the accelerator operates on 28×28 images).
+/// Default image side length (the manufactured accelerator operates on
+/// 28×28 images; other geometries carry their side in `Geometry`).
 pub const IMG_SIDE: usize = 28;
-/// Pixels per image.
+/// Pixels per default image.
 pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
 
-/// A booleanized 28×28 image, row-major bit `y*28+x`.
+/// Side length of a square pixel buffer; panics if `len` is not a square.
+pub(crate) fn side_of(len: usize) -> usize {
+    let side = (len as f64).sqrt().round() as usize;
+    assert_eq!(side * side, len, "pixel buffer of {len} is not square");
+    side
+}
+
+/// A booleanized square image, row-major bit `y*side + x`.
 #[derive(Clone, PartialEq, Eq, Hash)]
 pub struct BoolImage {
+    side: usize,
     bits: BitVec,
 }
 
 impl std::fmt::Debug for BoolImage {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        writeln!(f, "BoolImage(")?;
-        for y in 0..IMG_SIDE {
-            let row: String = (0..IMG_SIDE)
+        writeln!(f, "BoolImage({}x{}", self.side, self.side)?;
+        for y in 0..self.side {
+            let row: String = (0..self.side)
                 .map(|x| if self.get(x, y) { '#' } else { '.' })
                 .collect();
             writeln!(f, "  {row}")?;
@@ -32,32 +44,54 @@ impl std::fmt::Debug for BoolImage {
 }
 
 impl BoolImage {
+    /// Blank image at the default 28×28 side.
     pub fn blank() -> Self {
+        Self::blank_sized(IMG_SIDE)
+    }
+
+    /// Blank image of an arbitrary side length.
+    pub fn blank_sized(side: usize) -> Self {
         Self {
-            bits: BitVec::zeros(IMG_PIXELS),
+            side,
+            bits: BitVec::zeros(side * side),
         }
     }
 
+    /// Build from packed bits; the side is inferred (length must be square).
     pub fn from_bits(bits: BitVec) -> Self {
-        assert_eq!(bits.len(), IMG_PIXELS);
-        Self { bits }
+        let side = side_of(bits.len());
+        Self { side, bits }
     }
 
+    /// Build from a `bool` slice; the side is inferred (length must be
+    /// square), so 784 pixels make a 28×28 image and 1024 a 32×32 one.
     pub fn from_bools(px: &[bool]) -> Self {
-        assert_eq!(px.len(), IMG_PIXELS);
         Self {
+            side: side_of(px.len()),
             bits: BitVec::from_bools(px),
         }
     }
 
+    /// Image side length.
+    #[inline]
+    pub fn side(&self) -> usize {
+        self.side
+    }
+
+    /// Pixels in the image.
+    #[inline]
+    pub fn pixels(&self) -> usize {
+        self.side * self.side
+    }
+
     #[inline]
     pub fn get(&self, x: usize, y: usize) -> bool {
-        self.bits.get(y * IMG_SIDE + x)
+        self.bits.get(y * self.side + x)
     }
 
     #[inline]
     pub fn set(&mut self, x: usize, y: usize, v: bool) {
-        self.bits.set(y * IMG_SIDE + x, v);
+        self.bits.set(y * self.side + x, v);
     }
 
     pub fn bits(&self) -> &BitVec {
@@ -68,37 +102,58 @@ impl BoolImage {
         self.bits.count_ones()
     }
 
-    /// Pack into the accelerator's 98-byte wire format: row-major pixels,
-    /// LSB-first within each byte (28·28/8 = 98 bytes, §IV-C).
-    pub fn to_wire_bytes(&self) -> [u8; 98] {
-        let v = self.bits.to_bytes_lsb();
-        let mut out = [0u8; 98];
-        out.copy_from_slice(&v);
-        out
+    /// Pack into the accelerator's wire format: row-major pixels, LSB-first
+    /// within each byte (28·28/8 = 98 bytes for the default side, §IV-C).
+    pub fn to_wire_bytes(&self) -> Vec<u8> {
+        self.bits.to_bytes_lsb()
     }
 
-    /// Unpack from the 98-byte wire format.
-    pub fn from_wire_bytes(bytes: &[u8; 98]) -> Self {
+    /// Unpack from the wire format for a given side length.
+    pub fn from_wire_bytes(bytes: &[u8], side: usize) -> Self {
+        assert_eq!(
+            bytes.len(),
+            (side * side).div_ceil(8),
+            "wire payload length does not match a {side}x{side} image"
+        );
         Self {
-            bits: BitVec::from_bytes_lsb(bytes, IMG_PIXELS),
+            side,
+            bits: BitVec::from_bytes_lsb(bytes, side * side),
         }
     }
 
-    /// Extract one datarow as 28 bools (used by the patch-generation
-    /// register model, which loads the image row by row — Fig. 3).
-    pub fn row(&self, y: usize) -> [bool; IMG_SIDE] {
-        let mut out = [false; IMG_SIDE];
-        for (x, o) in out.iter_mut().enumerate() {
-            *o = self.get(x, y);
+    /// Extract one datarow as bools (used by the patch-generation register
+    /// model, which loads the image row by row — Fig. 3).
+    pub fn row(&self, y: usize) -> Vec<bool> {
+        (0..self.side).map(|x| self.get(x, y)).collect()
+    }
+
+    /// Center-pad (or center-crop) the *booleanized* image to another side
+    /// length; pad bits are 0. Padding after booleanization keeps adaptive
+    /// thresholding honest — a zero-padded grayscale border would
+    /// booleanize to all-ones under `pixel > mean − c` (flat regions go
+    /// high), so geometry lifting must happen here, not on raw pixels.
+    pub fn pad_to(&self, side: usize) -> BoolImage {
+        if side == self.side {
+            return self.clone();
+        }
+        let mut out = BoolImage::blank_sized(side);
+        let copy = self.side.min(side);
+        let src_off = (self.side - copy) / 2;
+        let dst_off = (side - copy) / 2;
+        for y in 0..copy {
+            for x in 0..copy {
+                if self.get(src_off + x, src_off + y) {
+                    out.set(dst_off + x, dst_off + y, true);
+                }
+            }
         }
         out
     }
 }
 
-/// Fixed-threshold booleanization: pixel > `threshold` → 1.
-/// The paper uses threshold 75 for MNIST.
+/// Fixed-threshold booleanization: pixel > `threshold` → 1. Works on any
+/// square pixel buffer. The paper uses threshold 75 for MNIST.
 pub fn threshold_fixed(pixels: &[u8], threshold: u8) -> BoolImage {
-    assert_eq!(pixels.len(), IMG_PIXELS);
     let bools: Vec<bool> = pixels.iter().map(|&p| p > threshold).collect();
     BoolImage::from_bools(&bools)
 }
@@ -115,8 +170,8 @@ pub fn booleanize_mnist(pixels: &[u8]) -> BoolImage {
 /// replicated). Defaults follow the common CTM preprocessing:
 /// block = 11, c = 2, σ = 0.3·((block−1)/2 − 1) + 0.8 (OpenCV's rule).
 pub fn threshold_adaptive_gaussian(pixels: &[u8], block: usize, c: f64) -> BoolImage {
-    assert_eq!(pixels.len(), IMG_PIXELS);
     assert!(block % 2 == 1, "block size must be odd");
+    let side = side_of(pixels.len());
     let half = block / 2;
     let sigma = 0.3 * ((block - 1) as f64 / 2.0 - 1.0) + 0.8;
     // 1-D Gaussian kernel (separable filter).
@@ -129,36 +184,36 @@ pub fn threshold_adaptive_gaussian(pixels: &[u8], block: usize, c: f64) -> BoolI
     let ksum: f64 = kernel.iter().sum();
     let at = |x: isize, y: isize| -> f64 {
         // Border replication.
-        let xc = x.clamp(0, IMG_SIDE as isize - 1) as usize;
-        let yc = y.clamp(0, IMG_SIDE as isize - 1) as usize;
-        pixels[yc * IMG_SIDE + xc] as f64
+        let xc = x.clamp(0, side as isize - 1) as usize;
+        let yc = y.clamp(0, side as isize - 1) as usize;
+        pixels[yc * side + xc] as f64
     };
     // Horizontal pass.
-    let mut tmp = vec![0.0f64; IMG_PIXELS];
-    for y in 0..IMG_SIDE {
-        for x in 0..IMG_SIDE {
+    let mut tmp = vec![0.0f64; pixels.len()];
+    for y in 0..side {
+        for x in 0..side {
             let mut acc = 0.0;
             for (i, &k) in kernel.iter().enumerate() {
                 acc += k * at(x as isize + i as isize - half as isize, y as isize);
             }
-            tmp[y * IMG_SIDE + x] = acc / ksum;
+            tmp[y * side + x] = acc / ksum;
         }
     }
     let tmp_at = |x: isize, y: isize| -> f64 {
-        let xc = x.clamp(0, IMG_SIDE as isize - 1) as usize;
-        let yc = y.clamp(0, IMG_SIDE as isize - 1) as usize;
-        tmp[yc * IMG_SIDE + xc]
+        let xc = x.clamp(0, side as isize - 1) as usize;
+        let yc = y.clamp(0, side as isize - 1) as usize;
+        tmp[yc * side + xc]
     };
     // Vertical pass + compare.
-    let mut bools = vec![false; IMG_PIXELS];
-    for y in 0..IMG_SIDE {
-        for x in 0..IMG_SIDE {
+    let mut bools = vec![false; pixels.len()];
+    for y in 0..side {
+        for x in 0..side {
             let mut acc = 0.0;
             for (i, &k) in kernel.iter().enumerate() {
                 acc += k * tmp_at(x as isize, y as isize + i as isize - half as isize);
             }
             let mean = acc / ksum;
-            bools[y * IMG_SIDE + x] = pixels[y * IMG_SIDE + x] as f64 > mean - c;
+            bools[y * side + x] = pixels[y * side + x] as f64 > mean - c;
         }
     }
     BoolImage::from_bools(&bools)
@@ -213,7 +268,8 @@ mod tests {
             }
         }
         let bytes = img.to_wire_bytes();
-        let back = BoolImage::from_wire_bytes(&bytes);
+        assert_eq!(bytes.len(), 98, "default wire format is 98 bytes");
+        let back = BoolImage::from_wire_bytes(&bytes, IMG_SIDE);
         assert_eq!(img, back);
     }
 
@@ -225,6 +281,48 @@ mod tests {
         let bytes = img.to_wire_bytes();
         assert_eq!(bytes[0], 0b0000_0001);
         assert_eq!(bytes[1], 0b0000_0010);
+    }
+
+    #[test]
+    fn sized_images_roundtrip_any_side() {
+        for side in [16usize, 28, 32] {
+            let mut img = BoolImage::blank_sized(side);
+            img.set(side - 1, side - 1, true);
+            img.set(0, 1, true);
+            assert_eq!(img.side(), side);
+            let back = BoolImage::from_wire_bytes(&img.to_wire_bytes(), side);
+            assert_eq!(img, back);
+            assert_eq!(back.count_ones(), 2);
+        }
+    }
+
+    #[test]
+    fn pad_to_centers_and_crops() {
+        let mut img = BoolImage::blank();
+        img.set(0, 0, true);
+        img.set(27, 27, true);
+        let up = img.pad_to(32);
+        assert_eq!(up.side(), 32);
+        assert_eq!(up.count_ones(), 2);
+        assert!(up.get(2, 2), "28→32 offsets by 2");
+        assert!(up.get(29, 29));
+        // Crop back: content returns to its original place.
+        let back = up.pad_to(28);
+        assert_eq!(back, img);
+        // Identity.
+        assert_eq!(img.pad_to(28), img);
+    }
+
+    #[test]
+    fn from_bools_infers_side() {
+        assert_eq!(BoolImage::from_bools(&vec![false; 784]).side(), 28);
+        assert_eq!(BoolImage::from_bools(&vec![false; 1024]).side(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "not square")]
+    fn from_bools_rejects_non_square() {
+        BoolImage::from_bools(&vec![false; 783]);
     }
 
     #[test]

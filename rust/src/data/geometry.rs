@@ -1,0 +1,275 @@
+//! Runtime patch geometry: image side, convolution window and stride.
+//!
+//! The manufactured chip is fixed at 28×28 images with a 10×10 stride-1
+//! window (361 patches, 136 features — paper §III-C/§IV-C), but §VI-C
+//! envisages scaled variants (e.g. CIFAR-10 at 32×32). [`Geometry`] makes
+//! those dimensions a runtime value carried by `tm::Params` and threaded
+//! through the data, tm, asic and serving layers; [`Geometry::asic`]
+//! reproduces the paper's configuration bit-for-bit.
+//!
+//! Mirrors `python/compile/geometry.py` and DESIGN.md §4: patch (x, y)
+//! covers pixels (x·stride + wc, y·stride + wr), patch index p =
+//! positions·y + x (x slides fastest), features are window content
+//! row-major followed by the y- then x-position thermometers.
+
+/// Sliding-window geometry of the convolution stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Geometry {
+    /// Image side length (images are square).
+    pub img_side: usize,
+    /// Convolution window side (W_X = W_Y).
+    pub window: usize,
+    /// Window step per patch along each axis.
+    pub stride: usize,
+}
+
+impl Default for Geometry {
+    fn default() -> Self {
+        Geometry::asic()
+    }
+}
+
+impl std::fmt::Display for Geometry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}s{}", self.img_side, self.window, self.stride)
+    }
+}
+
+impl Geometry {
+    /// The manufactured ASIC geometry: 28×28, 10×10 window, stride 1.
+    pub const fn asic() -> Geometry {
+        Geometry {
+            img_side: 28,
+            window: 10,
+            stride: 1,
+        }
+    }
+
+    /// The §VI-C CIFAR-shaped geometry: 32×32, 10×10 window, stride 1.
+    pub const fn cifar10() -> Geometry {
+        Geometry {
+            img_side: 32,
+            window: 10,
+            stride: 1,
+        }
+    }
+
+    /// Validated constructor.
+    pub fn new(img_side: usize, window: usize, stride: usize) -> Result<Geometry, String> {
+        let g = Geometry {
+            img_side,
+            window,
+            stride,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Validate the geometry against the word-level implementation limits:
+    /// rows pack into one `u64` (img_side ≤ 64) and a patch row / position
+    /// thermometer packs into one `u64` (positions ≤ 64).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.window == 0 || self.stride == 0 {
+            return Err("window and stride must be positive".into());
+        }
+        if self.window > self.img_side {
+            return Err(format!(
+                "window {} exceeds image side {}",
+                self.window, self.img_side
+            ));
+        }
+        if self.img_side > 64 {
+            return Err(format!("image side {} exceeds 64 (u64 row packing)", self.img_side));
+        }
+        if self.positions() > 64 {
+            return Err(format!(
+                "{} window positions exceed 64 (u64 thermometer packing)",
+                self.positions()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse `"28x10s1"`, `"32x10"` (stride 1) or the named geometries
+    /// `"asic"` / `"cifar10"`.
+    pub fn parse(s: &str) -> Result<Geometry, String> {
+        match s {
+            "asic" | "mnist" => return Ok(Geometry::asic()),
+            "cifar10" | "cifar" => return Ok(Geometry::cifar10()),
+            _ => {}
+        }
+        let (img, rest) = s
+            .split_once('x')
+            .ok_or_else(|| format!("bad geometry '{s}' (expected SIDExWINDOW[sSTRIDE])"))?;
+        let (win, stride) = match rest.split_once('s') {
+            Some((w, st)) => (w, st),
+            None => (rest, "1"),
+        };
+        let parse = |v: &str, what: &str| {
+            v.parse::<usize>()
+                .map_err(|_| format!("bad geometry '{s}': '{v}' is not a valid {what}"))
+        };
+        Geometry::new(
+            parse(img, "image side")?,
+            parse(win, "window side")?,
+            parse(stride, "stride")?,
+        )
+    }
+
+    /// Pixels per image.
+    #[inline]
+    pub fn img_pixels(&self) -> usize {
+        self.img_side * self.img_side
+    }
+
+    /// Window positions per axis: 1 + ⌊(side − window)/stride⌋.
+    #[inline]
+    pub fn positions(&self) -> usize {
+        (self.img_side - self.window) / self.stride + 1
+    }
+
+    /// Patches per image (positions²).
+    #[inline]
+    pub fn num_patches(&self) -> usize {
+        self.positions() * self.positions()
+    }
+
+    /// Thermometer bits per axis (positions − 1, Table I).
+    #[inline]
+    pub fn pos_bits(&self) -> usize {
+        self.positions() - 1
+    }
+
+    /// Features per patch: window² content bits + two thermometers (Eq. 5).
+    #[inline]
+    pub fn num_features(&self) -> usize {
+        self.window * self.window + 2 * self.pos_bits()
+    }
+
+    /// Literals per patch (features + negations).
+    #[inline]
+    pub fn num_literals(&self) -> usize {
+        2 * self.num_features()
+    }
+
+    /// `u64` words per patch set (⌈patches/64⌉) — the `tm::fast` unit.
+    #[inline]
+    pub fn patch_words(&self) -> usize {
+        self.num_patches().div_ceil(64)
+    }
+
+    /// Image wire-format bytes (row-major pixels, LSB-first per byte).
+    #[inline]
+    pub fn wire_bytes(&self) -> usize {
+        self.img_pixels().div_ceil(8)
+    }
+
+    /// AXI image-frame bytes: wire bytes + 1 label byte (§IV-A).
+    #[inline]
+    pub fn frame_bytes(&self) -> usize {
+        self.wire_bytes() + 1
+    }
+
+    /// Patch index for window position (x, y); x slides fastest (Fig. 3).
+    #[inline]
+    pub fn patch_index(&self, x: usize, y: usize) -> usize {
+        debug_assert!(x < self.positions() && y < self.positions());
+        y * self.positions() + x
+    }
+
+    /// Window position (x, y) for a patch index.
+    #[inline]
+    pub fn patch_pos(&self, p: usize) -> (usize, usize) {
+        debug_assert!(p < self.num_patches());
+        (p % self.positions(), p / self.positions())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asic_geometry_matches_paper() {
+        let g = Geometry::asic();
+        assert_eq!(g.positions(), 19);
+        assert_eq!(g.num_patches(), 361);
+        assert_eq!(g.pos_bits(), 18);
+        assert_eq!(g.num_features(), 136);
+        assert_eq!(g.num_literals(), 272);
+        assert_eq!(g.patch_words(), 6);
+        assert_eq!(g.wire_bytes(), 98);
+        assert_eq!(g.frame_bytes(), 99);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn cifar_geometry_derives() {
+        let g = Geometry::cifar10();
+        assert_eq!(g.positions(), 23);
+        assert_eq!(g.num_patches(), 529);
+        assert_eq!(g.num_features(), 100 + 2 * 22);
+        assert_eq!(g.num_literals(), 288);
+        assert_eq!(g.patch_words(), 9);
+        assert_eq!(g.wire_bytes(), 128);
+    }
+
+    #[test]
+    fn stride_2_geometry_derives() {
+        let g = Geometry::new(28, 10, 2).unwrap();
+        assert_eq!(g.positions(), 10);
+        assert_eq!(g.num_patches(), 100);
+        assert_eq!(g.pos_bits(), 9);
+        assert_eq!(g.num_features(), 118);
+        assert_eq!(g.num_literals(), 236);
+    }
+
+    #[test]
+    fn patch_index_roundtrip_all_geometries() {
+        for g in [
+            Geometry::asic(),
+            Geometry::cifar10(),
+            Geometry::new(28, 10, 2).unwrap(),
+            Geometry::new(16, 4, 3).unwrap(),
+        ] {
+            for p in 0..g.num_patches() {
+                let (x, y) = g.patch_pos(p);
+                assert_eq!(g.patch_index(x, y), p, "{g}");
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_geometries() {
+        assert!(Geometry::new(28, 0, 1).is_err());
+        assert!(Geometry::new(28, 10, 0).is_err());
+        assert!(Geometry::new(8, 10, 1).is_err(), "window > side");
+        assert!(Geometry::new(100, 10, 1).is_err(), "side > 64");
+        // 65 positions: 64 + window 1 stride 1 is 64 positions — fine at 64.
+        assert!(Geometry::new(64, 1, 1).is_ok());
+    }
+
+    #[test]
+    fn parse_accepts_named_and_explicit_forms() {
+        assert_eq!(Geometry::parse("asic").unwrap(), Geometry::asic());
+        assert_eq!(Geometry::parse("cifar10").unwrap(), Geometry::cifar10());
+        assert_eq!(
+            Geometry::parse("32x10s2").unwrap(),
+            Geometry::new(32, 10, 2).unwrap()
+        );
+        assert_eq!(
+            Geometry::parse("32x10").unwrap(),
+            Geometry::new(32, 10, 1).unwrap()
+        );
+        assert!(Geometry::parse("junk").is_err());
+        assert!(Geometry::parse("32x").is_err());
+        assert!(Geometry::parse("8x10").is_err(), "validation applies");
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        for g in [Geometry::asic(), Geometry::cifar10(), Geometry::new(28, 10, 2).unwrap()] {
+            assert_eq!(Geometry::parse(&g.to_string()).unwrap(), g);
+        }
+    }
+}

@@ -1,8 +1,9 @@
 //! Datasets and preprocessing: booleanization (§III-D), thermometer
-//! encoding (Table I), patch generation (§III-C / §IV-C), synthetic
-//! dataset substitutes and the IDX loader for real data.
+//! encoding (Table I), runtime patch geometry + patch generation (§III-C /
+//! §IV-C), synthetic dataset substitutes and the IDX loader for real data.
 
 pub mod boolean;
+pub mod geometry;
 pub mod idx;
 pub mod patches;
 pub mod render;
@@ -10,10 +11,18 @@ pub mod synth;
 pub mod thermo;
 
 pub use boolean::{BoolImage, Booleanizer, IMG_PIXELS, IMG_SIDE};
+pub use geometry::Geometry;
 pub use patches::{NUM_FEATURES, NUM_LITERALS, NUM_PATCHES, POSITIONS, POS_BITS, WINDOW};
 pub use synth::{Dataset, Sample, SynthFamily, NUM_CLASSES};
 
 use std::path::PathBuf;
+
+/// Dataset resolution errors (surfaced as CLI errors, not panics).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum DataError {
+    #[error("unknown dataset '{0}' (expected mnist|fmnist|kmnist)")]
+    UnknownDataset(String),
+}
 
 /// Booleanize a whole split.
 pub fn booleanize_split(samples: &[Sample], b: Booleanizer) -> Vec<(BoolImage, u8)> {
@@ -23,16 +32,37 @@ pub fn booleanize_split(samples: &[Sample], b: Booleanizer) -> Vec<(BoolImage, u
         .collect()
 }
 
+/// Booleanize a split at its native resolution, then center-pad the
+/// *booleanized* images to the geometry's side. Order matters: padding raw
+/// grayscale with zeros first would make adaptive Gaussian thresholding
+/// mark the whole border as 1 (flat regions booleanize high), corrupting
+/// every lifted image.
+pub fn booleanize_split_for_geometry(
+    samples: &[Sample],
+    b: Booleanizer,
+    g: Geometry,
+) -> Vec<(BoolImage, u8)> {
+    samples
+        .iter()
+        .map(|s| (b.apply(&s.pixels).pad_to(g.img_side), s.label))
+        .collect()
+}
+
 /// Resolve a dataset: real IDX files from `DATA_DIR` if present (stems
 /// `train`/`t10k` under `<DATA_DIR>/<name>/`), else the synthetic family.
 ///
 /// `name` is one of `mnist`, `fmnist`, `kmnist`.
-pub fn load_dataset(name: &str, n_train: usize, n_test: usize, seed: u64) -> Dataset {
+pub fn load_dataset(
+    name: &str,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> Result<Dataset, DataError> {
     let family = match name {
         "mnist" => SynthFamily::Digits,
         "fmnist" => SynthFamily::Fashion,
         "kmnist" => SynthFamily::Kana,
-        other => panic!("unknown dataset '{other}' (expected mnist|fmnist|kmnist)"),
+        other => return Err(DataError::UnknownDataset(other.to_string())),
     };
     if let Ok(dir) = std::env::var("DATA_DIR") {
         let base = PathBuf::from(dir).join(name);
@@ -42,15 +72,15 @@ pub fn load_dataset(name: &str, n_train: usize, n_test: usize, seed: u64) -> Dat
         ) {
             let take_train = if n_train == 0 { train.len() } else { n_train.min(train.len()) };
             let take_test = if n_test == 0 { test.len() } else { n_test.min(test.len()) };
-            return Dataset {
+            return Ok(Dataset {
                 name: name.to_string(),
                 train: train.into_iter().take(take_train).collect(),
                 test: test.into_iter().take(take_test).collect(),
                 booleanizer: family.booleanizer(),
-            };
+            });
         }
     }
-    family.generate(n_train, n_test, seed)
+    Ok(family.generate(n_train, n_test, seed))
 }
 
 #[cfg(test)]
@@ -69,17 +99,59 @@ mod tests {
 
     #[test]
     fn load_dataset_falls_back_to_synth() {
-        let d = load_dataset("mnist", 12, 6, 42);
+        let d = load_dataset("mnist", 12, 6, 42).unwrap();
         assert_eq!(d.train.len(), 12);
         assert_eq!(d.test.len(), 6);
         assert_eq!(d.booleanizer, Booleanizer::FixedMnist);
-        let d = load_dataset("kmnist", 4, 2, 42);
+        let d = load_dataset("kmnist", 4, 2, 42).unwrap();
         assert_eq!(d.booleanizer, Booleanizer::AdaptiveGaussian);
     }
 
     #[test]
-    #[should_panic(expected = "unknown dataset")]
-    fn load_dataset_rejects_unknown() {
-        load_dataset("cifar99", 1, 1, 0);
+    fn load_dataset_rejects_unknown_as_error() {
+        let err = load_dataset("cifar99", 1, 1, 0).unwrap_err();
+        assert_eq!(err, DataError::UnknownDataset("cifar99".into()));
+        assert!(err.to_string().contains("cifar99"));
+    }
+
+    #[test]
+    fn geometry_booleanization_pads_after_thresholding() {
+        // Adaptive Gaussian marks flat regions as 1, so a raw zero-padded
+        // border would come out all-ones; padding the booleanized image
+        // must keep the lifted border all-zero instead.
+        let g = Geometry::cifar10();
+        let d = SynthFamily::Kana.generate(2, 0, 5);
+        assert_eq!(d.booleanizer, Booleanizer::AdaptiveGaussian);
+        for (img, _) in booleanize_split_for_geometry(&d.train, d.booleanizer, g) {
+            assert_eq!(img.side(), 32);
+            for i in 0..32 {
+                assert!(!img.get(i, 0), "top border bit {i} set");
+                assert!(!img.get(i, 31), "bottom border bit {i} set");
+                assert!(!img.get(0, i), "left border bit {i} set");
+                assert!(!img.get(31, i), "right border bit {i} set");
+            }
+        }
+        // The native content survives the lift (28→32 offsets by 2).
+        let native = booleanize_split(&d.train, d.booleanizer);
+        let lifted = booleanize_split_for_geometry(&d.train, d.booleanizer, g);
+        for ((n, _), (l, _)) in native.iter().zip(&lifted) {
+            assert_eq!(n.count_ones(), l.count_ones());
+            for y in 0..28 {
+                for x in 0..28 {
+                    assert_eq!(n.get(x, y), l.get(x + 2, y + 2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_booleanization_preserves_labels() {
+        let d = SynthFamily::Digits.generate(4, 0, 3);
+        let lifted =
+            booleanize_split_for_geometry(&d.train, d.booleanizer, Geometry::cifar10());
+        for (s, (img, label)) in d.train.iter().zip(&lifted) {
+            assert_eq!(s.label, *label);
+            assert_eq!(img.side(), 32);
+        }
     }
 }

@@ -1,92 +1,100 @@
-//! Patch generation: sliding 10×10 window over a 28×28 booleanized image
-//! with stride 1 (paper §III-C, §IV-C) and the canonical literal layout of
-//! DESIGN.md §4.
+//! Patch generation: a sliding window over a booleanized image with the
+//! canonical literal layout of DESIGN.md §4, parameterized by a runtime
+//! [`Geometry`] (paper §III-C, §IV-C; default [`Geometry::asic`] is the
+//! chip's 10×10 stride-1 window over 28×28).
 //!
-//! Per patch (x,y), features (o = 136 bits):
-//!   [0..100)   window content, row-major: bit 10·wr+wc = img[y+wr][x+wc]
-//!   [100..118) y-position thermometer (18 bits, LSB-first, Table I)
-//!   [118..136) x-position thermometer
-//! Literals (2o = 272): features followed by their negations.
+//! Per patch (x, y), features (o bits):
+//!   [0..w²)          window content, row-major:
+//!                    bit w·wr+wc = img[y·stride+wr][x·stride+wc]
+//!   [w²..w²+pb)      y-position thermometer (LSB-first, Table I)
+//!   [w²+pb..w²+2pb)  x-position thermometer
+//! Literals (2o): features followed by their negations.
+//!
+//! For the ASIC geometry: o = 136 (100 content + 18 + 18), 2o = 272,
+//! 19×19 = 361 patches.
 
-use super::boolean::{BoolImage, IMG_SIDE};
+use super::boolean::BoolImage;
+use super::geometry::Geometry;
 use super::thermo;
 use crate::util::BitVec;
 
-/// Convolution window side (W_X = W_Y = 10).
+/// Convolution window side of the default ASIC geometry (W_X = W_Y = 10).
 pub const WINDOW: usize = 10;
-/// Window positions per axis: 1 + (28 − 10)/1 = 19.
-pub const POSITIONS: usize = IMG_SIDE - WINDOW + 1;
-/// Patches per image: 19 × 19 = 361.
+/// Window positions per axis of the default geometry: 1 + (28 − 10)/1 = 19.
+pub const POSITIONS: usize = 19;
+/// Patches per image in the default geometry: 19 × 19 = 361.
 pub const NUM_PATCHES: usize = POSITIONS * POSITIONS;
-/// Thermometer bits per axis: 19 positions → 18 bits.
+/// Thermometer bits per axis in the default geometry: 19 positions → 18.
 pub const POS_BITS: usize = POSITIONS - 1;
-/// Features per patch: 100 window bits + 18 + 18 position bits (Eq. 5).
+/// Features per patch in the default geometry (Eq. 5): 100 + 18 + 18.
 pub const NUM_FEATURES: usize = WINDOW * WINDOW + 2 * POS_BITS;
-/// Literals per patch (features + negations).
+/// Literals per patch in the default geometry (features + negations).
 pub const NUM_LITERALS: usize = 2 * NUM_FEATURES;
 
 /// Patch index for window position (x, y); x slides fastest (Fig. 3).
 #[inline]
-pub fn patch_index(x: usize, y: usize) -> usize {
-    debug_assert!(x < POSITIONS && y < POSITIONS);
-    y * POSITIONS + x
+pub fn patch_index(g: Geometry, x: usize, y: usize) -> usize {
+    g.patch_index(x, y)
 }
 
 /// Window position (x, y) for a patch index.
 #[inline]
-pub fn patch_pos(p: usize) -> (usize, usize) {
-    debug_assert!(p < NUM_PATCHES);
-    (p % POSITIONS, p / POSITIONS)
+pub fn patch_pos(g: Geometry, p: usize) -> (usize, usize) {
+    g.patch_pos(p)
 }
 
-/// Compute the feature bits (o = 136) of patch (x, y).
-pub fn patch_features(img: &BoolImage, x: usize, y: usize) -> BitVec {
-    assert!(x < POSITIONS && y < POSITIONS);
-    let mut f = BitVec::zeros(NUM_FEATURES);
-    for wr in 0..WINDOW {
-        for wc in 0..WINDOW {
-            if img.get(x + wc, y + wr) {
-                f.set(wr * WINDOW + wc, true);
+/// Compute the feature bits (o) of patch (x, y).
+pub fn patch_features(g: Geometry, img: &BoolImage, x: usize, y: usize) -> BitVec {
+    assert_eq!(img.side(), g.img_side, "image does not match geometry {g}");
+    assert!(x < g.positions() && y < g.positions());
+    let (w, pb) = (g.window, g.pos_bits());
+    let mut f = BitVec::zeros(g.num_features());
+    for wr in 0..w {
+        for wc in 0..w {
+            if img.get(x * g.stride + wc, y * g.stride + wr) {
+                f.set(wr * w + wc, true);
             }
         }
     }
-    for (t, b) in thermo::encode(y, POS_BITS).into_iter().enumerate() {
+    for (t, b) in thermo::encode(y, pb).into_iter().enumerate() {
         if b {
-            f.set(WINDOW * WINDOW + t, true);
+            f.set(w * w + t, true);
         }
     }
-    for (t, b) in thermo::encode(x, POS_BITS).into_iter().enumerate() {
+    for (t, b) in thermo::encode(x, pb).into_iter().enumerate() {
         if b {
-            f.set(WINDOW * WINDOW + POS_BITS + t, true);
+            f.set(w * w + pb + t, true);
         }
     }
     f
 }
 
 /// Expand features to literals: `l[k] = f[k]`, `l[o+k] = ¬f[k]`.
-pub fn features_to_literals(f: &BitVec) -> BitVec {
-    assert_eq!(f.len(), NUM_FEATURES);
-    let mut l = BitVec::zeros(NUM_LITERALS);
-    for k in 0..NUM_FEATURES {
+pub fn features_to_literals(g: Geometry, f: &BitVec) -> BitVec {
+    let o = g.num_features();
+    assert_eq!(f.len(), o);
+    let mut l = BitVec::zeros(g.num_literals());
+    for k in 0..o {
         let v = f.get(k);
         l.set(k, v);
-        l.set(NUM_FEATURES + k, !v);
+        l.set(o + k, !v);
     }
     l
 }
 
-/// Literal bits (2o = 272) of patch (x, y).
-pub fn patch_literals(img: &BoolImage, x: usize, y: usize) -> BitVec {
-    features_to_literals(&patch_features(img, x, y))
+/// Literal bits (2o) of patch (x, y).
+pub fn patch_literals(g: Geometry, img: &BoolImage, x: usize, y: usize) -> BitVec {
+    features_to_literals(g, &patch_features(g, img, x, y))
 }
 
-/// Image rows packed as u32 bitmasks (bit x = pixel (x, y)) — the input
+/// Image rows packed as u64 bitmasks (bit x = pixel (x, y)) — the input
 /// format of the fast literal builder.
-pub fn pack_rows(img: &BoolImage) -> [u32; IMG_SIDE] {
-    let mut rows = [0u32; IMG_SIDE];
+pub fn pack_rows(g: Geometry, img: &BoolImage) -> Vec<u64> {
+    assert_eq!(img.side(), g.img_side, "image does not match geometry {g}");
+    let mut rows = vec![0u64; g.img_side];
     for (y, row) in rows.iter_mut().enumerate() {
-        let mut bits = 0u32;
-        for x in 0..IMG_SIDE {
+        let mut bits = 0u64;
+        for x in 0..g.img_side {
             if img.get(x, y) {
                 bits |= 1 << x;
             }
@@ -96,11 +104,23 @@ pub fn pack_rows(img: &BoolImage) -> [u32; IMG_SIDE] {
     rows
 }
 
+/// Low `nbits` mask (nbits ≤ 64).
+#[inline]
+fn low_mask(nbits: usize) -> u64 {
+    debug_assert!(nbits <= 64);
+    if nbits == 64 {
+        !0
+    } else {
+        (1u64 << nbits) - 1
+    }
+}
+
 /// Write `nbits` low bits of `value` into the bit vector's words at bit
 /// `offset` (words must be pre-zeroed).
 #[inline]
 fn write_bits(words: &mut [u64], offset: usize, value: u64, nbits: usize) {
     debug_assert!(nbits <= 64);
+    debug_assert_eq!(value & !low_mask(nbits), 0);
     let (wi, off) = (offset / 64, offset % 64);
     words[wi] |= value << off;
     if off + nbits > 64 {
@@ -111,45 +131,41 @@ fn write_bits(words: &mut [u64], offset: usize, value: u64, nbits: usize) {
 /// Fast literal construction from packed rows: identical output to
 /// [`patch_literals`] but built with word-level shifts instead of per-bit
 /// sets (the ASIC simulator's hot path — §Perf).
-pub fn patch_literals_from_rows(rows: &[u32; IMG_SIDE], x: usize, y: usize) -> BitVec {
-    debug_assert!(x < POSITIONS && y < POSITIONS);
-    let mut lits = BitVec::zeros(NUM_LITERALS);
+pub fn patch_literals_from_rows(g: Geometry, rows: &[u64], x: usize, y: usize) -> BitVec {
+    debug_assert!(x < g.positions() && y < g.positions());
+    debug_assert_eq!(rows.len(), g.img_side);
+    let (w, pb, o) = (g.window, g.pos_bits(), g.num_features());
+    let wmask = low_mask(w);
+    let mut lits = BitVec::zeros(g.num_literals());
     let words = lits.words_mut();
-    const WMASK: u64 = (1 << WINDOW) - 1;
-    // Features: window content rows (10 bits each), then thermometers.
-    let mut content = [0u64; 3]; // 136 feature bits fit in 3 words
-    for wr in 0..WINDOW {
-        let bits = ((rows[y + wr] >> x) as u64) & WMASK;
-        write_bits(&mut content, wr * WINDOW, bits, WINDOW);
+    // Features: window content rows (w bits each), then thermometers.
+    let mut content = vec![0u64; o.div_ceil(64)];
+    for wr in 0..w {
+        let bits = (rows[y * g.stride + wr] >> (x * g.stride)) & wmask;
+        write_bits(&mut content, wr * w, bits, w);
     }
     // Thermometers: y ones in the low bits (LSB-first code), likewise x.
-    let y_therm = (1u64 << y) - 1;
-    let x_therm = (1u64 << x) - 1;
-    write_bits(&mut content, WINDOW * WINDOW, y_therm, POS_BITS);
-    write_bits(&mut content, WINDOW * WINDOW + POS_BITS, x_therm, POS_BITS);
-    // Literals: features at [0..136), negations at [136..272).
-    words[..3].copy_from_slice(&content);
-    // Mask feature words to 136 bits (word 2 holds bits 128..136).
-    words[2] &= (1 << (NUM_FEATURES - 128)) - 1;
-    // Negations word-wise: insert ¬f (3 words, masked) at bit offset 136.
-    let neg = [
-        !content[0],
-        !content[1],
-        !content[2] & ((1 << (NUM_FEATURES - 128)) - 1),
-    ];
-    write_bits(words, NUM_FEATURES, neg[0], 64);
-    write_bits(words, NUM_FEATURES + 64, neg[1], 64);
-    write_bits(words, NUM_FEATURES + 128, neg[2], NUM_FEATURES - 128);
+    if pb > 0 {
+        write_bits(&mut content, w * w, low_mask(y), pb);
+        write_bits(&mut content, w * w + pb, low_mask(x), pb);
+    }
+    // Literals: features at [0..o), negations at [o..2o). The content words
+    // only carry bits below o, so the copy needs no masking.
+    words[..content.len()].copy_from_slice(&content);
+    for (i, &c) in content.iter().enumerate() {
+        let nbits = (o - i * 64).min(64);
+        write_bits(words, o + i * 64, !c & low_mask(nbits), nbits);
+    }
     lits
 }
 
-/// All 361 patches' literals in patch-index order.
+/// All patches' literals in patch-index order.
 /// This is the "patch generation" output the clause pool consumes.
-pub fn all_patch_literals(img: &BoolImage) -> Vec<BitVec> {
-    let mut out = Vec::with_capacity(NUM_PATCHES);
-    for y in 0..POSITIONS {
-        for x in 0..POSITIONS {
-            out.push(patch_literals(img, x, y));
+pub fn all_patch_literals(g: Geometry, img: &BoolImage) -> Vec<BitVec> {
+    let mut out = Vec::with_capacity(g.num_patches());
+    for y in 0..g.positions() {
+        for x in 0..g.positions() {
+            out.push(patch_literals(g, img, x, y));
         }
     }
     out
@@ -160,6 +176,19 @@ mod tests {
     use super::*;
     use crate::util::quick::{check, PropResult};
 
+    const G: Geometry = Geometry::asic();
+
+    /// Geometries exercised by the parameterized tests: the ASIC default,
+    /// the §VI-C CIFAR shape and a strided MNIST variant.
+    pub(crate) fn test_geometries() -> Vec<Geometry> {
+        vec![
+            Geometry::asic(),
+            Geometry::cifar10(),
+            Geometry::new(28, 10, 2).unwrap(),
+            Geometry::new(16, 4, 3).unwrap(),
+        ]
+    }
+
     #[test]
     fn constants_match_paper() {
         assert_eq!(POSITIONS, 19);
@@ -167,43 +196,60 @@ mod tests {
         assert_eq!(POS_BITS, 18);
         assert_eq!(NUM_FEATURES, 136);
         assert_eq!(NUM_LITERALS, 272);
+        // The module consts are the default geometry's derived values.
+        assert_eq!(G.positions(), POSITIONS);
+        assert_eq!(G.num_literals(), NUM_LITERALS);
     }
 
     #[test]
     fn patch_index_roundtrip() {
-        for p in 0..NUM_PATCHES {
-            let (x, y) = patch_pos(p);
-            assert_eq!(patch_index(x, y), p);
+        for g in test_geometries() {
+            for p in 0..g.num_patches() {
+                let (x, y) = patch_pos(g, p);
+                assert_eq!(patch_index(g, x, y), p, "{g}");
+            }
+            // x slides fastest.
+            assert_eq!(patch_index(g, 1, 0), 1);
+            assert_eq!(patch_index(g, 0, 1), g.positions());
         }
-        // x slides fastest.
-        assert_eq!(patch_index(1, 0), 1);
-        assert_eq!(patch_index(0, 1), POSITIONS);
     }
 
     #[test]
     fn window_content_maps_row_major() {
         let mut img = BoolImage::blank();
         img.set(3, 5, true); // patch (3,5) window bit (0,0)
-        let f = patch_features(&img, 3, 5);
+        let f = patch_features(G, &img, 3, 5);
         assert!(f.get(0));
         // Same pixel seen from patch (2,5): window col 1 → bit 1.
-        let f2 = patch_features(&img, 2, 5);
+        let f2 = patch_features(G, &img, 2, 5);
         assert!(f2.get(1));
         // From patch (3,4): window row 1 → bit 10.
-        let f3 = patch_features(&img, 3, 4);
+        let f3 = patch_features(G, &img, 3, 4);
         assert!(f3.get(10));
+    }
+
+    #[test]
+    fn strided_window_content_offsets_by_stride() {
+        let g = Geometry::new(28, 10, 2).unwrap();
+        let mut img = BoolImage::blank();
+        img.set(6, 4, true); // patch (3,2) at stride 2 → window bit (0,0)
+        let f = patch_features(g, &img, 3, 2);
+        assert!(f.get(0));
+        // Patch (2,2) sees it at window col 2 → bit 2.
+        let f2 = patch_features(g, &img, 2, 2);
+        assert!(f2.get(2));
     }
 
     #[test]
     fn position_thermometers_match_table1() {
         let img = BoolImage::blank();
-        let f = patch_features(&img, 18, 0);
+        let f = patch_features(G, &img, 18, 0);
         // y = 0 → all 18 y-bits zero; x = 18 → all 18 x-bits one.
         for t in 0..POS_BITS {
             assert!(!f.get(100 + t), "y therm bit {t}");
             assert!(f.get(100 + POS_BITS + t), "x therm bit {t}");
         }
-        let f = patch_features(&img, 0, 1);
+        let f = patch_features(G, &img, 0, 1);
         assert!(f.get(100)); // y=1 → lowest y bit set
         assert!(!f.get(101));
         assert!(!f.get(100 + POS_BITS)); // x=0 → no x bit
@@ -213,8 +259,8 @@ mod tests {
     fn literals_are_features_plus_negations() {
         let mut img = BoolImage::blank();
         img.set(0, 0, true);
-        let f = patch_features(&img, 0, 0);
-        let l = features_to_literals(&f);
+        let f = patch_features(G, &img, 0, 0);
+        let l = features_to_literals(G, &f);
         assert_eq!(l.count_ones(), NUM_FEATURES, "exactly half of literals set");
         for k in 0..NUM_FEATURES {
             assert_eq!(l.get(k), f.get(k));
@@ -225,10 +271,10 @@ mod tests {
     #[test]
     fn all_patches_order_and_count() {
         let img = BoolImage::blank();
-        let patches = all_patch_literals(&img);
+        let patches = all_patch_literals(G, &img);
         assert_eq!(patches.len(), NUM_PATCHES);
         // Patch 20 = (x=1, y=1): both thermometers have exactly 1 bit.
-        let p = &patches[patch_index(1, 1)];
+        let p = &patches[patch_index(G, 1, 1)];
         let y_ones = (0..POS_BITS).filter(|&t| p.get(100 + t)).count();
         let x_ones = (0..POS_BITS).filter(|&t| p.get(100 + POS_BITS + t)).count();
         assert_eq!((y_ones, x_ones), (1, 1));
@@ -236,42 +282,50 @@ mod tests {
 
     #[test]
     fn fast_builder_matches_canonical() {
-        check("patch_literals_from_rows equals patch_literals", 20, |g| -> PropResult {
-            let density = g.f64_unit();
-            let bits = g.bits(28 * 28, density);
-            let img = BoolImage::from_bools(&bits);
-            let rows = pack_rows(&img);
-            let x = g.usize_in(0, POSITIONS - 1);
-            let y = g.usize_in(0, POSITIONS - 1);
-            crate::prop_assert_eq!(
-                patch_literals_from_rows(&rows, x, y),
-                patch_literals(&img, x, y)
-            );
+        check("patch_literals_from_rows equals patch_literals", 20, |gen| -> PropResult {
+            let density = gen.f64_unit();
+            for g in test_geometries() {
+                let bits = gen.bits(g.img_pixels(), density);
+                let img = BoolImage::from_bools(&bits);
+                let rows = pack_rows(g, &img);
+                let x = gen.usize_in(0, g.positions() - 1);
+                let y = gen.usize_in(0, g.positions() - 1);
+                crate::prop_assert_eq!(
+                    patch_literals_from_rows(g, &rows, x, y),
+                    patch_literals(g, &img, x, y)
+                );
+            }
             Ok(())
         });
     }
 
     #[test]
     fn prop_literal_invariants() {
-        check("patch literal invariants", 25, |g| -> PropResult {
-            let density = g.f64_unit();
-            let bits = g.bits(28 * 28, density);
-            let img = BoolImage::from_bools(&bits);
-            let x = g.usize_in(0, POSITIONS - 1);
-            let y = g.usize_in(0, POSITIONS - 1);
-            let l = patch_literals(&img, x, y);
-            // Exactly one of (l[k], l[o+k]) is set for every k.
-            crate::prop_assert_eq!(l.count_ones(), NUM_FEATURES);
-            for k in 0..NUM_FEATURES {
-                crate::prop_assert!(
-                    l.get(k) != l.get(NUM_FEATURES + k),
-                    "literal {k} and its negation agree"
-                );
-            }
-            // Window bits match the image.
-            for wr in 0..WINDOW {
-                for wc in 0..WINDOW {
-                    crate::prop_assert_eq!(l.get(wr * WINDOW + wc), img.get(x + wc, y + wr));
+        check("patch literal invariants", 25, |gen| -> PropResult {
+            let density = gen.f64_unit();
+            for g in test_geometries() {
+                let bits = gen.bits(g.img_pixels(), density);
+                let img = BoolImage::from_bools(&bits);
+                let x = gen.usize_in(0, g.positions() - 1);
+                let y = gen.usize_in(0, g.positions() - 1);
+                let l = patch_literals(g, &img, x, y);
+                let (o, w) = (g.num_features(), g.window);
+                // Exactly one of (l[k], l[o+k]) is set for every k.
+                crate::prop_assert_eq!(l.count_ones(), o);
+                for k in 0..o {
+                    crate::prop_assert!(
+                        l.get(k) != l.get(o + k),
+                        "literal {k} and its negation agree"
+                    );
+                }
+                // Window bits match the image.
+                for wr in 0..w {
+                    for wc in 0..w {
+                        crate::prop_assert_eq!(
+                            l.get(wr * w + wc),
+                            img.get(x * g.stride + wc, y * g.stride + wr)
+                        );
+                    }
                 }
             }
             Ok(())

@@ -6,7 +6,12 @@
 //! - L3 (this crate): serving coordinator, cycle-accurate ASIC simulator,
 //!   energy model, native bit-packed inference engine, on-device trainer.
 //! - L2/L1 (python/compile): JAX inference graph + Pallas clause-evaluation
-//!   kernels, AOT-lowered to HLO text and executed here via PJRT (`runtime`).
+//!   kernels, AOT-lowered to HLO text and executed here via PJRT (`runtime`,
+//!   behind the `pjrt` feature — the `xla` crate is not vendored in the
+//!   offline build).
+//!
+//! The patch geometry (image side, window, stride) is a runtime value —
+//! see `data::Geometry`; `Geometry::asic()` reproduces the paper's chip.
 
 pub mod bench_harness;
 pub mod cli;
@@ -15,6 +20,7 @@ pub mod data;
 pub mod asic;
 pub mod energy;
 pub mod model_io;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tm;
 pub mod util;

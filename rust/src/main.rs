@@ -1,24 +1,28 @@
 //! `convcotm` — CLI for the ConvCoTM accelerator reproduction.
 //!
 //! Subcommands:
-//!   train     train a model on a dataset and save the 5 632-byte model file
+//!   train     train a model on a dataset and save the model file
 //!   eval      evaluate a saved model (native engine + ASIC simulator)
 //!   serve     run the coordinator over a backend and replay traffic
 //!   power     print the power/EPC operating table for a saved model
 //!   info      print the configuration, cycle constants and DFF inventory
 //!
+//! The patch geometry is runtime-selectable: `--geometry asic` (default,
+//! 28×28/10×10/stride 1), `--geometry cifar10` (32×32, §VI-C) or an
+//! explicit `SIDExWINDOW[sSTRIDE]` like `32x10s2`. Saved model files carry
+//! their geometry, so `eval`/`serve`/`power` recover it automatically.
+//!
 //! Examples:
 //!   convcotm train --dataset mnist --epochs 12 --out model.cctm
+//!   convcotm train --dataset mnist --geometry cifar10 --out model32.cctm
 //!   convcotm eval --model model.cctm --dataset mnist --n-test 500
 //!   convcotm serve --model model.cctm --backend asic --requests 1000
 //!   convcotm power --model model.cctm
 
 use convcotm::asic::{dffs, Accelerator, ChipConfig, CycleReport};
 use convcotm::cli::Args;
-use convcotm::coordinator::{
-    AsicBackend, BatchConfig, Coordinator, NativeBackend, PjrtBackend, SysProc,
-};
-use convcotm::data::{booleanize_split, load_dataset};
+use convcotm::coordinator::{AsicBackend, BatchConfig, Coordinator, NativeBackend, SysProc};
+use convcotm::data::{booleanize_split_for_geometry, load_dataset, Geometry};
 use convcotm::energy::{EnergyModel, OperatingPoint};
 use convcotm::model_io;
 use convcotm::tm::{Engine, Params, Trainer};
@@ -40,7 +44,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("power") => cmd_power(&args),
         Some("inspect") => cmd_inspect(&args),
-        Some("info") => cmd_info(),
+        Some("info") => cmd_info(&args),
         _ => {
             print_usage();
             Ok(())
@@ -56,42 +60,66 @@ fn print_usage() {
     println!(
         "convcotm — ConvCoTM accelerator reproduction\n\n\
          USAGE: convcotm <train|eval|serve|power|inspect|info> [--flags]\n\n\
-         train  --dataset mnist|fmnist|kmnist --n-train N --n-test N --epochs E --seed S --out FILE\n\
+         train  --dataset mnist|fmnist|kmnist --geometry G --n-train N --n-test N --epochs E --seed S --out FILE\n\
          eval   --model FILE --dataset D --n-test N\n\
          serve  --model FILE --backend native|asic|pjrt --requests N --max-batch B\n\
          power  --model FILE [--vdd V --freq HZ]\n\
-         info\n\n\
+         info   [--geometry G]\n\n\
+         Geometries: asic (28x10s1, default), cifar10 (32x10s1), or SIDExWINDOW[sSTRIDE].\n\
          Datasets use procedural synthetic substitutes unless DATA_DIR points\n\
          at real IDX files (see DESIGN.md §5)."
     );
+}
+
+fn geometry_arg(args: &Args) -> anyhow::Result<Geometry> {
+    Geometry::parse(&args.get_or("geometry", "asic")).map_err(anyhow::Error::msg)
 }
 
 fn load_model_arg(args: &Args) -> anyhow::Result<convcotm::tm::Model> {
     let path = args
         .get("model")
         .ok_or_else(|| anyhow::anyhow!("--model FILE required"))?;
-    Ok(model_io::load_file(Params::asic(), &PathBuf::from(path))?)
+    // The container header carries dims + geometry: no expected Params.
+    let model = model_io::load_file_auto(&PathBuf::from(path))?;
+    anyhow::ensure!(
+        model.params.literals_match_geometry(),
+        "model file has {} literals but geometry {} expects {}; it cannot classify images",
+        model.params.literals,
+        model.params.geometry,
+        model.params.geometry.num_literals()
+    );
+    if let Some(g) = args.get("geometry") {
+        let expected = Geometry::parse(g).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            model.params.geometry == expected,
+            "model file has geometry {} but --geometry asked for {expected}",
+            model.params.geometry
+        );
+    }
+    Ok(model)
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let dataset_name = args.get_or("dataset", "mnist");
+    let geometry = geometry_arg(args)?;
     let n_train = args.get_usize("n-train", 2000).map_err(anyhow::Error::msg)?;
     let n_test = args.get_usize("n-test", 500).map_err(anyhow::Error::msg)?;
     let epochs = args.get_usize("epochs", 12).map_err(anyhow::Error::msg)?;
     let seed = args.get_usize("seed", 2025).map_err(anyhow::Error::msg)? as u64;
     let out = args.get_or("out", "model.cctm");
 
-    let dataset = load_dataset(&dataset_name, n_train, n_test, seed);
-    let train = booleanize_split(&dataset.train, dataset.booleanizer);
-    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    let dataset = load_dataset(&dataset_name, n_train, n_test, seed)?;
+    let train = booleanize_split_for_geometry(&dataset.train, dataset.booleanizer, geometry);
+    let test = booleanize_split_for_geometry(&dataset.test, dataset.booleanizer, geometry);
     println!(
-        "training on {} ({} train / {} test), {} epochs",
+        "training on {} ({} train / {} test), geometry {}, {} epochs",
         dataset.name,
         train.len(),
         test.len(),
+        geometry,
         epochs
     );
-    let mut trainer = Trainer::new(Params::asic(), seed);
+    let mut trainer = Trainer::new(Params::for_geometry(geometry), seed);
     let engine = Engine::new();
     let t0 = Instant::now();
     for epoch in 0..epochs {
@@ -107,8 +135,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let model = trainer.export();
     model_io::save_file(&model, &PathBuf::from(&out))?;
     println!(
-        "saved {out} ({} bytes payload) in {:.1}s",
+        "saved {out} ({} bytes payload, geometry {}) in {:.1}s",
         model_io::to_wire(&model).len(),
+        geometry,
         t0.elapsed().as_secs_f64()
     );
     Ok(())
@@ -116,14 +145,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     let model = load_model_arg(args)?;
+    let g = model.params.geometry;
     let dataset_name = args.get_or("dataset", "mnist");
     let n_test = args.get_usize("n-test", 500).map_err(anyhow::Error::msg)?;
-    let dataset = load_dataset(&dataset_name, 0, n_test, 2025);
-    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    let dataset = load_dataset(&dataset_name, 0, n_test, 2025)?;
+    let test = booleanize_split_for_geometry(&dataset.test, dataset.booleanizer, g);
 
     let engine = Engine::new();
     let sw = engine.accuracy(&model, &test);
-    let mut asic = Accelerator::new(Params::asic(), ChipConfig::default());
+    let mut asic = Accelerator::new(model.params.clone(), ChipConfig::default());
     asic.load_model(&model);
     let mut correct = 0usize;
     let mut cycles = 0u64;
@@ -135,8 +165,9 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         cycles += r.report.phases.latency() as u64;
     }
     println!(
-        "{}: native {:.2}%  asic-sim {:.2}%  ({} images, {} chip-cycles)",
+        "{} (geometry {}): native {:.2}%  asic-sim {:.2}%  ({} images, {} chip-cycles)",
         dataset.name,
+        g,
         sw * 100.0,
         correct as f64 / test.len() as f64 * 100.0,
         test.len(),
@@ -147,11 +178,12 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let model = load_model_arg(args)?;
+    let g = model.params.geometry;
     let backend_name = args.get_or("backend", "native");
     let requests = args.get_usize("requests", 1000).map_err(anyhow::Error::msg)?;
     let max_batch = args.get_usize("max-batch", 16).map_err(anyhow::Error::msg)?;
-    let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 256, 7);
-    let test = booleanize_split(&dataset.test, dataset.booleanizer);
+    let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 256, 7)?;
+    let test = booleanize_split_for_geometry(&dataset.test, dataset.booleanizer, g);
     let cfg = BatchConfig {
         max_batch,
         ..BatchConfig::default()
@@ -160,14 +192,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let coord = match backend_name.as_str() {
         "native" => Coordinator::start(Box::new(NativeBackend::new(model)), cfg),
         "asic" => Coordinator::start(Box::new(AsicBackend::new(&model, ChipConfig::default())), cfg),
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let dir = PathBuf::from("artifacts");
             let m = model.clone();
             Coordinator::start_with(
-                move || PjrtBackend::new(&dir, "convcotm_b16", 16, &m).unwrap(),
+                move || {
+                    convcotm::coordinator::PjrtBackend::new(&dir, "convcotm_b16", 16, &m).unwrap()
+                },
                 cfg,
             )
         }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!("the pjrt backend requires building with `--features pjrt`"),
         other => anyhow::bail!("unknown backend '{other}'"),
     };
     let t0 = Instant::now();
@@ -194,9 +231,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_power(args: &Args) -> anyhow::Result<()> {
     let model = load_model_arg(args)?;
-    let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 64, 7);
-    let test = booleanize_split(&dataset.test, dataset.booleanizer);
-    let mut asic = Accelerator::new(Params::asic(), ChipConfig::default());
+    let g = model.params.geometry;
+    let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 64, 7)?;
+    let test = booleanize_split_for_geometry(&dataset.test, dataset.booleanizer, g);
+    let mut asic = Accelerator::new(model.params.clone(), ChipConfig::default());
     asic.load_model(&model);
     let mut report = CycleReport::default();
     for (i, (img, _)) in test.iter().enumerate() {
@@ -204,7 +242,7 @@ fn cmd_power(args: &Args) -> anyhow::Result<()> {
     }
     let n = test.len() as u64;
     let mut avg = report;
-    avg.phases = convcotm::asic::fsm::PhaseCycles::standard();
+    avg.phases = convcotm::asic::fsm::PhaseCycles::for_geometry(g);
     avg.phases.transfer = 0;
     for v in [
         &mut avg.window_dff_clocks,
@@ -241,7 +279,8 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     let top = args.get_usize("top", 8).map_err(anyhow::Error::msg)?;
     let infos = convcotm::tm::interpret::describe_model(&model);
     println!(
-        "model: {} includes total, {:.1}% exclude\n",
+        "model: geometry {}, {} includes total, {:.1}% exclude\n",
+        model.params.geometry,
         model.total_includes(),
         model.exclude_fraction() * 100.0
     );
@@ -255,19 +294,33 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
-    use convcotm::asic::{LATENCY_CYCLES, PERIOD_CYCLES, TRANSFER_CYCLES};
-    let p = Params::asic();
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    use convcotm::asic::fsm;
+    let g = geometry_arg(args)?;
+    let p = Params::for_geometry(g);
+    let phases = fsm::PhaseCycles::for_geometry(g);
     let mut t = Table::new(&["Constant", "Value"]);
+    t.row(&["Geometry".into(), format!("{g}")]);
     t.row(&["Clauses".into(), format!("{}", p.clauses)]);
     t.row(&["Classes".into(), format!("{}", p.classes)]);
     t.row(&["Literals per patch".into(), format!("{}", p.literals)]);
-    t.row(&["Patches per image".into(), "361 (19×19)".into()]);
-    t.row(&["Model size".into(), format!("{} bytes", p.model_bits() / 8)]);
-    t.row(&["Transfer cycles".into(), format!("{TRANSFER_CYCLES}")]);
-    t.row(&["Processing cycles".into(), format!("{PERIOD_CYCLES}")]);
-    t.row(&["Single-image latency".into(), format!("{LATENCY_CYCLES} cycles")]);
-    t.row(&["DFF inventory".into(), format!("{} (model {})", dffs::TOTAL, dffs::MODEL_REGS)]);
+    t.row(&[
+        "Patches per image".into(),
+        format!("{} ({}×{})", g.num_patches(), g.positions(), g.positions()),
+    ]);
+    t.row(&["Model size".into(), format!("{} bytes", p.model_wire_bytes())]);
+    t.row(&["Transfer cycles".into(), format!("{}", phases.transfer)]);
+    t.row(&["Processing cycles".into(), format!("{}", phases.processing())]);
+    t.row(&[
+        "Single-image latency".into(),
+        format!("{} cycles", phases.latency()),
+    ]);
+    if g == Geometry::asic() {
+        t.row(&[
+            "DFF inventory".into(),
+            format!("{} (model {})", dffs::TOTAL, dffs::MODEL_REGS),
+        ]);
+    }
     println!("{}", t.to_markdown());
     Ok(())
 }

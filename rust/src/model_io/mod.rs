@@ -4,19 +4,27 @@
 //! 272×128 TA-action bits followed by 10×128 8-bit two's-complement
 //! weights. [`to_wire`]/[`from_wire`] produce that raw payload — the byte
 //! stream the system processor pushes over the AXI interface in load-model
-//! mode. [`save_file`]/[`load_file`] wrap it in a small self-describing
-//! container (magic + dims header) for on-disk storage, so mismatched
+//! mode (per-clause TA rows are zero-padded to byte boundaries for
+//! geometries whose literal count is not a multiple of 8).
+//!
+//! [`save_file`]/[`load_file`] wrap it in a small self-describing container
+//! (magic + dims + geometry header) for on-disk storage, so mismatched
 //! configurations fail loudly instead of mis-loading registers.
+//! [`load_file_auto`] reconstructs the configuration (including the patch
+//! [`Geometry`]) from the header, which is how the CLI and serving stack
+//! load models of any geometry. Version 1 files (pre-geometry) are still
+//! readable and imply the ASIC geometry.
 
+use crate::data::Geometry;
 use crate::tm::params::Params;
 use crate::tm::Model;
 use crate::util::BitVec;
 use std::io::{Read, Write};
 use std::path::Path;
 
-/// Container magic: "CCTM" + format version 1.
+/// Container magic: "CCTM" + format version.
 const MAGIC: &[u8; 4] = b"CCTM";
-const VERSION: u16 = 1;
+const VERSION: u16 = 2;
 
 #[derive(Debug, thiserror::Error)]
 pub enum ModelIoError {
@@ -31,15 +39,20 @@ pub enum ModelIoError {
         file: (u32, u32, u32),
         expected: (u32, u32, u32),
     },
+    #[error("geometry mismatch: file has {file}, expected {expected}")]
+    GeometryMismatch { file: Geometry, expected: Geometry },
+    #[error("invalid header: {0}")]
+    BadHeader(String),
     #[error("payload size {got} != expected {expected}")]
     PayloadSize { got: usize, expected: usize },
 }
 
-/// Raw register payload: TA-action bits (LSB-first, clause-major) then
-/// weights (class-major, clause order), exactly as §IV-B sizes them.
+/// Raw register payload: TA-action bits (LSB-first, clause-major, rows
+/// padded to bytes) then weights (class-major, clause order), exactly as
+/// §IV-B sizes them (5 632 bytes for the ASIC configuration).
 pub fn to_wire(model: &Model) -> Vec<u8> {
     let p = &model.params;
-    let mut out = Vec::with_capacity(p.model_bits() / 8);
+    let mut out = Vec::with_capacity(p.model_wire_bytes());
     for j in 0..p.clauses {
         out.extend_from_slice(&model.include(j).to_bytes_lsb());
     }
@@ -53,14 +66,14 @@ pub fn to_wire(model: &Model) -> Vec<u8> {
 
 /// Rebuild a model from the raw register payload.
 pub fn from_wire(params: Params, bytes: &[u8]) -> Result<Model, ModelIoError> {
-    let expected = params.model_bits() / 8;
+    let expected = params.model_wire_bytes();
     if bytes.len() != expected {
         return Err(ModelIoError::PayloadSize {
             got: bytes.len(),
             expected,
         });
     }
-    let lit_bytes = params.literals / 8;
+    let lit_bytes = params.literal_bytes();
     let mut include = Vec::with_capacity(params.clauses);
     for j in 0..params.clauses {
         let chunk = &bytes[j * lit_bytes..(j + 1) * lit_bytes];
@@ -77,21 +90,36 @@ pub fn from_wire(params: Params, bytes: &[u8]) -> Result<Model, ModelIoError> {
     Ok(Model::from_parts(params, include, weights))
 }
 
-/// Save with the self-describing container header.
+/// Save with the self-describing container header (v2: dims + geometry).
 pub fn save_file(model: &Model, path: &Path) -> Result<(), ModelIoError> {
     let mut f = std::fs::File::create(path)?;
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
     let p = &model.params;
-    for dim in [p.clauses as u32, p.classes as u32, p.literals as u32] {
+    for dim in [
+        p.clauses as u32,
+        p.classes as u32,
+        p.literals as u32,
+        p.geometry.img_side as u32,
+        p.geometry.window as u32,
+        p.geometry.stride as u32,
+    ] {
         f.write_all(&dim.to_le_bytes())?;
     }
     f.write_all(&to_wire(model))?;
     Ok(())
 }
 
-/// Load, verifying magic, version and dimensions against `params`.
-pub fn load_file(params: Params, path: &Path) -> Result<Model, ModelIoError> {
+/// Parsed container header.
+struct Header {
+    clauses: u32,
+    classes: u32,
+    literals: u32,
+    geometry: Geometry,
+    payload: Vec<u8>,
+}
+
+fn read_header(path: &Path) -> Result<Header, ModelIoError> {
     let mut f = std::fs::File::open(path)?;
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
@@ -101,16 +129,36 @@ pub fn load_file(params: Params, path: &Path) -> Result<Model, ModelIoError> {
     let mut v = [0u8; 2];
     f.read_exact(&mut v)?;
     let version = u16::from_le_bytes(v);
-    if version != VERSION {
+    if version != 1 && version != VERSION {
         return Err(ModelIoError::Version(version));
     }
-    let mut dims = [0u8; 12];
+    let ndims = if version == 1 { 3 } else { 6 };
+    let mut dims = vec![0u8; 4 * ndims];
     f.read_exact(&mut dims)?;
-    let file_dims = (
-        u32::from_le_bytes(dims[0..4].try_into().unwrap()),
-        u32::from_le_bytes(dims[4..8].try_into().unwrap()),
-        u32::from_le_bytes(dims[8..12].try_into().unwrap()),
-    );
+    let dim = |i: usize| u32::from_le_bytes(dims[4 * i..4 * i + 4].try_into().unwrap());
+    // Version-1 files predate runtime geometry: always the ASIC shape.
+    let geometry = if version == 1 {
+        Geometry::asic()
+    } else {
+        Geometry::new(dim(3) as usize, dim(4) as usize, dim(5) as usize)
+            .map_err(ModelIoError::BadHeader)?
+    };
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    Ok(Header {
+        clauses: dim(0),
+        classes: dim(1),
+        literals: dim(2),
+        geometry,
+        payload,
+    })
+}
+
+/// Load, verifying magic, version, dimensions and geometry against
+/// `params`.
+pub fn load_file(params: Params, path: &Path) -> Result<Model, ModelIoError> {
+    let h = read_header(path)?;
+    let file_dims = (h.clauses, h.classes, h.literals);
     let expected = (
         params.clauses as u32,
         params.classes as u32,
@@ -122,31 +170,57 @@ pub fn load_file(params: Params, path: &Path) -> Result<Model, ModelIoError> {
             expected,
         });
     }
-    let mut payload = Vec::new();
-    f.read_to_end(&mut payload)?;
-    from_wire(params, &payload)
+    if h.geometry != params.geometry {
+        return Err(ModelIoError::GeometryMismatch {
+            file: h.geometry,
+            expected: params.geometry,
+        });
+    }
+    from_wire(params, &h.payload)
+}
+
+/// Load a model reconstructing its configuration (dims + geometry) from
+/// the container header — no expected `Params` needed. Training
+/// hyper-parameters take defaults; only the inference-relevant dimensions
+/// live in the file.
+pub fn load_file_auto(path: &Path) -> Result<Model, ModelIoError> {
+    let h = read_header(path)?;
+    // Literals may legitimately be decoupled from the geometry (pure-TM
+    // configurations) — accept whatever was saved, exactly as `load_file`
+    // with the original Params would; image-consuming paths enforce the
+    // coupling themselves (`Params::literals_match_geometry`).
+    let params = Params {
+        clauses: h.clauses as usize,
+        classes: h.classes as usize,
+        literals: h.literals as usize,
+        ..Params::for_geometry(h.geometry)
+    };
+    params.validate().map_err(ModelIoError::BadHeader)?;
+    from_wire(params, &h.payload)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::NUM_LITERALS;
     use crate::tm::params::MODEL_BYTES;
     use crate::util::Xoshiro256ss;
 
-    fn random_model(seed: u64) -> Model {
-        let params = Params::asic();
+    fn random_model_for(params: Params, seed: u64) -> Model {
         let mut rng = Xoshiro256ss::new(seed);
         let mut m = Model::blank(params.clone());
         for j in 0..params.clauses {
             for _ in 0..rng.usize_below(20) {
-                m.set_include(j, rng.usize_below(NUM_LITERALS), true);
+                m.set_include(j, rng.usize_below(params.literals), true);
             }
             for i in 0..params.classes {
                 m.set_weight(i, j, (rng.below(255) as i32 - 127) as i8);
             }
         }
         m
+    }
+
+    fn random_model(seed: u64) -> Model {
+        random_model_for(Params::asic(), seed)
     }
 
     #[test]
@@ -164,6 +238,17 @@ mod tests {
     }
 
     #[test]
+    fn wire_roundtrip_nonbyte_aligned_literals() {
+        // 28×28 stride 2: 236 literals per clause → 30 padded bytes.
+        let p = Params::for_geometry(Geometry::new(28, 10, 2).unwrap());
+        let m = random_model_for(p.clone(), 6);
+        let wire = to_wire(&m);
+        assert_eq!(wire.len(), p.model_wire_bytes());
+        let back = from_wire(p, &wire).unwrap();
+        assert!(m == back);
+    }
+
+    #[test]
     fn file_roundtrip_is_identity() {
         let m = random_model(3);
         let dir = std::env::temp_dir();
@@ -171,6 +256,74 @@ mod tests {
         save_file(&m, &path).unwrap();
         let back = load_file(Params::asic(), &path).unwrap();
         assert!(m == back);
+        let auto = load_file_auto(&path).unwrap();
+        assert!(m == auto, "auto-load reconstructs the same model");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_roundtrip_preserves_geometry() {
+        let g = Geometry::cifar10();
+        let p = Params::for_geometry(g);
+        let m = random_model_for(p.clone(), 7);
+        let dir = std::env::temp_dir();
+        let path = dir.join("convcotm_model_io_cifar.cctm");
+        save_file(&m, &path).unwrap();
+        let auto = load_file_auto(&path).unwrap();
+        assert_eq!(auto.params.geometry, g);
+        assert!(m == auto);
+        // Loading against the wrong geometry fails loudly.
+        let err = load_file(Params::asic(), &path).unwrap_err();
+        assert!(matches!(err, ModelIoError::DimMismatch { .. }));
+        let mut wrong = p.clone();
+        wrong.geometry = Geometry::new(32, 10, 2).unwrap();
+        let err = load_file(wrong, &path).unwrap_err();
+        assert!(matches!(err, ModelIoError::GeometryMismatch { .. }));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn auto_load_accepts_decoupled_literal_configs() {
+        // Pure-TM configurations may decouple literals from the geometry;
+        // save/auto-load must stay symmetric with load_file for them.
+        let p = Params {
+            clauses: 4,
+            classes: 3,
+            literals: 8,
+            ..Params::tiny()
+        };
+        let mut m = Model::blank(p.clone());
+        m.set_include(0, 3, true);
+        m.set_weight(2, 1, -7);
+        let path = std::env::temp_dir().join("convcotm_model_io_decoupled.cctm");
+        save_file(&m, &path).unwrap();
+        let auto = load_file_auto(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(auto.params.literals, 8);
+        assert!(!auto.params.literals_match_geometry());
+        assert_eq!(auto.weight(2, 1), -7);
+        assert!(auto.include(0).get(3));
+    }
+
+    #[test]
+    fn version1_files_imply_asic_geometry() {
+        // Hand-build a v1 container: magic, version 1, 3 dims, payload.
+        let m = random_model(5);
+        let dir = std::env::temp_dir();
+        let path = dir.join("convcotm_model_io_v1.cctm");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        for dim in [128u32, 10, 272] {
+            bytes.extend_from_slice(&dim.to_le_bytes());
+        }
+        bytes.extend_from_slice(&to_wire(&m));
+        std::fs::write(&path, &bytes).unwrap();
+        let auto = load_file_auto(&path).unwrap();
+        assert_eq!(auto.params.geometry, Geometry::asic());
+        assert!(m == auto);
+        let via_params = load_file(Params::asic(), &path).unwrap();
+        assert!(m == via_params);
         std::fs::remove_file(&path).ok();
     }
 

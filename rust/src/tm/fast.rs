@@ -1,65 +1,60 @@
 //! Fast clause evaluation via *patch-bitset algebra* (the §Perf hot path).
 //!
-//! Instead of materializing 361 patch-literal vectors and testing each
+//! Instead of materializing every patch-literal vector and testing each
 //! clause against each patch (the chip's time-multiplexed view), observe
 //! that for inference only the OR over patches (Eq. 6) matters:
 //!
 //!   clause j fires  ⇔  ∩_{k ∈ I_j} P_k ≠ ∅,
 //!
-//! where `P_k` is the set of patches (361 bits = 6 u64 words) on which
-//! literal k is 1. The per-image `P_k` are cheap to build:
+//! where `P_k` is the set of patches (one bit each, ⌈patches/64⌉ words —
+//! 361 bits = 6 words in the ASIC geometry) on which literal k is 1. The
+//! per-image `P_k` are cheap to build:
 //! - window-content literal (wr, wc): the image shifted by (wr, wc) —
-//!   19 bits per patch row extracted with one shift+mask per row;
+//!   one patch row extracted with a shift+mask per row (stride 1), or a
+//!   per-bit gather (stride > 1);
 //! - position-thermometer literals: *constant* patch sets, precomputed
-//!   once per process;
+//!   once per geometry and cached process-wide;
 //! - negated literals: complements.
 //!
-//! A clause evaluation is then ≤ |I_j| six-word AND steps with early exit
-//! on empty intersection — typically 2–3 steps, versus 361 × 5-word
-//! evaluations in the direct form (~100× less work).
+//! A clause evaluation is then ≤ |I_j| few-word AND steps with early exit
+//! on empty intersection — typically 2–3 steps, versus hundreds of
+//! full-width evaluations in the direct form (~100× less work).
 //!
 //! The intersection also yields the full set of patches where the clause
 //! fires, which the trainer's reservoir sampling needs (§VI-B).
 
 use super::model::Model;
-use crate::data::boolean::{BoolImage, IMG_SIDE};
-use crate::data::patches::{NUM_LITERALS, NUM_PATCHES, POSITIONS, POS_BITS, WINDOW};
+use crate::data::boolean::BoolImage;
+use crate::data::Geometry;
 use crate::util::BitVec;
-use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
 
-/// Words per patch set: ⌈361/64⌉.
+/// Words per patch set in the default ASIC geometry: ⌈361/64⌉.
 pub const PATCH_WORDS: usize = 6;
 
-/// A set of patches, one bit per patch index (19·y + x).
-pub type PatchSet = [u64; PATCH_WORDS];
-
-const EMPTY_SET: PatchSet = [0; PATCH_WORDS];
-
-/// Mask of the valid 361 bits.
-fn full_mask() -> PatchSet {
-    let mut m = [!0u64; PATCH_WORDS];
-    let rem = NUM_PATCHES % 64;
-    m[PATCH_WORDS - 1] = (1u64 << rem) - 1;
-    m
-}
+/// A set of patches, one bit per patch index (positions·y + x). The word
+/// count is geometry-dependent (`Geometry::patch_words`).
+pub type PatchSet = Vec<u64>;
 
 #[inline]
-fn set_bit(s: &mut PatchSet, p: usize) {
+fn set_bit(s: &mut [u64], p: usize) {
     s[p / 64] |= 1 << (p % 64);
 }
 
 #[inline]
-pub fn popcount(s: &PatchSet) -> u32 {
+pub fn popcount(s: &[u64]) -> u32 {
     s.iter().map(|w| w.count_ones()).sum()
 }
 
 #[inline]
-pub fn is_empty(s: &PatchSet) -> bool {
+pub fn is_empty(s: &[u64]) -> bool {
     s.iter().all(|&w| w == 0)
 }
 
-/// Index of the `n`-th (0-based) set bit.
-pub fn nth_set_bit(s: &PatchSet, mut n: u32) -> usize {
+/// Index of the `n`-th (0-based) set bit, or `None` when fewer than `n+1`
+/// bits are set.
+pub fn nth_set_bit(s: &[u64], mut n: u32) -> Option<usize> {
     for (wi, &w) in s.iter().enumerate() {
         let c = w.count_ones();
         if n < c {
@@ -68,128 +63,188 @@ pub fn nth_set_bit(s: &PatchSet, mut n: u32) -> usize {
             for _ in 0..n {
                 w &= w - 1;
             }
-            return wi * 64 + w.trailing_zeros() as usize;
+            return Some(wi * 64 + w.trailing_zeros() as usize);
         }
         n -= c;
     }
-    panic!("nth_set_bit: fewer than n bits set");
+    None
 }
 
-/// Constant patch sets for the 36 position-thermometer features and their
-/// negations, built once per process.
+/// Mask of the geometry's valid patch bits.
+fn full_mask(g: Geometry) -> PatchSet {
+    let words = g.patch_words();
+    let mut m = vec![!0u64; words];
+    let rem = g.num_patches() % 64;
+    if rem != 0 {
+        m[words - 1] = (1u64 << rem) - 1;
+    }
+    m
+}
+
+/// Constant patch sets for the position-thermometer features and their
+/// negations, built once per geometry and cached process-wide.
 struct PosSets {
-    /// [k][...] for k in 0..36 (y-therm then x-therm), feature polarity.
-    pos: Vec<PatchSet>,
-    neg: Vec<PatchSet>,
+    words: usize,
+    /// Flat [k · words ..], k in 0..2·pos_bits (y-therm then x-therm).
+    pos: Vec<u64>,
+    neg: Vec<u64>,
 }
 
-static POS_SETS: Lazy<PosSets> = Lazy::new(|| {
-    let full = full_mask();
-    let mut pos = vec![EMPTY_SET; 2 * POS_BITS];
-    for t in 0..POS_BITS {
-        for y in 0..POSITIONS {
-            for x in 0..POSITIONS {
-                let p = y * POSITIONS + x;
+fn build_pos_sets(g: Geometry) -> PosSets {
+    let words = g.patch_words();
+    let (positions, pos_bits) = (g.positions(), g.pos_bits());
+    let full = full_mask(g);
+    let mut pos = vec![0u64; 2 * pos_bits * words];
+    for t in 0..pos_bits {
+        for y in 0..positions {
+            for x in 0..positions {
+                let p = y * positions + x;
                 if y >= t + 1 {
-                    set_bit(&mut pos[t], p);
+                    set_bit(&mut pos[t * words..(t + 1) * words], p);
                 }
                 if x >= t + 1 {
-                    set_bit(&mut pos[POS_BITS + t], p);
+                    set_bit(&mut pos[(pos_bits + t) * words..(pos_bits + t + 1) * words], p);
                 }
             }
         }
     }
-    let neg = pos
-        .iter()
-        .map(|s| {
-            let mut n = *s;
-            for (w, f) in n.iter_mut().zip(full.iter()) {
-                *w = !*w & f;
-            }
-            n
-        })
-        .collect();
-    PosSets { pos, neg }
-});
+    let mut neg = vec![0u64; 2 * pos_bits * words];
+    for (n, (&s, &f)) in neg.iter_mut().zip(pos.iter().zip(full.iter().cycle())) {
+        *n = !s & f;
+    }
+    PosSets { words, pos, neg }
+}
 
-/// Per-image literal → patch-set table (272 entries).
+fn pos_sets(g: Geometry) -> Arc<PosSets> {
+    // Lock-free fast path for the default geometry: pos_sets() sits on the
+    // per-image hot path (every classify/train sample), and the parallel
+    // NativeBackend must not serialize on a cache lock.
+    static ASIC: OnceLock<Arc<PosSets>> = OnceLock::new();
+    if g == Geometry::asic() {
+        return Arc::clone(ASIC.get_or_init(|| Arc::new(build_pos_sets(g))));
+    }
+    static CACHE: OnceLock<RwLock<HashMap<Geometry, Arc<PosSets>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
+    if let Some(ps) = cache.read().expect("pos-set cache poisoned").get(&g) {
+        return Arc::clone(ps);
+    }
+    let mut map = cache.write().expect("pos-set cache poisoned");
+    Arc::clone(
+        map.entry(g)
+            .or_insert_with(|| Arc::new(build_pos_sets(g))),
+    )
+}
+
+/// Per-image literal → patch-set table (one entry per literal).
 pub struct PatchSets {
-    sets: Vec<PatchSet>,
+    geometry: Geometry,
+    words: usize,
+    full: PatchSet,
+    /// Flat [k · words ..] for k in 0..num_literals.
+    sets: Vec<u64>,
 }
 
 impl PatchSets {
     /// Build from a booleanized image.
-    pub fn build(img: &BoolImage) -> PatchSets {
-        let full = full_mask();
-        // Image rows as u32 bitmasks (bit x = pixel (x, y)).
-        let mut rows = [0u32; IMG_SIDE];
-        for (y, row) in rows.iter_mut().enumerate() {
-            let mut bits = 0u32;
-            for x in 0..IMG_SIDE {
-                if img.get(x, y) {
-                    bits |= 1 << x;
-                }
-            }
-            *row = bits;
-        }
-        let mut sets = vec![EMPTY_SET; NUM_LITERALS];
-        const ROW_MASK: u32 = (1 << POSITIONS) - 1; // 19 bits
-        for wr in 0..WINDOW {
-            for wc in 0..WINDOW {
-                let k = wr * WINDOW + wc;
-                let mut s = EMPTY_SET;
-                for y in 0..POSITIONS {
-                    let bits = ((rows[y + wr] >> wc) & ROW_MASK) as u64;
-                    let base = y * POSITIONS;
+    pub fn build(g: Geometry, img: &BoolImage) -> PatchSets {
+        assert_eq!(img.side(), g.img_side, "image does not match geometry {g}");
+        let words = g.patch_words();
+        let (positions, pos_bits, window, stride) =
+            (g.positions(), g.pos_bits(), g.window, g.stride);
+        let o = g.num_features();
+        let full = full_mask(g);
+        // Image rows as u64 bitmasks (bit x = pixel (x, y)).
+        let rows = crate::data::patches::pack_rows(g, img);
+        let mut sets = vec![0u64; g.num_literals() * words];
+        let row_mask: u64 = if positions == 64 { !0 } else { (1u64 << positions) - 1 };
+        for wr in 0..window {
+            for wc in 0..window {
+                let k = wr * window + wc;
+                let s = &mut sets[k * words..(k + 1) * words];
+                for y in 0..positions {
+                    // Patch (x, y) holds literal k iff pixel
+                    // (x·stride + wc, y·stride + wr) is set.
+                    let bits = if stride == 1 {
+                        (rows[y + wr] >> wc) & row_mask
+                    } else {
+                        let row = rows[y * stride + wr];
+                        let mut b = 0u64;
+                        for x in 0..positions {
+                            b |= ((row >> (x * stride + wc)) & 1) << x;
+                        }
+                        b
+                    };
+                    let base = y * positions;
                     let (wi, off) = (base / 64, base % 64);
                     s[wi] |= bits << off;
-                    if off + POSITIONS > 64 {
+                    if off + positions > 64 {
                         s[wi + 1] |= bits >> (64 - off);
                     }
                 }
-                sets[k] = s;
             }
         }
-        // Position thermometers (constants).
-        let ps = &*POS_SETS;
-        let o = WINDOW * WINDOW + 2 * POS_BITS; // 136 features
-        for t in 0..2 * POS_BITS {
-            sets[WINDOW * WINDOW + t] = ps.pos[t];
-            sets[o + WINDOW * WINDOW + t] = ps.neg[t];
+        // Position thermometers (per-geometry constants).
+        let ps = pos_sets(g);
+        for t in 0..2 * pos_bits {
+            let src = &ps.pos[t * ps.words..(t + 1) * ps.words];
+            sets[(window * window + t) * words..(window * window + t + 1) * words]
+                .copy_from_slice(src);
+            let srcn = &ps.neg[t * ps.words..(t + 1) * ps.words];
+            sets[(o + window * window + t) * words..(o + window * window + t + 1) * words]
+                .copy_from_slice(srcn);
         }
         // Negations of the content literals.
-        for k in 0..WINDOW * WINDOW {
-            let mut n = sets[k];
-            for (w, f) in n.iter_mut().zip(full.iter()) {
-                *w = !*w & f;
+        for k in 0..window * window {
+            for w in 0..words {
+                sets[(o + k) * words + w] = !sets[k * words + w] & full[w];
             }
-            sets[o + k] = n;
         }
-        PatchSets { sets }
+        PatchSets {
+            geometry: g,
+            words,
+            full,
+            sets,
+        }
+    }
+
+    /// The geometry this table was built for.
+    #[inline]
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
     }
 
     #[inline]
-    pub fn literal_set(&self, k: usize) -> &PatchSet {
-        &self.sets[k]
+    pub fn literal_set(&self, k: usize) -> &[u64] {
+        &self.sets[k * self.words..(k + 1) * self.words]
     }
 
-    /// Set of patches where the clause (given as an include mask) fires.
-    /// An empty include mask yields the full patch set (the *training*
-    /// semantics — inference forces empty clauses low separately).
-    pub fn clause_patches(&self, include: &BitVec) -> PatchSet {
-        let mut acc = full_mask();
+    /// Intersect the patch sets of a clause's included literals into `out`
+    /// (resized to the geometry's word count). An empty include mask yields
+    /// the full patch set (the *training* semantics — inference forces
+    /// empty clauses low separately).
+    pub fn clause_patches_into(&self, include: &BitVec, out: &mut PatchSet) {
+        debug_assert_eq!(include.len(), self.geometry.num_literals());
+        out.clear();
+        out.extend_from_slice(&self.full);
         for k in include.iter_ones() {
-            let s = &self.sets[k];
+            let s = &self.sets[k * self.words..(k + 1) * self.words];
             let mut any = 0u64;
-            for (a, &b) in acc.iter_mut().zip(s.iter()) {
+            for (a, &b) in out.iter_mut().zip(s.iter()) {
                 *a &= b;
                 any |= *a;
             }
             if any == 0 {
-                return EMPTY_SET;
+                out.fill(0);
+                return;
             }
         }
-        acc
+    }
+
+    /// Set of patches where the clause (given as an include mask) fires.
+    pub fn clause_patches(&self, include: &BitVec) -> PatchSet {
+        let mut out = Vec::with_capacity(self.words);
+        self.clause_patches_into(include, &mut out);
+        out
     }
 
     /// Does the clause fire on any patch? (Inference semantics: empty
@@ -201,10 +256,21 @@ impl PatchSets {
 
     /// Image-level clause outputs for a whole model (Eq. 6).
     pub fn clause_outputs(&self, model: &Model) -> BitVec {
+        assert_eq!(
+            model.params.literals,
+            self.geometry.num_literals(),
+            "model literals do not match geometry {}",
+            self.geometry
+        );
         let n = model.params.clauses;
         let mut out = BitVec::zeros(n);
+        let mut scratch: PatchSet = Vec::with_capacity(self.words);
         for j in 0..n {
-            if self.clause_fires(model.include(j), model.is_empty_clause(j)) {
+            if model.is_empty_clause(j) {
+                continue;
+            }
+            self.clause_patches_into(model.include(j), &mut scratch);
+            if !is_empty(&scratch) {
                 out.set(j, true);
             }
         }
@@ -221,94 +287,131 @@ mod tests {
     use crate::util::quick::check;
     use crate::util::Xoshiro256ss;
 
-    fn random_image(rng: &mut Xoshiro256ss, density: f64) -> BoolImage {
-        BoolImage::from_bools(&(0..784).map(|_| rng.chance(density)).collect::<Vec<_>>())
+    const G: Geometry = Geometry::asic();
+
+    fn random_image(rng: &mut Xoshiro256ss, g: Geometry, density: f64) -> BoolImage {
+        BoolImage::from_bools(
+            &(0..g.img_pixels())
+                .map(|_| rng.chance(density))
+                .collect::<Vec<_>>(),
+        )
     }
 
     #[test]
     fn literal_sets_match_patch_literals() {
         let mut rng = Xoshiro256ss::new(3);
-        let img = random_image(&mut rng, 0.3);
-        let sets = PatchSets::build(&img);
-        // Exhaustive cross-check against the canonical extraction.
-        for y in 0..POSITIONS {
-            for x in 0..POSITIONS {
-                let p = patches::patch_index(x, y);
-                let lits = patches::patch_literals(&img, x, y);
-                for k in 0..NUM_LITERALS {
-                    let in_set = (sets.literal_set(k)[p / 64] >> (p % 64)) & 1 == 1;
-                    assert_eq!(
-                        in_set,
-                        lits.get(k),
-                        "literal {k} patch ({x},{y})"
-                    );
+        for g in [G, Geometry::cifar10(), Geometry::new(28, 10, 2).unwrap()] {
+            let img = random_image(&mut rng, g, 0.3);
+            let sets = PatchSets::build(g, &img);
+            // Exhaustive cross-check against the canonical extraction.
+            for y in 0..g.positions() {
+                for x in 0..g.positions() {
+                    let p = patches::patch_index(g, x, y);
+                    let lits = patches::patch_literals(g, &img, x, y);
+                    for k in 0..g.num_literals() {
+                        let in_set = (sets.literal_set(k)[p / 64] >> (p % 64)) & 1 == 1;
+                        assert_eq!(in_set, lits.get(k), "{g} literal {k} patch ({x},{y})");
+                    }
                 }
             }
         }
+    }
+
+    /// Cross-check `clause_patches` against the direct per-patch evaluation
+    /// for one geometry (the §V "exactly in accordance" property, per
+    /// geometry).
+    fn check_clause_patches_match_direct(g: Geometry) {
+        check(
+            &format!("patch-set clause eval equals direct ({g})"),
+            10,
+            |gen| {
+                let mut rng = Xoshiro256ss::new(gen.u64());
+                let density = 0.1 + 0.5 * gen.f64_unit();
+                let img = random_image(&mut rng, g, density);
+                let sets = PatchSets::build(g, &img);
+                let p = Params {
+                    clauses: 8,
+                    ..Params::for_geometry(g)
+                };
+                let mut model = crate::tm::Model::blank(p.clone());
+                for j in 0..p.clauses {
+                    for _ in 0..gen.usize_in(0, 8) {
+                        model.set_include(j, gen.usize_in(0, g.num_literals() - 1), true);
+                    }
+                }
+                let all = patches::all_patch_literals(g, &img);
+                for j in 0..p.clauses {
+                    let fast = sets.clause_patches(model.include(j));
+                    for (b, lits) in all.iter().enumerate() {
+                        let direct = if model.is_empty_clause(j) {
+                            true // training semantics: empty matches everything
+                        } else {
+                            direct_clause_fires(model.include(j), lits, false)
+                        };
+                        let bit = (fast[b / 64] >> (b % 64)) & 1 == 1;
+                        crate::prop_assert_eq!(bit, direct);
+                    }
+                    crate::prop_assert_eq!(
+                        sets.clause_fires(model.include(j), model.is_empty_clause(j)),
+                        !model.is_empty_clause(j) && !is_empty(&fast)
+                    );
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
     fn clause_patches_match_direct_evaluation() {
-        check("patch-set clause eval equals direct", 15, |g| {
-            let mut rng = Xoshiro256ss::new(g.u64());
-            let density = 0.1 + 0.5 * g.f64_unit();
-            let img = random_image(&mut rng, density);
-            let sets = PatchSets::build(&img);
-            let p = Params {
-                clauses: 8,
-                ..Params::asic()
-            };
-            let mut model = crate::tm::Model::blank(p.clone());
-            for j in 0..p.clauses {
-                for _ in 0..g.usize_in(0, 8) {
-                    model.set_include(j, g.usize_in(0, NUM_LITERALS - 1), true);
-                }
-            }
-            let all = patches::all_patch_literals(&img);
-            for j in 0..p.clauses {
-                let fast = sets.clause_patches(model.include(j));
-                for (b, lits) in all.iter().enumerate() {
-                    let direct = if model.is_empty_clause(j) {
-                        true // training semantics: empty matches everything
-                    } else {
-                        direct_clause_fires(model.include(j), lits, false)
-                    };
-                    let bit = (fast[b / 64] >> (b % 64)) & 1 == 1;
-                    crate::prop_assert_eq!(bit, direct);
-                }
-                crate::prop_assert_eq!(
-                    sets.clause_fires(model.include(j), model.is_empty_clause(j)),
-                    !model.is_empty_clause(j) && !is_empty(&fast)
-                );
-            }
-            Ok(())
-        });
+        check_clause_patches_match_direct(G);
+    }
+
+    #[test]
+    fn clause_patches_match_direct_on_cifar_geometry() {
+        check_clause_patches_match_direct(Geometry::cifar10());
+    }
+
+    #[test]
+    fn clause_patches_match_direct_on_strided_geometry() {
+        check_clause_patches_match_direct(Geometry::new(28, 10, 2).unwrap());
     }
 
     #[test]
     fn empty_include_gives_full_set() {
-        let img = BoolImage::blank();
-        let sets = PatchSets::build(&img);
-        let inc = BitVec::zeros(NUM_LITERALS);
-        let s = sets.clause_patches(&inc);
-        assert_eq!(popcount(&s) as usize, NUM_PATCHES);
+        for g in [G, Geometry::cifar10()] {
+            let img = BoolImage::blank_sized(g.img_side);
+            let sets = PatchSets::build(g, &img);
+            let inc = BitVec::zeros(g.num_literals());
+            let s = sets.clause_patches(&inc);
+            assert_eq!(popcount(&s) as usize, g.num_patches());
+        }
     }
 
     #[test]
     fn nth_set_bit_selects_correctly() {
-        let mut s = EMPTY_SET;
+        let mut s = vec![0u64; PATCH_WORDS];
         for p in [0usize, 63, 64, 130, 360] {
             set_bit(&mut s, p);
         }
-        assert_eq!(nth_set_bit(&s, 0), 0);
-        assert_eq!(nth_set_bit(&s, 1), 63);
-        assert_eq!(nth_set_bit(&s, 2), 64);
-        assert_eq!(nth_set_bit(&s, 3), 130);
-        assert_eq!(nth_set_bit(&s, 4), 360);
+        assert_eq!(nth_set_bit(&s, 0), Some(0));
+        assert_eq!(nth_set_bit(&s, 1), Some(63));
+        assert_eq!(nth_set_bit(&s, 2), Some(64));
+        assert_eq!(nth_set_bit(&s, 3), Some(130));
+        assert_eq!(nth_set_bit(&s, 4), Some(360));
+        assert_eq!(nth_set_bit(&s, 5), None, "only five bits set");
+        assert_eq!(nth_set_bit(&[0u64; 2], 0), None);
     }
 
     #[test]
-    fn full_mask_has_361_bits() {
-        assert_eq!(popcount(&full_mask()) as usize, NUM_PATCHES);
+    fn full_mask_counts_patches() {
+        assert_eq!(popcount(&full_mask(G)) as usize, patches::NUM_PATCHES);
+        assert_eq!(
+            popcount(&full_mask(Geometry::cifar10())) as usize,
+            Geometry::cifar10().num_patches()
+        );
+        // Exact multiple of 64: no partial tail word.
+        let g = Geometry::new(17, 10, 1).unwrap(); // 8×8 = 64 patches
+        assert_eq!(popcount(&full_mask(g)) as usize, 64);
+        assert_eq!(full_mask(g).len(), 1);
     }
 }

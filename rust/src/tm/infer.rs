@@ -6,9 +6,12 @@
 //! Semantics follow the chip:
 //! - clause j fires on patch b iff every included literal is 1 (Eq. 2) and
 //!   the clause is non-empty (§IV-D Empty logic);
-//! - the per-image clause output is the OR over all 361 patches (Eq. 6);
+//! - the per-image clause output is the OR over all patches (Eq. 6);
 //! - class sums are Σ_j w[i][j]·c[j] (Eq. 3), no multiplications needed;
 //! - prediction is argmax with lowest-label tie-break (Fig. 6 tree).
+//!
+//! The patch geometry is taken from the model's `Params` at runtime, so
+//! one engine serves the ASIC 28×28 configuration and any scaled variant.
 
 use super::model::Model;
 use crate::data::boolean::BoolImage;
@@ -65,7 +68,8 @@ impl Engine {
     /// Image-level clause outputs (Eq. 6): OR over all patches.
     pub fn clause_outputs(&self, model: &Model, img: &BoolImage) -> BitVec {
         if self.early_exit {
-            return super::fast::PatchSets::build(img).clause_outputs(model);
+            return super::fast::PatchSets::build(model.params.geometry, img)
+                .clause_outputs(model);
         }
         self.clause_outputs_direct(model, img)
     }
@@ -73,11 +77,12 @@ impl Engine {
     /// Direct (chip-shaped) evaluation: one patch at a time over all
     /// clauses — the reference implementation.
     pub fn clause_outputs_direct(&self, model: &Model, img: &BoolImage) -> BitVec {
+        let g = model.params.geometry;
         let n = model.params.clauses;
         let mut out = BitVec::zeros(n);
-        for y in 0..patches::POSITIONS {
-            for x in 0..patches::POSITIONS {
-                let lit_buf = patches::patch_literals(img, x, y);
+        for y in 0..g.positions() {
+            for x in 0..g.positions() {
+                let lit_buf = patches::patch_literals(g, img, x, y);
                 for j in 0..n {
                     if out.get(j) {
                         continue;
@@ -127,11 +132,12 @@ impl Engine {
     /// Per-patch combinational clause outputs c_j^b for one image — used by
     /// the ASIC simulator's toggle accounting and by tests. Row per patch.
     pub fn per_patch_outputs(&self, model: &Model, img: &BoolImage) -> Vec<BitVec> {
+        let g = model.params.geometry;
         let n = model.params.clauses;
-        let mut rows = Vec::with_capacity(patches::NUM_PATCHES);
-        for y in 0..patches::POSITIONS {
-            for x in 0..patches::POSITIONS {
-                let lits = patches::patch_literals(img, x, y);
+        let mut rows = Vec::with_capacity(g.num_patches());
+        for y in 0..g.positions() {
+            for x in 0..g.positions() {
+                let lits = patches::patch_literals(g, img, x, y);
                 let mut row = BitVec::zeros(n);
                 for j in 0..n {
                     if clause_fires(model.include(j), &lits, model.is_empty_clause(j)) {
@@ -148,7 +154,7 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{NUM_LITERALS, NUM_FEATURES};
+    use crate::data::{Geometry, NUM_FEATURES, NUM_LITERALS};
     use crate::tm::params::Params;
     use crate::util::quick::{check, PropResult};
     use crate::util::Xoshiro256ss;
@@ -258,6 +264,33 @@ mod tests {
                 }
             }
             let bits: Vec<bool> = (0..784).map(|_| rng.chance(0.2)).collect();
+            let img = BoolImage::from_bools(&bits);
+            let fast = Engine { early_exit: true }.classify(&model, &img);
+            let slow = Engine { early_exit: false }.classify(&model, &img);
+            assert_eq!(fast, slow, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn early_exit_matches_exhaustive_on_cifar_geometry() {
+        // The same fast-vs-direct equivalence on the §VI-C 32×32 shape.
+        let g = Geometry::cifar10();
+        let mut rng = Xoshiro256ss::new(78);
+        let p = Params {
+            clauses: 16,
+            ..Params::for_geometry(g)
+        };
+        for trial in 0..3 {
+            let mut model = Model::blank(p.clone());
+            for j in 0..p.clauses {
+                for _ in 0..4 {
+                    model.set_include(j, rng.usize_below(g.num_literals()), true);
+                }
+                for i in 0..p.classes {
+                    model.set_weight(i, j, (rng.below(21) as i32 - 10) as i8);
+                }
+            }
+            let bits: Vec<bool> = (0..g.img_pixels()).map(|_| rng.chance(0.2)).collect();
             let img = BoolImage::from_bools(&bits);
             let fast = Engine { early_exit: true }.classify(&model, &img);
             let slow = Engine { early_exit: false }.classify(&model, &img);

@@ -4,14 +4,17 @@
 //! outputs").
 //!
 //! Each clause decomposes into:
-//! - a 10×10 window stencil: cells required ON (`#`), required OFF (`.`),
-//!   and don't-care (` `);
+//! - a window stencil (window² cells): cells required ON (`#`), required
+//!   OFF (`.`), and don't-care (` `);
 //! - position constraints: the thermometer literals bound the window's
 //!   (x, y) placement to a rectangle;
 //! - per-class vote weights.
+//!
+//! The stencil size and position bounds follow the model's runtime
+//! geometry (10×10 over 19×19 positions in the ASIC configuration).
 
 use super::model::Model;
-use crate::data::patches::{NUM_FEATURES, POS_BITS, POSITIONS, WINDOW};
+use crate::data::Geometry;
 
 /// One cell requirement in the window stencil.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,7 +30,10 @@ pub enum Cell {
 #[derive(Clone, Debug)]
 pub struct ClauseInfo {
     pub index: usize,
-    pub stencil: [[Cell; WINDOW]; WINDOW],
+    /// The geometry the stencil was decoded under.
+    pub geometry: Geometry,
+    /// `stencil[wr][wc]` — window-cell requirements, window² cells.
+    pub stencil: Vec<Vec<Cell>>,
     /// Inclusive window-position bounds implied by the thermometer
     /// literals: x ∈ [x_min, x_max], y ∈ [y_min, y_max].
     pub x_range: (usize, usize),
@@ -41,14 +47,16 @@ pub struct ClauseInfo {
 
 /// Decode clause `j` of a model.
 pub fn describe_clause(model: &Model, j: usize) -> ClauseInfo {
+    let g = model.params.geometry;
+    let (window, pos_bits, o) = (g.window, g.pos_bits(), g.num_features());
     let include = model.include(j);
-    let mut stencil = [[Cell::DontCare; WINDOW]; WINDOW];
-    for wr in 0..WINDOW {
-        for wc in 0..WINDOW {
-            let k = wr * WINDOW + wc;
+    let mut stencil = vec![vec![Cell::DontCare; window]; window];
+    for (wr, row) in stencil.iter_mut().enumerate() {
+        for (wc, cell) in row.iter_mut().enumerate() {
+            let k = wr * window + wc;
             let pos = include.get(k);
-            let neg = include.get(NUM_FEATURES + k);
-            stencil[wr][wc] = match (pos, neg) {
+            let neg = include.get(o + k);
+            *cell = match (pos, neg) {
                 (true, true) => Cell::Conflict,
                 (true, false) => Cell::On,
                 (false, true) => Cell::Off,
@@ -58,24 +66,25 @@ pub fn describe_clause(model: &Model, j: usize) -> ClauseInfo {
     }
     // Thermometer bit t (LSB-first): feature = (coord ≥ t+1).
     // Included positive literal t ⇒ coord ≥ t+1; included negated ⇒ coord ≤ t.
-    let mut bound = |base: usize| -> (usize, usize) {
+    let bound = |base: usize| -> (usize, usize) {
         let mut lo = 0usize;
-        let mut hi = POSITIONS - 1;
-        for t in 0..POS_BITS {
+        let mut hi = g.positions() - 1;
+        for t in 0..pos_bits {
             if include.get(base + t) {
                 lo = lo.max(t + 1);
             }
-            if include.get(NUM_FEATURES + base + t) {
+            if include.get(o + base + t) {
                 hi = hi.min(t);
             }
         }
         (lo, hi)
     };
-    let y_range = bound(WINDOW * WINDOW);
-    let x_range = bound(WINDOW * WINDOW + POS_BITS);
+    let y_range = bound(window * window);
+    let x_range = bound(window * window + pos_bits);
     let infeasible = x_range.0 > x_range.1 || y_range.0 > y_range.1;
     ClauseInfo {
         index: j,
+        geometry: g,
         stencil,
         x_range,
         y_range,
@@ -86,8 +95,8 @@ pub fn describe_clause(model: &Model, j: usize) -> ClauseInfo {
 }
 
 impl ClauseInfo {
-    /// Render the stencil as 10 text rows (`#` on, `.` off, space don't-care,
-    /// `!` conflict).
+    /// Render the stencil as window-side text rows (`#` on, `.` off, space
+    /// don't-care, `!` conflict).
     pub fn stencil_rows(&self) -> Vec<String> {
         self.stencil
             .iter()
@@ -142,6 +151,7 @@ pub fn describe_model(model: &Model) -> Vec<ClauseInfo> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::patches::{NUM_FEATURES, POS_BITS, WINDOW};
     use crate::tm::Params;
 
     fn model_with(clause_setup: impl Fn(&mut Model)) -> Model {
@@ -206,6 +216,22 @@ mod tests {
         });
         let infos = describe_model(&m);
         assert_eq!(infos[0].index, 3, "most influential clause first");
+    }
+
+    #[test]
+    fn stencil_follows_runtime_geometry() {
+        use crate::data::Geometry;
+        let g = Geometry::cifar10();
+        let p = Params::for_geometry(g);
+        let mut m = Model::blank(p);
+        m.set_include(0, 0, true);
+        // x ≥ 20 only exists with 22 position bits (32×32 geometry).
+        m.set_include(0, g.window * g.window + g.pos_bits() + 19, true);
+        let info = describe_clause(&m, 0);
+        assert_eq!(info.stencil.len(), 10);
+        assert_eq!(info.x_range, (20, 22));
+        assert_eq!(info.y_range, (0, 22));
+        assert_eq!(info.geometry, g);
     }
 
     #[test]

@@ -4,8 +4,12 @@
 //! classes, 272 literals per patch, 8-bit signed clause weights. Training
 //! hyper-parameters (T, s) follow the CoTM conventions; they exist only on
 //! the training path — the chip is inference-only.
+//!
+//! The patch [`Geometry`] is a runtime value carried here so the same
+//! stack serves other image/window/stride configurations (§VI-C);
+//! [`Params::asic`] reproduces the manufactured chip.
 
-use crate::data::{NUM_CLASSES, NUM_LITERALS};
+use crate::data::{Geometry, NUM_CLASSES, NUM_LITERALS};
 
 /// Number of clauses in the accelerator configuration.
 pub const NUM_CLAUSES: usize = 128;
@@ -27,8 +31,12 @@ pub struct Params {
     pub clauses: usize,
     /// Number of classes m.
     pub classes: usize,
-    /// Literals per patch 2o.
+    /// Literals per patch 2o. For image pipelines this equals
+    /// `geometry.num_literals()`; pure-TM test configurations may use any
+    /// even count.
     pub literals: usize,
+    /// Patch geometry of the convolution stage.
+    pub geometry: Geometry,
     /// Feedback target T (class-sum clamp during training).
     pub t: i32,
     /// Specificity s (> 1).
@@ -47,6 +55,7 @@ impl Default for Params {
             clauses: NUM_CLAUSES,
             classes: NUM_CLASSES,
             literals: NUM_LITERALS,
+            geometry: Geometry::asic(),
             t: 500,
             s: 10.0,
             ta_states: 128,
@@ -71,6 +80,29 @@ impl Params {
         }
     }
 
+    /// The accelerator configuration retargeted to another patch geometry
+    /// (literal count derived from it).
+    pub fn for_geometry(geometry: Geometry) -> Self {
+        Params {
+            geometry,
+            literals: geometry.num_literals(),
+            ..Params::default()
+        }
+    }
+
+    /// Bytes per clause's TA-action row on the wire (literals packed
+    /// LSB-first, zero-padded to a byte boundary).
+    pub fn literal_bytes(&self) -> usize {
+        self.literals.div_ceil(8)
+    }
+
+    /// Model payload size on the load-model wire: per-clause TA-action
+    /// bytes followed by the 8-bit weights. 5 632 bytes for the ASIC
+    /// configuration (§IV-B).
+    pub fn model_wire_bytes(&self) -> usize {
+        self.clauses * self.literal_bytes() + self.classes * self.clauses
+    }
+
     /// Model size in bits for this configuration (register storage as in
     /// §IV-B: one TA-action bit per literal per clause + 8-bit weights).
     pub fn model_bits(&self) -> usize {
@@ -84,6 +116,12 @@ impl Params {
         self.clauses * budget * addr_bits + self.classes * self.clauses * 8
     }
 
+    /// Whether the literal count matches the patch geometry — required by
+    /// every image-consuming path (patch generation, engines, backends).
+    pub fn literals_match_geometry(&self) -> bool {
+        self.literals == self.geometry.num_literals()
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.clauses == 0 || self.classes == 0 || self.literals == 0 {
             return Err("dimensions must be positive".into());
@@ -91,6 +129,7 @@ impl Params {
         if self.literals % 2 != 0 {
             return Err("literals must be even (features + negations)".into());
         }
+        self.geometry.validate()?;
         if self.t <= 0 {
             return Err("T must be positive".into());
         }
@@ -120,6 +159,21 @@ mod tests {
         assert_eq!(MODEL_BITS, 45_056);
         assert_eq!(MODEL_BYTES, 5_632);
         assert_eq!(Params::asic().model_bits(), MODEL_BITS);
+        assert_eq!(Params::asic().model_wire_bytes(), MODEL_BYTES);
+        assert!(Params::asic().literals_match_geometry());
+    }
+
+    #[test]
+    fn for_geometry_derives_literals() {
+        let p = Params::for_geometry(Geometry::cifar10());
+        assert_eq!(p.literals, 288);
+        assert!(p.literals_match_geometry());
+        assert!(p.validate().is_ok());
+        // Non-byte-aligned literal rows round up on the wire.
+        let p2 = Params::for_geometry(Geometry::new(28, 10, 2).unwrap());
+        assert_eq!(p2.literals, 236);
+        assert_eq!(p2.literal_bytes(), 30);
+        assert_eq!(p2.model_wire_bytes(), 128 * 30 + 10 * 128);
     }
 
     #[test]
@@ -152,6 +206,9 @@ mod tests {
         assert!(p.validate().is_err());
         let mut p = Params::asic();
         p.literals = 271;
+        assert!(p.validate().is_err());
+        let mut p = Params::asic();
+        p.geometry.window = 0;
         assert!(p.validate().is_err());
     }
 }

@@ -102,21 +102,28 @@ impl Trainer {
         //    everything) so Type Ia feedback can bootstrap includes; only
         //    *inference* forces empty clauses low (§IV-D Empty logic) —
         //    clause_patches() returns the full mask for empty includes.
-        let sets = super::fast::PatchSets::build(img);
+        let g = self.params.geometry;
+        let sets = super::fast::PatchSets::build(g, img);
         let n = self.params.clauses;
         let mut fired = BitVec::zeros(n);
         let mut feedback_patch = vec![0usize; n];
+        let mut patches_set: super::fast::PatchSet = Vec::new();
         let mut lit_cache: std::collections::HashMap<usize, BitVec> =
             std::collections::HashMap::new();
         for j in 0..n {
-            let patches_set = sets.clause_patches(self.model.include(j));
+            sets.clause_patches_into(self.model.include(j), &mut patches_set);
             let hits = super::fast::popcount(&patches_set);
             if hits > 0 {
                 fired.set(j, true);
                 let pick = self.rng.below(hits);
-                feedback_patch[j] = super::fast::nth_set_bit(&patches_set, pick);
+                feedback_patch[j] = match super::fast::nth_set_bit(&patches_set, pick) {
+                    Some(b) => b,
+                    // Unreachable for pick < hits; fall back to a uniform
+                    // patch rather than aborting training.
+                    None => self.rng.usize_below(g.num_patches()),
+                };
             } else {
-                feedback_patch[j] = self.rng.usize_below(patches::NUM_PATCHES);
+                feedback_patch[j] = self.rng.usize_below(g.num_patches());
             }
         }
         // Materialize literals only for the (≤ n distinct) selected patches.
@@ -124,8 +131,8 @@ impl Trainer {
             cache
                 .entry(b)
                 .or_insert_with(|| {
-                    let (x, y) = patches::patch_pos(b);
-                    patches::patch_literals(img, x, y)
+                    let (x, y) = patches::patch_pos(g, b);
+                    patches::patch_literals(g, img, x, y)
                 })
                 .clone()
         };

@@ -7,9 +7,7 @@ use convcotm::asic::{axi, Accelerator, ChipConfig};
 use convcotm::coordinator::{BatchConfig, Coordinator, MirrorBackend, NativeBackend};
 use convcotm::data::{booleanize_split, SynthFamily};
 use convcotm::model_io;
-use convcotm::runtime::{ModelInputs, Runtime};
 use convcotm::tm::{Engine, Params, Trainer};
-use std::path::PathBuf;
 
 fn trained_fixture() -> (convcotm::tm::Model, Vec<(convcotm::data::BoolImage, u8)>) {
     let dataset = SynthFamily::Digits.generate(300, 80, 99);
@@ -34,7 +32,7 @@ fn train_save_load_axi_classify_roundtrip() {
 
     // Push through the AXI load-model framing into the accelerator.
     let wire = model_io::to_wire(&loaded);
-    let beats = axi::frame_model(&wire);
+    let beats = axi::frame_model(&wire, loaded.params.model_wire_bytes());
     assert_eq!(beats.len(), 5_632);
     let payload: Vec<u8> = beats.iter().map(|b| b.data).collect();
     let mut acc = Accelerator::new(Params::asic(), ChipConfig::default());
@@ -64,8 +62,11 @@ fn train_save_load_axi_classify_roundtrip() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn trained_model_matches_pjrt_artifact() {
+    use convcotm::runtime::{ModelInputs, Runtime};
+    use std::path::PathBuf;
     let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifact_dir.join("convcotm_b1.hlo.txt").exists() {
         eprintln!("skipping: run `make artifacts` first");
@@ -159,7 +160,8 @@ fn literal_budget_pipeline_end_to_end() {
     for (img, _) in test.iter().take(15) {
         let sw = engine.classify(&model, img);
         // Evaluate the budgeted clauses directly on each patch and OR.
-        let patches = convcotm::data::patches::all_patch_literals(img);
+        let patches =
+            convcotm::data::patches::all_patch_literals(model.params.geometry, img);
         for (j, clause) in budgeted.clauses.iter().enumerate() {
             let fired = patches.iter().any(|lits| clause.fires(lits));
             assert_eq!(fired, sw.clauses.get(j), "clause {j}");

@@ -1,0 +1,112 @@
+//! Non-default-geometry integration: the §VI-C CIFAR-shaped 32×32
+//! configuration trains on synthetic data and classifies end-to-end
+//! through the serving stack (Coordinator + NativeBackend), with the ASIC
+//! simulator mirroring the native engine bit-for-bit — the refactor's
+//! acceptance path.
+
+use convcotm::asic::ChipConfig;
+use convcotm::coordinator::{
+    AsicBackend, Backend, BatchConfig, Coordinator, MirrorBackend, NativeBackend,
+};
+use convcotm::data::{booleanize_split_for_geometry, Geometry, SynthFamily};
+use convcotm::model_io;
+use convcotm::tm::{Engine, Params, Trainer};
+
+/// Train a 32×32 model on the synthetic digit substitute (center-padded
+/// from its native 28×28), restricted to a binary sub-problem so the test
+/// stays fast.
+fn trained_cifar_shaped_fixture() -> (convcotm::tm::Model, Vec<(convcotm::data::BoolImage, u8)>) {
+    let g = Geometry::cifar10();
+    let dataset = SynthFamily::Digits.generate(300, 120, 17);
+    let train: Vec<_> =
+        booleanize_split_for_geometry(&dataset.train, dataset.booleanizer, g)
+            .into_iter()
+            .filter(|(_, l)| *l < 2)
+            .collect();
+    let test: Vec<_> = booleanize_split_for_geometry(&dataset.test, dataset.booleanizer, g)
+        .into_iter()
+        .filter(|(_, l)| *l < 2)
+        .collect();
+    let params = Params {
+        clauses: 20,
+        t: 20,
+        s: 6.0,
+        ..Params::for_geometry(g)
+    };
+    let mut trainer = Trainer::new(params, 17);
+    for e in 0..6 {
+        trainer.epoch(&train, e);
+    }
+    (trainer.export(), test)
+}
+
+#[test]
+fn cifar_shaped_geometry_trains_and_serves_end_to_end() {
+    let (model, test) = trained_cifar_shaped_fixture();
+    assert_eq!(model.params.geometry, Geometry::cifar10());
+    assert_eq!(model.params.literals, 288);
+
+    // The model actually learned the (padded) problem at 32×32.
+    let engine = Engine::new();
+    let acc = engine.accuracy(&model, &test);
+    assert!(acc > 0.85, "32×32 digit 0-vs-1 accuracy {acc}");
+
+    // Save/load through the geometry-carrying container.
+    let path = std::env::temp_dir().join("geometry_e2e_cifar.cctm");
+    model_io::save_file(&model, &path).unwrap();
+    let loaded = model_io::load_file_auto(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(loaded == model);
+
+    // Serve through the coordinator over the native backend.
+    let coord = Coordinator::start(
+        Box::new(NativeBackend::new(loaded.clone())),
+        BatchConfig::default(),
+    );
+    for (img, _) in test.iter().take(24) {
+        let out = coord.classify(img.clone()).unwrap();
+        assert_eq!(out.prediction, engine.classify(&loaded, img).prediction);
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.requests, 24);
+}
+
+#[test]
+fn cifar_shaped_mirror_native_vs_asic_sim() {
+    let (model, test) = trained_cifar_shaped_fixture();
+    let m1 = model.clone();
+    let m2 = model;
+    let coord = Coordinator::start_with(
+        move || {
+            MirrorBackend::new(
+                Box::new(AsicBackend::new(&m1, ChipConfig::default())),
+                Box::new(NativeBackend::new(m2.clone())),
+            )
+        },
+        BatchConfig::default(),
+    );
+    let mut cycles = Vec::new();
+    for (img, _) in test.iter().take(12) {
+        let out = coord.classify(img.clone()).unwrap();
+        cycles.push(out.sim_cycles.expect("asic-sim primary reports cycles"));
+    }
+    // Geometry-derived cycle budget: 529 patches + 11 fixed processing
+    // cycles = 540; the first image also pays the 129-beat transfer.
+    assert_eq!(cycles[0], 540 + 129);
+    assert!(cycles[1..].iter().all(|&c| c == 540), "{cycles:?}");
+    let snap = coord.shutdown();
+    assert_eq!(snap.errors, 0, "ASIC sim must match native at 32×32");
+    assert_eq!(snap.requests, 12);
+}
+
+#[test]
+fn backend_rejects_wrong_geometry_requests() {
+    let (model, _) = trained_cifar_shaped_fixture();
+    let mut backend = NativeBackend::new(model);
+    assert_eq!(backend.geometry(), Geometry::cifar10());
+    // A default 28×28 request against the 32×32 model errors cleanly.
+    let wrong = convcotm::data::BoolImage::blank();
+    let err = backend.classify(&[&wrong]).unwrap_err();
+    assert!(err.to_string().contains("expects 32x32"), "{err}");
+}
