@@ -1,27 +1,58 @@
 //! Hot-path microbenchmarks (the §Perf instrument): native engine
-//! throughput, ASIC-simulator speed, PJRT artifact throughput (batch 1 and
-//! 16), trainer throughput and coordinator batching overhead.
+//! throughput (compiled-plan and legacy paths), ASIC-simulator speed, PJRT
+//! artifact throughput (batch 1 and 16), trainer throughput and
+//! coordinator batching overhead.
 //!
-//! Targets (DESIGN.md §7): native ≥60.3 k img/s single core; ASIC sim
-//! ≥1 M cycles/s; coordinator overhead <10 µs p50.
+//! Targets (DESIGN.md §7): native ≥60.3 k img/s single core; compiled plan
+//! ≥1.5× the mask-scan early-exit path with 0 heap allocations per image;
+//! ASIC sim ≥1 M cycles/s; coordinator overhead <10 µs p50.
 //!
-//! Run: `cargo bench --bench hotpath_microbench`
+//! Besides the markdown table, the run writes machine-readable
+//! `BENCH_hotpath.json` next to the manifest (override with the
+//! `BENCH_JSON` env var) so the perf trajectory is tracked in CI from one
+//! PR to the next.
+//!
+//! Run: `cargo bench --bench hotpath_microbench` (`BENCH_QUICK=1` for the
+//! CI-sized run).
 
 use convcotm::asic::{Accelerator, ChipConfig};
-use convcotm::bench_harness::{fmt_k, section, FixtureSpec};
+use convcotm::bench_harness::{fmt_k, section, CountingAllocator, FixtureSpec};
 use convcotm::coordinator::{Backend, BatchConfig, Coordinator, NativeBackend};
 use convcotm::data::SynthFamily;
-use convcotm::tm::{Engine, Trainer};
+use convcotm::tm::{ClausePlan, Engine, EvalScratch, Trainer};
+use convcotm::util::json::Json;
 use convcotm::util::stats::Summary;
 use convcotm::util::Table;
 use std::time::{Duration, Instant};
 
-fn throughput(label: &str, t: &mut Table, images_per_iter: usize, mut f: impl FnMut()) -> f64 {
-    // Warmup.
+// Count every heap allocation so the zero-alloc invariant of the
+// compiled-plan path is *measured*, not assumed.
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// One measured row, mirrored into the markdown table and the JSON file.
+struct Row {
+    label: String,
+    img_per_s: f64,
+    us_per_img: f64,
+    allocs_per_img: Option<f64>,
+}
+
+fn bench_budget() -> Duration {
+    Duration::from_millis(if std::env::var("BENCH_QUICK").is_ok() { 300 } else { 1500 })
+}
+
+fn throughput(
+    label: &str,
+    t: &mut Table,
+    rows: &mut Vec<Row>,
+    images_per_iter: usize,
+    mut f: impl FnMut(),
+) -> f64 {
+    // Warmup (also grows any lazily sized buffers).
     f();
-    let budget = Duration::from_millis(
-        if std::env::var("BENCH_QUICK").is_ok() { 300 } else { 1500 },
-    );
+    let budget = bench_budget();
+    let a0 = CountingAllocator::allocations();
     let start = Instant::now();
     let mut iters = 0usize;
     while start.elapsed() < budget {
@@ -29,12 +60,21 @@ fn throughput(label: &str, t: &mut Table, images_per_iter: usize, mut f: impl Fn
         iters += 1;
     }
     let secs = start.elapsed().as_secs_f64();
+    let a1 = CountingAllocator::allocations();
     let rate = (iters * images_per_iter) as f64 / secs;
+    let allocs = (a1 - a0) as f64 / (iters * images_per_iter) as f64;
     t.row(&[
         label.into(),
         format!("{} img/s", fmt_k(rate)),
         format!("{:.2} µs/img", 1e6 / rate),
+        format!("{allocs:.1} allocs/img"),
     ]);
+    rows.push(Row {
+        label: label.to_string(),
+        img_per_s: rate,
+        us_per_img: 1e6 / rate,
+        allocs_per_img: Some(allocs),
+    });
     rate
 }
 
@@ -44,46 +84,73 @@ fn main() {
     let images: Vec<_> = fixture.test.iter().map(|(i, _)| i.clone()).collect();
     let model = fixture.model.clone();
 
-    let mut t = Table::new(&["Path", "Throughput", "Per image"]);
+    let mut t = Table::new(&["Path", "Throughput", "Per image", "Heap"]);
+    let mut rows: Vec<Row> = Vec::new();
 
-    // Native engine, early-exit on (the CSRF analogue).
+    // Native engine through the compiled clause plan + arena (the §Perf
+    // serving path). The acceptance bar: ≥1.5× the mask-scan early-exit
+    // row below, at exactly 0 allocs/img in steady state.
     let engine = Engine::new();
+    let plan = ClausePlan::compile(&model);
+    let mut scratch = EvalScratch::new();
+    let mut idx0 = 0usize;
+    let plan_rate = throughput("native engine (compiled plan)", &mut t, &mut rows, 1, || {
+        let img = &images[idx0 % images.len()];
+        idx0 += 1;
+        std::hint::black_box(engine.classify_with(&plan, img, &mut scratch));
+    });
+    let plan_allocs = rows.last().and_then(|r| r.allocs_per_img).unwrap_or(f64::NAN);
+
+    // Native engine, mask-scan early-exit (the pre-plan fast path).
     let mut idx = 0usize;
-    let native_rate = throughput("native engine (early-exit)", &mut t, 1, || {
+    let native_rate = throughput("native engine (early-exit)", &mut t, &mut rows, 1, || {
         let img = &images[idx % images.len()];
         idx += 1;
         std::hint::black_box(engine.classify(&model, img));
     });
 
-    // Native engine, exhaustive.
+    // Native engine, exhaustive per-patch evaluation (the oracle).
     let slow_engine = Engine { early_exit: false };
     let mut idx2 = 0usize;
-    throughput("native engine (exhaustive)", &mut t, 1, || {
+    throughput("native engine (exhaustive)", &mut t, &mut rows, 1, || {
         let img = &images[idx2 % images.len()];
         idx2 += 1;
         std::hint::black_box(slow_engine.classify(&model, img));
     });
 
-    // ASIC simulator.
+    // ASIC simulator. Cycles come from the accelerator's own geometry-
+    // derived report (372/image for the ASIC shape in continuous mode;
+    // strided and CIFAR fixtures report their actual figures).
     let mut acc = Accelerator::new(model.params.clone(), ChipConfig::default());
     acc.load_model(&model);
     let mut idx3 = 0usize;
     let t_sim = Instant::now();
     let mut sim_iters = 0usize;
-    while t_sim.elapsed() < Duration::from_millis(800) {
+    let mut sim_cycles_total = 0u64;
+    let sim_budget = bench_budget();
+    while t_sim.elapsed() < sim_budget {
         let img = &images[idx3 % images.len()];
         idx3 += 1;
-        std::hint::black_box(acc.classify(img, None, true).unwrap());
+        let res = acc.classify(img, None, true).unwrap();
+        sim_cycles_total += res.report.phases.latency() as u64;
+        std::hint::black_box(res);
         sim_iters += 1;
     }
     let sim_secs = t_sim.elapsed().as_secs_f64();
     let sim_rate = sim_iters as f64 / sim_secs;
-    let sim_cycles_rate = sim_rate * 372.0;
+    let sim_cycles_rate = sim_cycles_total as f64 / sim_secs;
     t.row(&[
         "ASIC simulator".into(),
         format!("{} img/s", fmt_k(sim_rate)),
         format!("{:.2} M sim-cycles/s", sim_cycles_rate / 1e6),
+        "—".into(),
     ]);
+    rows.push(Row {
+        label: "ASIC simulator".into(),
+        img_per_s: sim_rate,
+        us_per_img: 1e6 / sim_rate,
+        allocs_per_img: None,
+    });
 
     // Batch classification through the NativeBackend: serial vs parallel
     // over the batch (the coordinator's multi-core path).
@@ -93,6 +160,7 @@ fn main() {
         throughput(
             &format!("NativeBackend batch={} (1 thread)", refs.len()),
             &mut t,
+            &mut rows,
             refs.len(),
             || {
                 std::hint::black_box(serial.classify(&refs).unwrap());
@@ -103,6 +171,7 @@ fn main() {
         throughput(
             &format!("NativeBackend batch={} ({cores} threads)", refs.len()),
             &mut t,
+            &mut rows,
             refs.len(),
             || {
                 std::hint::black_box(parallel.classify(&refs).unwrap());
@@ -122,7 +191,7 @@ fn main() {
         {
             let g1 = rt.load("convcotm_b1", 1).unwrap();
             let mut i = 0usize;
-            throughput("PJRT artifact (batch 1)", &mut t, 1, || {
+            throughput("PJRT artifact (batch 1)", &mut t, &mut rows, 1, || {
                 let img = &images[i % images.len()];
                 i += 1;
                 std::hint::black_box(g1.run(&[img], &mi).unwrap());
@@ -131,7 +200,7 @@ fn main() {
         {
             let g16 = rt.load("convcotm_b16", 16).unwrap();
             let refs: Vec<&convcotm::data::BoolImage> = images.iter().take(16).collect();
-            throughput("PJRT artifact (batch 16)", &mut t, 16, || {
+            throughput("PJRT artifact (batch 16)", &mut t, &mut rows, 16, || {
                 std::hint::black_box(g16.run(&refs, &mi).unwrap());
             });
         }
@@ -139,16 +208,23 @@ fn main() {
         eprintln!("(PJRT rows skipped: run `make artifacts`)");
     }
 
-    // Trainer throughput (the §VI-B substrate).
+    // Trainer throughput (the §VI-B substrate; plan-synced + arena-backed,
+    // so steady-state updates are also allocation-free).
     let mut trainer = Trainer::new(model.params.clone(), 7);
     let mut i = 0usize;
-    throughput("trainer (update/sample)", &mut t, 1, || {
+    throughput("trainer (update/sample)", &mut t, &mut rows, 1, || {
         let (img, label) = &fixture.train[i % fixture.train.len()];
         i += 1;
         trainer.update(img, *label);
     });
 
     println!("{}", t.to_markdown());
+    println!(
+        "compiled plan vs early-exit: {:.2}× (target ≥1.5×) at {:.1} allocs/img (target 0) — {}",
+        plan_rate / native_rate,
+        plan_allocs,
+        if plan_rate >= 1.5 * native_rate && plan_allocs == 0.0 { "HOLDS" } else { "MISSED" }
+    );
 
     // Coordinator batching overhead: compare direct engine latency with
     // end-to-end coordinator latency under a single-inflight load.
@@ -167,7 +243,7 @@ fn main() {
         lats.push(t0.elapsed().as_secs_f64() * 1e6);
     }
     let snap = coord.shutdown();
-    let direct_us = 1e6 / native_rate;
+    let direct_us = 1e6 / plan_rate;
     let s = Summary::of(&lats);
     println!(
         "end-to-end p50 {:.1} µs (direct engine {:.1} µs) → overhead {:.1} µs; p99 {:.1} µs; batches formed: {}",
@@ -208,5 +284,42 @@ fn main() {
             fmt_k(rate),
             snap.batches
         );
+    }
+
+    // Machine-readable trajectory: BENCH_hotpath.json (CI uploads it).
+    let json = Json::obj([
+        ("bench", Json::str("hotpath_microbench")),
+        ("fixture", Json::str("synth-digits quick (300 train / 100 test)")),
+        ("geometry", Json::str(model.params.geometry.to_string())),
+        ("quick", Json::Bool(std::env::var("BENCH_QUICK").is_ok())),
+        (
+            "sim_cycles_per_s",
+            Json::num(sim_cycles_rate),
+        ),
+        (
+            "plan_speedup_vs_early_exit",
+            Json::num(plan_rate / native_rate),
+        ),
+        (
+            "rows",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj([
+                    ("path", Json::str(r.label.clone())),
+                    ("img_per_s", Json::num(r.img_per_s)),
+                    ("us_per_img", Json::num(r.us_per_img)),
+                    (
+                        "allocs_per_img",
+                        r.allocs_per_img.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })),
+        ),
+    ]);
+    let out_path = std::env::var("BENCH_JSON").unwrap_or_else(|_| {
+        format!("{}/BENCH_hotpath.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    match std::fs::write(&out_path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
     }
 }

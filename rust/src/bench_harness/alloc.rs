@@ -1,0 +1,73 @@
+//! A counting global allocator for bench builds (the §Perf zero-alloc
+//! instrument).
+//!
+//! Benches register it with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: convcotm::bench_harness::CountingAllocator = CountingAllocator;
+//! ```
+//!
+//! and bracket a measured loop with [`CountingAllocator::allocations`]
+//! snapshots: the delta divided by the iteration count is the
+//! allocations-per-image figure reported in `BENCH_hotpath.json`. The
+//! steady-state compiled-plan classification path must report **zero**.
+//!
+//! Only allocation *events* are counted (alloc + grow-reallocs), which is
+//! what the zero-alloc invariant is about; dealloc is not counted so a
+//! drop-heavy path cannot cancel out an alloc-heavy one.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Forwarding allocator around [`System`] that counts allocation events.
+pub struct CountingAllocator;
+
+impl CountingAllocator {
+    /// Total allocation events since process start (monotonic). Only
+    /// meaningful when the process registered this type as its
+    /// `#[global_allocator]`; otherwise stays 0.
+    pub fn allocations() -> u64 {
+        ALLOCATIONS.load(Ordering::Relaxed)
+    }
+}
+
+// SAFETY: pure forwarding to `System`; the counter has no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_monotonic_and_readable() {
+        // The test binary does not register the allocator globally, so the
+        // counter only moves if some other test build did; either way it
+        // must be readable and monotonic.
+        let a = CountingAllocator::allocations();
+        let b = CountingAllocator::allocations();
+        assert!(b >= a);
+    }
+}

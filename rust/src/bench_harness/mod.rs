@@ -3,7 +3,10 @@
 //! printing paper-style tables (criterion is not vendored in this offline
 //! build; benches are `harness = false` binaries over `util::stats`).
 
+pub mod alloc;
 pub mod literature;
+
+pub use alloc::CountingAllocator;
 
 use crate::data::{booleanize_split, BoolImage, Dataset, SynthFamily};
 use crate::tm::{Model, Params, Trainer};

@@ -11,7 +11,7 @@
 use crate::asic::{Accelerator, ChipConfig};
 use crate::data::boolean::BoolImage;
 use crate::data::Geometry;
-use crate::tm::{Engine, Model};
+use crate::tm::{ClausePlan, EvalScratch, Model};
 use anyhow::{anyhow, Result};
 
 /// One classification outcome from a backend.
@@ -70,14 +70,38 @@ fn validate_geometry(name: &str, g: Geometry, imgs: &[&BoolImage]) -> Result<()>
     Ok(())
 }
 
-/// The native Rust golden-model engine (SW baseline). Batches are
+/// The native Rust golden-model engine (SW baseline). The model is
+/// compiled once into a [`ClausePlan`] (sparse ordered include lists +
+/// clause-major weights) and every worker evaluates through a reusable
+/// [`EvalScratch`] arena, so the *plan-evaluation step* is allocation-free
+/// (constructing each `BackendOutput` still allocates its class-sums Vec —
+/// that is the serving API's cost, not the evaluator's). Batches are
 /// classified in parallel across worker threads (scoped; images are
-/// independent), which is what lets the coordinator's dynamic batching
-/// use more than one core.
+/// independent), which is what lets the coordinator's dynamic batching use
+/// more than one core.
 pub struct NativeBackend {
     model: Model,
-    engine: Engine,
+    plan: ClausePlan,
     threads: usize,
+    /// Serial-path arena.
+    scratch: EvalScratch,
+    /// Parallel-path arenas, one per worker, persisted across batches so
+    /// the per-batch scoped threads re-use warm patch-set tables.
+    worker_scratch: Vec<EvalScratch>,
+}
+
+/// Classify one image through the compiled plan + arena.
+fn plan_classify_one(
+    plan: &ClausePlan,
+    img: &BoolImage,
+    scratch: &mut EvalScratch,
+) -> BackendOutput {
+    let prediction = plan.classify_into(img, scratch);
+    BackendOutput {
+        prediction,
+        class_sums: scratch.class_sums().to_vec(),
+        sim_cycles: None,
+    }
 }
 
 impl NativeBackend {
@@ -88,22 +112,16 @@ impl NativeBackend {
         Self::with_threads(model, threads)
     }
 
-    /// Explicit worker-thread cap (1 = serial; used by benches to measure
-    /// the batch-parallel speedup).
+    /// Explicit worker-thread cap (1 = serial; used by benches and the
+    /// CLI's `--threads` flag to measure the batch-parallel speedup).
     pub fn with_threads(model: Model, threads: usize) -> Self {
+        let plan = ClausePlan::compile(&model);
         NativeBackend {
             model,
-            engine: Engine::new(),
+            plan,
             threads: threads.max(1),
-        }
-    }
-
-    fn classify_one(&self, img: &BoolImage) -> BackendOutput {
-        let inf = self.engine.classify(&self.model, img);
-        BackendOutput {
-            prediction: inf.prediction,
-            class_sums: inf.class_sums,
-            sim_cycles: None,
+            scratch: EvalScratch::new(),
+            worker_scratch: Vec::new(),
         }
     }
 }
@@ -128,16 +146,31 @@ impl Backend for NativeBackend {
         // cost exceeds the ~µs-scale per-image engine work, so stay serial.
         const MIN_PARALLEL_BATCH: usize = 8;
         if threads <= 1 || imgs.len() < MIN_PARALLEL_BATCH {
-            return Ok(imgs.iter().map(|img| self.classify_one(img)).collect());
+            let NativeBackend { plan, scratch, .. } = self;
+            return Ok(imgs
+                .iter()
+                .map(|img| plan_classify_one(plan, img, scratch))
+                .collect());
         }
-        // Chunk the batch across scoped threads; &self (model + engine) is
-        // shared read-only, so no cloning on the hot path.
+        // Chunk the batch across scoped threads; the plan is shared
+        // read-only, each worker borrows its persistent arena for the
+        // whole chunk.
+        if self.worker_scratch.len() < threads {
+            self.worker_scratch.resize_with(threads, EvalScratch::new);
+        }
         let chunk = imgs.len().div_ceil(threads);
-        let this = &*self;
+        let plan = &self.plan;
         let outputs = std::thread::scope(|s| {
             let handles: Vec<_> = imgs
                 .chunks(chunk)
-                .map(|part| s.spawn(move || part.iter().map(|img| this.classify_one(img)).collect::<Vec<_>>()))
+                .zip(self.worker_scratch.iter_mut())
+                .map(|(part, scratch)| {
+                    s.spawn(move || {
+                        part.iter()
+                            .map(|img| plan_classify_one(plan, img, scratch))
+                            .collect::<Vec<_>>()
+                    })
+                })
                 .collect();
             handles
                 .into_iter()

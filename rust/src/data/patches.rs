@@ -90,8 +90,17 @@ pub fn patch_literals(g: Geometry, img: &BoolImage, x: usize, y: usize) -> BitVe
 /// Image rows packed as u64 bitmasks (bit x = pixel (x, y)) — the input
 /// format of the fast literal builder.
 pub fn pack_rows(g: Geometry, img: &BoolImage) -> Vec<u64> {
+    let mut rows = Vec::new();
+    pack_rows_into(g, img, &mut rows);
+    rows
+}
+
+/// [`pack_rows`] into a caller-owned buffer (cleared and refilled; no heap
+/// allocation once the buffer has capacity — the §Perf arena contract).
+pub fn pack_rows_into(g: Geometry, img: &BoolImage, rows: &mut Vec<u64>) {
     assert_eq!(img.side(), g.img_side, "image does not match geometry {g}");
-    let mut rows = vec![0u64; g.img_side];
+    rows.clear();
+    rows.resize(g.img_side, 0);
     for (y, row) in rows.iter_mut().enumerate() {
         let mut bits = 0u64;
         for x in 0..g.img_side {
@@ -101,7 +110,6 @@ pub fn pack_rows(g: Geometry, img: &BoolImage) -> Vec<u64> {
         }
         *row = bits;
     }
-    rows
 }
 
 /// Low `nbits` mask (nbits ≤ 64).
@@ -132,31 +140,48 @@ fn write_bits(words: &mut [u64], offset: usize, value: u64, nbits: usize) {
 /// [`patch_literals`] but built with word-level shifts instead of per-bit
 /// sets (the ASIC simulator's hot path — §Perf).
 pub fn patch_literals_from_rows(g: Geometry, rows: &[u64], x: usize, y: usize) -> BitVec {
+    let mut lits = BitVec::zeros(0);
+    let mut content = Vec::new();
+    patch_literals_from_rows_into(g, rows, x, y, &mut lits, &mut content);
+    lits
+}
+
+/// [`patch_literals_from_rows`] into caller-owned buffers (`out` is reset,
+/// `content` is a feature-word scratch) — zero heap allocations once both
+/// have capacity (the trainer's per-update path).
+pub fn patch_literals_from_rows_into(
+    g: Geometry,
+    rows: &[u64],
+    x: usize,
+    y: usize,
+    out: &mut BitVec,
+    content: &mut Vec<u64>,
+) {
     debug_assert!(x < g.positions() && y < g.positions());
     debug_assert_eq!(rows.len(), g.img_side);
     let (w, pb, o) = (g.window, g.pos_bits(), g.num_features());
     let wmask = low_mask(w);
-    let mut lits = BitVec::zeros(g.num_literals());
-    let words = lits.words_mut();
+    out.reset(g.num_literals());
+    let words = out.words_mut();
     // Features: window content rows (w bits each), then thermometers.
-    let mut content = vec![0u64; o.div_ceil(64)];
+    content.clear();
+    content.resize(o.div_ceil(64), 0);
     for wr in 0..w {
         let bits = (rows[y * g.stride + wr] >> (x * g.stride)) & wmask;
-        write_bits(&mut content, wr * w, bits, w);
+        write_bits(content, wr * w, bits, w);
     }
     // Thermometers: y ones in the low bits (LSB-first code), likewise x.
     if pb > 0 {
-        write_bits(&mut content, w * w, low_mask(y), pb);
-        write_bits(&mut content, w * w + pb, low_mask(x), pb);
+        write_bits(content, w * w, low_mask(y), pb);
+        write_bits(content, w * w + pb, low_mask(x), pb);
     }
     // Literals: features at [0..o), negations at [o..2o). The content words
     // only carry bits below o, so the copy needs no masking.
-    words[..content.len()].copy_from_slice(&content);
+    words[..content.len()].copy_from_slice(content);
     for (i, &c) in content.iter().enumerate() {
         let nbits = (o - i * 64).min(64);
         write_bits(words, o + i * 64, !c & low_mask(nbits), nbits);
     }
-    lits
 }
 
 /// All patches' literals in patch-index order.
@@ -297,6 +322,25 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers_across_patches() {
+        // One shared (out, content, rows) buffer set must produce the same
+        // literals as fresh allocations for every patch in sequence.
+        let g = Geometry::new(28, 10, 2).unwrap();
+        let bits: Vec<bool> = (0..g.img_pixels()).map(|i| i % 3 == 0).collect();
+        let img = BoolImage::from_bools(&bits);
+        let mut rows = Vec::new();
+        pack_rows_into(g, &img, &mut rows);
+        assert_eq!(rows, pack_rows(g, &img));
+        let mut out = BitVec::zeros(0);
+        let mut content = Vec::new();
+        for p in 0..g.num_patches() {
+            let (x, y) = g.patch_pos(p);
+            patch_literals_from_rows_into(g, &rows, x, y, &mut out, &mut content);
+            assert_eq!(out, patch_literals(g, &img, x, y), "patch {p}");
+        }
     }
 
     #[test]

@@ -62,7 +62,7 @@ fn print_usage() {
          USAGE: convcotm <train|eval|serve|power|inspect|info> [--flags]\n\n\
          train  --dataset mnist|fmnist|kmnist --geometry G --n-train N --n-test N --epochs E --seed S --out FILE\n\
          eval   --model FILE --dataset D --n-test N\n\
-         serve  --model FILE --backend native|asic|pjrt --requests N --max-batch B\n\
+         serve  --model FILE --backend native|asic|pjrt --requests N --max-batch B --threads T\n\
          power  --model FILE [--vdd V --freq HZ]\n\
          info   [--geometry G]\n\n\
          Geometries: asic (28x10s1, default), cifar10 (32x10s1), or SIDExWINDOW[sSTRIDE].\n\
@@ -182,6 +182,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let backend_name = args.get_or("backend", "native");
     let requests = args.get_usize("requests", 1000).map_err(anyhow::Error::msg)?;
     let max_batch = args.get_usize("max-batch", 16).map_err(anyhow::Error::msg)?;
+    // Worker threads for the native backend's batch parallelism; 0 (the
+    // default) auto-sizes to the machine, 1 forces serial evaluation.
+    let threads = args.get_usize("threads", 0).map_err(anyhow::Error::msg)?;
     let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 256, 7)?;
     let test = booleanize_split_for_geometry(&dataset.test, dataset.booleanizer, g);
     let cfg = BatchConfig {
@@ -190,7 +193,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
 
     let coord = match backend_name.as_str() {
-        "native" => Coordinator::start(Box::new(NativeBackend::new(model)), cfg),
+        "native" => {
+            let backend = if threads == 0 {
+                NativeBackend::new(model)
+            } else {
+                NativeBackend::with_threads(model, threads)
+            };
+            Coordinator::start(Box::new(backend), cfg)
+        }
         "asic" => Coordinator::start(Box::new(AsicBackend::new(&model, ChipConfig::default())), cfg),
         #[cfg(feature = "pjrt")]
         "pjrt" => {

@@ -136,30 +136,100 @@ fn pos_sets(g: Geometry) -> Arc<PosSets> {
 }
 
 /// Per-image literal → patch-set table (one entry per literal).
+///
+/// The table is *rebuildable*: [`PatchSets::rebuild`] refills the same
+/// buffers for a new image, so steady-state classification and training
+/// touch the heap zero times per image (the §Perf arena contract).
 pub struct PatchSets {
     geometry: Geometry,
     words: usize,
     full: PatchSet,
     /// Flat [k · words ..] for k in 0..num_literals.
     sets: Vec<u64>,
+    /// Packed image rows scratch (reused across rebuilds).
+    rows: Vec<u64>,
+}
+
+impl Default for PatchSets {
+    /// An empty table: buffers are sized lazily by the first [`rebuild`]
+    /// (`Self::rebuild`), so the default is allocation-free.
+    fn default() -> Self {
+        PatchSets {
+            geometry: Geometry::asic(),
+            words: 0,
+            full: Vec::new(),
+            sets: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
 }
 
 impl PatchSets {
     /// Build from a booleanized image.
     pub fn build(g: Geometry, img: &BoolImage) -> PatchSets {
+        let mut out = PatchSets::default();
+        out.rebuild(g, img);
+        out
+    }
+
+    /// Refill the table for a new image, reusing every buffer. Switching
+    /// geometry re-sizes the buffers; rebuilding for the same geometry
+    /// performs no heap allocation.
+    pub fn rebuild(&mut self, g: Geometry, img: &BoolImage) {
+        self.rebuild_selective(g, img, None);
+    }
+
+    /// [`Self::rebuild`], restricted to the literals a compiled plan
+    /// actually references (`used[k]` = literal k appears in some clause).
+    /// Unused entries are *unspecified* (stale from a previous image or
+    /// zero) and must not be intersected. With the paper's ~88%-exclude
+    /// models this skips most of the window-content gather work — the
+    /// dominant per-image cost — and the table memset shrinks to just the
+    /// gathered content rows.
+    pub fn rebuild_selective(&mut self, g: Geometry, img: &BoolImage, used: Option<&[bool]>) {
         assert_eq!(img.side(), g.img_side, "image does not match geometry {g}");
+        if let Some(u) = used {
+            assert_eq!(u.len(), g.num_literals(), "used-literal map does not match {g}");
+        }
+        let is_used = |k: usize| used.map_or(true, |u| u[k]);
         let words = g.patch_words();
+        if self.geometry != g || self.full.is_empty() {
+            self.geometry = g;
+            self.words = words;
+            self.full = full_mask(g);
+        }
         let (positions, pos_bits, window, stride) =
             (g.positions(), g.pos_bits(), g.window, g.stride);
         let o = g.num_features();
-        let full = full_mask(g);
         // Image rows as u64 bitmasks (bit x = pixel (x, y)).
-        let rows = crate::data::patches::pack_rows(g, img);
-        let mut sets = vec![0u64; g.num_literals() * words];
+        crate::data::patches::pack_rows_into(g, img, &mut self.rows);
+        let rows = &self.rows;
+        // Only the gathered window-content rows are filled with `|=` and
+        // need pre-zeroing; thermometer and negation slots are written by
+        // whole-row assignment. Skipping the full-table memset is part of
+        // the selective-build win.
+        let expected = g.num_literals() * words;
+        if self.sets.len() != expected {
+            self.sets.clear();
+            self.sets.resize(expected, 0);
+        } else {
+            for k in 0..window * window {
+                if used.map_or(true, |u| u[k] || u[o + k]) {
+                    self.sets[k * words..(k + 1) * words].fill(0);
+                }
+            }
+        }
+        let sets = &mut self.sets;
+        let full = &self.full;
         let row_mask: u64 = if positions == 64 { !0 } else { (1u64 << positions) - 1 };
         for wr in 0..window {
             for wc in 0..window {
                 let k = wr * window + wc;
+                // The negation slot is derived from this one, so the
+                // content gather runs if either polarity is referenced.
+                if !is_used(k) && !is_used(o + k) {
+                    continue;
+                }
                 let s = &mut sets[k * words..(k + 1) * words];
                 for y in 0..positions {
                     // Patch (x, y) holds literal k iff pixel
@@ -186,24 +256,25 @@ impl PatchSets {
         // Position thermometers (per-geometry constants).
         let ps = pos_sets(g);
         for t in 0..2 * pos_bits {
-            let src = &ps.pos[t * ps.words..(t + 1) * ps.words];
-            sets[(window * window + t) * words..(window * window + t + 1) * words]
-                .copy_from_slice(src);
-            let srcn = &ps.neg[t * ps.words..(t + 1) * ps.words];
-            sets[(o + window * window + t) * words..(o + window * window + t + 1) * words]
-                .copy_from_slice(srcn);
+            if is_used(window * window + t) {
+                let src = &ps.pos[t * ps.words..(t + 1) * ps.words];
+                sets[(window * window + t) * words..(window * window + t + 1) * words]
+                    .copy_from_slice(src);
+            }
+            if is_used(o + window * window + t) {
+                let srcn = &ps.neg[t * ps.words..(t + 1) * ps.words];
+                sets[(o + window * window + t) * words..(o + window * window + t + 1) * words]
+                    .copy_from_slice(srcn);
+            }
         }
         // Negations of the content literals.
         for k in 0..window * window {
+            if !is_used(o + k) {
+                continue;
+            }
             for w in 0..words {
                 sets[(o + k) * words + w] = !sets[k * words + w] & full[w];
             }
-        }
-        PatchSets {
-            geometry: g,
-            words,
-            full,
-            sets,
         }
     }
 
@@ -228,6 +299,28 @@ impl PatchSets {
         out.extend_from_slice(&self.full);
         for k in include.iter_ones() {
             let s = &self.sets[k * self.words..(k + 1) * self.words];
+            let mut any = 0u64;
+            for (a, &b) in out.iter_mut().zip(s.iter()) {
+                *a &= b;
+                any |= *a;
+            }
+            if any == 0 {
+                out.fill(0);
+                return;
+            }
+        }
+    }
+
+    /// Intersect the patch sets of an explicit literal-id list into `out`
+    /// (the compiled-plan path: the list is a clause's CSR row, ordered
+    /// most-selective-first so the empty-intersection early exit fires
+    /// after the fewest AND steps). An empty list yields the full patch
+    /// set, mirroring [`Self::clause_patches_into`].
+    pub fn literal_list_patches_into(&self, literals: &[u16], out: &mut PatchSet) {
+        out.clear();
+        out.extend_from_slice(&self.full);
+        for &k in literals {
+            let s = &self.sets[k as usize * self.words..(k as usize + 1) * self.words];
             let mut any = 0u64;
             for (a, &b) in out.iter_mut().zip(s.iter()) {
                 *a &= b;
@@ -374,6 +467,71 @@ mod tests {
     #[test]
     fn clause_patches_match_direct_on_strided_geometry() {
         check_clause_patches_match_direct(Geometry::new(28, 10, 2).unwrap());
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_across_images_and_geometries() {
+        let mut rng = Xoshiro256ss::new(9);
+        let mut sets = PatchSets::default();
+        // Cycle through geometries (including back to the first) to prove a
+        // rebuilt table is indistinguishable from a fresh build.
+        for g in [G, Geometry::cifar10(), Geometry::new(28, 10, 2).unwrap(), G] {
+            for _ in 0..2 {
+                let img = random_image(&mut rng, g, 0.3);
+                sets.rebuild(g, &img);
+                let fresh = PatchSets::build(g, &img);
+                assert_eq!(sets.geometry(), g);
+                assert_eq!(sets.sets, fresh.sets, "{g}");
+                assert_eq!(sets.full, fresh.full, "{g}");
+            }
+        }
+    }
+
+    #[test]
+    fn selective_rebuild_matches_full_on_used_literals() {
+        let mut rng = Xoshiro256ss::new(23);
+        for g in [G, Geometry::new(28, 10, 2).unwrap()] {
+            let img = random_image(&mut rng, g, 0.3);
+            let full = PatchSets::build(g, &img);
+            let mut used = vec![false; g.num_literals()];
+            for _ in 0..g.num_literals() / 3 {
+                used[rng.usize_below(g.num_literals())] = true;
+            }
+            let mut selective = PatchSets::default();
+            selective.rebuild_selective(g, &img, Some(&used));
+            for (k, &u) in used.iter().enumerate() {
+                if u {
+                    assert_eq!(
+                        selective.literal_set(k),
+                        full.literal_set(k),
+                        "{g} used literal {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn literal_list_intersection_matches_mask_intersection() {
+        let mut rng = Xoshiro256ss::new(17);
+        for g in [G, Geometry::new(28, 10, 2).unwrap()] {
+            let img = random_image(&mut rng, g, 0.3);
+            let sets = PatchSets::build(g, &img);
+            for trial in 0..20 {
+                let mut inc = BitVec::zeros(g.num_literals());
+                for _ in 0..rng.usize_below(8) {
+                    inc.set(rng.usize_below(g.num_literals()), true);
+                }
+                // Any ordering of the list must give the same intersection.
+                let mut list: Vec<u16> = inc.iter_ones().map(|k| k as u16).collect();
+                if trial % 2 == 1 {
+                    list.reverse();
+                }
+                let mut out = Vec::new();
+                sets.literal_list_patches_into(&list, &mut out);
+                assert_eq!(out, sets.clause_patches(&inc), "{g} trial {trial}");
+            }
+        }
     }
 
     #[test]

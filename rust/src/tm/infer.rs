@@ -106,6 +106,27 @@ impl Engine {
             .collect()
     }
 
+    /// Full classification through a compiled [`ClausePlan`] and a
+    /// reusable [`EvalScratch`] arena — the §Perf serving path: zero heap
+    /// allocations per image in steady state. Returns the prediction; the
+    /// class sums and clause outputs remain readable in `scratch`.
+    ///
+    /// Compile the plan once per loaded model (`ClausePlan::compile`) and
+    /// keep one scratch per worker thread. Note that engine configuration
+    /// (`early_exit`) does not apply here: a compiled plan always
+    /// evaluates via its ordered early-exit intersections — use
+    /// [`Self::classify`] with `early_exit: false` for the direct
+    /// per-patch oracle.
+    #[inline]
+    pub fn classify_with(
+        &self,
+        plan: &super::plan::ClausePlan,
+        img: &BoolImage,
+        scratch: &mut super::plan::EvalScratch,
+    ) -> u8 {
+        plan.classify_into(img, scratch)
+    }
+
     /// Full classification of one booleanized image.
     pub fn classify(&self, model: &Model, img: &BoolImage) -> Inference {
         let clauses = self.clause_outputs(model, img);

@@ -8,9 +8,11 @@ pub mod infer;
 pub mod interpret;
 pub mod model;
 pub mod params;
+pub mod plan;
 pub mod train;
 
 pub use infer::{argmax_lowest, clause_fires, Engine, Inference};
 pub use model::Model;
 pub use params::{Params, MODEL_BYTES, NUM_CLAUSES};
+pub use plan::{ClausePlan, EvalScratch};
 pub use train::{EpochStats, Trainer};

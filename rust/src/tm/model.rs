@@ -9,7 +9,7 @@ use super::params::Params;
 use crate::util::BitVec;
 
 /// An inference-ready ConvCoTM model.
-#[derive(Clone, PartialEq)]
+#[derive(Clone)]
 pub struct Model {
     pub params: Params,
     /// `include[j]` — TA action bits of clause j over the literals.
@@ -18,6 +18,24 @@ pub struct Model {
     weights: Vec<Vec<i8>>,
     /// Cached per-clause emptiness (no includes → clause forced 0, §IV-D).
     empty: Vec<bool>,
+    /// Include-structure revision: bumped on every [`Self::set_include`]
+    /// that actually changes a bit. A compiled [`super::plan::ClausePlan`]
+    /// records the revision it mirrors, so staleness is detectable
+    /// (`ClausePlan::is_in_sync`). Weight edits do not bump it — they never
+    /// invalidate a plan's CSR structure (though they do need mirroring
+    /// into the plan's weight matrix via `ClausePlan::set_weight`).
+    include_revision: u64,
+}
+
+/// Equality is *semantic* (params, includes, weights): the include-revision
+/// counter is an edit-history artifact and is deliberately excluded, so a
+/// freshly deserialized model equals the trained model it was saved from.
+impl PartialEq for Model {
+    fn eq(&self, other: &Model) -> bool {
+        self.params == other.params
+            && self.include == other.include
+            && self.weights == other.weights
+    }
 }
 
 impl std::fmt::Debug for Model {
@@ -47,6 +65,7 @@ impl Model {
             include,
             weights,
             empty,
+            include_revision: 0,
         }
     }
 
@@ -67,6 +86,7 @@ impl Model {
             include,
             weights,
             empty,
+            include_revision: 0,
         }
     }
 
@@ -93,10 +113,21 @@ impl Model {
         &self.weights[class]
     }
 
-    /// Mutate one include bit (training path).
+    /// Mutate one include bit (training path). Bumps the include-structure
+    /// revision only when the bit actually changes.
     pub fn set_include(&mut self, clause: usize, literal: usize, v: bool) {
+        if self.include[clause].get(literal) == v {
+            return;
+        }
         self.include[clause].set(literal, v);
         self.empty[clause] = self.include[clause].is_zero();
+        self.include_revision += 1;
+    }
+
+    /// Include-structure revision (see the field docs).
+    #[inline]
+    pub fn include_revision(&self) -> u64 {
+        self.include_revision
     }
 
     /// Mutate one weight with saturation to the 8-bit range (§IV-B).
@@ -163,6 +194,28 @@ mod tests {
         assert!(m.is_empty_clause(1));
         m.set_include(2, 5, false);
         assert!(m.is_empty_clause(2));
+    }
+
+    #[test]
+    fn include_revision_counts_actual_flips_only() {
+        let mut m = tiny_model();
+        assert_eq!(m.include_revision(), 0);
+        m.set_include(0, 3, true);
+        assert_eq!(m.include_revision(), 1);
+        m.set_include(0, 3, true); // no-op: already included
+        assert_eq!(m.include_revision(), 1);
+        m.set_include(0, 3, false);
+        assert_eq!(m.include_revision(), 2);
+        m.set_weight(0, 0, 5); // weight edits never bump it
+        assert_eq!(m.include_revision(), 2);
+        // Equality ignores the revision (serialization round-trips).
+        let mut a = tiny_model();
+        let mut b = tiny_model();
+        a.set_include(1, 2, true);
+        a.set_include(1, 2, false);
+        assert_ne!(a.include_revision(), b.include_revision());
+        b.set_weight(0, 0, 0);
+        assert!(a == b, "revision must not affect semantic equality");
     }
 
     #[test]

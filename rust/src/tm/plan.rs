@@ -1,0 +1,507 @@
+//! Compiled clause plans: the §Perf evaluation engine.
+//!
+//! A [`ClausePlan`] *compiles* a [`Model`] into an immutable evaluation
+//! layout that the hot paths (inference, training, serving) execute
+//! allocation-free:
+//!
+//! - **CSR sparse include lists** — each clause's included literal ids as a
+//!   contiguous `u16` run (`lit_ids[offsets[j]..offsets[j+1]]`). The paper's
+//!   own model is ~88% excludes (§VI-A), so scanning a dense 544-bit include
+//!   mask per clause wastes most of its work; sparse include lists are the
+//!   clause-indexing representation of Gorji et al., *Increasing the
+//!   Inference and Learning Speed of Tsetlin Machines with Clause Indexing*
+//!   (2020).
+//! - **Selectivity ordering** — within each clause, literals are ordered
+//!   most-selective-first (estimated fraction of patches where the literal
+//!   is 1, ascending). Content literals and low-population thermometer bits
+//!   come before their near-full complements, so the AND-intersection
+//!   early-exit in [`PatchSets::literal_list_patches_into`] typically fires
+//!   after one or two patch-set words instead of walking the whole include
+//!   set.
+//! - **Clause-major transposed weights** — `weights_t[j·classes + i]`
+//!   accumulates all class sums in a single pass over the fired clauses,
+//!   instead of `classes` separate scans of the fired set (Eq. 3 unchanged).
+//!
+//! The plan stays in sync with a training model *incrementally*: each
+//! include flip patches the CSR rows in place ([`ClausePlan::set_include`]);
+//! a full recompile is only needed on structural change (different clause,
+//! class or literal counts). [`ClausePlan::is_in_sync`] checks the mirror
+//! against the model's include-structure revision.
+//!
+//! [`EvalScratch`] is the companion per-thread arena: the literal→patch-set
+//! table, the intersection scratch, the fired-clause bits and the class
+//! sums all live in reusable buffers, so steady-state classification
+//! performs **zero heap allocations per image** (measured by the counting
+//! allocator in `benches/hotpath_microbench.rs`).
+
+use super::fast::{is_empty, PatchSet, PatchSets};
+use super::infer::argmax_lowest;
+use super::model::Model;
+use super::params::Params;
+use crate::data::boolean::BoolImage;
+use crate::data::Geometry;
+use crate::util::BitVec;
+
+/// Estimated density of window-content features in booleanized images.
+/// Adaptive-Gaussian booleanization of MNIST-like data sets roughly a
+/// fifth to a third of the pixels; any value below ½ orders positive
+/// content literals ahead of their negations, which is what matters.
+const CONTENT_DENSITY_PRIOR: f32 = 0.25;
+
+/// A model compiled for fast evaluation. See the module docs.
+#[derive(Clone, Debug)]
+pub struct ClausePlan {
+    geometry: Geometry,
+    clauses: usize,
+    classes: usize,
+    literals: usize,
+    /// CSR row starts: clause j's literals are
+    /// `lit_ids[offsets[j] as usize..offsets[j + 1] as usize]`.
+    offsets: Vec<u32>,
+    /// Included literal ids, most-selective-first within each clause.
+    lit_ids: Vec<u16>,
+    /// Pre-flagged empty clauses (forced low at inference, §IV-D).
+    empty: Vec<bool>,
+    /// Clause-major weights: `weights_t[j * classes + i]` = weight of
+    /// clause j for class i (saturated to the chip's 8-bit range).
+    weights_t: Vec<i32>,
+    /// Per-literal selectivity score (estimated fraction of patches where
+    /// the literal is 1) — the CSR ordering key.
+    scores: Vec<f32>,
+    /// How many clauses reference each literal (kept under include flips).
+    literal_refs: Vec<u32>,
+    /// `used[k]` ⇔ `literal_refs[k] > 0` — feeds the selective patch-set
+    /// table build, which skips the gather work for unreferenced literals.
+    used: Vec<bool>,
+    /// The model include-structure revision this plan mirrors.
+    revision: u64,
+}
+
+/// Equality is *structural* (dimensions, CSR layout, flags, weights,
+/// scores): the revision counter is an edit-history artifact and is
+/// deliberately excluded — mirroring [`Model`]'s semantic equality — so an
+/// incrementally synced plan equals a fresh compile of a deserialized
+/// model (whose revision restarts at 0).
+impl PartialEq for ClausePlan {
+    fn eq(&self, other: &ClausePlan) -> bool {
+        self.geometry == other.geometry
+            && self.clauses == other.clauses
+            && self.classes == other.classes
+            && self.literals == other.literals
+            && self.offsets == other.offsets
+            && self.lit_ids == other.lit_ids
+            && self.empty == other.empty
+            && self.weights_t == other.weights_t
+            && self.scores == other.scores
+            && self.literal_refs == other.literal_refs
+            && self.used == other.used
+    }
+}
+
+/// Estimated fraction of patches on which each literal is 1, derived from
+/// the geometry alone (no image statistics needed):
+/// - position-thermometer literals have *exact* populations — y-therm bit t
+///   is set on the `positions − (t+1)` rows with y ≥ t+1;
+/// - window-content literals get a density prior below ½ (their negations
+///   above ½), reflecting sparse booleanized images.
+///
+/// Pure-TM configurations whose literal count does not match the geometry
+/// get uniform scores, i.e. plain literal-id order.
+fn selectivity_scores(params: &Params) -> Vec<f32> {
+    let g = params.geometry;
+    let n = params.literals;
+    if !params.literals_match_geometry() {
+        return vec![0.5; n];
+    }
+    let o = g.num_features();
+    let w2 = g.window * g.window;
+    let pb = g.pos_bits();
+    let positions = g.positions() as f32;
+    (0..n)
+        .map(|k| {
+            let (feat, negated) = if k < o { (k, false) } else { (k - o, true) };
+            let base = if feat < w2 {
+                CONTENT_DENSITY_PRIOR
+            } else {
+                // Thermometer bit t (same population for the y and x axes).
+                let t = (feat - w2) % pb;
+                (positions - (t as f32 + 1.0)) / positions
+            };
+            if negated {
+                1.0 - base
+            } else {
+                base
+            }
+        })
+        .collect()
+}
+
+impl ClausePlan {
+    /// Compile a model. O(total includes · log clause-size); call once per
+    /// loaded model — training keeps the result in sync incrementally.
+    pub fn compile(model: &Model) -> ClausePlan {
+        let p = &model.params;
+        assert!(
+            p.literals <= u16::MAX as usize + 1,
+            "{} literals exceed the u16 id space",
+            p.literals
+        );
+        let scores = selectivity_scores(p);
+        let mut offsets = Vec::with_capacity(p.clauses + 1);
+        let mut lit_ids: Vec<u16> = Vec::with_capacity(model.total_includes());
+        let mut empty = Vec::with_capacity(p.clauses);
+        offsets.push(0u32);
+        let mut row: Vec<u16> = Vec::new();
+        for j in 0..p.clauses {
+            row.clear();
+            row.extend(model.include(j).iter_ones().map(|k| k as u16));
+            row.sort_by(|&a, &b| {
+                (scores[a as usize], a)
+                    .partial_cmp(&(scores[b as usize], b))
+                    .expect("selectivity scores are finite")
+            });
+            lit_ids.extend_from_slice(&row);
+            offsets.push(lit_ids.len() as u32);
+            empty.push(model.is_empty_clause(j));
+        }
+        let mut weights_t = vec![0i32; p.clauses * p.classes];
+        for j in 0..p.clauses {
+            for i in 0..p.classes {
+                weights_t[j * p.classes + i] = model.weight(i, j) as i32;
+            }
+        }
+        let mut literal_refs = vec![0u32; p.literals];
+        for &k in &lit_ids {
+            literal_refs[k as usize] += 1;
+        }
+        let used = literal_refs.iter().map(|&r| r > 0).collect();
+        ClausePlan {
+            geometry: p.geometry,
+            clauses: p.clauses,
+            classes: p.classes,
+            literals: p.literals,
+            offsets,
+            lit_ids,
+            empty,
+            weights_t,
+            scores,
+            literal_refs,
+            used,
+            revision: model.include_revision(),
+        }
+    }
+
+    #[inline]
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    #[inline]
+    pub fn clauses(&self) -> usize {
+        self.clauses
+    }
+
+    #[inline]
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    #[inline]
+    pub fn is_empty_clause(&self, clause: usize) -> bool {
+        self.empty[clause]
+    }
+
+    /// Clause j's included literal ids, most-selective-first.
+    #[inline]
+    pub fn clause_literals(&self, clause: usize) -> &[u16] {
+        &self.lit_ids[self.offsets[clause] as usize..self.offsets[clause + 1] as usize]
+    }
+
+    /// Which literals appear in at least one clause — the selective
+    /// patch-set build map ([`PatchSets::rebuild_selective`]).
+    #[inline]
+    pub fn used_literals(&self) -> &[bool] {
+        &self.used
+    }
+
+    /// Does this plan mirror `model`'s *include structure*? True iff the
+    /// dimensions match and every include flip on the model was mirrored
+    /// here (both sides count actual flips). Weight edits are **not**
+    /// tracked: mutating the model's weights after compilation leaves this
+    /// returning true while `weights_t` is stale — mirror them with
+    /// [`Self::set_weight`] (as the trainer does) or recompile.
+    pub fn is_in_sync(&self, model: &Model) -> bool {
+        self.clauses == model.params.clauses
+            && self.literals == model.params.literals
+            && self.classes == model.params.classes
+            && self.revision == model.include_revision()
+    }
+
+    /// Mirror one include flip (the trainer's `set_include` hook). Keeps
+    /// the clause's CSR row in selectivity order; a no-op when the literal
+    /// is already in the requested state. O(total includes) worst case for
+    /// the tail shift — hundreds of `u16`s for realistic models, far below
+    /// one image evaluation.
+    pub fn set_include(&mut self, clause: usize, literal: usize, included: bool) {
+        let (s, e) = (
+            self.offsets[clause] as usize,
+            self.offsets[clause + 1] as usize,
+        );
+        let lit = literal as u16;
+        if included {
+            let row = &self.lit_ids[s..e];
+            if row.contains(&lit) {
+                return;
+            }
+            let key = (self.scores[literal], lit);
+            let ins = row.partition_point(|&k| {
+                (self.scores[k as usize], k) < key
+            });
+            self.lit_ids.insert(s + ins, lit);
+            for o in &mut self.offsets[clause + 1..] {
+                *o += 1;
+            }
+            self.empty[clause] = false;
+            self.literal_refs[literal] += 1;
+            self.used[literal] = true;
+        } else {
+            let Some(pos) = self.lit_ids[s..e].iter().position(|&k| k == lit) else {
+                return;
+            };
+            self.lit_ids.remove(s + pos);
+            for o in &mut self.offsets[clause + 1..] {
+                *o -= 1;
+            }
+            self.empty[clause] = s + 1 == e;
+            self.literal_refs[literal] -= 1;
+            self.used[literal] = self.literal_refs[literal] > 0;
+        }
+        self.revision += 1;
+    }
+
+    /// Mirror one weight change (already saturated to the 8-bit range).
+    #[inline]
+    pub fn set_weight(&mut self, clause: usize, class: usize, weight: i32) {
+        self.weights_t[clause * self.classes + class] = weight;
+    }
+
+    /// Class sums over the fired clauses (Eq. 3): one pass over the fired
+    /// set thanks to the clause-major weight layout. `sums` is reset.
+    pub fn accumulate_class_sums(&self, fired: &BitVec, sums: &mut Vec<i32>) {
+        sums.clear();
+        sums.resize(self.classes, 0);
+        for j in fired.iter_ones() {
+            let row = &self.weights_t[j * self.classes..(j + 1) * self.classes];
+            for (s, &w) in sums.iter_mut().zip(row) {
+                *s += w;
+            }
+        }
+    }
+
+    /// Full classification of one image through the plan, allocation-free
+    /// in steady state. Returns the prediction; the fired clauses and class
+    /// sums stay readable in `scratch`.
+    pub fn classify_into(&self, img: &BoolImage, scratch: &mut EvalScratch) -> u8 {
+        let EvalScratch {
+            sets,
+            clause,
+            fired,
+            sums,
+        } = scratch;
+        // Selective build: only literals some clause references get their
+        // patch sets gathered — the bulk of the per-image win on sparse
+        // (high-exclude) models.
+        sets.rebuild_selective(self.geometry, img, Some(&self.used));
+        fired.reset(self.clauses);
+        for j in 0..self.clauses {
+            // Inference semantics: empty clauses are forced low (§IV-D).
+            if self.empty[j] {
+                continue;
+            }
+            sets.literal_list_patches_into(self.clause_literals(j), clause);
+            if !is_empty(clause) {
+                fired.set(j, true);
+            }
+        }
+        self.accumulate_class_sums(fired, sums);
+        argmax_lowest(sums)
+    }
+}
+
+/// Reusable per-thread evaluation arena: every buffer the hot path needs,
+/// sized lazily on first use and reused thereafter (zero heap allocations
+/// per image in steady state). One per worker thread — the buffers are not
+/// shareable mid-evaluation.
+#[derive(Default)]
+pub struct EvalScratch {
+    /// Per-image literal → patch-set table (rebuilt in place).
+    pub(crate) sets: PatchSets,
+    /// Clause-intersection scratch.
+    pub(crate) clause: PatchSet,
+    /// Image-level clause outputs of the last classification.
+    pub(crate) fired: BitVec,
+    /// Class sums of the last classification.
+    pub(crate) sums: Vec<i32>,
+}
+
+impl EvalScratch {
+    pub fn new() -> EvalScratch {
+        EvalScratch::default()
+    }
+
+    /// Class sums v_i of the most recent classification.
+    pub fn class_sums(&self) -> &[i32] {
+        &self.sums
+    }
+
+    /// Per-clause image-level outputs c_j of the most recent classification.
+    pub fn clause_outputs(&self) -> &BitVec {
+        &self.fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::infer::Engine;
+    use crate::util::Xoshiro256ss;
+
+    fn random_model(g: Geometry, seed: u64, includes_per_clause: usize) -> Model {
+        let p = Params {
+            clauses: 16,
+            ..Params::for_geometry(g)
+        };
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut m = Model::blank(p.clone());
+        for j in 0..p.clauses {
+            for _ in 0..rng.usize_below(includes_per_clause + 1) {
+                m.set_include(j, rng.usize_below(p.literals), true);
+            }
+            for i in 0..p.classes {
+                m.set_weight(i, j, (rng.below(61) as i32 - 30) as i8);
+            }
+        }
+        m
+    }
+
+    fn random_image(rng: &mut Xoshiro256ss, g: Geometry, density: f64) -> BoolImage {
+        BoolImage::from_bools(
+            &(0..g.img_pixels())
+                .map(|_| rng.chance(density))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn literals_ordered_most_selective_first() {
+        let g = Geometry::asic();
+        let p = Params::for_geometry(g);
+        let (o, w2) = (g.num_features(), g.window * g.window);
+        let mut m = Model::blank(p);
+        // Clause 0: a content literal, its negation, y-therm bit 0 and the
+        // negated y-therm bit 0 — deliberately inserted in "bad" order.
+        for k in [w2, 0, o + w2, o] {
+            m.set_include(0, k, true);
+        }
+        let plan = ClausePlan::compile(&m);
+        // Populations on 19×19 patches: ¬(y≥1) = 1/19 ≈ 0.05, content prior
+        // 0.25, ¬content 0.75, (y≥1) = 18/19 ≈ 0.95.
+        assert_eq!(
+            plan.clause_literals(0),
+            &[(o + w2) as u16, 0u16, o as u16, w2 as u16],
+            "ascending estimated patch population"
+        );
+        // Scores agree with the documented populations.
+        assert!((plan.scores[o + w2] - 1.0 / 19.0).abs() < 1e-6);
+        assert!((plan.scores[w2] - 18.0 / 19.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn incremental_flips_match_full_recompile() {
+        let g = Geometry::new(28, 10, 2).unwrap();
+        let mut rng = Xoshiro256ss::new(41);
+        let p = Params {
+            clauses: 12,
+            ..Params::for_geometry(g)
+        };
+        let mut model = Model::blank(p.clone());
+        let mut plan = ClausePlan::compile(&model);
+        // 400 random flips (sets and clears, some redundant), mirrored.
+        for _ in 0..400 {
+            let j = rng.usize_below(p.clauses);
+            let k = rng.usize_below(p.literals);
+            let v = rng.chance(0.6);
+            model.set_include(j, k, v);
+            plan.set_include(j, k, v);
+            assert!(plan.is_in_sync(&model));
+        }
+        assert!(
+            plan == ClausePlan::compile(&model),
+            "incrementally patched plan must equal a fresh compile"
+        );
+    }
+
+    #[test]
+    fn class_sums_match_engine() {
+        let g = Geometry::asic();
+        let model = random_model(g, 7, 6);
+        let plan = ClausePlan::compile(&model);
+        let mut rng = Xoshiro256ss::new(8);
+        let e = Engine::new();
+        let mut sums = Vec::new();
+        for _ in 0..5 {
+            let mut fired = BitVec::zeros(model.params.clauses);
+            for j in 0..model.params.clauses {
+                if rng.chance(0.5) {
+                    fired.set(j, true);
+                }
+            }
+            plan.accumulate_class_sums(&fired, &mut sums);
+            assert_eq!(sums, e.class_sums(&model, &fired));
+        }
+    }
+
+    #[test]
+    fn classify_into_matches_engine_classify() {
+        let mut rng = Xoshiro256ss::new(11);
+        for g in [Geometry::asic(), Geometry::cifar10()] {
+            let model = random_model(g, 13, 5);
+            let plan = ClausePlan::compile(&model);
+            let e = Engine::new();
+            let mut scratch = EvalScratch::new();
+            for trial in 0..4 {
+                let img = random_image(&mut rng, g, 0.25);
+                let pred = plan.classify_into(&img, &mut scratch);
+                let inf = e.classify(&model, &img);
+                assert_eq!(pred, inf.prediction, "{g} trial {trial}");
+                assert_eq!(scratch.class_sums(), &inf.class_sums[..]);
+                assert_eq!(scratch.clause_outputs(), &inf.clauses);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_clauses_stay_low_and_pre_flagged() {
+        let g = Geometry::asic();
+        let p = Params {
+            clauses: 4,
+            ..Params::for_geometry(g)
+        };
+        let mut m = Model::blank(p);
+        m.set_include(2, 0, true);
+        let mut plan = ClausePlan::compile(&m);
+        assert!(plan.is_empty_clause(0) && !plan.is_empty_clause(2));
+        // Clearing the only include re-flags the clause as empty.
+        m.set_include(2, 0, false);
+        plan.set_include(2, 0, false);
+        assert!(plan.is_empty_clause(2));
+        let mut scratch = EvalScratch::new();
+        let mut img = BoolImage::blank();
+        img.set(14, 14, true);
+        plan.classify_into(&img, &mut scratch);
+        assert!(
+            scratch.clause_outputs().is_zero(),
+            "empty clauses are forced low (§IV-D)"
+        );
+    }
+}

@@ -20,18 +20,56 @@ use super::automata::TaTeam;
 use super::infer::{argmax_lowest, Engine};
 use super::model::Model;
 use super::params::Params;
+use super::plan::{ClausePlan, EvalScratch};
 use crate::data::boolean::BoolImage;
 use crate::data::patches;
 use crate::util::{BitVec, Xoshiro256ss};
 
+/// Reusable per-update buffers (the trainer's half of the §Perf arena):
+/// once warm, [`Trainer::update`] performs zero heap allocations per
+/// sample. Sized lazily on first use; `Default` is allocation-free so the
+/// scratch can be `mem::take`n around `&mut self` calls.
+#[derive(Default)]
+struct TrainScratch {
+    /// The shared evaluation arena (patch-set table, intersection scratch,
+    /// fired bits, class sums) — the same type the serving path uses, so
+    /// `predict` can delegate to [`ClausePlan::classify_into`] verbatim.
+    eval: EvalScratch,
+    /// Selected feedback patch per clause.
+    feedback_patch: Vec<usize>,
+    /// Sorted-dedup copy of `feedback_patch` — the distinct patches whose
+    /// literals actually need materializing (≤ clauses of them).
+    distinct: Vec<usize>,
+    /// Clause → index into `lit_pool` (position of its feedback patch in
+    /// `distinct`).
+    lit_slot: Vec<usize>,
+    /// Materialized literal vectors for the distinct patches (reused).
+    lit_pool: Vec<BitVec>,
+    /// Packed image rows for the fast literal builder.
+    rows: Vec<u64>,
+    /// Feature-word scratch of the fast literal builder.
+    content: Vec<u64>,
+    /// Class sums with saturated weights.
+    sums: Vec<i32>,
+}
+
 /// Trainer state: automata + weights, with an always-in-sync inference
-/// [`Model`] mirroring the TA action bits (the chip's model registers).
+/// [`Model`] mirroring the TA action bits (the chip's model registers) and
+/// a compiled [`ClausePlan`] kept in sync incrementally — every include
+/// flip patches the plan's CSR rows, every weight change updates its
+/// transposed weight matrix, so the hot loop never recompiles.
 pub struct Trainer {
     pub params: Params,
     teams: Vec<TaTeam>,
     /// Wide weights during training; exported saturated to i8.
     weights: Vec<Vec<i32>>,
     model: Model,
+    plan: ClausePlan,
+    scratch: TrainScratch,
+    /// Evaluate clauses through the compiled plan (the default). `false`
+    /// selects the pre-plan dense include-mask path — kept as the
+    /// semantics oracle for the seed-determinism tests.
+    use_plan: bool,
     rng: Xoshiro256ss,
     /// Use reward-probability 1.0 for true-positive include reinforcement.
     pub boost_true_positive: bool,
@@ -56,11 +94,15 @@ impl Trainer {
             .collect();
         let weights = vec![vec![0i32; params.clauses]; params.classes];
         let model = Model::blank(params.clone());
+        let plan = ClausePlan::compile(&model);
         Trainer {
             params,
             teams,
             weights,
             model,
+            plan,
+            scratch: TrainScratch::default(),
+            use_plan: true,
             rng: Xoshiro256ss::new(seed),
             boost_true_positive: true,
         }
@@ -69,6 +111,19 @@ impl Trainer {
     /// The inference model mirroring the current TA actions and weights.
     pub fn model(&self) -> &Model {
         &self.model
+    }
+
+    /// The compiled clause plan kept incrementally in sync with the model.
+    pub fn plan(&self) -> &ClausePlan {
+        &self.plan
+    }
+
+    /// Select the evaluation path: the compiled plan (default) or the
+    /// pre-plan dense include-mask scan. Both are bit-identical in effect —
+    /// the oracle path exists so tests can prove it (same seed ⇒ same
+    /// exported model).
+    pub fn set_plan_enabled(&mut self, enabled: bool) {
+        self.use_plan = enabled;
     }
 
     /// Export a standalone model with weights saturated to i8 (the chip's
@@ -88,7 +143,8 @@ impl Trainer {
         m
     }
 
-    /// Train on one labelled booleanized image.
+    /// Train on one labelled booleanized image. Allocation-free in steady
+    /// state: every buffer lives in the trainer's [`TrainScratch`] arena.
     pub fn update(&mut self, img: &BoolImage, label: u8) {
         let y = label as usize;
         assert!(y < self.params.classes);
@@ -101,64 +157,99 @@ impl Trainer {
         //    Training semantics: an empty clause evaluates to 1 (matches
         //    everything) so Type Ia feedback can bootstrap includes; only
         //    *inference* forces empty clauses low (§IV-D Empty logic) —
-        //    clause_patches() returns the full mask for empty includes.
+        //    both evaluation paths return the full mask for empty includes.
         let g = self.params.geometry;
-        let sets = super::fast::PatchSets::build(g, img);
         let n = self.params.clauses;
-        let mut fired = BitVec::zeros(n);
-        let mut feedback_patch = vec![0usize; n];
-        let mut patches_set: super::fast::PatchSet = Vec::new();
-        let mut lit_cache: std::collections::HashMap<usize, BitVec> =
-            std::collections::HashMap::new();
+        // The scratch is moved out so its buffers can be borrowed across
+        // `&mut self` feedback calls; `TrainScratch::default` is free.
+        let mut sc = std::mem::take(&mut self.scratch);
+        if self.use_plan {
+            // Selective build: only literals some clause references.
+            sc.eval
+                .sets
+                .rebuild_selective(g, img, Some(self.plan.used_literals()));
+        } else {
+            sc.eval.sets.rebuild(g, img);
+        }
+        sc.eval.fired.reset(n);
+        sc.feedback_patch.clear();
+        sc.feedback_patch.resize(n, 0);
         for j in 0..n {
-            sets.clause_patches_into(self.model.include(j), &mut patches_set);
-            let hits = super::fast::popcount(&patches_set);
+            if self.use_plan {
+                // Compiled plan: sparse include list, most-selective-first.
+                sc.eval
+                    .sets
+                    .literal_list_patches_into(self.plan.clause_literals(j), &mut sc.eval.clause);
+            } else {
+                // Pre-plan oracle: dense include-mask scan.
+                sc.eval
+                    .sets
+                    .clause_patches_into(self.model.include(j), &mut sc.eval.clause);
+            }
+            let hits = super::fast::popcount(&sc.eval.clause);
             if hits > 0 {
-                fired.set(j, true);
+                sc.eval.fired.set(j, true);
                 let pick = self.rng.below(hits);
-                feedback_patch[j] = match super::fast::nth_set_bit(&patches_set, pick) {
+                sc.feedback_patch[j] = match super::fast::nth_set_bit(&sc.eval.clause, pick) {
                     Some(b) => b,
                     // Unreachable for pick < hits; fall back to a uniform
                     // patch rather than aborting training.
                     None => self.rng.usize_below(g.num_patches()),
                 };
             } else {
-                feedback_patch[j] = self.rng.usize_below(g.num_patches());
+                sc.feedback_patch[j] = self.rng.usize_below(g.num_patches());
             }
         }
-        // Materialize literals only for the (≤ n distinct) selected patches.
-        let mut patch_lits_at = |b: usize, cache: &mut std::collections::HashMap<usize, BitVec>| {
-            cache
-                .entry(b)
-                .or_insert_with(|| {
-                    let (x, y) = patches::patch_pos(g, b);
-                    patches::patch_literals(g, img, x, y)
-                })
-                .clone()
-        };
-        let patch_lits: Vec<BitVec> = {
-            // Build a dense lookup keyed by feedback patch for update_class.
-            let mut v = Vec::with_capacity(n);
-            for j in 0..n {
-                v.push(patch_lits_at(feedback_patch[j], &mut lit_cache));
-            }
-            v
-        };
+        // Materialize literals once per *distinct* selected patch (≤ n of
+        // them) into the reusable pool: sorted-dedup scratch instead of the
+        // former per-call HashMap + BitVec clones.
+        sc.distinct.clear();
+        sc.distinct.extend_from_slice(&sc.feedback_patch);
+        sc.distinct.sort_unstable();
+        sc.distinct.dedup();
+        patches::pack_rows_into(g, img, &mut sc.rows);
+        if sc.lit_pool.len() < sc.distinct.len() {
+            sc.lit_pool.resize_with(sc.distinct.len(), BitVec::default);
+        }
+        for (i, &b) in sc.distinct.iter().enumerate() {
+            let (px, py) = g.patch_pos(b);
+            patches::patch_literals_from_rows_into(
+                g,
+                &sc.rows,
+                px,
+                py,
+                &mut sc.lit_pool[i],
+                &mut sc.content,
+            );
+        }
+        sc.lit_slot.clear();
+        sc.lit_slot.extend(sc.feedback_patch.iter().map(|b| {
+            sc.distinct
+                .binary_search(b)
+                .expect("feedback patch is in the distinct set")
+        }));
 
         // 2. Class sums with the *saturated* weights (what inference sees).
-        let sums: Vec<i32> = (0..self.params.classes)
-            .map(|i| {
+        //    The plan's clause-major weight matrix mirrors them exactly, so
+        //    this is one pass over the fired set instead of `classes` scans.
+        if self.use_plan {
+            self.plan.accumulate_class_sums(&sc.eval.fired, &mut sc.eval.sums);
+        } else {
+            sc.eval.sums.clear();
+            let weights = &self.weights;
+            let fired = &sc.eval.fired;
+            sc.eval.sums.extend((0..self.params.classes).map(|i| {
                 fired
                     .iter_ones()
-                    .map(|j| self.weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32))
-                    .sum()
-            })
-            .collect();
+                    .map(|j| weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32))
+                    .sum::<i32>()
+            }));
+        }
 
         // 3. Target-class update: push v_y toward +T.
-        let vy = sums[y].clamp(-t, t);
+        let vy = sc.eval.sums[y].clamp(-t, t);
         let p_target = (t - vy) as f64 / (2 * t) as f64;
-        self.update_class(y, true, p_target, &fired, &feedback_patch, &patch_lits);
+        self.update_class(y, true, p_target, &sc);
 
         // 4. One random negative class: push v_q toward −T.
         if self.params.classes > 1 {
@@ -166,37 +257,29 @@ impl Trainer {
             while q == y {
                 q = self.rng.usize_below(self.params.classes);
             }
-            let vq = sums[q].clamp(-t, t);
+            let vq = sc.eval.sums[q].clamp(-t, t);
             let p_neg = (t + vq) as f64 / (2 * t) as f64;
-            self.update_class(q, false, p_neg, &fired, &feedback_patch, &patch_lits);
+            self.update_class(q, false, p_neg, &sc);
         }
+        self.scratch = sc;
     }
 
     /// Give feedback for `class` over all clauses, each activated with
     /// probability `p`. `positive` is true for the target class.
-    #[allow(clippy::too_many_arguments)]
-    fn update_class(
-        &mut self,
-        class: usize,
-        positive: bool,
-        p: f64,
-        fired: &BitVec,
-        feedback_patch: &[usize],
-        patch_lits: &[BitVec],
-    ) {
+    fn update_class(&mut self, class: usize, positive: bool, p: f64, sc: &TrainScratch) {
         for j in 0..self.params.clauses {
             if !self.rng.chance(p) {
                 continue;
             }
             let w = self.weights[class][j];
-            let clause_out = fired.get(j);
+            let clause_out = sc.eval.fired.get(j);
             // Polarity: a non-negative weight means clause j *supports*
             // `class`; for the target class supporting clauses get Type I
             // (strengthen the pattern), opposing get Type II, and weights
             // move toward +; for a negative class the roles and the weight
             // direction flip (CoTM, Glimsdal & Granmo 2021).
             let type_one = (w >= 0) == positive;
-            let lits = &patch_lits[j];
+            let lits = &sc.lit_pool[sc.lit_slot[j]];
             if type_one {
                 self.type_i(j, clause_out, lits);
             } else {
@@ -205,6 +288,11 @@ impl Trainer {
             if clause_out {
                 let delta = if positive { 1 } else { -1 };
                 self.weights[class][j] += delta;
+                self.plan.set_weight(
+                    j,
+                    class,
+                    self.weights[class][j].clamp(i8::MIN as i32, i8::MAX as i32),
+                );
             }
         }
     }
@@ -269,6 +357,7 @@ impl Trainer {
         self.teams[j].reinforce(k);
         if !was_include && self.teams[j].includes(k) {
             self.model.set_include(j, k, true);
+            self.plan.set_include(j, k, true);
         }
     }
 
@@ -278,6 +367,7 @@ impl Trainer {
         self.teams[j].weaken(k);
         if was_include && !self.teams[j].includes(k) {
             self.model.set_include(j, k, false);
+            self.plan.set_include(j, k, false);
         }
     }
 
@@ -305,19 +395,28 @@ impl Trainer {
         }
     }
 
-    /// Predict with the current (saturated) weights.
-    pub fn predict(&self, img: &BoolImage) -> u8 {
-        let e = Engine::new();
-        let clauses = e.clause_outputs(&self.model, img);
-        let sums: Vec<i32> = (0..self.params.classes)
-            .map(|i| {
-                clauses
-                    .iter_ones()
-                    .map(|j| self.weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32))
-                    .sum()
-            })
-            .collect();
-        argmax_lowest(&sums)
+    /// Predict with the current (saturated) weights. `&mut self` because
+    /// the evaluation reuses the trainer's scratch arena (no per-call
+    /// allocations on the plan path).
+    pub fn predict(&mut self, img: &BoolImage) -> u8 {
+        if !self.use_plan {
+            // Pre-plan oracle path.
+            let e = Engine::new();
+            let clauses = e.clause_outputs(&self.model, img);
+            let sums: Vec<i32> = (0..self.params.classes)
+                .map(|i| {
+                    clauses
+                        .iter_ones()
+                        .map(|j| self.weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32))
+                        .sum()
+                })
+                .collect();
+            return argmax_lowest(&sums);
+        }
+        // The serving path, verbatim: the plan's weights mirror the
+        // saturated trainer weights, so this is the same inference the
+        // exported model would produce.
+        self.plan.classify_into(img, &mut self.scratch.eval)
     }
 }
 
@@ -461,6 +560,14 @@ mod tests {
                 );
             }
         }
+        // The incrementally patched plan mirrors the model exactly: same
+        // include-structure revision, and equal to a fresh compile of the
+        // exported model (weights saturated on both sides).
+        assert!(tr.plan().is_in_sync(tr.model()));
+        assert!(
+            *tr.plan() == crate::tm::plan::ClausePlan::compile(&tr.export()),
+            "incrementally synced plan must equal a fresh compile"
+        );
     }
 
     #[test]

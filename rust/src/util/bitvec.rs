@@ -7,7 +7,7 @@
 //! `clause_violated = OR_w (include[w] & !literals[w])` over ⌈272/64⌉ = 5 words.
 
 /// A packed bit vector with a fixed bit length.
-#[derive(Clone, PartialEq, Eq, Hash)]
+#[derive(Clone, Default, PartialEq, Eq, Hash)]
 pub struct BitVec {
     words: Vec<u64>,
     len: usize,
@@ -43,6 +43,15 @@ impl BitVec {
         };
         v.mask_tail();
         v
+    }
+
+    /// Reset to `len` zero bits, reusing the existing word buffer (no heap
+    /// allocation when the capacity already suffices — the §Perf arena
+    /// contract).
+    pub fn reset(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(len.div_ceil(64), 0);
+        self.len = len;
     }
 
     /// Build from a `bool` slice.
@@ -270,6 +279,21 @@ mod tests {
         let a = BitVec::from_bools(&[true, false, true, false, true]);
         let b = BitVec::from_bools(&[true, true, false, false, true]);
         assert_eq!(a.hamming(&b), 2);
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_zeroes() {
+        let mut v = BitVec::ones(272);
+        v.reset(272);
+        assert!(v.is_zero());
+        assert_eq!(v.len(), 272);
+        // Shrinking and regrowing keeps whole-word ops exact.
+        v.reset(65);
+        assert_eq!(v.len(), 65);
+        v.set(64, true);
+        assert_eq!(v.count_ones(), 1);
+        v.reset(272);
+        assert!(v.is_zero(), "stale bits must not survive a reset");
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Compiled-plan acceptance properties (ISSUE 2):
+//!
+//! 1. Plan-based evaluation ≡ direct per-patch evaluation — firing sets,
+//!    class sums and argmax — across the ASIC, CIFAR-shaped and strided
+//!    geometries. The direct engine is the unoptimized oracle (the chip's
+//!    datapath transcription), so equality here is the "exactly in
+//!    accordance" property (§V) extended to the compiled evaluation spine.
+//! 2. Plan-backed training is bit-identical to the pre-plan evaluation
+//!    semantics: same seed ⇒ same exported model, with the incrementally
+//!    synced plan equal to a fresh compile.
+
+use convcotm::data::{BoolImage, Geometry};
+use convcotm::tm::{ClausePlan, Engine, EvalScratch, Model, Params, Trainer};
+use convcotm::util::quick::{check, PropResult};
+use convcotm::util::Xoshiro256ss;
+
+/// The three geometries named by the acceptance criteria.
+fn test_geometries() -> Vec<Geometry> {
+    vec![
+        Geometry::asic(),
+        Geometry::cifar10(),
+        Geometry::new(28, 10, 2).unwrap(),
+    ]
+}
+
+fn random_image(rng: &mut Xoshiro256ss, g: Geometry, density: f64) -> BoolImage {
+    BoolImage::from_bools(
+        &(0..g.img_pixels())
+            .map(|_| rng.chance(density))
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn random_model(rng: &mut Xoshiro256ss, g: Geometry, clauses: usize) -> Model {
+    let p = Params {
+        clauses,
+        ..Params::for_geometry(g)
+    };
+    let mut m = Model::blank(p.clone());
+    for j in 0..p.clauses {
+        // Sparse random includes (some clauses deliberately left empty).
+        for _ in 0..rng.usize_below(7) {
+            m.set_include(j, rng.usize_below(p.literals), true);
+        }
+        for i in 0..p.classes {
+            m.set_weight(i, j, (rng.below(61) as i32 - 30) as i8);
+        }
+    }
+    m
+}
+
+fn check_plan_matches_direct(g: Geometry) {
+    check(
+        &format!("compiled plan equals direct per-patch evaluation ({g})"),
+        8,
+        |gen| -> PropResult {
+            let mut rng = Xoshiro256ss::new(gen.u64());
+            let model = random_model(&mut rng, g, 12);
+            let plan = ClausePlan::compile(&model);
+            let mut scratch = EvalScratch::new();
+            let density = 0.1 + 0.5 * gen.f64_unit();
+            let img = random_image(&mut rng, g, density);
+            let pred = plan.classify_into(&img, &mut scratch);
+            // The oracle: direct per-patch evaluation (no early exit).
+            let oracle = Engine { early_exit: false }.classify(&model, &img);
+            // Firing sets, class sums and argmax must all agree.
+            convcotm::prop_assert_eq!(scratch.clause_outputs(), &oracle.clauses);
+            convcotm::prop_assert_eq!(scratch.class_sums(), &oracle.class_sums[..]);
+            convcotm::prop_assert_eq!(pred, oracle.prediction);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn plan_matches_direct_on_asic_geometry() {
+    check_plan_matches_direct(Geometry::asic());
+}
+
+#[test]
+fn plan_matches_direct_on_cifar_geometry() {
+    check_plan_matches_direct(Geometry::cifar10());
+}
+
+#[test]
+fn plan_matches_direct_on_strided_geometry() {
+    check_plan_matches_direct(Geometry::new(28, 10, 2).unwrap());
+}
+
+/// Random labelled images for trainer determinism runs (learnability is
+/// irrelevant — only the update-for-update RNG/feedback trajectory is).
+fn random_split(g: Geometry, n: usize, seed: u64) -> Vec<(BoolImage, u8)> {
+    let mut rng = Xoshiro256ss::new(seed);
+    (0..n)
+        .map(|_| {
+            let img = random_image(&mut rng, g, 0.25);
+            let label = rng.below(4) as u8;
+            (img, label)
+        })
+        .collect()
+}
+
+fn check_trainer_seed_determinism(g: Geometry) {
+    let params = Params {
+        clauses: 12,
+        t: 12,
+        s: 4.0,
+        ..Params::for_geometry(g)
+    };
+    let split = random_split(g, 40, 99);
+    let run = |plan_enabled: bool| {
+        let mut tr = Trainer::new(params.clone(), 4242);
+        tr.set_plan_enabled(plan_enabled);
+        for e in 0..2 {
+            tr.epoch(&split, e);
+        }
+        assert!(
+            tr.plan().is_in_sync(tr.model()),
+            "plan mirror out of sync ({g}, plan_enabled={plan_enabled})"
+        );
+        assert!(
+            *tr.plan() == ClausePlan::compile(&tr.export()),
+            "incrementally synced plan differs from a fresh compile ({g})"
+        );
+        tr.export()
+    };
+    let with_plan = run(true);
+    let pre_plan = run(false);
+    assert!(
+        with_plan == pre_plan,
+        "plan-backed training must be bit-identical to the pre-plan path ({g})"
+    );
+}
+
+#[test]
+fn trainer_plan_path_is_bit_identical_to_pre_plan_path() {
+    check_trainer_seed_determinism(Geometry::asic());
+}
+
+#[test]
+fn trainer_plan_path_is_bit_identical_on_strided_geometry() {
+    check_trainer_seed_determinism(Geometry::new(28, 10, 2).unwrap());
+}
