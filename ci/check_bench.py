@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Bench-regression guard for the CI perf gate.
+
+Diffs a fresh BENCH_hotpath.json (written by `cargo bench --bench
+hotpath_microbench`, quick mode in CI) against the committed
+BENCH_baseline.json and fails the build when any path regresses by more
+than the threshold (default 25% throughput), or when a path whose
+baseline holds the zero-alloc invariant (0.0 allocs/img) starts
+allocating. A markdown comparison table is written to
+$GITHUB_STEP_SUMMARY (when set) and always printed to stdout.
+
+Rows are matched by their "path" label after normalizing
+machine-dependent parts (thread counts, batch sizes), so the same
+baseline works across runners with different core counts. Rows present
+on only one side are reported but never fail the gate — bench coverage
+may grow PR over PR.
+
+Refreshing the baseline (DESIGN.md §8): download the BENCH_hotpath
+artifact from a green run of the target runner class and commit it as
+rust/BENCH_baseline.json. The committed baseline is intentionally
+conservative until refreshed from a real CI artifact.
+
+Usage: check_bench.py BASELINE.json FRESH.json [--threshold=0.25]
+"""
+
+import json
+import os
+import re
+import sys
+
+
+def normalize(label: str) -> str:
+    """Strip machine-dependent details so labels match across runners.
+
+    Only the *plural* thread count is machine-dependent (the parallel
+    NativeBackend row uses the runner's core count); "(1 thread)" is a
+    distinct, stable serial row and must not collapse into it.
+    """
+    label = re.sub(r"\d+ threads", "N threads", label)
+    label = re.sub(r"batch=\d+", "batch=N", label)
+    return label
+
+
+def load_rows(path: str):
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    rows = {}
+    for row in data.get("rows", []):
+        rows[normalize(row["path"])] = row
+    return rows, data
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    threshold = 0.25
+    for a in argv[1:]:
+        if a.startswith("--threshold"):
+            if "=" not in a:
+                print("expected --threshold=FRACTION (e.g. --threshold=0.25)", file=sys.stderr)
+                return 2
+            threshold = float(a.split("=", 1)[1])
+    baseline_path, fresh_path = args
+    baseline, baseline_doc = load_rows(baseline_path)
+    fresh, fresh_doc = load_rows(fresh_path)
+
+    lines = [
+        "## Hot-path bench vs committed baseline",
+        "",
+        f"threshold: fail below {100 * (1 - threshold):.0f}% of baseline throughput "
+        f"(quick={fresh_doc.get('quick')})",
+        "",
+        "| Path | Baseline img/s | Fresh img/s | Δ | Allocs/img | Status |",
+        "|---|---|---|---|---|---|",
+    ]
+    failures = []
+    for label in sorted(set(baseline) | set(fresh)):
+        b, f = baseline.get(label), fresh.get(label)
+        if b is None:
+            lines.append(
+                f"| {label} | — | {f['img_per_s']:.0f} | — | "
+                f"{f.get('allocs_per_img')} | NEW |"
+            )
+            continue
+        if f is None:
+            lines.append(f"| {label} | {b['img_per_s']:.0f} | — | — | — | MISSING |")
+            continue
+        ratio = f["img_per_s"] / b["img_per_s"] if b["img_per_s"] else float("inf")
+        status = "OK"
+        if ratio < 1 - threshold:
+            status = "REGRESSED"
+            failures.append(
+                f"{label}: {f['img_per_s']:.0f} img/s is "
+                f"{100 * (1 - ratio):.0f}% below baseline {b['img_per_s']:.0f}"
+            )
+        # The zero-alloc invariant is a separate, absolute gate: a path
+        # measured at 0 allocs/img in the baseline must stay there.
+        b_allocs, f_allocs = b.get("allocs_per_img"), f.get("allocs_per_img")
+        if b_allocs == 0.0 and f_allocs is not None and f_allocs > 0.5:
+            status = "ALLOC-REGRESSED"
+            failures.append(
+                f"{label}: {f_allocs:.1f} allocs/img on a zero-alloc baseline path"
+            )
+        lines.append(
+            f"| {label} | {b['img_per_s']:.0f} | {f['img_per_s']:.0f} | "
+            f"{100 * (ratio - 1):+.0f}% | {f_allocs} | {status} |"
+        )
+    for key in ("plan_speedup_vs_early_exit", "pool_speedup_4v1_shards"):
+        if key in fresh_doc:
+            lines.append("")
+            lines.append(f"`{key}` = {fresh_doc[key]:.2f}×")
+
+    report = "\n".join(lines) + "\n"
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a", encoding="utf-8") as f:
+            f.write(report)
+
+    if failures:
+        print("BENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for failure in failures:
+            print(f"  - {failure}", file=sys.stderr)
+        print(
+            "If intentional (e.g. a deliberate trade-off), refresh "
+            "rust/BENCH_baseline.json from the run's artifact and justify "
+            "the change in the PR.",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

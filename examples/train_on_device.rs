@@ -17,7 +17,11 @@ use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
-    let (n_train, n_test, epochs) = if quick { (300, 100, 3) } else { (2_000, 500, 12) };
+    let (n_train, n_test, epochs) = if quick {
+        (300, 100, 3)
+    } else {
+        (2_000, 500, 12)
+    };
     let mut results = Vec::new();
 
     for family in [SynthFamily::Digits, SynthFamily::Fashion, SynthFamily::Kana] {
@@ -90,7 +94,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!();
-    let mut t = Table::new(&["Dataset", "Test accuracy", "Rate @27.8 MHz", "EPC @0.82 V", "Exclude frac"]);
+    let mut t = Table::new(&[
+        "Dataset",
+        "Test accuracy",
+        "Rate @27.8 MHz",
+        "EPC @0.82 V",
+        "Exclude frac",
+    ]);
     let mut json_rows = Vec::new();
     for (name, acc, rate, epc, excl) in &results {
         t.row(&[

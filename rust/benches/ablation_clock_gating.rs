@@ -91,7 +91,11 @@ fn main() {
     let saving = 1.0 - p_g / p_u;
     println!(
         "claim check: gating saves ≈60% at 27.8 MHz — {} ({:.1}%)",
-        if (0.50..=0.70).contains(&saving) { "HOLDS" } else { "VIOLATED" },
+        if (0.50..=0.70).contains(&saving) {
+            "HOLDS"
+        } else {
+            "VIOLATED"
+        },
         saving * 100.0
     );
     assert!((0.50..=0.70).contains(&saving));

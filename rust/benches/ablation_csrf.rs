@@ -60,7 +60,8 @@ fn main() {
     let with = run(true, &fixture, n);
     let without = run(false, &fixture, n);
 
-    let toggle_reduction = 1.0 - with.clause_comb_toggles as f64 / without.clause_comb_toggles as f64;
+    let toggle_reduction =
+        1.0 - with.clause_comb_toggles as f64 / without.clause_comb_toggles as f64;
     let eval_reduction = 1.0 - with.clause_evaluations as f64 / without.clause_evaluations as f64;
 
     let em = EnergyModel::default();
@@ -94,12 +95,20 @@ fn main() {
 
     println!(
         "claim check: toggle reduction ≈50% — {} ({:.1}%)",
-        if (0.30..=0.75).contains(&toggle_reduction) { "HOLDS (shape)" } else { "VIOLATED" },
+        if (0.30..=0.75).contains(&toggle_reduction) {
+            "HOLDS (shape)"
+        } else {
+            "VIOLATED"
+        },
         toggle_reduction * 100.0
     );
     println!(
         "claim check: power saving <1% — {} ({:.2}%)",
-        if power_saving >= 0.0 && power_saving < 0.01 { "HOLDS" } else { "VIOLATED" },
+        if power_saving >= 0.0 && power_saving < 0.01 {
+            "HOLDS"
+        } else {
+            "VIOLATED"
+        },
         power_saving * 100.0
     );
     assert!(toggle_reduction > 0.2, "CSRF must cut toggling substantially");

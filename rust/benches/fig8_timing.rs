@@ -43,14 +43,46 @@ fn main() {
     let single = acc.classify(&f.test[0].0, None, false).unwrap();
     let p = &single.report.phases;
     let mut t = Table::new(&["Phase", "Cycles", "Notes"]);
-    t.row(&["Image transfer (AXI, byte/cycle)".into(), format!("{}", p.transfer), "98 data + 1 label byte".into()]);
-    t.row(&["Clause-register reset".into(), format!("{}", p.clause_reset), "Fig. 4 DFF reset".into()]);
-    t.row(&["Patch generation".into(), format!("{}", p.patches), "19×19 window positions".into()]);
-    t.row(&["Class-sum pipeline".into(), format!("{}", p.class_sum), "3-stage tree, gated (§IV-F)".into()]);
-    t.row(&["Argmax latch".into(), format!("{}", p.argmax), "Fig. 6 tree (combinational)".into()]);
-    t.row(&["Result/interrupt".into(), format!("{}", p.output), "prediction + label echo".into()]);
-    t.row(&["FSM transitions".into(), format!("{}", p.fsm_overhead), "state entry/exit".into()]);
-    t.row(&["TOTAL latency".into(), format!("{}", p.latency()), "paper: 471 cycles".into()]);
+    t.row(&[
+        "Image transfer (AXI, byte/cycle)".into(),
+        format!("{}", p.transfer),
+        "98 data + 1 label byte".into(),
+    ]);
+    t.row(&[
+        "Clause-register reset".into(),
+        format!("{}", p.clause_reset),
+        "Fig. 4 DFF reset".into(),
+    ]);
+    t.row(&[
+        "Patch generation".into(),
+        format!("{}", p.patches),
+        "19×19 window positions".into(),
+    ]);
+    t.row(&[
+        "Class-sum pipeline".into(),
+        format!("{}", p.class_sum),
+        "3-stage tree, gated (§IV-F)".into(),
+    ]);
+    t.row(&[
+        "Argmax latch".into(),
+        format!("{}", p.argmax),
+        "Fig. 6 tree (combinational)".into(),
+    ]);
+    t.row(&[
+        "Result/interrupt".into(),
+        format!("{}", p.output),
+        "prediction + label echo".into(),
+    ]);
+    t.row(&[
+        "FSM transitions".into(),
+        format!("{}", p.fsm_overhead),
+        "state entry/exit".into(),
+    ]);
+    t.row(&[
+        "TOTAL latency".into(),
+        format!("{}", p.latency()),
+        "paper: 471 cycles".into(),
+    ]);
     println!("{}", t.to_markdown());
     assert_eq!(p.latency(), 471);
 

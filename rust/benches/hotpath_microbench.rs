@@ -17,7 +17,9 @@
 
 use convcotm::asic::{Accelerator, ChipConfig};
 use convcotm::bench_harness::{fmt_k, section, CountingAllocator, FixtureSpec};
-use convcotm::coordinator::{Backend, BatchConfig, Coordinator, NativeBackend};
+use convcotm::coordinator::{
+    Backend, BatchConfig, Coordinator, ModelRegistry, NativeBackend, PoolConfig,
+};
 use convcotm::data::SynthFamily;
 use convcotm::tm::{ClausePlan, Engine, EvalScratch, Trainer};
 use convcotm::util::json::Json;
@@ -39,7 +41,11 @@ struct Row {
 }
 
 fn bench_budget() -> Duration {
-    Duration::from_millis(if std::env::var("BENCH_QUICK").is_ok() { 300 } else { 1500 })
+    Duration::from_millis(if std::env::var("BENCH_QUICK").is_ok() {
+        300
+    } else {
+        1500
+    })
 }
 
 fn throughput(
@@ -179,6 +185,38 @@ fn main() {
         );
     }
 
+    // Serve path: end-to-end through the shard pool (bounded queues,
+    // least-outstanding routing, registry resolution) on a 64-image
+    // concurrent workload — the rows CI tracks for shard scaling.
+    let mut pool_rates = Vec::new();
+    for shards in [1usize, 4] {
+        let coord = Coordinator::start_pool(
+            ModelRegistry::single("bench", model.clone()),
+            PoolConfig {
+                shards,
+                queue_capacity: 4096,
+                batch: BatchConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_micros(50),
+                },
+            },
+        );
+        let workload: Vec<_> = images.iter().cycle().take(64).cloned().collect();
+        let label = if shards == 1 {
+            "serve pool (1 shard)".to_string()
+        } else {
+            format!("serve pool ({shards} shards)")
+        };
+        let rate = throughput(&label, &mut t, &mut rows, workload.len(), || {
+            let rxs: Vec<_> = workload.iter().map(|img| coord.submit(img.clone())).collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+        pool_rates.push(rate);
+        coord.shutdown();
+    }
+
     // PJRT artifacts.
     #[cfg(feature = "pjrt")]
     let artifact_dir =
@@ -223,7 +261,16 @@ fn main() {
         "compiled plan vs early-exit: {:.2}× (target ≥1.5×) at {:.1} allocs/img (target 0) — {}",
         plan_rate / native_rate,
         plan_allocs,
-        if plan_rate >= 1.5 * native_rate && plan_allocs == 0.0 { "HOLDS" } else { "MISSED" }
+        if plan_rate >= 1.5 * native_rate && plan_allocs == 0.0 {
+            "HOLDS"
+        } else {
+            "MISSED"
+        }
+    );
+    let pool_speedup = pool_rates[1] / pool_rates[0];
+    println!(
+        "shard pool 4 vs 1: {pool_speedup:.2}× on {} core(s) (tests/serving_pool.rs asserts ≥2× with ≥4 cores)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
 
     // Coordinator batching overhead: compare direct engine latency with
@@ -255,7 +302,11 @@ fn main() {
     );
     println!(
         "target check: overhead <10 µs p50 — {}",
-        if (s.p50 - direct_us) < 10.0 { "HOLDS" } else { "MISSED" }
+        if (s.p50 - direct_us) < 10.0 {
+            "HOLDS"
+        } else {
+            "MISSED"
+        }
     );
 
     // PJRT coordinator end-to-end (thread-affine backend via factory).
@@ -300,6 +351,7 @@ fn main() {
             "plan_speedup_vs_early_exit",
             Json::num(plan_rate / native_rate),
         ),
+        ("pool_speedup_4v1_shards", Json::num(pool_speedup)),
         (
             "rows",
             Json::arr(rows.iter().map(|r| {

@@ -96,6 +96,10 @@ fn main() {
         "claim check: 28 nm scaled EPC {} ≈ paper's 4.3 nJ estimate, close to \
          Zhao [20]'s 3.32 nJ — {}",
         fmt_energy(scaled.epc_j),
-        if (scaled.epc_j - 4.3e-9).abs() < 0.3e-9 { "HOLDS" } else { "VIOLATED" }
+        if (scaled.epc_j - 4.3e-9).abs() < 0.3e-9 {
+            "HOLDS"
+        } else {
+            "VIOLATED"
+        }
     );
 }

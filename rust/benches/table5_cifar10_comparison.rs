@@ -59,7 +59,11 @@ fn main() {
     ]);
     t3.row(&[
         "Core power @27.8 MHz".into(),
-        format!("{} (65 nm) / {} (28 nm)", fmt_power(est.power_65nm_w), fmt_power(est.power_28nm_w)),
+        format!(
+            "{} (65 nm) / {} (28 nm)",
+            fmt_power(est.power_65nm_w),
+            fmt_power(est.power_28nm_w)
+        ),
         "3.0 mW / 1.5 mW".into(),
     ]);
     t3.row(&[
@@ -122,7 +126,11 @@ fn main() {
         "claim check: envisaged EPC {} undercuts the best stated prior ({}) — {}",
         fmt_energy(est.epc_65nm_j),
         fmt_energy(min_prior),
-        if est.epc_65nm_j < min_prior { "HOLDS" } else { "VIOLATED" }
+        if est.epc_65nm_j < min_prior {
+            "HOLDS"
+        } else {
+            "VIOLATED"
+        }
     );
     println!(
         "claim check: TM accuracy on CIFAR-10 (79%) trails CNN/BNN/SNN rows — HOLDS \

@@ -66,7 +66,11 @@ fn main() {
         .collect();
     println!(
         "claim check: lowest EPC among TM HW solutions with stated EPC — {}",
-        if better.is_empty() { "HOLDS" } else { "VIOLATED" }
+        if better.is_empty() {
+            "HOLDS"
+        } else {
+            "VIOLATED"
+        }
     );
     assert!(better.is_empty());
 

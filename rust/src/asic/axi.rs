@@ -111,7 +111,11 @@ impl ImageDeframer {
             let label_byte = self.buf[data_bytes];
             let img = BoolImage::from_wire_bytes(&self.buf[..data_bytes], self.geometry.img_side);
             self.buf.clear();
-            let label = if label_byte == 0xFF { None } else { Some(label_byte) };
+            let label = if label_byte == 0xFF {
+                None
+            } else {
+                Some(label_byte)
+            };
             return Ok(Some((img, label)));
         }
         if self.buf.len() >= self.frame_bytes {

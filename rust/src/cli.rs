@@ -1,5 +1,9 @@
 //! Minimal CLI argument parser (clap is not vendored): subcommand + flags
-//! of the forms `--key value`, `--key=value` and boolean `--flag`.
+//! of the forms `--key value`, `--key=value` and boolean `--flag`. Flags
+//! are repeatable: every occurrence is kept in order ([`Args::get_all`]),
+//! which is how `serve --model a=x.cctm --model b=y.cctm` loads several
+//! models; single-value accessors ([`Args::get`]) take the last
+//! occurrence, preserving the usual "rightmost flag wins" override.
 
 use std::collections::BTreeMap;
 
@@ -7,7 +11,7 @@ use std::collections::BTreeMap;
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: Option<String>,
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
     pub positionals: Vec<String>,
 }
 
@@ -24,16 +28,16 @@ impl Args {
                     break;
                 }
                 if let Some((k, v)) = stripped.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    out.push_flag(k, v);
                 } else if iter
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
-                    out.flags.insert(stripped.to_string(), v);
+                    out.push_flag(stripped, &v);
                 } else {
-                    out.flags.insert(stripped.to_string(), "true".to_string());
+                    out.push_flag(stripped, "true");
                 }
             } else if out.command.is_none() {
                 out.command = Some(arg);
@@ -44,12 +48,28 @@ impl Args {
         Ok(out)
     }
 
+    fn push_flag(&mut self, key: &str, value: &str) {
+        self.flags
+            .entry(key.to_string())
+            .or_default()
+            .push(value.to_string());
+    }
+
     pub fn from_env() -> Result<Args, String> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Last occurrence of `--key` (rightmost wins), if any.
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags
+            .get(key)
+            .and_then(|vs| vs.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of `--key`, in command-line order.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|vs| vs.as_slice()).unwrap_or(&[])
     }
 
     pub fn get_or(&self, key: &str, default: &str) -> String {
@@ -95,6 +115,26 @@ mod tests {
         assert_eq!(a.get_usize("epochs", 1).unwrap(), 5);
         assert!(a.get_bool("quick"));
         assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_and_last_wins_for_get() {
+        let a = parse(&[
+            "serve",
+            "--model",
+            "mnist=models/a.cctm",
+            "--model=cifar=models/b.cctm",
+            "--shards",
+            "4",
+        ]);
+        assert_eq!(
+            a.get_all("model"),
+            &["mnist=models/a.cctm", "cifar=models/b.cctm"]
+        );
+        // Note: `--model=cifar=...` splits on the first '=' only.
+        assert_eq!(a.get("model"), Some("cifar=models/b.cctm"));
+        assert_eq!(a.get_usize("shards", 1).unwrap(), 4);
+        assert!(a.get_all("absent").is_empty());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::data::boolean::BoolImage;
 use crate::data::Geometry;
 use crate::tm::{ClausePlan, EvalScratch, Model};
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// One classification outcome from a backend.
 #[derive(Clone, Debug, PartialEq)]
@@ -80,8 +81,8 @@ fn validate_geometry(name: &str, g: Geometry, imgs: &[&BoolImage]) -> Result<()>
 /// independent), which is what lets the coordinator's dynamic batching use
 /// more than one core.
 pub struct NativeBackend {
-    model: Model,
-    plan: ClausePlan,
+    model: Arc<Model>,
+    plan: Arc<ClausePlan>,
     threads: usize,
     /// Serial-path arena.
     scratch: EvalScratch,
@@ -115,7 +116,15 @@ impl NativeBackend {
     /// Explicit worker-thread cap (1 = serial; used by benches and the
     /// CLI's `--threads` flag to measure the batch-parallel speedup).
     pub fn with_threads(model: Model, threads: usize) -> Self {
-        let plan = ClausePlan::compile(&model);
+        let plan = Arc::new(ClausePlan::compile(&model));
+        Self::from_shared_plan(Arc::new(model), plan, threads)
+    }
+
+    /// Build from an already-compiled shared plan — e.g. a registry
+    /// [`crate::coordinator::ModelEntry`]'s — so N backends over the same
+    /// model pay for one compilation, not N (the shard pool's sharing
+    /// contract, here available to trait-object serving too).
+    pub fn from_shared_plan(model: Arc<Model>, plan: Arc<ClausePlan>, threads: usize) -> Self {
         NativeBackend {
             model,
             plan,

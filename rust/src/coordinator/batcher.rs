@@ -2,6 +2,13 @@
 //! full or the wait deadline expires — the software analogue of the chip's
 //! double-buffered continuous mode, where the next frame's transfer hides
 //! behind the current frame's processing (Fig. 8).
+//!
+//! The batcher is agnostic to how the queue is bounded: it consumes a
+//! plain `mpsc::Receiver`, which is the receiving half of both `channel()`
+//! (unbounded) and `sync_channel(cap)` (the coordinator's bounded shard
+//! queues). Closing the senders makes [`next_batch`] drain whatever is
+//! still queued and then return `None` — that drain is the coordinator's
+//! clean-shutdown guarantee (every accepted request gets a response).
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -103,6 +110,25 @@ mod tests {
         let (tx, rx) = channel::<u32>();
         drop(tx);
         assert!(next_batch(&rx, &BatchConfig::default()).is_none());
+    }
+
+    #[test]
+    fn works_over_bounded_sync_channels() {
+        // The shard pool feeds the batcher from sync_channel queues; the
+        // greedy drain and the close-then-drain contract must hold there
+        // identically.
+        let (tx, rx) = std::sync::mpsc::sync_channel(8);
+        for i in 0..5 {
+            tx.try_send(i).unwrap();
+        }
+        drop(tx);
+        let cfg = BatchConfig {
+            max_batch: 3,
+            max_wait: Duration::from_millis(1),
+        };
+        assert_eq!(next_batch(&rx, &cfg).unwrap(), vec![0, 1, 2]);
+        assert_eq!(next_batch(&rx, &cfg).unwrap(), vec![3, 4]);
+        assert!(next_batch(&rx, &cfg).is_none());
     }
 
     #[test]

@@ -1,162 +1,508 @@
-//! The serving coordinator (L3): a threaded request router with dynamic
+//! The serving coordinator (L3): a sharded request router with dynamic
 //! batching over pluggable inference backends — the software counterpart
 //! of the paper's system-processor + accelerator pair (§IV-A, Fig. 10),
-//! with the chip's continuous-mode overlap expressed as queue batching.
+//! scaled out: where the chip serves one model over one AXI stream at
+//! 60.3 k classifications/s, the coordinator runs a **shard pool** (N
+//! worker threads, each with its own evaluation arena) over a **model
+//! registry** (named, hot-swappable compiled models), behind **bounded
+//! submission queues** that shed load with a typed [`Overloaded`] error
+//! instead of growing without limit.
+//!
+//! Two serving modes share the same shard/queue/metrics machinery:
+//!
+//! - [`Coordinator::start`] / [`Coordinator::start_with`] — one shard
+//!   driving a single [`Backend`] trait object (ASIC simulator, PJRT,
+//!   mirror). The PR-1 API, now with a bounded queue.
+//! - [`Coordinator::start_pool`] — N shards over a shared
+//!   [`ModelRegistry`]; each worker owns an [`EvalScratch`] arena and
+//!   evaluates through `Arc<ClausePlan>`s compiled once per model.
+//!   Requests carry an optional model id and are routed to the shard with
+//!   the fewest outstanding requests.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod sysproc;
 
-pub use backend::{AsicBackend, Backend, BackendOutput, MirrorBackend, NativeBackend};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
+pub use backend::{AsicBackend, Backend, BackendOutput, MirrorBackend, NativeBackend};
 pub use batcher::BatchConfig;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, ModelStats};
+pub use registry::{ModelEntry, ModelRegistry, RegistryError};
 pub use sysproc::SysProc;
 
 use crate::data::boolean::BoolImage;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::tm::EvalScratch;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+/// Default bound on each shard's submission queue. Beyond this depth the
+/// queue is not absorbing bursts any more, it is hiding an overload — so
+/// blocking `submit` applies backpressure and `try_submit` sheds.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 1024;
+
+/// Typed load-shedding error: every shard's bounded queue was full. The
+/// caller should retry later or divert traffic; the coordinator's memory
+/// stays bounded no matter how hard it is pushed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("coordinator overloaded: all {shards} shard queue(s) at capacity {capacity}")]
+pub struct Overloaded {
+    pub shards: usize,
+    pub capacity: usize,
+}
+
+/// Shard-pool sizing and policy.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Worker threads, each with its own queue and evaluation arena.
+    pub shards: usize,
+    /// Bounded submission-queue depth per shard.
+    pub queue_capacity: usize,
+    /// Dynamic-batching policy applied by every shard.
+    pub batch: BatchConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            shards: 4,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            batch: BatchConfig::default(),
+        }
+    }
+}
+
 /// An in-flight request.
 struct Request {
+    /// Registry model id; `None` routes to the pool's default model (or
+    /// the single backend in backend mode).
+    model: Option<String>,
     img: BoolImage,
     enqueued: Instant,
     resp: Sender<anyhow::Result<BackendOutput>>,
 }
 
+/// One worker thread plus its submission side.
+struct Shard {
+    tx: Option<SyncSender<Request>>,
+    /// Requests enqueued or in flight on this shard (the routing key).
+    outstanding: Arc<AtomicUsize>,
+    metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
 /// Handle for submitting classification requests.
 pub struct Coordinator {
-    tx: Option<Sender<Request>>,
-    worker: Option<JoinHandle<()>>,
-    metrics: Arc<Metrics>,
+    shards: Vec<Shard>,
+    registry: Option<Arc<ModelRegistry>>,
+    queue_capacity: usize,
 }
 
 impl Coordinator {
-    /// Start the coordinator over a backend built on the caller's thread.
-    /// Requires a `Send` backend; for thread-affine backends (PJRT) use
-    /// [`Coordinator::start_with`].
+    /// Start a single-shard coordinator over a backend built on the
+    /// caller's thread. Requires a `Send` backend; for thread-affine
+    /// backends (PJRT) use [`Coordinator::start_with`].
     pub fn start(backend: Box<dyn Backend + Send>, cfg: BatchConfig) -> Coordinator {
         let mut slot = Some(backend);
         Self::start_with(move || slot.take().expect("factory called once"), cfg)
     }
 
-    /// Start the coordinator thread; `factory` runs *inside* the worker
-    /// thread, so the backend itself need not be `Send` (PJRT client
-    /// handles are thread-affine).
+    /// Start a single-shard coordinator; `factory` runs *inside* the
+    /// worker thread, so the backend itself need not be `Send` (PJRT
+    /// client handles are thread-affine).
     pub fn start_with<F, B>(factory: F, cfg: BatchConfig) -> Coordinator
     where
         F: FnOnce() -> B + Send + 'static,
         B: Backend + 'static,
     {
-        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        Self::start_with_capacity(factory, cfg, DEFAULT_QUEUE_CAPACITY)
+    }
+
+    /// [`Self::start_with`] with an explicit submission-queue bound.
+    pub fn start_with_capacity<F, B>(
+        factory: F,
+        cfg: BatchConfig,
+        queue_capacity: usize,
+    ) -> Coordinator
+    where
+        F: FnOnce() -> B + Send + 'static,
+        B: Backend + 'static,
+    {
+        let queue_capacity = queue_capacity.max(1);
+        let (tx, rx) = sync_channel(queue_capacity);
         let metrics = Arc::new(Metrics::new());
-        let m = Arc::clone(&metrics);
+        let outstanding = Arc::new(AtomicUsize::new(0));
+        let (m, o) = (Arc::clone(&metrics), Arc::clone(&outstanding));
         let worker = std::thread::Builder::new()
             .name("convcotm-coordinator".into())
-            .spawn(move || {
-                let mut backend = factory();
-                let effective = BatchConfig {
-                    max_batch: cfg.max_batch.min(backend.max_batch()),
-                    ..cfg
-                };
-                let geometry = backend.geometry();
-                while let Some(batch) = batcher::next_batch(&rx, &effective) {
-                    // Reject wrong-geometry requests individually so one bad
-                    // client cannot poison the co-batched valid requests.
-                    let (batch, bad): (Vec<Request>, Vec<Request>) = batch
-                        .into_iter()
-                        .partition(|r| r.img.side() == geometry.img_side);
-                    for req in bad {
-                        m.record_error(1);
-                        let side = req.img.side();
-                        let _ = req.resp.send(Err(anyhow::anyhow!(
-                            "request image is {side}x{side} but the served model expects \
-                             {}x{} (geometry {geometry})",
-                            geometry.img_side,
-                            geometry.img_side
-                        )));
-                    }
-                    if batch.is_empty() {
-                        continue;
-                    }
-                    let imgs: Vec<&BoolImage> = batch.iter().map(|r| &r.img).collect();
-                    match backend.classify(&imgs) {
-                        Ok(outputs) => {
-                            let now = Instant::now();
-                            let lat: Vec<f64> = batch
-                                .iter()
-                                .map(|r| (now - r.enqueued).as_secs_f64() * 1e6)
-                                .collect();
-                            m.record_batch(batch.len(), &lat);
-                            for (req, out) in batch.into_iter().zip(outputs) {
-                                let _ = req.resp.send(Ok(out));
-                            }
-                        }
-                        Err(e) => {
-                            m.record_error(batch.len() as u64);
-                            for req in batch {
-                                let _ = req.resp.send(Err(anyhow::anyhow!("{e}")));
-                            }
-                        }
-                    }
-                }
-            })
+            .spawn(move || backend_worker(factory(), rx, m, o, cfg))
             .expect("spawn coordinator thread");
         Coordinator {
-            tx: Some(tx),
-            worker: Some(worker),
-            metrics,
+            shards: vec![Shard {
+                tx: Some(tx),
+                outstanding,
+                metrics,
+                worker: Some(worker),
+            }],
+            registry: None,
+            queue_capacity,
         }
     }
 
-    /// Submit asynchronously; the receiver yields the result.
+    /// Start a shard pool over a model registry: `cfg.shards` worker
+    /// threads, each owning its own [`EvalScratch`] arena, serving every
+    /// model in `registry` (requests routed by model id). Plans are
+    /// compiled once per model by the registry and shared immutably via
+    /// `Arc<ClausePlan>`; [`ModelRegistry::swap`] hot-swaps a model with
+    /// zero dropped requests.
+    pub fn start_pool(registry: Arc<ModelRegistry>, cfg: PoolConfig) -> Coordinator {
+        let queue_capacity = cfg.queue_capacity.max(1);
+        let shards = (0..cfg.shards.max(1))
+            .map(|i| {
+                let (tx, rx) = sync_channel(queue_capacity);
+                let metrics = Arc::new(Metrics::new());
+                let outstanding = Arc::new(AtomicUsize::new(0));
+                let (m, o) = (Arc::clone(&metrics), Arc::clone(&outstanding));
+                let reg = Arc::clone(&registry);
+                let batch = cfg.batch;
+                let worker = std::thread::Builder::new()
+                    .name(format!("convcotm-shard-{i}"))
+                    .spawn(move || pool_worker(rx, reg, m, o, batch))
+                    .expect("spawn shard worker");
+                Shard {
+                    tx: Some(tx),
+                    outstanding,
+                    metrics,
+                    worker: Some(worker),
+                }
+            })
+            .collect();
+        Coordinator {
+            shards,
+            registry: Some(registry),
+            queue_capacity,
+        }
+    }
+
+    /// The registry behind a pool coordinator (None in backend mode).
+    /// Hot-swaps and evictions go through this handle while serving.
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Submit with backpressure: blocks while the routed shard's bounded
+    /// queue is full. The receiver yields the result.
     pub fn submit(&self, img: BoolImage) -> Receiver<anyhow::Result<BackendOutput>> {
-        let (resp_tx, resp_rx) = channel();
-        let req = Request {
-            img,
-            enqueued: Instant::now(),
-            resp: resp_tx,
-        };
-        self.tx
+        self.submit_to(None, img)
+    }
+
+    /// [`Self::submit`] addressed to a registry model by id.
+    pub fn submit_to(
+        &self,
+        model: Option<&str>,
+        img: BoolImage,
+    ) -> Receiver<anyhow::Result<BackendOutput>> {
+        let (req, resp_rx) = self.make_request(model, img);
+        // Least-outstanding-requests routing; block on that shard's queue
+        // when full (backpressure — use try_submit_to to shed instead).
+        let i = self.least_loaded();
+        let shard = &self.shards[i];
+        shard.outstanding.fetch_add(1, Ordering::AcqRel);
+        shard.tx
             .as_ref()
             .expect("coordinator running")
             .send(req)
-            .expect("coordinator thread alive");
+            .expect("shard worker alive");
         resp_rx
+    }
+
+    /// Submit without blocking: if every shard's queue is full the request
+    /// is shed with [`Overloaded`] instead of queuing unboundedly.
+    pub fn try_submit(
+        &self,
+        img: BoolImage,
+    ) -> Result<Receiver<anyhow::Result<BackendOutput>>, Overloaded> {
+        self.try_submit_to(None, img)
+    }
+
+    /// [`Self::try_submit`] addressed to a registry model by id. Shards
+    /// are tried least-loaded first, so a single stuck shard does not shed
+    /// traffic the rest of the pool could absorb.
+    pub fn try_submit_to(
+        &self,
+        model: Option<&str>,
+        img: BoolImage,
+    ) -> Result<Receiver<anyhow::Result<BackendOutput>>, Overloaded> {
+        let (mut req, resp_rx) = self.make_request(model, img);
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        order.sort_by_key(|&i| self.shards[i].outstanding.load(Ordering::Acquire));
+        for &i in &order {
+            let shard = &self.shards[i];
+            let tx = shard.tx.as_ref().expect("coordinator running");
+            shard.outstanding.fetch_add(1, Ordering::AcqRel);
+            match tx.try_send(req) {
+                Ok(()) => return Ok(resp_rx),
+                Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => {
+                    shard.outstanding.fetch_sub(1, Ordering::AcqRel);
+                    req = r;
+                }
+            }
+        }
+        Err(Overloaded {
+            shards: self.shards.len(),
+            capacity: self.queue_capacity,
+        })
     }
 
     /// Submit and wait.
     pub fn classify(&self, img: BoolImage) -> anyhow::Result<BackendOutput> {
-        self.submit(img)
+        self.classify_model(None, img)
+    }
+
+    /// Submit to a named registry model and wait.
+    pub fn classify_model(
+        &self,
+        model: Option<&str>,
+        img: BoolImage,
+    ) -> anyhow::Result<BackendOutput> {
+        self.submit_to(model, img)
             .recv()
             .map_err(|_| anyhow::anyhow!("coordinator dropped request"))?
     }
 
+    /// Aggregate snapshot over every shard (per-shard request counts and
+    /// per-model breakdowns included).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        Metrics::merged(self.shards.iter().map(|s| s.metrics.as_ref()))
     }
 
-    /// Drain and stop the worker.
+    /// Drain all queues and stop the workers. Every request submitted
+    /// before shutdown receives its response: closing the senders lets
+    /// each worker's batcher run the queue dry before exiting.
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.close_and_join();
+        self.metrics()
+    }
+
+    fn make_request(
+        &self,
+        model: Option<&str>,
+        img: BoolImage,
+    ) -> (Request, Receiver<anyhow::Result<BackendOutput>>) {
+        let (resp_tx, resp_rx) = channel();
+        (
+            Request {
+                model: model.map(str::to_string),
+                img,
+                enqueued: Instant::now(),
+                resp: resp_tx,
+            },
+            resp_rx,
+        )
+    }
+
+    fn least_loaded(&self) -> usize {
+        (0..self.shards.len())
+            .min_by_key(|&i| self.shards[i].outstanding.load(Ordering::Acquire))
+            .expect("a coordinator always has at least one shard")
+    }
+
+    fn close_and_join(&mut self) {
+        for s in &mut self.shards {
+            s.tx.take();
         }
-        self.metrics.snapshot()
+        for s in &mut self.shards {
+            if let Some(w) = s.worker.take() {
+                let _ = w.join();
+            }
+        }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.close_and_join();
+    }
+}
+
+/// Single-backend worker loop (ASIC simulator, PJRT, mirror, or a native
+/// backend without a registry).
+fn backend_worker<B: Backend>(
+    mut backend: B,
+    rx: Receiver<Request>,
+    m: Arc<Metrics>,
+    outstanding: Arc<AtomicUsize>,
+    cfg: BatchConfig,
+) {
+    let effective = BatchConfig {
+        max_batch: cfg.max_batch.min(backend.max_batch()),
+        ..cfg
+    };
+    let geometry = backend.geometry();
+    while let Some(batch) = batcher::next_batch(&rx, &effective) {
+        // Reject bad requests individually so one bad client cannot poison
+        // the co-batched valid requests: wrong geometry, or a model id
+        // (backend mode serves a single anonymous model).
+        let (batch, bad): (Vec<Request>, Vec<Request>) = batch
+            .into_iter()
+            .partition(|r| r.model.is_none() && r.img.side() == geometry.img_side);
+        for req in bad {
+            m.record_error(1);
+            let err = match &req.model {
+                Some(name) => anyhow::anyhow!(
+                    "this coordinator serves a single unnamed backend; model '{name}' \
+                     requires a registry pool (Coordinator::start_pool)"
+                ),
+                None => {
+                    let side = req.img.side();
+                    anyhow::anyhow!(
+                        "request image is {side}x{side} but the served model expects \
+                         {}x{} (geometry {geometry})",
+                        geometry.img_side,
+                        geometry.img_side
+                    )
+                }
+            };
+            let _ = req.resp.send(Err(err));
+            outstanding.fetch_sub(1, Ordering::AcqRel);
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        let imgs: Vec<&BoolImage> = batch.iter().map(|r| &r.img).collect();
+        match backend.classify(&imgs) {
+            Ok(outputs) => {
+                let now = Instant::now();
+                let lat: Vec<f64> = batch
+                    .iter()
+                    .map(|r| (now - r.enqueued).as_secs_f64() * 1e6)
+                    .collect();
+                m.record_batch(batch.len(), &lat);
+                for (req, out) in batch.into_iter().zip(outputs) {
+                    let _ = req.resp.send(Ok(out));
+                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+            Err(e) => {
+                m.record_error(batch.len() as u64);
+                for req in batch {
+                    let _ = req.resp.send(Err(anyhow::anyhow!("{e}")));
+                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
         }
     }
+}
+
+/// Shard-pool worker loop: evaluates through registry-compiled plans with
+/// a per-shard arena. The registry is consulted once per (batch, model) —
+/// an in-flight batch keeps its `Arc<ModelEntry>` across a concurrent
+/// hot-swap, which is what makes [`ModelRegistry::swap`] lossless.
+fn pool_worker(
+    rx: Receiver<Request>,
+    registry: Arc<ModelRegistry>,
+    m: Arc<Metrics>,
+    outstanding: Arc<AtomicUsize>,
+    cfg: BatchConfig,
+) {
+    let mut scratch = EvalScratch::new();
+    // Latencies of the current same-model run, flushed to the metrics sink
+    // in one locked call per (batch, model) run — the hot path takes the
+    // metrics mutex O(models-per-batch) times, not once per request.
+    let mut run_lat: Vec<f64> = Vec::new();
+    while let Some(batch) = batcher::next_batch(&rx, &cfg) {
+        m.record_batch_size(batch.len());
+        // Entry cache for this batch only: consecutive requests for one
+        // model skip the registry's read lock, while a new batch always
+        // re-resolves and therefore observes completed swaps.
+        let mut cached: Option<(Option<String>, Arc<ModelEntry>)> = None;
+        let mut run: Option<Arc<ModelEntry>> = None;
+        for req in batch {
+            match serve_one(&registry, &mut cached, &req, &mut scratch) {
+                Ok((entry, out)) => {
+                    let lat = (Instant::now() - req.enqueued).as_secs_f64() * 1e6;
+                    match &run {
+                        Some(r) if Arc::ptr_eq(r, &entry) => run_lat.push(lat),
+                        _ => {
+                            if let Some(r) = run.take() {
+                                m.record_model_batch(&r.name, &run_lat);
+                                run_lat.clear();
+                            }
+                            run_lat.push(lat);
+                            run = Some(entry);
+                        }
+                    }
+                    let _ = req.resp.send(Ok(out));
+                }
+                Err((attribution, e)) => {
+                    // Attribute to the model that rejected the request
+                    // (the resolved entry for geometry errors, the
+                    // requested id for unknown models); resolution
+                    // failures with no id at all count globally only.
+                    match attribution {
+                        Some(name) => m.record_model_error(&name, 1),
+                        None => m.record_error(1),
+                    }
+                    let _ = req.resp.send(Err(e));
+                }
+            }
+            outstanding.fetch_sub(1, Ordering::AcqRel);
+        }
+        if let Some(r) = run.take() {
+            m.record_model_batch(&r.name, &run_lat);
+            run_lat.clear();
+        }
+    }
+}
+
+/// Serve one pool request: resolve the model (per-request failure on an
+/// unknown id), validate geometry (per-request failure on a mismatch),
+/// classify through the shared plan and the shard's arena. Errors carry
+/// the model name to attribute them to, when one is known.
+#[allow(clippy::type_complexity)]
+fn serve_one(
+    registry: &ModelRegistry,
+    cached: &mut Option<(Option<String>, Arc<ModelEntry>)>,
+    req: &Request,
+    scratch: &mut EvalScratch,
+) -> Result<(Arc<ModelEntry>, BackendOutput), (Option<String>, anyhow::Error)> {
+    let entry = match cached {
+        Some((key, entry)) if *key == req.model => Arc::clone(entry),
+        _ => match registry.resolve(req.model.as_deref()) {
+            Ok(entry) => {
+                *cached = Some((req.model.clone(), Arc::clone(&entry)));
+                entry
+            }
+            Err(e) => return Err((req.model.clone(), anyhow::Error::from(e))),
+        },
+    };
+    let g = entry.plan.geometry();
+    if req.img.side() != g.img_side {
+        let side = req.img.side();
+        let e = anyhow::anyhow!(
+            "request image is {side}x{side} but model '{}' expects {}x{} (geometry {g})",
+            entry.name,
+            g.img_side,
+            g.img_side
+        );
+        return Err((Some(entry.name.clone()), e));
+    }
+    let prediction = entry.plan.classify_into(&req.img, scratch);
+    let out = BackendOutput {
+        prediction,
+        class_sums: scratch.class_sums().to_vec(),
+        sim_cycles: None,
+    };
+    Ok((entry, out))
 }
 
 #[cfg(test)]
@@ -205,6 +551,33 @@ mod tests {
         let snap = coord.shutdown();
         assert_eq!(snap.requests, 8);
         assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn pool_serves_requests_and_matches_engine() {
+        let model = random_model(21);
+        let coord = Coordinator::start_pool(
+            ModelRegistry::single("m", model.clone()),
+            PoolConfig {
+                shards: 2,
+                ..PoolConfig::default()
+            },
+        );
+        assert_eq!(coord.shard_count(), 2);
+        let engine = Engine::new();
+        for img in random_images(22, 8) {
+            // Routed by explicit id and by default interchangeably.
+            let out = coord.classify_model(Some("m"), img.clone()).unwrap();
+            assert_eq!(out.prediction, engine.classify(&model, &img).prediction);
+            let out = coord.classify(img.clone()).unwrap();
+            assert_eq!(out.prediction, engine.classify(&model, &img).prediction);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests, 16);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.per_model["m"].requests, 16);
+        assert_eq!(snap.shard_requests.len(), 2);
+        assert_eq!(snap.shard_requests.iter().sum::<u64>(), 16);
     }
 
     #[test]
@@ -259,6 +632,22 @@ mod tests {
         assert!(errors[0].as_ref().unwrap_err().to_string().contains("32x32"));
         let snap = coord.shutdown();
         assert_eq!(snap.errors, 1);
+    }
+
+    #[test]
+    fn model_id_against_plain_backend_fails_that_request_only() {
+        let backend = NativeBackend::new(random_model(14));
+        let coord = Coordinator::start(Box::new(backend), BatchConfig::default());
+        let err = coord
+            .classify_model(Some("mnist"), random_images(15, 1).remove(0))
+            .unwrap_err();
+        assert!(err.to_string().contains("start_pool"), "{err}");
+        coord
+            .classify(random_images(16, 1).remove(0))
+            .expect("model-less requests still served");
+        let snap = coord.shutdown();
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.requests, 1);
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Model registry: named, hot-swappable compiled models behind the shard
+//! pool — the multi-model counterpart of the chip's single 5 632-byte
+//! model register file (§IV-B). One process serves several TM models
+//! (different geometries, datasets or clause budgets, cf. the multi-task
+//! ConvTM of Shende & Granmo 2025) and models can be replaced under load
+//! without dropping a single in-flight request.
+//!
+//! ## Hot-swap ordering guarantee
+//!
+//! [`ModelRegistry::swap`] compiles the incoming model's [`ClausePlan`] on
+//! the *caller's* thread (off the serving threads), then flips the
+//! `Arc<ModelEntry>` under a short write lock. Shard workers resolve an
+//! entry **once per batch** and hold their `Arc` clone until the batch
+//! completes, so:
+//!
+//! 1. requests batched before the flip finish on the old plan;
+//! 2. every batch formed after the flip sees the new plan;
+//! 3. no request is ever dropped or served by a half-built plan.
+//!
+//! The old entry is freed when the last in-flight batch releases its Arc.
+
+use crate::model_io::{self, ModelIoError};
+use crate::tm::{ClausePlan, Model};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+/// An immutable serving entry: a model, its compiled plan and a monotonic
+/// version (1 on first insert, bumped by every swap of the same name).
+#[derive(Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub version: u64,
+    pub model: Arc<Model>,
+    pub plan: Arc<ClausePlan>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    #[error("unknown model '{requested}' (loaded: {loaded})")]
+    UnknownModel { requested: String, loaded: String },
+    #[error("cannot swap model '{0}': not loaded (use insert to add new models)")]
+    SwapMissing(String),
+    #[error(
+        "model '{name}' cannot serve images: {literals} literals do not match geometry \
+         {geometry} (expected {expected})"
+    )]
+    Unservable {
+        name: String,
+        literals: usize,
+        geometry: String,
+        expected: usize,
+    },
+    #[error("the model registry is empty")]
+    Empty,
+}
+
+/// Named models, loadable and evictable at runtime. All methods take
+/// `&self`: the registry is shared as `Arc<ModelRegistry>` between the
+/// shard pool and whoever manages deployments.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Convenience: a registry holding exactly one model (the PR-1 style
+    /// single-model serving setup). Panics on an unservable model — the
+    /// programmatic paths use [`Self::insert`] and handle the error.
+    pub fn single(name: &str, model: Model) -> Arc<ModelRegistry> {
+        let r = ModelRegistry::new();
+        r.insert(name, model).expect("servable model");
+        Arc::new(r)
+    }
+
+    /// Every registry entry serves images, so its literal layout must
+    /// match its geometry (pure-TM configurations with decoupled literal
+    /// counts would index past the geometry-sized patch rows at request
+    /// time — reject them at the door instead).
+    fn validate(name: &str, model: &Model) -> Result<(), RegistryError> {
+        if model.params.literals_match_geometry() {
+            Ok(())
+        } else {
+            Err(RegistryError::Unservable {
+                name: name.to_string(),
+                literals: model.params.literals,
+                geometry: model.params.geometry.to_string(),
+                expected: model.params.geometry.num_literals(),
+            })
+        }
+    }
+
+    /// Load (or replace) `name`. The plan is compiled before any lock is
+    /// taken; the map only ever holds fully built, servable entries.
+    pub fn insert(&self, name: &str, model: Model) -> Result<Arc<ModelEntry>, RegistryError> {
+        Self::validate(name, &model)?;
+        let plan = Arc::new(ClausePlan::compile(&model));
+        let mut entries = self.entries.write().unwrap();
+        let version = entries.get(name).map_or(1, |e| e.version + 1);
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            version,
+            model: Arc::new(model),
+            plan,
+        });
+        entries.insert(name.to_string(), Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Atomically replace an *existing* model (deploying a retrained
+    /// version). Compilation happens before the flip — see the module docs
+    /// for the ordering guarantee. Unlike [`Self::insert`], swapping a name
+    /// that was never loaded is an error: a typo'd deploy must not silently
+    /// create a second model.
+    pub fn swap(&self, name: &str, model: Model) -> Result<Arc<ModelEntry>, RegistryError> {
+        Self::validate(name, &model)?;
+        let plan = Arc::new(ClausePlan::compile(&model));
+        let mut entries = self.entries.write().unwrap();
+        let Some(old) = entries.get(name) else {
+            return Err(RegistryError::SwapMissing(name.to_string()));
+        };
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            version: old.version + 1,
+            model: Arc::new(model),
+            plan,
+        });
+        entries.insert(name.to_string(), Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Remove a model. In-flight batches holding the entry finish
+    /// normally; subsequent requests for `name` fail per-request.
+    pub fn evict(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.entries.write().unwrap().remove(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.entries.read().unwrap().get(name).cloned()
+    }
+
+    /// Resolve a request's model id. `None` routes to the default model:
+    /// the alphabetically first entry, so single-model registries behave
+    /// exactly like model-less serving.
+    pub fn resolve(&self, name: Option<&str>) -> Result<Arc<ModelEntry>, RegistryError> {
+        let entries = self.entries.read().unwrap();
+        match name {
+            Some(n) => entries.get(n).cloned().ok_or_else(|| {
+                let loaded: Vec<&str> = entries.keys().map(String::as_str).collect();
+                RegistryError::UnknownModel {
+                    requested: n.to_string(),
+                    loaded: if loaded.is_empty() {
+                        "none".to_string()
+                    } else {
+                        loaded.join(", ")
+                    },
+                }
+            }),
+            None => entries.values().next().cloned().ok_or(RegistryError::Empty),
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.read().unwrap().is_empty()
+    }
+
+    /// Load every model named by a manifest file (see
+    /// [`model_io::read_manifest`] for the format; paths resolve relative
+    /// to the manifest's directory). Returns the loaded names in manifest
+    /// order.
+    pub fn load_manifest(&self, path: &Path) -> Result<Vec<String>, ModelIoError> {
+        let mut loaded = Vec::new();
+        for (name, model_path) in model_io::read_manifest(path)? {
+            let model = model_io::load_file_auto(&model_path)?;
+            if let Err(e) = self.insert(&name, model) {
+                return Err(ModelIoError::Manifest {
+                    path: path.display().to_string(),
+                    reason: e.to_string(),
+                });
+            }
+            loaded.push(name);
+        }
+        Ok(loaded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Geometry;
+    use crate::tm::Params;
+
+    fn tiny_model(weight_class: usize) -> Model {
+        let p = Params::asic();
+        let mut m = Model::blank(p.clone());
+        // One clause on a negated content literal: fires on blank images.
+        m.set_include(0, p.geometry.num_features(), true);
+        m.set_weight(weight_class, 0, 5);
+        m
+    }
+
+    #[test]
+    fn insert_resolve_and_default() {
+        let r = ModelRegistry::new();
+        assert!(matches!(r.resolve(None), Err(RegistryError::Empty)));
+        r.insert("mnist", tiny_model(1)).unwrap();
+        r.insert("fashion", tiny_model(2)).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.resolve(Some("mnist")).unwrap().name, "mnist");
+        // None routes to the alphabetically first entry.
+        assert_eq!(r.resolve(None).unwrap().name, "fashion");
+        let err = r.resolve(Some("nope")).unwrap_err();
+        assert!(err.to_string().contains("fashion, mnist"), "{err}");
+    }
+
+    #[test]
+    fn swap_bumps_version_and_keeps_old_entries_alive() {
+        let r = ModelRegistry::new();
+        let v1 = r.insert("m", tiny_model(1)).unwrap();
+        assert_eq!(v1.version, 1);
+        let held = r.resolve(Some("m")).unwrap(); // an in-flight batch's view
+        let v2 = r.swap("m", tiny_model(2)).unwrap();
+        assert_eq!(v2.version, 2);
+        assert_eq!(r.resolve(Some("m")).unwrap().version, 2);
+        // The held entry still evaluates: classify through its old plan.
+        let mut scratch = crate::tm::EvalScratch::new();
+        let img = crate::data::BoolImage::blank();
+        assert_eq!(held.plan.classify_into(&img, &mut scratch), 1);
+        assert_eq!(v2.plan.classify_into(&img, &mut scratch), 2);
+    }
+
+    #[test]
+    fn swap_of_unknown_name_is_an_error() {
+        let r = ModelRegistry::new();
+        assert!(matches!(
+            r.swap("ghost", tiny_model(0)),
+            Err(RegistryError::SwapMissing(_))
+        ));
+    }
+
+    #[test]
+    fn evict_removes_and_reinsert_continues_versioning() {
+        let r = ModelRegistry::new();
+        r.insert("m", tiny_model(1)).unwrap();
+        assert!(r.evict("m").is_some());
+        assert!(r.is_empty());
+        assert!(r.evict("m").is_none());
+        // Versions restart after a full evict (the history is gone).
+        assert_eq!(r.insert("m", tiny_model(1)).unwrap().version, 1);
+    }
+
+    #[test]
+    fn unservable_models_are_rejected_at_the_door() {
+        // A pure-TM configuration (literals decoupled from the geometry)
+        // would index past the patch rows at request time: neither insert
+        // nor swap may admit it.
+        let p = Params {
+            literals: 8,
+            ..Params::asic()
+        };
+        let r = ModelRegistry::new();
+        let err = r.insert("tiny", Model::blank(p.clone())).unwrap_err();
+        assert!(matches!(err, RegistryError::Unservable { .. }), "{err}");
+        assert!(err.to_string().contains("8 literals"), "{err}");
+        r.insert("ok", tiny_model(1)).unwrap();
+        assert!(matches!(
+            r.swap("ok", Model::blank(p)),
+            Err(RegistryError::Unservable { .. })
+        ));
+        // The servable entry is untouched by the failed swap.
+        assert_eq!(r.get("ok").unwrap().version, 1);
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join("convcotm_registry_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m28 = tiny_model(3);
+        let p32 = Params::for_geometry(Geometry::cifar10());
+        let m32 = Model::blank(p32);
+        model_io::save_file(&m28, &dir.join("a.cctm")).unwrap();
+        model_io::save_file(&m32, &dir.join("b.cctm")).unwrap();
+        let manifest = dir.join("models.manifest");
+        std::fs::write(
+            &manifest,
+            "# serving manifest\nmnist-asic = a.cctm\ncifar10-32x32 = b.cctm\n",
+        )
+        .unwrap();
+        let r = ModelRegistry::new();
+        let loaded = r.load_manifest(&manifest).unwrap();
+        assert_eq!(loaded, vec!["mnist-asic", "cifar10-32x32"]);
+        assert_eq!(
+            r.get("cifar10-32x32").unwrap().plan.geometry(),
+            Geometry::cifar10()
+        );
+        assert_eq!(r.get("mnist-asic").unwrap().plan.geometry(), Geometry::asic());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -54,6 +54,20 @@ impl SysProc {
         let overhead = SINGLE_SHOT_OVERHEAD_27M8 * (freq_hz / 27.8e6).max(0.2);
         (LATENCY_CYCLES as f64 + overhead) / freq_hz
     }
+
+    /// Projected classification rate of a *pool* of `shards` accelerators
+    /// fed by one system processor (the hardware analogue of the software
+    /// shard pool): the accelerators' 372-cycle processing overlaps
+    /// perfectly across shards, but the per-image system overhead (DMA
+    /// setup, interrupt service) stays serialized on the processor —
+    /// Amdahl with the measured overhead as the serial fraction. With
+    /// `shards == 1` this is exactly [`Self::classification_rate`]; as
+    /// `shards → ∞` it approaches `freq / overhead` (≈312 k img/s at
+    /// 27.8 MHz), the system-processor bound.
+    pub fn pool_classification_rate(&self, freq_hz: f64, shards: usize) -> f64 {
+        let shards = shards.max(1) as f64;
+        freq_hz / (self.overhead_cycles(freq_hz) + PERIOD_CYCLES as f64 / shards)
+    }
 }
 
 #[cfg(test)]
@@ -93,6 +107,24 @@ mod tests {
         assert!(mid > 68.5 && mid < 89.0);
         assert_eq!(sp.overhead_cycles(0.5e6), 68.5);
         assert_eq!(sp.overhead_cycles(50e6), 89.0);
+    }
+
+    #[test]
+    fn pool_rate_scales_and_saturates_at_the_sysproc_bound() {
+        let sp = SysProc;
+        let f = 27.8e6;
+        assert_eq!(sp.pool_classification_rate(f, 1), sp.classification_rate(f));
+        let mut prev = 0.0;
+        for shards in [1, 2, 4, 8, 64] {
+            let r = sp.pool_classification_rate(f, shards);
+            assert!(r > prev, "monotonic in shard count");
+            assert!(r < f / sp.overhead_cycles(f), "below the sysproc bound");
+            prev = r;
+        }
+        // 4 shards recover most of the accelerator-side parallelism:
+        // 372/4 + 89 cycles/img ⇒ ~2.5× the single-accelerator system.
+        let x4 = sp.pool_classification_rate(f, 4) / sp.classification_rate(f);
+        assert!((2.0..4.0).contains(&x4), "4-shard speedup {x4:.2}");
     }
 
     #[test]

@@ -70,8 +70,16 @@ pub fn load_dataset(
             idx::load_files(&base, "train"),
             idx::load_files(&base, "t10k"),
         ) {
-            let take_train = if n_train == 0 { train.len() } else { n_train.min(train.len()) };
-            let take_test = if n_test == 0 { test.len() } else { n_test.min(test.len()) };
+            let take_train = if n_train == 0 {
+                train.len()
+            } else {
+                n_train.min(train.len())
+            };
+            let take_test = if n_test == 0 {
+                test.len()
+            } else {
+                n_test.min(test.len())
+            };
             return Ok(Dataset {
                 name: name.to_string(),
                 train: train.into_iter().take(take_train).collect(),

@@ -21,13 +21,17 @@
 
 use convcotm::asic::{dffs, Accelerator, ChipConfig, CycleReport};
 use convcotm::cli::Args;
-use convcotm::coordinator::{AsicBackend, BatchConfig, Coordinator, NativeBackend, SysProc};
-use convcotm::data::{booleanize_split_for_geometry, load_dataset, Geometry};
+use convcotm::coordinator::{
+    AsicBackend, BatchConfig, Coordinator, ModelRegistry, NativeBackend, PoolConfig, SysProc,
+    DEFAULT_QUEUE_CAPACITY,
+};
+use convcotm::data::{booleanize_split_for_geometry, load_dataset, BoolImage, Geometry};
 use convcotm::energy::{EnergyModel, OperatingPoint};
 use convcotm::model_io;
 use convcotm::tm::{Engine, Params, Trainer};
 use convcotm::util::Table;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -63,6 +67,8 @@ fn print_usage() {
          train  --dataset mnist|fmnist|kmnist --geometry G --n-train N --n-test N --epochs E --seed S --out FILE\n\
          eval   --model FILE --dataset D --n-test N\n\
          serve  --model FILE --backend native|asic|pjrt --requests N --max-batch B --threads T\n\
+         serve  --model NAME=FILE [--model NAME=FILE ...] [--manifest FILE] --shards N --queue-capacity C\n\
+                (repeatable --model / --manifest / --shards selects the sharded registry pool)\n\
          power  --model FILE [--vdd V --freq HZ]\n\
          info   [--geometry G]\n\n\
          Geometries: asic (28x10s1, default), cifar10 (32x10s1), or SIDExWINDOW[sSTRIDE].\n\
@@ -176,7 +182,141 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Is this serve invocation asking for the sharded multi-model pool?
+/// Any of `--shards`, `--manifest`, a repeated `--model`, or a
+/// `NAME=PATH` model spec selects it.
+fn pool_mode_requested(args: &Args) -> bool {
+    args.get("shards").is_some()
+        || args.get("manifest").is_some()
+        || args.get_all("model").len() > 1
+        || args.get_all("model").iter().any(|m| m.contains('='))
+}
+
+/// Sharded registry serving: load every `--model NAME=PATH` (and/or a
+/// `--manifest`), start `--shards` workers, replay `--requests` round-robin
+/// across the loaded models and print the aggregate + per-model metrics.
+fn cmd_serve_pool(args: &Args) -> anyhow::Result<()> {
+    let backend_name = args.get_or("backend", "native");
+    anyhow::ensure!(
+        backend_name == "native",
+        "the sharded pool evaluates through compiled plans (native); \
+         --backend {backend_name} only supports single-model serving"
+    );
+    let requests = args.get_usize("requests", 1000).map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_usize("max-batch", 16).map_err(anyhow::Error::msg)?;
+    let shards = args.get_usize("shards", 4).map_err(anyhow::Error::msg)?;
+    let queue_capacity = args
+        .get_usize("queue-capacity", DEFAULT_QUEUE_CAPACITY)
+        .map_err(anyhow::Error::msg)?;
+
+    let registry = Arc::new(ModelRegistry::new());
+    if let Some(manifest) = args.get("manifest") {
+        let loaded = registry.load_manifest(Path::new(manifest))?;
+        println!("manifest {manifest}: loaded {}", loaded.join(", "));
+    }
+    for spec in args.get_all("model") {
+        let (name, path) = match spec.split_once('=') {
+            Some((n, p)) => (n.to_string(), p.to_string()),
+            // Bare `--model foo.cctm` names the model after the file stem.
+            None => (
+                Path::new(spec)
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| spec.clone()),
+                spec.clone(),
+            ),
+        };
+        let model = model_io::load_file_auto(&PathBuf::from(&path))?;
+        // Servability (literals ↔ geometry coupling) is enforced by the
+        // registry itself, for this path and the manifest path alike.
+        registry.insert(&name, model)?;
+    }
+    anyhow::ensure!(
+        !registry.is_empty(),
+        "no models loaded: pass --model NAME=PATH (repeatable) or --manifest FILE"
+    );
+
+    // One booleanized test split per distinct geometry in the registry.
+    let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 256, 7)?;
+    let names = registry.names();
+    let mut geometries: Vec<Geometry> = Vec::new();
+    let mut test_sets: Vec<Vec<(BoolImage, u8)>> = Vec::new();
+    let mut traffic: Vec<(String, usize)> = Vec::new(); // (name, test_sets index)
+    for name in &names {
+        let g = registry.get(name).expect("just inserted").plan.geometry();
+        let idx = match geometries.iter().position(|bg| *bg == g) {
+            Some(i) => i,
+            None => {
+                geometries.push(g);
+                test_sets.push(booleanize_split_for_geometry(
+                    &dataset.test,
+                    dataset.booleanizer,
+                    g,
+                ));
+                test_sets.len() - 1
+            }
+        };
+        traffic.push((name.clone(), idx));
+    }
+
+    let coord = Coordinator::start_pool(
+        Arc::clone(&registry),
+        PoolConfig {
+            shards,
+            queue_capacity,
+            batch: BatchConfig {
+                max_batch,
+                ..BatchConfig::default()
+            },
+        },
+    );
+    println!(
+        "pool: {} shard(s), queue capacity {queue_capacity}/shard, serving {}",
+        coord.shard_count(),
+        names.join(", ")
+    );
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let (name, idx) = &traffic[i % traffic.len()];
+            let set = &test_sets[*idx];
+            coord.submit_to(Some(name.as_str()), set[i % set.len()].0.clone())
+        })
+        .collect();
+    let mut failed = 0usize;
+    for rx in rxs {
+        if rx.recv()?.is_err() {
+            failed += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let snap = coord.shutdown();
+    println!(
+        "pool: {} requests ({failed} failed) in {:.2}s → {:.1} k req/s, p50 {:.0} µs, p99 {:.0} µs, {} batches",
+        snap.requests,
+        elapsed,
+        snap.requests as f64 / elapsed / 1e3,
+        snap.latency_us.p50,
+        snap.latency_us.p99,
+        snap.batches
+    );
+    let mut t = Table::new(&["Model", "Requests", "Errors"]);
+    for (name, stats) in &snap.per_model {
+        t.row(&[
+            name.clone(),
+            format!("{}", stats.requests),
+            format!("{}", stats.errors),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!("{}", snap.to_json().to_string_pretty());
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if pool_mode_requested(args) {
+        return cmd_serve_pool(args);
+    }
     let model = load_model_arg(args)?;
     let g = model.params.geometry;
     let backend_name = args.get_or("backend", "native");
@@ -201,7 +341,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             };
             Coordinator::start(Box::new(backend), cfg)
         }
-        "asic" => Coordinator::start(Box::new(AsicBackend::new(&model, ChipConfig::default())), cfg),
+        "asic" => {
+            let backend = AsicBackend::new(&model, ChipConfig::default());
+            Coordinator::start(Box::new(backend), cfg)
+        }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
             let dir = PathBuf::from("artifacts");

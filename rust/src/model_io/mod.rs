@@ -20,7 +20,7 @@ use crate::tm::params::Params;
 use crate::tm::Model;
 use crate::util::BitVec;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// Container magic: "CCTM" + format version.
 const MAGIC: &[u8; 4] = b"CCTM";
@@ -45,6 +45,8 @@ pub enum ModelIoError {
     BadHeader(String),
     #[error("payload size {got} != expected {expected}")]
     PayloadSize { got: usize, expected: usize },
+    #[error("manifest {path}: {reason}")]
+    Manifest { path: String, reason: String },
 }
 
 /// Raw register payload: TA-action bits (LSB-first, clause-major, rows
@@ -199,6 +201,57 @@ pub fn load_file_auto(path: &Path) -> Result<Model, ModelIoError> {
     from_wire(params, &h.payload)
 }
 
+/// Parse a serving-registry manifest: one `name = path` pair per line,
+/// `#` comments and blank lines ignored. Relative paths resolve against
+/// the manifest's own directory, so a manifest and its model files move
+/// together. Names must be unique. Model files themselves are *not*
+/// opened here — the registry loads them one by one via
+/// [`load_file_auto`], which recovers each model's geometry from its
+/// container header.
+///
+/// ```text
+/// # convcotm serving manifest
+/// mnist-asic     = models/mnist.cctm
+/// fashion-28x28  = models/fashion.cctm
+/// cifar10-32x32  = /srv/models/cifar10.cctm
+/// ```
+pub fn read_manifest(path: &Path) -> Result<Vec<(String, PathBuf)>, ModelIoError> {
+    let err = |reason: String| ModelIoError::Manifest {
+        path: path.display().to_string(),
+        reason,
+    };
+    let text = std::fs::read_to_string(path)?;
+    let base = path.parent().unwrap_or_else(|| Path::new("."));
+    let mut out: Vec<(String, PathBuf)> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((name, file)) = line.split_once('=') else {
+            return Err(err(format!(
+                "line {}: expected 'name = path', got '{line}'",
+                i + 1
+            )));
+        };
+        let (name, file) = (name.trim(), file.trim());
+        if name.is_empty() || file.is_empty() {
+            return Err(err(format!("line {}: empty model name or path", i + 1)));
+        }
+        if out.iter().any(|(n, _)| n == name) {
+            return Err(err(format!("line {}: duplicate model name '{name}'", i + 1)));
+        }
+        let file = PathBuf::from(file);
+        let file = if file.is_absolute() {
+            file
+        } else {
+            base.join(file)
+        };
+        out.push((name.to_string(), file));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,6 +378,32 @@ mod tests {
         let via_params = load_file(Params::asic(), &path).unwrap();
         assert!(m == via_params);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn manifest_parses_comments_paths_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join("convcotm_manifest_parse_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("models.manifest");
+        std::fs::write(
+            &path,
+            "# comment\n\nmnist = rel/a.cctm\ncifar = /abs/b.cctm\n",
+        )
+        .unwrap();
+        let entries = read_manifest(&path).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].0, "mnist");
+        assert_eq!(entries[0].1, dir.join("rel/a.cctm"));
+        assert_eq!(entries[1].1, PathBuf::from("/abs/b.cctm"));
+        // Missing '=' is a parse error with a line number.
+        std::fs::write(&path, "mnist rel/a.cctm\n").unwrap();
+        let e = read_manifest(&path).unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        // Duplicate names are rejected.
+        std::fs::write(&path, "m = a.cctm\nm = b.cctm\n").unwrap();
+        let e = read_manifest(&path).unwrap_err();
+        assert!(e.to_string().contains("duplicate"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -91,10 +91,10 @@ impl CompiledGraph {
         } else {
             xla::Literal::vec1(&img_data).reshape(&[self.batch as i64, 784])?
         };
-        let include_lit =
-            xla::Literal::vec1(&model.include).reshape(&[self.clauses as i64, self.literals as i64])?;
-        let weights_lit =
-            xla::Literal::vec1(&model.weights).reshape(&[self.classes as i64, self.clauses as i64])?;
+        let include_lit = xla::Literal::vec1(&model.include)
+            .reshape(&[self.clauses as i64, self.literals as i64])?;
+        let weights_lit = xla::Literal::vec1(&model.weights)
+            .reshape(&[self.classes as i64, self.clauses as i64])?;
         let result = self
             .exe
             .execute::<xla::Literal>(&[img_lit, include_lit, weights_lit])?[0][0]

@@ -221,7 +221,11 @@ impl PatchSets {
         }
         let sets = &mut self.sets;
         let full = &self.full;
-        let row_mask: u64 = if positions == 64 { !0 } else { (1u64 << positions) - 1 };
+        let row_mask: u64 = if positions == 64 {
+            !0
+        } else {
+            (1u64 << positions) - 1
+        };
         for wr in 0..window {
             for wc in 0..window {
                 let k = wr * window + wc;

@@ -49,6 +49,14 @@ use crate::util::BitVec;
 const CONTENT_DENSITY_PRIOR: f32 = 0.25;
 
 /// A model compiled for fast evaluation. See the module docs.
+///
+/// A compiled plan is plain owned data (`Send + Sync`, asserted below):
+/// the serving stack compiles once per model and shares the result across
+/// shard workers as `Arc<ClausePlan>`, with hot-swap implemented as an
+/// atomic `Arc` flip in the model registry. Incremental mutation
+/// ([`Self::set_include`], [`Self::set_weight`]) is the single-threaded
+/// trainer's path and needs `&mut` — a shared serving plan is immutable
+/// by construction.
 #[derive(Clone, Debug)]
 pub struct ClausePlan {
     geometry: Geometry,
@@ -76,6 +84,13 @@ pub struct ClausePlan {
     /// The model include-structure revision this plan mirrors.
     revision: u64,
 }
+
+/// The shard pool shares plans across worker threads; keep the plan free
+/// of interior mutability (compile-time check, not a test).
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ClausePlan>()
+};
 
 /// Equality is *structural* (dimensions, CSR layout, flags, weights,
 /// scores): the revision counter is an edit-history artifact and is

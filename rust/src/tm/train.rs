@@ -307,7 +307,11 @@ impl Trainer {
             for k in 0..self.params.literals {
                 if lits.get(k) {
                     // Literal is 1: reinforce toward include.
-                    let p = if self.boost_true_positive { 1.0 } else { p_remember };
+                    let p = if self.boost_true_positive {
+                        1.0
+                    } else {
+                        p_remember
+                    };
                     if self.rng.chance(p) {
                         self.reinforce_include(j, k);
                     }

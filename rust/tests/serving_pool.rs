@@ -1,0 +1,363 @@
+//! End-to-end tests for the sharded multi-model serving stack: shard-pool
+//! throughput scaling, lossless hot-swap under load, bounded-queue load
+//! shedding, clean-shutdown draining and per-request failure isolation.
+
+use convcotm::coordinator::{
+    Backend, BackendOutput, BatchConfig, Coordinator, ModelRegistry, PoolConfig,
+};
+use convcotm::data::{BoolImage, Geometry};
+use convcotm::tm::{Engine, Model, Params};
+use convcotm::util::Xoshiro256ss;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Every test in this binary takes this guard: the throughput and
+/// load-shedding tests are timing-sensitive, and the default parallel
+/// test runner must not let the others steal their cores mid-measurement.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn heavy_guard() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn random_model(seed: u64, includes_per_clause: usize) -> Model {
+    let params = Params::asic();
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut m = Model::blank(params.clone());
+    for j in 0..params.clauses {
+        for _ in 0..1 + rng.usize_below(includes_per_clause) {
+            m.set_include(j, rng.usize_below(params.literals), true);
+        }
+        for i in 0..params.classes {
+            m.set_weight(i, j, (rng.below(61) as i32 - 30) as i8);
+        }
+    }
+    m
+}
+
+fn random_images(seed: u64, n: usize) -> Vec<BoolImage> {
+    let mut rng = Xoshiro256ss::new(seed);
+    (0..n)
+        .map(|_| BoolImage::from_bools(&(0..784).map(|_| rng.chance(0.3)).collect::<Vec<_>>()))
+        .collect()
+}
+
+/// A model that deterministically predicts `class` on a blank image: one
+/// clause over a negated content literal (true on every patch of a blank
+/// image) voting +5 for `class`.
+fn fixed_class_model(class: usize) -> Model {
+    let p = Params::asic();
+    let mut m = Model::blank(p.clone());
+    m.set_include(0, p.geometry.num_features(), true);
+    m.set_weight(class, 0, 5);
+    m
+}
+
+fn pool(model: &Model, shards: usize, queue_capacity: usize) -> Coordinator {
+    Coordinator::start_pool(
+        ModelRegistry::single("m", model.clone()),
+        PoolConfig {
+            shards,
+            queue_capacity,
+            batch: BatchConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(50),
+            },
+        },
+    )
+}
+
+/// Best-of-3 end-to-end throughput of a concurrent workload (submit all,
+/// then collect) through a pool.
+fn measure_throughput(coord: &Coordinator, images: &[BoolImage], reps: usize) -> f64 {
+    // Warmup sizes every shard's arena.
+    for img in images.iter().take(8) {
+        coord.classify(img.clone()).unwrap();
+    }
+    let mut best = 0.0f64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let rxs: Vec<_> = images.iter().map(|i| coord.submit(i.clone())).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        best = best.max(images.len() as f64 / t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Acceptance (a): a 4-shard pool is ≥2× single-shard throughput on a
+/// ≥64-image concurrent workload. The bar scales with the machine (and
+/// with BENCH_QUICK, mirroring the CI bench): a 4-way-parallel assertion
+/// is only meaningful with ≥4 cores; on 2–3 cores any real speedup is
+/// accepted, and a single-core host only checks correctness.
+#[test]
+fn four_shards_at_least_double_single_shard_throughput() {
+    let _serial = heavy_guard();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_images = if quick { 128 } else { 256 };
+    let reps = if quick { 2 } else { 3 };
+    let model = random_model(42, 6);
+    let images = random_images(43, n_images);
+
+    let single = pool(&model, 1, 4096);
+    let rate1 = measure_throughput(&single, &images, reps);
+    assert_eq!(single.shutdown().errors, 0);
+
+    let quad = pool(&model, 4, 4096);
+    let rate4 = measure_throughput(&quad, &images, reps);
+    assert_eq!(quad.shutdown().errors, 0);
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let speedup = rate4 / rate1;
+    println!("pool speedup 4 vs 1 shards: {speedup:.2}x on {cores} cores");
+    if cores >= 4 {
+        assert!(
+            speedup >= 2.0,
+            "4 shards must be >=2x 1 shard on a >=4-core host, got {speedup:.2}x \
+             ({rate1:.0} vs {rate4:.0} img/s over {n_images} images)"
+        );
+    } else if cores >= 2 {
+        assert!(
+            speedup >= 1.1,
+            "4 shards must beat 1 shard on a {cores}-core host, got {speedup:.2}x"
+        );
+    }
+}
+
+/// Acceptance (b): hot-swapping a model under load loses zero in-flight
+/// requests, and post-swap responses reflect the new weights.
+#[test]
+fn hot_swap_under_load_is_lossless_and_takes_effect() {
+    let _serial = heavy_guard();
+    let registry = ModelRegistry::single("live", fixed_class_model(2));
+    let coord = Coordinator::start_pool(
+        Arc::clone(&registry),
+        PoolConfig {
+            shards: 2,
+            queue_capacity: 1024,
+            batch: BatchConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(50),
+            },
+        },
+    );
+    let img = BoolImage::blank();
+    let mut rxs = Vec::new();
+    // Load the pool, then flip the model while those requests are in
+    // flight, then keep submitting.
+    for _ in 0..200 {
+        rxs.push(coord.submit_to(Some("live"), img.clone()));
+    }
+    let swapped = registry.swap("live", fixed_class_model(7)).unwrap();
+    assert_eq!(swapped.version, 2);
+    for _ in 0..200 {
+        rxs.push(coord.submit_to(Some("live"), img.clone()));
+    }
+    let predictions: Vec<u8> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("no request dropped").unwrap().prediction)
+        .collect();
+    // Zero dropped, zero failed — and every response came from one of the
+    // two model versions, never a half-built plan.
+    assert_eq!(predictions.len(), 400);
+    assert!(predictions.iter().all(|&p| p == 2 || p == 7));
+    // Requests submitted after swap() returned are batched after the Arc
+    // flip, so they must all see the new weights.
+    assert!(
+        predictions[200..].iter().all(|&p| p == 7),
+        "post-swap submissions served by the old model"
+    );
+    let snap = coord.shutdown();
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.requests, 400);
+    assert_eq!(snap.per_model["live"].requests, 400);
+}
+
+/// Acceptance (c): an overwhelmed pool sheds load with a typed
+/// `Overloaded` error instead of queuing without limit.
+#[test]
+fn bounded_queue_sheds_with_overloaded_instead_of_growing() {
+    let _serial = heavy_guard();
+    let model = random_model(5, 6);
+    let coord = pool(&model, 1, 64);
+    let img = random_images(6, 1).remove(0);
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    // Burst far past the queue bound: submission is ~20-30x faster than
+    // evaluation, so a 64-deep queue must fill and shed.
+    for _ in 0..5000 {
+        match coord.try_submit(img.clone()) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                assert_eq!((e.shards, e.capacity), (1, 64));
+                shed += 1;
+            }
+        }
+    }
+    assert!(shed > 0, "a 5000-request burst against a 64-deep queue must shed");
+    // Every *accepted* request still completes successfully.
+    for rx in accepted {
+        rx.recv().unwrap().unwrap();
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.requests as usize + shed, 5000);
+}
+
+/// A backend that parks inside `classify` until released — makes the
+/// full-queue state deterministic for the backpressure test.
+struct GateBackend {
+    geometry: Geometry,
+    gate: std::sync::mpsc::Receiver<()>,
+}
+
+impl Backend for GateBackend {
+    fn name(&self) -> &'static str {
+        "gate"
+    }
+    fn max_batch(&self) -> usize {
+        1
+    }
+    fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+    fn classify(&mut self, imgs: &[&BoolImage]) -> anyhow::Result<Vec<BackendOutput>> {
+        // Block until the test releases one batch (after shutdown the gate
+        // sender is gone; serve the drain immediately).
+        let _ = self.gate.recv();
+        Ok(imgs
+            .iter()
+            .map(|_| BackendOutput {
+                prediction: 0,
+                class_sums: vec![0; 10],
+                sim_cycles: None,
+            })
+            .collect())
+    }
+}
+
+/// Lifecycle: with the worker deterministically wedged, a full bounded
+/// queue returns `Overloaded` rather than blocking the submitter.
+#[test]
+fn full_queue_returns_overloaded_without_blocking() {
+    let _serial = heavy_guard();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+    let coord = Coordinator::start_with_capacity(
+        move || GateBackend {
+            geometry: Geometry::asic(),
+            gate: gate_rx,
+        },
+        BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        },
+        2,
+    );
+    let img = BoolImage::blank();
+    let mut accepted = vec![coord.submit(img.clone())];
+    // Wait for the worker to dequeue that request and wedge in classify,
+    // then fill the 2-deep queue and observe non-blocking shedding.
+    std::thread::sleep(Duration::from_millis(20));
+    let mut shed = None;
+    for _ in 0..8 {
+        match coord.try_submit(img.clone()) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                shed = Some(e);
+                break;
+            }
+        }
+    }
+    let e = shed.expect("queue of capacity 2 accepted 8 extra requests");
+    assert_eq!((e.shards, e.capacity), (1, 2));
+    assert!(
+        accepted.len() <= 4,
+        "accepted {} requests into worker+capacity-2 queue",
+        accepted.len()
+    );
+    // Release the wedge: one gate send per max_batch=1 batch.
+    for _ in 0..accepted.len() {
+        gate_tx.send(()).ok();
+    }
+    for rx in &accepted {
+        rx.recv().unwrap().unwrap();
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests as usize, accepted.len());
+    assert_eq!(snap.errors, 0);
+}
+
+/// Lifecycle: shutdown closes the queues and *drains* them — every
+/// request accepted before shutdown gets its response.
+#[test]
+fn clean_shutdown_drains_queue_without_losing_responses() {
+    let _serial = heavy_guard();
+    let model = random_model(9, 4);
+    let engine = Engine::new();
+    let coord = pool(&model, 2, 256);
+    let images = random_images(10, 100);
+    let rxs: Vec<_> = images.iter().map(|i| coord.submit(i.clone())).collect();
+    // Shut down immediately: most requests are still queued.
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests, 100, "drain must serve every queued request");
+    assert_eq!(snap.errors, 0);
+    for (rx, img) in rxs.into_iter().zip(&images) {
+        let out = rx.recv().expect("response lost in shutdown").unwrap();
+        assert_eq!(out.prediction, engine.classify(&model, img).prediction);
+    }
+}
+
+/// Lifecycle: a wrong-model-id or wrong-geometry request fails *that
+/// request only* — co-batched valid requests (including for other
+/// models/geometries) are unaffected.
+#[test]
+fn bad_model_or_geometry_fails_request_not_batch() {
+    let _serial = heavy_guard();
+    let registry = ModelRegistry::new();
+    registry.insert("mnist", random_model(11, 4)).unwrap();
+    registry
+        .insert("cifar", Model::blank(Params::for_geometry(Geometry::cifar10())))
+        .unwrap();
+    let coord = Coordinator::start_pool(
+        Arc::new(registry),
+        PoolConfig {
+            shards: 1,
+            queue_capacity: 256,
+            batch: BatchConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(5),
+            },
+        },
+    );
+    let img28 = random_images(12, 1).remove(0);
+    let img32 = BoolImage::blank_sized(32);
+    // Interleave so the bad requests co-batch with good ones.
+    let good_mnist: Vec<_> = (0..4)
+        .map(|_| coord.submit_to(Some("mnist"), img28.clone()))
+        .collect();
+    let bad_geometry = coord.submit_to(Some("mnist"), img32.clone());
+    let unknown_model = coord.submit_to(Some("ghost"), img28.clone());
+    let good_cifar = coord.submit_to(Some("cifar"), img32.clone());
+    let bad_cifar = coord.submit_to(Some("cifar"), img28.clone());
+
+    for rx in good_mnist {
+        rx.recv().unwrap().expect("valid mnist request poisoned");
+    }
+    let e = bad_geometry.recv().unwrap().unwrap_err();
+    assert!(e.to_string().contains("32x32"), "{e}");
+    let e = unknown_model.recv().unwrap().unwrap_err();
+    assert!(e.to_string().contains("unknown model 'ghost'"), "{e}");
+    good_cifar.recv().unwrap().expect("valid cifar request poisoned");
+    let e = bad_cifar.recv().unwrap().unwrap_err();
+    assert!(e.to_string().contains("28x28"), "{e}");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.errors, 3);
+    assert_eq!(snap.requests, 5);
+    assert_eq!(snap.per_model["mnist"].requests, 4);
+    assert_eq!(snap.per_model["mnist"].errors, 1);
+    assert_eq!(snap.per_model["cifar"].requests, 1);
+    assert_eq!(snap.per_model["cifar"].errors, 1);
+    assert_eq!(snap.per_model["ghost"].errors, 1);
+}
