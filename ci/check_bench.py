@@ -107,7 +107,11 @@ def main(argv):
             f"| {label} | {b['img_per_s']:.0f} | {f['img_per_s']:.0f} | "
             f"{100 * (ratio - 1):+.0f}% | {f_allocs} | {status} |"
         )
-    for key in ("plan_speedup_vs_early_exit", "pool_speedup_4v1_shards"):
+    for key in (
+        "plan_speedup_vs_early_exit",
+        "pool_speedup_4v1_shards",
+        "train_speedup_4v1",
+    ):
         if key in fresh_doc:
             lines.append("")
             lines.append(f"`{key}` = {fresh_doc[key]:.2f}×")

@@ -5,15 +5,15 @@
 //! pipeline a deployment would run (§VI-B's on-device-training scenario
 //! with this repo's trainer standing in for the training hardware).
 //!
-//! Run: `cargo run --release --example train_on_device [-- --quick]`
+//! Run: `cargo run --release --example train_on_device [-- --quick] [-- --threads N]`
 
+use convcotm::asic::train_ext::TrainTiming;
 use convcotm::asic::{Accelerator, ChipConfig, CycleReport};
 use convcotm::coordinator::SysProc;
 use convcotm::data::{booleanize_split, SynthFamily};
 use convcotm::energy::{EnergyModel, OperatingPoint, SYSTEM_PERIOD_CYCLES_27M8};
 use convcotm::tm::{Engine, Params, Trainer};
 use convcotm::util::{Json, Table};
-use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -22,7 +22,19 @@ fn main() -> anyhow::Result<()> {
     } else {
         (2_000, 500, 12)
     };
+    // Data-parallel training engine: `--threads N` (default: all cores;
+    // the trained models are bit-identical for any value).
+    let argv: Vec<String> = std::env::args().collect();
+    let threads = argv
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
     let mut results = Vec::new();
+    let mut epoch_rows = Vec::new();
 
     for family in [SynthFamily::Digits, SynthFamily::Fashion, SynthFamily::Kana] {
         let dataset = family.generate(n_train, n_test, 2025);
@@ -31,19 +43,26 @@ fn main() -> anyhow::Result<()> {
         println!("\n### {} ({} train / {} test)", dataset.name, train.len(), test.len());
 
         let mut trainer = Trainer::new(Params::asic(), 2025);
+        trainer.set_threads(threads);
         let engine = Engine::new();
-        let t0 = Instant::now();
         for epoch in 0..epochs {
             let stats = trainer.epoch(&train, epoch);
             let test_acc = engine.accuracy(&trainer.export(), &test);
             println!(
-                "epoch {:2}: train(online) {:.2}%  test {:.2}%  includes {}  ({:.1} samples/s)",
+                "epoch {:2}: train(online) {:.2}%  test {:.2}%  includes {}  ({:.1} samples/s, {} thread(s))",
                 epoch,
                 stats.train_accuracy * 100.0,
                 test_acc * 100.0,
                 stats.total_includes,
-                (epoch + 1) as f64 * train.len() as f64 / t0.elapsed().as_secs_f64()
+                stats.samples_per_s,
+                stats.threads
             );
+            // Tag each row with its family: the flat `epochs` array spans
+            // all three datasets and epoch numbers restart per family.
+            epoch_rows.push(Json::obj([
+                ("dataset", Json::str(dataset.name.clone())),
+                ("stats", stats.to_json()),
+            ]));
         }
         let model = trainer.export();
 
@@ -118,7 +137,22 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
     println!("{}", t.to_markdown());
-    let out = Json::obj([("results", Json::Arr(json_rows))]).to_string_pretty();
+    // The §VI-B on-device training extension's modeled rate vs this
+    // software trainer (the hw/sw training gap, tracked per run).
+    let hw = TrainTiming::standard(&Params::asic());
+    let hw_rate = hw.samples_per_second(27.8e6);
+    println!(
+        "§VI-B on-device training model: {:.1} k samples/s at 27.8 MHz ({} cycles/sample)",
+        hw_rate / 1e3,
+        hw.cycles_per_sample()
+    );
+    let out = Json::obj([
+        ("results", Json::Arr(json_rows)),
+        ("epochs", Json::arr(epoch_rows)),
+        ("threads", Json::num(threads as f64)),
+        ("hw_samples_per_s_27m8", Json::num(hw_rate)),
+    ])
+    .to_string_pretty();
     let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts/train_on_device_results.json");
     std::fs::create_dir_all(path.parent().unwrap()).ok();

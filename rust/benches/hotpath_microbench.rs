@@ -1,7 +1,8 @@
 //! Hot-path microbenchmarks (the §Perf instrument): native engine
 //! throughput (compiled-plan and legacy paths), ASIC-simulator speed, PJRT
-//! artifact throughput (batch 1 and 16), trainer throughput and
-//! coordinator batching overhead.
+//! artifact throughput (batch 1 and 16), trainer throughput (per-sample
+//! and data-parallel epochs at 1 vs 4 threads, with the modeled §VI-B
+//! on-device rate for comparison) and coordinator batching overhead.
 //!
 //! Targets (DESIGN.md §7): native ≥60.3 k img/s single core; compiled plan
 //! ≥1.5× the mask-scan early-exit path with 0 heap allocations per image;
@@ -247,14 +248,40 @@ fn main() {
     }
 
     // Trainer throughput (the §VI-B substrate; plan-synced + arena-backed,
-    // so steady-state updates are also allocation-free).
+    // so steady-state updates are allocation-free). A full warmup epoch
+    // grows every arena and the plan's CSR high-water mark first, so this
+    // row *measures* the per-sample zero-alloc invariant (its baseline
+    // pins 0.0 allocs/img in BENCH_baseline.json) instead of cold-start
+    // buffer growth.
     let mut trainer = Trainer::new(model.params.clone(), 7);
+    trainer.epoch(&fixture.train, 0);
     let mut i = 0usize;
     throughput("trainer (update/sample)", &mut t, &mut rows, 1, || {
         let (img, label) = &fixture.train[i % fixture.train.len()];
         i += 1;
         trainer.update(img, *label);
     });
+
+    // Data-parallel training engine: full epochs at 1 vs 4 worker threads
+    // (the models are bit-identical by construction — tested in
+    // tests/train_parallel.rs; here only the throughput is measured).
+    let mut train_rates = Vec::new();
+    for threads in [1usize, 4] {
+        let mut tr = Trainer::new(model.params.clone(), 7);
+        tr.set_threads(threads);
+        let label = if threads == 1 {
+            "train (1 thread)".to_string()
+        } else {
+            format!("train ({threads} threads)")
+        };
+        let mut e = 0usize;
+        let rate = throughput(&label, &mut t, &mut rows, fixture.train.len(), || {
+            tr.epoch(&fixture.train, e);
+            e += 1;
+        });
+        train_rates.push(rate);
+    }
+    let train_speedup = train_rates[1] / train_rates[0];
 
     println!("{}", t.to_markdown());
     println!(
@@ -271,6 +298,17 @@ fn main() {
     println!(
         "shard pool 4 vs 1: {pool_speedup:.2}× on {} core(s) (tests/serving_pool.rs asserts ≥2× with ≥4 cores)",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    // Training scaling + the §VI-B hardware gap: the modeled on-device
+    // training extension vs this software trainer, tracked per run.
+    let hw_rate = convcotm::asic::train_ext::TrainTiming::standard(&model.params)
+        .samples_per_second(27.8e6);
+    println!(
+        "train 4 vs 1 threads: {train_speedup:.2}× (target ≥2.0 on ≥4 cores); \
+         sw {} vs modeled §VI-B hw {} samples/s → {:.2}× of on-device rate",
+        fmt_k(train_rates[1]),
+        fmt_k(hw_rate),
+        train_rates[1] / hw_rate
     );
 
     // Coordinator batching overhead: compare direct engine latency with
@@ -352,6 +390,9 @@ fn main() {
             Json::num(plan_rate / native_rate),
         ),
         ("pool_speedup_4v1_shards", Json::num(pool_speedup)),
+        ("train_speedup_4v1", Json::num(train_speedup)),
+        ("train_hw_samples_per_s_27m8", Json::num(hw_rate)),
+        ("train_sw_over_hw_4t", Json::num(train_rates[1] / hw_rate)),
         (
             "rows",
             Json::arr(rows.iter().map(|r| {

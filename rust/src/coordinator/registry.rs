@@ -133,6 +133,21 @@ impl ModelRegistry {
         Ok(entry)
     }
 
+    /// Publish a (re)trained model under `name`: insert it on first use,
+    /// hot-swap it thereafter — the train→serve checkpoint hook. The
+    /// trainer calls this on every checkpoint (`train --serve`), so a
+    /// model improves *while it serves*: compilation happens on the
+    /// training thread, the flip is the same zero-drop `Arc` swap as
+    /// [`Self::swap`] (see the module docs for the ordering guarantee),
+    /// and in-flight batches finish on the version they resolved.
+    pub fn publish(&self, name: &str, model: Model) -> Result<Arc<ModelEntry>, RegistryError> {
+        // `insert` already upserts with a version bump and compiles the
+        // plan before taking the lock; `publish` is the intent-revealing
+        // name for the deploy path (a typo'd *swap* stays an error, but a
+        // first *publish* legitimately creates the model).
+        self.insert(name, model)
+    }
+
     /// Remove a model. In-flight batches holding the entry finish
     /// normally; subsequent requests for `name` fail per-request.
     pub fn evict(&self, name: &str) -> Option<Arc<ModelEntry>> {
@@ -239,6 +254,26 @@ mod tests {
         let img = crate::data::BoolImage::blank();
         assert_eq!(held.plan.classify_into(&img, &mut scratch), 1);
         assert_eq!(v2.plan.classify_into(&img, &mut scratch), 2);
+    }
+
+    #[test]
+    fn publish_inserts_then_hot_swaps() {
+        // The train→serve hook: first checkpoint creates the model, later
+        // checkpoints hot-swap it; an in-flight holder keeps serving its
+        // resolved version.
+        let r = ModelRegistry::new();
+        let v1 = r.publish("live", tiny_model(1)).unwrap();
+        assert_eq!(v1.version, 1, "first publish inserts");
+        let held = r.resolve(Some("live")).unwrap();
+        let v2 = r.publish("live", tiny_model(2)).unwrap();
+        assert_eq!(v2.version, 2, "second publish swaps");
+        let mut scratch = crate::tm::EvalScratch::new();
+        let img = crate::data::BoolImage::blank();
+        assert_eq!(held.plan.classify_into(&img, &mut scratch), 1);
+        assert_eq!(
+            r.resolve(Some("live")).unwrap().plan.classify_into(&img, &mut scratch),
+            2
+        );
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //!   convcotm serve --model model.cctm --backend asic --requests 1000
 //!   convcotm power --model model.cctm
 
+use convcotm::asic::train_ext::TrainTiming;
 use convcotm::asic::{dffs, Accelerator, ChipConfig, CycleReport};
 use convcotm::cli::Args;
 use convcotm::coordinator::{
@@ -29,7 +30,7 @@ use convcotm::data::{booleanize_split_for_geometry, load_dataset, BoolImage, Geo
 use convcotm::energy::{EnergyModel, OperatingPoint};
 use convcotm::model_io;
 use convcotm::tm::{Engine, Params, Trainer};
-use convcotm::util::Table;
+use convcotm::util::{Json, Table};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
@@ -65,6 +66,9 @@ fn print_usage() {
         "convcotm — ConvCoTM accelerator reproduction\n\n\
          USAGE: convcotm <train|eval|serve|power|inspect|info> [--flags]\n\n\
          train  --dataset mnist|fmnist|kmnist --geometry G --n-train N --n-test N --epochs E --seed S --out FILE\n\
+                --threads N (data-parallel engine; bit-identical for any N)\n\
+                --checkpoint-every E --resume FILE.ckpt (v3 resumable checkpoints)\n\
+                --serve [--serve-name NAME --shards N] (publish checkpoints into a live pool)\n\
          eval   --model FILE --dataset D --n-test N\n\
          serve  --model FILE --backend native|asic|pjrt --requests N --max-batch B --threads T\n\
          serve  --model NAME=FILE [--model NAME=FILE ...] [--manifest FILE] --shards N --queue-capacity C\n\
@@ -105,38 +109,193 @@ fn load_model_arg(args: &Args) -> anyhow::Result<convcotm::tm::Model> {
     Ok(model)
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let dataset_name = args.get_or("dataset", "mnist");
-    let geometry = geometry_arg(args)?;
-    let n_train = args.get_usize("n-train", 2000).map_err(anyhow::Error::msg)?;
-    let n_test = args.get_usize("n-test", 500).map_err(anyhow::Error::msg)?;
-    let epochs = args.get_usize("epochs", 12).map_err(anyhow::Error::msg)?;
-    let seed = args.get_usize("seed", 2025).map_err(anyhow::Error::msg)? as u64;
-    let out = args.get_or("out", "model.cctm");
+/// Parse a checkpoint's dataset identity tag (`name:n_train:n_test`).
+/// Empty or malformed tags (e.g. from hand-built checkpoints) yield
+/// `None` — resume then falls back to the command-line flags.
+fn parse_dataset_tag(tag: &str) -> Option<(String, usize, usize)> {
+    let mut it = tag.split(':');
+    let name = it.next().filter(|n| !n.is_empty())?;
+    let n_train = it.next()?.parse().ok()?;
+    let n_test = it.next()?.parse().ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some((name.to_string(), n_train, n_test))
+}
 
-    let dataset = load_dataset(&dataset_name, n_train, n_test, seed)?;
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut dataset_name = args.get_or("dataset", "mnist");
+    let mut n_train = args.get_usize("n-train", 2000).map_err(anyhow::Error::msg)?;
+    let mut n_test = args.get_usize("n-test", 500).map_err(anyhow::Error::msg)?;
+    let epochs = args.get_usize("epochs", 12).map_err(anyhow::Error::msg)?;
+    let cli_seed = args
+        .get("seed")
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--seed expects an integer, got '{v}'"))
+        })
+        .transpose()?;
+    let seed = cli_seed.unwrap_or(2025);
+    let out = args.get_or("out", "model.cctm");
+    // Data-parallel training engine: worker threads (1 = serial; the
+    // exported model is bit-identical for any setting).
+    let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
+    // Checkpoint cadence in epochs (0 = only publish/serve per epoch).
+    let checkpoint_every = args
+        .get_usize("checkpoint-every", 0)
+        .map_err(anyhow::Error::msg)?;
+    let serve = args.get_bool("serve");
+    let serve_name = args.get_or("serve-name", "train");
+    let shards = args.get_usize("shards", 2).map_err(anyhow::Error::msg)?;
+
+    // Fresh trainer, or resume a v3 checkpoint exactly where it stopped.
+    // The dataset is regenerated from the *checkpoint's* identity (seed +
+    // stored `name:n_train:n_test` tag) on resume — a different split
+    // would silently break the bit-identical-resume guarantee, so
+    // conflicting explicit flags are errors and absent flags adopt the
+    // stored values.
+    let (mut trainer, start_epoch, data_seed) = match args.get("resume") {
+        Some(path) => {
+            let ck = model_io::load_checkpoint(Path::new(path))?;
+            if let Some(g) = args.get("geometry") {
+                let expected = Geometry::parse(g).map_err(anyhow::Error::msg)?;
+                anyhow::ensure!(
+                    ck.params.geometry == expected,
+                    "checkpoint has geometry {} but --geometry asked for {expected}",
+                    ck.params.geometry
+                );
+            }
+            if let Some(s) = cli_seed {
+                anyhow::ensure!(
+                    s == ck.seed,
+                    "checkpoint was trained with seed {} but --seed asked for {s}; \
+                     resume regenerates the dataset from the original seed (drop \
+                     --seed, or match it)",
+                    ck.seed
+                );
+            }
+            if let Some((ck_name, ck_train, ck_test)) = parse_dataset_tag(&ck.dataset) {
+                let stored = [
+                    ("dataset", ck_name.clone()),
+                    ("n-train", ck_train.to_string()),
+                    ("n-test", ck_test.to_string()),
+                ];
+                for (flag, want) in stored {
+                    if let Some(asked) = args.get(flag) {
+                        anyhow::ensure!(
+                            asked == want,
+                            "checkpoint was trained on --{flag} {want} but the \
+                             command line asked for {asked}; resume must continue \
+                             on the same split (drop --{flag}, or match it)"
+                        );
+                    }
+                }
+                dataset_name = ck_name;
+                n_train = ck_train;
+                n_test = ck_test;
+            }
+            println!(
+                "resuming {path}: {} samples / {} epochs done, geometry {}, seed {}, \
+                 dataset {dataset_name} ({n_train} train / {n_test} test)",
+                ck.samples_seen, ck.epochs_done, ck.params.geometry, ck.seed
+            );
+            let start = ck.epochs_done as usize;
+            let ck_seed = ck.seed;
+            (Trainer::from_checkpoint(ck), start, ck_seed)
+        }
+        None => {
+            let geometry = geometry_arg(args)?;
+            (Trainer::new(Params::for_geometry(geometry), seed), 0, seed)
+        }
+    };
+    trainer.set_threads(threads);
+    let geometry = trainer.params.geometry;
+
+    let dataset = load_dataset(&dataset_name, n_train, n_test, data_seed)?;
     let train = booleanize_split_for_geometry(&dataset.train, dataset.booleanizer, geometry);
     let test = booleanize_split_for_geometry(&dataset.test, dataset.booleanizer, geometry);
     println!(
-        "training on {} ({} train / {} test), geometry {}, {} epochs",
+        "training on {} ({} train / {} test), geometry {}, epochs {}..{}, {} thread(s)",
         dataset.name,
         train.len(),
         test.len(),
         geometry,
-        epochs
+        start_epoch,
+        start_epoch + epochs,
+        threads
     );
-    let mut trainer = Trainer::new(Params::for_geometry(geometry), seed);
+
+    // `--serve`: a live shard pool over a registry; every checkpoint is
+    // published with the zero-drop hot-swap, so the model improves while
+    // it serves.
+    let serving = if serve {
+        let registry = Arc::new(ModelRegistry::new());
+        let coord = Coordinator::start_pool(
+            Arc::clone(&registry),
+            PoolConfig {
+                shards,
+                queue_capacity: DEFAULT_QUEUE_CAPACITY,
+                batch: BatchConfig::default(),
+            },
+        );
+        println!("serving '{serve_name}' from {shards} shard(s) while training");
+        Some((registry, coord))
+    } else {
+        None
+    };
+
+    let ckpt_path = format!("{out}.ckpt");
     let engine = Engine::new();
     let t0 = Instant::now();
-    for epoch in 0..epochs {
+    let mut epoch_rows: Vec<Json> = Vec::new();
+    let mut last_rate = 0.0f64;
+    let mut last_acc = 0.0f64;
+    for epoch in start_epoch..start_epoch + epochs {
         let stats = trainer.epoch(&train, epoch);
         let acc = engine.accuracy(&trainer.export(), &test);
+        last_acc = acc;
         println!(
-            "epoch {epoch:2}: online {:.2}%  test {:.2}%  includes {}",
+            "epoch {epoch:2}: online {:.2}%  test {:.2}%  includes {}  ({:.0} samples/s)",
             stats.train_accuracy * 100.0,
             acc * 100.0,
-            stats.total_includes
+            stats.total_includes,
+            stats.samples_per_s
         );
+        last_rate = stats.samples_per_s;
+        epoch_rows.push(stats.to_json());
+        let done = epoch + 1 - start_epoch;
+        let at_checkpoint = checkpoint_every > 0 && done % checkpoint_every == 0;
+        if at_checkpoint {
+            let mut ck = trainer.checkpoint();
+            // Stamp the dataset identity so --resume can regenerate (and
+            // enforce) the exact same split.
+            ck.dataset = format!("{dataset_name}:{n_train}:{n_test}");
+            model_io::save_checkpoint(&ck, Path::new(&ckpt_path))?;
+            println!(
+                "  checkpoint → {ckpt_path} ({} samples seen)",
+                trainer.samples_seen()
+            );
+        }
+        if let Some((registry, coord)) = &serving {
+            // Publish on every checkpoint (or every epoch without an
+            // explicit cadence) and prove liveness through the pool.
+            if at_checkpoint || checkpoint_every == 0 {
+                let entry = registry.publish(&serve_name, trainer.export())?;
+                let probes: Vec<_> = test
+                    .iter()
+                    .take(32)
+                    .map(|(img, _)| coord.submit_to(Some(serve_name.as_str()), img.clone()))
+                    .collect();
+                let ok = probes
+                    .into_iter()
+                    .filter(|rx| matches!(rx.recv(), Ok(Ok(_))))
+                    .count();
+                println!(
+                    "  published {serve_name} v{} — pool answered {ok}/32 probes",
+                    entry.version
+                );
+            }
+        }
     }
     let model = trainer.export();
     model_io::save_file(&model, &PathBuf::from(&out))?;
@@ -146,6 +305,37 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         geometry,
         t0.elapsed().as_secs_f64()
     );
+    if let Some((_, coord)) = serving {
+        let snap = coord.shutdown();
+        println!(
+            "pool while training: {} requests, p50 {:.0} µs, p99 {:.0} µs",
+            snap.requests, snap.latency_us.p50, snap.latency_us.p99
+        );
+    }
+
+    // Machine-readable training trajectory (BENCH_train.json): per-epoch
+    // stats plus the §VI-B on-device rate the software trainer is
+    // measured against.
+    let hw = TrainTiming::standard(&trainer.params);
+    let hw_rate = hw.samples_per_second(27.8e6);
+    let json = Json::obj([
+        ("bench", Json::str("train")),
+        ("dataset", Json::str(dataset.name.clone())),
+        ("geometry", Json::str(geometry.to_string())),
+        ("threads", Json::num(threads as f64)),
+        ("epochs", Json::arr(epoch_rows)),
+        ("final_test_accuracy", Json::num(last_acc)),
+        ("samples_per_s", Json::num(last_rate)),
+        ("hw_samples_per_s_27m8", Json::num(hw_rate)),
+        (
+            "sw_over_hw_ratio",
+            Json::num(if hw_rate > 0.0 { last_rate / hw_rate } else { 0.0 }),
+        ),
+    ]);
+    let bench_path =
+        std::env::var("BENCH_TRAIN_JSON").unwrap_or_else(|_| "BENCH_train.json".to_string());
+    std::fs::write(&bench_path, json.to_string_pretty() + "\n")?;
+    println!("wrote {bench_path}");
     Ok(())
 }
 

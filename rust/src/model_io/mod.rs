@@ -14,10 +14,19 @@
 //! [`Geometry`]) from the header, which is how the CLI and serving stack
 //! load models of any geometry. Version 1 files (pre-geometry) are still
 //! readable and imply the ASIC geometry.
+//!
+//! Version 3 of the container is a **training checkpoint**
+//! ([`save_checkpoint`]/[`load_checkpoint`]): the v2 dims + geometry
+//! header extended with training hyper-parameters and the RNG stream
+//! position (seed, samples seen, epochs done), followed by the raw TA
+//! states and the wide (unsaturated) i32 weights. A checkpoint is not a
+//! servable model — the model loaders reject it with a pointed error —
+//! and resuming from one is bit-identical to never having stopped
+//! (DESIGN.md §9).
 
 use crate::data::Geometry;
 use crate::tm::params::Params;
-use crate::tm::Model;
+use crate::tm::{Model, TrainCheckpoint};
 use crate::util::BitVec;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -25,6 +34,8 @@ use std::path::{Path, PathBuf};
 /// Container magic: "CCTM" + format version.
 const MAGIC: &[u8; 4] = b"CCTM";
 const VERSION: u16 = 2;
+/// Training-checkpoint container version (see the module docs).
+const CHECKPOINT_VERSION: u16 = 3;
 
 #[derive(Debug, thiserror::Error)]
 pub enum ModelIoError {
@@ -34,6 +45,13 @@ pub enum ModelIoError {
     BadMagic,
     #[error("unsupported version {0}")]
     Version(u16),
+    #[error(
+        "this file is a v3 training checkpoint, not a servable model \
+         (resume it with `train --resume` and export a model)"
+    )]
+    CheckpointNotModel,
+    #[error("this file is a v{0} model, not a training checkpoint (train from scratch or pass a .ckpt file)")]
+    ModelNotCheckpoint(u16),
     #[error("dimension mismatch: file has {file:?}, expected {expected:?}")]
     DimMismatch {
         file: (u32, u32, u32),
@@ -131,6 +149,9 @@ fn read_header(path: &Path) -> Result<Header, ModelIoError> {
     let mut v = [0u8; 2];
     f.read_exact(&mut v)?;
     let version = u16::from_le_bytes(v);
+    if version == CHECKPOINT_VERSION {
+        return Err(ModelIoError::CheckpointNotModel);
+    }
     if version != 1 && version != VERSION {
         return Err(ModelIoError::Version(version));
     }
@@ -199,6 +220,156 @@ pub fn load_file_auto(path: &Path) -> Result<Model, ModelIoError> {
     };
     params.validate().map_err(ModelIoError::BadHeader)?;
     from_wire(params, &h.payload)
+}
+
+/// Save a training checkpoint as a v3 container: the v2 header (dims +
+/// geometry), training hyper-parameters, the RNG stream position, a
+/// length-prefixed dataset identity tag, then the raw TA states
+/// (clause-major u8) and wide weights (clause-major i32,
+/// little-endian). See the module docs and DESIGN.md §9.
+pub fn save_checkpoint(ck: &TrainCheckpoint, path: &Path) -> Result<(), ModelIoError> {
+    // Crash-safe: write a sibling temp file, then rename over the target.
+    // Training overwrites the same checkpoint path every cadence — a kill
+    // or full disk mid-write must not destroy the previous checkpoint
+    // (surviving interruptions is the whole point of the file).
+    let tmp = match path.file_name() {
+        Some(name) => {
+            let mut n = name.to_os_string();
+            n.push(".tmp");
+            path.with_file_name(n)
+        }
+        None => path.with_file_name("checkpoint.ckpt.tmp"),
+    };
+    let p = &ck.params;
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&CHECKPOINT_VERSION.to_le_bytes())?;
+    for dim in [
+        p.clauses as u32,
+        p.classes as u32,
+        p.literals as u32,
+        p.geometry.img_side as u32,
+        p.geometry.window as u32,
+        p.geometry.stride as u32,
+    ] {
+        f.write_all(&dim.to_le_bytes())?;
+    }
+    f.write_all(&p.t.to_le_bytes())?;
+    f.write_all(&p.s.to_le_bytes())?;
+    f.write_all(&(p.ta_states as u32).to_le_bytes())?;
+    // Budget is stored +1 so 0 means "none".
+    let budget = p.literal_budget.map_or(0u64, |b| b as u64 + 1);
+    f.write_all(&budget.to_le_bytes())?;
+    f.write_all(&[u8::from(ck.boost_true_positive)])?;
+    f.write_all(&ck.seed.to_le_bytes())?;
+    f.write_all(&ck.samples_seen.to_le_bytes())?;
+    f.write_all(&ck.epochs_done.to_le_bytes())?;
+    // Dataset identity tag (length-prefixed; empty when unknown).
+    let tag = ck.dataset.as_bytes();
+    if tag.len() > u16::MAX as usize {
+        return Err(ModelIoError::BadHeader(format!(
+            "dataset tag is {} bytes (max {})",
+            tag.len(),
+            u16::MAX
+        )));
+    }
+    f.write_all(&(tag.len() as u16).to_le_bytes())?;
+    f.write_all(tag)?;
+    f.write_all(&ck.ta_states)?;
+    let mut weights = Vec::with_capacity(4 * ck.wide_weights.len());
+    for w in &ck.wide_weights {
+        weights.extend_from_slice(&w.to_le_bytes());
+    }
+    f.write_all(&weights)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a v3 training checkpoint. Model files (v1/v2) are rejected with
+/// [`ModelIoError::ModelNotCheckpoint`] — they carry no TA states or RNG
+/// position, so "resuming" from one would silently restart training.
+pub fn load_checkpoint(path: &Path) -> Result<TrainCheckpoint, ModelIoError> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(ModelIoError::BadMagic);
+    }
+    let mut v = [0u8; 2];
+    f.read_exact(&mut v)?;
+    let version = u16::from_le_bytes(v);
+    if version == 1 || version == VERSION {
+        return Err(ModelIoError::ModelNotCheckpoint(version));
+    }
+    if version != CHECKPOINT_VERSION {
+        return Err(ModelIoError::Version(version));
+    }
+    // Fixed-size header after the version: 6 dims, t, s, ta_states,
+    // budget, flags, seed, samples_seen, epochs_done.
+    let mut head = [0u8; 6 * 4 + 4 + 8 + 4 + 8 + 1 + 8 + 8 + 8];
+    f.read_exact(&mut head)?;
+    let u32_at = |o: usize| u32::from_le_bytes(head[o..o + 4].try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(head[o..o + 8].try_into().unwrap());
+    let geometry = Geometry::new(
+        u32_at(12) as usize,
+        u32_at(16) as usize,
+        u32_at(20) as usize,
+    )
+    .map_err(ModelIoError::BadHeader)?;
+    let budget = u64_at(40);
+    let params = Params {
+        clauses: u32_at(0) as usize,
+        classes: u32_at(4) as usize,
+        literals: u32_at(8) as usize,
+        geometry,
+        t: i32::from_le_bytes(head[24..28].try_into().unwrap()),
+        s: f64::from_le_bytes(head[28..36].try_into().unwrap()),
+        ta_states: u32_at(36) as i32,
+        literal_budget: if budget == 0 {
+            None
+        } else {
+            Some(budget as usize - 1)
+        },
+    };
+    params.validate().map_err(ModelIoError::BadHeader)?;
+    let boost_true_positive = head[48] != 0;
+    let seed = u64_at(49);
+    let samples_seen = u64_at(57);
+    let epochs_done = u64_at(65);
+    let mut tag_len = [0u8; 2];
+    f.read_exact(&mut tag_len)?;
+    let mut tag = vec![0u8; u16::from_le_bytes(tag_len) as usize];
+    f.read_exact(&mut tag)?;
+    let dataset = String::from_utf8(tag)
+        .map_err(|_| ModelIoError::BadHeader("dataset tag is not UTF-8".into()))?;
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    let ta_len = params.clauses * params.literals;
+    let w_len = params.clauses * params.classes;
+    let expected = ta_len + 4 * w_len;
+    if payload.len() != expected {
+        return Err(ModelIoError::PayloadSize {
+            got: payload.len(),
+            expected,
+        });
+    }
+    let ta_states = payload[..ta_len].to_vec();
+    let wide_weights: Vec<i32> = payload[ta_len..]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(TrainCheckpoint {
+        params,
+        dataset,
+        seed,
+        samples_seen,
+        epochs_done,
+        boost_true_positive,
+        ta_states,
+        wide_weights,
+    })
 }
 
 /// Parse a serving-registry manifest: one `name = path` pair per line,
@@ -404,6 +575,72 @@ mod tests {
         let e = read_manifest(&path).unwrap_err();
         assert!(e.to_string().contains("duplicate"), "{e}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_and_is_not_a_model() {
+        let p = Params {
+            clauses: 6,
+            t: 12,
+            s: 3.5,
+            literal_budget: Some(9),
+            ..Params::for_geometry(Geometry::new(28, 10, 2).unwrap())
+        };
+        let ck = TrainCheckpoint {
+            params: p.clone(),
+            dataset: "fmnist:4000:500".to_string(),
+            seed: 0xDEAD_BEEF,
+            samples_seen: 1234,
+            epochs_done: 3,
+            boost_true_positive: false,
+            ta_states: (0..p.clauses * p.literals).map(|i| (i % 251) as u8).collect(),
+            wide_weights: (0..p.clauses * p.classes)
+                .map(|i| i as i32 * 7 - 300)
+                .collect(),
+        };
+        let path = std::env::temp_dir().join("convcotm_ckpt_roundtrip.ckpt");
+        save_checkpoint(&ck, &path).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back, ck, "checkpoint must round-trip bit-exactly");
+        // A checkpoint is not a servable model.
+        let err = load_file_auto(&path).unwrap_err();
+        assert!(matches!(err, ModelIoError::CheckpointNotModel), "{err}");
+        let err = load_file(p, &path).unwrap_err();
+        assert!(matches!(err, ModelIoError::CheckpointNotModel), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn model_files_are_not_checkpoints() {
+        let m = random_model(8);
+        let path = std::env::temp_dir().join("convcotm_ckpt_not_model.cctm");
+        save_file(&m, &path).unwrap();
+        let err = load_checkpoint(&path).unwrap_err();
+        assert!(matches!(err, ModelIoError::ModelNotCheckpoint(2)), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_checkpoint_payload_rejected() {
+        let p = Params::asic();
+        let ck = TrainCheckpoint {
+            params: p.clone(),
+            dataset: String::new(),
+            seed: 1,
+            samples_seen: 0,
+            epochs_done: 0,
+            boost_true_positive: true,
+            ta_states: vec![0u8; p.clauses * p.literals],
+            wide_weights: vec![0i32; p.clauses * p.classes],
+        };
+        let path = std::env::temp_dir().join("convcotm_ckpt_truncated.ckpt");
+        save_checkpoint(&ck, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 5);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_checkpoint(&path).unwrap_err();
+        assert!(matches!(err, ModelIoError::PayloadSize { .. }), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

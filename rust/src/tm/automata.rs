@@ -68,6 +68,26 @@ impl TaTeam {
         self.states[literal]
     }
 
+    /// All raw states (checkpoint serialization).
+    pub fn states(&self) -> &[u8] {
+        &self.states
+    }
+
+    /// Rebuild a team from serialized raw states (checkpoint restore).
+    /// States must come from a team with the *same* N — a state's
+    /// include/exclude meaning depends on its own boundary, so cross-N
+    /// loading would silently invert actions. Out-of-range values (only
+    /// possible in a corrupted payload) are clamped to the top state so
+    /// the team stays structurally valid instead of saturating wrong.
+    pub fn from_states(states: &[u8], n: u8) -> TaTeam {
+        assert!(n >= 1);
+        let max = (2 * n as u16 - 1) as u8;
+        TaTeam {
+            states: states.iter().map(|&s| s.min(max)).collect(),
+            n,
+        }
+    }
+
     /// Export the action bits.
     pub fn action_bits(&self) -> Vec<bool> {
         (0..self.len()).map(|k| self.includes(k)).collect()
@@ -123,6 +143,21 @@ mod tests {
         t.reinforce(3);
         assert_eq!(t.include_count(), 2);
         assert_eq!(t.action_bits(), vec![false, true, false, true, false]);
+    }
+
+    #[test]
+    fn from_states_roundtrips_and_clamps() {
+        let mut t = TaTeam::new(6, 4);
+        t.reinforce(1);
+        t.weaken(3);
+        let back = TaTeam::from_states(t.states(), 4);
+        assert_eq!(back, t);
+        // Corrupted (out-of-range) states clamp to 2N−1 — structural
+        // safety for bad payloads, not a cross-N migration path.
+        let clamped = TaTeam::from_states(&[200, 0, 7], 4);
+        assert_eq!(clamped.state(0), 7);
+        assert_eq!(clamped.state(2), 7);
+        assert!(clamped.includes(0));
     }
 
     #[test]

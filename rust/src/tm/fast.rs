@@ -288,6 +288,15 @@ impl PatchSets {
         self.geometry
     }
 
+    /// The packed image rows of the last rebuild (bit x = pixel (x, y)) —
+    /// the input format of `patches::patch_literals_from_rows_into`, so the
+    /// trainer's feedback-patch literal materialization reuses this table's
+    /// packing instead of re-packing the image per shard.
+    #[inline]
+    pub fn packed_rows(&self) -> &[u64] {
+        &self.rows
+    }
+
     #[inline]
     pub fn literal_set(&self, k: usize) -> &[u64] {
         &self.sets[k * self.words..(k + 1) * self.words]

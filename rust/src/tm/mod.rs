@@ -15,4 +15,4 @@ pub use infer::{argmax_lowest, clause_fires, Engine, Inference};
 pub use model::Model;
 pub use params::{Params, MODEL_BYTES, NUM_CLAUSES};
 pub use plan::{ClausePlan, EvalScratch};
-pub use train::{EpochStats, Trainer};
+pub use train::{EpochStats, TrainCheckpoint, Trainer};

@@ -457,6 +457,41 @@ mod tests {
     }
 
     #[test]
+    fn flip_batches_are_order_independent() {
+        // The clause-sharded trainer replays each sample's include flips in
+        // shard order, which may interleave clauses differently than a
+        // serial run would. The CSR patcher must land on the same plan for
+        // any permutation of a flip batch (distinct (clause, literal)
+        // cells), so sharded replay order cannot affect the result.
+        let g = Geometry::asic();
+        let p = Params {
+            clauses: 8,
+            ..Params::for_geometry(g)
+        };
+        let mut rng = Xoshiro256ss::new(77);
+        let mut batch: Vec<(usize, usize, bool)> = Vec::new();
+        for j in 0..p.clauses {
+            for _ in 0..6 {
+                batch.push((j, rng.usize_below(p.literals), rng.chance(0.7)));
+            }
+        }
+        batch.sort_unstable();
+        batch.dedup_by_key(|(j, k, _)| (*j, *k));
+        let model = Model::blank(p.clone());
+        let mut forward = ClausePlan::compile(&model);
+        for &(j, k, v) in &batch {
+            forward.set_include(j, k, v);
+        }
+        let mut shuffled = batch.clone();
+        rng.shuffle(&mut shuffled);
+        let mut reordered = ClausePlan::compile(&model);
+        for &(j, k, v) in &shuffled {
+            reordered.set_include(j, k, v);
+        }
+        assert!(forward == reordered, "flip order leaked into the CSR");
+    }
+
+    #[test]
     fn class_sums_match_engine() {
         let g = Geometry::asic();
         let model = random_model(g, 7, 6);

@@ -15,62 +15,658 @@
 //!   weight polarity supports the updated class, Type II (reject) against;
 //! - optional clause-size budget (§VI-A / Abeyrathna et al. IJCAI'23):
 //!   exclude→include transitions are blocked while a clause is at budget.
+//!
+//! ## The data-parallel engine (DESIGN.md §9)
+//!
+//! Training mirrors the chip's clause-parallel feedback structure
+//! (§VI-B updates all 128 clauses' TA teams concurrently; the feedback
+//! independence is the coalesced-TM property of Glimsdal & Granmo 2021).
+//! Each sample is processed in two phases:
+//!
+//! 1. **evaluate/decide** — immutable: clause firing + feedback-patch
+//!    selection on the compiled [`ClausePlan`], partial class sums per
+//!    shard, then the sample-level decisions (target probability, negative
+//!    class) on the reduced sums;
+//! 2. **apply** — clause-sharded: Type I/II TA nudges and weight bumps,
+//!    each clause owned by exactly one [`ClauseShard`], so the hot path
+//!    takes no locks and touches no atomics. Include flips and weight
+//!    bumps are *recorded* per shard and replayed into the shared
+//!    [`Model`]/[`ClausePlan`] mirrors by the coordinator between samples.
+//!
+//! Every random decision is drawn from a counter-based [`StreamRng`]
+//! addressed by its logical coordinates (sample, clause, literal, …), so
+//! the trained model is **bit-identical for any thread count**: the
+//! stream layout carries the determinism, not the schedule.
 
 use super::automata::TaTeam;
-use super::infer::{argmax_lowest, Engine};
+use super::fast::{nth_set_bit, popcount, PatchSet, PatchSets};
+use super::infer::argmax_lowest;
 use super::model::Model;
 use super::params::Params;
 use super::plan::{ClausePlan, EvalScratch};
 use crate::data::boolean::BoolImage;
-use crate::data::patches;
-use crate::util::{BitVec, Xoshiro256ss};
+use crate::data::{patches, Geometry};
+use crate::util::{BitVec, Json, StreamRng};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
 
-/// Reusable per-update buffers (the trainer's half of the §Perf arena):
-/// once warm, [`Trainer::update`] performs zero heap allocations per
-/// sample. Sized lazily on first use; `Default` is allocation-free so the
-/// scratch can be `mem::take`n around `&mut self` calls.
-#[derive(Default)]
-struct TrainScratch {
-    /// The shared evaluation arena (patch-set table, intersection scratch,
-    /// fired bits, class sums) — the same type the serving path uses, so
-    /// `predict` can delegate to [`ClausePlan::classify_into`] verbatim.
-    eval: EvalScratch,
-    /// Selected feedback patch per clause.
+/// Stream domains: one independent counter-based stream per decision kind.
+const DOM_SHUFFLE: u64 = 1;
+const DOM_PATCH: u64 = 2;
+const DOM_NEG_CLASS: u64 = 3;
+const DOM_ACTIVATE: u64 = 4;
+const DOM_LITERAL: u64 = 5;
+
+/// The trainer's RNG stream bundle (all counter-based, all derived from
+/// the single training seed). Copyable: a worker's copy reads the exact
+/// same values as the coordinator's.
+///
+/// Coordinate layout (documented in DESIGN.md §9):
+/// - `shuffle.at(epoch, i)` — Fisher–Yates draw i of that epoch;
+/// - `patch.at(sample, clause)` — feedback-patch pick;
+/// - `neg_class.at(sample, attempt)` — negative-class rejection sampling;
+/// - `activate.at(sample, clause·2 + role)` — clause feedback gate
+///   (role 0 = target class, 1 = negative class);
+/// - `literal.at(sample, (clause·2 + role)·2¹⁶ + literal)` — per-literal
+///   Type I draw (literal ids fit u16, asserted at construction).
+#[derive(Clone, Copy, Debug)]
+struct TrainStreams {
+    shuffle: StreamRng,
+    patch: StreamRng,
+    neg_class: StreamRng,
+    activate: StreamRng,
+    literal: StreamRng,
+}
+
+impl TrainStreams {
+    fn new(seed: u64) -> TrainStreams {
+        TrainStreams {
+            shuffle: StreamRng::new(seed, DOM_SHUFFLE),
+            patch: StreamRng::new(seed, DOM_PATCH),
+            neg_class: StreamRng::new(seed, DOM_NEG_CLASS),
+            activate: StreamRng::new(seed, DOM_ACTIVATE),
+            literal: StreamRng::new(seed, DOM_LITERAL),
+        }
+    }
+}
+
+/// The scalar configuration a shard needs to run feedback — copied to
+/// worker threads so they share nothing mutable with the coordinator.
+#[derive(Clone, Copy, Debug)]
+struct FeedbackCfg {
+    geometry: Geometry,
+    classes: usize,
+    literals: usize,
+    t: i32,
+    s: f64,
+    literal_budget: Option<usize>,
+    boost_true_positive: bool,
+}
+
+/// Per-sample evaluation/apply context (phase coordinates + config).
+#[derive(Clone, Copy)]
+struct StepCtx<'a> {
+    sample: u64,
+    streams: &'a TrainStreams,
+    cfg: &'a FeedbackCfg,
+}
+
+/// One include flip recorded during the apply phase, replayed into the
+/// shared model/plan mirrors by the coordinator. Replay order across
+/// shards is ascending clause ranges; the CSR patcher is order-independent
+/// for distinct (clause, literal) cells (tested in `tm::plan`).
+#[derive(Clone, Copy, Debug)]
+struct IncludeFlip {
+    clause: u32,
+    literal: u32,
+    included: bool,
+}
+
+/// One weight bump (already applied to the shard's wide weight): the
+/// saturated value to mirror into the plan's transposed weight matrix.
+#[derive(Clone, Copy, Debug)]
+struct WeightBump {
+    clause: u32,
+    class: u32,
+    saturated: i8,
+}
+
+/// Sample-level decisions computed by the coordinator after the class-sum
+/// reduction (step 3 of the update), broadcast to every shard.
+#[derive(Clone, Copy, Debug)]
+struct SampleDecisions {
+    y: usize,
+    p_target: f64,
+    /// Negative class and its feedback probability (absent for 1-class
+    /// configurations).
+    neg: Option<(usize, f64)>,
+}
+
+/// Which structure the evaluate phase reads include lists from: the
+/// compiled plan (default) or the dense model masks (the pre-plan oracle,
+/// kept for the seed-determinism tests). Both are bit-identical in effect.
+enum EvalSource<'a> {
+    Plan(&'a ClausePlan),
+    Dense(&'a Model),
+}
+
+/// A contiguous clause range owned by exactly one worker: the clauses' TA
+/// teams, wide (unsaturated) weights, cached include counts, and every
+/// per-sample buffer the two phases need. No other thread ever touches
+/// this state — the clause-shard ownership rule that makes the apply
+/// phase lock- and atomic-free.
+struct ClauseShard {
+    /// First (global) clause index of this shard.
+    lo: usize,
+    teams: Vec<TaTeam>,
+    /// Wide weights during training, local clause-major:
+    /// `wide[(j − lo) · classes + i]`; exported saturated to i8.
+    wide: Vec<i32>,
+    /// Cached per-clause include counts (the §VI-A budget check without an
+    /// O(literals) rescan per reinforcement).
+    include_count: Vec<usize>,
+    // ---- per-sample scratch (the shard's half of the §Perf arena) ----
+    /// Clause-intersection scratch.
+    clause: PatchSet,
+    /// Local clause outputs (training semantics: empty clauses fire).
+    fired: BitVec,
+    /// Selected feedback patch per local clause.
     feedback_patch: Vec<usize>,
-    /// Sorted-dedup copy of `feedback_patch` — the distinct patches whose
-    /// literals actually need materializing (≤ clauses of them).
+    /// Sorted-dedup distinct feedback patches (≤ local clauses of them).
     distinct: Vec<usize>,
-    /// Clause → index into `lit_pool` (position of its feedback patch in
-    /// `distinct`).
+    /// Local clause → index into `lit_pool`.
     lit_slot: Vec<usize>,
     /// Materialized literal vectors for the distinct patches (reused).
     lit_pool: Vec<BitVec>,
-    /// Packed image rows for the fast literal builder.
-    rows: Vec<u64>,
     /// Feature-word scratch of the fast literal builder.
     content: Vec<u64>,
-    /// Class sums with saturated weights.
-    sums: Vec<i32>,
+    /// Partial class sums, training semantics (empty clauses counted).
+    sums_train: Vec<i32>,
+    /// Partial class sums, inference semantics (empty clauses forced low)
+    /// — the epoch's online-accuracy prediction falls out of the evaluate
+    /// phase for free.
+    sums_infer: Vec<i32>,
+    /// Include flips of the current sample (replayed by the coordinator).
+    flips: Vec<IncludeFlip>,
+    /// Weight bumps of the current sample (replayed by the coordinator).
+    bumps: Vec<WeightBump>,
 }
 
-/// Trainer state: automata + weights, with an always-in-sync inference
-/// [`Model`] mirroring the TA action bits (the chip's model registers) and
-/// a compiled [`ClausePlan`] kept in sync incrementally — every include
-/// flip patches the plan's CSR rows, every weight change updates its
-/// transposed weight matrix, so the hot loop never recompiles.
+impl ClauseShard {
+    fn new(lo: usize, teams: Vec<TaTeam>, wide: Vec<i32>) -> ClauseShard {
+        let include_count = teams.iter().map(|t| t.include_count()).collect();
+        ClauseShard {
+            lo,
+            teams,
+            wide,
+            include_count,
+            clause: Vec::new(),
+            fired: BitVec::zeros(0),
+            feedback_patch: Vec::new(),
+            distinct: Vec::new(),
+            lit_slot: Vec::new(),
+            lit_pool: Vec::new(),
+            content: Vec::new(),
+            sums_train: Vec::new(),
+            sums_infer: Vec::new(),
+            flips: Vec::new(),
+            bumps: Vec::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.teams.len()
+    }
+}
+
+/// Split `clauses` TA teams + wide weights into `nshards` contiguous
+/// shards (sizes differ by at most one).
+fn partition_shards(
+    mut teams: Vec<TaTeam>,
+    mut wide: Vec<i32>,
+    classes: usize,
+    nshards: usize,
+) -> Vec<ClauseShard> {
+    let clauses = teams.len();
+    let nshards = nshards.clamp(1, clauses.max(1));
+    let base = clauses / nshards;
+    let rem = clauses % nshards;
+    let mut out = Vec::with_capacity(nshards);
+    let mut lo = 0usize;
+    for s in 0..nshards {
+        let len = base + usize::from(s < rem);
+        let rest_teams = teams.split_off(len);
+        let rest_wide = wide.split_off(len * classes);
+        out.push(ClauseShard::new(lo, teams, wide));
+        teams = rest_teams;
+        wide = rest_wide;
+        lo += len;
+    }
+    out
+}
+
+/// Phase 1 (evaluate/decide, per shard): clause firing over the shared
+/// patch-set table, deterministic feedback-patch selection, literal
+/// materialization for the distinct selected patches, and partial class
+/// sums. Reads shared state immutably; writes only shard-local buffers.
+fn eval_shard(sh: &mut ClauseShard, table: &PatchSets, src: &EvalSource<'_>, ctx: &StepCtx<'_>) {
+    let g = ctx.cfg.geometry;
+    let n = sh.len();
+    sh.fired.reset(n);
+    sh.feedback_patch.clear();
+    sh.feedback_patch.resize(n, 0);
+    for lj in 0..n {
+        let j = sh.lo + lj;
+        // Training semantics: an empty clause evaluates to 1 (matches
+        // everything) so Type Ia feedback can bootstrap includes; only
+        // *inference* forces empty clauses low (§IV-D Empty logic) — both
+        // evaluation paths return the full mask for empty includes.
+        match src {
+            EvalSource::Plan(plan) => {
+                table.literal_list_patches_into(plan.clause_literals(j), &mut sh.clause)
+            }
+            EvalSource::Dense(model) => table.clause_patches_into(model.include(j), &mut sh.clause),
+        }
+        let hits = popcount(&sh.clause);
+        if hits > 0 {
+            sh.fired.set(lj, true);
+            // The intersection yields the full firing set, so "reservoir
+            // sampling" reduces to a uniform set-bit pick — same
+            // distribution as the §VI-B streaming reservoir.
+            let pick = ctx.streams.patch.below_at(ctx.sample, j as u64, hits);
+            sh.feedback_patch[lj] = match nth_set_bit(&sh.clause, pick) {
+                Some(b) => b,
+                // Unreachable for pick < hits; fall back deterministically
+                // rather than aborting training.
+                None => pick as usize % g.num_patches(),
+            };
+        } else {
+            sh.feedback_patch[lj] =
+                ctx.streams
+                    .patch
+                    .usize_below_at(ctx.sample, j as u64, g.num_patches());
+        }
+    }
+    // Materialize literals once per *distinct* selected patch into the
+    // reusable pool, from the table's packed rows.
+    let ClauseShard {
+        feedback_patch,
+        distinct,
+        lit_slot,
+        lit_pool,
+        content,
+        ..
+    } = sh;
+    distinct.clear();
+    distinct.extend_from_slice(feedback_patch);
+    distinct.sort_unstable();
+    distinct.dedup();
+    if lit_pool.len() < distinct.len() {
+        lit_pool.resize_with(distinct.len(), BitVec::default);
+    }
+    let rows = table.packed_rows();
+    for (i, &b) in distinct.iter().enumerate() {
+        let (px, py) = g.patch_pos(b);
+        patches::patch_literals_from_rows_into(g, rows, px, py, &mut lit_pool[i], content);
+    }
+    lit_slot.clear();
+    lit_slot.extend(feedback_patch.iter().map(|b| {
+        distinct
+            .binary_search(b)
+            .expect("feedback patch is in the distinct set")
+    }));
+    // Partial class sums with the *saturated* weights (what inference
+    // sees), in both training and inference semantics.
+    let classes = ctx.cfg.classes;
+    sh.sums_train.clear();
+    sh.sums_train.resize(classes, 0);
+    sh.sums_infer.clear();
+    sh.sums_infer.resize(classes, 0);
+    for lj in sh.fired.iter_ones() {
+        let j = sh.lo + lj;
+        let empty = match src {
+            EvalSource::Plan(plan) => plan.is_empty_clause(j),
+            EvalSource::Dense(model) => model.is_empty_clause(j),
+        };
+        let row = &sh.wide[lj * classes..(lj + 1) * classes];
+        for (i, &w) in row.iter().enumerate() {
+            let w = w.clamp(i8::MIN as i32, i8::MAX as i32);
+            sh.sums_train[i] += w;
+            if !empty {
+                sh.sums_infer[i] += w;
+            }
+        }
+    }
+}
+
+/// Sample-level decisions from the reduced (training-semantics) class
+/// sums: feedback probabilities toward ±T and the random negative class.
+fn sample_decisions(
+    streams: &TrainStreams,
+    sample: u64,
+    sums: &[i32],
+    label: usize,
+    t: i32,
+    classes: usize,
+) -> SampleDecisions {
+    let vy = sums[label].clamp(-t, t);
+    let p_target = (t - vy) as f64 / (2 * t) as f64;
+    let neg = if classes > 1 {
+        let mut attempt = 0u64;
+        let mut q = streams.neg_class.usize_below_at(sample, attempt, classes);
+        while q == label {
+            attempt += 1;
+            q = streams.neg_class.usize_below_at(sample, attempt, classes);
+        }
+        let vq = sums[q].clamp(-t, t);
+        Some((q, (t + vq) as f64 / (2 * t) as f64))
+    } else {
+        None
+    };
+    SampleDecisions {
+        y: label,
+        p_target,
+        neg,
+    }
+}
+
+/// Phase 2 (apply, per shard): Type I/II feedback + weight bumps for every
+/// clause this shard owns — target class first, then the negative class,
+/// exactly as the serial formulation orders them per clause (the two roles
+/// touch disjoint weight cells, so per-clause ordering is the only one
+/// that matters).
+fn apply_shard(sh: &mut ClauseShard, d: &SampleDecisions, ctx: &StepCtx<'_>) {
+    for lj in 0..sh.len() {
+        feedback_clause(sh, lj, d.y, true, d.p_target, ctx);
+        if let Some((q, p_neg)) = d.neg {
+            feedback_clause(sh, lj, q, false, p_neg, ctx);
+        }
+    }
+}
+
+/// Give one clause feedback for `class`, activated with probability `p`.
+/// `positive` is true for the target class.
+fn feedback_clause(
+    sh: &mut ClauseShard,
+    lj: usize,
+    class: usize,
+    positive: bool,
+    p: f64,
+    ctx: &StepCtx<'_>,
+) {
+    let j = sh.lo + lj;
+    let role = u64::from(!positive);
+    if !ctx
+        .streams
+        .activate
+        .chance_at(ctx.sample, ((j as u64) << 1) | role, p)
+    {
+        return;
+    }
+    let classes = ctx.cfg.classes;
+    let w = sh.wide[lj * classes + class];
+    let clause_out = sh.fired.get(lj);
+    let slot = sh.lit_slot[lj];
+    // Polarity: a non-negative weight means clause j *supports* `class`;
+    // for the target class supporting clauses get Type I (strengthen the
+    // pattern), opposing get Type II, and weights move toward +; for a
+    // negative class the roles and the weight direction flip (CoTM,
+    // Glimsdal & Granmo 2021).
+    if (w >= 0) == positive {
+        type_i(sh, lj, role, clause_out, slot, ctx);
+    } else {
+        type_ii(sh, lj, slot, clause_out, ctx);
+    }
+    if clause_out {
+        let delta = if positive { 1 } else { -1 };
+        let w = &mut sh.wide[lj * classes + class];
+        *w += delta;
+        sh.bumps.push(WeightBump {
+            clause: j as u32,
+            class: class as u32,
+            saturated: (*w).clamp(i8::MIN as i32, i8::MAX as i32) as i8,
+        });
+    }
+}
+
+/// Type I feedback (recognize + forget) on local clause `lj` with the
+/// selected patch's literals.
+fn type_i(
+    sh: &mut ClauseShard,
+    lj: usize,
+    role: u64,
+    clause_out: bool,
+    slot: usize,
+    ctx: &StepCtx<'_>,
+) {
+    let ClauseShard {
+        lo,
+        teams,
+        include_count,
+        lit_pool,
+        flips,
+        ..
+    } = sh;
+    let j = *lo + lj;
+    let team = &mut teams[lj];
+    let count = &mut include_count[lj];
+    let lits = &lit_pool[slot];
+    let s = ctx.cfg.s;
+    let p_forget = 1.0 / s;
+    let p_remember = (s - 1.0) / s;
+    let base = (((j as u64) << 1) | role) << 16;
+    let lit = &ctx.streams.literal;
+    if clause_out {
+        for k in 0..ctx.cfg.literals {
+            if lits.get(k) {
+                // Literal is 1: reinforce toward include (probability 1
+                // with the true-positive boost — no draw needed, and with
+                // counter-based streams an unused coordinate costs
+                // nothing).
+                let boosted = ctx.cfg.boost_true_positive;
+                if boosted || lit.chance_at(ctx.sample, base | k as u64, p_remember) {
+                    reinforce_include(team, count, flips, j, k, ctx.cfg.literal_budget);
+                }
+            } else if lit.chance_at(ctx.sample, base | k as u64, p_forget) {
+                // Literal is 0: push toward exclude.
+                weaken_toward_exclude(team, count, flips, j, k);
+            }
+        }
+    } else {
+        // Clause did not fire anywhere: decay all automata (forget).
+        for k in 0..ctx.cfg.literals {
+            if lit.chance_at(ctx.sample, base | k as u64, p_forget) {
+                weaken_toward_exclude(team, count, flips, j, k);
+            }
+        }
+    }
+}
+
+/// Type II feedback (reject): when the clause fires for the wrong class,
+/// include literals that are 0 in the patch so the clause stops matching.
+fn type_ii(sh: &mut ClauseShard, lj: usize, slot: usize, clause_out: bool, ctx: &StepCtx<'_>) {
+    if !clause_out {
+        return;
+    }
+    let ClauseShard {
+        lo,
+        teams,
+        include_count,
+        lit_pool,
+        flips,
+        ..
+    } = sh;
+    let j = *lo + lj;
+    let team = &mut teams[lj];
+    let count = &mut include_count[lj];
+    let lits = &lit_pool[slot];
+    for k in 0..ctx.cfg.literals {
+        if !lits.get(k) && !team.includes(k) {
+            reinforce_include(team, count, flips, j, k, ctx.cfg.literal_budget);
+        }
+    }
+}
+
+/// Increment TA `k` (toward include), honoring the literal budget: a
+/// transition that would *newly* include a literal is blocked while the
+/// clause is at budget (§VI-A). Flips are recorded for the coordinator.
+fn reinforce_include(
+    team: &mut TaTeam,
+    count: &mut usize,
+    flips: &mut Vec<IncludeFlip>,
+    j: usize,
+    k: usize,
+    budget: Option<usize>,
+) {
+    let was_include = team.includes(k);
+    if !was_include {
+        if let Some(b) = budget {
+            if *count >= b {
+                return;
+            }
+        }
+    }
+    team.reinforce(k);
+    if !was_include && team.includes(k) {
+        *count += 1;
+        flips.push(IncludeFlip {
+            clause: j as u32,
+            literal: k as u32,
+            included: true,
+        });
+    }
+}
+
+/// Decrement TA `k` (toward exclude), recording an actual flip.
+fn weaken_toward_exclude(
+    team: &mut TaTeam,
+    count: &mut usize,
+    flips: &mut Vec<IncludeFlip>,
+    j: usize,
+    k: usize,
+) {
+    let was_include = team.includes(k);
+    team.weaken(k);
+    if was_include && !team.includes(k) {
+        *count -= 1;
+        flips.push(IncludeFlip {
+            clause: j as u32,
+            literal: k as u32,
+            included: false,
+        });
+    }
+}
+
+/// Replay one shard's recorded feedback into the shared mirrors: include
+/// flips into the model and the plan's CSR, weight bumps into the plan's
+/// transposed weight matrix. Runs on the coordinator between phases.
+fn merge_feedback(
+    model: &mut Model,
+    plan: &mut ClausePlan,
+    flips: &[IncludeFlip],
+    bumps: &[WeightBump],
+) {
+    for f in flips {
+        model.set_include(f.clause as usize, f.literal as usize, f.included);
+        plan.set_include(f.clause as usize, f.literal as usize, f.included);
+    }
+    for b in bumps {
+        plan.set_weight(b.clause as usize, b.class as usize, b.saturated as i32);
+    }
+}
+
+/// A job sent to a shard worker (the two phases), carrying back the
+/// shard's parked buffers so the steady state allocates nothing.
+enum ShardJob {
+    Eval {
+        table: Arc<PatchSets>,
+        plan: Arc<ClausePlan>,
+        sample: u64,
+        flips: Vec<IncludeFlip>,
+        bumps: Vec<WeightBump>,
+    },
+    Apply {
+        d: SampleDecisions,
+        sample: u64,
+        sums_train: Vec<i32>,
+        sums_infer: Vec<i32>,
+    },
+}
+
+/// A shard's recorded feedback buffers (ping-ponged between coordinator
+/// and worker).
+type ShardLogs = (Vec<IncludeFlip>, Vec<WeightBump>);
+/// A shard's partial class-sum buffers (training / inference semantics).
+type ShardSums = (Vec<i32>, Vec<i32>);
+
+/// A shard worker's reply (buffers move to the coordinator and return
+/// with the next job).
+enum ShardReply {
+    Eval {
+        sums_train: Vec<i32>,
+        sums_infer: Vec<i32>,
+    },
+    Apply {
+        flips: Vec<IncludeFlip>,
+        bumps: Vec<WeightBump>,
+    },
+}
+
+/// Resumable training state: everything needed to continue a run exactly
+/// where it stopped — TA states, wide (unsaturated) weights and the RNG
+/// stream position (seed + counters). Serialized as the v3 container by
+/// `model_io::save_checkpoint`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainCheckpoint {
+    pub params: Params,
+    /// Free-form dataset identity tag (the CLI writes `name:n_train:n_test`)
+    /// so resume can regenerate the *same* split. Empty when unknown; the
+    /// trainer itself never reads it.
+    pub dataset: String,
+    /// The training seed: counter-based streams re-derive from it.
+    pub seed: u64,
+    /// RNG stream position: samples processed so far (every per-sample
+    /// stream is addressed by this counter).
+    pub samples_seen: u64,
+    /// Epochs completed (the shuffle-stream coordinate).
+    pub epochs_done: u64,
+    pub boost_true_positive: bool,
+    /// TA states, clause-major: `ta_states[j · literals + k]`.
+    pub ta_states: Vec<u8>,
+    /// Wide weights, clause-major: `wide_weights[j · classes + i]`.
+    pub wide_weights: Vec<i32>,
+}
+
+/// Trainer state: clause-sharded automata + wide weights, with an
+/// always-in-sync inference [`Model`] mirroring the TA action bits (the
+/// chip's model registers) and a compiled [`ClausePlan`] kept in sync
+/// incrementally — include flips patch the CSR rows, weight bumps mirror
+/// into the transposed weight matrix, so the hot loop never recompiles.
 pub struct Trainer {
     pub params: Params,
-    teams: Vec<TaTeam>,
-    /// Wide weights during training; exported saturated to i8.
-    weights: Vec<Vec<i32>>,
+    shards: Vec<ClauseShard>,
     model: Model,
-    plan: ClausePlan,
-    scratch: TrainScratch,
+    /// Shared behind `Arc` so the parallel evaluate phase can snapshot it;
+    /// uniquely owned (and mutable) between phases.
+    plan: Arc<ClausePlan>,
+    /// The shared per-sample literal→patch-set table, likewise snapshotted
+    /// by the evaluate phase.
+    table: Arc<PatchSets>,
+    /// Arena for [`Trainer::predict`] (the serving path, verbatim).
+    eval: EvalScratch,
+    /// Reduced class-sum scratch (training / inference semantics).
+    sums_train: Vec<i32>,
+    sums_infer: Vec<i32>,
+    threads: usize,
     /// Evaluate clauses through the compiled plan (the default). `false`
     /// selects the pre-plan dense include-mask path — kept as the
     /// semantics oracle for the seed-determinism tests.
     use_plan: bool,
-    rng: Xoshiro256ss,
+    streams: TrainStreams,
+    seed: u64,
+    samples_seen: u64,
+    epochs_done: u64,
     /// Use reward-probability 1.0 for true-positive include reinforcement.
     pub boost_true_positive: bool,
 }
@@ -83,27 +679,62 @@ pub struct EpochStats {
     pub samples: usize,
     pub total_includes: usize,
     pub exclude_fraction: f64,
+    /// Wall-clock seconds for the epoch (shuffle + train + export).
+    pub elapsed_s: f64,
+    /// Training throughput of this epoch.
+    pub samples_per_s: f64,
+    /// Worker threads the epoch *actually* ran with (1 when a serial
+    /// fallback applied, whatever was requested).
+    pub threads: usize,
+}
+
+impl EpochStats {
+    /// Machine-readable form (the `BENCH_train.json` row schema).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("epoch", Json::num(self.epoch as f64)),
+            ("train_accuracy", Json::num(self.train_accuracy)),
+            ("samples", Json::num(self.samples as f64)),
+            ("samples_per_s", Json::num(self.samples_per_s)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("threads", Json::num(self.threads as f64)),
+            ("total_includes", Json::num(self.total_includes as f64)),
+            ("exclude_fraction", Json::num(self.exclude_fraction)),
+        ])
+    }
 }
 
 impl Trainer {
     pub fn new(params: Params, seed: u64) -> Trainer {
         params.validate().expect("invalid params");
+        assert!(
+            params.literals <= u16::MAX as usize,
+            "{} literals exceed the u16 stream-coordinate space",
+            params.literals
+        );
         let n = params.ta_states.clamp(2, 128) as u8;
-        let teams = (0..params.clauses)
+        let teams: Vec<TaTeam> = (0..params.clauses)
             .map(|_| TaTeam::new(params.literals, n))
             .collect();
-        let weights = vec![vec![0i32; params.clauses]; params.classes];
+        let wide = vec![0i32; params.clauses * params.classes];
         let model = Model::blank(params.clone());
-        let plan = ClausePlan::compile(&model);
+        let plan = Arc::new(ClausePlan::compile(&model));
+        let shards = partition_shards(teams, wide, params.classes, 1);
         Trainer {
             params,
-            teams,
-            weights,
+            shards,
             model,
             plan,
-            scratch: TrainScratch::default(),
+            table: Arc::new(PatchSets::default()),
+            eval: EvalScratch::default(),
+            sums_train: Vec::new(),
+            sums_infer: Vec::new(),
+            threads: 1,
             use_plan: true,
-            rng: Xoshiro256ss::new(seed),
+            streams: TrainStreams::new(seed),
+            seed,
+            samples_seen: 0,
+            epochs_done: 0,
             boost_true_positive: true,
         }
     }
@@ -121,9 +752,76 @@ impl Trainer {
     /// Select the evaluation path: the compiled plan (default) or the
     /// pre-plan dense include-mask scan. Both are bit-identical in effect —
     /// the oracle path exists so tests can prove it (same seed ⇒ same
-    /// exported model).
+    /// exported model). The oracle always runs single-threaded.
     pub fn set_plan_enabled(&mut self, enabled: bool) {
         self.use_plan = enabled;
+    }
+
+    /// Worker threads for [`Trainer::epoch`] (1 = in-place serial). The
+    /// exported model is bit-identical for any setting — clause shards are
+    /// re-partitioned, but every random decision is addressed by its
+    /// logical coordinates, not the schedule.
+    pub fn set_threads(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        self.threads = threads;
+        let nshards = threads.min(self.params.clauses).max(1);
+        if nshards == self.shards.len() {
+            return;
+        }
+        let mut teams = Vec::with_capacity(self.params.clauses);
+        let mut wide = Vec::with_capacity(self.params.clauses * self.params.classes);
+        for sh in self.shards.drain(..) {
+            teams.extend(sh.teams);
+            wide.extend(sh.wide);
+        }
+        self.shards = partition_shards(teams, wide, self.params.classes, nshards);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Samples processed so far (the per-sample RNG stream position).
+    pub fn samples_seen(&self) -> u64 {
+        self.samples_seen
+    }
+
+    /// Epochs completed so far (the shuffle-stream position).
+    pub fn epochs_done(&self) -> u64 {
+        self.epochs_done
+    }
+
+    /// TA team of clause `j` (shard-routed; tests and diagnostics).
+    pub fn team(&self, j: usize) -> &TaTeam {
+        let sh = self
+            .shards
+            .iter()
+            .find(|sh| j >= sh.lo && j < sh.lo + sh.len())
+            .expect("clause index in range");
+        &sh.teams[j - sh.lo]
+    }
+
+    /// Wide (unsaturated) training weight of clause `j` for `class` —
+    /// what [`Trainer::export`] saturates to the chip's 8-bit range.
+    pub fn wide_weight(&self, class: usize, j: usize) -> i32 {
+        let sh = self
+            .shards
+            .iter()
+            .find(|sh| j >= sh.lo && j < sh.lo + sh.len())
+            .expect("clause index in range");
+        sh.wide[(j - sh.lo) * self.params.classes + class]
+    }
+
+    fn feedback_cfg(&self) -> FeedbackCfg {
+        FeedbackCfg {
+            geometry: self.params.geometry,
+            classes: self.params.classes,
+            literals: self.params.literals,
+            t: self.params.t,
+            s: self.params.s,
+            literal_budget: self.params.literal_budget,
+            boost_true_positive: self.boost_true_positive,
+        }
     }
 
     /// Export a standalone model with weights saturated to i8 (the chip's
@@ -131,296 +829,402 @@ impl Trainer {
     /// to fit — §V).
     pub fn export(&self) -> Model {
         let mut m = self.model.clone();
-        for i in 0..self.params.classes {
-            for j in 0..self.params.clauses {
-                m.set_weight(
-                    i,
-                    j,
-                    self.weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32) as i8,
-                );
+        let classes = self.params.classes;
+        for sh in &self.shards {
+            for lj in 0..sh.len() {
+                let j = sh.lo + lj;
+                for i in 0..classes {
+                    m.set_weight(
+                        i,
+                        j,
+                        sh.wide[lj * classes + i].clamp(i8::MIN as i32, i8::MAX as i32) as i8,
+                    );
+                }
             }
         }
         m
     }
 
-    /// Train on one labelled booleanized image. Allocation-free in steady
-    /// state: every buffer lives in the trainer's [`TrainScratch`] arena.
-    pub fn update(&mut self, img: &BoolImage, label: u8) {
-        let y = label as usize;
-        assert!(y < self.params.classes);
-        let t = self.params.t;
-
-        // 1. Per-clause outputs + uniformly sampled feedback patch, via the
-        //    patch-bitset fast path (tm::fast): the intersection yields the
-        //    full set of firing patches, so "reservoir sampling" reduces to
-        //    picking a uniform set bit — same distribution, ~100× less work.
-        //    Training semantics: an empty clause evaluates to 1 (matches
-        //    everything) so Type Ia feedback can bootstrap includes; only
-        //    *inference* forces empty clauses low (§IV-D Empty logic) —
-        //    both evaluation paths return the full mask for empty includes.
-        let g = self.params.geometry;
-        let n = self.params.clauses;
-        // The scratch is moved out so its buffers can be borrowed across
-        // `&mut self` feedback calls; `TrainScratch::default` is free.
-        let mut sc = std::mem::take(&mut self.scratch);
-        if self.use_plan {
-            // Selective build: only literals some clause references.
-            sc.eval
-                .sets
-                .rebuild_selective(g, img, Some(self.plan.used_literals()));
-        } else {
-            sc.eval.sets.rebuild(g, img);
-        }
-        sc.eval.fired.reset(n);
-        sc.feedback_patch.clear();
-        sc.feedback_patch.resize(n, 0);
-        for j in 0..n {
-            if self.use_plan {
-                // Compiled plan: sparse include list, most-selective-first.
-                sc.eval
-                    .sets
-                    .literal_list_patches_into(self.plan.clause_literals(j), &mut sc.eval.clause);
-            } else {
-                // Pre-plan oracle: dense include-mask scan.
-                sc.eval
-                    .sets
-                    .clause_patches_into(self.model.include(j), &mut sc.eval.clause);
+    /// Snapshot the full training state (see [`TrainCheckpoint`]).
+    pub fn checkpoint(&self) -> TrainCheckpoint {
+        let p = &self.params;
+        let mut ta_states = Vec::with_capacity(p.clauses * p.literals);
+        let mut wide_weights = Vec::with_capacity(p.clauses * p.classes);
+        for sh in &self.shards {
+            for team in &sh.teams {
+                ta_states.extend_from_slice(team.states());
             }
-            let hits = super::fast::popcount(&sc.eval.clause);
-            if hits > 0 {
-                sc.eval.fired.set(j, true);
-                let pick = self.rng.below(hits);
-                sc.feedback_patch[j] = match super::fast::nth_set_bit(&sc.eval.clause, pick) {
-                    Some(b) => b,
-                    // Unreachable for pick < hits; fall back to a uniform
-                    // patch rather than aborting training.
-                    None => self.rng.usize_below(g.num_patches()),
-                };
-            } else {
-                sc.feedback_patch[j] = self.rng.usize_below(g.num_patches());
-            }
+            wide_weights.extend_from_slice(&sh.wide);
         }
-        // Materialize literals once per *distinct* selected patch (≤ n of
-        // them) into the reusable pool: sorted-dedup scratch instead of the
-        // former per-call HashMap + BitVec clones.
-        sc.distinct.clear();
-        sc.distinct.extend_from_slice(&sc.feedback_patch);
-        sc.distinct.sort_unstable();
-        sc.distinct.dedup();
-        patches::pack_rows_into(g, img, &mut sc.rows);
-        if sc.lit_pool.len() < sc.distinct.len() {
-            sc.lit_pool.resize_with(sc.distinct.len(), BitVec::default);
+        TrainCheckpoint {
+            params: p.clone(),
+            dataset: String::new(),
+            seed: self.seed,
+            samples_seen: self.samples_seen,
+            epochs_done: self.epochs_done,
+            boost_true_positive: self.boost_true_positive,
+            ta_states,
+            wide_weights,
         }
-        for (i, &b) in sc.distinct.iter().enumerate() {
-            let (px, py) = g.patch_pos(b);
-            patches::patch_literals_from_rows_into(
-                g,
-                &sc.rows,
-                px,
-                py,
-                &mut sc.lit_pool[i],
-                &mut sc.content,
-            );
-        }
-        sc.lit_slot.clear();
-        sc.lit_slot.extend(sc.feedback_patch.iter().map(|b| {
-            sc.distinct
-                .binary_search(b)
-                .expect("feedback patch is in the distinct set")
-        }));
-
-        // 2. Class sums with the *saturated* weights (what inference sees).
-        //    The plan's clause-major weight matrix mirrors them exactly, so
-        //    this is one pass over the fired set instead of `classes` scans.
-        if self.use_plan {
-            self.plan.accumulate_class_sums(&sc.eval.fired, &mut sc.eval.sums);
-        } else {
-            sc.eval.sums.clear();
-            let weights = &self.weights;
-            let fired = &sc.eval.fired;
-            sc.eval.sums.extend((0..self.params.classes).map(|i| {
-                fired
-                    .iter_ones()
-                    .map(|j| weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32))
-                    .sum::<i32>()
-            }));
-        }
-
-        // 3. Target-class update: push v_y toward +T.
-        let vy = sc.eval.sums[y].clamp(-t, t);
-        let p_target = (t - vy) as f64 / (2 * t) as f64;
-        self.update_class(y, true, p_target, &sc);
-
-        // 4. One random negative class: push v_q toward −T.
-        if self.params.classes > 1 {
-            let mut q = self.rng.usize_below(self.params.classes);
-            while q == y {
-                q = self.rng.usize_below(self.params.classes);
-            }
-            let vq = sc.eval.sums[q].clamp(-t, t);
-            let p_neg = (t + vq) as f64 / (2 * t) as f64;
-            self.update_class(q, false, p_neg, &sc);
-        }
-        self.scratch = sc;
     }
 
-    /// Give feedback for `class` over all clauses, each activated with
-    /// probability `p`. `positive` is true for the target class.
-    fn update_class(&mut self, class: usize, positive: bool, p: f64, sc: &TrainScratch) {
-        for j in 0..self.params.clauses {
-            if !self.rng.chance(p) {
-                continue;
+    /// Rebuild a trainer from a checkpoint. Continuing from here is
+    /// bit-identical to never having stopped: the counter-based streams
+    /// resume at the stored sample/epoch position.
+    pub fn from_checkpoint(ck: TrainCheckpoint) -> Trainer {
+        let p = ck.params.clone();
+        p.validate().expect("invalid checkpoint params");
+        assert_eq!(
+            ck.ta_states.len(),
+            p.clauses * p.literals,
+            "checkpoint TA payload does not match dimensions"
+        );
+        assert_eq!(
+            ck.wide_weights.len(),
+            p.clauses * p.classes,
+            "checkpoint weight payload does not match dimensions"
+        );
+        let n = p.ta_states.clamp(2, 128) as u8;
+        let teams: Vec<TaTeam> = (0..p.clauses)
+            .map(|j| TaTeam::from_states(&ck.ta_states[j * p.literals..(j + 1) * p.literals], n))
+            .collect();
+        let mut model = Model::blank(p.clone());
+        for (j, team) in teams.iter().enumerate() {
+            for k in 0..p.literals {
+                if team.includes(k) {
+                    model.set_include(j, k, true);
+                }
             }
-            let w = self.weights[class][j];
-            let clause_out = sc.eval.fired.get(j);
-            // Polarity: a non-negative weight means clause j *supports*
-            // `class`; for the target class supporting clauses get Type I
-            // (strengthen the pattern), opposing get Type II, and weights
-            // move toward +; for a negative class the roles and the weight
-            // direction flip (CoTM, Glimsdal & Granmo 2021).
-            let type_one = (w >= 0) == positive;
-            let lits = &sc.lit_pool[sc.lit_slot[j]];
-            if type_one {
-                self.type_i(j, clause_out, lits);
-            } else {
-                self.type_ii(j, clause_out, lits);
-            }
-            if clause_out {
-                let delta = if positive { 1 } else { -1 };
-                self.weights[class][j] += delta;
-                self.plan.set_weight(
+        }
+        let mut plan = ClausePlan::compile(&model);
+        for j in 0..p.clauses {
+            for i in 0..p.classes {
+                plan.set_weight(
                     j,
-                    class,
-                    self.weights[class][j].clamp(i8::MIN as i32, i8::MAX as i32),
+                    i,
+                    ck.wide_weights[j * p.classes + i].clamp(i8::MIN as i32, i8::MAX as i32),
                 );
             }
         }
+        let shards = partition_shards(teams, ck.wide_weights, p.classes, 1);
+        Trainer {
+            streams: TrainStreams::new(ck.seed),
+            params: p,
+            shards,
+            model,
+            plan: Arc::new(plan),
+            table: Arc::new(PatchSets::default()),
+            eval: EvalScratch::default(),
+            sums_train: Vec::new(),
+            sums_infer: Vec::new(),
+            threads: 1,
+            use_plan: true,
+            seed: ck.seed,
+            samples_seen: ck.samples_seen,
+            epochs_done: ck.epochs_done,
+            boost_true_positive: ck.boost_true_positive,
+        }
     }
 
-    /// Type I feedback (recognize + forget) on clause `j` with the selected
-    /// patch's literals.
-    fn type_i(&mut self, j: usize, clause_out: bool, lits: &BitVec) {
-        let s = self.params.s;
-        let p_forget = 1.0 / s;
-        let p_remember = (s - 1.0) / s;
-        if clause_out {
-            for k in 0..self.params.literals {
-                if lits.get(k) {
-                    // Literal is 1: reinforce toward include.
-                    let p = if self.boost_true_positive {
-                        1.0
-                    } else {
-                        p_remember
-                    };
-                    if self.rng.chance(p) {
-                        self.reinforce_include(j, k);
-                    }
-                } else {
-                    // Literal is 0: push toward exclude.
-                    if self.rng.chance(p_forget) {
-                        self.weaken_toward_exclude(j, k);
-                    }
+    /// Train on one labelled booleanized image. Allocation-free in steady
+    /// state: every buffer lives in a shard's arena or the trainer's.
+    /// Runs the two phases in-place (no worker threads) — exactly what one
+    /// parallel step computes, in shard order.
+    pub fn update(&mut self, img: &BoolImage, label: u8) {
+        self.step(img, label);
+    }
+
+    /// One training step; returns the pre-update prediction (inference
+    /// semantics), which the evaluate phase yields for free.
+    fn step(&mut self, img: &BoolImage, label: u8) -> u8 {
+        let y = label as usize;
+        assert!(y < self.params.classes);
+        let cfg = self.feedback_cfg();
+        let streams = self.streams;
+        let sample = self.samples_seen;
+        let g = cfg.geometry;
+        // Phase 1a: rebuild the shared patch-set table (selective build:
+        // only literals some clause references).
+        {
+            let table =
+                Arc::get_mut(&mut self.table).expect("patch table uniquely owned between samples");
+            if self.use_plan {
+                table.rebuild_selective(g, img, Some(self.plan.used_literals()));
+            } else {
+                table.rebuild(g, img);
+            }
+        }
+        // Phase 1b: evaluate per shard; reduce partial class sums.
+        let ctx = StepCtx {
+            sample,
+            streams: &streams,
+            cfg: &cfg,
+        };
+        self.sums_train.clear();
+        self.sums_train.resize(cfg.classes, 0);
+        self.sums_infer.clear();
+        self.sums_infer.resize(cfg.classes, 0);
+        {
+            let src = if self.use_plan {
+                EvalSource::Plan(self.plan.as_ref())
+            } else {
+                EvalSource::Dense(&self.model)
+            };
+            let table: &PatchSets = &self.table;
+            for sh in &mut self.shards {
+                eval_shard(sh, table, &src, &ctx);
+                for i in 0..cfg.classes {
+                    self.sums_train[i] += sh.sums_train[i];
+                    self.sums_infer[i] += sh.sums_infer[i];
                 }
             }
-        } else {
-            // Clause did not fire anywhere: decay all automata (forget).
-            for k in 0..self.params.literals {
-                if self.rng.chance(p_forget) {
-                    self.weaken_toward_exclude(j, k);
-                }
-            }
         }
+        let pred = argmax_lowest(&self.sums_infer);
+        // Phase 1c: sample-level decisions on the reduced sums.
+        let d = sample_decisions(&streams, sample, &self.sums_train, y, cfg.t, cfg.classes);
+        // Phase 2: clause-sharded apply.
+        for sh in &mut self.shards {
+            apply_shard(sh, &d, &ctx);
+        }
+        // Merge: replay recorded flips/bumps into the shared mirrors, in
+        // ascending shard (= clause) order.
+        let plan = Arc::get_mut(&mut self.plan).expect("plan uniquely owned between samples");
+        for sh in &mut self.shards {
+            merge_feedback(&mut self.model, plan, &sh.flips, &sh.bumps);
+            sh.flips.clear();
+            sh.bumps.clear();
+        }
+        self.samples_seen += 1;
+        pred
     }
 
-    /// Type II feedback (reject): when the clause fires for the wrong
-    /// class, include literals that are 0 in the patch so the clause stops
-    /// matching it.
-    fn type_ii(&mut self, j: usize, clause_out: bool, lits: &BitVec) {
-        if !clause_out {
-            return;
-        }
-        for k in 0..self.params.literals {
-            if !lits.get(k) && !self.teams[j].includes(k) {
-                self.reinforce_include(j, k);
-            }
-        }
-    }
-
-    /// Increment TA `k` of clause `j` (toward include), honoring the
-    /// literal budget: a transition that would *newly* include a literal is
-    /// blocked while the clause is at budget (§VI-A).
-    fn reinforce_include(&mut self, j: usize, k: usize) {
-        let was_include = self.teams[j].includes(k);
-        if !was_include {
-            if let Some(budget) = self.params.literal_budget {
-                if self.teams[j].include_count() >= budget {
-                    return;
-                }
-            }
-        }
-        self.teams[j].reinforce(k);
-        if !was_include && self.teams[j].includes(k) {
-            self.model.set_include(j, k, true);
-            self.plan.set_include(j, k, true);
-        }
-    }
-
-    /// Decrement TA `k` of clause `j` (toward exclude).
-    fn weaken_toward_exclude(&mut self, j: usize, k: usize) {
-        let was_include = self.teams[j].includes(k);
-        self.teams[j].weaken(k);
-        if was_include && !self.teams[j].includes(k) {
-            self.model.set_include(j, k, false);
-            self.plan.set_include(j, k, false);
-        }
-    }
-
-    /// One epoch over a booleanized training split (pre-shuffled order).
+    /// One epoch over a booleanized training split. The shuffle is keyed
+    /// by the trainer's epoch counter, so resumed runs reproduce the same
+    /// order. Online accuracy is the pre-update prediction per sample
+    /// (derived from the evaluate phase — no separate inference pass).
     pub fn epoch(&mut self, split: &[(BoolImage, u8)], epoch: usize) -> EpochStats {
+        let t0 = Instant::now();
         let mut order: Vec<usize> = (0..split.len()).collect();
-        self.rng.shuffle(&mut order);
-        let mut correct = 0usize;
-        for &idx in &order {
-            let (img, label) = &split[idx];
-            // Track online training accuracy before the update.
-            let pred = self.predict(img);
-            if pred == *label {
-                correct += 1;
+        self.streams.shuffle.shuffle_at(self.epochs_done, &mut order);
+        let parallel = self.threads > 1 && self.use_plan && self.shards.len() > 1;
+        // Report the *effective* worker count: oracle mode and
+        // single-shard configurations run serially whatever was requested.
+        let workers = if parallel { self.shards.len() } else { 1 };
+        let correct = if parallel {
+            self.epoch_parallel(split, &order)
+        } else {
+            let mut correct = 0usize;
+            for &idx in &order {
+                let (img, label) = &split[idx];
+                if self.step(img, *label) == *label {
+                    correct += 1;
+                }
             }
-            self.update(img, *label);
-        }
+            correct
+        };
+        self.epochs_done += 1;
         let model = self.export();
+        let elapsed = t0.elapsed().as_secs_f64();
         EpochStats {
             epoch,
             train_accuracy: correct as f64 / split.len().max(1) as f64,
             samples: split.len(),
             total_includes: model.total_includes(),
             exclude_fraction: model.exclude_fraction(),
+            elapsed_s: elapsed,
+            samples_per_s: split.len() as f64 / elapsed.max(1e-12),
+            threads: workers,
         }
+    }
+
+    /// The parallel epoch body: one scoped worker per clause shard, alive
+    /// for the whole epoch. Per sample the coordinator rebuilds the shared
+    /// table, broadcasts Eval jobs (Arc snapshots of table + plan),
+    /// reduces the partial sums, broadcasts Apply jobs, then replays the
+    /// recorded feedback into the model/plan mirrors. Buffers ping-pong
+    /// between coordinator and workers, so the steady state allocates
+    /// nothing per sample.
+    fn epoch_parallel(&mut self, split: &[(BoolImage, u8)], order: &[usize]) -> usize {
+        let cfg = self.feedback_cfg();
+        let streams = self.streams;
+        let classes = cfg.classes;
+        let g = cfg.geometry;
+        let Trainer {
+            shards,
+            model,
+            plan,
+            table,
+            sums_train,
+            sums_infer,
+            samples_seen,
+            ..
+        } = self;
+        let nshards = shards.len();
+        let mut correct = 0usize;
+        std::thread::scope(|scope| {
+            let mut jobs: Vec<SyncSender<ShardJob>> = Vec::with_capacity(nshards);
+            let mut replies: Vec<Receiver<ShardReply>> = Vec::with_capacity(nshards);
+            for sh in shards.iter_mut() {
+                let (tx_job, rx_job) = sync_channel::<ShardJob>(1);
+                let (tx_rep, rx_rep) = sync_channel::<ShardReply>(1);
+                scope.spawn(move || {
+                    while let Ok(job) = rx_job.recv() {
+                        match job {
+                            ShardJob::Eval {
+                                table,
+                                plan,
+                                sample,
+                                flips,
+                                bumps,
+                            } => {
+                                sh.flips = flips;
+                                sh.bumps = bumps;
+                                let ctx = StepCtx {
+                                    sample,
+                                    streams: &streams,
+                                    cfg: &cfg,
+                                };
+                                eval_shard(sh, &table, &EvalSource::Plan(plan.as_ref()), &ctx);
+                                // Release the shared snapshots before
+                                // replying: the coordinator mutates both
+                                // between phases (Arc::get_mut).
+                                drop(plan);
+                                drop(table);
+                                let reply = ShardReply::Eval {
+                                    sums_train: std::mem::take(&mut sh.sums_train),
+                                    sums_infer: std::mem::take(&mut sh.sums_infer),
+                                };
+                                if tx_rep.send(reply).is_err() {
+                                    return;
+                                }
+                            }
+                            ShardJob::Apply {
+                                d,
+                                sample,
+                                sums_train,
+                                sums_infer,
+                            } => {
+                                sh.sums_train = sums_train;
+                                sh.sums_infer = sums_infer;
+                                let ctx = StepCtx {
+                                    sample,
+                                    streams: &streams,
+                                    cfg: &cfg,
+                                };
+                                apply_shard(sh, &d, &ctx);
+                                let reply = ShardReply::Apply {
+                                    flips: std::mem::take(&mut sh.flips),
+                                    bumps: std::mem::take(&mut sh.bumps),
+                                };
+                                if tx_rep.send(reply).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                });
+                jobs.push(tx_job);
+                replies.push(rx_rep);
+            }
+            // Buffers parked at the coordinator between phases.
+            let mut parked_logs: Vec<Option<ShardLogs>> =
+                (0..nshards).map(|_| Some((Vec::new(), Vec::new()))).collect();
+            let mut parked_sums: Vec<Option<ShardSums>> = (0..nshards).map(|_| None).collect();
+            for &idx in order {
+                let (img, label) = &split[idx];
+                let y = *label as usize;
+                let sample = *samples_seen;
+                {
+                    let tbl = Arc::get_mut(table)
+                        .expect("patch table uniquely owned between samples");
+                    tbl.rebuild_selective(g, img, Some(plan.used_literals()));
+                }
+                for (s_i, tx) in jobs.iter().enumerate() {
+                    let (flips, bumps) =
+                        parked_logs[s_i].take().expect("flip logs parked between samples");
+                    tx.send(ShardJob::Eval {
+                        table: Arc::clone(table),
+                        plan: Arc::clone(plan),
+                        sample,
+                        flips,
+                        bumps,
+                    })
+                    .expect("shard worker alive");
+                }
+                sums_train.clear();
+                sums_train.resize(classes, 0);
+                sums_infer.clear();
+                sums_infer.resize(classes, 0);
+                for (s_i, rx) in replies.iter().enumerate() {
+                    match rx.recv().expect("shard worker alive") {
+                        ShardReply::Eval {
+                            sums_train: part_train,
+                            sums_infer: part_infer,
+                        } => {
+                            for i in 0..classes {
+                                sums_train[i] += part_train[i];
+                                sums_infer[i] += part_infer[i];
+                            }
+                            parked_sums[s_i] = Some((part_train, part_infer));
+                        }
+                        ShardReply::Apply { .. } => unreachable!("protocol: eval reply expected"),
+                    }
+                }
+                if argmax_lowest(sums_infer) == *label {
+                    correct += 1;
+                }
+                let d = sample_decisions(&streams, sample, sums_train, y, cfg.t, classes);
+                for (s_i, tx) in jobs.iter().enumerate() {
+                    let (part_train, part_infer) =
+                        parked_sums[s_i].take().expect("sums parked between phases");
+                    tx.send(ShardJob::Apply {
+                        d,
+                        sample,
+                        sums_train: part_train,
+                        sums_infer: part_infer,
+                    })
+                    .expect("shard worker alive");
+                }
+                {
+                    let plan_mut =
+                        Arc::get_mut(plan).expect("plan uniquely owned between samples");
+                    for (s_i, rx) in replies.iter().enumerate() {
+                        match rx.recv().expect("shard worker alive") {
+                            ShardReply::Apply { mut flips, mut bumps } => {
+                                merge_feedback(model, plan_mut, &flips, &bumps);
+                                flips.clear();
+                                bumps.clear();
+                                parked_logs[s_i] = Some((flips, bumps));
+                            }
+                            ShardReply::Eval { .. } => {
+                                unreachable!("protocol: apply reply expected")
+                            }
+                        }
+                    }
+                }
+                *samples_seen += 1;
+            }
+            // Closing the job channels ends the worker loops.
+            drop(jobs);
+        });
+        correct
     }
 
     /// Predict with the current (saturated) weights. `&mut self` because
     /// the evaluation reuses the trainer's scratch arena (no per-call
-    /// allocations on the plan path).
+    /// allocations); see [`Trainer::predict_with`] for the `&self` form.
     pub fn predict(&mut self, img: &BoolImage) -> u8 {
-        if !self.use_plan {
-            // Pre-plan oracle path.
-            let e = Engine::new();
-            let clauses = e.clause_outputs(&self.model, img);
-            let sums: Vec<i32> = (0..self.params.classes)
-                .map(|i| {
-                    clauses
-                        .iter_ones()
-                        .map(|j| self.weights[i][j].clamp(i8::MIN as i32, i8::MAX as i32))
-                        .sum()
-                })
-                .collect();
-            return argmax_lowest(&sums);
-        }
-        // The serving path, verbatim: the plan's weights mirror the
-        // saturated trainer weights, so this is the same inference the
-        // exported model would produce.
-        self.plan.classify_into(img, &mut self.scratch.eval)
+        self.plan.classify_into(img, &mut self.eval)
+    }
+
+    /// [`Trainer::predict`] with a caller-owned arena: takes `&self`, so
+    /// a mid-training model can be evaluated concurrently (e.g. by a
+    /// serving thread holding its own [`EvalScratch`]) without mutable
+    /// trainer access. The plan's weights mirror the saturated trainer
+    /// weights in both evaluation modes, so this is the same inference the
+    /// exported model would produce.
+    pub fn predict_with(&self, img: &BoolImage, scratch: &mut EvalScratch) -> u8 {
+        self.plan.classify_into(img, scratch)
     }
 }
 
@@ -429,6 +1233,8 @@ mod tests {
     use super::*;
     use crate::data::synth::SynthFamily;
     use crate::data::{booleanize_split, NUM_LITERALS};
+    use crate::tm::infer::Engine;
+    use crate::util::Xoshiro256ss;
 
     fn two_blob_problem() -> Vec<(BoolImage, u8)> {
         // Class 0: 3×3 blob top-left; class 1: 3×3 blob bottom-right.
@@ -558,7 +1364,7 @@ mod tests {
         for j in 0..tr.params.clauses {
             for k in 0..NUM_LITERALS {
                 assert_eq!(
-                    tr.teams[j].includes(k),
+                    tr.team(j).includes(k),
                     tr.model.include(j).get(k),
                     "clause {j} literal {k} out of sync"
                 );
@@ -593,5 +1399,98 @@ mod tests {
         let a = run(21);
         let b = run(21);
         assert!(a == b, "same seed must give identical models");
+    }
+
+    #[test]
+    fn shard_count_does_not_change_the_model() {
+        // The in-place serial path over N shards must equal the 1-shard
+        // run bit for bit (the thread-pool form of the same property is
+        // proven in tests/train_parallel.rs).
+        let params = Params {
+            clauses: 10,
+            t: 10,
+            s: 3.0,
+            ..Params::asic()
+        };
+        let split = two_blob_problem();
+        let run = |threads: usize| {
+            let mut tr = Trainer::new(params.clone(), 77);
+            tr.set_threads(threads);
+            for e in 0..2 {
+                tr.epoch(&split, e);
+            }
+            assert!(tr.plan().is_in_sync(tr.model()));
+            tr.export()
+        };
+        let one = run(1);
+        let three = run(3);
+        assert!(one == three, "shard partitioning leaked into the model");
+    }
+
+    #[test]
+    fn set_threads_mid_run_preserves_state() {
+        let params = Params {
+            clauses: 8,
+            t: 10,
+            s: 3.0,
+            ..Params::asic()
+        };
+        let split = two_blob_problem();
+        let mut a = Trainer::new(params.clone(), 5);
+        a.epoch(&split, 0);
+        let before = a.export();
+        a.set_threads(3); // re-partitions shards
+        assert!(a.export() == before, "re-sharding must not move state");
+        a.epoch(&split, 1);
+        // Same trajectory as a trainer that was 3-sharded from the start.
+        let mut b = Trainer::new(params, 5);
+        b.set_threads(3);
+        b.epoch(&split, 0);
+        b.epoch(&split, 1);
+        assert!(a.export() == b.export());
+    }
+
+    #[test]
+    fn predict_with_matches_predict() {
+        let params = Params {
+            clauses: 8,
+            t: 10,
+            s: 3.0,
+            ..Params::asic()
+        };
+        let split = two_blob_problem();
+        let mut tr = Trainer::new(params, 23);
+        tr.epoch(&split, 0);
+        let mut scratch = EvalScratch::new();
+        for (img, _) in split.iter().take(8) {
+            let borrowed = tr.predict_with(img, &mut scratch);
+            assert_eq!(borrowed, tr.predict(img));
+        }
+        // And both agree with the exported model through the engine.
+        let m = tr.export();
+        let e = Engine::new();
+        for (img, _) in split.iter().take(8) {
+            assert_eq!(tr.predict_with(img, &mut scratch), e.classify(&m, img).prediction);
+        }
+    }
+
+    #[test]
+    fn checkpoint_struct_roundtrips_through_trainer() {
+        let params = Params {
+            clauses: 8,
+            t: 10,
+            s: 3.0,
+            ..Params::asic()
+        };
+        let split = two_blob_problem();
+        let mut tr = Trainer::new(params, 31);
+        tr.epoch(&split, 0);
+        let ck = tr.checkpoint();
+        assert_eq!(ck.samples_seen, split.len() as u64);
+        assert_eq!(ck.epochs_done, 1);
+        let resumed = Trainer::from_checkpoint(ck.clone());
+        assert!(resumed.export() == tr.export(), "state must survive");
+        assert!(resumed.plan().is_in_sync(resumed.model()));
+        assert_eq!(resumed.checkpoint(), ck, "checkpoint is idempotent");
     }
 }

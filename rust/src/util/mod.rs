@@ -11,6 +11,6 @@ pub mod table;
 
 pub use bitvec::BitVec;
 pub use json::Json;
-pub use prng::{Lfsr16, SplitMix64, Xoshiro256ss};
+pub use prng::{Lfsr16, SplitMix64, StreamRng, Xoshiro256ss};
 pub use stats::{Summary, Welford};
 pub use table::Table;

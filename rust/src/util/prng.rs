@@ -11,6 +11,12 @@
 //! - [`Lfsr16`] — a 16-bit Fibonacci LFSR matching the hardware random
 //!   sources the paper's §VI-B training extension describes; used by the
 //!   ASIC-faithful reservoir sampler.
+//! - [`StreamRng`] — a counter-based generator (Salmon et al. 2011 style:
+//!   output = hash(key, counter)): every draw is a pure function of its
+//!   logical coordinates, so randomness can be indexed by (sample, clause,
+//!   literal) instead of consumed in sequence. This is what makes the
+//!   data-parallel trainer bit-identical for any thread count — the stream
+//!   *layout* carries the determinism, not the execution schedule.
 //!
 //! Everything is reproducible from a single `u64` seed.
 
@@ -131,6 +137,115 @@ impl Xoshiro256ss {
     /// Pick a uniformly random element index.
     pub fn pick(&mut self, len: usize) -> usize {
         self.usize_below(len)
+    }
+}
+
+/// Counter-based RNG: a keyed 64-bit hash over logical draw coordinates.
+///
+/// Unlike the sequential generators above, a `StreamRng` has no mutable
+/// state: `at(a, b)` returns the same value for the same `(key, a, b)`
+/// forever, and *unused* coordinates cost nothing. Callers address draws
+/// by what they decide, not by when they decide it — e.g. the trainer
+/// keys clause feedback on `(sample, clause, literal)`, so a 1-thread and
+/// an 8-thread schedule read the exact same random values.
+///
+/// The mixer is the SplitMix64 finalizer over a multiply-combined key —
+/// the same avalanche core the seed expander uses, applied as a hash. Not
+/// cryptographic; statistically solid for stochastic training decisions
+/// (uniformity checked in the tests below).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamRng {
+    key: u64,
+}
+
+/// Weyl constants for coordinate combination (golden ratio and the
+/// xxHash64 prime — odd, high-entropy multipliers).
+const COORD_A: u64 = 0x9E37_79B9_7F4A_7C15;
+const COORD_B: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const COORD_C: u64 = 0x1656_67B1_9E37_79F9;
+
+impl StreamRng {
+    /// Derive a stream from a seed and a domain tag. Distinct domains give
+    /// statistically independent streams for the same seed (the trainer
+    /// uses one domain per decision kind: shuffle, patch pick, …).
+    pub fn new(seed: u64, domain: u64) -> StreamRng {
+        let mut sm = SplitMix64::new(seed ^ domain.wrapping_mul(0xA076_1D64_78BD_642F));
+        // Two expander steps so domain 0 is not the raw seed.
+        sm.next_u64();
+        StreamRng { key: sm.next_u64() }
+    }
+
+    /// SplitMix64 finalizer (Steele, Lea & Flood 2014): full avalanche.
+    #[inline]
+    fn mix(mut z: u64) -> u64 {
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// The draw at 2-D coordinate `(a, b)`.
+    #[inline]
+    pub fn at(&self, a: u64, b: u64) -> u64 {
+        self.at3(a, b, 0)
+    }
+
+    /// The draw at 3-D coordinate `(a, b, c)` (`c` is used internally as a
+    /// rejection counter by [`Self::below_at`]).
+    #[inline]
+    pub fn at3(&self, a: u64, b: u64, c: u64) -> u64 {
+        Self::mix(
+            self.key
+                ^ a.wrapping_mul(COORD_A)
+                ^ b.wrapping_mul(COORD_B)
+                ^ c.wrapping_mul(COORD_C),
+        )
+    }
+
+    /// Uniform f64 in [0, 1) at `(a, b)` (top 53 bits, like
+    /// [`Xoshiro256ss::f64`]).
+    #[inline]
+    pub fn f64_at(&self, a: u64, b: u64) -> f64 {
+        (self.at(a, b) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial with probability `p` at `(a, b)`.
+    #[inline]
+    pub fn chance_at(&self, a: u64, b: u64, p: f64) -> bool {
+        self.f64_at(a, b) < p
+    }
+
+    /// Uniform in `[0, bound)` at `(a, b)` — Lemire rejection, with the
+    /// rejection attempt folded into the third coordinate so the result
+    /// stays a pure function of `(key, a, b, bound)`.
+    #[inline]
+    pub fn below_at(&self, a: u64, b: u64, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut attempt = 0u64;
+        loop {
+            let x = (self.at3(a, b, attempt) >> 32) as u32;
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let lo = m as u32;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 32) as u32;
+            }
+            attempt += 1;
+        }
+    }
+
+    #[inline]
+    pub fn usize_below_at(&self, a: u64, b: u64, bound: usize) -> usize {
+        debug_assert!(bound > 0 && bound <= u32::MAX as usize);
+        self.below_at(a, b, bound as u32) as usize
+    }
+
+    /// Deterministic Fisher–Yates shuffle addressed at coordinate `a`
+    /// (e.g. the epoch number): same key + same `a` ⇒ same permutation,
+    /// independent of any other stream usage.
+    pub fn shuffle_at<T>(&self, a: u64, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below_at(a, i as u64, i + 1);
+            xs.swap(i, j);
+        }
     }
 }
 
@@ -262,6 +377,76 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stream_rng_is_a_pure_function_of_coordinates() {
+        let s = StreamRng::new(42, 7);
+        assert_eq!(s.at(3, 9), s.at(3, 9));
+        assert_eq!(s.below_at(5, 5, 100), s.below_at(5, 5, 100));
+        // A copy is interchangeable (no hidden state).
+        let t = s;
+        assert_eq!(s.at(1, 2), t.at(1, 2));
+        // Different seeds, domains and coordinates all decorrelate.
+        assert_ne!(s.at(3, 9), StreamRng::new(43, 7).at(3, 9));
+        assert_ne!(s.at(3, 9), StreamRng::new(42, 8).at(3, 9));
+        assert_ne!(s.at(3, 9), s.at(9, 3));
+    }
+
+    #[test]
+    fn stream_rng_below_is_in_range_and_roughly_uniform() {
+        let s = StreamRng::new(99, 1);
+        let mut counts = [0usize; 10];
+        for i in 0..10_000u64 {
+            let v = s.below_at(i, i / 7, 10) as usize;
+            assert!(v < 10);
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            assert!((600..1400).contains(&c), "bucket count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn stream_rng_chance_matches_probability() {
+        let s = StreamRng::new(3, 4);
+        let hits = (0..20_000u64).filter(|&i| s.chance_at(i, 0, 0.3)).count();
+        let frac = hits as f64 / 20_000.0;
+        assert!((0.27..0.33).contains(&frac), "p=0.3 hit rate {frac}");
+        assert!((0..1000u64).all(|i| s.chance_at(i, 1, 1.0)), "p=1 always");
+        assert!(!(0..1000u64).any(|i| s.chance_at(i, 2, 0.0)), "p=0 never");
+    }
+
+    #[test]
+    fn stream_rng_adjacent_coordinates_avalanche() {
+        // Neighbouring (sample, clause) cells must not produce correlated
+        // bits: check hamming distance of adjacent draws stays near 32.
+        let s = StreamRng::new(2025, 5);
+        let mut total = 0u32;
+        let n = 2_000u64;
+        for i in 0..n {
+            total += (s.at(i, 17) ^ s.at(i + 1, 17)).count_ones();
+            total += (s.at(17, i) ^ s.at(17, i + 1)).count_ones();
+        }
+        let mean = total as f64 / (2 * n) as f64;
+        assert!((28.0..36.0).contains(&mean), "avalanche mean {mean}");
+    }
+
+    #[test]
+    fn stream_rng_shuffle_is_a_permutation_and_epoch_keyed() {
+        let s = StreamRng::new(11, 6);
+        let mut xs: Vec<u32> = (0..100).collect();
+        s.shuffle_at(0, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        // Same epoch key ⇒ same permutation; different key ⇒ different.
+        let mut ys: Vec<u32> = (0..100).collect();
+        s.shuffle_at(0, &mut ys);
+        assert_eq!(xs, ys);
+        let mut zs: Vec<u32> = (0..100).collect();
+        s.shuffle_at(1, &mut zs);
+        assert_ne!(xs, zs);
     }
 
     #[test]

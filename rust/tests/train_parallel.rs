@@ -1,0 +1,200 @@
+//! Data-parallel training acceptance properties (ISSUE 4):
+//!
+//! 1. **Thread-count invariance** — training with `--threads 1` and
+//!    `--threads 4` from the same seed exports bit-identical models: the
+//!    counter-based RNG streams address every decision by its logical
+//!    coordinates, so the schedule cannot leak into the result.
+//! 2. **Checkpoint resume equivalence** — train 2 epochs ≡ train 1 epoch,
+//!    save a v3 checkpoint, load it, train 1 more: bit-identical, even
+//!    across different thread counts on each side of the checkpoint.
+//! 3. **Train→serve publish** — `ModelRegistry::publish` feeds each
+//!    checkpoint into a live shard pool with the zero-drop hot-swap.
+
+use convcotm::coordinator::{BatchConfig, Coordinator, ModelRegistry, PoolConfig};
+use convcotm::data::{BoolImage, Geometry};
+use convcotm::model_io;
+use convcotm::tm::{ClausePlan, EvalScratch, Params, Trainer};
+use convcotm::util::Xoshiro256ss;
+use std::sync::Arc;
+
+/// Random labelled images (learnability is irrelevant — only the
+/// update-for-update feedback trajectory is).
+fn random_split(g: Geometry, n: usize, seed: u64) -> Vec<(BoolImage, u8)> {
+    let mut rng = Xoshiro256ss::new(seed);
+    (0..n)
+        .map(|_| {
+            let img = BoolImage::from_bools(
+                &(0..g.img_pixels())
+                    .map(|_| rng.chance(0.25))
+                    .collect::<Vec<_>>(),
+            );
+            let label = rng.below(4) as u8;
+            (img, label)
+        })
+        .collect()
+}
+
+fn test_params(g: Geometry) -> Params {
+    Params {
+        clauses: 12,
+        t: 12,
+        s: 4.0,
+        ..Params::for_geometry(g)
+    }
+}
+
+fn check_thread_invariance(g: Geometry) {
+    let params = test_params(g);
+    let split = random_split(g, 40, 99);
+    let run = |threads: usize| {
+        let mut tr = Trainer::new(params.clone(), 4242);
+        tr.set_threads(threads);
+        for e in 0..2 {
+            tr.epoch(&split, e);
+        }
+        assert!(
+            tr.plan().is_in_sync(tr.model()),
+            "plan mirror out of sync ({g}, threads={threads})"
+        );
+        assert!(
+            *tr.plan() == ClausePlan::compile(&tr.export()),
+            "incrementally synced plan differs from a fresh compile ({g}, threads={threads})"
+        );
+        tr.export()
+    };
+    let serial = run(1);
+    let four = run(4);
+    assert!(
+        serial == four,
+        "1-thread and 4-thread training must export bit-identical models ({g})"
+    );
+    // Uneven shard split (12 clauses over 5 workers) — same property.
+    let five = run(5);
+    assert!(serial == five, "uneven shard split leaked into the model ({g})");
+}
+
+#[test]
+fn thread_count_invariance_on_asic_geometry() {
+    check_thread_invariance(Geometry::asic());
+}
+
+#[test]
+fn thread_count_invariance_on_strided_geometry() {
+    check_thread_invariance(Geometry::new(28, 10, 2).unwrap());
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    let g = Geometry::asic();
+    let params = test_params(g);
+    let split = random_split(g, 40, 7);
+    // Uninterrupted: 2 epochs straight.
+    let mut straight = Trainer::new(params.clone(), 321);
+    straight.epoch(&split, 0);
+    straight.epoch(&split, 1);
+    // Interrupted: 1 epoch, checkpoint to disk, resume, 1 more epoch.
+    let mut first = Trainer::new(params.clone(), 321);
+    first.epoch(&split, 0);
+    let path = std::env::temp_dir().join("convcotm_train_parallel_resume.ckpt");
+    model_io::save_checkpoint(&first.checkpoint(), &path).unwrap();
+    let ck = model_io::load_checkpoint(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ck.samples_seen, split.len() as u64);
+    assert_eq!(ck.epochs_done, 1);
+    let mut resumed = Trainer::from_checkpoint(ck);
+    resumed.epoch(&split, 1);
+    assert!(
+        straight.export() == resumed.export(),
+        "train 2 epochs must equal train 1 + resume 1, bit for bit"
+    );
+    assert_eq!(straight.samples_seen(), resumed.samples_seen());
+}
+
+#[test]
+fn checkpoint_resume_across_thread_counts() {
+    // The RNG stream position lives in the checkpoint, not the schedule:
+    // a 4-thread run resumed serially (and vice versa) stays on the same
+    // trajectory as an uninterrupted serial run.
+    let g = Geometry::asic();
+    let params = test_params(g);
+    let split = random_split(g, 30, 13);
+    let mut reference = Trainer::new(params.clone(), 55);
+    reference.epoch(&split, 0);
+    reference.epoch(&split, 1);
+
+    let mut parallel_first = Trainer::new(params.clone(), 55);
+    parallel_first.set_threads(4);
+    parallel_first.epoch(&split, 0);
+    let mut serial_rest = Trainer::from_checkpoint(parallel_first.checkpoint());
+    serial_rest.epoch(&split, 1);
+    assert!(
+        reference.export() == serial_rest.export(),
+        "4-thread epoch + serial resume must match the serial reference"
+    );
+
+    let mut serial_first = Trainer::new(params, 55);
+    serial_first.epoch(&split, 0);
+    let mut parallel_rest = Trainer::from_checkpoint(serial_first.checkpoint());
+    parallel_rest.set_threads(4);
+    parallel_rest.epoch(&split, 1);
+    assert!(
+        reference.export() == parallel_rest.export(),
+        "serial epoch + 4-thread resume must match the serial reference"
+    );
+}
+
+#[test]
+fn predict_with_serves_a_mid_training_model_immutably() {
+    let g = Geometry::asic();
+    let params = test_params(g);
+    let split = random_split(g, 30, 3);
+    let mut tr = Trainer::new(params, 9);
+    tr.epoch(&split, 0);
+    // A "serving-side" evaluation with an external arena needs no mutable
+    // trainer access and matches the exported model's inference.
+    let exported = tr.export();
+    let mut scratch = EvalScratch::new();
+    let engine = convcotm::tm::Engine::new();
+    for (img, _) in split.iter().take(10) {
+        assert_eq!(
+            tr.predict_with(img, &mut scratch),
+            engine.classify(&exported, img).prediction
+        );
+    }
+}
+
+#[test]
+fn training_checkpoints_hot_swap_into_a_live_pool() {
+    // The train→serve loop: each checkpoint is published into the
+    // registry behind a running shard pool; requests keep succeeding
+    // across the swap and versions advance.
+    let g = Geometry::asic();
+    let params = test_params(g);
+    let split = random_split(g, 30, 17);
+    let registry = Arc::new(ModelRegistry::new());
+    let coord = Coordinator::start_pool(
+        Arc::clone(&registry),
+        PoolConfig {
+            shards: 2,
+            queue_capacity: 64,
+            batch: BatchConfig::default(),
+        },
+    );
+    let mut tr = Trainer::new(params, 29);
+    for e in 0..3 {
+        tr.epoch(&split, e);
+        let entry = registry.publish("live", tr.export()).unwrap();
+        assert_eq!(entry.version, e as u64 + 1, "publish bumps the version");
+        // The pool serves the just-published version without drops.
+        let rxs: Vec<_> = split
+            .iter()
+            .take(16)
+            .map(|(img, _)| coord.submit_to(Some("live"), img.clone()))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().expect("request served across hot-swap");
+        }
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests, 48, "every probe across 3 swaps was served");
+}
