@@ -107,14 +107,17 @@ def main(argv):
             f"| {label} | {b['img_per_s']:.0f} | {f['img_per_s']:.0f} | "
             f"{100 * (ratio - 1):+.0f}% | {f_allocs} | {status} |"
         )
-    for key in (
-        "plan_speedup_vs_early_exit",
-        "pool_speedup_4v1_shards",
-        "train_speedup_4v1",
+    for key, unit in (
+        ("plan_speedup_vs_early_exit", "×"),
+        ("pool_speedup_4v1_shards", "×"),
+        ("http_speedup_4v1_shards", "×"),
+        ("http_overhead_us", " µs"),
+        ("train_speedup_4v1", "×"),
     ):
-        if key in fresh_doc:
+        value = fresh_doc.get(key)
+        if isinstance(value, (int, float)):
             lines.append("")
-            lines.append(f"`{key}` = {fresh_doc[key]:.2f}×")
+            lines.append(f"`{key}` = {value:.2f}{unit}")
 
     report = "\n".join(lines) + "\n"
     print(report)

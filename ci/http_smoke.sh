@@ -1,0 +1,118 @@
+#!/usr/bin/env bash
+# End-to-end smoke test for the HTTP front door (CI `http-smoke` job).
+#
+# Trains a 1-epoch model, starts `serve --listen 127.0.0.1:0` (release
+# binary) in the background, then over real sockets: POSTs one image and
+# asserts 200 + a well-formed classify response, asserts GET /metrics
+# counted the request, drains via POST /admin/shutdown and verifies the
+# process exits cleanly with its final drained summary.
+#
+# Usage: ci/http_smoke.sh [path/to/convcotm]
+set -euo pipefail
+
+BIN=${1:-rust/target/release/convcotm}
+TMP=$(mktemp -d)
+SERVE_PID=""
+cleanup() {
+  if [[ -n "$SERVE_PID" ]] && kill -0 "$SERVE_PID" 2>/dev/null; then
+    kill "$SERVE_PID" 2>/dev/null || true
+  fi
+  rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+echo "== train a quick model =="
+BENCH_TRAIN_JSON="$TMP/bench_train.json" \
+  "$BIN" train --dataset mnist --epochs 1 --n-train 300 --n-test 100 \
+  --out "$TMP/m.cctm"
+
+echo "== start the front door =="
+"$BIN" serve --model "smoke=$TMP/m.cctm" --listen 127.0.0.1:0 \
+  --shards 2 --http-workers 2 >"$TMP/serve.log" 2>&1 &
+SERVE_PID=$!
+
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's#.*listening on http://\([0-9.]*:[0-9]*\).*#\1#p' "$TMP/serve.log" | head -1)
+  [[ -n "$ADDR" ]] && break
+  if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+    echo "server exited before listening:" >&2
+    cat "$TMP/serve.log" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+if [[ -z "$ADDR" ]]; then
+  echo "server never reported its listen address:" >&2
+  cat "$TMP/serve.log" >&2
+  exit 1
+fi
+echo "front door at $ADDR"
+
+echo "== classify + metrics + drain over the wire =="
+python3 - "$ADDR" <<'PY'
+import json
+import sys
+import urllib.request
+
+addr = sys.argv[1]
+base = f"http://{addr}"
+
+def post(path, payload):
+    data = payload if isinstance(payload, bytes) else json.dumps(payload).encode()
+    req = urllib.request.Request(base + path, data=data, method="POST")
+    with urllib.request.urlopen(req, timeout=10) as resp:
+        return resp.status, json.loads(resp.read())
+
+def get(path):
+    with urllib.request.urlopen(base + path, timeout=10) as resp:
+        return resp.status, json.loads(resp.read())
+
+status, health = get("/healthz")
+assert status == 200 and health["status"] == "ok", health
+assert "smoke" in health["models"], health
+
+# One image: a blob of bright pixels, booleanized server-side.
+pixels = [0] * 784
+for y in range(10, 18):
+    for x in range(10, 18):
+        pixels[y * 28 + x] = 200
+status, out = post("/v1/classify", {"model": "smoke", "image": {"pixels": pixels}})
+assert status == 200, out
+assert out["count"] == 1, out
+(result,) = out["results"]
+assert 0 <= result["class"] <= 9, out
+assert result["model_version"] == 1, out
+assert len(result["class_sums"]) == 10, out
+print(f"classified as {result['class']} (model v{result['model_version']})")
+
+status, metrics = get("/metrics")
+assert status == 200, metrics
+assert metrics["requests"] >= 1, metrics
+assert metrics["http"]["responses_2xx"] >= 2, metrics
+print(f"metrics: {metrics['requests']} pool request(s), "
+      f"{metrics['http']['requests']} http request(s)")
+
+status, out = post("/admin/shutdown", b"")
+assert status == 200 and out["draining"] is True, out
+print("drain requested")
+PY
+
+echo "== wait for the drained exit =="
+for _ in $(seq 1 100); do
+  kill -0 "$SERVE_PID" 2>/dev/null || break
+  sleep 0.1
+done
+if kill -0 "$SERVE_PID" 2>/dev/null; then
+  echo "server did not exit after /admin/shutdown:" >&2
+  cat "$TMP/serve.log" >&2
+  exit 1
+fi
+wait "$SERVE_PID"
+SERVE_PID=""
+grep -q "drained after" "$TMP/serve.log" || {
+  echo "missing drained summary:" >&2
+  cat "$TMP/serve.log" >&2
+  exit 1
+}
+echo "http smoke: OK"

@@ -1,0 +1,176 @@
+//! Keep-alive HTTP load generator for the network front door — the
+//! client half of `convcotm serve --listen`.
+//!
+//! Opens `--connections` keep-alive connections and drives `--requests`
+//! pipeline iterations per connection, each a `POST /v1/classify` batch of
+//! `--batch` random images. Prints the achieved request and image rate
+//! plus the end-to-end latency distribution (p50/p99), which is where the
+//! `http_overhead_us` bench figure comes from.
+//!
+//! Run (against a listening server):
+//!   cargo run --release --example load_client -- --addr 127.0.0.1:8080 \
+//!     --connections 4 --requests 200 --batch 16 [--model NAME] [--side 28]
+
+use convcotm::cli::Args;
+use convcotm::data::BoolImage;
+use convcotm::server::http::write_request;
+use convcotm::server::proto::classify_request_body;
+use convcotm::server::{HttpConn, Limits};
+use convcotm::util::{Summary, Xoshiro256ss};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Build one classify body: `batch` random images at density 0.3, through
+/// the library's own wire-format builder.
+fn make_body(model: Option<&str>, batch: usize, side: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256ss::new(seed);
+    let images: Vec<BoolImage> = (0..batch)
+        .map(|_| {
+            let bits: Vec<bool> = (0..side * side).map(|_| rng.chance(0.3)).collect();
+            BoolImage::from_bools(&bits)
+        })
+        .collect();
+    let refs: Vec<&BoolImage> = images.iter().collect();
+    classify_request_body(model, &refs)
+}
+
+struct WorkerReport {
+    ok: usize,
+    shed: usize,
+    failed: usize,
+    /// Connections re-opened after the server closed ours (acceptor-level
+    /// shed, error close, or drain) — expected under saturation loads.
+    reconnects: usize,
+    latencies_us: Vec<f64>,
+}
+
+fn connect(addr: &str) -> Result<HttpConn<TcpStream>, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+    stream.set_nodelay(true).map_err(|e| e.to_string())?;
+    Ok(HttpConn::new(stream))
+}
+
+fn run_connection(addr: &str, body: &[u8], requests: usize) -> Result<WorkerReport, String> {
+    let mut conn = connect(addr)?;
+    let limits = Limits::default();
+    let mut report = WorkerReport {
+        ok: 0,
+        shed: 0,
+        failed: 0,
+        reconnects: 0,
+        latencies_us: Vec::with_capacity(requests),
+    };
+    // A saturated server legitimately closes connections (acceptor 503 +
+    // close); reconnect and keep measuring rather than aborting the run —
+    // bounded so a dead server still fails fast.
+    let mut reconnect_budget = requests.max(8);
+    let mut done = 0usize;
+    while done < requests {
+        let t0 = Instant::now();
+        let wrote = write_request(conn.get_mut(), "POST", "/v1/classify", body, true);
+        let resp = match wrote {
+            Ok(()) => conn.read_response(&limits).map_err(|e| format!("read: {e}"))?,
+            // Broken pipe: the server closed between requests.
+            Err(_) => None,
+        };
+        let Some(resp) = resp else {
+            reconnect_budget = reconnect_budget
+                .checked_sub(1)
+                .ok_or("server keeps closing connections")?;
+            report.reconnects += 1;
+            std::thread::sleep(Duration::from_millis(50));
+            conn = connect(addr)?;
+            continue;
+        };
+        done += 1;
+        report.latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        match resp.status {
+            200 => report.ok += 1,
+            // The server's backpressure: honour Retry-After and go again.
+            503 => {
+                report.shed += 1;
+                let secs = resp
+                    .header("retry-after")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(1);
+                std::thread::sleep(Duration::from_secs(secs.min(5)));
+            }
+            _ => {
+                report.failed += 1;
+                eprintln!("HTTP {}: {}", resp.status, String::from_utf8_lossy(&resp.body));
+            }
+        }
+        let closing = resp
+            .header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+        if closing && done < requests {
+            reconnect_budget = reconnect_budget
+                .checked_sub(1)
+                .ok_or("server keeps closing connections")?;
+            report.reconnects += 1;
+            conn = connect(addr)?;
+        }
+    }
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let addr = args.get_or("addr", "127.0.0.1:8080");
+    let connections = args.get_usize("connections", 4).map_err(anyhow::Error::msg)?;
+    let requests = args.get_usize("requests", 200).map_err(anyhow::Error::msg)?;
+    let batch = args.get_usize("batch", 16).map_err(anyhow::Error::msg)?;
+    let side = args.get_usize("side", 28).map_err(anyhow::Error::msg)?;
+    let model = args.get("model");
+
+    println!(
+        "load: {connections} keep-alive connection(s) × {requests} request(s) × \
+         batch {batch} ({side}×{side}) → {addr}"
+    );
+    let t0 = Instant::now();
+    let reports: Vec<WorkerReport> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..connections)
+            .map(|c| {
+                let (addr, model) = (addr.clone(), model.map(str::to_string));
+                scope.spawn(move || {
+                    let body = make_body(model.as_deref(), batch, side, 0xC11E47 + c as u64);
+                    run_connection(&addr, &body, requests)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect::<Result<Vec<_>, _>>()
+    })
+    .map_err(anyhow::Error::msg)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let (mut ok, mut shed, mut failed, mut reconnects) = (0usize, 0usize, 0usize, 0usize);
+    let mut latencies: Vec<f64> = Vec::new();
+    for r in &reports {
+        ok += r.ok;
+        shed += r.shed;
+        failed += r.failed;
+        reconnects += r.reconnects;
+        latencies.extend_from_slice(&r.latencies_us);
+    }
+    let s = Summary::of(&latencies);
+    let total = (ok + shed + failed) as f64;
+    println!(
+        "{:.1} req/s · {:.1} k img/s over {elapsed:.2}s ({ok} ok, {shed} shed 503, \
+         {failed} failed, {reconnects} reconnect(s))",
+        total / elapsed,
+        ok as f64 * batch as f64 / elapsed / 1e3,
+    );
+    println!(
+        "per-request latency: p50 {:.0} µs · p95 {:.0} µs · p99 {:.0} µs (batch of {batch})",
+        s.p50, s.p95, s.p99
+    );
+    anyhow::ensure!(failed == 0, "{failed} request(s) failed");
+    Ok(())
+}

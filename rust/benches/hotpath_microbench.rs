@@ -2,7 +2,9 @@
 //! throughput (compiled-plan and legacy paths), ASIC-simulator speed, PJRT
 //! artifact throughput (batch 1 and 16), trainer throughput (per-sample
 //! and data-parallel epochs at 1 vs 4 threads, with the modeled §VI-B
-//! on-device rate for comparison) and coordinator batching overhead.
+//! on-device rate for comparison), coordinator batching overhead, and
+//! end-to-end rows through the HTTP front door (`serve http (1 shard)` /
+//! `(4 shards)` + the derived `http_overhead_us`).
 //!
 //! Targets (DESIGN.md §7): native ≥60.3 k img/s single core; compiled plan
 //! ≥1.5× the mask-scan early-exit path with 0 heap allocations per image;
@@ -83,6 +85,132 @@ fn throughput(
         allocs_per_img: Some(allocs),
     });
     rate
+}
+
+/// End-to-end rows through the network front door: 4 keep-alive client
+/// threads × batch-16 classify calls against a loopback HTTP server over
+/// a 1- then 4-shard pool. Returns the two rates plus the single-inflight
+/// batch-1 p50 (µs) measured on the 1-shard server, from which
+/// `http_overhead_us` is derived.
+fn bench_http_rows(
+    model: &convcotm::tm::Model,
+    images: &[convcotm::data::BoolImage],
+    t: &mut Table,
+    rows: &mut Vec<Row>,
+) -> (Vec<f64>, f64) {
+    use convcotm::server::http::write_request;
+    use convcotm::server::{HttpConn, HttpServer, Limits, ServerConfig, ServerState};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let clients = 4usize;
+    let batch = 16usize;
+    let reqs_per_client = if quick { 40 } else { 150 };
+
+    // One request body, serialized once and replayed (the server parses
+    // it fresh every time — that parse cost is what these rows measure).
+    let refs: Vec<&convcotm::data::BoolImage> = images.iter().take(batch).collect();
+    let body = convcotm::server::proto::classify_request_body(None, &refs);
+    let one_body = convcotm::server::proto::classify_request_body(None, &refs[..1]);
+
+    let exchange = |conn: &mut HttpConn<TcpStream>, body: &[u8]| {
+        write_request(conn.get_mut(), "POST", "/v1/classify", body, true).expect("write");
+        let resp = conn
+            .read_response(&Limits::default())
+            .expect("response")
+            .expect("server open");
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    };
+
+    let mut rates = Vec::new();
+    let mut single_p50_us = 0.0f64;
+    for shards in [1usize, 4] {
+        let coord = Arc::new(Coordinator::start_pool(
+            ModelRegistry::single("bench", model.clone()),
+            PoolConfig {
+                shards,
+                queue_capacity: 4096,
+                batch: BatchConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_micros(50),
+                },
+            },
+        ));
+        let state = ServerState::new(Arc::clone(&coord));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            http_workers: clients,
+            ..ServerConfig::default()
+        };
+        let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind loopback");
+        let addr = server.local_addr();
+        let connect = || {
+            let s = TcpStream::connect(addr).expect("connect");
+            s.set_nodelay(true).expect("nodelay");
+            HttpConn::new(s)
+        };
+
+        // Warmup sizes every shard arena and worker buffer.
+        exchange(&mut connect(), &body);
+        let a0 = CountingAllocator::allocations();
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..clients {
+                let (body, connect, exchange) = (&body, &connect, &exchange);
+                scope.spawn(move || {
+                    let mut conn = connect();
+                    for _ in 0..reqs_per_client {
+                        exchange(&mut conn, body);
+                    }
+                });
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        let served = (clients * reqs_per_client * batch) as f64;
+        let allocs = (CountingAllocator::allocations() - a0) as f64 / served;
+        let rate = served / secs;
+        let label = if shards == 1 {
+            "serve http (1 shard)".to_string()
+        } else {
+            format!("serve http ({shards} shards)")
+        };
+        t.row(&[
+            label.clone(),
+            format!("{} img/s", fmt_k(rate)),
+            format!("{:.2} µs/img", 1e6 / rate),
+            format!("{allocs:.1} allocs/img"),
+        ]);
+        rows.push(Row {
+            label,
+            img_per_s: rate,
+            us_per_img: 1e6 / rate,
+            allocs_per_img: Some(allocs),
+        });
+        rates.push(rate);
+
+        if shards == 1 {
+            // Single-inflight batch-1 latency → http_overhead_us.
+            let n = if quick { 150 } else { 400 };
+            let mut conn = connect();
+            exchange(&mut conn, &one_body);
+            let mut lats = Vec::with_capacity(n);
+            for _ in 0..n {
+                let r0 = Instant::now();
+                exchange(&mut conn, &one_body);
+                lats.push(r0.elapsed().as_secs_f64() * 1e6);
+            }
+            single_p50_us = Summary::of(&lats).p50;
+        }
+
+        server.request_shutdown();
+        server.join();
+        drop(state);
+        if let Ok(coord) = Arc::try_unwrap(coord) {
+            coord.shutdown();
+        }
+    }
+    (rates, single_p50_us)
 }
 
 fn main() {
@@ -218,6 +346,12 @@ fn main() {
         coord.shutdown();
     }
 
+    // Serve path through the full network front door: keep-alive HTTP
+    // clients against the loopback server over the same shard pool — the
+    // end-to-end rows CI tracks for the transport layer, plus the
+    // single-inflight latency that yields `http_overhead_us`.
+    let (http_rates, http_p50_us) = bench_http_rows(&model, &images, &mut t, &mut rows);
+
     // PJRT artifacts.
     #[cfg(feature = "pjrt")]
     let artifact_dir =
@@ -346,6 +480,18 @@ fn main() {
             "MISSED"
         }
     );
+    // HTTP transport overhead: single-inflight batch-1 p50 through the
+    // front door, minus the coordinator's own end-to-end p50 (so the
+    // figure isolates parse + socket + response serialization).
+    let http_overhead_us = (http_p50_us - s.p50).max(0.0);
+    println!(
+        "http front door: single-inflight p50 {:.1} µs (coordinator {:.1} µs) → \
+         http_overhead_us {:.1}; pool-over-http 4 vs 1 shards: {:.2}×",
+        http_p50_us,
+        s.p50,
+        http_overhead_us,
+        http_rates[1] / http_rates[0]
+    );
 
     // PJRT coordinator end-to-end (thread-affine backend via factory).
     #[cfg(feature = "pjrt")]
@@ -390,6 +536,8 @@ fn main() {
             Json::num(plan_rate / native_rate),
         ),
         ("pool_speedup_4v1_shards", Json::num(pool_speedup)),
+        ("http_overhead_us", Json::num(http_overhead_us)),
+        ("http_speedup_4v1_shards", Json::num(http_rates[1] / http_rates[0])),
         ("train_speedup_4v1", Json::num(train_speedup)),
         ("train_hw_samples_per_s_27m8", Json::num(hw_rate)),
         ("train_sw_over_hw_4t", Json::num(train_rates[1] / hw_rate)),

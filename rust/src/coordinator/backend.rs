@@ -23,6 +23,12 @@ pub struct BackendOutput {
     /// Simulated accelerator cycles attributed to this image (ASIC backend
     /// only; None for purely functional backends).
     pub sim_cycles: Option<u64>,
+    /// Registry version of the model that served this request (pool mode
+    /// only; None for anonymous single-backend serving). Carried to the
+    /// network edge so clients can prove which deploy answered them — the
+    /// invariant the hot-swap tests pin is "prediction and version always
+    /// agree".
+    pub model_version: Option<u64>,
 }
 
 /// A batched classification backend.
@@ -102,6 +108,7 @@ fn plan_classify_one(
         prediction,
         class_sums: scratch.class_sums().to_vec(),
         sim_cycles: None,
+        model_version: None,
     }
 }
 
@@ -236,6 +243,7 @@ impl Backend for AsicBackend {
                 prediction: res.prediction,
                 class_sums: res.class_sums,
                 sim_cycles: Some(res.report.phases.latency() as u64),
+                model_version: None,
             });
         }
         Ok(out)
@@ -300,6 +308,7 @@ impl Backend for PjrtBackend {
                 prediction: o.prediction,
                 class_sums: o.class_sums.iter().map(|&x| x as i32).collect(),
                 sim_cycles: None,
+                model_version: None,
             })
             .collect())
     }

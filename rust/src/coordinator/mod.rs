@@ -501,6 +501,10 @@ fn serve_one(
         prediction,
         class_sums: scratch.class_sums().to_vec(),
         sim_cycles: None,
+        // The entry resolved for this request — under a concurrent
+        // hot-swap this is exactly the version whose plan evaluated the
+        // image, so prediction and version can never disagree.
+        model_version: Some(entry.version),
     };
     Ok((entry, out))
 }

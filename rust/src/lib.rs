@@ -3,6 +3,8 @@
 //! Machine Image Classification Accelerator" (IEEE TCSI 2025).
 //!
 //! Layers:
+//! - L4 (`server`): the network front door — a std-only HTTP/1.1 server
+//!   over the shard pool (classify, metrics, model administration).
 //! - L3 (this crate): serving coordinator, cycle-accurate ASIC simulator,
 //!   energy model, native bit-packed inference engine, on-device trainer.
 //! - L2/L1 (python/compile): JAX inference graph + Pallas clause-evaluation
@@ -22,5 +24,6 @@ pub mod energy;
 pub mod model_io;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod tm;
 pub mod util;

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   train     train a model on a dataset and save the model file
 //!   eval      evaluate a saved model (native engine + ASIC simulator)
-//!   serve     run the coordinator over a backend and replay traffic
+//!   serve     run the coordinator over a backend and replay traffic, or
+//!             stay resident behind the HTTP front door (--listen)
 //!   power     print the power/EPC operating table for a saved model
 //!   info      print the configuration, cycle constants and DFF inventory
 //!
@@ -29,6 +30,7 @@ use convcotm::coordinator::{
 use convcotm::data::{booleanize_split_for_geometry, load_dataset, BoolImage, Geometry};
 use convcotm::energy::{EnergyModel, OperatingPoint};
 use convcotm::model_io;
+use convcotm::server::{HttpServer, ServerConfig, ServerState};
 use convcotm::tm::{Engine, Params, Trainer};
 use convcotm::util::{Json, Table};
 use std::path::{Path, PathBuf};
@@ -73,6 +75,9 @@ fn print_usage() {
          serve  --model FILE --backend native|asic|pjrt --requests N --max-batch B --threads T\n\
          serve  --model NAME=FILE [--model NAME=FILE ...] [--manifest FILE] --shards N --queue-capacity C\n\
                 (repeatable --model / --manifest / --shards selects the sharded registry pool)\n\
+         serve  --listen ADDR[:PORT] --http-workers N [pool flags as above]\n\
+                (resident HTTP front door: POST /v1/classify, GET /healthz, GET /metrics,\n\
+                 POST /admin/models, POST /admin/shutdown — see DESIGN.md \u{a7}10)\n\
          power  --model FILE [--vdd V --freq HZ]\n\
          info   [--geometry G]\n\n\
          Geometries: asic (28x10s1, default), cifar10 (32x10s1), or SIDExWINDOW[sSTRIDE].\n\
@@ -382,23 +387,9 @@ fn pool_mode_requested(args: &Args) -> bool {
         || args.get_all("model").iter().any(|m| m.contains('='))
 }
 
-/// Sharded registry serving: load every `--model NAME=PATH` (and/or a
-/// `--manifest`), start `--shards` workers, replay `--requests` round-robin
-/// across the loaded models and print the aggregate + per-model metrics.
-fn cmd_serve_pool(args: &Args) -> anyhow::Result<()> {
-    let backend_name = args.get_or("backend", "native");
-    anyhow::ensure!(
-        backend_name == "native",
-        "the sharded pool evaluates through compiled plans (native); \
-         --backend {backend_name} only supports single-model serving"
-    );
-    let requests = args.get_usize("requests", 1000).map_err(anyhow::Error::msg)?;
-    let max_batch = args.get_usize("max-batch", 16).map_err(anyhow::Error::msg)?;
-    let shards = args.get_usize("shards", 4).map_err(anyhow::Error::msg)?;
-    let queue_capacity = args
-        .get_usize("queue-capacity", DEFAULT_QUEUE_CAPACITY)
-        .map_err(anyhow::Error::msg)?;
-
+/// Build a registry from the repeatable `--model [NAME=]PATH` flags and/or
+/// a `--manifest FILE` — shared by pool replay mode and `--listen` mode.
+fn load_registry(args: &Args) -> anyhow::Result<Arc<ModelRegistry>> {
     let registry = Arc::new(ModelRegistry::new());
     if let Some(manifest) = args.get("manifest") {
         let loaded = registry.load_manifest(Path::new(manifest))?;
@@ -425,6 +416,26 @@ fn cmd_serve_pool(args: &Args) -> anyhow::Result<()> {
         !registry.is_empty(),
         "no models loaded: pass --model NAME=PATH (repeatable) or --manifest FILE"
     );
+    Ok(registry)
+}
+
+/// Sharded registry serving: load every `--model NAME=PATH` (and/or a
+/// `--manifest`), start `--shards` workers, replay `--requests` round-robin
+/// across the loaded models and print the aggregate + per-model metrics.
+fn cmd_serve_pool(args: &Args) -> anyhow::Result<()> {
+    let backend_name = args.get_or("backend", "native");
+    anyhow::ensure!(
+        backend_name == "native",
+        "the sharded pool evaluates through compiled plans (native); \
+         --backend {backend_name} only supports single-model serving"
+    );
+    let requests = args.get_usize("requests", 1000).map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_usize("max-batch", 16).map_err(anyhow::Error::msg)?;
+    let shards = args.get_usize("shards", 4).map_err(anyhow::Error::msg)?;
+    let queue_capacity = args
+        .get_usize("queue-capacity", DEFAULT_QUEUE_CAPACITY)
+        .map_err(anyhow::Error::msg)?;
+    let registry = load_registry(args)?;
 
     // One booleanized test split per distinct geometry in the registry.
     let dataset = load_dataset(&args.get_or("dataset", "mnist"), 0, 256, 7)?;
@@ -503,7 +514,75 @@ fn cmd_serve_pool(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `serve --listen ADDR`: the resident network front door. A shard pool
+/// over the loaded registry, fronted by the std-only HTTP server; the
+/// process stays up serving `POST /v1/classify` (and the admin surface)
+/// until `POST /admin/shutdown` drains it.
+fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
+    let backend_name = args.get_or("backend", "native");
+    anyhow::ensure!(
+        backend_name == "native",
+        "--listen serves through the shard pool (native); --backend \
+         {backend_name} is replay-only"
+    );
+    let max_batch = args.get_usize("max-batch", 16).map_err(anyhow::Error::msg)?;
+    let shards = args.get_usize("shards", 4).map_err(anyhow::Error::msg)?;
+    let queue_capacity = args
+        .get_usize("queue-capacity", DEFAULT_QUEUE_CAPACITY)
+        .map_err(anyhow::Error::msg)?;
+    let http_workers = args.get_usize("http-workers", 4).map_err(anyhow::Error::msg)?;
+    let registry = load_registry(args)?;
+    let names = registry.names();
+
+    let coord = Arc::new(Coordinator::start_pool(
+        Arc::clone(&registry),
+        PoolConfig {
+            shards,
+            queue_capacity,
+            batch: BatchConfig {
+                max_batch,
+                ..BatchConfig::default()
+            },
+        },
+    ));
+    let cfg = ServerConfig {
+        addr: args.get_or("listen", "127.0.0.1:0"),
+        http_workers,
+        ..ServerConfig::default()
+    };
+    let state = ServerState::new(Arc::clone(&coord));
+    let server = HttpServer::start(&cfg, Arc::clone(&state))?;
+    println!(
+        "listening on http://{} — {} http worker(s) over {} shard(s) \
+         (queue {queue_capacity}/shard), serving {}",
+        server.local_addr(),
+        http_workers,
+        coord.shard_count(),
+        names.join(", ")
+    );
+    println!(
+        "endpoints: POST /v1/classify · GET /healthz · GET /metrics · \
+         POST /admin/models · POST /admin/shutdown"
+    );
+    // Resident until an admin shutdown flips the drain flag.
+    server.join();
+    drop(state);
+    // The HTTP layer is drained; now drain the pool itself. All server
+    // clones of the coordinator Arc are gone once the workers joined, so
+    // this normally takes the full-shutdown path.
+    let snap = match Arc::try_unwrap(coord) {
+        Ok(coord) => coord.shutdown(),
+        Err(coord) => coord.metrics(),
+    };
+    println!("drained after {} request(s); final metrics:", snap.requests);
+    println!("{}", snap.to_json().to_string_pretty());
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_http(args);
+    }
     if pool_mode_requested(args) {
         return cmd_serve_pool(args);
     }

@@ -387,13 +387,42 @@ pub fn load_checkpoint(path: &Path) -> Result<TrainCheckpoint, ModelIoError> {
 /// cifar10-32x32  = /srv/models/cifar10.cctm
 /// ```
 pub fn read_manifest(path: &Path) -> Result<Vec<(String, PathBuf)>, ModelIoError> {
-    let err = |reason: String| ModelIoError::Manifest {
-        path: path.display().to_string(),
-        reason,
-    };
     let text = std::fs::read_to_string(path)?;
     let base = path.parent().unwrap_or_else(|| Path::new("."));
-    let mut out: Vec<(String, PathBuf)> = Vec::new();
+    let entries = parse_manifest(&text, &path.display().to_string())?;
+    Ok(entries
+        .into_iter()
+        .map(|(name, file)| {
+            let file = PathBuf::from(file);
+            let file = if file.is_absolute() {
+                file
+            } else {
+                base.join(file)
+            };
+            (name, file)
+        })
+        .collect())
+}
+
+/// Parse manifest *text* into `(name, raw path)` pairs — the shared core
+/// of [`read_manifest`] and the server's `POST /admin/models` body (which
+/// has no backing file to resolve relative paths against, so paths come
+/// back unresolved). `source` names the origin in errors (a file path, or
+/// "request body").
+///
+/// A duplicated model name is a hard error naming *both* lines — the
+/// duplicate and the line it collides with — because silently letting the
+/// last line win would make a fat-fingered deploy overwrite the wrong
+/// model with nothing in the logs.
+pub fn parse_manifest(text: &str, source: &str) -> Result<Vec<(String, String)>, ModelIoError> {
+    let err = |reason: String| ModelIoError::Manifest {
+        path: source.to_string(),
+        reason,
+    };
+    let mut out: Vec<(String, String)> = Vec::new();
+    // Manifest-line number of each name's first definition, for the
+    // duplicate error (out itself holds no line info).
+    let mut defined_at: Vec<(String, usize)> = Vec::new();
     for (i, raw) in text.lines().enumerate() {
         let line = raw.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -409,16 +438,15 @@ pub fn read_manifest(path: &Path) -> Result<Vec<(String, PathBuf)>, ModelIoError
         if name.is_empty() || file.is_empty() {
             return Err(err(format!("line {}: empty model name or path", i + 1)));
         }
-        if out.iter().any(|(n, _)| n == name) {
-            return Err(err(format!("line {}: duplicate model name '{name}'", i + 1)));
+        if let Some((_, first)) = defined_at.iter().find(|(n, _)| n == name) {
+            return Err(err(format!(
+                "line {}: duplicate model name '{name}' (first defined on line {first}; \
+                 each name must appear once — last-wins would silently drop a deploy)",
+                i + 1
+            )));
         }
-        let file = PathBuf::from(file);
-        let file = if file.is_absolute() {
-            file
-        } else {
-            base.join(file)
-        };
-        out.push((name.to_string(), file));
+        defined_at.push((name.to_string(), i + 1));
+        out.push((name.to_string(), file.to_string()));
     }
     Ok(out)
 }
@@ -570,11 +598,32 @@ mod tests {
         std::fs::write(&path, "mnist rel/a.cctm\n").unwrap();
         let e = read_manifest(&path).unwrap_err();
         assert!(e.to_string().contains("line 1"), "{e}");
-        // Duplicate names are rejected.
-        std::fs::write(&path, "m = a.cctm\nm = b.cctm\n").unwrap();
+        // Duplicate names are rejected, naming both offending lines.
+        std::fs::write(&path, "m = a.cctm\nother = c.cctm\nm = b.cctm\n").unwrap();
         let e = read_manifest(&path).unwrap_err();
-        assert!(e.to_string().contains("duplicate"), "{e}");
+        let msg = e.to_string();
+        assert!(msg.contains("duplicate model name 'm'"), "{msg}");
+        assert!(msg.contains("line 3"), "duplicate line: {msg}");
+        assert!(msg.contains("line 1"), "first-definition line: {msg}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parse_manifest_text_keeps_paths_unresolved() {
+        // The admin-endpoint entry point: raw text, no backing file.
+        let entries =
+            parse_manifest("# deploy\nmnist = rel/a.cctm\nlive = -\n", "request body").unwrap();
+        assert_eq!(
+            entries,
+            vec![
+                ("mnist".to_string(), "rel/a.cctm".to_string()),
+                ("live".to_string(), "-".to_string()),
+            ]
+        );
+        let e = parse_manifest("a = x\nb = y\na = z\n", "request body").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("request body"), "{msg}");
+        assert!(msg.contains("line 3") && msg.contains("line 1"), "{msg}");
     }
 
     #[test]

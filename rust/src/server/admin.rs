@@ -1,0 +1,138 @@
+//! Operational endpoints: health, metrics and runtime model
+//! administration over the registry's zero-drop hot-swap.
+
+use super::http::{Request, Response};
+use super::ServerState;
+use crate::model_io;
+use crate::util::Json;
+use std::path::PathBuf;
+
+/// `GET /healthz` — liveness plus what the process is serving.
+pub fn healthz(state: &ServerState) -> Response {
+    let models = match &state.registry {
+        Some(r) => Json::arr(r.names().into_iter().map(Json::str)),
+        None => Json::Arr(Vec::new()),
+    };
+    Response::json(
+        200,
+        &Json::obj([
+            ("status", Json::str("ok")),
+            ("shards", Json::num(state.coord.shard_count() as f64)),
+            ("models", models),
+            ("draining", Json::Bool(state.shutdown_requested())),
+        ]),
+    )
+}
+
+/// `GET /metrics` — the pool's aggregate [`MetricsSnapshot`] JSON (the
+/// same `to_json` the CLI summary prints) plus the HTTP-layer counters
+/// under `"http"`.
+///
+/// [`MetricsSnapshot`]: crate::coordinator::MetricsSnapshot
+pub fn metrics(state: &ServerState) -> Response {
+    let mut snapshot = state.coord.metrics().to_json();
+    if let Json::Obj(map) = &mut snapshot {
+        map.insert("http".to_string(), state.stats.to_json());
+    }
+    Response::json(200, &snapshot)
+}
+
+/// `POST /admin/models` — apply a manifest body to the live registry.
+///
+/// The body is the same `name = path` format as a serving manifest file
+/// (`model_io::read_manifest`), with one addition: the path `-` evicts
+/// the named model. Loads use [`ModelRegistry::publish`] — insert on
+/// first use, hot-swap thereafter — so a deploy under sustained traffic
+/// completes with zero dropped or mis-versioned responses (the §8
+/// ordering guarantee). Relative paths resolve against the server
+/// process's working directory.
+///
+/// Lines apply in order; on a failing line the earlier lines *have taken
+/// effect* (the error says how many), matching the per-line semantics of
+/// a manifest file load.
+///
+/// [`ModelRegistry::publish`]: crate::coordinator::ModelRegistry::publish
+pub fn models(state: &ServerState, req: &Request) -> Response {
+    let Some(registry) = &state.registry else {
+        return Response::error(
+            409,
+            "this server fronts a single anonymous backend; model administration \
+             requires a registry pool (serve with --model NAME=PATH / --manifest)",
+        );
+    };
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return Response::error(400, "manifest body is not UTF-8");
+    };
+    let entries = match model_io::parse_manifest(text, "request body") {
+        Ok(entries) => entries,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    if entries.is_empty() {
+        return Response::error(400, "manifest body names no models");
+    }
+    let mut published: Vec<(String, u64)> = Vec::new();
+    let mut evicted: Vec<String> = Vec::new();
+    let applied_so_far = |published: &[(String, u64)], evicted: &[String]| {
+        format!(
+            "(after {} published / {} evicted line(s) already applied)",
+            published.len(),
+            evicted.len()
+        )
+    };
+    for (name, path) in entries {
+        if path == "-" {
+            if registry.evict(&name).is_none() {
+                return Response::error(
+                    404,
+                    &format!(
+                        "cannot evict '{name}': not loaded {}",
+                        applied_so_far(&published, &evicted)
+                    ),
+                );
+            }
+            evicted.push(name);
+            continue;
+        }
+        let model = match model_io::load_file_auto(&PathBuf::from(&path)) {
+            Ok(m) => m,
+            Err(e) => {
+                return Response::error(
+                    400,
+                    &format!("'{name}': {e} {}", applied_so_far(&published, &evicted)),
+                );
+            }
+        };
+        match registry.publish(&name, model) {
+            Ok(entry) => published.push((entry.name.clone(), entry.version)),
+            Err(e) => {
+                return Response::error(
+                    400,
+                    &format!("'{name}': {e} {}", applied_so_far(&published, &evicted)),
+                );
+            }
+        }
+    }
+    let published = Json::Obj(
+        published
+            .into_iter()
+            .map(|(name, version)| (name, Json::num(version as f64)))
+            .collect(),
+    );
+    let body = Json::obj([
+        ("published", published),
+        ("evicted", Json::arr(evicted.into_iter().map(Json::str))),
+    ]);
+    Response::json(200, &body)
+}
+
+/// `POST /admin/shutdown` — begin the drain and confirm. Ordering: the
+/// flag flips before the response is written, the acceptor stops within
+/// its poll interval, every in-flight request finishes, keep-alive
+/// connections close after their current response, workers join. The
+/// coordinator itself is drained by whoever owns it (the CLI calls
+/// `Coordinator::shutdown` after `HttpServer::join` returns), so queued
+/// classifications always complete.
+pub fn shutdown(state: &ServerState) -> Response {
+    state.request_shutdown();
+    Response::json(200, &Json::obj([("draining", Json::Bool(true))])).closing()
+}

@@ -1,0 +1,737 @@
+//! Incremental HTTP/1.1 request parser and response serializer — the wire
+//! layer of the network front door (std-only; no HTTP crate is vendored in
+//! this offline build).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Never panic on network input.** Every malformed, truncated,
+//!    oversized or hostile byte stream maps to a typed [`HttpError`] whose
+//!    [`HttpError::status`] is the 4xx/5xx to answer with (property-tested
+//!    in `tests/http_server.rs`).
+//! 2. **Hard caps before allocation grows.** The request head is bounded
+//!    by [`Limits::max_head_bytes`] (431 beyond it) and the body by
+//!    [`Limits::max_body_bytes`] (413), checked against the declared
+//!    `Content-Length` *before* the body is read — a hostile
+//!    `Content-Length: 999999999999` never allocates.
+//! 3. **Keep-alive with pipelining.** [`HttpConn`] buffers unconsumed
+//!    bytes across requests, so back-to-back requests on one connection
+//!    parse in sequence without re-reading the socket.
+//!
+//! Scope: `Content-Length` bodies only. `Transfer-Encoding` (chunked) is
+//! answered with 501 — the classify/admin wire format (`server::proto`)
+//! never needs it, and rejecting it closes the request-smuggling corner
+//! outright.
+
+use std::io::{Read, Write};
+
+/// Default cap on the request head (request line + headers).
+pub const DEFAULT_MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Default cap on the request body. Sized for the largest supported
+/// classify batch (1024 images × 4096 pixels as JSON numbers).
+pub const DEFAULT_MAX_BODY_BYTES: usize = 32 * 1024 * 1024;
+/// Cap on the number of request headers.
+pub const MAX_HEADERS: usize = 64;
+
+/// Read-side chunk size; also bounds how far past the current request a
+/// single fill can buffer (pipelined bytes are kept for the next parse).
+const READ_CHUNK: usize = 8 * 1024;
+
+/// Default wall-clock budget for receiving one complete message.
+pub const DEFAULT_MAX_MESSAGE_TIME: std::time::Duration = std::time::Duration::from_secs(20);
+
+/// Size caps applied while parsing one request.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    pub max_head_bytes: usize,
+    pub max_body_bytes: usize,
+    /// Wall-clock budget for one complete message, enforced across reads.
+    /// The per-read socket timeout alone does not bound a drip-feeding
+    /// peer (1 byte per interval resets it forever); this deadline does —
+    /// it starts at the message's first buffered byte and trips
+    /// [`HttpError::Timeout`] when exceeded, so a slow-loris connection is
+    /// dropped no matter how cleverly it paces its bytes.
+    pub max_message_time: std::time::Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_head_bytes: DEFAULT_MAX_HEAD_BYTES,
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+            max_message_time: DEFAULT_MAX_MESSAGE_TIME,
+        }
+    }
+}
+
+/// Parse/transport failure for one request. [`HttpError::status`] gives
+/// the response status; `None` means the connection is unusable (raw I/O
+/// failure) and must simply be dropped.
+#[derive(Debug, thiserror::Error)]
+pub enum HttpError {
+    #[error("malformed request: {0}")]
+    Bad(String),
+    #[error("request head exceeds the {0}-byte cap")]
+    HeadTooLarge(usize),
+    #[error("request body of {got} bytes exceeds the {cap}-byte cap")]
+    BodyTooLarge { got: usize, cap: usize },
+    #[error("unsupported protocol version '{0}' (expected HTTP/1.0 or HTTP/1.1)")]
+    Version(String),
+    #[error("transfer-encoding '{0}' is not supported (use Content-Length)")]
+    NotImplemented(String),
+    #[error("timed out reading the request")]
+    Timeout,
+    #[error("connection error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl HttpError {
+    /// The status code this failure is answered with (always 4xx/5xx),
+    /// or `None` when no response can be written at all.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Bad(_) => Some(400),
+            HttpError::HeadTooLarge(_) => Some(431),
+            HttpError::BodyTooLarge { .. } => Some(413),
+            HttpError::Version(_) => Some(505),
+            HttpError::NotImplemented(_) => Some(501),
+            HttpError::Timeout => Some(408),
+            HttpError::Io(_) => None,
+        }
+    }
+}
+
+/// One parsed request. Header names are lower-cased at parse time.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Request target up to (excluding) any `?query`.
+    pub path: String,
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    keep_alive: bool,
+}
+
+impl Request {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == lower)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// default, overridable by `Connection: close` / `keep-alive`).
+    pub fn keep_alive(&self) -> bool {
+        self.keep_alive
+    }
+}
+
+/// A response head read back by a client ([`HttpConn::read_response`]) —
+/// used by the load-generator example, benches and loopback tests.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == lower)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A buffered HTTP connection over any `Read` (+`Write`) transport.
+/// Leftover bytes after one message are retained for the next, which is
+/// what makes keep-alive pipelining work.
+pub struct HttpConn<S> {
+    stream: S,
+    buf: Vec<u8>,
+}
+
+impl<S> HttpConn<S> {
+    pub fn new(stream: S) -> Self {
+        HttpConn {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Bytes buffered but not yet consumed by a parse. Non-zero after a
+    /// [`HttpError::Timeout`] means the peer stalled *mid-request* (answer
+    /// 408); zero means an idle keep-alive connection simply went quiet.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// The underlying transport (for writing responses/requests).
+    pub fn get_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+}
+
+impl<S: Read> HttpConn<S> {
+    /// Read more bytes into the buffer. Returns the count (0 = EOF).
+    fn fill(&mut self) -> Result<usize, HttpError> {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(HttpError::Timeout)
+                }
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+    }
+
+    /// [`Self::fill`] that also enforces the whole-message deadline. The
+    /// deadline only bites once the message has started (some bytes are
+    /// buffered): a quiet idle keep-alive connection is governed by the
+    /// socket read timeout alone.
+    fn fill_by(&mut self, deadline: std::time::Instant) -> Result<usize, HttpError> {
+        if !self.buf.is_empty() && std::time::Instant::now() >= deadline {
+            return Err(HttpError::Timeout);
+        }
+        self.fill()
+    }
+
+    /// Buffer until the head terminator (`\r\n\r\n`) is in view; returns
+    /// the byte offset of the terminator. `Ok(None)` = clean EOF before
+    /// any byte of a new message (normal keep-alive close).
+    fn buffer_head(
+        &mut self,
+        max_head: usize,
+        deadline: std::time::Instant,
+    ) -> Result<Option<usize>, HttpError> {
+        loop {
+            if let Some(p) = find_head_end(&self.buf) {
+                if p > max_head {
+                    return Err(HttpError::HeadTooLarge(max_head));
+                }
+                return Ok(Some(p));
+            }
+            if self.buf.len() > max_head {
+                return Err(HttpError::HeadTooLarge(max_head));
+            }
+            if self.fill_by(deadline)? == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::Bad("connection closed mid-head".into()));
+            }
+        }
+    }
+
+    /// Buffer the message body (`need` bytes after `head_end + 4`), then
+    /// split it out and drop the consumed prefix from the buffer.
+    fn take_body(
+        &mut self,
+        head_end: usize,
+        need: usize,
+        deadline: std::time::Instant,
+    ) -> Result<Vec<u8>, HttpError> {
+        let body_start = head_end + 4;
+        while self.buf.len() < body_start + need {
+            if self.fill_by(deadline)? == 0 {
+                return Err(HttpError::Bad("connection closed mid-body".into()));
+            }
+        }
+        let body = self.buf[body_start..body_start + need].to_vec();
+        self.buf.drain(..body_start + need);
+        Ok(body)
+    }
+
+    /// Parse the next request off the connection. `Ok(None)` = clean EOF
+    /// between requests (the peer is done). Errors leave the connection
+    /// unusable for further requests: answer [`HttpError::status`] with
+    /// `Connection: close` and drop it.
+    pub fn read_request(&mut self, limits: &Limits) -> Result<Option<Request>, HttpError> {
+        let deadline = std::time::Instant::now() + limits.max_message_time;
+        let Some(head_end) = self.buffer_head(limits.max_head_bytes, deadline)? else {
+            return Ok(None);
+        };
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| HttpError::Bad("request head is not UTF-8".into()))?;
+        let (request_line, header_block) = match head.split_once("\r\n") {
+            Some((rl, rest)) => (rl, rest),
+            None => (head, ""),
+        };
+        let mut parts = request_line.split(' ');
+        let method = parts.next().unwrap_or("");
+        let target = parts.next().unwrap_or("");
+        let version = parts.next().unwrap_or("");
+        if method.is_empty() || target.is_empty() || parts.next().is_some() {
+            return Err(HttpError::Bad(format!(
+                "bad request line '{}'",
+                truncate_for_log(request_line)
+            )));
+        }
+        if !method.bytes().all(|b| b.is_ascii_alphabetic()) {
+            return Err(HttpError::Bad(format!(
+                "bad method '{}'",
+                truncate_for_log(method)
+            )));
+        }
+        let http11 = match version {
+            "HTTP/1.1" => true,
+            "HTTP/1.0" => false,
+            other => return Err(HttpError::Version(truncate_for_log(other))),
+        };
+        if !target.starts_with('/') {
+            return Err(HttpError::Bad(format!(
+                "request target '{}' must be origin-form (start with '/')",
+                truncate_for_log(target)
+            )));
+        }
+        let headers = parse_headers(header_block)?;
+
+        // Connection semantics before the body, so even a body-less parse
+        // error can honour the close request.
+        let conn_header = header_lookup(&headers, "connection").unwrap_or("");
+        let keep_alive = if http11 {
+            !conn_header.eq_ignore_ascii_case("close")
+        } else {
+            conn_header.eq_ignore_ascii_case("keep-alive")
+        };
+
+        let body_len = body_length(&headers, limits)?;
+
+        let (method, target) = (method.to_string(), target.to_string());
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), Some(q.to_string())),
+            None => (target, None),
+        };
+        let body = self.take_body(head_end, body_len, deadline)?;
+        Ok(Some(Request {
+            method,
+            path,
+            query,
+            headers,
+            body,
+            keep_alive,
+        }))
+    }
+
+    /// Client side: parse the next response. Same caps and buffering rules
+    /// as [`Self::read_request`]; `Ok(None)` = clean EOF before a byte.
+    pub fn read_response(&mut self, limits: &Limits) -> Result<Option<ClientResponse>, HttpError> {
+        let deadline = std::time::Instant::now() + limits.max_message_time;
+        let Some(head_end) = self.buffer_head(limits.max_head_bytes, deadline)? else {
+            return Ok(None);
+        };
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| HttpError::Bad("response head is not UTF-8".into()))?;
+        let (status_line, header_block) = match head.split_once("\r\n") {
+            Some((sl, rest)) => (sl, rest),
+            None => (head, ""),
+        };
+        let mut parts = status_line.splitn(3, ' ');
+        let version = parts.next().unwrap_or("");
+        let code = parts.next().unwrap_or("");
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpError::Bad(format!(
+                "bad status line '{}'",
+                truncate_for_log(status_line)
+            )));
+        }
+        let status: u16 = code
+            .parse()
+            .map_err(|_| HttpError::Bad(format!("bad status code '{}'", truncate_for_log(code))))?;
+        let headers = parse_headers(header_block)?;
+        let body_len = body_length(&headers, limits)?;
+        let body = self.take_body(head_end, body_len, deadline)?;
+        Ok(Some(ClientResponse {
+            status,
+            headers,
+            body,
+        }))
+    }
+}
+
+/// Declared body length, validated against the caps *before* any body
+/// byte is read (a hostile `Content-Length` never allocates). Chunked
+/// transfer coding is out of scope and answered with 501.
+fn body_length(headers: &[(String, String)], limits: &Limits) -> Result<usize, HttpError> {
+    if let Some(te) = header_lookup(headers, "transfer-encoding") {
+        return Err(HttpError::NotImplemented(truncate_for_log(te)));
+    }
+    let body_len = match header_lookup(headers, "content-length") {
+        None => 0usize,
+        Some(v) => v.trim().parse::<usize>().map_err(|_| {
+            HttpError::Bad(format!("bad content-length '{}'", truncate_for_log(v)))
+        })?,
+    };
+    if body_len > limits.max_body_bytes {
+        return Err(HttpError::BodyTooLarge {
+            got: body_len,
+            cap: limits.max_body_bytes,
+        });
+    }
+    Ok(body_len)
+}
+
+/// Offset of the first `\r\n\r\n` in `buf`, if buffered.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_headers(block: &str) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    for line in block.split("\r\n") {
+        if line.is_empty() {
+            // split() yields one empty item for an empty block.
+            continue;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::Bad(format!("more than {MAX_HEADERS} headers")));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::Bad(format!(
+                "header line '{}' has no ':'",
+                truncate_for_log(line)
+            )));
+        };
+        let name = name.trim();
+        if name.is_empty()
+            || !name
+                .bytes()
+                .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+        {
+            return Err(HttpError::Bad(format!(
+                "bad header name '{}'",
+                truncate_for_log(name)
+            )));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok(headers)
+}
+
+fn header_lookup<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| v.as_str())
+}
+
+/// Clip attacker-controlled text before embedding it in an error message.
+fn truncate_for_log(s: &str) -> String {
+    const CAP: usize = 64;
+    if s.len() <= CAP {
+        s.to_string()
+    } else {
+        let mut end = CAP;
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        format!("{}…", &s[..end])
+    }
+}
+
+/// An outgoing response: status, extra headers, JSON (or plain) body.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Force `Connection: close` regardless of the request's keep-alive.
+    pub close: bool,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &crate::util::Json) -> Response {
+        let mut body = v.to_string_compact().into_bytes();
+        body.push(b'\n');
+        Response {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body,
+            close: false,
+        }
+    }
+
+    /// A `{"error": msg}` JSON body with the given status.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let body = crate::util::Json::obj([("error", crate::util::Json::str(msg))]);
+        Response::json(status, &body)
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn closing(mut self) -> Response {
+        self.close = true;
+        self
+    }
+
+    /// Serialize to the transport. `keep_alive` reflects the *request's*
+    /// wish; `self.close` overrides it.
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        if self.close || !keep_alive {
+            head.push_str("connection: close\r\n");
+        }
+        for (name, value) in &self.headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Canonical reason phrases for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "",
+    }
+}
+
+/// Client side: serialize a request (used by the load-generator example,
+/// the bench's HTTP rows and the loopback tests).
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!("{method} {path} HTTP/1.1\r\nhost: convcotm\r\n");
+    if !body.is_empty() {
+        head.push_str("content-type: application/json\r\n");
+    }
+    head.push_str(&format!("content-length: {}\r\n", body.len()));
+    if !keep_alive {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Option<Request>, HttpError> {
+        HttpConn::new(Cursor::new(bytes.to_vec())).read_request(&Limits::default())
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let req = parse(
+            b"POST /v1/classify?debug=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/classify");
+        assert_eq!(req.query.as_deref(), Some("debug=1"));
+        assert_eq!(req.body, b"hello");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn connection_close_and_http10_semantics() {
+        let req = parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!req.keep_alive());
+        let req = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive(), "HTTP/1.0 defaults to close");
+        let req = parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_sequence() {
+        let bytes = b"POST /a HTTP/1.1\r\ncontent-length: 2\r\n\r\nxyGET /b HTTP/1.1\r\n\r\n";
+        let mut conn = HttpConn::new(Cursor::new(bytes.to_vec()));
+        let a = conn.read_request(&Limits::default()).unwrap().unwrap();
+        assert_eq!((a.path.as_str(), a.body.as_slice()), ("/a", b"xy".as_slice()));
+        let b = conn.read_request(&Limits::default()).unwrap().unwrap();
+        assert_eq!(b.path, "/b");
+        assert!(conn.read_request(&Limits::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_truncation_is_400() {
+        assert!(parse(b"").unwrap().is_none());
+        let full = b"POST / HTTP/1.1\r\ncontent-length: 4\r\n\r\nbody";
+        for cut in 1..full.len() {
+            let e = parse(&full[..cut]).unwrap_err();
+            assert_eq!(e.status(), Some(400), "cut at {cut}: {e}");
+        }
+        assert!(parse(full).unwrap().is_some());
+    }
+
+    #[test]
+    fn declared_oversized_body_is_413_without_reading_it() {
+        let limits = Limits {
+            max_head_bytes: 1024,
+            max_body_bytes: 64,
+            ..Limits::default()
+        };
+        // Only the head is provided — the 413 must fire from the declared
+        // length alone.
+        let bytes = b"POST / HTTP/1.1\r\ncontent-length: 999999999\r\n\r\n";
+        let e = HttpConn::new(Cursor::new(bytes.to_vec()))
+            .read_request(&limits)
+            .unwrap_err();
+        assert_eq!(e.status(), Some(413), "{e}");
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let limits = Limits {
+            max_head_bytes: 128,
+            max_body_bytes: 64,
+            ..Limits::default()
+        };
+        let mut bytes = b"GET / HTTP/1.1\r\nx-pad: ".to_vec();
+        bytes.extend_from_slice(&[b'a'; 4096]);
+        let e = HttpConn::new(Cursor::new(bytes))
+            .read_request(&limits)
+            .unwrap_err();
+        assert_eq!(e.status(), Some(431), "{e}");
+    }
+
+    #[test]
+    fn bad_version_chunked_and_garbage_map_to_4xx_5xx() {
+        let e = parse(b"GET / HTTP/2.0\r\n\r\n").unwrap_err();
+        assert_eq!(e.status(), Some(505), "{e}");
+        let e = parse(b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n").unwrap_err();
+        assert_eq!(e.status(), Some(501), "{e}");
+        let cases: [&[u8]; 8] = [
+            b"\x00\x01\x02\r\n\r\n",
+            b"GET\r\n\r\n",
+            b"GET / HTTP/1.1 extra\r\n\r\n",
+            b"G@T / HTTP/1.1\r\n\r\n",
+            b"GET noslash HTTP/1.1\r\n\r\n",
+            b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            b"GET / HTTP/1.1\r\n: empty-name\r\n\r\n",
+            b"GET / HTTP/1.1\r\ncontent-length: ten\r\n\r\n",
+        ];
+        for garbage in cases {
+            let e = parse(garbage).unwrap_err();
+            assert_eq!(e.status(), Some(400), "{e}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_reader() {
+        let resp = Response::json(
+            200,
+            &crate::util::Json::obj([("ok", crate::util::Json::Bool(true))]),
+        )
+        .with_header("retry-after", "1");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let back = HttpConn::new(Cursor::new(wire))
+            .read_response(&Limits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(back.status, 200);
+        assert_eq!(back.header("retry-after"), Some("1"));
+        assert_eq!(back.header("content-type"), Some("application/json"));
+        let v = crate::util::Json::parse(std::str::from_utf8(&back.body).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+    }
+
+    /// Never blocks, yields one byte per read — the pathological pacing a
+    /// per-read timeout cannot catch.
+    struct DripReader {
+        data: Vec<u8>,
+        pos: usize,
+    }
+
+    impl std::io::Read for DripReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() || out.is_empty() {
+                return Ok(0);
+            }
+            out[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn drip_fed_message_trips_the_whole_message_deadline() {
+        let data = b"POST / HTTP/1.1\r\ncontent-length: 4\r\n\r\nbody".to_vec();
+        // Zero whole-message budget: the parse must 408 after the first
+        // byte instead of following the drip to completion.
+        let limits = Limits {
+            max_message_time: std::time::Duration::ZERO,
+            ..Limits::default()
+        };
+        let e = HttpConn::new(DripReader {
+            data: data.clone(),
+            pos: 0,
+        })
+        .read_request(&limits)
+        .unwrap_err();
+        assert_eq!(e.status(), Some(408), "{e}");
+        // The same drip parses fine under the default budget.
+        let req = HttpConn::new(DripReader { data, pos: 0 })
+            .read_request(&Limits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.body, b"body");
+    }
+
+    #[test]
+    fn error_log_text_is_truncated() {
+        let long = "x".repeat(500);
+        let e = parse(format!("GET /{long} BAD/9\r\n\r\n").as_bytes()).unwrap_err();
+        assert!(e.to_string().len() < 200, "{e}");
+    }
+}

@@ -1,0 +1,407 @@
+//! The network front door (L4): a dependency-light HTTP/1.1 server over
+//! the shard-pool coordinator — the software counterpart of the chip's AXI
+//! system-bus interface (§VI), scaled from one memory-mapped stream to
+//! keep-alive TCP clients.
+//!
+//! Std-only by design (`TcpListener` + a sized worker pool; no async
+//! runtime, no HTTP crate): the serving hot path is already thread-per-
+//! shard, so the front door only needs enough concurrency to keep the
+//! shard queues fed, and a bounded connection-worker pool does that with
+//! backpressure the same way the coordinator's bounded queues do.
+//!
+//! ```text
+//!   clients ──► acceptor ──► [conn queue ≤ P] ──► http workers (N threads)
+//!                 │ full? 503 + Retry-After          │ parse → route
+//!                 ▼                                  ▼
+//!              TcpListener                 Coordinator::try_submit_to
+//!                                          (Overloaded → 503 + Retry-After)
+//! ```
+//!
+//! Endpoints (`server::proto` + `server::admin`):
+//!
+//! - `POST /v1/classify` — single image or batch; booleanized bits or raw
+//!   u8 pixels (booleanized server-side via `data::boolean`); optional
+//!   `model` routed through the registry. Responses carry the predicted
+//!   class, per-class sums and the serving model version.
+//! - `GET  /healthz` — liveness + loaded models.
+//! - `GET  /metrics` — the pool's [`MetricsSnapshot`] JSON plus HTTP-layer
+//!   counters.
+//! - `POST /admin/models` — publish/evict models from a manifest body
+//!   (zero-drop hot-swap via `ModelRegistry::publish`).
+//! - `POST /admin/shutdown` — drain: stop accepting, finish in-flight
+//!   work, join the workers.
+//!
+//! Backpressure end-to-end: the connection queue is bounded (overflow is
+//! answered 503 before a worker is tied up), classify submissions use
+//! `try_submit_to` (a full shard pool sheds 503 + `Retry-After` instead of
+//! blocking an HTTP worker), and reads are bounded twice over — a per-read
+//! socket timeout ([`ServerConfig::read_timeout`]) for quiet peers plus a
+//! whole-message deadline ([`Limits::max_message_time`]) that a slow-loris
+//! peer cannot reset by dripping one byte per interval.
+
+pub mod admin;
+pub mod http;
+pub mod proto;
+
+pub use http::{ClientResponse, HttpConn, HttpError, Limits, Request, Response};
+
+use crate::coordinator::{Coordinator, ModelRegistry};
+use crate::util::Json;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Front-door sizing and policy.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port — read it back
+    /// from [`HttpServer::local_addr`]).
+    pub addr: String,
+    /// Connection-worker threads (each drives one connection at a time).
+    pub http_workers: usize,
+    /// Bound on accepted-but-unclaimed connections; overflow is answered
+    /// `503` + `Retry-After` without tying up a worker.
+    pub max_pending_conns: usize,
+    /// Request head/body size caps.
+    pub limits: Limits,
+    /// Socket read timeout: the longest a slow (or idle keep-alive) peer
+    /// can hold a worker between bytes. Also bounds how long a drain waits
+    /// on idle connections.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            http_workers: 4,
+            max_pending_conns: 64,
+            limits: Limits::default(),
+            read_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// HTTP-layer counters, reported under `"http"` in `GET /metrics`.
+/// Relaxed atomics: each is a monotone event count, never read-modify-
+/// written against another.
+#[derive(Default)]
+pub struct HttpStats {
+    pub connections: AtomicU64,
+    /// Connections shed at the acceptor (connection queue full).
+    pub rejected_conns: AtomicU64,
+    pub requests: AtomicU64,
+    pub responses_2xx: AtomicU64,
+    pub responses_4xx: AtomicU64,
+    pub responses_5xx: AtomicU64,
+    /// Classify requests shed because every shard queue was full.
+    pub shed_503: AtomicU64,
+    /// Connections dropped mid-request on a read timeout (slow-loris).
+    pub read_timeouts: AtomicU64,
+}
+
+impl HttpStats {
+    fn count_response(&self, status: u16) {
+        let bucket = match status {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        bucket.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let n = |a: &AtomicU64| Json::num(a.load(Ordering::Relaxed) as f64);
+        Json::obj([
+            ("connections", n(&self.connections)),
+            ("rejected_conns", n(&self.rejected_conns)),
+            ("requests", n(&self.requests)),
+            ("responses_2xx", n(&self.responses_2xx)),
+            ("responses_4xx", n(&self.responses_4xx)),
+            ("responses_5xx", n(&self.responses_5xx)),
+            ("shed_503", n(&self.shed_503)),
+            ("read_timeouts", n(&self.read_timeouts)),
+        ])
+    }
+}
+
+/// Everything a connection worker needs, shared via `Arc`.
+pub struct ServerState {
+    pub coord: Arc<Coordinator>,
+    /// The pool's registry (None when fronting a single anonymous
+    /// backend — `/admin/models` then answers 409).
+    pub registry: Option<Arc<ModelRegistry>>,
+    pub stats: HttpStats,
+    shutdown: AtomicBool,
+}
+
+impl ServerState {
+    /// Build the shared state; the registry handle is taken from the
+    /// coordinator (present in pool mode, absent in backend mode).
+    pub fn new(coord: Arc<Coordinator>) -> Arc<ServerState> {
+        let registry = coord.registry().cloned();
+        Arc::new(ServerState {
+            coord,
+            registry,
+            stats: HttpStats::default(),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Begin the drain: the acceptor stops accepting, keep-alive
+    /// connections close after their in-flight request, workers join.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+/// A running front door. Dropping it (or calling [`HttpServer::join`]
+/// after a shutdown request) drains and joins every thread.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    state: Arc<ServerState>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and start the acceptor + worker pool. The server runs until
+    /// `POST /admin/shutdown` or [`ServerState::request_shutdown`].
+    pub fn start(cfg: &ServerConfig, state: Arc<ServerState>) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("cannot listen on {}: {e}", cfg.addr))?;
+        // Non-blocking accept so the acceptor can observe the shutdown
+        // flag without a wake-up connection.
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.max_pending_conns.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let workers: Vec<JoinHandle<()>> = (0..cfg.http_workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&conn_rx);
+                let st = Arc::clone(&state);
+                let (limits, read_timeout) = (cfg.limits, cfg.read_timeout);
+                std::thread::Builder::new()
+                    .name(format!("convcotm-http-{i}"))
+                    .spawn(move || worker_loop(&rx, &st, &limits, read_timeout))
+                    .expect("spawn http worker")
+            })
+            .collect();
+        let st = Arc::clone(&state);
+        let acceptor = std::thread::Builder::new()
+            .name("convcotm-http-acceptor".into())
+            .spawn(move || acceptor_loop(&listener, &conn_tx, &st))
+            .expect("spawn http acceptor");
+        Ok(HttpServer {
+            local_addr,
+            state,
+            acceptor: Some(acceptor),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the chosen port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Programmatic equivalent of `POST /admin/shutdown`.
+    pub fn request_shutdown(&self) {
+        self.state.request_shutdown();
+    }
+
+    /// Block until the server drains: waits for a shutdown request, then
+    /// joins the acceptor and every worker. In-flight requests finish;
+    /// idle keep-alive connections close within one read-timeout.
+    pub fn join(mut self) {
+        self.join_inner();
+    }
+
+    fn join_inner(&mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        // Never leak the listener/worker threads: a dropped server drains
+        // exactly like an admin shutdown.
+        self.state.request_shutdown();
+        self.join_inner();
+    }
+}
+
+/// Accept loop: pull connections off the listener into the bounded
+/// connection queue; shed with a direct 503 when the queue is full. Exits
+/// (dropping the queue sender, which lets the workers drain and exit) as
+/// soon as shutdown is requested.
+fn acceptor_loop(listener: &TcpListener, conn_tx: &SyncSender<TcpStream>, state: &ServerState) {
+    while !state.shutdown_requested() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                state.stats.connections.fetch_add(1, Ordering::Relaxed);
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(stream)) | Err(TrySendError::Disconnected(stream)) => {
+                        state.stats.rejected_conns.fetch_add(1, Ordering::Relaxed);
+                        state.stats.count_response(503);
+                        reject_connection(stream);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept failure (EMFILE, aborted handshake…):
+                // back off briefly instead of spinning.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Best-effort 503 to a connection the queue has no room for.
+fn reject_connection(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let resp = Response::error(503, "connection queue full, retry shortly")
+        .with_header("retry-after", "1")
+        .closing();
+    let _ = resp.write_to(&mut stream, false);
+    drain_and_close(&mut stream);
+}
+
+/// Close politely after answering an error on a connection that may still
+/// be sending: half-close the write side, then discard (bounded) whatever
+/// the peer has in flight. Dropping the socket with unread bytes in the
+/// receive queue makes the kernel send RST, which destroys the error
+/// response before the client reads it — a 413 would surface as
+/// "connection reset" instead of a status. Draining is capped (1 MiB /
+/// 500 ms) so a hostile sender cannot pin the worker here either.
+fn drain_and_close(stream: &mut TcpStream) {
+    use std::io::Read as _;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut sink = [0u8; 4096];
+    for _ in 0..256 {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// Worker loop: claim one connection at a time off the shared queue and
+/// drive its keep-alive request cycle to completion.
+fn worker_loop(
+    rx: &Mutex<Receiver<TcpStream>>,
+    state: &ServerState,
+    limits: &Limits,
+    read_timeout: Duration,
+) {
+    loop {
+        // Hold the lock only for the dequeue; `recv` errors once the
+        // acceptor has exited and the queue is drained — that is the
+        // worker's drain-complete signal.
+        let stream = match rx.lock() {
+            Ok(guard) => match guard.recv() {
+                Ok(s) => s,
+                Err(_) => return,
+            },
+            Err(_) => return,
+        };
+        handle_connection(stream, state, limits, read_timeout);
+    }
+}
+
+/// Drive one connection: parse → route → respond, repeating while the
+/// client keeps the connection alive and no shutdown is in progress.
+fn handle_connection(
+    stream: TcpStream,
+    state: &ServerState,
+    limits: &Limits,
+    read_timeout: Duration,
+) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nodelay(true);
+    let mut conn = HttpConn::new(stream);
+    loop {
+        match conn.read_request(limits) {
+            Ok(None) => break, // peer closed cleanly between requests
+            Ok(Some(req)) => {
+                state.stats.requests.fetch_add(1, Ordering::Relaxed);
+                let resp = route(&req, state);
+                // The drain closes keep-alive connections after the
+                // response in flight (never mid-response).
+                let keep = req.keep_alive() && !resp.close && !state.shutdown_requested();
+                state.stats.count_response(resp.status);
+                if resp.write_to(conn.get_mut(), keep).is_err() || !keep {
+                    break;
+                }
+            }
+            Err(e) => {
+                if matches!(e, HttpError::Timeout) {
+                    if conn.pending() == 0 {
+                        // Idle keep-alive connection went quiet — close
+                        // silently; nothing was in flight.
+                        break;
+                    }
+                    // Bytes arrived and then stalled: slow-loris shape.
+                    state.stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(status) = e.status() {
+                    state.stats.count_response(status);
+                    let resp = Response::error(status, &e.to_string()).closing();
+                    let _ = resp.write_to(conn.get_mut(), false);
+                    // The peer may still be mid-send (oversized body, slow
+                    // drip): drain before dropping so the error response is
+                    // not RST away with the unread bytes.
+                    drain_and_close(conn.get_mut());
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Dispatch one parsed request. Unknown paths 404; known paths with the
+/// wrong method 405 + `Allow`.
+fn route(req: &Request, state: &ServerState) -> Response {
+    let allowed = match req.path.as_str() {
+        "/v1/classify" | "/admin/models" | "/admin/shutdown" => "POST",
+        "/healthz" | "/metrics" => "GET",
+        _ => {
+            return Response::error(404, &format!("no such endpoint '{}'", req.path));
+        }
+    };
+    if req.method != allowed {
+        return Response::error(
+            405,
+            &format!("{} requires {allowed}, got {}", req.path, req.method),
+        )
+        .with_header("allow", allowed);
+    }
+    match req.path.as_str() {
+        "/v1/classify" => proto::classify(state, req),
+        "/healthz" => admin::healthz(state),
+        "/metrics" => admin::metrics(state),
+        "/admin/models" => admin::models(state, req),
+        "/admin/shutdown" => admin::shutdown(state),
+        _ => unreachable!("path already matched above"),
+    }
+}

@@ -1,0 +1,311 @@
+//! The classify wire format: `POST /v1/classify`.
+//!
+//! Request body (JSON object):
+//!
+//! ```text
+//! {
+//!   "model":  "mnist-asic",          // optional registry id; omitted →
+//!                                    // the pool's default model
+//!   "image":  IMAGE                  // exactly one of image / images
+//!   "images": [IMAGE, ...]           // batch (≤ MAX_BATCH_IMAGES)
+//! }
+//!
+//! IMAGE := {"bits":   [0|1, ...]}                 // booleanized, square
+//!        | {"pixels": [0..255, ...],              // raw grayscale, square
+//!           "booleanize": "fixed" | "adaptive"}   // default "fixed";
+//!                                                 // applied server-side
+//!                                                 // via data::boolean
+//! ```
+//!
+//! Response `200`:
+//!
+//! ```text
+//! {"model": "mnist-asic", "count": 2,
+//!  "results": [{"class": 4, "model_version": 3, "class_sums": [ ... ]},
+//!              ...]}
+//! ```
+//!
+//! Status mapping: invalid body/shape/geometry → `400`; unknown model id
+//! → `404`; every shard queue full → `503` + `Retry-After` (the
+//! coordinator's typed `Overloaded` shed, end-to-end); coordinator gone →
+//! `500`. Images inside one batch are submitted individually, so they
+//! pipeline across shards exactly like native `submit_to` traffic.
+
+use super::http::{Request, Response};
+use super::ServerState;
+use crate::coordinator::RegistryError;
+use crate::data::boolean::{BoolImage, Booleanizer};
+use crate::util::Json;
+use std::sync::atomic::Ordering;
+
+/// Cap on images per classify call. Bounds per-request fan-out the same
+/// way `Limits::max_body_bytes` bounds bytes (a request held below both
+/// caps cannot monopolize the shard queues).
+pub const MAX_BATCH_IMAGES: usize = 1024;
+
+/// A parsed classify call.
+struct ClassifyCall {
+    model: Option<String>,
+    images: Vec<BoolImage>,
+}
+
+/// Client-side helper: one image as the wire's `{"bits": [0|1, ...]}`
+/// spec — the inverse of [`parse_image`]'s bits branch. The load-generator
+/// example, the bench's HTTP rows and the loopback tests all build
+/// requests through this, so the wire shape lives in exactly one place.
+pub fn image_bits_spec(img: &BoolImage) -> Json {
+    let side = img.side();
+    let bits =
+        (0..side * side).map(|i| Json::num(if img.get(i % side, i / side) { 1.0 } else { 0.0 }));
+    Json::obj([("bits", Json::arr(bits))])
+}
+
+/// Client-side helper: a complete `POST /v1/classify` body for `imgs`,
+/// optionally addressed to a registry model.
+pub fn classify_request_body(model: Option<&str>, imgs: &[&BoolImage]) -> Vec<u8> {
+    let images = Json::arr(imgs.iter().map(|img| image_bits_spec(img)));
+    let mut body = Json::obj([("images", images)]);
+    if let (Json::Obj(map), Some(m)) = (&mut body, model) {
+        map.insert("model".to_string(), Json::str(m));
+    }
+    body.to_string_compact().into_bytes()
+}
+
+/// `POST /v1/classify` — parse, fan out over the shard pool, collect.
+pub fn classify(state: &ServerState, req: &Request) -> Response {
+    let call = match parse_body(&req.body) {
+        Ok(c) => c,
+        Err(msg) => return Response::error(400, &msg),
+    };
+    // Submit the whole batch before collecting: images pipeline across
+    // shards, and a full pool sheds *now* instead of blocking the worker.
+    let mut pending = Vec::with_capacity(call.images.len());
+    for img in call.images {
+        match state.coord.try_submit_to(call.model.as_deref(), img) {
+            Ok(rx) => pending.push(rx),
+            Err(overloaded) => {
+                state.stats.shed_503.fetch_add(1, Ordering::Relaxed);
+                // Dropping the already-accepted receivers is safe: the
+                // shards complete those evaluations into closed channels.
+                return Response::error(503, &overloaded.to_string())
+                    .with_header("retry-after", "1");
+            }
+        }
+    }
+    let mut results = Vec::with_capacity(pending.len());
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(out)) => {
+                let version = match out.model_version {
+                    Some(v) => Json::num(v as f64),
+                    None => Json::Null,
+                };
+                let sums = Json::arr(out.class_sums.iter().map(|&s| Json::num(s as f64)));
+                results.push(Json::obj([
+                    ("class", Json::num(out.prediction as f64)),
+                    ("model_version", version),
+                    ("class_sums", sums),
+                ]));
+            }
+            Ok(Err(e)) => {
+                // Unknown model id is the only not-found shape; every
+                // other per-request rejection is a bad request.
+                let status = match e.downcast_ref::<RegistryError>() {
+                    Some(RegistryError::UnknownModel { .. }) => 404,
+                    _ => 400,
+                };
+                return Response::error(status, &format!("{e:#}"));
+            }
+            Err(_) => return Response::error(500, "server is shutting down"),
+        }
+    }
+    let model = match &call.model {
+        Some(m) => Json::str(m.clone()),
+        None => Json::Null,
+    };
+    let body = Json::obj([
+        ("model", model),
+        ("count", Json::num(results.len() as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    Response::json(200, &body)
+}
+
+fn parse_body(body: &[u8]) -> Result<ClassifyCall, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let v = Json::parse(text).map_err(|e| format!("invalid JSON body: {e}"))?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err("body must be a JSON object".to_string());
+    }
+    let model = match v.get("model") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) if !s.is_empty() => Some(s.clone()),
+        Some(_) => return Err("'model' must be a non-empty string".to_string()),
+    };
+    let specs: Vec<&Json> = match (v.get("image"), v.get("images")) {
+        (Some(one), None) => vec![one],
+        (None, Some(Json::Arr(items))) => items.iter().collect(),
+        (None, Some(_)) => return Err("'images' must be an array".to_string()),
+        (None, None) => return Err("missing 'image' (single) or 'images' (batch)".to_string()),
+        (Some(_), Some(_)) => return Err("pass either 'image' or 'images', not both".to_string()),
+    };
+    if specs.is_empty() {
+        return Err("'images' batch is empty".to_string());
+    }
+    if specs.len() > MAX_BATCH_IMAGES {
+        return Err(format!(
+            "batch of {} images exceeds the {MAX_BATCH_IMAGES}-image cap",
+            specs.len()
+        ));
+    }
+    let images = specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| parse_image(spec).map_err(|e| format!("image {i}: {e}")))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(ClassifyCall { model, images })
+}
+
+/// One IMAGE spec → a [`BoolImage`]. All shape/range checks happen here so
+/// no malformed payload can reach a panicking constructor.
+fn parse_image(spec: &Json) -> Result<BoolImage, String> {
+    if !matches!(spec, Json::Obj(_)) {
+        return Err("must be an object with 'bits' or 'pixels'".to_string());
+    }
+    match (spec.get("bits"), spec.get("pixels")) {
+        (Some(bits), None) => {
+            let Json::Arr(items) = bits else {
+                return Err("'bits' must be an array".to_string());
+            };
+            square_side(items.len())?;
+            let bools = items
+                .iter()
+                .map(|b| match b {
+                    Json::Bool(v) => Ok(*v),
+                    Json::Num(x) if *x == 0.0 => Ok(false),
+                    Json::Num(x) if *x == 1.0 => Ok(true),
+                    _ => Err("'bits' entries must be 0, 1, true or false".to_string()),
+                })
+                .collect::<Result<Vec<bool>, _>>()?;
+            Ok(BoolImage::from_bools(&bools))
+        }
+        (None, Some(px)) => {
+            let Json::Arr(items) = px else {
+                return Err("'pixels' must be an array".to_string());
+            };
+            square_side(items.len())?;
+            let pixels = items
+                .iter()
+                .map(|p| match p {
+                    Json::Num(x) if x.fract() == 0.0 && (0.0..=255.0).contains(x) => Ok(*x as u8),
+                    _ => Err("'pixels' entries must be integers in 0..=255".to_string()),
+                })
+                .collect::<Result<Vec<u8>, _>>()?;
+            let booleanizer = match spec.get("booleanize") {
+                None => Booleanizer::FixedMnist,
+                Some(Json::Str(s)) if s == "fixed" => Booleanizer::FixedMnist,
+                Some(Json::Str(s)) if s == "adaptive" => Booleanizer::AdaptiveGaussian,
+                Some(_) => return Err("'booleanize' must be \"fixed\" or \"adaptive\"".to_string()),
+            };
+            Ok(booleanizer.apply(&pixels))
+        }
+        (Some(_), Some(_)) => Err("pass either 'bits' or 'pixels', not both".to_string()),
+        (None, None) => Err("needs 'bits' (booleanized) or 'pixels' (grayscale)".to_string()),
+    }
+}
+
+/// The images are square buffers; reject any length whose integer square
+/// root does not reproduce it (this is the guard that keeps network input
+/// away from `BoolImage::from_bools`'s panic).
+fn square_side(len: usize) -> Result<usize, String> {
+    let side = (len as f64).sqrt().round() as usize;
+    if len == 0 || side * side != len {
+        return Err(format!("{len} values do not form a square image"));
+    }
+    Ok(side)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_bits_image() {
+        let mut bits = vec![0; 784];
+        bits[0] = 1;
+        let body = format!("{{\"model\":\"m\",\"image\":{{\"bits\":{bits:?}}}}}");
+        let call = parse_body(body.as_bytes()).unwrap();
+        assert_eq!(call.model.as_deref(), Some("m"));
+        assert_eq!(call.images.len(), 1);
+        assert_eq!(call.images[0].side(), 28);
+        assert!(call.images[0].get(0, 0));
+        assert_eq!(call.images[0].count_ones(), 1);
+    }
+
+    #[test]
+    fn parses_pixel_batch_with_fixed_booleanization() {
+        // 75 is not > 75 (the paper's strict threshold); 200 is.
+        let mut px = vec![0u64; 784];
+        px[3] = 200;
+        px[4] = 75;
+        let arr: Vec<String> = px.iter().map(|p| p.to_string()).collect();
+        let body = format!("{{\"images\":[{{\"pixels\":[{}]}}]}}", arr.join(","));
+        let call = parse_body(body.as_bytes()).unwrap();
+        assert_eq!(call.model, None);
+        assert!(call.images[0].get(3, 0));
+        assert!(!call.images[0].get(4, 0));
+        assert_eq!(call.images[0].count_ones(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_shapes() {
+        for (body, needle) in [
+            (r#"not json"#, "invalid JSON"),
+            (r#"[1,2]"#, "must be a JSON object"),
+            (r#"{}"#, "missing 'image'"),
+            (r#"{"images":[]}"#, "empty"),
+            (r#"{"image":{"bits":[1,0]},"images":[]}"#, "not both"),
+            (r#"{"model":7,"image":{"bits":[0]}}"#, "'model'"),
+            (r#"{"image":{}}"#, "'bits'"),
+            (r#"{"image":{"bits":[0,1,1]}}"#, "square"),
+            (r#"{"image":{"bits":[2,0,0,0]}}"#, "entries"),
+            (r#"{"image":{"pixels":[256,0,0,0]}}"#, "0..=255"),
+            (r#"{"image":{"pixels":[1.5,0,0,0]}}"#, "0..=255"),
+            (r#"{"image":{"pixels":[1,0,0,0],"booleanize":"median"}}"#, "booleanize"),
+        ] {
+            let e = parse_body(body.as_bytes()).unwrap_err();
+            assert!(e.contains(needle), "body {body}: error '{e}' missing '{needle}'");
+        }
+    }
+
+    #[test]
+    fn batch_cap_is_enforced() {
+        let one = r#"{"bits":[1]}"#;
+        let body = format!("{{\"images\":[{}]}}", vec![one; MAX_BATCH_IMAGES + 1].join(","));
+        let e = parse_body(body.as_bytes()).unwrap_err();
+        assert!(e.contains("cap"), "{e}");
+    }
+
+    #[test]
+    fn client_body_builder_roundtrips_through_the_parser() {
+        let mut a = BoolImage::blank_sized(28);
+        a.set(3, 4, true);
+        let b = BoolImage::blank_sized(32);
+        let body = classify_request_body(Some("m"), &[&a, &b]);
+        let call = parse_body(&body).unwrap();
+        assert_eq!(call.model.as_deref(), Some("m"));
+        assert_eq!(call.images, vec![a, b]);
+        let call = parse_body(&classify_request_body(None, &[&BoolImage::blank()])).unwrap();
+        assert_eq!(call.model, None);
+        assert_eq!(call.images.len(), 1);
+    }
+
+    #[test]
+    fn square_side_rejects_non_squares() {
+        assert!(square_side(0).is_err());
+        assert!(square_side(783).is_err());
+        assert_eq!(square_side(784), Ok(28));
+        assert_eq!(square_side(1024), Ok(32));
+        assert_eq!(square_side(1), Ok(1));
+    }
+}

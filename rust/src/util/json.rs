@@ -135,11 +135,14 @@ impl Json {
     }
 
     /// Parse a JSON document. Returns an error message with byte offset on
-    /// malformed input.
+    /// malformed input. Nesting is capped at [`MAX_DEPTH`]: the server
+    /// parses network bodies through this function, and unbounded
+    /// recursion would let a kilobyte of `[` characters overflow the
+    /// stack (an abort, not a catchable error).
     pub fn parse(src: &str) -> Result<Json, String> {
         let bytes = src.as_bytes();
         let mut pos = 0usize;
-        let v = parse_value(bytes, &mut pos)?;
+        let v = parse_value(bytes, &mut pos, 0)?;
         skip_ws(bytes, &mut pos);
         if pos != bytes.len() {
             return Err(format!("trailing data at byte {pos}"));
@@ -147,6 +150,10 @@ impl Json {
         Ok(v)
     }
 }
+
+/// Maximum container nesting the parser accepts. Far above any document
+/// this repo produces, far below stack-exhaustion territory.
+pub const MAX_DEPTH: usize = 128;
 
 fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
@@ -194,10 +201,16 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
     skip_ws(b, pos);
     if *pos >= b.len() {
         return Err("unexpected end of input".into());
+    }
+    if depth > MAX_DEPTH {
+        return Err(format!(
+            "nesting deeper than {MAX_DEPTH} at byte {pos}",
+            pos = *pos
+        ));
     }
     match b[*pos] {
         b'n' => parse_lit(b, pos, "null", Json::Null),
@@ -213,7 +226,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                 return Ok(Json::Arr(items));
             }
             loop {
-                items.push(parse_value(b, pos)?);
+                items.push(parse_value(b, pos, depth + 1)?);
                 skip_ws(b, pos);
                 match b.get(*pos) {
                     Some(b',') => *pos += 1,
@@ -241,7 +254,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                     return Err(format!("expected ':' at byte {pos}", pos = *pos));
                 }
                 *pos += 1;
-                let val = parse_value(b, pos)?;
+                let val = parse_value(b, pos, depth + 1)?;
                 map.insert(key, val);
                 skip_ws(b, pos);
                 match b.get(*pos) {
@@ -291,8 +304,13 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                     Some(b'b') => out.push('\u{8}'),
                     Some(b'f') => out.push('\u{c}'),
                     Some(b'u') => {
-                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
-                            .map_err(|_| "bad \\u escape".to_string())?;
+                        // Bounds-checked: a string truncated mid-escape
+                        // ("\u12) is an error, not a slice panic.
+                        let raw = b
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| "bad \\u escape".to_string())?;
+                        let hex =
+                            std::str::from_utf8(raw).map_err(|_| "bad \\u escape".to_string())?;
                         let code =
                             u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape".to_string())?;
                         out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
@@ -383,6 +401,13 @@ mod tests {
     }
 
     #[test]
+    fn truncated_unicode_escape_is_an_error_not_a_panic() {
+        for src in [r#""\u"#, r#""\u1"#, r#""\u12"#, r#""\u123"#, r#""\uzzzz""#] {
+            assert!(Json::parse(src).is_err(), "{src}");
+        }
+    }
+
+    #[test]
     fn rejects_trailing_garbage() {
         assert!(Json::parse("{} x").is_err());
         assert!(Json::parse("[1,").is_err());
@@ -392,5 +417,19 @@ mod tests {
     #[test]
     fn nonfinite_serializes_as_null() {
         assert_eq!(Json::num(f64::NAN).to_string_compact(), "null");
+    }
+
+    #[test]
+    fn hostile_nesting_errors_instead_of_blowing_the_stack() {
+        // The server parses network bodies with this parser: a run of '['
+        // must produce an error, never unbounded recursion.
+        let deep = "[".repeat(100_000);
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.contains("nesting"), "{e}");
+        // Nesting at the cap still parses.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&over).is_err());
     }
 }

@@ -1,0 +1,594 @@
+//! End-to-end tests for the HTTP front door (`server`): property tests
+//! over the request parser (never panics, maps every malformed input to a
+//! 4xx/5xx), and loopback tests proving the acceptance criteria —
+//! concurrent keep-alive correctness against a 4-shard pool, lossless
+//! hot-swap via `POST /admin/models` under sustained load with zero
+//! mis-versioned responses, deterministic `503` + `Retry-After` shedding
+//! on saturated queues, and a clean drain through `POST /admin/shutdown`.
+
+use convcotm::coordinator::{
+    Backend, BackendOutput, BatchConfig, Coordinator, ModelRegistry, PoolConfig,
+};
+use convcotm::data::{BoolImage, Geometry};
+use convcotm::server::http::write_request;
+use convcotm::server::{ClientResponse, HttpConn, HttpServer, Limits, ServerConfig, ServerState};
+use convcotm::tm::{Engine, Model, Params};
+use convcotm::util::quick::{check, PropResult};
+use convcotm::util::{Json, Xoshiro256ss};
+use std::io::Cursor;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Socket tests are timing-sensitive enough (drains, timeouts) that the
+/// parallel test runner must not interleave them.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn heavy_guard() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn random_model(seed: u64, includes_per_clause: usize) -> Model {
+    let params = Params::asic();
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut m = Model::blank(params.clone());
+    for j in 0..params.clauses {
+        for _ in 0..1 + rng.usize_below(includes_per_clause) {
+            m.set_include(j, rng.usize_below(params.literals), true);
+        }
+        for i in 0..params.classes {
+            m.set_weight(i, j, (rng.below(61) as i32 - 30) as i8);
+        }
+    }
+    m
+}
+
+fn random_images(seed: u64, n: usize) -> Vec<BoolImage> {
+    let mut rng = Xoshiro256ss::new(seed);
+    (0..n)
+        .map(|_| BoolImage::from_bools(&(0..784).map(|_| rng.chance(0.3)).collect::<Vec<_>>()))
+        .collect()
+}
+
+/// Deterministically predicts `class` on a blank image (one clause over a
+/// negated content literal, +5 vote) — the hot-swap oracle.
+fn fixed_class_model(class: usize) -> Model {
+    let p = Params::asic();
+    let mut m = Model::blank(p.clone());
+    m.set_include(0, p.geometry.num_features(), true);
+    m.set_weight(class, 0, 5);
+    m
+}
+
+fn start_pool_server(
+    registry: Arc<ModelRegistry>,
+    shards: usize,
+    queue_capacity: usize,
+    read_timeout: Duration,
+) -> (HttpServer, Arc<ServerState>, Arc<Coordinator>) {
+    let coord = Arc::new(Coordinator::start_pool(
+        registry,
+        PoolConfig {
+            shards,
+            queue_capacity,
+            batch: BatchConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(50),
+            },
+        },
+    ));
+    let state = ServerState::new(Arc::clone(&coord));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 4,
+        read_timeout,
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind loopback");
+    (server, state, coord)
+}
+
+/// Drain the server, then the pool, returning the final pool snapshot.
+fn drain(
+    server: HttpServer,
+    state: Arc<ServerState>,
+    coord: Arc<Coordinator>,
+) -> convcotm::coordinator::MetricsSnapshot {
+    server.request_shutdown();
+    server.join();
+    drop(state);
+    match Arc::try_unwrap(coord) {
+        Ok(coord) => coord.shutdown(),
+        Err(coord) => coord.metrics(),
+    }
+}
+
+fn connect(addr: SocketAddr) -> HttpConn<TcpStream> {
+    let stream = TcpStream::connect(addr).expect("connect to loopback server");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    stream.set_nodelay(true).unwrap();
+    HttpConn::new(stream)
+}
+
+/// One keep-alive request/response exchange.
+fn roundtrip(
+    conn: &mut HttpConn<TcpStream>,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> ClientResponse {
+    write_request(conn.get_mut(), method, path, body, true).expect("write request");
+    conn.read_response(&Limits::default())
+        .expect("read response")
+        .expect("server closed connection before responding")
+}
+
+fn body_json(resp: &ClientResponse) -> Json {
+    Json::parse(std::str::from_utf8(&resp.body).expect("utf-8 body")).expect("json body")
+}
+
+/// The wire shape comes from the library's own client-side builder, so
+/// these tests and the server share one definition of the format.
+fn classify_body(model: Option<&str>, imgs: &[&BoolImage]) -> Vec<u8> {
+    convcotm::server::proto::classify_request_body(model, imgs)
+}
+
+// ---------------------------------------------------------------------
+// Property tests: the parser under hostile input (no sockets involved).
+// ---------------------------------------------------------------------
+
+/// Arbitrary byte soup, biased toward HTTP-shaped fragments so the deep
+/// parse paths (request line, headers, content-length) are exercised, not
+/// just the "no CRLFCRLF" early exit.
+fn garbage_request(g: &mut convcotm::util::quick::Gen) -> Vec<u8> {
+    const FRAGMENTS: &[&[u8]] = &[
+        b"GET ",
+        b"POST ",
+        b"/v1/classify",
+        b"/",
+        b" HTTP/1.1",
+        b" HTTP/1.0",
+        b" HTTP/9.9",
+        b"\r\n",
+        b"\n",
+        b"\r",
+        b"content-length: ",
+        b"content-length: 18446744073709551616",
+        b"transfer-encoding: chunked",
+        b"connection: close",
+        b": ",
+        b"\r\n\r\n",
+        b"{\"images\":[",
+        b"\x00\xff\xfe",
+    ];
+    let mut out = Vec::new();
+    let pieces = g.usize_in(0, 24);
+    for _ in 0..pieces {
+        if g.chance(0.7) {
+            out.extend_from_slice(FRAGMENTS[g.usize_in(0, FRAGMENTS.len() - 1)]);
+        } else {
+            let len = g.usize_in(0, 48);
+            for _ in 0..len {
+                out.push(g.usize_in(0, 255) as u8);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn parser_never_panics_and_maps_garbage_to_4xx_5xx() {
+    let limits = Limits {
+        max_head_bytes: 512,
+        max_body_bytes: 1024,
+        ..Limits::default()
+    };
+    check("http parser total on garbage", 400, |g| -> PropResult {
+        let bytes = garbage_request(g);
+        let mut conn = HttpConn::new(Cursor::new(bytes.clone()));
+        match conn.read_request(&limits) {
+            // Garbage can accidentally form a valid request — fine.
+            Ok(_) => Ok(()),
+            Err(e) => {
+                let status = e.status();
+                convcotm::prop_assert!(
+                    matches!(status, Some(400..=599)),
+                    "error '{e}' on {} bytes maps to {status:?}, not a response status",
+                    bytes.len()
+                );
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
+fn truncated_requests_always_fail_with_400_never_panic() {
+    check("http parser on truncations", 60, |g| -> PropResult {
+        let n_body = g.usize_in(0, 200);
+        let body: Vec<u8> = (0..n_body).map(|_| g.usize_in(0, 255) as u8).collect();
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/v1/classify", &body, g.bool()).unwrap();
+        // Any strict prefix must parse to a clean 400 (closed mid-head or
+        // mid-body), and the full request must parse.
+        let cut = g.usize_in(1, wire.len() - 1);
+        let mut conn = HttpConn::new(Cursor::new(wire[..cut].to_vec()));
+        match conn.read_request(&Limits::default()) {
+            Err(e) => convcotm::prop_assert_eq!(e.status(), Some(400)),
+            other => return Err(format!("cut at {cut}/{} parsed as {other:?}", wire.len())),
+        }
+        let full = HttpConn::new(Cursor::new(wire)).read_request(&Limits::default());
+        convcotm::prop_assert!(
+            matches!(&full, Ok(Some(req)) if req.body == body),
+            "full request failed to parse: {full:?}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Loopback tests: the full server against real sockets.
+// ---------------------------------------------------------------------
+
+/// Acceptance: concurrent keep-alive clients against a 4-shard pool all
+/// receive correct classifications (bit-identical to the local engine)
+/// with the serving model version attached.
+#[test]
+fn concurrent_keep_alive_clients_get_correct_classifications() {
+    let _serial = heavy_guard();
+    let model = random_model(31, 5);
+    let (server, state, coord) = start_pool_server(
+        ModelRegistry::single("m", model.clone()),
+        4,
+        4096,
+        Duration::from_secs(2),
+    );
+    let addr = server.local_addr();
+    let engine = Engine::new();
+    let n_clients = 4usize;
+    let per_client = 20usize;
+    let batch = 3usize;
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let model = &model;
+            let engine = &engine;
+            scope.spawn(move || {
+                let images = random_images(100 + c as u64, per_client * batch);
+                let mut conn = connect(addr);
+                for r in 0..per_client {
+                    let chunk: Vec<&BoolImage> =
+                        images[r * batch..(r + 1) * batch].iter().collect();
+                    let body = classify_body(Some("m"), &chunk);
+                    let resp = roundtrip(&mut conn, "POST", "/v1/classify", &body);
+                    assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+                    let v = body_json(&resp);
+                    let results = v.get("results").and_then(Json::as_arr).unwrap();
+                    assert_eq!(results.len(), batch);
+                    for (img, res) in chunk.iter().zip(results) {
+                        let class = res.get("class").and_then(Json::as_f64).unwrap() as u8;
+                        assert_eq!(class, engine.classify(model, img).prediction);
+                        let version = res.get("model_version").and_then(Json::as_f64).unwrap();
+                        assert_eq!(version, 1.0);
+                        let sums = res.get("class_sums").and_then(Json::as_arr).unwrap();
+                        assert_eq!(sums.len(), 10);
+                    }
+                }
+            });
+        }
+    });
+    // Keep-alive held: one connection per client, every request counted.
+    let conns = state.stats.connections.load(Ordering::Relaxed);
+    assert_eq!(conns, n_clients as u64, "connections were not reused");
+    let served = (n_clients * per_client * batch) as u64;
+    assert_eq!(state.stats.requests.load(Ordering::Relaxed), (n_clients * per_client) as u64);
+    let snap = drain(server, state, coord);
+    assert_eq!(snap.requests, served);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.per_model["m"].requests, served);
+}
+
+/// Acceptance: a `POST /admin/models` hot-swap under sustained load
+/// completes with zero dropped and zero mis-versioned responses —
+/// prediction and `model_version` always agree, and requests after the
+/// admin call returns are all served by the new version. Eviction through
+/// the same manifest body then 404s subsequent requests.
+#[test]
+fn admin_hot_swap_under_load_is_lossless_and_versioned() {
+    let _serial = heavy_guard();
+    let dir = std::env::temp_dir().join("convcotm_http_swap_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let v2_path = dir.join("v2.cctm");
+    convcotm::model_io::save_file(&fixed_class_model(7), &v2_path).unwrap();
+
+    let (server, state, coord) = start_pool_server(
+        ModelRegistry::single("live", fixed_class_model(2)),
+        2,
+        4096,
+        Duration::from_secs(2),
+    );
+    let addr = server.local_addr();
+    let stop = AtomicBool::new(false);
+    let img = BoolImage::blank();
+    let observed: Mutex<Vec<(u8, u64)>> = Mutex::new(Vec::new());
+    /// Sets the stop flag even on an assertion panic, so the loader
+    /// threads exit and the scope join cannot hang a failing test.
+    struct StopOnDrop<'a>(&'a AtomicBool);
+    impl Drop for StopOnDrop<'_> {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+    std::thread::scope(|scope| {
+        let _stop_guard = StopOnDrop(&stop);
+        for _ in 0..2 {
+            let (stop, observed, img) = (&stop, &observed, &img);
+            scope.spawn(move || {
+                let mut conn = connect(addr);
+                let body = classify_body(Some("live"), &[img]);
+                while !stop.load(Ordering::Relaxed) {
+                    let resp = roundtrip(&mut conn, "POST", "/v1/classify", &body);
+                    assert_eq!(resp.status, 200, "request dropped during hot-swap");
+                    let v = body_json(&resp);
+                    let res = &v.get("results").and_then(Json::as_arr).unwrap()[0];
+                    let class = res.get("class").and_then(Json::as_f64).unwrap() as u8;
+                    let version = res.get("model_version").and_then(Json::as_f64).unwrap() as u64;
+                    observed.lock().unwrap().push((class, version));
+                }
+            });
+        }
+        // Let traffic build, then deploy v2 through the admin endpoint.
+        std::thread::sleep(Duration::from_millis(60));
+        let mut admin = connect(addr);
+        let manifest = format!("live = {}\n", v2_path.display());
+        let resp = roundtrip(&mut admin, "POST", "/admin/models", manifest.as_bytes());
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        assert_eq!(
+            v.get("published").and_then(|p| p.get("live")).and_then(Json::as_f64),
+            Some(2.0)
+        );
+        // A request submitted after the admin call returned must be served
+        // by v2 (the §8 ordering guarantee, across the network edge).
+        let resp =
+            roundtrip(&mut admin, "POST", "/v1/classify", &classify_body(Some("live"), &[&img]));
+        let v = body_json(&resp);
+        let res = &v.get("results").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(res.get("class").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(res.get("model_version").and_then(Json::as_f64), Some(2.0));
+        std::thread::sleep(Duration::from_millis(60));
+        stop.store(true, Ordering::Relaxed);
+    });
+    let observed = observed.into_inner().unwrap();
+    assert!(observed.len() > 20, "load generators only made {} requests", observed.len());
+    for (class, version) in &observed {
+        assert!(
+            (*class, *version) == (2, 1) || (*class, *version) == (7, 2),
+            "mis-versioned response: class {class} with version {version}"
+        );
+    }
+    assert!(
+        observed.iter().any(|&(c, _)| c == 2) && observed.iter().any(|&(c, _)| c == 7),
+        "load did not straddle the swap (observed {} responses)",
+        observed.len()
+    );
+
+    // Evict via the same manifest format; the model then 404s.
+    let mut admin = connect(addr);
+    let resp = roundtrip(&mut admin, "POST", "/admin/models", b"live = -\n");
+    assert_eq!(resp.status, 200);
+    let v = body_json(&resp);
+    assert_eq!(v.get("evicted").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+    let resp =
+        roundtrip(&mut admin, "POST", "/v1/classify", &classify_body(Some("live"), &[&img]));
+    assert_eq!(resp.status, 404, "{}", String::from_utf8_lossy(&resp.body));
+    let snap = drain(server, state, coord);
+    // Pool accounting: every load-generator single plus the post-swap
+    // check served; the post-evict request is the one error.
+    assert_eq!(snap.requests as usize, observed.len() + 1);
+    assert_eq!(snap.errors, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A backend that parks inside `classify` until released — makes the
+/// full-queue state deterministic for the shedding test.
+struct GateBackend {
+    geometry: Geometry,
+    gate: std::sync::mpsc::Receiver<()>,
+}
+
+impl Backend for GateBackend {
+    fn name(&self) -> &'static str {
+        "gate"
+    }
+    fn max_batch(&self) -> usize {
+        1
+    }
+    fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+    fn classify(&mut self, imgs: &[&BoolImage]) -> anyhow::Result<Vec<BackendOutput>> {
+        let _ = self.gate.recv();
+        Ok(imgs
+            .iter()
+            .map(|_| BackendOutput {
+                prediction: 0,
+                class_sums: vec![0; 10],
+                sim_cycles: None,
+                model_version: None,
+            })
+            .collect())
+    }
+}
+
+/// Acceptance: saturating the bounded queues yields `503` with a
+/// `Retry-After` header — never a hang, never a panic. Deterministic: the
+/// evaluator is wedged shut while the queue is filled.
+#[test]
+fn saturated_queues_shed_503_with_retry_after() {
+    let _serial = heavy_guard();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+    let coord = Arc::new(Coordinator::start_with_capacity(
+        move || GateBackend {
+            geometry: Geometry::asic(),
+            gate: gate_rx,
+        },
+        BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        },
+        2,
+    ));
+    let state = ServerState::new(Arc::clone(&coord));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 2,
+        read_timeout: Duration::from_secs(2),
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind");
+    let addr = server.local_addr();
+
+    // Wedge the worker inside classify, so the capacity-2 queue cannot
+    // drain while the HTTP batch lands on it.
+    let wedged = coord.submit(BoolImage::blank());
+    std::thread::sleep(Duration::from_millis(50));
+
+    let images = random_images(55, 8);
+    let refs: Vec<&BoolImage> = images.iter().collect();
+    let mut conn = connect(addr);
+    let t0 = Instant::now();
+    let resp = roundtrip(&mut conn, "POST", "/v1/classify", &classify_body(None, &refs));
+    assert_eq!(resp.status, 503, "{}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    let v = body_json(&resp);
+    let err = v.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("overloaded"), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(2), "shedding must not block the HTTP worker");
+
+    // /metrics (registry-less mode) reports the shed; /admin/models 409s.
+    let resp = roundtrip(&mut conn, "GET", "/metrics", b"");
+    assert_eq!(resp.status, 200);
+    let m = body_json(&resp);
+    let shed = m.get("http").and_then(|h| h.get("shed_503")).and_then(Json::as_f64);
+    assert_eq!(shed, Some(1.0));
+    let resp = roundtrip(&mut conn, "POST", "/admin/models", b"m = x.cctm\n");
+    assert_eq!(resp.status, 409, "{}", String::from_utf8_lossy(&resp.body));
+
+    // Release the wedge: the direct request plus the two the server's 503
+    // path left in the queue (their receivers are dropped — the evaluator
+    // completes them into closed channels without issue).
+    for _ in 0..3 {
+        gate_tx.send(()).ok();
+    }
+    wedged.recv().unwrap().unwrap();
+    drop(gate_tx);
+    drop(server);
+    drop(state);
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+}
+
+/// Acceptance: `POST /admin/shutdown` answers `{"draining":true}` with
+/// `Connection: close`, then the server stops accepting, finishes
+/// in-flight work and joins — and the pool underneath drains every
+/// accepted request.
+#[test]
+fn admin_shutdown_drains_cleanly() {
+    let _serial = heavy_guard();
+    let model = random_model(61, 4);
+    let (server, state, coord) = start_pool_server(
+        ModelRegistry::single("m", model.clone()),
+        2,
+        1024,
+        Duration::from_millis(300),
+    );
+    let addr = server.local_addr();
+    let mut conn = connect(addr);
+    let images = random_images(62, 6);
+    for img in &images {
+        let resp = roundtrip(&mut conn, "POST", "/v1/classify", &classify_body(None, &[img]));
+        assert_eq!(resp.status, 200);
+    }
+    let resp = roundtrip(&mut conn, "POST", "/admin/shutdown", b"");
+    assert_eq!(resp.status, 200);
+    assert_eq!(body_json(&resp).get("draining").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.header("connection"), Some("close"));
+    // The server closes this connection after the drain response.
+    assert!(conn.read_response(&Limits::default()).map(|r| r.is_none()).unwrap_or(true));
+    let t0 = Instant::now();
+    let snap = drain(server, state, coord);
+    assert!(t0.elapsed() < Duration::from_secs(5), "drain hung for {:?}", t0.elapsed());
+    assert_eq!(snap.requests, 6);
+    assert_eq!(snap.errors, 0);
+}
+
+/// Routing + malformed input over real sockets: 404 on unknown paths,
+/// 405 + Allow on wrong methods, 400 on garbage (with the connection
+/// closed), 413 on an oversized declared body, 408 on a mid-request
+/// stall (slow-loris), and healthz liveness fields.
+#[test]
+fn routing_and_malformed_inputs_map_to_4xx_over_sockets() {
+    let _serial = heavy_guard();
+    let (server, state, coord) = start_pool_server(
+        ModelRegistry::single("m", random_model(71, 4)),
+        1,
+        256,
+        Duration::from_millis(250),
+    );
+    let addr = server.local_addr();
+
+    let mut conn = connect(addr);
+    let resp = roundtrip(&mut conn, "GET", "/healthz", b"");
+    assert_eq!(resp.status, 200);
+    let v = body_json(&resp);
+    assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(v.get("shards").and_then(Json::as_f64), Some(1.0));
+    let resp = roundtrip(&mut conn, "GET", "/nope", b"");
+    assert_eq!(resp.status, 404);
+    let resp = roundtrip(&mut conn, "POST", "/metrics", b"");
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("GET"));
+    let resp = roundtrip(&mut conn, "POST", "/v1/classify", b"{\"images\":17}");
+    assert_eq!(resp.status, 400);
+
+    // Raw garbage: 400 and the connection is closed.
+    let mut conn = connect(addr);
+    use std::io::Write as _;
+    conn.get_mut().write_all(b"NOT HTTP AT ALL\r\n\r\n").unwrap();
+    let resp = conn
+        .read_response(&Limits::default())
+        .expect("a 400 response")
+        .expect("a response before close");
+    assert_eq!(resp.status, 400);
+    assert_eq!(resp.header("connection"), Some("close"));
+    assert!(conn.read_response(&Limits::default()).map(|r| r.is_none()).unwrap_or(true));
+
+    // Declared-oversize body: 413 before any body byte is read.
+    let mut conn = connect(addr);
+    conn.get_mut()
+        .write_all(b"POST /v1/classify HTTP/1.1\r\ncontent-length: 999999999999\r\n\r\n")
+        .unwrap();
+    let resp = conn
+        .read_response(&Limits::default())
+        .unwrap()
+        .expect("a 413 response");
+    assert_eq!(resp.status, 413);
+
+    // Slow-loris: a partial request line, then silence — the server
+    // answers 408 within its read timeout and drops the connection.
+    let mut conn = connect(addr);
+    conn.get_mut().write_all(b"POST /v1/cl").unwrap();
+    let resp = conn
+        .read_response(&Limits::default())
+        .expect("a 408 response")
+        .expect("a response before close");
+    assert_eq!(resp.status, 408);
+    assert_eq!(state.stats.read_timeouts.load(Ordering::Relaxed), 1);
+
+    let snap = drain(server, state, coord);
+    assert_eq!(snap.requests, 0, "no classify traffic reached the pool");
+}

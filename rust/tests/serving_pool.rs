@@ -232,6 +232,7 @@ impl Backend for GateBackend {
                 prediction: 0,
                 class_sums: vec![0; 10],
                 sim_cycles: None,
+                model_version: None,
             })
             .collect())
     }
