@@ -29,6 +29,21 @@ import re
 import sys
 
 
+# Scalar keys whose baseline value is a hard floor for the fresh run (not
+# threshold-scaled): the blocked evaluator must stay a clear multiple of
+# the scalar compiled plan or it has no reason to exist.
+FLOOR_KEYS = ("block_speedup_vs_plan",)
+
+# Normalized paths whose fresh allocs_per_img must be exactly 0.0. The
+# blocked hot path's zero-alloc invariant is absolute — 0.4 allocs/img
+# would pass the generic >0.5 alloc gate while still meaning a per-block
+# allocation crept in.
+STRICT_ZERO_ALLOC = {
+    "native engine (blocked B=32)",
+    "NativeBackend batch=N (blocked)",
+}
+
+
 def normalize(label: str) -> str:
     """Strip machine-dependent details so labels match across runners.
 
@@ -107,8 +122,20 @@ def main(argv):
             f"| {label} | {b['img_per_s']:.0f} | {f['img_per_s']:.0f} | "
             f"{100 * (ratio - 1):+.0f}% | {f_allocs} | {status} |"
         )
+    # The blocked rows must measure 0.0 allocs/img exactly, whether the
+    # row is NEW or matched against the baseline.
+    for label in sorted(STRICT_ZERO_ALLOC):
+        if label not in fresh:
+            failures.append(f"{label}: zero-alloc row missing from the fresh run")
+            continue
+        allocs = fresh[label].get("allocs_per_img")
+        if allocs != 0.0:
+            failures.append(
+                f"{label}: allocs_per_img must be exactly 0.0, measured {allocs}"
+            )
     for key, unit in (
         ("plan_speedup_vs_early_exit", "×"),
+        ("block_speedup_vs_plan", "×"),
         ("pool_speedup_4v1_shards", "×"),
         ("http_speedup_4v1_shards", "×"),
         ("http_overhead_us", " µs"),
@@ -118,6 +145,14 @@ def main(argv):
         if isinstance(value, (int, float)):
             lines.append("")
             lines.append(f"`{key}` = {value:.2f}{unit}")
+    for key in FLOOR_KEYS:
+        b_val, f_val = baseline_doc.get(key), fresh_doc.get(key)
+        if not isinstance(b_val, (int, float)):
+            continue
+        if not isinstance(f_val, (int, float)):
+            failures.append(f"{key}: missing from the fresh run (baseline floor {b_val:.2f})")
+        elif f_val < b_val:
+            failures.append(f"{key}: {f_val:.2f} below the baseline floor {b_val:.2f}")
 
     report = "\n".join(lines) + "\n"
     print(report)

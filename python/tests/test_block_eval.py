@@ -1,0 +1,356 @@
+"""Word-level cross-validation of the Rust blocked (image-major,
+bit-sliced) clause evaluator — a plain-int transliteration of
+`rust/src/tm/block.rs` checked against a naive per-image, per-patch
+reference over several geometries and ragged block sizes.
+
+The blocked path evaluates a block of B <= 64 images at once:
+
+1. pack each image's rows into u64 masks (bit x = pixel (x, y));
+2. fold the block into union rows U (OR) and intersection rows A (AND);
+3. bit-transpose the block into an image-lane matrix T where
+   T[r*side + c] holds bit b = pixel (c, r) of image b;
+4. build a *screen* literal->patch-set table from U/A: positive content
+   sets gathered from U, negated content sets = ~gather(A), thermometer
+   sets exact (image-independent) — so S_j = AND of clause j's screen
+   sets is a sound superset of every image's fire set;
+5. for each surviving patch in S_j, AND the content lanes from T
+   (negated lanes complemented) with early-zero exit — the surviving
+   lane mask says which images fire clause j on that patch;
+6. accumulate class sums per image from the fired masks and take
+   argmax with lowest-label tie-break.
+
+Pure stdlib on purpose: no Rust toolchain exists in this container, so
+this file is the proof the word tricks are right before CI compiles the
+Rust twin (same pattern as the earlier plan/trainer transliterations).
+"""
+
+import random
+
+M64 = (1 << 64) - 1
+
+GEOMETRIES = [
+    (28, 10, 1),  # ASIC default: 19x19 patches
+    (28, 10, 2),  # strided MNIST variant: 10x10 patches
+    (32, 10, 1),  # CIFAR shape: 23x23 patches
+]
+
+
+def positions(side, window, stride):
+    return (side - window) // stride + 1
+
+
+def num_features(side, window, stride):
+    return window * window + 2 * (positions(side, window, stride) - 1)
+
+
+# ---------------------------------------------------------------- reference
+
+
+def patch_literal(img, g, x, y, k):
+    """Literal k's value on patch (x, y): canonical layout of DESIGN §4."""
+    side, w, stride = g
+    pb = positions(*g) - 1
+    o = num_features(*g)
+    if k >= o:
+        return 1 - patch_literal(img, g, x, y, k - o)
+    if k < w * w:
+        wr, wc = k // w, k % w
+        return img[(y * stride + wr) * side + (x * stride + wc)]
+    t = k - w * w
+    if t < pb:
+        return 1 if y >= t + 1 else 0
+    return 1 if x >= (t - pb) + 1 else 0
+
+
+def ref_eval(imgs, g, clauses, weights, classes):
+    """Per-image scalar evaluation: fired sets, class sums, argmax."""
+    pos = positions(*g)
+    fired_all, sums_all, preds = [], [], []
+    for img in imgs:
+        fired = []
+        for lits in clauses:
+            f = False
+            if lits:  # inference semantics: empty clauses stay low
+                for p in range(pos * pos):
+                    x, y = p % pos, p // pos
+                    if all(patch_literal(img, g, x, y, k) for k in lits):
+                        f = True
+                        break
+            fired.append(f)
+        sums = [0] * classes
+        for j, f in enumerate(fired):
+            if f:
+                for i in range(classes):
+                    sums[i] += weights[j][i]
+        best = 0
+        for i in range(1, classes):
+            if sums[i] > sums[best]:
+                best = i
+        fired_all.append(fired)
+        sums_all.append(sums)
+        preds.append(best)
+    return fired_all, sums_all, preds
+
+
+# ------------------------------------------------------------- blocked path
+
+
+def transpose64(a):
+    """In-place 64x64 bit-matrix transpose (Hacker's Delight 7-3, adapted
+    to LSB-first bit numbering: out[c] bit r = in[r] bit c)."""
+    m = 0x00000000FFFFFFFF
+    j = 32
+    while j != 0:
+        k = 0
+        while k < 64:
+            t = ((a[k] >> j) ^ a[k + j]) & m
+            a[k] ^= (t << j) & M64
+            a[k + j] ^= t
+            k = (k + j + 1) & ~j
+        j >>= 1
+        m ^= (m << j) & M64
+
+
+def pack_rows(img, side):
+    return [
+        sum(img[y * side + x] << x for x in range(side)) for y in range(side)
+    ]
+
+
+def gather_row(row, wc, stride, pos):
+    """Patch-row bits: bit x = pixel (x*stride + wc) of `row`."""
+    if stride == 1:
+        return (row >> wc) & ((1 << pos) - 1)
+    return sum(((row >> (x * stride + wc)) & 1) << x for x in range(pos))
+
+
+def full_mask(pos):
+    n = pos * pos
+    words = (n + 63) // 64
+    m = [M64] * words
+    if n % 64:
+        m[-1] = (1 << (n % 64)) - 1
+    return m
+
+
+def screen_set(rows_any, rows_all, g, k):
+    """Screen patch set for literal k, as a list of u64 words."""
+    side, w, stride = g
+    pos = positions(*g)
+    pb = pos - 1
+    o = num_features(*g)
+    words = (pos * pos + 63) // 64
+    full = full_mask(pos)
+    s = [0] * words
+    neg = k >= o
+    base = k - o if neg else k
+    if base < w * w:
+        wr, wc = base // w, base % w
+        rows = rows_all if neg else rows_any
+        for y in range(pos):
+            bits = gather_row(rows[y * stride + wr], wc, stride, pos)
+            p = y * pos
+            wi, off = p // 64, p % 64
+            s[wi] |= (bits << off) & M64
+            if off + pos > 64:
+                s[wi + 1] |= bits >> (64 - off)
+        if neg:
+            s = [(~x & f) & M64 for x, f in zip(s, full)]
+        return s
+    # Thermometers are image-independent: exact, both polarities.
+    t = base - w * w
+    for y in range(pos):
+        for x in range(pos):
+            hot = (y >= t + 1) if t < pb else (x >= (t - pb) + 1)
+            if hot != neg:
+                s[(y * pos + x) // 64] |= 1 << ((y * pos + x) % 64)
+    return s
+
+
+def block_eval(imgs, g, clauses, weights, classes, block):
+    """Blocked evaluator: mirrors the planned tm::block::BlockEval."""
+    side, w, stride = g
+    pos = positions(*g)
+    o = num_features(*g)
+    words = (pos * pos + 63) // 64
+    full = full_mask(pos)
+    # Content ops per clause: (is_neg, wr, wc), CSR order preserved.
+    content_ops = []
+    for lits in clauses:
+        ops = []
+        for k in lits:
+            neg = k >= o
+            base = k - o if neg else k
+            if base < w * w:
+                ops.append((neg, base // w, base % w))
+        content_ops.append(ops)
+
+    fired_all = [[False] * len(clauses) for _ in imgs]
+    sums_all = [[0] * classes for _ in imgs]
+    preds = []
+    for lo in range(0, len(imgs), block):
+        chunk = imgs[lo : lo + block]
+        b = len(chunk)
+        bmask = (1 << b) - 1
+        packed = [pack_rows(img, side) for img in chunk]
+        rows_any = [0] * side
+        rows_all = [M64] * side
+        for rows in packed:
+            for r in range(side):
+                rows_any[r] |= rows[r]
+                rows_all[r] &= rows[r]
+        # T[r*side + c]: bit b = pixel (c, r) of image b.
+        t_mat = [0] * (side * side)
+        for r in range(side):
+            lanes = [packed[i][r] if i < b else 0 for i in range(64)]
+            transpose64(lanes)
+            for c in range(side):
+                t_mat[r * side + c] = lanes[c]
+        for j, lits in enumerate(clauses):
+            if not lits:
+                continue
+            sj = list(full)
+            dead = False
+            for k in lits:
+                q = screen_set(rows_any, rows_all, g, k)
+                sj = [a & bq for a, bq in zip(sj, q)]
+                if not any(sj):
+                    dead = True
+                    break
+            if dead:
+                continue
+            fired = 0
+            for wi in range(words):
+                word = sj[wi]
+                while word:
+                    p = wi * 64 + (word & -word).bit_length() - 1
+                    word &= word - 1
+                    x, y = p % pos, p // pos
+                    lane = bmask
+                    for neg, wr, wc in content_ops[j]:
+                        tw = t_mat[(y * stride + wr) * side + (x * stride + wc)]
+                        lane &= (~tw & bmask) if neg else tw
+                        if lane == 0:
+                            break
+                    fired |= lane
+                    if fired == bmask:
+                        break
+                if fired == bmask:
+                    break
+            for i in range(b):
+                if (fired >> i) & 1:
+                    fired_all[lo + i][j] = True
+                    for c in range(classes):
+                        sums_all[lo + i][c] += weights[j][c]
+        for i in range(b):
+            sums = sums_all[lo + i]
+            best = 0
+            for c in range(1, classes):
+                if sums[c] > sums[best]:
+                    best = c
+            preds.append(best)
+    return fired_all, sums_all, preds
+
+
+# -------------------------------------------------------------------- tests
+
+
+def random_case(rng, g, n_imgs, n_clauses=24, classes=4):
+    side = g[0]
+    o = num_features(*g)
+    imgs = [
+        [1 if rng.random() < rng.choice([0.1, 0.35, 0.6]) else 0 for _ in range(side * side)]
+        for _ in range(n_imgs)
+    ]
+    clauses = []
+    for j in range(n_clauses):
+        if j == 0:
+            lits = []  # empty clause: must stay low
+        elif j == 1:
+            lits = [o - 1, 2 * o - 2]  # thermometer-only clause
+        elif j == 2:
+            lits = [3, o + 3]  # contradictory pair: never fires
+        else:
+            lits = sorted(rng.sample(range(2 * o), rng.randint(1, 6)))
+        clauses.append(lits)
+    weights = [[rng.randint(-3, 3) for _ in range(classes)] for _ in range(n_clauses)]
+    return imgs, clauses, weights, classes
+
+
+def test_transpose64_is_exact():
+    rng = random.Random(7)
+    a = [rng.getrandbits(64) for _ in range(64)]
+    t = list(a)
+    transpose64(t)
+    for r in range(64):
+        for c in range(64):
+            assert (t[c] >> r) & 1 == (a[r] >> c) & 1
+    back = list(t)
+    transpose64(back)
+    assert back == a
+
+
+def test_screen_is_exact_for_single_image():
+    # With B = 1, U = A = the image, so the screen table must equal the
+    # per-image literal->patch-set table exactly (the Rust B=1 unit test).
+    rng = random.Random(11)
+    for g in GEOMETRIES:
+        side = g[0]
+        pos = positions(*g)
+        img = [1 if rng.random() < 0.4 else 0 for _ in range(side * side)]
+        rows = pack_rows(img, side)
+        for k in range(0, 2 * num_features(*g), 7):
+            s = screen_set(rows, rows, g, k)
+            for p in range(pos * pos):
+                x, y = p % pos, p // pos
+                want = patch_literal(img, g, x, y, k)
+                assert (s[p // 64] >> (p % 64)) & 1 == want, (g, k, p)
+
+
+def test_screen_is_sound_superset():
+    # Every patch where a clause fires for ANY image in the block must
+    # survive the screen intersection S_j.
+    rng = random.Random(13)
+    for g in GEOMETRIES:
+        side = g[0]
+        pos = positions(*g)
+        imgs, clauses, _, _ = random_case(rng, g, 16)
+        packed = [pack_rows(img, side) for img in imgs]
+        rows_any = [0] * side
+        rows_all = [M64] * side
+        for rows in packed:
+            for r in range(side):
+                rows_any[r] |= rows[r]
+                rows_all[r] &= rows[r]
+        for lits in clauses:
+            if not lits:
+                continue
+            sj = full_mask(pos)
+            for k in lits:
+                q = screen_set(rows_any, rows_all, g, k)
+                sj = [a & b for a, b in zip(sj, q)]
+            for img in imgs:
+                for p in range(pos * pos):
+                    x, y = p % pos, p // pos
+                    if all(patch_literal(img, g, x, y, k) for k in lits):
+                        assert (sj[p // 64] >> (p % 64)) & 1 == 1
+
+
+def test_blocked_equals_reference_across_geometries_and_block_sizes():
+    rng = random.Random(29)
+    for g in GEOMETRIES:
+        imgs, clauses, weights, classes = random_case(rng, g, 37)
+        want = ref_eval(imgs, g, clauses, weights, classes)
+        for block in (1, 7, 8, 31, 32, 64):
+            got = block_eval(imgs, g, clauses, weights, classes, block)
+            assert got == want, (g, block)
+
+
+def test_ragged_tail_and_tiny_blocks():
+    rng = random.Random(31)
+    g = (28, 10, 2)
+    for n in (1, 3, 9, 33, 65):
+        imgs, clauses, weights, classes = random_case(rng, g, n)
+        want = ref_eval(imgs, g, clauses, weights, classes)
+        got = block_eval(imgs, g, clauses, weights, classes, 32)
+        assert got == want, n

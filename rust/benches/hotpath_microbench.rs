@@ -24,7 +24,7 @@ use convcotm::coordinator::{
     Backend, BatchConfig, Coordinator, ModelRegistry, NativeBackend, PoolConfig,
 };
 use convcotm::data::SynthFamily;
-use convcotm::tm::{ClausePlan, Engine, EvalScratch, Trainer};
+use convcotm::tm::{BlockEval, ClausePlan, Engine, EvalScratch, Trainer};
 use convcotm::util::json::Json;
 use convcotm::util::stats::Summary;
 use convcotm::util::Table;
@@ -236,6 +236,24 @@ fn main() {
     });
     let plan_allocs = rows.last().and_then(|r| r.allocs_per_img).unwrap_or(f64::NAN);
 
+    // Image-major blocked evaluation (tm::block): each clause's CSR row is
+    // walked once per 32-image block and literal tests land on 64 image
+    // lanes per word op. Acceptance bar: ≥1.5× the compiled-plan row at
+    // exactly 0 allocs/img (the block arena is grown once by the warmup).
+    let block = BlockEval::compile(&plan);
+    let ref_blocks: Vec<Vec<&convcotm::data::BoolImage>> = images
+        .chunks(32)
+        .filter(|c| c.len() == 32)
+        .map(|c| c.iter().collect())
+        .collect();
+    let mut blk = 0usize;
+    let blocked_rate = throughput("native engine (blocked B=32)", &mut t, &mut rows, 32, || {
+        let refs = &ref_blocks[blk % ref_blocks.len()];
+        blk += 1;
+        std::hint::black_box(engine.classify_block_with(&block, refs, 32, &mut scratch));
+    });
+    let blocked_allocs = rows.last().and_then(|r| r.allocs_per_img).unwrap_or(f64::NAN);
+
     // Native engine, mask-scan early-exit (the pre-plan fast path).
     let mut idx = 0usize;
     let native_rate = throughput("native engine (early-exit)", &mut t, &mut rows, 1, || {
@@ -310,6 +328,18 @@ fn main() {
             refs.len(),
             || {
                 std::hint::black_box(parallel.classify(&refs).unwrap());
+            },
+        );
+        // The allocation-free blocked core: borrowed predictions, no
+        // per-image output materialization (`classify_block`).
+        let mut blocked_backend = NativeBackend::with_threads(model.clone(), 1);
+        throughput(
+            &format!("NativeBackend batch={} (blocked)", refs.len()),
+            &mut t,
+            &mut rows,
+            refs.len(),
+            || {
+                std::hint::black_box(blocked_backend.classify_block(&refs).unwrap());
             },
         );
     }
@@ -428,6 +458,16 @@ fn main() {
             "MISSED"
         }
     );
+    let block_speedup = blocked_rate / plan_rate;
+    println!(
+        "blocked B=32 vs compiled plan: {block_speedup:.2}× (target ≥1.5×) at \
+         {blocked_allocs:.1} allocs/img (target 0) — {}",
+        if block_speedup >= 1.5 && blocked_allocs == 0.0 {
+            "HOLDS"
+        } else {
+            "MISSED"
+        }
+    );
     let pool_speedup = pool_rates[1] / pool_rates[0];
     println!(
         "shard pool 4 vs 1: {pool_speedup:.2}× on {} core(s) (tests/serving_pool.rs asserts ≥2× with ≥4 cores)",
@@ -535,6 +575,7 @@ fn main() {
             "plan_speedup_vs_early_exit",
             Json::num(plan_rate / native_rate),
         ),
+        ("block_speedup_vs_plan", Json::num(block_speedup)),
         ("pool_speedup_4v1_shards", Json::num(pool_speedup)),
         ("http_overhead_us", Json::num(http_overhead_us)),
         ("http_speedup_4v1_shards", Json::num(http_rates[1] / http_rates[0])),

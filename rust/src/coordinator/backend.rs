@@ -11,7 +11,7 @@
 use crate::asic::{Accelerator, ChipConfig};
 use crate::data::boolean::BoolImage;
 use crate::data::Geometry;
-use crate::tm::{ClausePlan, EvalScratch, Model};
+use crate::tm::{BlockEval, ClausePlan, EvalScratch, Model, DEFAULT_BLOCK, MIN_BLOCK};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
@@ -79,22 +79,31 @@ fn validate_geometry(name: &str, g: Geometry, imgs: &[&BoolImage]) -> Result<()>
 
 /// The native Rust golden-model engine (SW baseline). The model is
 /// compiled once into a [`ClausePlan`] (sparse ordered include lists +
-/// clause-major weights) and every worker evaluates through a reusable
-/// [`EvalScratch`] arena, so the *plan-evaluation step* is allocation-free
-/// (constructing each `BackendOutput` still allocates its class-sums Vec —
-/// that is the serving API's cost, not the evaluator's). Batches are
-/// classified in parallel across worker threads (scoped; images are
-/// independent), which is what lets the coordinator's dynamic batching use
-/// more than one core.
+/// clause-major weights) plus its image-major [`BlockEval`] twin; batches
+/// of ≥ [`MIN_BLOCK`] images route through the blocked bit-sliced path
+/// (each clause row processed once per block of [`DEFAULT_BLOCK`] images),
+/// smaller runs stay per-image. Every worker evaluates through a reusable
+/// [`EvalScratch`] arena, so the *evaluation step* is allocation-free in
+/// both modes (constructing each `BackendOutput` still allocates its
+/// class-sums Vec — that is the serving API's cost, not the evaluator's;
+/// [`Self::classify_block`] exposes the allocation-free core directly).
+/// Batches are classified in parallel across worker threads (scoped;
+/// images are independent), which is what lets the coordinator's dynamic
+/// batching use more than one core.
 pub struct NativeBackend {
     model: Arc<Model>,
     plan: Arc<ClausePlan>,
+    /// Image-major compiled twin of `plan` (`tm::block`).
+    block: Arc<BlockEval>,
     threads: usize,
     /// Serial-path arena.
     scratch: EvalScratch,
     /// Parallel-path arenas, one per worker, persisted across batches so
     /// the per-batch scoped threads re-use warm patch-set tables.
     worker_scratch: Vec<EvalScratch>,
+    /// Debug-only: blocked vs scalar cross-check ran on the first batch.
+    #[cfg(debug_assertions)]
+    cross_checked: bool,
 }
 
 /// Classify one image through the compiled plan + arena.
@@ -130,15 +139,98 @@ impl NativeBackend {
     /// Build from an already-compiled shared plan — e.g. a registry
     /// [`crate::coordinator::ModelEntry`]'s — so N backends over the same
     /// model pay for one compilation, not N (the shard pool's sharing
-    /// contract, here available to trait-object serving too).
+    /// contract, here available to trait-object serving too). The blocked
+    /// twin is derived from the plan here (cheap relative to plan
+    /// compilation: a CSR copy plus op extraction).
     pub fn from_shared_plan(model: Arc<Model>, plan: Arc<ClausePlan>, threads: usize) -> Self {
+        let block = Arc::new(BlockEval::compile(&plan));
         NativeBackend {
             model,
             plan,
+            block,
             threads: threads.max(1),
             scratch: EvalScratch::new(),
             worker_scratch: Vec::new(),
+            #[cfg(debug_assertions)]
+            cross_checked: false,
         }
+    }
+
+    /// The allocation-free blocked core: classify the whole batch through
+    /// the image-major path into the internal arena and return the
+    /// predictions (per-image class sums stay readable via
+    /// `scratch.block()`; this is the path the hot-path bench measures at
+    /// 0.0 allocs/image). The trait's [`Backend::classify`] routes through
+    /// the same evaluator and then materializes owned `BackendOutput`s.
+    pub fn classify_block(&mut self, imgs: &[&BoolImage]) -> Result<&[u8]> {
+        validate_geometry("native", self.model.params.geometry, imgs)?;
+        self.block
+            .classify_block_into(imgs, DEFAULT_BLOCK, &mut self.scratch.block);
+        Ok(self.scratch.block().predictions())
+    }
+
+    /// Debug builds cross-check the blocked path against the scalar plan
+    /// on the first sufficiently large batch this backend serves — the
+    /// serial ≡ blocked invariant as a runtime assertion (mirrors the
+    /// shard pool's post-hot-swap check).
+    #[cfg(debug_assertions)]
+    fn cross_check_first_batch(&mut self, imgs: &[&BoolImage]) {
+        if self.cross_checked || imgs.len() < MIN_BLOCK {
+            return;
+        }
+        self.cross_checked = true;
+        let NativeBackend {
+            plan,
+            block,
+            scratch,
+            ..
+        } = self;
+        block.classify_block_into(imgs, DEFAULT_BLOCK, &mut scratch.block);
+        for (i, img) in imgs.iter().enumerate() {
+            let blocked_pred = scratch.block.predictions()[i];
+            let scalar_pred = plan.classify_into(img, scratch);
+            debug_assert_eq!(
+                blocked_pred, scalar_pred,
+                "blocked vs scalar prediction divergence on image {i}"
+            );
+            debug_assert_eq!(
+                scratch.block.class_sums(i),
+                scratch.class_sums(),
+                "blocked vs scalar class-sum divergence on image {i}"
+            );
+        }
+    }
+}
+
+/// Materialize the blocked arena's results for `n` images as owned
+/// backend outputs (the serving API's per-image allocation).
+fn block_outputs(scratch: &EvalScratch, n: usize) -> Vec<BackendOutput> {
+    let block = scratch.block();
+    (0..n)
+        .map(|i| BackendOutput {
+            prediction: block.predictions()[i],
+            class_sums: block.class_sums(i).to_vec(),
+            sim_cycles: None,
+            model_version: None,
+        })
+        .collect()
+}
+
+/// Classify one worker's chunk: blocked when large enough to amortize the
+/// per-block transpose + screen build, scalar otherwise.
+fn classify_chunk(
+    plan: &ClausePlan,
+    block: &BlockEval,
+    part: &[&BoolImage],
+    scratch: &mut EvalScratch,
+) -> Vec<BackendOutput> {
+    if part.len() >= MIN_BLOCK {
+        block.classify_block_into(part, DEFAULT_BLOCK, &mut scratch.block);
+        block_outputs(scratch, part.len())
+    } else {
+        part.iter()
+            .map(|img| plan_classify_one(plan, img, scratch))
+            .collect()
     }
 }
 
@@ -157,35 +249,36 @@ impl Backend for NativeBackend {
 
     fn classify(&mut self, imgs: &[&BoolImage]) -> Result<Vec<BackendOutput>> {
         validate_geometry(self.name(), self.geometry(), imgs)?;
+        #[cfg(debug_assertions)]
+        self.cross_check_first_batch(imgs);
         let threads = self.threads.min(imgs.len());
         // Scoped threads are spawned per batch; below this size the spawn
         // cost exceeds the ~µs-scale per-image engine work, so stay serial.
         const MIN_PARALLEL_BATCH: usize = 8;
         if threads <= 1 || imgs.len() < MIN_PARALLEL_BATCH {
-            let NativeBackend { plan, scratch, .. } = self;
-            return Ok(imgs
-                .iter()
-                .map(|img| plan_classify_one(plan, img, scratch))
-                .collect());
+            let NativeBackend {
+                plan,
+                block,
+                scratch,
+                ..
+            } = self;
+            return Ok(classify_chunk(plan, block, imgs, scratch));
         }
-        // Chunk the batch across scoped threads; the plan is shared
+        // Chunk the batch across scoped threads; the plans are shared
         // read-only, each worker borrows its persistent arena for the
-        // whole chunk.
+        // whole chunk and evaluates it blocked when large enough.
         if self.worker_scratch.len() < threads {
             self.worker_scratch.resize_with(threads, EvalScratch::new);
         }
         let chunk = imgs.len().div_ceil(threads);
         let plan = &self.plan;
+        let block = &self.block;
         let outputs = std::thread::scope(|s| {
             let handles: Vec<_> = imgs
                 .chunks(chunk)
                 .zip(self.worker_scratch.iter_mut())
                 .map(|(part, scratch)| {
-                    s.spawn(move || {
-                        part.iter()
-                            .map(|img| plan_classify_one(plan, img, scratch))
-                            .collect::<Vec<_>>()
-                    })
+                    s.spawn(move || classify_chunk(plan, block, part, scratch))
                 })
                 .collect();
             handles
@@ -424,6 +517,27 @@ mod tests {
             parallel.classify(&refs).unwrap(),
             "batch parallelism must not change results or order"
         );
+    }
+
+    #[test]
+    fn blocked_batches_match_per_image_classification() {
+        let model = random_model(8);
+        let imgs = random_images(9, 50);
+        let refs: Vec<&BoolImage> = imgs.iter().collect();
+        let mut backend = NativeBackend::with_threads(model, 1);
+        // Large serial batch routes through the blocked path…
+        let batched = backend.classify(&refs).unwrap();
+        // …while single-image calls stay scalar (below MIN_BLOCK): both
+        // must produce identical outputs.
+        for (i, img) in refs.iter().enumerate() {
+            let single = backend.classify(&[img]).unwrap();
+            assert_eq!(single[0], batched[i], "image {i}");
+        }
+        // The allocation-free core agrees with the trait surface.
+        let preds = backend.classify_block(&refs).unwrap().to_vec();
+        for (i, out) in batched.iter().enumerate() {
+            assert_eq!(preds[i], out.prediction, "image {i}");
+        }
     }
 
     #[test]

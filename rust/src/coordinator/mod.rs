@@ -18,6 +18,13 @@
 //!   evaluates through `Arc<ClausePlan>`s compiled once per model.
 //!   Requests carry an optional model id and are routed to the shard with
 //!   the fewest outstanding requests.
+//!
+//! Client batches travel as **one block** ([`Coordinator::try_submit_block_to`]):
+//! a block holds a single queue slot, counts as its image count toward the
+//! shard's outstanding bound, and is evaluated image-major through the
+//! model's [`crate::tm::BlockEval`] twin — each CSR clause row is walked
+//! once per block of up to 64 images instead of once per image. Each image
+//! inside a block still succeeds or fails alone.
 
 pub mod backend;
 pub mod batcher;
@@ -34,7 +41,7 @@ pub use registry::{ModelEntry, ModelRegistry, RegistryError};
 pub use sysproc::SysProc;
 
 use crate::data::boolean::BoolImage;
-use crate::tm::EvalScratch;
+use crate::tm::{EvalScratch, DEFAULT_BLOCK, MIN_BLOCK};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -77,14 +84,38 @@ impl Default for PoolConfig {
     }
 }
 
-/// An in-flight request.
+/// An in-flight unit of work: one image, or a client batch submitted and
+/// answered as a single block (the HTTP `images` path).
 struct Request {
     /// Registry model id; `None` routes to the pool's default model (or
     /// the single backend in backend mode).
     model: Option<String>,
-    img: BoolImage,
     enqueued: Instant,
-    resp: Sender<anyhow::Result<BackendOutput>>,
+    payload: Payload,
+}
+
+/// The work and its reply channel. A block is answered with one `Vec` in
+/// input order; each image inside it succeeds or fails alone.
+enum Payload {
+    One(BoolImage, Sender<anyhow::Result<BackendOutput>>),
+    Block(Vec<BoolImage>, Sender<Vec<anyhow::Result<BackendOutput>>>),
+}
+
+impl Request {
+    /// Images carried by this unit (1 for singles).
+    fn n_images(&self) -> usize {
+        match &self.payload {
+            Payload::One(..) => 1,
+            Payload::Block(imgs, _) => imgs.len(),
+        }
+    }
+
+    fn images(&self) -> &[BoolImage] {
+        match &self.payload {
+            Payload::One(img, _) => std::slice::from_ref(img),
+            Payload::Block(imgs, _) => imgs.as_slice(),
+        }
+    }
 }
 
 /// One worker thread plus its submission side.
@@ -263,6 +294,97 @@ impl Coordinator {
         })
     }
 
+    /// Submit a client batch as **one** unit without blocking. The block
+    /// occupies a single queue slot but counts as `imgs.len()` images
+    /// toward each shard's outstanding bound, so a burst of big batches
+    /// sheds with [`Overloaded`] exactly like the equivalent burst of
+    /// single submissions would (a block larger than the queue capacity is
+    /// admitted only onto an idle shard). The receiver yields one `Vec` in
+    /// input order; each image inside the block succeeds or fails alone.
+    pub fn try_submit_block_to(
+        &self,
+        model: Option<&str>,
+        imgs: Vec<BoolImage>,
+    ) -> Result<Receiver<Vec<anyhow::Result<BackendOutput>>>, Overloaded> {
+        let (resp_tx, resp_rx) = channel();
+        if imgs.is_empty() {
+            let _ = resp_tx.send(Vec::new());
+            return Ok(resp_rx);
+        }
+        let n = imgs.len();
+        let mut req = Request {
+            model: model.map(str::to_string),
+            enqueued: Instant::now(),
+            payload: Payload::Block(imgs, resp_tx),
+        };
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        order.sort_by_key(|&i| self.shards[i].outstanding.load(Ordering::Acquire));
+        for &i in &order {
+            let shard = &self.shards[i];
+            // Image-count admission: don't let a block pile onto a shard
+            // that the equivalent per-image burst would have saturated.
+            // (outstanding == 0 always admits, so a block larger than the
+            // queue bound is still servable on an idle shard.)
+            let loaded = shard.outstanding.load(Ordering::Acquire);
+            if loaded > 0 && loaded + n > self.queue_capacity {
+                continue;
+            }
+            let tx = shard.tx.as_ref().expect("coordinator running");
+            shard.outstanding.fetch_add(n, Ordering::AcqRel);
+            match tx.try_send(req) {
+                Ok(()) => return Ok(resp_rx),
+                Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => {
+                    shard.outstanding.fetch_sub(n, Ordering::AcqRel);
+                    req = r;
+                }
+            }
+        }
+        Err(Overloaded {
+            shards: self.shards.len(),
+            capacity: self.queue_capacity,
+        })
+    }
+
+    /// Blocking variant of [`Self::try_submit_block_to`]: routes to the
+    /// least-loaded shard and applies backpressure on its queue slot.
+    pub fn submit_block_to(
+        &self,
+        model: Option<&str>,
+        imgs: Vec<BoolImage>,
+    ) -> Receiver<Vec<anyhow::Result<BackendOutput>>> {
+        let (resp_tx, resp_rx) = channel();
+        if imgs.is_empty() {
+            let _ = resp_tx.send(Vec::new());
+            return resp_rx;
+        }
+        let n = imgs.len();
+        let req = Request {
+            model: model.map(str::to_string),
+            enqueued: Instant::now(),
+            payload: Payload::Block(imgs, resp_tx),
+        };
+        let i = self.least_loaded();
+        let shard = &self.shards[i];
+        shard.outstanding.fetch_add(n, Ordering::AcqRel);
+        shard.tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(req)
+            .expect("shard worker alive");
+        resp_rx
+    }
+
+    /// Submit a batch as one block and wait for the per-image results.
+    pub fn classify_block(
+        &self,
+        model: Option<&str>,
+        imgs: Vec<BoolImage>,
+    ) -> anyhow::Result<Vec<anyhow::Result<BackendOutput>>> {
+        self.submit_block_to(model, imgs)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped request"))
+    }
+
     /// Submit and wait.
     pub fn classify(&self, img: BoolImage) -> anyhow::Result<BackendOutput> {
         self.classify_model(None, img)
@@ -302,9 +424,8 @@ impl Coordinator {
         (
             Request {
                 model: model.map(str::to_string),
-                img,
                 enqueued: Instant::now(),
-                resp: resp_tx,
+                payload: Payload::One(img, resp_tx),
             },
             resp_rx,
         )
@@ -349,56 +470,77 @@ fn backend_worker<B: Backend>(
     };
     let geometry = backend.geometry();
     while let Some(batch) = batcher::next_batch(&rx, &effective) {
-        // Reject bad requests individually so one bad client cannot poison
-        // the co-batched valid requests: wrong geometry, or a model id
-        // (backend mode serves a single anonymous model).
-        let (batch, bad): (Vec<Request>, Vec<Request>) = batch
-            .into_iter()
-            .partition(|r| r.model.is_none() && r.img.side() == geometry.img_side);
-        for req in bad {
-            m.record_error(1);
-            let err = match &req.model {
-                Some(name) => anyhow::anyhow!(
-                    "this coordinator serves a single unnamed backend; model '{name}' \
-                     requires a registry pool (Coordinator::start_pool)"
-                ),
-                None => {
-                    let side = req.img.side();
-                    anyhow::anyhow!(
+        // Per-image result slots, one row per request unit. Bad images are
+        // rejected individually so one bad client cannot poison co-batched
+        // valid traffic: wrong geometry, or a model id (backend mode serves
+        // a single anonymous model — every image of such a block fails).
+        let mut results: Vec<Vec<Option<anyhow::Result<BackendOutput>>>> = batch
+            .iter()
+            .map(|r| (0..r.n_images()).map(|_| None).collect())
+            .collect();
+        let mut work: Vec<(usize, usize)> = Vec::new();
+        let mut bad = 0u64;
+        for (u, req) in batch.iter().enumerate() {
+            for (i, img) in req.images().iter().enumerate() {
+                if let Some(name) = &req.model {
+                    results[u][i] = Some(Err(anyhow::anyhow!(
+                        "this coordinator serves a single unnamed backend; model '{name}' \
+                         requires a registry pool (Coordinator::start_pool)"
+                    )));
+                    bad += 1;
+                } else if img.side() != geometry.img_side {
+                    let side = img.side();
+                    results[u][i] = Some(Err(anyhow::anyhow!(
                         "request image is {side}x{side} but the served model expects \
                          {}x{} (geometry {geometry})",
                         geometry.img_side,
                         geometry.img_side
-                    )
-                }
-            };
-            let _ = req.resp.send(Err(err));
-            outstanding.fetch_sub(1, Ordering::AcqRel);
-        }
-        if batch.is_empty() {
-            continue;
-        }
-        let imgs: Vec<&BoolImage> = batch.iter().map(|r| &r.img).collect();
-        match backend.classify(&imgs) {
-            Ok(outputs) => {
-                let now = Instant::now();
-                let lat: Vec<f64> = batch
-                    .iter()
-                    .map(|r| (now - r.enqueued).as_secs_f64() * 1e6)
-                    .collect();
-                m.record_batch(batch.len(), &lat);
-                for (req, out) in batch.into_iter().zip(outputs) {
-                    let _ = req.resp.send(Ok(out));
-                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                    )));
+                    bad += 1;
+                } else {
+                    work.push((u, i));
                 }
             }
-            Err(e) => {
-                m.record_error(batch.len() as u64);
-                for req in batch {
-                    let _ = req.resp.send(Err(anyhow::anyhow!("{e}")));
-                    outstanding.fetch_sub(1, Ordering::AcqRel);
+        }
+        if bad > 0 {
+            m.record_error(bad);
+        }
+        // A block may carry more images than the backend accepts per call:
+        // chunk the flat work list to the effective batch bound.
+        for chunk in work.chunks(effective.max_batch.max(1)) {
+            let imgs: Vec<&BoolImage> = chunk.iter().map(|&(u, i)| &batch[u].images()[i]).collect();
+            match backend.classify(&imgs) {
+                Ok(outputs) => {
+                    let now = Instant::now();
+                    let lat: Vec<f64> = chunk
+                        .iter()
+                        .map(|&(u, _)| (now - batch[u].enqueued).as_secs_f64() * 1e6)
+                        .collect();
+                    m.record_batch(chunk.len(), &lat);
+                    for (&(u, i), out) in chunk.iter().zip(outputs) {
+                        results[u][i] = Some(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    m.record_error(chunk.len() as u64);
+                    for &(u, i) in chunk {
+                        results[u][i] = Some(Err(anyhow::anyhow!("{e}")));
+                    }
                 }
             }
+        }
+        for (req, row) in batch.into_iter().zip(results) {
+            let n = req.n_images();
+            let mut row = row.into_iter().map(|r| r.expect("every slot filled"));
+            match req.payload {
+                Payload::One(_, resp) => {
+                    let _ = resp.send(row.next().expect("one slot for a single"));
+                }
+                Payload::Block(_, resp) => {
+                    let _ = resp.send(row.collect());
+                }
+            }
+            outstanding.fetch_sub(n, Ordering::AcqRel);
         }
     }
 }
@@ -419,43 +561,113 @@ fn pool_worker(
     // in one locked call per (batch, model) run — the hot path takes the
     // metrics mutex O(models-per-batch) times, not once per request.
     let mut run_lat: Vec<f64> = Vec::new();
+    // Debug builds cross-check the blocked evaluator against the scalar
+    // plan on the first block served for each (model, version) — i.e. on
+    // the first block after every hot-swap.
+    #[cfg(debug_assertions)]
+    let mut cross_checked: Option<(String, u64)> = None;
     while let Some(batch) = batcher::next_batch(&rx, &cfg) {
-        m.record_batch_size(batch.len());
+        m.record_batch_size(batch.iter().map(Request::n_images).sum());
         // Entry cache for this batch only: consecutive requests for one
         // model skip the registry's read lock, while a new batch always
         // re-resolves and therefore observes completed swaps.
         let mut cached: Option<(Option<String>, Arc<ModelEntry>)> = None;
         let mut run: Option<Arc<ModelEntry>> = None;
         for req in batch {
-            match serve_one(&registry, &mut cached, &req, &mut scratch) {
-                Ok((entry, out)) => {
-                    let lat = (Instant::now() - req.enqueued).as_secs_f64() * 1e6;
-                    match &run {
-                        Some(r) if Arc::ptr_eq(r, &entry) => run_lat.push(lat),
-                        _ => {
-                            if let Some(r) = run.take() {
-                                m.record_model_batch(&r.name, &run_lat);
-                                run_lat.clear();
+            let Request {
+                model,
+                enqueued,
+                payload,
+            } = req;
+            match payload {
+                Payload::One(img, resp) => {
+                    match serve_one(&registry, &mut cached, &model, &img, &mut scratch) {
+                        Ok((entry, out)) => {
+                            let lat = (Instant::now() - enqueued).as_secs_f64() * 1e6;
+                            match &run {
+                                Some(r) if Arc::ptr_eq(r, &entry) => run_lat.push(lat),
+                                _ => {
+                                    if let Some(r) = run.take() {
+                                        m.record_model_batch(&r.name, &run_lat);
+                                        run_lat.clear();
+                                    }
+                                    run_lat.push(lat);
+                                    run = Some(entry);
+                                }
                             }
-                            run_lat.push(lat);
-                            run = Some(entry);
+                            let _ = resp.send(Ok(out));
+                        }
+                        Err((attribution, e)) => {
+                            // Attribute to the model that rejected the
+                            // request (the resolved entry for geometry
+                            // errors, the requested id for unknown models);
+                            // resolution failures with no id at all count
+                            // globally only.
+                            match attribution {
+                                Some(name) => m.record_model_error(&name, 1),
+                                None => m.record_error(1),
+                            }
+                            let _ = resp.send(Err(e));
                         }
                     }
-                    let _ = req.resp.send(Ok(out));
+                    outstanding.fetch_sub(1, Ordering::AcqRel);
                 }
-                Err((attribution, e)) => {
-                    // Attribute to the model that rejected the request
-                    // (the resolved entry for geometry errors, the
-                    // requested id for unknown models); resolution
-                    // failures with no id at all count globally only.
-                    match attribution {
-                        Some(name) => m.record_model_error(&name, 1),
-                        None => m.record_error(1),
+                Payload::Block(imgs, resp) => {
+                    let n = imgs.len();
+                    let (served, outcomes) =
+                        serve_block(&registry, &mut cached, &model, &imgs, &mut scratch);
+                    #[cfg(debug_assertions)]
+                    if let Some(entry) = &served {
+                        let key = (entry.name.clone(), entry.version);
+                        if cross_checked.as_ref() != Some(&key) {
+                            cross_checked = Some(key);
+                            for (img, out) in imgs.iter().zip(&outcomes) {
+                                if let Ok(out) = out {
+                                    let pred = entry.plan.classify_into(img, &mut scratch);
+                                    debug_assert_eq!(
+                                        pred, out.prediction,
+                                        "blocked prediction diverges from scalar plan \
+                                         after hot-swap of '{}' v{}",
+                                        entry.name, entry.version
+                                    );
+                                    debug_assert_eq!(
+                                        scratch.class_sums(),
+                                        &out.class_sums[..],
+                                        "blocked class sums diverge from scalar plan \
+                                         after hot-swap of '{}' v{}",
+                                        entry.name, entry.version
+                                    );
+                                }
+                            }
+                        }
                     }
-                    let _ = req.resp.send(Err(e));
+                    let lat = (Instant::now() - enqueued).as_secs_f64() * 1e6;
+                    let ok = outcomes.iter().filter(|r| r.is_ok()).count();
+                    let errs = (outcomes.len() - ok) as u64;
+                    match &served {
+                        Some(entry) => {
+                            if ok > 0 {
+                                if let Some(r) = run.take() {
+                                    m.record_model_batch(&r.name, &run_lat);
+                                    run_lat.clear();
+                                }
+                                m.record_model_batch(&entry.name, &vec![lat; ok]);
+                            }
+                            if errs > 0 {
+                                m.record_model_error(&entry.name, errs);
+                            }
+                        }
+                        // Resolution failed: every image fails alone with
+                        // the same error, attributed like the single path.
+                        None => match &model {
+                            Some(name) => m.record_model_error(name, errs),
+                            None => m.record_error(errs),
+                        },
+                    }
+                    let _ = resp.send(outcomes);
+                    outstanding.fetch_sub(n, Ordering::AcqRel);
                 }
             }
-            outstanding.fetch_sub(1, Ordering::AcqRel);
         }
         if let Some(r) = run.take() {
             m.record_model_batch(&r.name, &run_lat);
@@ -472,22 +684,17 @@ fn pool_worker(
 fn serve_one(
     registry: &ModelRegistry,
     cached: &mut Option<(Option<String>, Arc<ModelEntry>)>,
-    req: &Request,
+    model: &Option<String>,
+    img: &BoolImage,
     scratch: &mut EvalScratch,
 ) -> Result<(Arc<ModelEntry>, BackendOutput), (Option<String>, anyhow::Error)> {
-    let entry = match cached {
-        Some((key, entry)) if *key == req.model => Arc::clone(entry),
-        _ => match registry.resolve(req.model.as_deref()) {
-            Ok(entry) => {
-                *cached = Some((req.model.clone(), Arc::clone(&entry)));
-                entry
-            }
-            Err(e) => return Err((req.model.clone(), anyhow::Error::from(e))),
-        },
+    let entry = match resolve_cached(registry, cached, model) {
+        Ok(entry) => entry,
+        Err(e) => return Err((model.clone(), anyhow::Error::from(e))),
     };
     let g = entry.plan.geometry();
-    if req.img.side() != g.img_side {
-        let side = req.img.side();
+    if img.side() != g.img_side {
+        let side = img.side();
         let e = anyhow::anyhow!(
             "request image is {side}x{side} but model '{}' expects {}x{} (geometry {g})",
             entry.name,
@@ -496,7 +703,7 @@ fn serve_one(
         );
         return Err((Some(entry.name.clone()), e));
     }
-    let prediction = entry.plan.classify_into(&req.img, scratch);
+    let prediction = entry.plan.classify_into(img, scratch);
     let out = BackendOutput {
         prediction,
         class_sums: scratch.class_sums().to_vec(),
@@ -507,6 +714,99 @@ fn serve_one(
         model_version: Some(entry.version),
     };
     Ok((entry, out))
+}
+
+/// Resolve a model id through the per-batch entry cache.
+fn resolve_cached(
+    registry: &ModelRegistry,
+    cached: &mut Option<(Option<String>, Arc<ModelEntry>)>,
+    model: &Option<String>,
+) -> Result<Arc<ModelEntry>, RegistryError> {
+    match cached {
+        Some((key, entry)) if key == model => Ok(Arc::clone(entry)),
+        _ => {
+            let entry = registry.resolve(model.as_deref())?;
+            *cached = Some((model.clone(), Arc::clone(&entry)));
+            Ok(entry)
+        }
+    }
+}
+
+/// Serve a block: resolve the model once, validate geometry per image, and
+/// run every valid image through the entry's image-major [`BlockEval`]
+/// twin ([`crate::tm::BlockEval`]) when the block is big enough to
+/// amortize the transpose (`MIN_BLOCK`), the scalar plan otherwise. Per
+/// image isolation: a bad image yields an `Err` in its slot while the rest
+/// of the block is served normally. Returns the entry that served the
+/// block (None when resolution itself failed) and per-image outcomes in
+/// input order.
+#[allow(clippy::type_complexity)]
+fn serve_block(
+    registry: &ModelRegistry,
+    cached: &mut Option<(Option<String>, Arc<ModelEntry>)>,
+    model: &Option<String>,
+    imgs: &[BoolImage],
+    scratch: &mut EvalScratch,
+) -> (Option<Arc<ModelEntry>>, Vec<anyhow::Result<BackendOutput>>) {
+    let entry = match resolve_cached(registry, cached, model) {
+        Ok(entry) => entry,
+        Err(e) => {
+            // Typed per image so callers can still downcast to
+            // `RegistryError` (the HTTP layer's 404 mapping).
+            let out = imgs
+                .iter()
+                .map(|_| Err(anyhow::Error::from(e.clone())))
+                .collect();
+            return (None, out);
+        }
+    };
+    let g = entry.plan.geometry();
+    let mut results: Vec<Option<anyhow::Result<BackendOutput>>> =
+        (0..imgs.len()).map(|_| None).collect();
+    let mut valid_idx: Vec<usize> = Vec::with_capacity(imgs.len());
+    let mut valid: Vec<&BoolImage> = Vec::with_capacity(imgs.len());
+    for (i, img) in imgs.iter().enumerate() {
+        if img.side() != g.img_side {
+            let side = img.side();
+            results[i] = Some(Err(anyhow::anyhow!(
+                "request image is {side}x{side} but model '{}' expects {}x{} (geometry {g})",
+                entry.name,
+                g.img_side,
+                g.img_side
+            )));
+        } else {
+            valid_idx.push(i);
+            valid.push(img);
+        }
+    }
+    if valid.len() >= MIN_BLOCK {
+        entry
+            .block
+            .classify_block_into(&valid, DEFAULT_BLOCK, &mut scratch.block);
+        for (slot, &i) in valid_idx.iter().enumerate() {
+            results[i] = Some(Ok(BackendOutput {
+                prediction: scratch.block.predictions()[slot],
+                class_sums: scratch.block.class_sums(slot).to_vec(),
+                sim_cycles: None,
+                model_version: Some(entry.version),
+            }));
+        }
+    } else {
+        for &i in &valid_idx {
+            let prediction = entry.plan.classify_into(&imgs[i], scratch);
+            results[i] = Some(Ok(BackendOutput {
+                prediction,
+                class_sums: scratch.class_sums().to_vec(),
+                sim_cycles: None,
+                model_version: Some(entry.version),
+            }));
+        }
+    }
+    let out = results
+        .into_iter()
+        .map(|r| r.expect("every slot filled"))
+        .collect();
+    (Some(entry), out)
 }
 
 #[cfg(test)]
@@ -652,6 +952,93 @@ mod tests {
         let snap = coord.shutdown();
         assert_eq!(snap.errors, 1);
         assert_eq!(snap.requests, 1);
+    }
+
+    #[test]
+    fn block_submission_matches_engine_and_isolates_bad_images() {
+        let model = random_model(31);
+        let coord = Coordinator::start_pool(
+            ModelRegistry::single("m", model.clone()),
+            PoolConfig {
+                shards: 2,
+                ..PoolConfig::default()
+            },
+        );
+        let engine = Engine::new();
+        let mut imgs = random_images(32, 20);
+        imgs.insert(7, crate::data::BoolImage::blank_sized(32));
+        let rx = coord
+            .try_submit_block_to(Some("m"), imgs.clone())
+            .expect("idle pool accepts the block");
+        let results = rx.recv().unwrap();
+        assert_eq!(results.len(), 21);
+        for (i, r) in results.iter().enumerate() {
+            if i == 7 {
+                let err = r.as_ref().unwrap_err().to_string();
+                assert!(err.contains("32x32"), "{err}");
+            } else {
+                let out = r.as_ref().unwrap();
+                assert_eq!(out.prediction, engine.classify(&model, &imgs[i]).prediction);
+                assert_eq!(out.model_version, Some(1));
+            }
+        }
+        // An unknown model fails every image of the block alone.
+        let rx = coord
+            .try_submit_block_to(Some("ghost"), random_images(33, 3))
+            .unwrap();
+        let ghost = rx.recv().unwrap();
+        assert_eq!(ghost.len(), 3);
+        for r in &ghost {
+            let err = r.as_ref().unwrap_err().to_string();
+            assert!(err.contains("unknown model 'ghost'"), "{err}");
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests, 20);
+        assert_eq!(snap.errors, 4);
+        assert_eq!(snap.per_model["m"].requests, 20);
+        assert_eq!(snap.per_model["m"].errors, 1);
+        assert_eq!(snap.per_model["ghost"].errors, 3);
+    }
+
+    #[test]
+    fn backend_mode_serves_blocks_chunked_to_max_batch() {
+        let model = random_model(41);
+        // 100 images exceeds NativeBackend::max_batch (64): the worker must
+        // chunk the block before handing it to the backend.
+        let coord = Coordinator::start(
+            Box::new(NativeBackend::new(model.clone())),
+            BatchConfig::default(),
+        );
+        let imgs = random_images(42, 100);
+        let results = coord.classify_block(None, imgs.clone()).unwrap();
+        assert_eq!(results.len(), 100);
+        let engine = Engine::new();
+        for (img, r) in imgs.iter().zip(&results) {
+            let out = r.as_ref().unwrap();
+            assert_eq!(out.prediction, engine.classify(&model, img).prediction);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests, 100);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn idle_shard_accepts_block_larger_than_queue_bound() {
+        let model = random_model(51);
+        let coord = Coordinator::start_pool(
+            ModelRegistry::single("m", model),
+            PoolConfig {
+                shards: 1,
+                queue_capacity: 4,
+                ..PoolConfig::default()
+            },
+        );
+        // An idle shard accepts any block, even one bigger than the bound.
+        let rx = coord
+            .try_submit_block_to(None, random_images(52, 8))
+            .expect("idle shard accepts");
+        assert_eq!(rx.recv().unwrap().len(), 8);
+        coord.shutdown();
     }
 
     #[test]

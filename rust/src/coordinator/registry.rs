@@ -20,22 +20,26 @@
 //! The old entry is freed when the last in-flight batch releases its Arc.
 
 use crate::model_io::{self, ModelIoError};
-use crate::tm::{ClausePlan, Model};
+use crate::tm::{BlockEval, ClausePlan, Model};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, RwLock};
 
-/// An immutable serving entry: a model, its compiled plan and a monotonic
-/// version (1 on first insert, bumped by every swap of the same name).
+/// An immutable serving entry: a model, its compiled plans (scalar and
+/// blocked) and a monotonic version (1 on first insert, bumped by every
+/// swap of the same name).
 #[derive(Debug)]
 pub struct ModelEntry {
     pub name: String,
     pub version: u64,
     pub model: Arc<Model>,
     pub plan: Arc<ClausePlan>,
+    /// Image-major twin of `plan` for batched requests (`tm::block`);
+    /// compiled alongside the plan, before the entry is published.
+    pub block: Arc<BlockEval>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Clone, Debug, thiserror::Error)]
 pub enum RegistryError {
     #[error("unknown model '{requested}' (loaded: {loaded})")]
     UnknownModel { requested: String, loaded: String },
@@ -99,6 +103,7 @@ impl ModelRegistry {
     pub fn insert(&self, name: &str, model: Model) -> Result<Arc<ModelEntry>, RegistryError> {
         Self::validate(name, &model)?;
         let plan = Arc::new(ClausePlan::compile(&model));
+        let block = Arc::new(BlockEval::compile(&plan));
         let mut entries = self.entries.write().unwrap();
         let version = entries.get(name).map_or(1, |e| e.version + 1);
         let entry = Arc::new(ModelEntry {
@@ -106,6 +111,7 @@ impl ModelRegistry {
             version,
             model: Arc::new(model),
             plan,
+            block,
         });
         entries.insert(name.to_string(), Arc::clone(&entry));
         Ok(entry)
@@ -119,6 +125,7 @@ impl ModelRegistry {
     pub fn swap(&self, name: &str, model: Model) -> Result<Arc<ModelEntry>, RegistryError> {
         Self::validate(name, &model)?;
         let plan = Arc::new(ClausePlan::compile(&model));
+        let block = Arc::new(BlockEval::compile(&plan));
         let mut entries = self.entries.write().unwrap();
         let Some(old) = entries.get(name) else {
             return Err(RegistryError::SwapMissing(name.to_string()));
@@ -128,6 +135,7 @@ impl ModelRegistry {
             version: old.version + 1,
             model: Arc::new(model),
             plan,
+            block,
         });
         entries.insert(name.to_string(), Arc::clone(&entry));
         Ok(entry)

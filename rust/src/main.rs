@@ -250,14 +250,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
 
     let ckpt_path = format!("{out}.ckpt");
-    let engine = Engine::new();
     let t0 = Instant::now();
     let mut epoch_rows: Vec<Json> = Vec::new();
     let mut last_rate = 0.0f64;
     let mut last_acc = 0.0f64;
     for epoch in start_epoch..start_epoch + epochs {
         let stats = trainer.epoch(&train, epoch);
-        let acc = engine.accuracy(&trainer.export(), &test);
+        // Blocked test pass: same predictions as `Engine::accuracy` on the
+        // exported model (tm::block keeps serial ≡ blocked), several times
+        // faster, and it skips the per-epoch model export entirely.
+        let acc = trainer.accuracy_blocked(&test);
         last_acc = acc;
         println!(
             "epoch {epoch:2}: online {:.2}%  test {:.2}%  includes {}  ({:.0} samples/s)",

@@ -25,11 +25,17 @@
 //!              ...]}
 //! ```
 //!
-//! Status mapping: invalid body/shape/geometry → `400`; unknown model id
+//! Status mapping: invalid body/shape → `400`; unknown model id (single)
 //! → `404`; every shard queue full → `503` + `Retry-After` (the
 //! coordinator's typed `Overloaded` shed, end-to-end); coordinator gone →
-//! `500`. Images inside one batch are submitted individually, so they
-//! pipeline across shards exactly like native `submit_to` traffic.
+//! `500`. A batch travels as **one** coordinator block
+//! ([`crate::coordinator::Coordinator::try_submit_block_to`]): the pool
+//! evaluates it image-major through the model's `BlockEval` twin, and a
+//! single bad image fails alone — its result slot becomes
+//! `{"error": "..."}` (plus a top-level `"errors"` count) while the rest
+//! of the batch returns `200`. Only when *every* image of a batch fails
+//! does the whole call take the first error's status (`404` unknown
+//! model, `400` otherwise), matching the single-image mapping.
 
 use super::http::{Request, Response};
 use super::ServerState;
@@ -71,64 +77,109 @@ pub fn classify_request_body(model: Option<&str>, imgs: &[&BoolImage]) -> Vec<u8
     body.to_string_compact().into_bytes()
 }
 
-/// `POST /v1/classify` — parse, fan out over the shard pool, collect.
+/// One successful backend output as a wire result entry.
+fn result_entry(out: &crate::coordinator::BackendOutput) -> Json {
+    let version = match out.model_version {
+        Some(v) => Json::num(v as f64),
+        None => Json::Null,
+    };
+    let sums = Json::arr(out.class_sums.iter().map(|&s| Json::num(s as f64)));
+    Json::obj([
+        ("class", Json::num(out.prediction as f64)),
+        ("model_version", version),
+        ("class_sums", sums),
+    ])
+}
+
+/// `404` for unknown-model rejections, `400` for everything else — the
+/// per-request status mapping shared by the single and batch paths.
+fn rejection_status(e: &anyhow::Error) -> u16 {
+    match e.downcast_ref::<RegistryError>() {
+        Some(RegistryError::UnknownModel { .. }) => 404,
+        _ => 400,
+    }
+}
+
+/// `POST /v1/classify` — parse, submit to the shard pool, collect.
 pub fn classify(state: &ServerState, req: &Request) -> Response {
     let call = match parse_body(&req.body) {
         Ok(c) => c,
         Err(msg) => return Response::error(400, &msg),
     };
-    // Submit the whole batch before collecting: images pipeline across
-    // shards, and a full pool sheds *now* instead of blocking the worker.
-    let mut pending = Vec::with_capacity(call.images.len());
-    for img in call.images {
-        match state.coord.try_submit_to(call.model.as_deref(), img) {
-            Ok(rx) => pending.push(rx),
-            Err(overloaded) => {
-                state.stats.shed_503.fetch_add(1, Ordering::Relaxed);
-                // Dropping the already-accepted receivers is safe: the
-                // shards complete those evaluations into closed channels.
-                return Response::error(503, &overloaded.to_string())
-                    .with_header("retry-after", "1");
-            }
-        }
-    }
-    let mut results = Vec::with_capacity(pending.len());
-    for rx in pending {
-        match rx.recv() {
-            Ok(Ok(out)) => {
-                let version = match out.model_version {
-                    Some(v) => Json::num(v as f64),
-                    None => Json::Null,
-                };
-                let sums = Json::arr(out.class_sums.iter().map(|&s| Json::num(s as f64)));
-                results.push(Json::obj([
-                    ("class", Json::num(out.prediction as f64)),
-                    ("model_version", version),
-                    ("class_sums", sums),
-                ]));
-            }
-            Ok(Err(e)) => {
-                // Unknown model id is the only not-found shape; every
-                // other per-request rejection is a bad request.
-                let status = match e.downcast_ref::<RegistryError>() {
-                    Some(RegistryError::UnknownModel { .. }) => 404,
-                    _ => 400,
-                };
-                return Response::error(status, &format!("{e:#}"));
-            }
-            Err(_) => return Response::error(500, "server is shutting down"),
-        }
-    }
     let model = match &call.model {
         Some(m) => Json::str(m.clone()),
         None => Json::Null,
     };
-    let body = Json::obj([
+    // A single image keeps the original request-per-submit path; a batch
+    // travels as one block so the pool can evaluate it image-major (each
+    // clause row walked once per block, not once per image). Either way a
+    // full pool sheds *now* instead of blocking the HTTP worker.
+    if call.images.len() == 1 {
+        let img = call.images.into_iter().next().expect("one image");
+        let rx = match state.coord.try_submit_to(call.model.as_deref(), img) {
+            Ok(rx) => rx,
+            Err(overloaded) => {
+                state.stats.shed_503.fetch_add(1, Ordering::Relaxed);
+                return Response::error(503, &overloaded.to_string())
+                    .with_header("retry-after", "1");
+            }
+        };
+        return match rx.recv() {
+            Ok(Ok(out)) => Response::json(
+                200,
+                &Json::obj([
+                    ("model", model),
+                    ("count", Json::num(1.0)),
+                    ("results", Json::Arr(vec![result_entry(&out)])),
+                ]),
+            ),
+            Ok(Err(e)) => Response::error(rejection_status(&e), &format!("{e:#}")),
+            Err(_) => Response::error(500, "server is shutting down"),
+        };
+    }
+    let rx = match state
+        .coord
+        .try_submit_block_to(call.model.as_deref(), call.images)
+    {
+        Ok(rx) => rx,
+        Err(overloaded) => {
+            state.stats.shed_503.fetch_add(1, Ordering::Relaxed);
+            return Response::error(503, &overloaded.to_string()).with_header("retry-after", "1");
+        }
+    };
+    let outcomes = match rx.recv() {
+        Ok(outcomes) => outcomes,
+        Err(_) => return Response::error(500, "server is shutting down"),
+    };
+    // Every image failed: surface the first error with its status, the
+    // same shape a failed single-image call produces.
+    if outcomes.iter().all(|r| r.is_err()) {
+        let e = outcomes
+            .iter()
+            .find_map(|r| r.as_ref().err())
+            .expect("a non-empty all-failed batch");
+        return Response::error(rejection_status(e), &format!("{e:#}"));
+    }
+    let mut errors = 0u64;
+    let results: Vec<Json> = outcomes
+        .iter()
+        .map(|r| match r {
+            Ok(out) => result_entry(out),
+            Err(e) => {
+                errors += 1;
+                Json::obj([("error", Json::str(format!("{e:#}")))])
+            }
+        })
+        .collect();
+    let mut fields = vec![
         ("model", model),
         ("count", Json::num(results.len() as f64)),
         ("results", Json::Arr(results)),
-    ]);
-    Response::json(200, &body)
+    ];
+    if errors > 0 {
+        fields.push(("errors", Json::num(errors as f64)));
+    }
+    Response::json(200, &Json::obj(fields))
 }
 
 fn parse_body(body: &[u8]) -> Result<ClassifyCall, String> {

@@ -1,0 +1,514 @@
+//! Blocked, bit-sliced clause evaluation: the data-parallel hot path.
+//!
+//! The 65-nm chip evaluates all 128 clauses in parallel out of registers;
+//! the compiled [`ClausePlan`] recovers most of that with patch-bitset
+//! algebra but still processes one image at a time — every clause's CSR
+//! include row is re-intersected per image. [`BlockEval`] flips the loop
+//! to *image-major*: a block of B ≤ 64 images is evaluated together so
+//! each CSR row is loaded once per block, and the per-image work shrinks
+//! to word-AND lane operations over a bit-transposed pixel matrix.
+//!
+//! Per block (DESIGN.md §11):
+//!
+//! 1. pack each image's rows into `u64` masks and fold the block into
+//!    union rows `U[r]` (OR) and intersection rows `A[r]` (AND);
+//! 2. bit-transpose the packed rows into an image-lane matrix `T` where
+//!    `T[r·side + c]` holds bit b = pixel (c, r) of image b (64×64
+//!    bit-matrix transpose, Hacker's Delight §7-3);
+//! 3. build a *screen* literal→patch-set table from U/A
+//!    ([`PatchSets::rebuild_screen`]): positive content from U, negated
+//!    content as ¬(A-gather), thermometers exact — so the clause-row
+//!    intersection S_j over this table is a **sound superset** of every
+//!    image's fire set, computed once per block instead of once per image;
+//! 4. for each surviving patch in S_j, AND the clause's content-literal
+//!    lanes from `T` (negated lanes complemented) with early-zero exit —
+//!    the surviving lane mask says exactly which images fire clause j on
+//!    that patch; position literals need no lane test (they are already
+//!    exact in S_j);
+//! 5. scatter the fired masks into per-image class sums (Eq. 3) and take
+//!    [`argmax_lowest`] per image.
+//!
+//! Serial ≡ blocked is structural: step 4 applies precisely the Eq. 2
+//! conjunction per image on every patch the screen admits, and the screen
+//! admits every patch any image fires on (superset proof in
+//! `rebuild_screen`'s docs). The Python transliteration in
+//! `python/tests/test_block_eval.py` cross-validates the word tricks.
+//!
+//! [`BlockScratch`] is the per-thread arena: every buffer is sized lazily
+//! and reused, so steady-state blocked classification performs zero heap
+//! allocations per image (measured by the counting allocator in
+//! `benches/hotpath_microbench.rs`).
+
+use super::fast::{PatchSet, PatchSets};
+use super::infer::argmax_lowest;
+use super::plan::ClausePlan;
+use crate::data::boolean::BoolImage;
+use crate::data::{patches, Geometry};
+
+/// Largest supported block: one image per `u64` lane bit.
+pub const MAX_BLOCK: usize = 64;
+/// Default block size: amortizes the per-block screen/transpose work well
+/// while keeping the block's working set (T + screen table) in L1/L2.
+pub const DEFAULT_BLOCK: usize = 32;
+/// Below this block size the per-block transpose + screen build is not
+/// amortized and the scalar plan path is at least as fast — batch
+/// consumers fall back to per-image evaluation under this threshold.
+pub const MIN_BLOCK: usize = 8;
+
+/// In-place 64×64 bit-matrix transpose (Hacker's Delight 7-3, adapted to
+/// LSB-first bit numbering): afterwards `a[c]` bit r = old `a[r]` bit c.
+#[inline]
+pub(crate) fn transpose64(a: &mut [u64; 64]) {
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    let mut j: usize = 32;
+    while j != 0 {
+        let mut k = 0;
+        while k < 64 {
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// A [`ClausePlan`] compiled a second time, for image-major execution.
+///
+/// Self-contained plain data (`Send + Sync`, asserted below): the serving
+/// registry shares one per model version across shard workers, exactly
+/// like the scalar plan. The CSR rows keep the plan's
+/// most-selective-first order, so the screen intersection inherits the
+/// early-exit behaviour; the content ops additionally carry premultiplied
+/// window offsets for the lane walk.
+#[derive(Clone, Debug)]
+pub struct BlockEval {
+    geometry: Geometry,
+    clauses: usize,
+    classes: usize,
+    /// CSR row starts into `lit_ids` (copy of the plan's, for screening).
+    offsets: Vec<u32>,
+    lit_ids: Vec<u16>,
+    /// CSR row starts into `ops` (content literals only, plan order).
+    op_offsets: Vec<u32>,
+    /// Lane ops: low 31 bits = premultiplied window offset `wr·side + wc`,
+    /// bit 31 = negated. `T` index for patch (x, y) is
+    /// `(y·stride)·side + x·stride + offset`.
+    ops: Vec<u32>,
+    empty: Vec<bool>,
+    used: Vec<bool>,
+    /// Clause-major weights, `weights_t[j·classes + i]` (plan copy).
+    weights_t: Vec<i32>,
+}
+
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<BlockEval>()
+};
+
+impl BlockEval {
+    /// Compile the image-major twin of a [`ClausePlan`]. The plan's
+    /// literal layout must match its geometry (every servable registry
+    /// model satisfies this; `Params::literals_match_geometry`).
+    pub fn compile(plan: &ClausePlan) -> BlockEval {
+        let g = plan.geometry();
+        assert_eq!(
+            plan.literal_count(),
+            g.num_literals(),
+            "blocked evaluation requires geometry-matched literals ({g})"
+        );
+        let (o, w, side) = (g.num_features(), g.window, g.img_side);
+        let (clauses, classes) = (plan.clauses(), plan.classes());
+        let mut offsets = Vec::with_capacity(clauses + 1);
+        let mut lit_ids = Vec::new();
+        let mut op_offsets = Vec::with_capacity(clauses + 1);
+        let mut ops = Vec::new();
+        offsets.push(0u32);
+        op_offsets.push(0u32);
+        let mut empty = Vec::with_capacity(clauses);
+        for j in 0..clauses {
+            let row = plan.clause_literals(j);
+            lit_ids.extend_from_slice(row);
+            offsets.push(lit_ids.len() as u32);
+            for &k in row {
+                let (feat, neg) = if (k as usize) < o {
+                    (k as usize, false)
+                } else {
+                    (k as usize - o, true)
+                };
+                if feat < w * w {
+                    let (wr, wc) = (feat / w, feat % w);
+                    ops.push((wr * side + wc) as u32 | ((neg as u32) << 31));
+                }
+            }
+            op_offsets.push(ops.len() as u32);
+            empty.push(plan.is_empty_clause(j));
+        }
+        BlockEval {
+            geometry: g,
+            clauses,
+            classes,
+            offsets,
+            lit_ids,
+            op_offsets,
+            ops,
+            empty,
+            used: plan.used_literals().to_vec(),
+            weights_t: plan.weights_t().to_vec(),
+        }
+    }
+
+    #[inline]
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    #[inline]
+    pub fn clauses(&self) -> usize {
+        self.clauses
+    }
+
+    #[inline]
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    #[inline]
+    fn clause_row(&self, j: usize) -> &[u16] {
+        &self.lit_ids[self.offsets[j] as usize..self.offsets[j + 1] as usize]
+    }
+
+    #[inline]
+    fn clause_ops(&self, j: usize) -> &[u32] {
+        &self.ops[self.op_offsets[j] as usize..self.op_offsets[j + 1] as usize]
+    }
+
+    /// Classify a batch of images through the blocked path, chunking
+    /// internally into sub-blocks of ≤ `block_size` images (ragged tails
+    /// are evaluated blocked too — correctness is block-size independent).
+    /// Allocation-free in steady state; predictions, class sums and fired
+    /// masks stay readable in `scratch`.
+    pub fn classify_block_into(
+        &self,
+        imgs: &[&BoolImage],
+        block_size: usize,
+        scratch: &mut BlockScratch,
+    ) {
+        assert!(
+            (1..=MAX_BLOCK).contains(&block_size),
+            "block size {block_size} outside 1..={MAX_BLOCK}"
+        );
+        let g = self.geometry;
+        let (side, stride, positions) = (g.img_side, g.stride, g.positions());
+        let n = imgs.len();
+        let chunks = n.div_ceil(block_size);
+        scratch.begin(n, block_size, self.clauses, self.classes);
+        for (chunk, lo) in (0..n).step_by(block_size).enumerate() {
+            let members = &imgs[lo..(lo + block_size).min(n)];
+            let b = members.len();
+            let bmask = if b == 64 { !0u64 } else { (1u64 << b) - 1 };
+            // 1. Pack rows; fold union/intersection.
+            scratch.rows_any.clear();
+            scratch.rows_any.resize(side, 0);
+            scratch.rows_all.clear();
+            scratch.rows_all.resize(side, !0u64);
+            scratch.packed.clear();
+            scratch.packed.resize(b * side, 0);
+            for (i, img) in members.iter().enumerate() {
+                patches::pack_rows_into(g, img, &mut scratch.row_buf);
+                let dst = &mut scratch.packed[i * side..(i + 1) * side];
+                dst.copy_from_slice(&scratch.row_buf);
+                for (r, &w) in scratch.row_buf.iter().enumerate() {
+                    scratch.rows_any[r] |= w;
+                    scratch.rows_all[r] &= w;
+                }
+            }
+            // 2. Bit-transpose into image lanes: t[r·side + c] bit i =
+            // pixel (c, r) of member i. One stack-resident 64×64 transpose
+            // per image row.
+            scratch.t.clear();
+            scratch.t.resize(side * side, 0);
+            let mut lanes = [0u64; 64];
+            for r in 0..side {
+                for (i, lane) in lanes.iter_mut().enumerate() {
+                    *lane = if i < b { scratch.packed[i * side + r] } else { 0 };
+                }
+                transpose64(&mut lanes);
+                scratch.t[r * side..(r + 1) * side].copy_from_slice(&lanes[..side]);
+            }
+            // 3. Screen table from the union/intersection rows.
+            scratch
+                .screen
+                .rebuild_screen(g, &scratch.rows_any, &scratch.rows_all, Some(&self.used));
+            // 4.–5. Per clause: screen intersection, lane walk, class sums.
+            let fired_row = &mut scratch.fired[chunk * self.clauses..(chunk + 1) * self.clauses];
+            for j in 0..self.clauses {
+                // Inference semantics: empty clauses are forced low (§IV-D).
+                if self.empty[j] {
+                    continue;
+                }
+                scratch
+                    .screen
+                    .literal_list_patches_into(self.clause_row(j), &mut scratch.sj);
+                let ops = self.clause_ops(j);
+                let mut fired = 0u64;
+                'patches: for (wi, &word0) in scratch.sj.iter().enumerate() {
+                    let mut word = word0;
+                    while word != 0 {
+                        let p = wi * 64 + word.trailing_zeros() as usize;
+                        word &= word - 1;
+                        let (x, y) = (p % positions, p / positions);
+                        let pbase = y * stride * side + x * stride;
+                        // Lanes start at the block mask, so complemented
+                        // words never leak bits above lane b-1.
+                        let mut lane = bmask;
+                        for &op in ops {
+                            let tw = scratch.t[pbase + (op & 0x7FFF_FFFF) as usize];
+                            lane &= if op >> 31 != 0 { !tw } else { tw };
+                            if lane == 0 {
+                                break;
+                            }
+                        }
+                        fired |= lane;
+                        if fired == bmask {
+                            break 'patches;
+                        }
+                    }
+                }
+                fired_row[j] = fired;
+                if fired != 0 {
+                    let wrow = &self.weights_t[j * self.classes..(j + 1) * self.classes];
+                    let mut f = fired;
+                    while f != 0 {
+                        let i = f.trailing_zeros() as usize;
+                        f &= f - 1;
+                        let srow = &mut scratch.sums
+                            [(lo + i) * self.classes..(lo + i + 1) * self.classes];
+                        for (s, &wgt) in srow.iter_mut().zip(wrow) {
+                            *s += wgt;
+                        }
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(scratch.fired.len(), chunks * self.clauses);
+        for i in 0..n {
+            scratch.preds[i] =
+                argmax_lowest(&scratch.sums[i * self.classes..(i + 1) * self.classes]);
+        }
+    }
+}
+
+/// Reusable arena for [`BlockEval::classify_block_into`]: every buffer is
+/// sized lazily on first use and reused thereafter — zero heap allocations
+/// per image in steady state (the §Perf arena contract). One per worker
+/// thread, like [`super::plan::EvalScratch`] (which embeds one).
+#[derive(Default)]
+pub struct BlockScratch {
+    /// Packed rows of the current chunk, `[member·side + r]`.
+    packed: Vec<u64>,
+    /// Single-image packing scratch.
+    row_buf: Vec<u64>,
+    /// Union (OR) of the chunk's packed rows.
+    rows_any: Vec<u64>,
+    /// Intersection (AND) of the chunk's packed rows.
+    rows_all: Vec<u64>,
+    /// Image-lane pixel matrix: `t[r·side + c]` bit i = pixel (c, r) of
+    /// chunk member i.
+    t: Vec<u64>,
+    /// Block-level screen table (union/intersection literal sets).
+    screen: PatchSets,
+    /// Screen-intersection scratch (S_j).
+    sj: PatchSet,
+    /// Fired lane masks, `[chunk·clauses + j]` bit i = clause j fired on
+    /// chunk member i.
+    fired: Vec<u64>,
+    /// Per-image class sums, `[img·classes + i]`.
+    sums: Vec<i32>,
+    /// Per-image predictions.
+    preds: Vec<u8>,
+    /// Dimensions of the last run (for accessor indexing).
+    block: usize,
+    clauses: usize,
+    classes: usize,
+}
+
+impl BlockScratch {
+    pub fn new() -> BlockScratch {
+        BlockScratch::default()
+    }
+
+    fn begin(&mut self, n: usize, block: usize, clauses: usize, classes: usize) {
+        self.block = block;
+        self.clauses = clauses;
+        self.classes = classes;
+        let chunks = n.div_ceil(block);
+        self.fired.clear();
+        self.fired.resize(chunks * clauses, 0);
+        self.sums.clear();
+        self.sums.resize(n * classes, 0);
+        self.preds.clear();
+        self.preds.resize(n, 0);
+    }
+
+    /// Predictions of the last block run, one per input image.
+    #[inline]
+    pub fn predictions(&self) -> &[u8] {
+        &self.preds
+    }
+
+    /// Class sums v_i of image `img` from the last block run.
+    #[inline]
+    pub fn class_sums(&self, img: usize) -> &[i32] {
+        &self.sums[img * self.classes..(img + 1) * self.classes]
+    }
+
+    /// Did clause `j` fire on image `img` in the last block run?
+    #[inline]
+    pub fn clause_fired(&self, j: usize, img: usize) -> bool {
+        let chunk = img / self.block;
+        (self.fired[chunk * self.clauses + j] >> (img % self.block)) & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::model::Model;
+    use crate::tm::params::Params;
+    use crate::tm::plan::EvalScratch;
+    use crate::util::Xoshiro256ss;
+
+    fn random_model(g: Geometry, seed: u64, includes: usize) -> Model {
+        let p = Params {
+            clauses: 24,
+            ..Params::for_geometry(g)
+        };
+        let mut rng = Xoshiro256ss::new(seed);
+        let mut m = Model::blank(p.clone());
+        let o = g.num_features();
+        for j in 0..p.clauses {
+            match j {
+                0 => {} // empty clause: must stay low
+                1 => {
+                    // Thermometer-only clause (no content lane ops).
+                    m.set_include(1, o - 1, true);
+                    m.set_include(1, 2 * o - 2, true);
+                }
+                2 => {
+                    // Contradictory content pair: can pass the block screen
+                    // (union vs intersection) but never fires per image.
+                    m.set_include(2, 3, true);
+                    m.set_include(2, o + 3, true);
+                }
+                _ => {
+                    for _ in 0..rng.usize_below(includes) + 1 {
+                        m.set_include(j, rng.usize_below(p.literals), true);
+                    }
+                }
+            }
+            for i in 0..p.classes {
+                m.set_weight(i, j, (rng.below(13) as i32 - 6) as i8);
+            }
+        }
+        m
+    }
+
+    fn random_images(rng: &mut Xoshiro256ss, g: Geometry, n: usize) -> Vec<BoolImage> {
+        (0..n)
+            .map(|_| {
+                let density = if rng.chance(0.5) { 0.6 } else { 0.15 };
+                BoolImage::from_bools(
+                    &(0..g.img_pixels())
+                        .map(|_| rng.chance(density))
+                        .collect::<Vec<_>>(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn transpose64_is_exact_and_involutive() {
+        let mut rng = Xoshiro256ss::new(7);
+        let mut a = [0u64; 64];
+        for w in a.iter_mut() {
+            *w = rng.next_u64();
+        }
+        let mut t = a;
+        transpose64(&mut t);
+        for r in 0..64 {
+            for c in 0..64 {
+                assert_eq!((t[c] >> r) & 1, (a[r] >> c) & 1, "({r},{c})");
+            }
+        }
+        transpose64(&mut t);
+        assert_eq!(t, a, "transpose is an involution");
+    }
+
+    #[test]
+    fn blocked_matches_scalar_plan_across_geometries_and_block_sizes() {
+        let mut rng = Xoshiro256ss::new(19);
+        for g in [
+            Geometry::asic(),
+            Geometry::new(28, 10, 2).unwrap(),
+            Geometry::cifar10(),
+        ] {
+            let model = random_model(g, 5, 5);
+            let plan = ClausePlan::compile(&model);
+            let be = BlockEval::compile(&plan);
+            let imgs = random_images(&mut rng, g, 37);
+            let refs: Vec<&BoolImage> = imgs.iter().collect();
+            let mut scalar = EvalScratch::new();
+            let want: Vec<(u8, Vec<i32>)> = refs
+                .iter()
+                .map(|img| {
+                    let p = plan.classify_into(img, &mut scalar);
+                    (p, scalar.class_sums().to_vec())
+                })
+                .collect();
+            let mut scratch = BlockScratch::new();
+            for block in [1, 7, 8, 31, 32, 64] {
+                be.classify_block_into(&refs, block, &mut scratch);
+                for (i, (pred, sums)) in want.iter().enumerate() {
+                    assert_eq!(scratch.predictions()[i], *pred, "{g} B={block} img {i}");
+                    assert_eq!(scratch.class_sums(i), &sums[..], "{g} B={block} img {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fired_masks_match_scalar_clause_outputs() {
+        let g = Geometry::asic();
+        let model = random_model(g, 23, 4);
+        let plan = ClausePlan::compile(&model);
+        let be = BlockEval::compile(&plan);
+        let mut rng = Xoshiro256ss::new(29);
+        let imgs = random_images(&mut rng, g, 21);
+        let refs: Vec<&BoolImage> = imgs.iter().collect();
+        let mut scratch = BlockScratch::new();
+        be.classify_block_into(&refs, 8, &mut scratch);
+        let mut scalar = EvalScratch::new();
+        for (i, img) in refs.iter().enumerate() {
+            plan.classify_into(img, &mut scalar);
+            for j in 0..plan.clauses() {
+                assert_eq!(
+                    scratch.clause_fired(j, i),
+                    scalar.clause_outputs().get(j),
+                    "clause {j} img {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let g = Geometry::asic();
+        let plan = ClausePlan::compile(&random_model(g, 3, 3));
+        let be = BlockEval::compile(&plan);
+        let mut scratch = BlockScratch::new();
+        be.classify_block_into(&[], DEFAULT_BLOCK, &mut scratch);
+        assert!(scratch.predictions().is_empty());
+    }
+}

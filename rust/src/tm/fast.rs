@@ -282,6 +282,119 @@ impl PatchSets {
         }
     }
 
+    /// Build a *screen* table from a block's union and intersection row
+    /// masks (`tm::block`'s first stage): `rows_any[r]` is the OR and
+    /// `rows_all[r]` the AND of the block members' packed rows.
+    ///
+    /// Per literal the screen set is a superset of every member's
+    /// per-image patch set:
+    /// - positive content sets are gathered from the union (a pixel set in
+    ///   *any* image keeps the patch alive),
+    /// - negated content sets are complements of the intersection gather
+    ///   (a pixel must be set in *all* images for the negation to be dead),
+    /// - thermometer sets are exact — they never depend on the image.
+    ///
+    /// Hence an include-list intersection over this table is a sound
+    /// superset of each image's clause fire set. With a single-image block
+    /// (`rows_any == rows_all`) the table equals [`Self::rebuild_selective`]'s
+    /// output exactly. `packed_rows` is untouched (the screen has no single
+    /// source image).
+    pub(crate) fn rebuild_screen(
+        &mut self,
+        g: Geometry,
+        rows_any: &[u64],
+        rows_all: &[u64],
+        used: Option<&[bool]>,
+    ) {
+        assert_eq!(rows_any.len(), g.img_side, "union rows do not match {g}");
+        assert_eq!(rows_all.len(), g.img_side, "intersection rows do not match {g}");
+        if let Some(u) = used {
+            assert_eq!(u.len(), g.num_literals(), "used-literal map does not match {g}");
+        }
+        let is_used = |k: usize| used.map_or(true, |u| u[k]);
+        let words = g.patch_words();
+        if self.geometry != g || self.full.is_empty() {
+            self.geometry = g;
+            self.words = words;
+            self.full = full_mask(g);
+        }
+        let (positions, pos_bits, window, stride) =
+            (g.positions(), g.pos_bits(), g.window, g.stride);
+        let o = g.num_features();
+        let expected = g.num_literals() * words;
+        if self.sets.len() != expected {
+            self.sets.clear();
+            self.sets.resize(expected, 0);
+        } else {
+            // Unlike `rebuild_selective`, *both* content polarities are
+            // gathered (from different row sources), so both slots need
+            // pre-zeroing.
+            for k in 0..window * window {
+                for slot in [k, o + k] {
+                    if is_used(slot) {
+                        self.sets[slot * words..(slot + 1) * words].fill(0);
+                    }
+                }
+            }
+        }
+        let sets = &mut self.sets;
+        let full = &self.full;
+        let row_mask: u64 = if positions == 64 {
+            !0
+        } else {
+            (1u64 << positions) - 1
+        };
+        let gather = |s: &mut [u64], rows: &[u64], wr: usize, wc: usize| {
+            for y in 0..positions {
+                let bits = if stride == 1 {
+                    (rows[y + wr] >> wc) & row_mask
+                } else {
+                    let row = rows[y * stride + wr];
+                    let mut b = 0u64;
+                    for x in 0..positions {
+                        b |= ((row >> (x * stride + wc)) & 1) << x;
+                    }
+                    b
+                };
+                let base = y * positions;
+                let (wi, off) = (base / 64, base % 64);
+                s[wi] |= bits << off;
+                if off + positions > 64 {
+                    s[wi + 1] |= bits >> (64 - off);
+                }
+            }
+        };
+        for wr in 0..window {
+            for wc in 0..window {
+                let k = wr * window + wc;
+                if is_used(k) {
+                    gather(&mut sets[k * words..(k + 1) * words], rows_any, wr, wc);
+                }
+                if is_used(o + k) {
+                    let s = &mut sets[(o + k) * words..(o + k + 1) * words];
+                    gather(s, rows_all, wr, wc);
+                    for (w, &f) in s.iter_mut().zip(full.iter()) {
+                        *w = !*w & f;
+                    }
+                }
+            }
+        }
+        // Position thermometers (per-geometry constants, both polarities).
+        let ps = pos_sets(g);
+        for t in 0..2 * pos_bits {
+            if is_used(window * window + t) {
+                let src = &ps.pos[t * ps.words..(t + 1) * ps.words];
+                sets[(window * window + t) * words..(window * window + t + 1) * words]
+                    .copy_from_slice(src);
+            }
+            if is_used(o + window * window + t) {
+                let srcn = &ps.neg[t * ps.words..(t + 1) * ps.words];
+                sets[(o + window * window + t) * words..(o + window * window + t + 1) * words]
+                    .copy_from_slice(srcn);
+            }
+        }
+    }
+
     /// The geometry this table was built for.
     #[inline]
     pub fn geometry(&self) -> Geometry {
@@ -555,6 +668,51 @@ mod tests {
             let inc = BitVec::zeros(g.num_literals());
             let s = sets.clause_patches(&inc);
             assert_eq!(popcount(&s) as usize, g.num_patches());
+        }
+    }
+
+    #[test]
+    fn screen_with_single_image_equals_selective_rebuild() {
+        // B = 1: union == intersection == the image, so the screen table
+        // must be bit-identical to the per-image table.
+        let mut rng = Xoshiro256ss::new(31);
+        for g in [G, Geometry::cifar10(), Geometry::new(28, 10, 2).unwrap()] {
+            let img = random_image(&mut rng, g, 0.35);
+            let full = PatchSets::build(g, &img);
+            let rows = patches::pack_rows(g, &img);
+            let mut screen = PatchSets::default();
+            screen.rebuild_screen(g, &rows, &rows, None);
+            for k in 0..g.num_literals() {
+                assert_eq!(screen.literal_set(k), full.literal_set(k), "{g} literal {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn screen_sets_are_supersets_of_every_member() {
+        let mut rng = Xoshiro256ss::new(37);
+        for g in [G, Geometry::new(28, 10, 2).unwrap()] {
+            let imgs: Vec<BoolImage> =
+                (0..9).map(|_| random_image(&mut rng, g, 0.3)).collect();
+            let mut any = vec![0u64; g.img_side];
+            let mut all = vec![!0u64; g.img_side];
+            for img in &imgs {
+                let rows = patches::pack_rows(g, img);
+                for (r, &w) in rows.iter().enumerate() {
+                    any[r] |= w;
+                    all[r] &= w;
+                }
+            }
+            let mut screen = PatchSets::default();
+            screen.rebuild_screen(g, &any, &all, None);
+            for img in &imgs {
+                let per = PatchSets::build(g, img);
+                for k in 0..g.num_literals() {
+                    for (sw, pw) in screen.literal_set(k).iter().zip(per.literal_set(k)) {
+                        assert_eq!(sw & pw, *pw, "{g} literal {k} screen not a superset");
+                    }
+                }
+            }
         }
     }
 

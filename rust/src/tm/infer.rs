@@ -127,6 +127,29 @@ impl Engine {
         plan.classify_into(img, scratch)
     }
 
+    /// Blocked (image-major, bit-sliced) classification of a batch through
+    /// a compiled [`BlockEval`](super::block::BlockEval) — the data-parallel
+    /// §Perf path: each clause's include row is processed once per block of
+    /// ≤ `block_size` images instead of once per image. Returns the
+    /// predictions, borrowed from the scratch arena; per-image class sums
+    /// and fired masks remain readable via [`EvalScratch::block`]
+    /// (`super::plan::EvalScratch::block`).
+    ///
+    /// Identical results to per-image [`Self::classify_with`] by
+    /// construction (DESIGN.md §11); zero heap allocations per image in
+    /// steady state.
+    #[inline]
+    pub fn classify_block_with<'a>(
+        &self,
+        block: &super::block::BlockEval,
+        imgs: &[&BoolImage],
+        block_size: usize,
+        scratch: &'a mut super::plan::EvalScratch,
+    ) -> &'a [u8] {
+        block.classify_block_into(imgs, block_size, &mut scratch.block);
+        scratch.block.predictions()
+    }
+
     /// Full classification of one booleanized image.
     pub fn classify(&self, model: &Model, img: &BoolImage) -> Inference {
         let clauses = self.clause_outputs(model, img);

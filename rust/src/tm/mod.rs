@@ -2,6 +2,7 @@
 //! automata and training, plus the §VI-A literal-budget variant.
 
 pub mod automata;
+pub mod block;
 pub mod budget;
 pub mod fast;
 pub mod infer;
@@ -11,6 +12,7 @@ pub mod params;
 pub mod plan;
 pub mod train;
 
+pub use block::{BlockEval, BlockScratch, DEFAULT_BLOCK, MAX_BLOCK, MIN_BLOCK};
 pub use infer::{argmax_lowest, clause_fires, Engine, Inference};
 pub use model::Model;
 pub use params::{Params, MODEL_BYTES, NUM_CLAUSES};

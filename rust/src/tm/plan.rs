@@ -226,6 +226,20 @@ impl ClausePlan {
         self.empty[clause]
     }
 
+    /// Literal-id space of the compiled model (2o for geometry-matched
+    /// models) — the blocked compiler's compatibility check.
+    #[inline]
+    pub(crate) fn literal_count(&self) -> usize {
+        self.literals
+    }
+
+    /// Clause-major weight matrix (`[j · classes + i]`) — copied by the
+    /// blocked compiler ([`super::block::BlockEval::compile`]).
+    #[inline]
+    pub(crate) fn weights_t(&self) -> &[i32] {
+        &self.weights_t
+    }
+
     /// Clause j's included literal ids, most-selective-first.
     #[inline]
     pub fn clause_literals(&self, clause: usize) -> &[u16] {
@@ -357,6 +371,9 @@ pub struct EvalScratch {
     pub(crate) fired: BitVec,
     /// Class sums of the last classification.
     pub(crate) sums: Vec<i32>,
+    /// Image-major arena for the blocked path ([`super::block::BlockEval`]);
+    /// empty until the first block evaluation.
+    pub(crate) block: super::block::BlockScratch,
 }
 
 impl EvalScratch {
@@ -372,6 +389,13 @@ impl EvalScratch {
     /// Per-clause image-level outputs c_j of the most recent classification.
     pub fn clause_outputs(&self) -> &BitVec {
         &self.fired
+    }
+
+    /// The blocked-evaluation arena (results of the most recent
+    /// [`Engine::classify_block_with`](super::infer::Engine::classify_block_with)
+    /// stay readable here).
+    pub fn block(&self) -> &super::block::BlockScratch {
+        &self.block
     }
 }
 

@@ -1,0 +1,162 @@
+//! Integration properties for the image-major blocked evaluator
+//! (`tm::block`): blocked evaluation is bit-identical to the scalar
+//! compiled plan — fired sets, class sums and argmax — across patch
+//! geometries and ragged block sizes, and a trainer whose per-epoch test
+//! pass runs through the block evaluator exports bit-identical models to
+//! one evaluated scalar.
+
+use convcotm::data::{BoolImage, Geometry};
+use convcotm::model_io::to_wire;
+use convcotm::tm::{BlockEval, ClausePlan, Engine, EvalScratch, Model, Params, Trainer};
+use convcotm::util::Xoshiro256ss;
+
+/// A model with the block path's edge cases baked in: clause 0 empty
+/// (forced non-firing at inference), clause 1 thermometer-only, clause 2
+/// a contradictory feature/negation pair (never fires), the rest random.
+fn random_model(g: Geometry, seed: u64) -> Model {
+    let params = Params::for_geometry(g);
+    let o = params.literals / 2;
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut m = Model::blank(params.clone());
+    for j in 0..params.clauses {
+        match j {
+            0 => {}
+            1 => {
+                m.set_include(j, o - 1, true);
+                m.set_include(j, 2 * o - 2, true);
+            }
+            2 => {
+                m.set_include(j, 3, true);
+                m.set_include(j, o + 3, true);
+            }
+            _ => {
+                for _ in 0..1 + rng.usize_below(5) {
+                    m.set_include(j, rng.usize_below(params.literals), true);
+                }
+            }
+        }
+        for i in 0..params.classes {
+            m.set_weight(i, j, (rng.below(61) as i32 - 30) as i8);
+        }
+    }
+    m
+}
+
+fn random_images(g: Geometry, seed: u64, n: usize) -> Vec<BoolImage> {
+    let mut rng = Xoshiro256ss::new(seed);
+    let side = g.img_side;
+    (0..n)
+        .map(|_| {
+            let density = if rng.chance(0.5) { 0.55 } else { 0.15 };
+            BoolImage::from_bools(
+                &(0..side * side).map(|_| rng.chance(density)).collect::<Vec<_>>(),
+            )
+        })
+        .collect()
+}
+
+fn geometries() -> Vec<Geometry> {
+    vec![
+        Geometry::asic(),
+        Geometry::new(28, 10, 2).unwrap(),
+        Geometry::cifar10(),
+    ]
+}
+
+/// Blocked ≡ scalar over every geometry × block size, including ragged
+/// tails (37 images never divides evenly into 7/8/31/64-image blocks):
+/// same argmax, same class sums, same per-clause fired set per image.
+#[test]
+fn blocked_equals_scalar_plan_across_geometries_and_block_sizes() {
+    let engine = Engine::new();
+    for (gi, g) in geometries().into_iter().enumerate() {
+        let model = random_model(g, 100 + gi as u64);
+        let plan = ClausePlan::compile(&model);
+        let block = BlockEval::compile(&plan);
+        let images = random_images(g, 200 + gi as u64, 37);
+        let refs: Vec<&BoolImage> = images.iter().collect();
+        let mut blocked = EvalScratch::new();
+        let mut scalar = EvalScratch::new();
+        for b in [1usize, 7, 8, 31, 32, 64] {
+            let preds = engine
+                .classify_block_with(&block, &refs, b, &mut blocked)
+                .to_vec();
+            assert_eq!(preds.len(), refs.len());
+            for (i, img) in images.iter().enumerate() {
+                let want = plan.classify_into(img, &mut scalar);
+                assert_eq!(preds[i], want, "argmax diverged ({g}, B={b}, image {i})");
+                assert_eq!(
+                    blocked.block().class_sums(i),
+                    scalar.class_sums(),
+                    "class sums diverged ({g}, B={b}, image {i})"
+                );
+                for j in 0..plan.clauses() {
+                    assert_eq!(
+                        blocked.block().clause_fired(j, i),
+                        scalar.clause_outputs().get(j),
+                        "fired set diverged ({g}, B={b}, image {i}, clause {j})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Batch sizes around the chunk boundaries (1, just below/above one block,
+/// one block plus a remainder) all evaluate identically to the scalar
+/// plan at the default block size.
+#[test]
+fn ragged_batch_sizes_match_scalar_at_default_block() {
+    let engine = Engine::new();
+    let g = Geometry::asic();
+    let model = random_model(g, 300);
+    let plan = ClausePlan::compile(&model);
+    let block = BlockEval::compile(&plan);
+    let images = random_images(g, 301, 65);
+    let mut blocked = EvalScratch::new();
+    let mut scalar = EvalScratch::new();
+    for n in [1usize, 3, 9, 33, 65] {
+        let refs: Vec<&BoolImage> = images[..n].iter().collect();
+        let preds = engine
+            .classify_block_with(&block, &refs, convcotm::tm::DEFAULT_BLOCK, &mut blocked)
+            .to_vec();
+        for (i, img) in images[..n].iter().enumerate() {
+            assert_eq!(preds[i], plan.classify_into(img, &mut scalar), "n={n}, image {i}");
+            assert_eq!(blocked.block().class_sums(i), scalar.class_sums(), "n={n}, image {i}");
+        }
+    }
+}
+
+/// Two trainers stepped identically, one running its per-epoch test pass
+/// through the block evaluator and one through the scalar engine, export
+/// bit-identical models and report the same accuracy every epoch: the
+/// blocked pass is a pure read of the plan (no RNG, no automata access).
+#[test]
+fn block_eval_epochs_export_bit_identical_models() {
+    let params = Params::tiny();
+    let g = params.geometry;
+    let mut rng = Xoshiro256ss::new(400);
+    let split: Vec<(BoolImage, u8)> = random_images(g, 401, 48)
+        .into_iter()
+        .map(|img| {
+            let label = rng.below(params.classes as u32) as u8;
+            (img, label)
+        })
+        .collect();
+    let engine = Engine::new();
+    let mut blocked = Trainer::new(params.clone(), 7);
+    let mut scalar = Trainer::new(params.clone(), 7);
+    for epoch in 0..3 {
+        blocked.epoch(&split, epoch);
+        scalar.epoch(&split, epoch);
+        let acc_blocked = blocked.accuracy_blocked(&split);
+        let exported = scalar.export();
+        let acc_scalar = engine.accuracy(&exported, &split);
+        assert_eq!(acc_blocked, acc_scalar, "epoch {epoch}");
+        assert_eq!(
+            to_wire(&blocked.export()),
+            to_wire(&exported),
+            "models diverged after epoch {epoch}"
+        );
+    }
+}

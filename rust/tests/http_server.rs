@@ -392,6 +392,61 @@ fn admin_hot_swap_under_load_is_lossless_and_versioned() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Regression: a single bad image inside a batch fails alone. The batch
+/// travels as one coordinator block, so this exercises the block path's
+/// per-image isolation end to end: `200` with an `{"error": ...}` slot for
+/// the bad image, correct classifications for the rest — while an
+/// all-failed batch (unknown model) still maps to its status code.
+#[test]
+fn bad_image_in_batch_fails_alone_with_200() {
+    let _serial = heavy_guard();
+    let model = random_model(91, 5);
+    let (server, state, coord) = start_pool_server(
+        ModelRegistry::single("m", model.clone()),
+        2,
+        4096,
+        Duration::from_secs(2),
+    );
+    let addr = server.local_addr();
+    let engine = Engine::new();
+    let images = random_images(92, 9);
+    let bad = BoolImage::blank_sized(32);
+    let mut refs: Vec<&BoolImage> = images.iter().collect();
+    refs.insert(4, &bad);
+    let mut conn = connect(addr);
+    let resp = roundtrip(&mut conn, "POST", "/v1/classify", &classify_body(Some("m"), &refs));
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let v = body_json(&resp);
+    assert_eq!(v.get("errors").and_then(Json::as_f64), Some(1.0));
+    let results = v.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), 10);
+    for (i, res) in results.iter().enumerate() {
+        if i == 4 {
+            let err = res.get("error").and_then(Json::as_str).unwrap();
+            assert!(err.contains("32x32"), "{err}");
+        } else {
+            assert!(res.get("error").is_none());
+            let class = res.get("class").and_then(Json::as_f64).unwrap() as u8;
+            assert_eq!(class, engine.classify(&model, refs[i]).prediction);
+        }
+    }
+
+    // Every image failing (unknown model) keeps the status mapping.
+    let resp = roundtrip(
+        &mut conn,
+        "POST",
+        "/v1/classify",
+        &classify_body(Some("ghost"), &refs[..3]),
+    );
+    assert_eq!(resp.status, 404, "{}", String::from_utf8_lossy(&resp.body));
+
+    let snap = drain(server, state, coord);
+    assert_eq!(snap.requests, 9);
+    assert_eq!(snap.errors, 4, "one bad image + three unknown-model images");
+    assert_eq!(snap.per_model["m"].errors, 1);
+    assert_eq!(snap.per_model["ghost"].errors, 3);
+}
+
 /// A backend that parks inside `classify` until released — makes the
 /// full-queue state deterministic for the shedding test.
 struct GateBackend {
