@@ -1,0 +1,127 @@
+#!/usr/bin/env bash
+# Chaos smoke for the supervised serving stack (CI `chaos-smoke` job,
+# DESIGN.md §12).
+#
+# Trains a 1-epoch model, boots `serve --listen` (release binary) with a
+# FIXED deterministic fault plan — every 400th evaluation unit panics —
+# then drives sustained keep-alive traffic through the load-client
+# example. Asserts the process survives its own injected panics: the
+# load client completes with zero untyped failures (panicked requests
+# surface as 503 + Retry-After and are absorbed by its jittered
+# backoff), /metrics shows the panics happened and the workers were
+# respawned, no shard is dead, and the server still drains cleanly.
+#
+# Usage: ci/chaos_smoke.sh [path/to/convcotm [path/to/load_client]]
+set -euo pipefail
+
+BIN=${1:-rust/target/release/convcotm}
+LOAD=${2:-rust/target/release/examples/load_client}
+FAULT_PLAN='seed=42,eval_panic=n400'
+TMP=$(mktemp -d)
+SERVE_PID=""
+cleanup() {
+  if [[ -n "$SERVE_PID" ]] && kill -0 "$SERVE_PID" 2>/dev/null; then
+    kill "$SERVE_PID" 2>/dev/null || true
+  fi
+  rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+echo "== train a quick model =="
+BENCH_TRAIN_JSON="$TMP/bench_train.json" \
+  "$BIN" train --dataset mnist --epochs 1 --n-train 300 --n-test 100 \
+  --out "$TMP/m.cctm"
+
+echo "== start the front door with an armed fault plan =="
+"$BIN" serve --model "chaos=$TMP/m.cctm" --listen 127.0.0.1:0 \
+  --shards 2 --http-workers 2 --deadline-ms 5000 \
+  --fault-plan "$FAULT_PLAN" >"$TMP/serve.log" 2>&1 &
+SERVE_PID=$!
+
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's#.*listening on http://\([0-9.]*:[0-9]*\).*#\1#p' "$TMP/serve.log" | head -1)
+  [[ -n "$ADDR" ]] && break
+  if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+    echo "server exited before listening:" >&2
+    cat "$TMP/serve.log" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+if [[ -z "$ADDR" ]]; then
+  echo "server never reported its listen address:" >&2
+  cat "$TMP/serve.log" >&2
+  exit 1
+fi
+grep -q "fault injection ARMED: seed=42" "$TMP/serve.log" || {
+  echo "server did not announce the armed fault plan:" >&2
+  cat "$TMP/serve.log" >&2
+  exit 1
+}
+echo "front door at $ADDR under plan '$FAULT_PLAN'"
+
+echo "== drive traffic through the injected panics =="
+# 4 connections x 200 requests x batch 4 = 3200 evaluation units ->
+# ~8 injected panics. load_client exits non-zero on any *untyped*
+# failure, so its success is the no-lost-requests assertion.
+"$LOAD" --addr "$ADDR" --connections 4 --requests 200 --batch 4 \
+  --model chaos | tee "$TMP/load.log"
+grep -Eq '[1-9][0-9]* shed 503' "$TMP/load.log" || {
+  echo "no request ever saw the typed 503 — did the panics happen?" >&2
+  exit 1
+}
+
+echo "== supervision counters =="
+python3 - "$ADDR" <<'PY'
+import json
+import sys
+import urllib.request
+
+addr = sys.argv[1]
+base = f"http://{addr}"
+
+def get(path):
+    with urllib.request.urlopen(base + path, timeout=10) as resp:
+        return resp.status, json.loads(resp.read())
+
+status, m = get("/metrics")
+assert status == 200, m
+assert m["shard_panics"] >= 1, f"injected panics not counted: {m}"
+assert m["respawns"] >= 1, f"panicked workers were never respawned: {m}"
+assert all(h != "dead" for h in m["shard_health"]), f"shard died: {m}"
+assert m["errors"] >= 1, f"panicked units not accounted as errors: {m}"
+assert m["requests"] >= 1, m
+
+status, health = get("/healthz")
+assert status == 200, health
+assert health["status"] in ("ok", "degraded"), health
+print(f"survived: {m['shard_panics']} panic(s), {m['respawns']} respawn(s), "
+      f"health={m['shard_health']}, {m['requests']} unit(s) served, "
+      f"{m['errors']} typed failure(s)")
+
+req = urllib.request.Request(base + "/admin/shutdown", data=b"", method="POST")
+with urllib.request.urlopen(req, timeout=10) as resp:
+    out = json.loads(resp.read())
+    assert resp.status == 200 and out["draining"] is True, out
+print("drain requested")
+PY
+
+echo "== wait for the drained exit =="
+for _ in $(seq 1 100); do
+  kill -0 "$SERVE_PID" 2>/dev/null || break
+  sleep 0.1
+done
+if kill -0 "$SERVE_PID" 2>/dev/null; then
+  echo "server did not exit after /admin/shutdown:" >&2
+  cat "$TMP/serve.log" >&2
+  exit 1
+fi
+wait "$SERVE_PID"
+SERVE_PID=""
+grep -q "drained after" "$TMP/serve.log" || {
+  echo "missing drained summary:" >&2
+  cat "$TMP/serve.log" >&2
+  exit 1
+}
+echo "chaos smoke: OK"

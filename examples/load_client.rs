@@ -41,6 +41,12 @@ struct WorkerReport {
     /// Connections re-opened after the server closed ours (acceptor-level
     /// shed, error close, or drain) — expected under saturation loads.
     reconnects: usize,
+    /// Backoff sleeps taken after a 503 before retrying.
+    retries: usize,
+    /// 504 responses — the server gave up on a request's deadline. Counted
+    /// separately from `failed`: under a chaos plan (wedged shards) these
+    /// are the *correct* typed outcome, not a client-visible bug.
+    deadline_exceeded: usize,
     latencies_us: Vec<f64>,
 }
 
@@ -53,7 +59,12 @@ fn connect(addr: &str) -> Result<HttpConn<TcpStream>, String> {
     Ok(HttpConn::new(stream))
 }
 
-fn run_connection(addr: &str, body: &[u8], requests: usize) -> Result<WorkerReport, String> {
+fn run_connection(
+    addr: &str,
+    body: &[u8],
+    requests: usize,
+    seed: u64,
+) -> Result<WorkerReport, String> {
     let mut conn = connect(addr)?;
     let limits = Limits::default();
     let mut report = WorkerReport {
@@ -61,8 +72,15 @@ fn run_connection(addr: &str, body: &[u8], requests: usize) -> Result<WorkerRepo
         shed: 0,
         failed: 0,
         reconnects: 0,
+        retries: 0,
+        deadline_exceeded: 0,
         latencies_us: Vec::with_capacity(requests),
     };
+    // Seeded jitter keeps runs reproducible while desynchronizing the
+    // connections' retry storms (all-at-once retries would re-trip the
+    // very backpressure that shed them).
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut backoff_level = 0u32;
     // A saturated server legitimately closes connections (acceptor 503 +
     // close); reconnect and keep measuring rather than aborting the run —
     // bounded so a dead server still fails fast.
@@ -88,15 +106,32 @@ fn run_connection(addr: &str, body: &[u8], requests: usize) -> Result<WorkerRepo
         done += 1;
         report.latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
         match resp.status {
-            200 => report.ok += 1,
-            // The server's backpressure: honour Retry-After and go again.
+            200 => {
+                report.ok += 1;
+                backoff_level = 0;
+            }
+            // The server's backpressure: back off exponentially with full
+            // jitter, treating Retry-After (capped at 5 s) as the ceiling
+            // the window grows toward, then go again.
             503 => {
                 report.shed += 1;
-                let secs = resp
+                report.retries += 1;
+                let cap_ms = resp
                     .header("retry-after")
                     .and_then(|v| v.parse::<u64>().ok())
-                    .unwrap_or(1);
-                std::thread::sleep(Duration::from_secs(secs.min(5)));
+                    .unwrap_or(1)
+                    .clamp(1, 5)
+                    * 1000;
+                let window_ms = (50u64 << backoff_level.min(10)).min(cap_ms);
+                backoff_level += 1;
+                let ms = 1 + rng.next_u64() % window_ms;
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            // Deadline exceeded — a typed per-request outcome (e.g. a
+            // wedged shard under a chaos plan), not a client failure.
+            504 => {
+                report.deadline_exceeded += 1;
+                backoff_level = 0;
             }
             _ => {
                 report.failed += 1;
@@ -138,7 +173,7 @@ fn main() -> anyhow::Result<()> {
                 let (addr, model) = (addr.clone(), model.map(str::to_string));
                 scope.spawn(move || {
                     let body = make_body(model.as_deref(), batch, side, 0xC11E47 + c as u64);
-                    run_connection(&addr, &body, requests)
+                    run_connection(&addr, &body, requests, 0xBAC0FF ^ c as u64)
                 })
             })
             .collect();
@@ -150,23 +185,27 @@ fn main() -> anyhow::Result<()> {
     .map_err(anyhow::Error::msg)?;
     let elapsed = t0.elapsed().as_secs_f64();
 
-    let (mut ok, mut shed, mut failed, mut reconnects) = (0usize, 0usize, 0usize, 0usize);
+    let (mut ok, mut shed, mut failed) = (0usize, 0usize, 0usize);
+    let (mut reconnects, mut retries, mut deadline_exceeded) = (0usize, 0usize, 0usize);
     let mut latencies: Vec<f64> = Vec::new();
     for r in &reports {
         ok += r.ok;
         shed += r.shed;
         failed += r.failed;
         reconnects += r.reconnects;
+        retries += r.retries;
+        deadline_exceeded += r.deadline_exceeded;
         latencies.extend_from_slice(&r.latencies_us);
     }
     let s = Summary::of(&latencies);
-    let total = (ok + shed + failed) as f64;
+    let total = (ok + shed + failed + deadline_exceeded) as f64;
     println!(
         "{:.1} req/s · {:.1} k img/s over {elapsed:.2}s ({ok} ok, {shed} shed 503, \
-         {failed} failed, {reconnects} reconnect(s))",
+         {deadline_exceeded} deadline 504, {failed} failed, {reconnects} reconnect(s))",
         total / elapsed,
         ok as f64 * batch as f64 / elapsed / 1e3,
     );
+    println!("retries after backpressure: {retries} (seeded jittered exponential backoff)");
     println!(
         "per-request latency: p50 {:.0} µs · p95 {:.0} µs · p99 {:.0} µs (batch of {batch})",
         s.p50, s.p95, s.p99

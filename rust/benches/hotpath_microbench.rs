@@ -135,6 +135,7 @@ fn bench_http_rows(
                     max_batch: 16,
                     max_wait: Duration::from_micros(50),
                 },
+                ..PoolConfig::default()
             },
         ));
         let state = ServerState::new(Arc::clone(&coord));
@@ -358,6 +359,7 @@ fn main() {
                     max_batch: 16,
                     max_wait: Duration::from_micros(50),
                 },
+                ..PoolConfig::default()
             },
         );
         let workload: Vec<_> = images.iter().cycle().take(64).cloned().collect();

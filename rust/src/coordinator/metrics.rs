@@ -203,6 +203,12 @@ impl Metrics {
             batches,
             per_model,
             shard_requests,
+            // Supervision counters live on the coordinator's shard states,
+            // not in the per-shard sinks; `Coordinator::metrics` fills
+            // them in after the merge.
+            shard_panics: 0,
+            respawns: 0,
+            shard_health: Vec::new(),
         }
     }
 }
@@ -223,6 +229,13 @@ pub struct MetricsSnapshot {
     pub per_model: BTreeMap<String, ModelStats>,
     /// Requests handled by each shard, in shard order.
     pub shard_requests: Vec<u64>,
+    /// Evaluation panics caught across all shards.
+    pub shard_panics: u64,
+    /// Worker respawns performed by the supervisor.
+    pub respawns: u64,
+    /// Per-shard supervision state ("healthy" / "respawning" / "dead"),
+    /// in shard order (empty when taken from a bare `Metrics` sink).
+    pub shard_health: Vec<&'static str>,
 }
 
 impl MetricsSnapshot {
@@ -254,6 +267,12 @@ impl MetricsSnapshot {
             (
                 "shard_requests",
                 Json::arr(self.shard_requests.iter().map(|&r| Json::num(r as f64))),
+            ),
+            ("shard_panics", Json::num(self.shard_panics as f64)),
+            ("respawns", Json::num(self.respawns as f64)),
+            (
+                "shard_health",
+                Json::arr(self.shard_health.iter().map(|&h| Json::str(h))),
             ),
             ("per_model", per_model),
         ])
@@ -344,5 +363,8 @@ mod tests {
         assert!(j.get("latency_p99_us").is_some());
         assert!(j.get("per_model").is_some());
         assert!(j.get("shard_requests").is_some());
+        assert_eq!(j.get("shard_panics").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(j.get("respawns").and_then(|v| v.as_f64()), Some(0.0));
+        assert!(j.get("shard_health").is_some());
     }
 }

@@ -42,11 +42,15 @@ pub use sysproc::SysProc;
 
 use crate::data::boolean::BoolImage;
 use crate::tm::{EvalScratch, DEFAULT_BLOCK, MIN_BLOCK};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use crate::util::fault::{self, Site};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Default bound on each shard's submission queue. Beyond this depth the
 /// queue is not absorbing bursts any more, it is hiding an overload — so
@@ -63,6 +67,76 @@ pub struct Overloaded {
     pub capacity: usize,
 }
 
+/// Typed failure for requests caught in-flight by a panicking shard
+/// worker: the request is answered (never lost), the panic is contained
+/// to the slots the worker had already dequeued, and the supervisor
+/// respawns the worker. Retryable — the pool keeps serving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("shard {shard} panicked during evaluation; the request failed and the shard is respawning")]
+pub struct ShardPanicked {
+    pub shard: usize,
+}
+
+/// Typed failure for a response that did not arrive within the request's
+/// deadline (wedged shard, overloaded queue ahead of it, …). The request
+/// itself may still complete server-side; the caller has moved on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("request deadline of {deadline_ms} ms exceeded")]
+pub struct DeadlineExceeded {
+    pub deadline_ms: u64,
+}
+
+/// A shard's supervision state, as reported by `/healthz` and `/metrics`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Worker running normally.
+    Healthy = 0,
+    /// Worker panicked; the supervisor is in its backoff/respawn cycle.
+    /// The queue still accepts work (served after the respawn).
+    Respawning = 1,
+    /// Too many respawns inside the window: the worker stays down and a
+    /// reaper answers the shard's queue with typed [`ShardPanicked`]
+    /// errors. Routing skips the shard while any sibling is alive.
+    Dead = 2,
+}
+
+impl ShardHealth {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardHealth::Healthy => "healthy",
+            ShardHealth::Respawning => "respawning",
+            ShardHealth::Dead => "dead",
+        }
+    }
+}
+
+/// Supervision policy for pool workers (capped exponential backoff and
+/// the respawn budget that separates a transient panic from a crash
+/// loop).
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Respawns tolerated within [`Self::respawn_window`] before the
+    /// shard is declared [`ShardHealth::Dead`].
+    pub max_respawns: usize,
+    /// Sliding window over which respawns are counted.
+    pub respawn_window: Duration,
+    /// First-respawn backoff; doubles per respawn in the window.
+    pub backoff_base: Duration,
+    /// Upper bound on the exponential backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            max_respawns: 5,
+            respawn_window: Duration::from_secs(30),
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
 /// Shard-pool sizing and policy.
 #[derive(Clone, Copy, Debug)]
 pub struct PoolConfig {
@@ -72,6 +146,11 @@ pub struct PoolConfig {
     pub queue_capacity: usize,
     /// Dynamic-batching policy applied by every shard.
     pub batch: BatchConfig,
+    /// Deadline applied by the waiting variants (`classify*`, the HTTP
+    /// front door) when the request carries none. `None` waits forever.
+    pub default_deadline: Option<Duration>,
+    /// Worker panic-respawn policy.
+    pub supervisor: SupervisorConfig,
 }
 
 impl Default for PoolConfig {
@@ -80,7 +159,32 @@ impl Default for PoolConfig {
             shards: 4,
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             batch: BatchConfig::default(),
+            default_deadline: None,
+            supervisor: SupervisorConfig::default(),
         }
+    }
+}
+
+/// Wait on a response channel under an optional deadline, mapping the
+/// timeout to a typed [`DeadlineExceeded`] and a dropped coordinator to a
+/// plain error. The abandoned response (if it ever arrives) is discarded
+/// harmlessly: the worker's send fails silently and its accounting is
+/// unaffected.
+pub fn recv_deadline<T>(rx: &Receiver<T>, deadline: Option<Duration>) -> anyhow::Result<T> {
+    match deadline {
+        None => rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped request")),
+        Some(d) => match rx.recv_timeout(d) {
+            Ok(v) => Ok(v),
+            Err(RecvTimeoutError::Timeout) => Err(DeadlineExceeded {
+                deadline_ms: d.as_millis() as u64,
+            }
+            .into()),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow::anyhow!("coordinator dropped request"))
+            }
+        },
     }
 }
 
@@ -118,13 +222,95 @@ impl Request {
     }
 }
 
+/// Lock-free supervision state shared between a shard's submission side,
+/// its worker, and the supervisor.
+struct ShardState {
+    /// `ShardHealth` as its discriminant (also the routing rank).
+    health: AtomicU8,
+    /// Evaluation panics caught on this shard.
+    panics: AtomicU64,
+    /// Times the supervisor respawned this shard's worker.
+    respawns: AtomicU64,
+}
+
+impl ShardState {
+    fn new() -> ShardState {
+        ShardState {
+            health: AtomicU8::new(ShardHealth::Healthy as u8),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+        }
+    }
+
+    fn health(&self) -> ShardHealth {
+        match self.health.load(Ordering::Acquire) {
+            0 => ShardHealth::Healthy,
+            1 => ShardHealth::Respawning,
+            _ => ShardHealth::Dead,
+        }
+    }
+
+    fn set_health(&self, h: ShardHealth) {
+        self.health.store(h as u8, Ordering::Release);
+    }
+
+    /// Routing preference: healthiest first.
+    fn rank(&self) -> u8 {
+        self.health.load(Ordering::Acquire)
+    }
+}
+
 /// One worker thread plus its submission side.
 struct Shard {
     tx: Option<SyncSender<Request>>,
     /// Requests enqueued or in flight on this shard (the routing key).
     outstanding: Arc<AtomicUsize>,
     metrics: Arc<Metrics>,
+    state: Arc<ShardState>,
+    /// Backend-mode worker handle. Pool workers are owned (and respawned)
+    /// by the supervisor thread instead.
     worker: Option<JoinHandle<()>>,
+}
+
+/// Everything a pool worker (or its replacement after a respawn) needs.
+/// The receiver sits behind a mutex so the supervisor can hand the same
+/// queue to a fresh worker — requests enqueued across a panic are served,
+/// not dropped.
+#[derive(Clone)]
+struct PoolShardRuntime {
+    index: usize,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<Metrics>,
+    outstanding: Arc<AtomicUsize>,
+    state: Arc<ShardState>,
+    batch: BatchConfig,
+    sup_tx: Sender<SupMsg>,
+}
+
+/// Worker → supervisor lifecycle messages.
+enum SupMsg {
+    Exited { shard: usize, panicked: bool },
+}
+
+/// Drop guard carried by every pool worker/reaper thread: notifies the
+/// supervisor on *any* exit path, including a panic that escapes the
+/// per-request `catch_unwind` (e.g. inside the batcher). Unless the
+/// worker reaches its clean epilogue, the exit counts as a panic and
+/// triggers a respawn.
+struct ExitNotice {
+    shard: usize,
+    sup: Sender<SupMsg>,
+    clean: bool,
+}
+
+impl Drop for ExitNotice {
+    fn drop(&mut self) {
+        let _ = self.sup.send(SupMsg::Exited {
+            shard: self.shard,
+            panicked: !self.clean,
+        });
+    }
 }
 
 /// Handle for submitting classification requests.
@@ -132,6 +318,9 @@ pub struct Coordinator {
     shards: Vec<Shard>,
     registry: Option<Arc<ModelRegistry>>,
     queue_capacity: usize,
+    default_deadline: Option<Duration>,
+    /// Pool mode only: the thread that respawns panicked workers.
+    supervisor: Option<JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -168,20 +357,28 @@ impl Coordinator {
         let (tx, rx) = sync_channel(queue_capacity);
         let metrics = Arc::new(Metrics::new());
         let outstanding = Arc::new(AtomicUsize::new(0));
-        let (m, o) = (Arc::clone(&metrics), Arc::clone(&outstanding));
+        let state = Arc::new(ShardState::new());
+        let (m, o, st) = (
+            Arc::clone(&metrics),
+            Arc::clone(&outstanding),
+            Arc::clone(&state),
+        );
         let worker = std::thread::Builder::new()
             .name("convcotm-coordinator".into())
-            .spawn(move || backend_worker(factory(), rx, m, o, cfg))
+            .spawn(move || backend_worker(factory(), rx, m, o, st, cfg))
             .expect("spawn coordinator thread");
         Coordinator {
             shards: vec![Shard {
                 tx: Some(tx),
                 outstanding,
                 metrics,
+                state,
                 worker: Some(worker),
             }],
             registry: None,
             queue_capacity,
+            default_deadline: None,
+            supervisor: None,
         }
     }
 
@@ -193,30 +390,47 @@ impl Coordinator {
     /// zero dropped requests.
     pub fn start_pool(registry: Arc<ModelRegistry>, cfg: PoolConfig) -> Coordinator {
         let queue_capacity = cfg.queue_capacity.max(1);
-        let shards = (0..cfg.shards.max(1))
-            .map(|i| {
-                let (tx, rx) = sync_channel(queue_capacity);
-                let metrics = Arc::new(Metrics::new());
-                let outstanding = Arc::new(AtomicUsize::new(0));
-                let (m, o) = (Arc::clone(&metrics), Arc::clone(&outstanding));
-                let reg = Arc::clone(&registry);
-                let batch = cfg.batch;
-                let worker = std::thread::Builder::new()
-                    .name(format!("convcotm-shard-{i}"))
-                    .spawn(move || pool_worker(rx, reg, m, o, batch))
-                    .expect("spawn shard worker");
-                Shard {
-                    tx: Some(tx),
-                    outstanding,
-                    metrics,
-                    worker: Some(worker),
-                }
-            })
+        let (sup_tx, sup_rx) = channel();
+        let mut shards = Vec::new();
+        let mut runtimes = Vec::new();
+        for i in 0..cfg.shards.max(1) {
+            let (tx, rx) = sync_channel(queue_capacity);
+            let metrics = Arc::new(Metrics::new());
+            let outstanding = Arc::new(AtomicUsize::new(0));
+            let state = Arc::new(ShardState::new());
+            runtimes.push(PoolShardRuntime {
+                index: i,
+                rx: Arc::new(Mutex::new(rx)),
+                registry: Arc::clone(&registry),
+                metrics: Arc::clone(&metrics),
+                outstanding: Arc::clone(&outstanding),
+                state: Arc::clone(&state),
+                batch: cfg.batch,
+                sup_tx: sup_tx.clone(),
+            });
+            shards.push(Shard {
+                tx: Some(tx),
+                outstanding,
+                metrics,
+                state,
+                worker: None,
+            });
+        }
+        let handles: Vec<Option<JoinHandle<()>>> = runtimes
+            .iter()
+            .map(|rt| Some(spawn_pool_worker(rt.clone())))
             .collect();
+        let sup_cfg = cfg.supervisor;
+        let supervisor = std::thread::Builder::new()
+            .name("convcotm-supervisor".into())
+            .spawn(move || supervisor_loop(runtimes, handles, sup_rx, sup_cfg))
+            .expect("spawn supervisor thread");
         Coordinator {
             shards,
             registry: Some(registry),
             queue_capacity,
+            default_deadline: cfg.default_deadline,
+            supervisor: Some(supervisor),
         }
     }
 
@@ -228,6 +442,22 @@ impl Coordinator {
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The pool's default response deadline (`None` waits forever).
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.default_deadline
+    }
+
+    /// The deadline to apply to one request: its own override, else the
+    /// pool default.
+    pub fn effective_deadline(&self, per_request: Option<Duration>) -> Option<Duration> {
+        per_request.or(self.default_deadline)
+    }
+
+    /// Per-shard supervision state, in shard order.
+    pub fn shard_health(&self) -> Vec<ShardHealth> {
+        self.shards.iter().map(|s| s.state.health()).collect()
     }
 
     /// Submit with backpressure: blocks while the routed shard's bounded
@@ -274,9 +504,7 @@ impl Coordinator {
         img: BoolImage,
     ) -> Result<Receiver<anyhow::Result<BackendOutput>>, Overloaded> {
         let (mut req, resp_rx) = self.make_request(model, img);
-        let mut order: Vec<usize> = (0..self.shards.len()).collect();
-        order.sort_by_key(|&i| self.shards[i].outstanding.load(Ordering::Acquire));
-        for &i in &order {
+        for i in self.routing_order() {
             let shard = &self.shards[i];
             let tx = shard.tx.as_ref().expect("coordinator running");
             shard.outstanding.fetch_add(1, Ordering::AcqRel);
@@ -317,9 +545,7 @@ impl Coordinator {
             enqueued: Instant::now(),
             payload: Payload::Block(imgs, resp_tx),
         };
-        let mut order: Vec<usize> = (0..self.shards.len()).collect();
-        order.sort_by_key(|&i| self.shards[i].outstanding.load(Ordering::Acquire));
-        for &i in &order {
+        for i in self.routing_order() {
             let shard = &self.shards[i];
             // Image-count admission: don't let a block pile onto a shard
             // that the equivalent per-image burst would have saturated.
@@ -374,37 +600,64 @@ impl Coordinator {
         resp_rx
     }
 
-    /// Submit a batch as one block and wait for the per-image results.
+    /// Submit a batch as one block and wait for the per-image results,
+    /// under the pool's default deadline.
     pub fn classify_block(
         &self,
         model: Option<&str>,
         imgs: Vec<BoolImage>,
     ) -> anyhow::Result<Vec<anyhow::Result<BackendOutput>>> {
-        self.submit_block_to(model, imgs)
-            .recv()
-            .map_err(|_| anyhow::anyhow!("coordinator dropped request"))
+        let rx = self.submit_block_to(model, imgs);
+        recv_deadline(&rx, self.default_deadline)
     }
 
-    /// Submit and wait.
+    /// Submit and wait (under the pool's default deadline).
     pub fn classify(&self, img: BoolImage) -> anyhow::Result<BackendOutput> {
         self.classify_model(None, img)
     }
 
-    /// Submit to a named registry model and wait.
+    /// Submit to a named registry model and wait (under the pool's
+    /// default deadline).
     pub fn classify_model(
         &self,
         model: Option<&str>,
         img: BoolImage,
     ) -> anyhow::Result<BackendOutput> {
-        self.submit_to(model, img)
-            .recv()
-            .map_err(|_| anyhow::anyhow!("coordinator dropped request"))?
+        self.classify_model_deadline(model, img, self.default_deadline)
     }
 
-    /// Aggregate snapshot over every shard (per-shard request counts and
-    /// per-model breakdowns included).
+    /// [`Self::classify_model`] with an explicit per-request deadline
+    /// (`None` waits forever, overriding any pool default).
+    pub fn classify_model_deadline(
+        &self,
+        model: Option<&str>,
+        img: BoolImage,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<BackendOutput> {
+        let rx = self.submit_to(model, img);
+        recv_deadline(&rx, deadline)?
+    }
+
+    /// Aggregate snapshot over every shard (per-shard request counts,
+    /// per-model breakdowns, and supervision counters included).
     pub fn metrics(&self) -> MetricsSnapshot {
-        Metrics::merged(self.shards.iter().map(|s| s.metrics.as_ref()))
+        let mut snap = Metrics::merged(self.shards.iter().map(|s| s.metrics.as_ref()));
+        snap.shard_panics = self
+            .shards
+            .iter()
+            .map(|s| s.state.panics.load(Ordering::Relaxed))
+            .sum();
+        snap.respawns = self
+            .shards
+            .iter()
+            .map(|s| s.state.respawns.load(Ordering::Relaxed))
+            .sum();
+        snap.shard_health = self
+            .shards
+            .iter()
+            .map(|s| s.state.health().name())
+            .collect();
+        snap
     }
 
     /// Drain all queues and stop the workers. Every request submitted
@@ -433,8 +686,30 @@ impl Coordinator {
 
     fn least_loaded(&self) -> usize {
         (0..self.shards.len())
-            .min_by_key(|&i| self.shards[i].outstanding.load(Ordering::Acquire))
+            .min_by_key(|&i| {
+                let s = &self.shards[i];
+                (s.state.rank(), s.outstanding.load(Ordering::Acquire))
+            })
             .expect("a coordinator always has at least one shard")
+    }
+
+    /// Shard indices in routing-preference order: healthiest first, then
+    /// least outstanding. Dead shards are skipped entirely — unless every
+    /// shard is dead, in which case they are offered anyway so the reaper
+    /// can answer with a typed [`ShardPanicked`] (exactly one response per
+    /// accepted request, even with the whole pool down).
+    fn routing_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| self.shards[i].state.health() != ShardHealth::Dead)
+            .collect();
+        if order.is_empty() {
+            order = (0..self.shards.len()).collect();
+        }
+        order.sort_by_key(|&i| {
+            let s = &self.shards[i];
+            (s.state.rank(), s.outstanding.load(Ordering::Acquire))
+        });
+        order
     }
 
     fn close_and_join(&mut self) {
@@ -446,6 +721,11 @@ impl Coordinator {
                 let _ = w.join();
             }
         }
+        // Pool mode: the supervisor joins every (re)spawned worker itself,
+        // so joining it is joining the whole pool.
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
+        }
     }
 }
 
@@ -456,12 +736,17 @@ impl Drop for Coordinator {
 }
 
 /// Single-backend worker loop (ASIC simulator, PJRT, mirror, or a native
-/// backend without a registry).
+/// backend without a registry). A panic inside `Backend::classify` is
+/// contained to the chunk that raised it (those slots fail with a typed
+/// [`ShardPanicked`]); the worker then keeps serving with the same backend
+/// instance — backend mode has no supervisor, because the `FnOnce` factory
+/// that built the backend cannot be re-run.
 fn backend_worker<B: Backend>(
     mut backend: B,
     rx: Receiver<Request>,
     m: Arc<Metrics>,
     outstanding: Arc<AtomicUsize>,
+    state: Arc<ShardState>,
     cfg: BatchConfig,
 ) {
     let effective = BatchConfig {
@@ -509,8 +794,14 @@ fn backend_worker<B: Backend>(
         // chunk the flat work list to the effective batch bound.
         for chunk in work.chunks(effective.max_batch.max(1)) {
             let imgs: Vec<&BoolImage> = chunk.iter().map(|&(u, i)| &batch[u].images()[i]).collect();
-            match backend.classify(&imgs) {
-                Ok(outputs) => {
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                fault::panic_point(Site::EvalPanic);
+                fault::delay_point(Site::EvalDelay);
+                fault::delay_point(Site::ShardWedge);
+                backend.classify(&imgs)
+            }));
+            match outcome {
+                Ok(Ok(outputs)) => {
                     let now = Instant::now();
                     let lat: Vec<f64> = chunk
                         .iter()
@@ -521,10 +812,17 @@ fn backend_worker<B: Backend>(
                         results[u][i] = Some(Ok(out));
                     }
                 }
-                Err(e) => {
+                Ok(Err(e)) => {
                     m.record_error(chunk.len() as u64);
                     for &(u, i) in chunk {
                         results[u][i] = Some(Err(anyhow::anyhow!("{e}")));
+                    }
+                }
+                Err(_) => {
+                    state.panics.fetch_add(1, Ordering::Relaxed);
+                    m.record_error(chunk.len() as u64);
+                    for &(u, i) in chunk {
+                        results[u][i] = Some(Err(ShardPanicked { shard: 0 }.into()));
                     }
                 }
             }
@@ -545,17 +843,48 @@ fn backend_worker<B: Backend>(
     }
 }
 
-/// Shard-pool worker loop: evaluates through registry-compiled plans with
+fn spawn_pool_worker(rt: PoolShardRuntime) -> JoinHandle<()> {
+    let name = format!("convcotm-shard-{}", rt.index);
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || pool_worker(rt))
+        .expect("spawn shard worker")
+}
+
+/// How a pool worker's serving loop ended.
+enum WorkerExit {
+    /// Queue closed (shutdown): drained everything, no respawn needed.
+    Clean,
+    /// An evaluation panic was contained; the supervisor should respawn.
+    Panicked,
+}
+
+/// Shard-pool worker: wraps the serving loop in an [`ExitNotice`] so the
+/// supervisor hears about *every* exit — a contained evaluation panic, a
+/// clean shutdown drain, or even a panic that escapes the loop itself.
+fn pool_worker(rt: PoolShardRuntime) {
+    let mut notice = ExitNotice {
+        shard: rt.index,
+        sup: rt.sup_tx.clone(),
+        clean: false,
+    };
+    let exit = pool_worker_loop(&rt);
+    notice.clean = matches!(exit, WorkerExit::Clean);
+}
+
+/// Shard-pool serving loop: evaluates through registry-compiled plans with
 /// a per-shard arena. The registry is consulted once per (batch, model) —
 /// an in-flight batch keeps its `Arc<ModelEntry>` across a concurrent
 /// hot-swap, which is what makes [`ModelRegistry::swap`] lossless.
-fn pool_worker(
-    rx: Receiver<Request>,
-    registry: Arc<ModelRegistry>,
-    m: Arc<Metrics>,
-    outstanding: Arc<AtomicUsize>,
-    cfg: BatchConfig,
-) {
+///
+/// Panic isolation: every evaluation runs under `catch_unwind`. A panic
+/// fails the unit that raised it and the rest of the already-dequeued
+/// batch with typed [`ShardPanicked`] errors (never silence), then returns
+/// [`WorkerExit::Panicked`] so the supervisor respawns the worker with a
+/// fresh arena. The queue lock is held only while *assembling* a batch, so
+/// an evaluation panic can never poison the receiver handed to the
+/// replacement worker.
+fn pool_worker_loop(rt: &PoolShardRuntime) -> WorkerExit {
     let mut scratch = EvalScratch::new();
     // Latencies of the current same-model run, flushed to the metrics sink
     // in one locked call per (batch, model) run — the hot path takes the
@@ -566,14 +895,23 @@ fn pool_worker(
     // the first block after every hot-swap.
     #[cfg(debug_assertions)]
     let mut cross_checked: Option<(String, u64)> = None;
-    while let Some(batch) = batcher::next_batch(&rx, &cfg) {
-        m.record_batch_size(batch.iter().map(Request::n_images).sum());
+    loop {
+        let batch = {
+            let guard = rt.rx.lock().unwrap_or_else(|p| p.into_inner());
+            batcher::next_batch(&guard, &rt.batch)
+        };
+        let Some(batch) = batch else {
+            return WorkerExit::Clean;
+        };
+        rt.metrics
+            .record_batch_size(batch.iter().map(Request::n_images).sum());
         // Entry cache for this batch only: consecutive requests for one
         // model skip the registry's read lock, while a new batch always
         // re-resolves and therefore observes completed swaps.
         let mut cached: Option<(Option<String>, Arc<ModelEntry>)> = None;
         let mut run: Option<Arc<ModelEntry>> = None;
-        for req in batch {
+        let mut units = batch.into_iter();
+        while let Some(req) = units.next() {
             let Request {
                 model,
                 enqueued,
@@ -581,14 +919,23 @@ fn pool_worker(
             } = req;
             match payload {
                 Payload::One(img, resp) => {
-                    match serve_one(&registry, &mut cached, &model, &img, &mut scratch) {
-                        Ok((entry, out)) => {
+                    // The reply sender stays outside the closure: on a
+                    // panic the request is still answered, with a typed
+                    // error instead of a hang.
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        fault::panic_point(Site::EvalPanic);
+                        fault::delay_point(Site::EvalDelay);
+                        fault::delay_point(Site::ShardWedge);
+                        serve_one(&rt.registry, &mut cached, &model, &img, &mut scratch)
+                    }));
+                    match outcome {
+                        Ok(Ok((entry, out))) => {
                             let lat = (Instant::now() - enqueued).as_secs_f64() * 1e6;
                             match &run {
                                 Some(r) if Arc::ptr_eq(r, &entry) => run_lat.push(lat),
                                 _ => {
                                     if let Some(r) = run.take() {
-                                        m.record_model_batch(&r.name, &run_lat);
+                                        rt.metrics.record_model_batch(&r.name, &run_lat);
                                         run_lat.clear();
                                     }
                                     run_lat.push(lat);
@@ -597,25 +944,71 @@ fn pool_worker(
                             }
                             let _ = resp.send(Ok(out));
                         }
-                        Err((attribution, e)) => {
+                        Ok(Err((attribution, e))) => {
                             // Attribute to the model that rejected the
                             // request (the resolved entry for geometry
                             // errors, the requested id for unknown models);
                             // resolution failures with no id at all count
                             // globally only.
                             match attribution {
-                                Some(name) => m.record_model_error(&name, 1),
-                                None => m.record_error(1),
+                                Some(name) => rt.metrics.record_model_error(&name, 1),
+                                None => rt.metrics.record_error(1),
                             }
                             let _ = resp.send(Err(e));
                         }
+                        Err(_) => {
+                            rt.state.panics.fetch_add(1, Ordering::Relaxed);
+                            match &model {
+                                Some(name) => rt.metrics.record_model_error(name, 1),
+                                None => rt.metrics.record_error(1),
+                            }
+                            let _ = resp.send(Err(ShardPanicked { shard: rt.index }.into()));
+                            rt.outstanding.fetch_sub(1, Ordering::AcqRel);
+                            if let Some(r) = run.take() {
+                                rt.metrics.record_model_batch(&r.name, &run_lat);
+                                run_lat.clear();
+                            }
+                            for rest in units.by_ref() {
+                                fail_unit(rest, rt.index, &rt.metrics, &rt.outstanding);
+                            }
+                            return WorkerExit::Panicked;
+                        }
                     }
-                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                    rt.outstanding.fetch_sub(1, Ordering::AcqRel);
                 }
                 Payload::Block(imgs, resp) => {
                     let n = imgs.len();
-                    let (served, outcomes) =
-                        serve_block(&registry, &mut cached, &model, &imgs, &mut scratch);
+                    // `serve_block` borrows the images, so they stay
+                    // available out here for the debug cross-check.
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        fault::panic_point(Site::EvalPanic);
+                        fault::delay_point(Site::EvalDelay);
+                        fault::delay_point(Site::ShardWedge);
+                        serve_block(&rt.registry, &mut cached, &model, &imgs, &mut scratch)
+                    }));
+                    let (served, outcomes) = match outcome {
+                        Ok(v) => v,
+                        Err(_) => {
+                            rt.state.panics.fetch_add(1, Ordering::Relaxed);
+                            match &model {
+                                Some(name) => rt.metrics.record_model_error(name, n as u64),
+                                None => rt.metrics.record_error(n as u64),
+                            }
+                            let failed = (0..n)
+                                .map(|_| Err(ShardPanicked { shard: rt.index }.into()))
+                                .collect();
+                            let _ = resp.send(failed);
+                            rt.outstanding.fetch_sub(n, Ordering::AcqRel);
+                            if let Some(r) = run.take() {
+                                rt.metrics.record_model_batch(&r.name, &run_lat);
+                                run_lat.clear();
+                            }
+                            for rest in units.by_ref() {
+                                fail_unit(rest, rt.index, &rt.metrics, &rt.outstanding);
+                            }
+                            return WorkerExit::Panicked;
+                        }
+                    };
                     #[cfg(debug_assertions)]
                     if let Some(entry) = &served {
                         let key = (entry.name.clone(), entry.version);
@@ -648,32 +1041,143 @@ fn pool_worker(
                         Some(entry) => {
                             if ok > 0 {
                                 if let Some(r) = run.take() {
-                                    m.record_model_batch(&r.name, &run_lat);
+                                    rt.metrics.record_model_batch(&r.name, &run_lat);
                                     run_lat.clear();
                                 }
-                                m.record_model_batch(&entry.name, &vec![lat; ok]);
+                                rt.metrics.record_model_batch(&entry.name, &vec![lat; ok]);
                             }
                             if errs > 0 {
-                                m.record_model_error(&entry.name, errs);
+                                rt.metrics.record_model_error(&entry.name, errs);
                             }
                         }
                         // Resolution failed: every image fails alone with
                         // the same error, attributed like the single path.
                         None => match &model {
-                            Some(name) => m.record_model_error(name, errs),
-                            None => m.record_error(errs),
+                            Some(name) => rt.metrics.record_model_error(name, errs),
+                            None => rt.metrics.record_error(errs),
                         },
                     }
                     let _ = resp.send(outcomes);
-                    outstanding.fetch_sub(n, Ordering::AcqRel);
+                    rt.outstanding.fetch_sub(n, Ordering::AcqRel);
                 }
             }
         }
         if let Some(r) = run.take() {
-            m.record_model_batch(&r.name, &run_lat);
+            rt.metrics.record_model_batch(&r.name, &run_lat);
             run_lat.clear();
         }
     }
+}
+
+/// Answer a not-yet-evaluated request with a typed [`ShardPanicked`]: used
+/// for the remainder of a dequeued batch after a contained panic, and by
+/// the reaper of a dead shard. Keeps the exactly-one-response invariant
+/// and the outstanding accounting intact.
+fn fail_unit(req: Request, shard: usize, m: &Metrics, outstanding: &AtomicUsize) {
+    let n = req.n_images();
+    match &req.model {
+        Some(name) => m.record_model_error(name, n as u64),
+        None => m.record_error(n as u64),
+    }
+    match req.payload {
+        Payload::One(_, resp) => {
+            let _ = resp.send(Err(ShardPanicked { shard }.into()));
+        }
+        Payload::Block(imgs, resp) => {
+            let failed = (0..imgs.len())
+                .map(|_| Err(ShardPanicked { shard }.into()))
+                .collect();
+            let _ = resp.send(failed);
+        }
+    }
+    outstanding.fetch_sub(n, Ordering::AcqRel);
+}
+
+/// Supervisor loop (pool mode): joins exited workers, respawns panicked
+/// ones with capped exponential backoff, and declares a shard
+/// [`ShardHealth::Dead`] after `max_respawns` respawns inside the sliding
+/// `respawn_window` — a dead shard's queue is handed to a [`reaper`] so
+/// every accepted request still gets a typed answer. Ends when every shard
+/// has exited cleanly (queues closed at shutdown).
+fn supervisor_loop(
+    runtimes: Vec<PoolShardRuntime>,
+    mut handles: Vec<Option<JoinHandle<()>>>,
+    sup_rx: Receiver<SupMsg>,
+    cfg: SupervisorConfig,
+) {
+    let mut live = runtimes.len();
+    let mut history: Vec<Vec<Instant>> = vec![Vec::new(); runtimes.len()];
+    while live > 0 {
+        // `runtimes` holds a sup_tx clone per shard, so the channel cannot
+        // disconnect while any shard is live; Err is purely defensive.
+        let SupMsg::Exited { shard, panicked } = match sup_rx.recv() {
+            Ok(msg) => msg,
+            Err(_) => break,
+        };
+        if let Some(h) = handles[shard].take() {
+            let _ = h.join();
+        }
+        if !panicked {
+            live -= 1;
+            continue;
+        }
+        let rt = &runtimes[shard];
+        let now = Instant::now();
+        let hist = &mut history[shard];
+        hist.retain(|t| now.duration_since(*t) <= cfg.respawn_window);
+        if hist.len() >= cfg.max_respawns {
+            // Crash loop: keep the worker down; the reaper answers the
+            // queue with typed errors instead of letting it wedge.
+            rt.state.set_health(ShardHealth::Dead);
+            let reaper_rt = rt.clone();
+            handles[shard] = Some(
+                std::thread::Builder::new()
+                    .name(format!("convcotm-reaper-{shard}"))
+                    .spawn(move || reaper(reaper_rt))
+                    .expect("spawn reaper thread"),
+            );
+            continue;
+        }
+        hist.push(now);
+        rt.state.set_health(ShardHealth::Respawning);
+        let k = (hist.len() as u32 - 1).min(16);
+        let backoff = cfg
+            .backoff_base
+            .saturating_mul(1u32 << k)
+            .min(cfg.backoff_cap);
+        // Sleeping inline serializes concurrent respawns across shards.
+        // Acceptable: simultaneous panics on several shards mean the pool
+        // is in real trouble, and the backoff cap bounds the serialization.
+        std::thread::sleep(backoff);
+        rt.state.respawns.fetch_add(1, Ordering::Relaxed);
+        rt.state.set_health(ShardHealth::Healthy);
+        handles[shard] = Some(spawn_pool_worker(rt.clone()));
+    }
+    for h in handles.into_iter().flatten() {
+        let _ = h.join();
+    }
+}
+
+/// Queue reaper for a dead shard: answers every queued and future request
+/// with a typed [`ShardPanicked`] until the queue closes at shutdown, so
+/// even a fully-dead pool never loses a response.
+fn reaper(rt: PoolShardRuntime) {
+    let mut notice = ExitNotice {
+        shard: rt.index,
+        sup: rt.sup_tx.clone(),
+        clean: false,
+    };
+    loop {
+        let req = {
+            let guard = rt.rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        match req {
+            Ok(req) => fail_unit(req, rt.index, &rt.metrics, &rt.outstanding),
+            Err(_) => break,
+        }
+    }
+    notice.clean = true;
 }
 
 /// Serve one pool request: resolve the model (per-request failure on an
@@ -1039,6 +1543,127 @@ mod tests {
             .expect("idle shard accepts");
         assert_eq!(rx.recv().unwrap().len(), 8);
         coord.shutdown();
+    }
+
+    /// Panics on the first `classify` call, then serves normally.
+    struct PanicOnceBackend {
+        inner: NativeBackend,
+        panicked: bool,
+    }
+
+    impl Backend for PanicOnceBackend {
+        fn name(&self) -> &'static str {
+            "panic-once"
+        }
+        fn geometry(&self) -> crate::data::Geometry {
+            self.inner.geometry()
+        }
+        fn max_batch(&self) -> usize {
+            1
+        }
+        fn classify(&mut self, imgs: &[&BoolImage]) -> anyhow::Result<Vec<BackendOutput>> {
+            if !self.panicked {
+                self.panicked = true;
+                panic!("synthetic evaluation panic");
+            }
+            self.inner.classify(imgs)
+        }
+    }
+
+    #[test]
+    fn backend_panic_fails_its_chunk_typed_and_worker_survives() {
+        let model = random_model(61);
+        let coord = Coordinator::start(
+            Box::new(PanicOnceBackend {
+                inner: NativeBackend::new(model.clone()),
+                panicked: false,
+            }),
+            BatchConfig::default(),
+        );
+        let err = coord
+            .classify(random_images(62, 1).remove(0))
+            .expect_err("first request hits the panic");
+        let shard_err = err
+            .downcast_ref::<ShardPanicked>()
+            .expect("typed ShardPanicked, not a stringly error");
+        assert_eq!(shard_err.shard, 0);
+        // The worker caught the panic and keeps serving the same backend.
+        let engine = Engine::new();
+        for img in random_images(63, 4) {
+            let out = coord.classify(img.clone()).unwrap();
+            assert_eq!(out.prediction, engine.classify(&model, &img).prediction);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.shard_panics, 1);
+        assert_eq!(snap.shard_health, vec!["healthy"]);
+    }
+
+    /// Parks every `classify` call until the returned gate is dropped.
+    struct GateBackend {
+        inner: NativeBackend,
+        gate: Arc<Mutex<()>>,
+    }
+
+    impl Backend for GateBackend {
+        fn name(&self) -> &'static str {
+            "gate"
+        }
+        fn geometry(&self) -> crate::data::Geometry {
+            self.inner.geometry()
+        }
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+        fn classify(&mut self, imgs: &[&BoolImage]) -> anyhow::Result<Vec<BackendOutput>> {
+            let _hold = self.gate.lock().unwrap();
+            self.inner.classify(imgs)
+        }
+    }
+
+    #[test]
+    fn deadline_maps_to_typed_error_and_late_result_is_discarded() {
+        let model = random_model(71);
+        let gate = Arc::new(Mutex::new(()));
+        let g2 = Arc::clone(&gate);
+        let coord = Coordinator::start_with(
+            move || GateBackend {
+                inner: NativeBackend::new(model),
+                gate: g2,
+            },
+            BatchConfig::default(),
+        );
+        let hold = gate.lock().unwrap();
+        let err = coord
+            .classify_model_deadline(
+                None,
+                random_images(72, 1).remove(0),
+                Some(Duration::from_millis(20)),
+            )
+            .expect_err("gated backend cannot answer in time");
+        let dl = err
+            .downcast_ref::<DeadlineExceeded>()
+            .expect("typed DeadlineExceeded");
+        assert_eq!(dl.deadline_ms, 20);
+        drop(hold);
+        // The wedge cleared: the abandoned response is discarded harmlessly
+        // and fresh requests are served.
+        coord
+            .classify(random_images(73, 1).remove(0))
+            .expect("served after the wedge clears");
+        let snap = coord.shutdown();
+        assert_eq!(snap.requests, 2, "the timed-out request still completed");
+    }
+
+    #[test]
+    fn recv_deadline_without_deadline_waits() {
+        let (tx, rx) = channel::<u32>();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let _ = tx.send(7);
+        });
+        assert_eq!(recv_deadline(&rx, None).unwrap(), 7);
     }
 
     #[test]

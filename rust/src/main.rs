@@ -32,10 +32,11 @@ use convcotm::energy::{EnergyModel, OperatingPoint};
 use convcotm::model_io;
 use convcotm::server::{HttpServer, ServerConfig, ServerState};
 use convcotm::tm::{Engine, Params, Trainer};
+use convcotm::util::fault::{self, FaultPlan};
 use convcotm::util::{Json, Table};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let args = match Args::from_env() {
@@ -78,6 +79,8 @@ fn print_usage() {
          serve  --listen ADDR[:PORT] --http-workers N [pool flags as above]\n\
                 (resident HTTP front door: POST /v1/classify, GET /healthz, GET /metrics,\n\
                  POST /admin/models, POST /admin/shutdown — see DESIGN.md \u{a7}10)\n\
+                --deadline-ms N (default response deadline; per-request deadline_ms overrides)\n\
+                --fault-plan SPEC (deterministic chaos, e.g. seed=42,eval_panic=p0.02 — DESIGN.md \u{a7}12)\n\
          power  --model FILE [--vdd V --freq HZ]\n\
          info   [--geometry G]\n\n\
          Geometries: asic (28x10s1, default), cifar10 (32x10s1), or SIDExWINDOW[sSTRIDE].\n\
@@ -241,6 +244,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 shards,
                 queue_capacity: DEFAULT_QUEUE_CAPACITY,
                 batch: BatchConfig::default(),
+                ..PoolConfig::default()
             },
         );
         println!("serving '{serve_name}' from {shards} shard(s) while training");
@@ -379,6 +383,30 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Arm the deterministic fault-injection plan from `--fault-plan SPEC`
+/// (or `CONVCOTM_FAULT_PLAN`). Chaos testing only; without a plan every
+/// hook is a single relaxed atomic load.
+fn arm_fault_plan(args: &Args) -> anyhow::Result<()> {
+    let plan = match args.get("fault-plan") {
+        Some(spec) => Some(FaultPlan::parse(spec).map_err(anyhow::Error::msg)?),
+        None => FaultPlan::from_env().map_err(anyhow::Error::msg)?,
+    };
+    if let Some(plan) = plan {
+        if !plan.is_empty() {
+            eprintln!("fault injection ARMED: {}", plan.spec());
+            fault::arm_process(plan);
+        }
+    }
+    Ok(())
+}
+
+/// `--deadline-ms N` → the pool's default response deadline (0 or absent
+/// = wait forever).
+fn deadline_arg(args: &Args) -> anyhow::Result<Option<Duration>> {
+    let ms = args.get_usize("deadline-ms", 0).map_err(anyhow::Error::msg)?;
+    Ok((ms > 0).then(|| Duration::from_millis(ms as u64)))
+}
+
 /// Is this serve invocation asking for the sharded multi-model pool?
 /// Any of `--shards`, `--manifest`, a repeated `--model`, or a
 /// `NAME=PATH` model spec selects it.
@@ -471,6 +499,8 @@ fn cmd_serve_pool(args: &Args) -> anyhow::Result<()> {
                 max_batch,
                 ..BatchConfig::default()
             },
+            default_deadline: deadline_arg(args)?,
+            ..PoolConfig::default()
         },
     );
     println!(
@@ -545,6 +575,8 @@ fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
                 max_batch,
                 ..BatchConfig::default()
             },
+            default_deadline: deadline_arg(args)?,
+            ..PoolConfig::default()
         },
     ));
     let cfg = ServerConfig {
@@ -582,6 +614,7 @@ fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    arm_fault_plan(args)?;
     if args.get("listen").is_some() {
         return cmd_serve_http(args);
     }

@@ -23,12 +23,25 @@
 //! servable model — the model loaders reject it with a pointed error —
 //! and resuming from one is bit-identical to never having stopped
 //! (DESIGN.md §9).
+//!
+//! Version 4 unifies both under one **integrity-checked frame**
+//! (DESIGN.md §12): `magic · version=4 · kind (0 model / 1 checkpoint) ·
+//! legacy-layout body · CRC32 footer` (little-endian, [`crate::util::crc`]
+//! over every preceding byte). Loaders verify the footer *before* parsing,
+//! so a truncated or bit-flipped artifact surfaces as a typed
+//! [`ModelIoError::ChecksumMismatch`]/[`ModelIoError::Truncated`] — never
+//! a panic, never a silently garbled model. Legacy v1–v3 files still load
+//! (with a warning that they carry no footer). All writers go through
+//! [`write_atomic`]: temp file → fsync → rename → parent-directory fsync,
+//! so a crash at any instant leaves either the old artifact or the new
+//! one, durably.
 
 use crate::data::Geometry;
 use crate::tm::params::Params;
 use crate::tm::{Model, TrainCheckpoint};
-use crate::util::BitVec;
-use std::io::{Read, Write};
+use crate::util::fault::{self, Site};
+use crate::util::{crc32, BitVec};
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 /// Container magic: "CCTM" + format version.
@@ -36,6 +49,11 @@ const MAGIC: &[u8; 4] = b"CCTM";
 const VERSION: u16 = 2;
 /// Training-checkpoint container version (see the module docs).
 const CHECKPOINT_VERSION: u16 = 3;
+/// The unified CRC-footed frame version written by every saver.
+pub const FRAME_VERSION: u16 = 4;
+/// v4 frame kinds.
+const KIND_MODEL: u8 = 0;
+const KIND_CHECKPOINT: u8 = 1;
 
 #[derive(Debug, thiserror::Error)]
 pub enum ModelIoError {
@@ -46,12 +64,23 @@ pub enum ModelIoError {
     #[error("unsupported version {0}")]
     Version(u16),
     #[error(
-        "this file is a v3 training checkpoint, not a servable model \
+        "this file is a training checkpoint, not a servable model \
          (resume it with `train --resume` and export a model)"
     )]
     CheckpointNotModel,
     #[error("this file is a v{0} model, not a training checkpoint (train from scratch or pass a .ckpt file)")]
     ModelNotCheckpoint(u16),
+    #[error(
+        "checksum mismatch: stored {stored:#010x}, computed {computed:#010x} \
+         (the file is corrupt or was truncated mid-write)"
+    )]
+    ChecksumMismatch { stored: u32, computed: u32 },
+    #[error("truncated frame: {section} needs {needed} byte(s), {have} available")]
+    Truncated {
+        section: &'static str,
+        needed: usize,
+        have: usize,
+    },
     #[error("dimension mismatch: file has {file:?}, expected {expected:?}")]
     DimMismatch {
         file: (u32, u32, u32),
@@ -110,12 +139,58 @@ pub fn from_wire(params: Params, bytes: &[u8]) -> Result<Model, ModelIoError> {
     Ok(Model::from_parts(params, include, weights))
 }
 
-/// Save with the self-describing container header (v2: dims + geometry).
+/// Write `bytes` to `path` atomically and durably: sibling temp file →
+/// file fsync → rename over the target → parent-directory fsync (rename
+/// durability is a directory-entry property that the file's own fsync
+/// does not cover). A crash at any instant leaves either the complete
+/// previous artifact or the complete new one at `path`. The
+/// [`Site::IoError`]/[`Site::CkptWriteTruncate`] fault sites live here —
+/// the latter renames a short write into place, the exact torn-write the
+/// CRC footer exists to catch.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = match path.file_name() {
+        Some(name) => {
+            let mut n = name.to_os_string();
+            n.push(".tmp");
+            path.with_file_name(n)
+        }
+        None => path.with_file_name("artifact.tmp"),
+    };
+    fault::io_error_point(Site::IoError)?;
+    let cut = fault::truncate_point(Site::CkptWriteTruncate).unwrap_or(0);
+    let data = &bytes[..bytes.len().saturating_sub(cut)];
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(data)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    #[cfg(unix)]
+    {
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(parent)?.sync_all()?;
+    }
+    Ok(())
+}
+
+/// Append the CRC32 footer and persist the frame via [`write_atomic`].
+fn seal_and_write(path: &Path, mut frame: Vec<u8>) -> Result<(), ModelIoError> {
+    let crc = crc32(&frame);
+    frame.extend_from_slice(&crc.to_le_bytes());
+    write_atomic(path, &frame)?;
+    Ok(())
+}
+
+/// Save with the self-describing container header as a v4 CRC-footed
+/// frame (kind 0: the v2 dims + geometry body).
 pub fn save_file(model: &Model, path: &Path) -> Result<(), ModelIoError> {
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
     let p = &model.params;
+    let mut bytes = Vec::with_capacity(4 + 2 + 1 + 6 * 4 + p.model_wire_bytes() + 4);
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&FRAME_VERSION.to_le_bytes());
+    bytes.push(KIND_MODEL);
     for dim in [
         p.clauses as u32,
         p.classes as u32,
@@ -124,10 +199,94 @@ pub fn save_file(model: &Model, path: &Path) -> Result<(), ModelIoError> {
         p.geometry.window as u32,
         p.geometry.stride as u32,
     ] {
-        f.write_all(&dim.to_le_bytes())?;
+        bytes.extend_from_slice(&dim.to_le_bytes());
     }
-    f.write_all(&to_wire(model))?;
-    Ok(())
+    bytes.extend_from_slice(&to_wire(model));
+    seal_and_write(path, bytes)
+}
+
+/// A decoded frame: version, kind, and the body slice (between the frame
+/// header and the CRC footer for v4; everything after the version for
+/// legacy files).
+struct Frame<'a> {
+    version: u16,
+    kind: u8,
+    body: &'a [u8],
+}
+
+/// Decode and *verify* a frame: magic, version, and — for v4 — the CRC32
+/// footer, checked before any body parsing so corruption can never reach
+/// the deserializers. Truncation anywhere in a v4 frame misaligns the
+/// footer and therefore also lands here, as [`ModelIoError::Truncated`]
+/// or [`ModelIoError::ChecksumMismatch`].
+fn parse_frame(bytes: &[u8]) -> Result<Frame<'_>, ModelIoError> {
+    if bytes.len() < 4 {
+        return Err(ModelIoError::Truncated {
+            section: "magic",
+            needed: 4,
+            have: bytes.len(),
+        });
+    }
+    if &bytes[..4] != MAGIC {
+        return Err(ModelIoError::BadMagic);
+    }
+    if bytes.len() < 6 {
+        return Err(ModelIoError::Truncated {
+            section: "version",
+            needed: 2,
+            have: bytes.len() - 4,
+        });
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    match version {
+        1 | VERSION => Ok(Frame {
+            version,
+            kind: KIND_MODEL,
+            body: &bytes[6..],
+        }),
+        CHECKPOINT_VERSION => Ok(Frame {
+            version,
+            kind: KIND_CHECKPOINT,
+            body: &bytes[6..],
+        }),
+        FRAME_VERSION => {
+            // kind byte + 4-byte footer at minimum.
+            if bytes.len() < 4 + 2 + 1 + 4 {
+                return Err(ModelIoError::Truncated {
+                    section: "v4 frame header + footer",
+                    needed: 4 + 2 + 1 + 4,
+                    have: bytes.len(),
+                });
+            }
+            let split = bytes.len() - 4;
+            let stored = u32::from_le_bytes(bytes[split..].try_into().unwrap());
+            let computed = crc32(&bytes[..split]);
+            if stored != computed {
+                return Err(ModelIoError::ChecksumMismatch { stored, computed });
+            }
+            let kind = bytes[6];
+            if kind != KIND_MODEL && kind != KIND_CHECKPOINT {
+                return Err(ModelIoError::BadHeader(format!(
+                    "unknown v4 frame kind {kind}"
+                )));
+            }
+            Ok(Frame {
+                version,
+                kind,
+                body: &bytes[7..split],
+            })
+        }
+        v => Err(ModelIoError::Version(v)),
+    }
+}
+
+/// Legacy frames carry no integrity footer — loadable, but worth a nudge.
+fn warn_legacy(path: &Path, version: u16) {
+    eprintln!(
+        "warning: {} is a legacy v{version} frame without an integrity footer; \
+         re-save to add CRC protection",
+        path.display()
+    );
 }
 
 /// Parsed container header.
@@ -140,40 +299,37 @@ struct Header {
 }
 
 fn read_header(path: &Path) -> Result<Header, ModelIoError> {
-    let mut f = std::fs::File::open(path)?;
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(ModelIoError::BadMagic);
-    }
-    let mut v = [0u8; 2];
-    f.read_exact(&mut v)?;
-    let version = u16::from_le_bytes(v);
-    if version == CHECKPOINT_VERSION {
+    let bytes = std::fs::read(path)?;
+    let frame = parse_frame(&bytes)?;
+    if frame.kind == KIND_CHECKPOINT {
         return Err(ModelIoError::CheckpointNotModel);
     }
-    if version != 1 && version != VERSION {
-        return Err(ModelIoError::Version(version));
+    if frame.version < FRAME_VERSION {
+        warn_legacy(path, frame.version);
     }
-    let ndims = if version == 1 { 3 } else { 6 };
-    let mut dims = vec![0u8; 4 * ndims];
-    f.read_exact(&mut dims)?;
-    let dim = |i: usize| u32::from_le_bytes(dims[4 * i..4 * i + 4].try_into().unwrap());
-    // Version-1 files predate runtime geometry: always the ASIC shape.
-    let geometry = if version == 1 {
+    let body = frame.body;
+    // Version-1 files predate runtime geometry: 3 dims, always ASIC shape.
+    let ndims = if frame.version == 1 { 3 } else { 6 };
+    if body.len() < 4 * ndims {
+        return Err(ModelIoError::Truncated {
+            section: "model dims",
+            needed: 4 * ndims,
+            have: body.len(),
+        });
+    }
+    let dim = |i: usize| u32::from_le_bytes(body[4 * i..4 * i + 4].try_into().unwrap());
+    let geometry = if frame.version == 1 {
         Geometry::asic()
     } else {
         Geometry::new(dim(3) as usize, dim(4) as usize, dim(5) as usize)
             .map_err(ModelIoError::BadHeader)?
     };
-    let mut payload = Vec::new();
-    f.read_to_end(&mut payload)?;
     Ok(Header {
         clauses: dim(0),
         classes: dim(1),
         literals: dim(2),
         geometry,
-        payload,
+        payload: body[4 * ndims..].to_vec(),
     })
 }
 
@@ -228,43 +384,7 @@ pub fn load_file_auto(path: &Path) -> Result<Model, ModelIoError> {
 /// (clause-major u8) and wide weights (clause-major i32,
 /// little-endian). See the module docs and DESIGN.md §9.
 pub fn save_checkpoint(ck: &TrainCheckpoint, path: &Path) -> Result<(), ModelIoError> {
-    // Crash-safe: write a sibling temp file, then rename over the target.
-    // Training overwrites the same checkpoint path every cadence — a kill
-    // or full disk mid-write must not destroy the previous checkpoint
-    // (surviving interruptions is the whole point of the file).
-    let tmp = match path.file_name() {
-        Some(name) => {
-            let mut n = name.to_os_string();
-            n.push(".tmp");
-            path.with_file_name(n)
-        }
-        None => path.with_file_name("checkpoint.ckpt.tmp"),
-    };
     let p = &ck.params;
-    let mut f = std::fs::File::create(&tmp)?;
-    f.write_all(MAGIC)?;
-    f.write_all(&CHECKPOINT_VERSION.to_le_bytes())?;
-    for dim in [
-        p.clauses as u32,
-        p.classes as u32,
-        p.literals as u32,
-        p.geometry.img_side as u32,
-        p.geometry.window as u32,
-        p.geometry.stride as u32,
-    ] {
-        f.write_all(&dim.to_le_bytes())?;
-    }
-    f.write_all(&p.t.to_le_bytes())?;
-    f.write_all(&p.s.to_le_bytes())?;
-    f.write_all(&(p.ta_states as u32).to_le_bytes())?;
-    // Budget is stored +1 so 0 means "none".
-    let budget = p.literal_budget.map_or(0u64, |b| b as u64 + 1);
-    f.write_all(&budget.to_le_bytes())?;
-    f.write_all(&[u8::from(ck.boost_true_positive)])?;
-    f.write_all(&ck.seed.to_le_bytes())?;
-    f.write_all(&ck.samples_seen.to_le_bytes())?;
-    f.write_all(&ck.epochs_done.to_le_bytes())?;
-    // Dataset identity tag (length-prefixed; empty when unknown).
     let tag = ck.dataset.as_bytes();
     if tag.len() > u16::MAX as usize {
         return Err(ModelIoError::BadHeader(format!(
@@ -273,43 +393,72 @@ pub fn save_checkpoint(ck: &TrainCheckpoint, path: &Path) -> Result<(), ModelIoE
             u16::MAX
         )));
     }
-    f.write_all(&(tag.len() as u16).to_le_bytes())?;
-    f.write_all(tag)?;
-    f.write_all(&ck.ta_states)?;
-    let mut weights = Vec::with_capacity(4 * ck.wide_weights.len());
-    for w in &ck.wide_weights {
-        weights.extend_from_slice(&w.to_le_bytes());
+    let mut bytes = Vec::with_capacity(
+        4 + 2 + 1 + CKPT_HEAD + 2 + tag.len() + ck.ta_states.len() + 4 * ck.wide_weights.len() + 4,
+    );
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&FRAME_VERSION.to_le_bytes());
+    bytes.push(KIND_CHECKPOINT);
+    for dim in [
+        p.clauses as u32,
+        p.classes as u32,
+        p.literals as u32,
+        p.geometry.img_side as u32,
+        p.geometry.window as u32,
+        p.geometry.stride as u32,
+    ] {
+        bytes.extend_from_slice(&dim.to_le_bytes());
     }
-    f.write_all(&weights)?;
-    f.sync_all()?;
-    drop(f);
-    std::fs::rename(&tmp, path)?;
-    Ok(())
+    bytes.extend_from_slice(&p.t.to_le_bytes());
+    bytes.extend_from_slice(&p.s.to_le_bytes());
+    bytes.extend_from_slice(&(p.ta_states as u32).to_le_bytes());
+    // Budget is stored +1 so 0 means "none".
+    let budget = p.literal_budget.map_or(0u64, |b| b as u64 + 1);
+    bytes.extend_from_slice(&budget.to_le_bytes());
+    bytes.push(u8::from(ck.boost_true_positive));
+    bytes.extend_from_slice(&ck.seed.to_le_bytes());
+    bytes.extend_from_slice(&ck.samples_seen.to_le_bytes());
+    bytes.extend_from_slice(&ck.epochs_done.to_le_bytes());
+    // Dataset identity tag (length-prefixed; empty when unknown).
+    bytes.extend_from_slice(&(tag.len() as u16).to_le_bytes());
+    bytes.extend_from_slice(tag);
+    bytes.extend_from_slice(&ck.ta_states);
+    for w in &ck.wide_weights {
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    // Crash-safe + integrity-checked: CRC footer, then the atomic
+    // tmp→fsync→rename→dir-fsync dance. Training overwrites the same
+    // checkpoint path every cadence — a kill or full disk mid-write must
+    // not destroy the previous checkpoint.
+    seal_and_write(path, bytes)
 }
 
-/// Load a v3 training checkpoint. Model files (v1/v2) are rejected with
-/// [`ModelIoError::ModelNotCheckpoint`] — they carry no TA states or RNG
-/// position, so "resuming" from one would silently restart training.
+/// Fixed-size checkpoint header after the frame header: 6 dims, t, s,
+/// ta_states, budget, flags, seed, samples_seen, epochs_done.
+const CKPT_HEAD: usize = 6 * 4 + 4 + 8 + 4 + 8 + 1 + 8 + 8 + 8;
+
+/// Load a training checkpoint (v4 kind 1, or legacy v3). Model files are
+/// rejected with [`ModelIoError::ModelNotCheckpoint`] — they carry no TA
+/// states or RNG position, so "resuming" from one would silently restart
+/// training.
 pub fn load_checkpoint(path: &Path) -> Result<TrainCheckpoint, ModelIoError> {
-    let mut f = std::fs::File::open(path)?;
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(ModelIoError::BadMagic);
+    let bytes = std::fs::read(path)?;
+    let frame = parse_frame(&bytes)?;
+    if frame.kind == KIND_MODEL {
+        return Err(ModelIoError::ModelNotCheckpoint(frame.version));
     }
-    let mut v = [0u8; 2];
-    f.read_exact(&mut v)?;
-    let version = u16::from_le_bytes(v);
-    if version == 1 || version == VERSION {
-        return Err(ModelIoError::ModelNotCheckpoint(version));
+    if frame.version < FRAME_VERSION {
+        warn_legacy(path, frame.version);
     }
-    if version != CHECKPOINT_VERSION {
-        return Err(ModelIoError::Version(version));
+    let body = frame.body;
+    if body.len() < CKPT_HEAD {
+        return Err(ModelIoError::Truncated {
+            section: "checkpoint header",
+            needed: CKPT_HEAD,
+            have: body.len(),
+        });
     }
-    // Fixed-size header after the version: 6 dims, t, s, ta_states,
-    // budget, flags, seed, samples_seen, epochs_done.
-    let mut head = [0u8; 6 * 4 + 4 + 8 + 4 + 8 + 1 + 8 + 8 + 8];
-    f.read_exact(&mut head)?;
+    let head = &body[..CKPT_HEAD];
     let u32_at = |o: usize| u32::from_le_bytes(head[o..o + 4].try_into().unwrap());
     let u64_at = |o: usize| u64::from_le_bytes(head[o..o + 8].try_into().unwrap());
     let geometry = Geometry::new(
@@ -338,14 +487,27 @@ pub fn load_checkpoint(path: &Path) -> Result<TrainCheckpoint, ModelIoError> {
     let seed = u64_at(49);
     let samples_seen = u64_at(57);
     let epochs_done = u64_at(65);
-    let mut tag_len = [0u8; 2];
-    f.read_exact(&mut tag_len)?;
-    let mut tag = vec![0u8; u16::from_le_bytes(tag_len) as usize];
-    f.read_exact(&mut tag)?;
-    let dataset = String::from_utf8(tag)
+    let mut off = CKPT_HEAD;
+    if body.len() < off + 2 {
+        return Err(ModelIoError::Truncated {
+            section: "dataset tag length",
+            needed: 2,
+            have: body.len() - off,
+        });
+    }
+    let tag_len = u16::from_le_bytes(body[off..off + 2].try_into().unwrap()) as usize;
+    off += 2;
+    if body.len() < off + tag_len {
+        return Err(ModelIoError::Truncated {
+            section: "dataset tag",
+            needed: tag_len,
+            have: body.len() - off,
+        });
+    }
+    let dataset = String::from_utf8(body[off..off + tag_len].to_vec())
         .map_err(|_| ModelIoError::BadHeader("dataset tag is not UTF-8".into()))?;
-    let mut payload = Vec::new();
-    f.read_to_end(&mut payload)?;
+    off += tag_len;
+    let payload = &body[off..];
     let ta_len = params.clauses * params.literals;
     let w_len = params.clauses * params.classes;
     let expected = ta_len + 4 * w_len;
@@ -665,7 +827,10 @@ mod tests {
         let path = std::env::temp_dir().join("convcotm_ckpt_not_model.cctm");
         save_file(&m, &path).unwrap();
         let err = load_checkpoint(&path).unwrap_err();
-        assert!(matches!(err, ModelIoError::ModelNotCheckpoint(2)), "{err}");
+        assert!(
+            matches!(err, ModelIoError::ModelNotCheckpoint(FRAME_VERSION)),
+            "{err}"
+        );
         std::fs::remove_file(&path).ok();
     }
 
@@ -687,9 +852,79 @@ mod tests {
         let mut bytes = std::fs::read(&path).unwrap();
         bytes.truncate(bytes.len() - 5);
         std::fs::write(&path, &bytes).unwrap();
+        // v4 frames: truncation misaligns the CRC footer, so the integrity
+        // check (which runs before any body parsing) catches it.
         let err = load_checkpoint(&path).unwrap_err();
-        assert!(matches!(err, ModelIoError::PayloadSize { .. }), "{err}");
+        assert!(matches!(err, ModelIoError::ChecksumMismatch { .. }), "{err}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v4_frame_has_verified_crc_footer() {
+        let m = random_model(17);
+        let path = std::env::temp_dir().join("convcotm_v4_crc.cctm");
+        save_file(&m, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], MAGIC);
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 4);
+        let split = bytes.len() - 4;
+        assert_eq!(
+            u32::from_le_bytes(bytes[split..].try_into().unwrap()),
+            crate::util::crc32(&bytes[..split]),
+            "footer must be the CRC32 of everything before it"
+        );
+        // A single flipped payload bit is a typed error, not a wrong model.
+        let mut corrupt = bytes.clone();
+        corrupt[40] ^= 0x10;
+        std::fs::write(&path, &corrupt).unwrap();
+        let err = load_file_auto(&path).unwrap_err();
+        assert!(matches!(err, ModelIoError::ChecksumMismatch { .. }), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_v2_files_still_load() {
+        // Hand-build a v2 container (no kind byte, no footer) the way
+        // every pre-v4 release wrote them.
+        let m = random_model(19);
+        let p = &m.params;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        for dim in [
+            p.clauses as u32,
+            p.classes as u32,
+            p.literals as u32,
+            p.geometry.img_side as u32,
+            p.geometry.window as u32,
+            p.geometry.stride as u32,
+        ] {
+            bytes.extend_from_slice(&dim.to_le_bytes());
+        }
+        bytes.extend_from_slice(&to_wire(&m));
+        let path = std::env::temp_dir().join("convcotm_legacy_v2.cctm");
+        std::fs::write(&path, &bytes).unwrap();
+        let back = load_file_auto(&path).unwrap();
+        assert!(m == back, "legacy v2 frames must keep loading");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_atomic_replaces_durably_and_tolerates_no_parent() {
+        let dir = std::env::temp_dir().join("convcotm_write_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("artifact.bin");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer contents");
+        // No stray temp file left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert_eq!(leftovers, vec![std::ffi::OsString::from("artifact.bin")]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

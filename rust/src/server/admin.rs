@@ -3,21 +3,40 @@
 
 use super::http::{Request, Response};
 use super::ServerState;
+use crate::coordinator::ShardHealth;
 use crate::model_io;
 use crate::util::Json;
 use std::path::PathBuf;
 
-/// `GET /healthz` — liveness plus what the process is serving.
+/// `GET /healthz` — liveness, what the process is serving, and per-shard
+/// supervision state. Status: `"ok"` (every shard healthy, HTTP `200`),
+/// `"degraded"` (some shard respawning or dead but the pool still serves,
+/// `200`), `"dead"` (every shard dead — only typed errors come back —
+/// `503` so load balancers eject the instance).
 pub fn healthz(state: &ServerState) -> Response {
     let models = match &state.registry {
         Some(r) => Json::arr(r.names().into_iter().map(Json::str)),
         None => Json::Arr(Vec::new()),
     };
+    let health = state.coord.shard_health();
+    let all_dead = health.iter().all(|&h| h == ShardHealth::Dead);
+    let degraded = health.iter().any(|&h| h != ShardHealth::Healthy);
+    let (code, status) = if all_dead {
+        (503, "dead")
+    } else if degraded {
+        (200, "degraded")
+    } else {
+        (200, "ok")
+    };
     Response::json(
-        200,
+        code,
         &Json::obj([
-            ("status", Json::str("ok")),
+            ("status", Json::str(status)),
             ("shards", Json::num(state.coord.shard_count() as f64)),
+            (
+                "shard_health",
+                Json::arr(health.iter().map(|h| Json::str(h.name()))),
+            ),
             ("models", models),
             ("draining", Json::Bool(state.shutdown_requested())),
         ]),

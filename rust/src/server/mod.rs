@@ -99,6 +99,9 @@ pub struct HttpStats {
     pub responses_5xx: AtomicU64,
     /// Classify requests shed because every shard queue was full.
     pub shed_503: AtomicU64,
+    /// Classify requests answered `504` because their deadline expired
+    /// before the pool responded (typed `DeadlineExceeded`).
+    pub deadline_504: AtomicU64,
     /// Connections dropped mid-request on a read timeout (slow-loris).
     pub read_timeouts: AtomicU64,
 }
@@ -123,6 +126,7 @@ impl HttpStats {
             ("responses_4xx", n(&self.responses_4xx)),
             ("responses_5xx", n(&self.responses_5xx)),
             ("shed_503", n(&self.shed_503)),
+            ("deadline_504", n(&self.deadline_504)),
             ("read_timeouts", n(&self.read_timeouts)),
         ])
     }

@@ -8,6 +8,8 @@
 //!                                    // the pool's default model
 //!   "image":  IMAGE                  // exactly one of image / images
 //!   "images": [IMAGE, ...]           // batch (≤ MAX_BATCH_IMAGES)
+//!   "deadline_ms": 250               // optional response deadline;
+//!                                    // omitted → the server's default
 //! }
 //!
 //! IMAGE := {"bits":   [0|1, ...]}                 // booleanized, square
@@ -27,8 +29,12 @@
 //!
 //! Status mapping: invalid body/shape → `400`; unknown model id (single)
 //! → `404`; every shard queue full → `503` + `Retry-After` (the
-//! coordinator's typed `Overloaded` shed, end-to-end); coordinator gone →
-//! `500`. A batch travels as **one** coordinator block
+//! coordinator's typed `Overloaded` shed, end-to-end); request caught by a
+//! panicking shard worker → `503` + `Retry-After` (typed `ShardPanicked` —
+//! the shard is respawning, retry lands elsewhere); deadline expired
+//! before the response arrived → `504` (typed `DeadlineExceeded`; the
+//! evaluation may still complete server-side); coordinator gone → `500`.
+//! A batch travels as **one** coordinator block
 //! ([`crate::coordinator::Coordinator::try_submit_block_to`]): the pool
 //! evaluates it image-major through the model's `BlockEval` twin, and a
 //! single bad image fails alone — its result slot becomes
@@ -39,20 +45,28 @@
 
 use super::http::{Request, Response};
 use super::ServerState;
-use crate::coordinator::RegistryError;
+use crate::coordinator::{recv_deadline, DeadlineExceeded, RegistryError, ShardPanicked};
 use crate::data::boolean::{BoolImage, Booleanizer};
 use crate::util::Json;
 use std::sync::atomic::Ordering;
+use std::time::Duration;
 
 /// Cap on images per classify call. Bounds per-request fan-out the same
 /// way `Limits::max_body_bytes` bounds bytes (a request held below both
 /// caps cannot monopolize the shard queues).
 pub const MAX_BATCH_IMAGES: usize = 1024;
 
+/// Cap on a per-request `deadline_ms` (one hour): anything longer is a
+/// typo, not a deadline.
+pub const MAX_DEADLINE_MS: u64 = 3_600_000;
+
 /// A parsed classify call.
 struct ClassifyCall {
     model: Option<String>,
     images: Vec<BoolImage>,
+    /// Per-request deadline override; `None` falls back to the server
+    /// default ([`crate::coordinator::Coordinator::effective_deadline`]).
+    deadline: Option<Duration>,
 }
 
 /// Client-side helper: one image as the wire's `{"bits": [0|1, ...]}`
@@ -91,13 +105,30 @@ fn result_entry(out: &crate::coordinator::BackendOutput) -> Json {
     ])
 }
 
-/// `404` for unknown-model rejections, `400` for everything else — the
-/// per-request status mapping shared by the single and batch paths.
-fn rejection_status(e: &anyhow::Error) -> u16 {
-    match e.downcast_ref::<RegistryError>() {
+/// Per-request rejection mapping shared by the single and batch paths:
+/// `503` + `Retry-After` for a request caught by a panicking shard (the
+/// shard is respawning — a retry lands elsewhere), `404` for unknown-model
+/// rejections, `400` for everything else.
+fn rejection_response(e: &anyhow::Error) -> Response {
+    if e.downcast_ref::<ShardPanicked>().is_some() {
+        return Response::error(503, &format!("{e:#}")).with_header("retry-after", "1");
+    }
+    let status = match e.downcast_ref::<RegistryError>() {
         Some(RegistryError::UnknownModel { .. }) => 404,
         _ => 400,
+    };
+    Response::error(status, &format!("{e:#}"))
+}
+
+/// Map a failed *wait* on the response channel: a typed
+/// [`DeadlineExceeded`] → `504` (the evaluation may still complete
+/// server-side; the client has moved on), a dropped coordinator → `500`.
+fn wait_failure(state: &ServerState, e: &anyhow::Error) -> Response {
+    if e.downcast_ref::<DeadlineExceeded>().is_some() {
+        state.stats.deadline_504.fetch_add(1, Ordering::Relaxed);
+        return Response::error(504, &format!("{e:#}"));
     }
+    Response::error(500, "server is shutting down")
 }
 
 /// `POST /v1/classify` — parse, submit to the shard pool, collect.
@@ -110,6 +141,7 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
         Some(m) => Json::str(m.clone()),
         None => Json::Null,
     };
+    let deadline = state.coord.effective_deadline(call.deadline);
     // A single image keeps the original request-per-submit path; a batch
     // travels as one block so the pool can evaluate it image-major (each
     // clause row walked once per block, not once per image). Either way a
@@ -124,7 +156,7 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
                     .with_header("retry-after", "1");
             }
         };
-        return match rx.recv() {
+        return match recv_deadline(&rx, deadline) {
             Ok(Ok(out)) => Response::json(
                 200,
                 &Json::obj([
@@ -133,8 +165,8 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
                     ("results", Json::Arr(vec![result_entry(&out)])),
                 ]),
             ),
-            Ok(Err(e)) => Response::error(rejection_status(&e), &format!("{e:#}")),
-            Err(_) => Response::error(500, "server is shutting down"),
+            Ok(Err(e)) => rejection_response(&e),
+            Err(e) => wait_failure(state, &e),
         };
     }
     let rx = match state
@@ -147,9 +179,9 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
             return Response::error(503, &overloaded.to_string()).with_header("retry-after", "1");
         }
     };
-    let outcomes = match rx.recv() {
+    let outcomes = match recv_deadline(&rx, deadline) {
         Ok(outcomes) => outcomes,
-        Err(_) => return Response::error(500, "server is shutting down"),
+        Err(e) => return wait_failure(state, &e),
     };
     // Every image failed: surface the first error with its status, the
     // same shape a failed single-image call produces.
@@ -158,7 +190,7 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
             .iter()
             .find_map(|r| r.as_ref().err())
             .expect("a non-empty all-failed batch");
-        return Response::error(rejection_status(e), &format!("{e:#}"));
+        return rejection_response(e);
     }
     let mut errors = 0u64;
     let results: Vec<Json> = outcomes
@@ -193,6 +225,19 @@ fn parse_body(body: &[u8]) -> Result<ClassifyCall, String> {
         Some(Json::Str(s)) if !s.is_empty() => Some(s.clone()),
         Some(_) => return Err("'model' must be a non-empty string".to_string()),
     };
+    let deadline = match v.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(Json::Num(x))
+            if x.fract() == 0.0 && (1.0..=MAX_DEADLINE_MS as f64).contains(x) =>
+        {
+            Some(Duration::from_millis(*x as u64))
+        }
+        Some(_) => {
+            return Err(format!(
+                "'deadline_ms' must be an integer in 1..={MAX_DEADLINE_MS}"
+            ))
+        }
+    };
     let specs: Vec<&Json> = match (v.get("image"), v.get("images")) {
         (Some(one), None) => vec![one],
         (None, Some(Json::Arr(items))) => items.iter().collect(),
@@ -214,7 +259,11 @@ fn parse_body(body: &[u8]) -> Result<ClassifyCall, String> {
         .enumerate()
         .map(|(i, spec)| parse_image(spec).map_err(|e| format!("image {i}: {e}")))
         .collect::<Result<Vec<_>, _>>()?;
-    Ok(ClassifyCall { model, images })
+    Ok(ClassifyCall {
+        model,
+        images,
+        deadline,
+    })
 }
 
 /// One IMAGE spec → a [`BoolImage`]. All shape/range checks happen here so
@@ -323,10 +372,23 @@ mod tests {
             (r#"{"image":{"pixels":[256,0,0,0]}}"#, "0..=255"),
             (r#"{"image":{"pixels":[1.5,0,0,0]}}"#, "0..=255"),
             (r#"{"image":{"pixels":[1,0,0,0],"booleanize":"median"}}"#, "booleanize"),
+            (r#"{"deadline_ms":0,"image":{"bits":[1]}}"#, "deadline_ms"),
+            (r#"{"deadline_ms":1.5,"image":{"bits":[1]}}"#, "deadline_ms"),
+            (r#"{"deadline_ms":"1s","image":{"bits":[1]}}"#, "deadline_ms"),
+            (r#"{"deadline_ms":3600001,"image":{"bits":[1]}}"#, "deadline_ms"),
         ] {
             let e = parse_body(body.as_bytes()).unwrap_err();
             assert!(e.contains(needle), "body {body}: error '{e}' missing '{needle}'");
         }
+    }
+
+    #[test]
+    fn parses_deadline_override() {
+        let body = r#"{"deadline_ms":250,"image":{"bits":[1]}}"#;
+        let call = parse_body(body.as_bytes()).unwrap();
+        assert_eq!(call.deadline, Some(Duration::from_millis(250)));
+        let call = parse_body(r#"{"image":{"bits":[1]}}"#.as_bytes()).unwrap();
+        assert_eq!(call.deadline, None);
     }
 
     #[test]

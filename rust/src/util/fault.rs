@@ -1,0 +1,415 @@
+//! Deterministic fault injection for chaos testing the serving stack.
+//!
+//! A [`FaultPlan`] names **sites** (fixed injection points compiled into
+//! the serving and persistence code paths) and gives each a **trigger**:
+//! fire with probability `p`, every `n`-th hit, or exactly once on the
+//! `k`-th hit. Probabilistic triggers draw from a seeded
+//! [`StreamRng`](crate::util::StreamRng) keyed on `(site, hit-counter)`,
+//! so the *decision sequence per site* is a pure function of the plan —
+//! the same spec replays the same injection schedule. (Which thread
+//! observes hit `N` still depends on scheduling; the schedule is
+//! deterministic per site, not per thread.)
+//!
+//! The layer is compiled in always and **disarmed by default**: every
+//! hook starts with one relaxed atomic load ([`armed`]) and returns
+//! immediately, keeping the steady-state hot path allocation- and
+//! branch-predictable (CI's zero-alloc bench rows hold with this module
+//! linked in). Arming happens only via `serve --fault-plan SPEC`, the
+//! `CONVCOTM_FAULT_PLAN` environment variable, or a test's [`arm`] guard.
+//!
+//! Spec grammar (comma-separated clauses):
+//!
+//! ```text
+//! seed=42,eval_panic=p0.02,eval_delay=n100:25,shard_wedge=once1:1500
+//! ```
+//!
+//! - `seed=U64` — the replay seed (default 0).
+//! - `SITE=TRIGGER[:ARG]` — `TRIGGER` is `pFLOAT` (probability per hit),
+//!   `nU64` (every n-th hit) or `onceU64` (the k-th hit only; `once` =
+//!   `once1`). `ARG` is milliseconds for `eval_delay`/`shard_wedge` and a
+//!   byte count for `ckpt_write_truncate`.
+
+use crate::util::prng::StreamRng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, RwLock};
+
+/// The fixed registry of injection points (DESIGN.md §12). Adding a site
+/// means adding a variant here and calling a hook at the new point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Panic inside a shard's batch evaluation (exercises `catch_unwind`
+    /// isolation + supervisor respawn).
+    EvalPanic = 0,
+    /// Sleep before evaluating a request unit (latency inflation).
+    EvalDelay = 1,
+    /// Long sleep before evaluating (exercises request deadlines).
+    ShardWedge = 2,
+    /// Drop the tail of an artifact write before rename (torn write the
+    /// CRC footer must catch on load).
+    CkptWriteTruncate = 3,
+    /// Surface an `io::Error` from an artifact write.
+    IoError = 4,
+}
+
+pub const SITE_COUNT: usize = 5;
+
+impl Site {
+    pub const ALL: [Site; SITE_COUNT] = [
+        Site::EvalPanic,
+        Site::EvalDelay,
+        Site::ShardWedge,
+        Site::CkptWriteTruncate,
+        Site::IoError,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::EvalPanic => "eval_panic",
+            Site::EvalDelay => "eval_delay",
+            Site::ShardWedge => "shard_wedge",
+            Site::CkptWriteTruncate => "ckpt_write_truncate",
+            Site::IoError => "io_error",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Site> {
+        Site::ALL.into_iter().find(|site| site.name() == s)
+    }
+
+    /// Default site argument where one is meaningful: injected delay in
+    /// ms, or bytes cut from a truncated write.
+    fn default_arg(self) -> u64 {
+        match self {
+            Site::EvalDelay => 10,
+            Site::ShardWedge => 1000,
+            Site::CkptWriteTruncate => 7,
+            Site::EvalPanic | Site::IoError => 0,
+        }
+    }
+}
+
+/// When a site fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// Independent Bernoulli per hit, drawn from the plan's seeded stream.
+    Probability(f64),
+    /// Every n-th hit (1-based: `n1` fires on every hit).
+    EveryNth(u64),
+    /// The k-th hit only (1-based).
+    Once(u64),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct SiteSpec {
+    trigger: Trigger,
+    arg: u64,
+}
+
+/// A parsed, replayable injection schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    sites: [Option<SiteSpec>; SITE_COUNT],
+}
+
+/// Domain tag separating the fault stream from every trainer stream.
+const FAULT_DOMAIN: u64 = 0xFA01_7000;
+
+impl FaultPlan {
+    /// Parse the `seed=..,site=trigger[:arg],..` grammar. Unknown sites,
+    /// malformed triggers and out-of-range probabilities are errors — a
+    /// chaos run with a typo'd plan must not silently run fault-free.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan {
+            seed: 0,
+            sites: [None; SITE_COUNT],
+        };
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (key, value) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("fault clause '{clause}' is not KEY=VALUE"))?;
+            if key == "seed" {
+                plan.seed = value
+                    .parse()
+                    .map_err(|_| format!("fault seed '{value}' is not a u64"))?;
+                continue;
+            }
+            let site = Site::parse(key).ok_or_else(|| {
+                let known: Vec<&str> = Site::ALL.iter().map(|s| s.name()).collect();
+                format!("unknown fault site '{key}' (known: {})", known.join(", "))
+            })?;
+            let (trig, arg) = match value.split_once(':') {
+                Some((t, a)) => {
+                    let arg = a
+                        .parse()
+                        .map_err(|_| format!("fault arg '{a}' for {key} is not a u64"))?;
+                    (t, arg)
+                }
+                None => (value, site.default_arg()),
+            };
+            let trigger = Self::parse_trigger(trig)
+                .ok_or_else(|| format!("fault trigger '{trig}' for {key} (want pF, nK or onceK)"))?;
+            plan.sites[site as usize] = Some(SiteSpec { trigger, arg });
+        }
+        Ok(plan)
+    }
+
+    fn parse_trigger(t: &str) -> Option<Trigger> {
+        if let Some(rest) = t.strip_prefix("once") {
+            let k = if rest.is_empty() { 1 } else { rest.parse().ok()? };
+            return (k >= 1).then_some(Trigger::Once(k));
+        }
+        if let Some(rest) = t.strip_prefix('p') {
+            let p: f64 = rest.parse().ok()?;
+            return (0.0..=1.0).contains(&p).then_some(Trigger::Probability(p));
+        }
+        if let Some(rest) = t.strip_prefix('n') {
+            let k: u64 = rest.parse().ok()?;
+            return (k >= 1).then_some(Trigger::EveryNth(k));
+        }
+        None
+    }
+
+    /// Read the plan from `CONVCOTM_FAULT_PLAN` (None when unset/empty).
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("CONVCOTM_FAULT_PLAN") {
+            Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// A plan with no active sites injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.sites.iter().all(Option::is_none)
+    }
+
+    /// The pure replay function: does `site` fire on its (0-based) `hit`?
+    /// This is the whole determinism contract — tests and offline replay
+    /// tooling compute the schedule without arming anything.
+    pub fn would_fire(&self, site: Site, hit: u64) -> bool {
+        let Some(spec) = self.sites[site as usize] else {
+            return false;
+        };
+        match spec.trigger {
+            Trigger::Probability(p) => {
+                StreamRng::new(self.seed, FAULT_DOMAIN).chance_at(site as u64, hit, p)
+            }
+            Trigger::EveryNth(n) => (hit + 1) % n == 0,
+            Trigger::Once(k) => hit + 1 == k,
+        }
+    }
+
+    /// The site's argument (delay ms / truncate bytes), if configured.
+    pub fn site_arg(&self, site: Site) -> Option<u64> {
+        self.sites[site as usize].map(|s| s.arg)
+    }
+
+    /// Canonical round-trippable spec string, for arming logs.
+    pub fn spec(&self) -> String {
+        let mut out = format!("seed={}", self.seed);
+        for site in Site::ALL {
+            if let Some(s) = self.sites[site as usize] {
+                let trig = match s.trigger {
+                    Trigger::Probability(p) => format!("p{p}"),
+                    Trigger::EveryNth(n) => format!("n{n}"),
+                    Trigger::Once(k) => format!("once{k}"),
+                };
+                out.push_str(&format!(",{}={trig}:{}", site.name(), s.arg));
+            }
+        }
+        out
+    }
+}
+
+struct Armed {
+    plan: FaultPlan,
+    hits: [AtomicU64; SITE_COUNT],
+}
+
+/// One relaxed load on the disarmed fast path; everything else lives
+/// behind it.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: RwLock<Option<Armed>> = RwLock::new(None);
+/// Serializes armers: the plan is process-wide, so concurrent tests in
+/// one binary must take turns.
+static ARM_LOCK: Mutex<()> = Mutex::new(());
+
+/// True when a fault plan is armed. The only check on the hot path.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm `plan` for the lifetime of the returned guard (tests). Holding the
+/// guard also holds the process-wide arm lock, so concurrent tests that
+/// inject faults serialize instead of corrupting each other's schedules.
+#[must_use = "the plan disarms when the guard drops"]
+pub fn arm(plan: FaultPlan) -> ArmGuard {
+    let lock = ARM_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    install(plan);
+    ArmGuard { _lock: lock }
+}
+
+/// Arm `plan` for the rest of the process (the CLI path — never disarms).
+pub fn arm_process(plan: FaultPlan) {
+    let guard = arm(plan);
+    std::mem::forget(guard);
+}
+
+fn install(plan: FaultPlan) {
+    let armed = !plan.is_empty();
+    *PLAN.write().unwrap_or_else(|p| p.into_inner()) = Some(Armed {
+        plan,
+        hits: std::array::from_fn(|_| AtomicU64::new(0)),
+    });
+    ARMED.store(armed, Ordering::SeqCst);
+}
+
+/// Guard from [`arm`]: disarms on drop.
+pub struct ArmGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for ArmGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+        *PLAN.write().unwrap_or_else(|p| p.into_inner()) = None;
+    }
+}
+
+/// Consume one hit at `site`; `Some(arg)` when it fires.
+fn fire(site: Site) -> Option<u64> {
+    if !armed() {
+        return None;
+    }
+    let guard = PLAN.read().unwrap_or_else(|p| p.into_inner());
+    let armed = guard.as_ref()?;
+    armed.plan.sites[site as usize]?;
+    let hit = armed.hits[site as usize].fetch_add(1, Ordering::Relaxed);
+    armed
+        .plan
+        .would_fire(site, hit)
+        .then(|| armed.plan.site_arg(site).unwrap_or(0))
+}
+
+/// Injection hook: panic when the site fires. The message is stable so
+/// supervisors and log filters can recognize injected panics.
+#[inline]
+pub fn panic_point(site: Site) {
+    if armed() && fire(site).is_some() {
+        panic!("fault injected: {}", site.name());
+    }
+}
+
+/// Injection hook: sleep the site's configured milliseconds when it fires.
+#[inline]
+pub fn delay_point(site: Site) {
+    if armed() {
+        if let Some(ms) = fire(site) {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Injection hook: surface a synthetic I/O error when the site fires.
+#[inline]
+pub fn io_error_point(site: Site) -> std::io::Result<()> {
+    if armed() && fire(site).is_some() {
+        return Err(std::io::Error::other(format!(
+            "fault injected: {}",
+            site.name()
+        )));
+    }
+    Ok(())
+}
+
+/// Injection hook: `Some(bytes_to_cut)` when a torn write should be
+/// simulated at this site.
+#[inline]
+pub fn truncate_point(site: Site) -> Option<usize> {
+    if !armed() {
+        return None;
+    }
+    fire(site).map(|b| b as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        let plan =
+            FaultPlan::parse("seed=42,eval_panic=p0.25,eval_delay=n100:25,shard_wedge=once2:1500")
+                .unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(
+            plan.spec(),
+            "seed=42,eval_panic=p0.25:0,eval_delay=n100:25,shard_wedge=once2:1500"
+        );
+        assert_eq!(FaultPlan::parse(&plan.spec()).unwrap(), plan);
+        assert!(FaultPlan::parse("bogus_site=p0.5").is_err());
+        assert!(FaultPlan::parse("eval_panic=p1.5").is_err());
+        assert!(FaultPlan::parse("eval_panic=x3").is_err());
+        assert!(FaultPlan::parse("eval_panic").is_err());
+        assert!(FaultPlan::parse("seed=notanumber").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let a = FaultPlan::parse("seed=7,eval_panic=p0.3").unwrap();
+        let b = FaultPlan::parse("seed=7,eval_panic=p0.3").unwrap();
+        let c = FaultPlan::parse("seed=8,eval_panic=p0.3").unwrap();
+        let seq = |p: &FaultPlan| -> Vec<bool> {
+            (0..256).map(|h| p.would_fire(Site::EvalPanic, h)).collect()
+        };
+        assert_eq!(seq(&a), seq(&b), "same seed must replay the same schedule");
+        assert_ne!(seq(&a), seq(&c), "different seeds must diverge");
+        let hits = seq(&a).iter().filter(|&&f| f).count();
+        assert!((40..=115).contains(&hits), "p=0.3 over 256 hits fired {hits}");
+    }
+
+    #[test]
+    fn nth_and_once_triggers() {
+        let plan = FaultPlan::parse("eval_panic=n3,io_error=once2").unwrap();
+        let nth: Vec<bool> = (0..9).map(|h| plan.would_fire(Site::EvalPanic, h)).collect();
+        assert_eq!(
+            nth,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        let once: Vec<bool> = (0..4).map(|h| plan.would_fire(Site::IoError, h)).collect();
+        assert_eq!(once, [false, true, false, false]);
+        // Unconfigured sites never fire.
+        assert!((0..64).all(|h| !plan.would_fire(Site::EvalDelay, h)));
+    }
+
+    #[test]
+    fn disarmed_hooks_are_inert_and_guard_disarms() {
+        assert!(!armed());
+        panic_point(Site::EvalPanic); // must not panic
+        assert!(io_error_point(Site::IoError).is_ok());
+        assert_eq!(truncate_point(Site::CkptWriteTruncate), None);
+        {
+            let _g = arm(FaultPlan::parse("eval_panic=n1").unwrap());
+            assert!(armed());
+            let caught = std::panic::catch_unwind(|| panic_point(Site::EvalPanic));
+            assert!(caught.is_err(), "armed n1 site must fire every hit");
+        }
+        assert!(!armed(), "guard drop must disarm");
+        panic_point(Site::EvalPanic);
+    }
+
+    #[test]
+    fn armed_counters_follow_the_pure_schedule() {
+        let plan = FaultPlan::parse("seed=99,io_error=p0.5").unwrap();
+        let expect: Vec<bool> = (0..64).map(|h| plan.would_fire(Site::IoError, h)).collect();
+        let _g = arm(plan);
+        let got: Vec<bool> = (0..64).map(|_| io_error_point(Site::IoError).is_err()).collect();
+        assert_eq!(got, expect, "armed hit counter must replay would_fire");
+    }
+}

@@ -3,6 +3,8 @@
 //! implemented here rather than pulled from crates.io.
 
 pub mod bitvec;
+pub mod crc;
+pub mod fault;
 pub mod json;
 pub mod prng;
 pub mod quick;
@@ -10,6 +12,8 @@ pub mod stats;
 pub mod table;
 
 pub use bitvec::BitVec;
+pub use crc::{crc32, Crc32};
+pub use fault::FaultPlan;
 pub use json::Json;
 pub use prng::{Lfsr16, SplitMix64, StreamRng, Xoshiro256ss};
 pub use stats::{Summary, Welford};

@@ -1,0 +1,230 @@
+//! Deterministic chaos soaks for the supervised shard pool (DESIGN.md
+//! §12): under injected evaluation panics, worker respawns and concurrent
+//! model hot-swaps, every accepted request gets exactly one typed
+//! response — nothing is lost, nothing is mis-versioned. Each test arms a
+//! process-wide [`FaultPlan`]; the [`fault::arm`] guard serializes them.
+
+use convcotm::coordinator::{
+    BatchConfig, Coordinator, DeadlineExceeded, ModelRegistry, PoolConfig, ShardHealth,
+    ShardPanicked, SupervisorConfig,
+};
+use convcotm::data::BoolImage;
+use convcotm::tm::{Model, Params};
+use convcotm::util::fault::{self, FaultPlan, Site};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A model that deterministically predicts `class` on a blank image: one
+/// clause over a negated content literal (true on every patch of a blank
+/// image) voting +5 for `class`.
+fn fixed_class_model(class: usize) -> Model {
+    let p = Params::asic();
+    let mut m = Model::blank(p.clone());
+    m.set_include(0, p.geometry.num_features(), true);
+    m.set_weight(class, 0, 5);
+    m
+}
+
+fn fast_supervisor() -> SupervisorConfig {
+    SupervisorConfig {
+        max_respawns: 100_000,
+        respawn_window: Duration::from_secs(30),
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+    }
+}
+
+/// The determinism contract: the fire/no-fire schedule of a probabilistic
+/// site is a pure function of (seed, site, hit index). Same seed → same
+/// schedule, different seed → different schedule; no arming involved.
+#[test]
+fn same_seed_gives_the_same_fault_schedule() {
+    let spec = "seed=42,eval_panic=p0.05,eval_delay=p0.2:3";
+    let a = FaultPlan::parse(spec).unwrap();
+    let b = FaultPlan::parse(spec).unwrap();
+    let schedule = |plan: &FaultPlan, site: Site| -> Vec<bool> {
+        (0..10_000).map(|hit| plan.would_fire(site, hit)).collect()
+    };
+    for site in [Site::EvalPanic, Site::EvalDelay] {
+        assert_eq!(schedule(&a, site), schedule(&b, site));
+    }
+    let fired = schedule(&a, Site::EvalPanic).iter().filter(|&&f| f).count();
+    assert!(
+        (200..=800).contains(&fired),
+        "p0.05 over 10k hits fired {fired} times — stream is not Bernoulli(0.05)"
+    );
+    let c = FaultPlan::parse("seed=43,eval_panic=p0.05").unwrap();
+    assert_ne!(
+        schedule(&a, Site::EvalPanic),
+        schedule(&c, Site::EvalPanic),
+        "different seeds must give different schedules"
+    );
+    // Counter triggers are deterministic by construction.
+    let n = FaultPlan::parse("seed=0,shard_wedge=n3").unwrap();
+    let fires: Vec<u64> = (0..9).filter(|&h| n.would_fire(Site::ShardWedge, h)).collect();
+    assert_eq!(fires, vec![2, 5, 8]);
+}
+
+/// The tentpole soak: several client threads hammer a 2-shard pool while
+/// ~3% of evaluation units panic (killing workers, which the supervisor
+/// respawns) and the served model is hot-swapped nine times mid-flight.
+/// Every request must come back exactly once, either `Ok` with weights
+/// and `model_version` from one of the published versions, or the typed
+/// [`ShardPanicked`]. Zero lost responses, zero mis-versioned responses.
+#[test]
+fn soak_under_panics_respawns_and_swaps_answers_every_request_typed() {
+    let _armed = fault::arm(FaultPlan::parse("seed=42,eval_panic=p0.03").unwrap());
+    let registry = ModelRegistry::single("live", fixed_class_model(0));
+    let coord = Coordinator::start_pool(
+        Arc::clone(&registry),
+        PoolConfig {
+            shards: 2,
+            queue_capacity: 4096,
+            batch: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(20),
+            },
+            default_deadline: None,
+            supervisor: fast_supervisor(),
+        },
+    );
+
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 250;
+    let img = BoolImage::blank();
+    let (ok, panicked, lost) = std::thread::scope(|scope| {
+        let clients: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let (coord, img) = (&coord, &img);
+                scope.spawn(move || {
+                    let (mut ok, mut panicked, mut lost) = (0usize, 0usize, 0usize);
+                    for _ in 0..PER_THREAD {
+                        let rx = coord.submit_to(Some("live"), img.clone());
+                        match rx.recv() {
+                            Ok(Ok(out)) => {
+                                // Any published version may serve us, but
+                                // weights and version must agree.
+                                let v = out.model_version.expect("pool responses carry versions");
+                                assert!((1..=10).contains(&v), "unpublished version {v}");
+                                assert_eq!(
+                                    out.prediction as u64,
+                                    v - 1,
+                                    "response weights disagree with its model_version"
+                                );
+                                ok += 1;
+                            }
+                            Ok(Err(e)) if e.downcast_ref::<ShardPanicked>().is_some() => {
+                                panicked += 1;
+                            }
+                            Ok(Err(e)) => panic!("untyped failure: {e}"),
+                            Err(_) => lost += 1,
+                        }
+                    }
+                    (ok, panicked, lost)
+                })
+            })
+            .collect();
+        // Hot-swap under fire: version k+1 predicts class k.
+        for class in 1..10 {
+            std::thread::sleep(Duration::from_millis(3));
+            let entry = registry.swap("live", fixed_class_model(class)).unwrap();
+            assert_eq!(entry.version, class as u64 + 1);
+        }
+        clients.into_iter().fold((0, 0, 0), |acc, h| {
+            let (ok, panicked, lost) = h.join().expect("client thread panicked");
+            (acc.0 + ok, acc.1 + panicked, acc.2 + lost)
+        })
+    });
+
+    assert_eq!(lost, 0, "{lost} request(s) got no response");
+    assert_eq!(ok + panicked, THREADS * PER_THREAD);
+    assert!(panicked > 0, "p0.03 over 1000 units fired nothing — injection inert?");
+
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests as usize, ok, "served-request accounting drifted");
+    assert_eq!(snap.errors as usize, panicked, "error accounting drifted");
+    assert!(snap.shard_panics > 0);
+    assert!(snap.respawns > 0, "panicked workers were never respawned");
+    assert!(
+        snap.shard_health.iter().all(|&h| h != "dead"),
+        "generous respawn budget must never kill a shard: {:?}",
+        snap.shard_health
+    );
+}
+
+/// A wedged shard (every unit sleeps far past the pool's default
+/// deadline) surfaces as the typed [`DeadlineExceeded`] on the waiting
+/// call — while the server-side evaluation still completes and is
+/// accounted as served, because deadlines bound the *wait*, not the work.
+#[test]
+fn wedged_shard_trips_default_deadline_with_typed_error() {
+    let _armed = fault::arm(FaultPlan::parse("seed=7,shard_wedge=n1:400").unwrap());
+    let coord = Coordinator::start_pool(
+        ModelRegistry::single("m", fixed_class_model(3)),
+        PoolConfig {
+            shards: 1,
+            queue_capacity: 64,
+            batch: BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(20),
+            },
+            default_deadline: Some(Duration::from_millis(50)),
+            supervisor: SupervisorConfig::default(),
+        },
+    );
+    let e = coord.classify_model(Some("m"), BoolImage::blank()).unwrap_err();
+    let d = e.downcast_ref::<DeadlineExceeded>().expect("want DeadlineExceeded");
+    assert_eq!(d.deadline_ms, 50);
+    // Shutdown drains the wedged unit: it completes server-side and the
+    // abandoned response is discarded harmlessly.
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests, 1);
+    assert_eq!(snap.errors, 0);
+}
+
+/// A crash-looping worker exhausts its respawn budget, the shard is
+/// declared dead, and a reaper keeps answering the queue with the typed
+/// error — clients never hang on a dead shard.
+#[test]
+fn crash_loop_exhausts_respawn_budget_and_reaper_answers_typed() {
+    let _armed = fault::arm(FaultPlan::parse("seed=9,eval_panic=n1").unwrap());
+    let coord = Coordinator::start_pool(
+        ModelRegistry::single("m", fixed_class_model(0)),
+        PoolConfig {
+            shards: 1,
+            queue_capacity: 64,
+            batch: BatchConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            default_deadline: None,
+            supervisor: SupervisorConfig {
+                max_respawns: 2,
+                respawn_window: Duration::from_secs(30),
+                backoff_base: Duration::from_millis(1),
+                backoff_cap: Duration::from_millis(1),
+            },
+        },
+    );
+    let img = BoolImage::blank();
+    // Sequential requests: the first three die in the worker (2 respawns,
+    // then the budget is spent), the rest are answered by the reaper.
+    for i in 0..10 {
+        let e = coord
+            .submit_to(Some("m"), img.clone())
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i} lost after shard death"))
+            .unwrap_err();
+        assert!(
+            e.downcast_ref::<ShardPanicked>().is_some(),
+            "request {i}: want ShardPanicked, got {e}"
+        );
+    }
+    assert_eq!(coord.shard_health(), vec![ShardHealth::Dead]);
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests, 0);
+    assert_eq!(snap.errors, 10);
+    assert_eq!(snap.shard_panics, 3, "only units reaching the worker count as panics");
+    assert_eq!(snap.respawns, 2);
+    assert_eq!(snap.shard_health, vec!["dead"]);
+}

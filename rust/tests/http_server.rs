@@ -76,6 +76,7 @@ fn start_pool_server(
                 max_batch: 16,
                 max_wait: Duration::from_micros(50),
             },
+            ..PoolConfig::default()
         },
     ));
     let state = ServerState::new(Arc::clone(&coord));

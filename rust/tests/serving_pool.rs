@@ -3,10 +3,12 @@
 //! shedding, clean-shutdown draining and per-request failure isolation.
 
 use convcotm::coordinator::{
-    Backend, BackendOutput, BatchConfig, Coordinator, ModelRegistry, PoolConfig,
+    Backend, BackendOutput, BatchConfig, Coordinator, ModelRegistry, PoolConfig, ShardHealth,
+    ShardPanicked, SupervisorConfig,
 };
 use convcotm::data::{BoolImage, Geometry};
 use convcotm::tm::{Engine, Model, Params};
+use convcotm::util::fault::{self, FaultPlan};
 use convcotm::util::Xoshiro256ss;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -63,6 +65,7 @@ fn pool(model: &Model, shards: usize, queue_capacity: usize) -> Coordinator {
                 max_batch: 16,
                 max_wait: Duration::from_micros(50),
             },
+            ..PoolConfig::default()
         },
     )
 }
@@ -140,6 +143,7 @@ fn hot_swap_under_load_is_lossless_and_takes_effect() {
                 max_batch: 16,
                 max_wait: Duration::from_micros(50),
             },
+            ..PoolConfig::default()
         },
     );
     let img = BoolImage::blank();
@@ -309,6 +313,70 @@ fn clean_shutdown_drains_queue_without_losing_responses() {
     }
 }
 
+/// Supervision × hot-swap: a model swap that lands while the only shard
+/// is down in its respawn window is still zero-drop and never serves a
+/// stale `model_version`. The panicked in-flight request fails with the
+/// typed [`ShardPanicked`]; everything queued behind the respawn is
+/// served by the *new* model version, because the respawned worker
+/// re-resolves its plans from the registry before touching the queue.
+#[test]
+fn hot_swap_during_worker_respawn_is_zero_drop_and_never_stale() {
+    let _serial = heavy_guard();
+    // The first evaluation unit in the process panics; nothing else fires.
+    let _armed = fault::arm(FaultPlan::parse("seed=1,eval_panic=once1").unwrap());
+    let registry = ModelRegistry::single("live", fixed_class_model(2));
+    let coord = Coordinator::start_pool(
+        Arc::clone(&registry),
+        PoolConfig {
+            shards: 1,
+            queue_capacity: 1024,
+            batch: BatchConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(50),
+            },
+            supervisor: SupervisorConfig {
+                max_respawns: 5,
+                respawn_window: Duration::from_secs(30),
+                backoff_base: Duration::from_millis(200),
+                backoff_cap: Duration::from_millis(200),
+            },
+            ..PoolConfig::default()
+        },
+    );
+    let img = BoolImage::blank();
+
+    // The injected panic fails the in-flight request with the typed error.
+    let doomed = coord.submit_to(Some("live"), img.clone());
+    let e = doomed.recv().expect("panicked request must still be answered").unwrap_err();
+    let p = e.downcast_ref::<ShardPanicked>().expect("want ShardPanicked");
+    assert_eq!(p.shard, 0);
+
+    // The shard is now inside its 200 ms respawn backoff. Swap the model
+    // and queue work behind the down worker — nothing may be dropped, and
+    // every response must carry the post-swap weights and version.
+    assert_ne!(coord.shard_health()[0], ShardHealth::Dead);
+    let swapped = registry.swap("live", fixed_class_model(7)).unwrap();
+    assert_eq!(swapped.version, 2);
+    let rxs: Vec<_> = (0..50)
+        .map(|_| coord.submit_to(Some("live"), img.clone()))
+        .collect();
+    for rx in rxs {
+        let out = rx.recv().expect("request dropped across respawn").unwrap();
+        assert_eq!(out.prediction, 7, "stale weights served after swap");
+        assert_eq!(out.model_version, Some(2), "stale model_version after swap");
+    }
+
+    let snap = coord.metrics();
+    assert_eq!(snap.shard_panics, 1);
+    assert_eq!(snap.respawns, 1);
+    assert_eq!(snap.shard_health, vec!["healthy"]);
+    let snap = coord.shutdown();
+    assert_eq!(snap.requests, 50);
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.per_model["live"].requests, 50);
+    assert_eq!(snap.per_model["live"].errors, 1);
+}
+
 /// Lifecycle: a wrong-model-id or wrong-geometry request fails *that
 /// request only* — co-batched valid requests (including for other
 /// models/geometries) are unaffected.
@@ -329,6 +397,7 @@ fn bad_model_or_geometry_fails_request_not_batch() {
                 max_batch: 16,
                 max_wait: Duration::from_millis(5),
             },
+            ..PoolConfig::default()
         },
     );
     let img28 = random_images(12, 1).remove(0);

@@ -178,6 +178,7 @@ fn training_checkpoints_hot_swap_into_a_live_pool() {
             shards: 2,
             queue_capacity: 64,
             batch: BatchConfig::default(),
+            ..PoolConfig::default()
         },
     );
     let mut tr = Trainer::new(params, 29);
