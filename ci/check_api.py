@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Gate: API.md must match the code's declared API surface.
+
+The route table (``ROUTES`` in rust/src/server/mod.rs) and the error-code
+registry (``ERROR_CODES`` in rust/src/server/http.rs) are the single
+source of truth for the v1 HTTP surface. API.md documents both for
+humans. This script parses all three and fails the lint job on any
+drift, in either direction:
+
+- every route must appear in API.md as a ``### METHOD /path`` heading,
+  and every such heading must correspond to a route;
+- every declared alias must appear under its route's heading as a
+  ``Deprecated alias: `/old/path`.`` line, and vice versa;
+- every error code must appear in API.md's error table as a
+  ``| `code` | status | ...`` row with the same status, and every table
+  row must correspond to a declared code.
+
+Run from anywhere: paths are resolved relative to the repo root.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+MOD_RS = ROOT / "rust" / "src" / "server" / "mod.rs"
+HTTP_RS = ROOT / "rust" / "src" / "server" / "http.rs"
+API_MD = ROOT / "API.md"
+
+
+def _const_block(source: str, name: str, path: Path) -> str:
+    """The text between ``pub const NAME`` and the closing ``];``."""
+    m = re.search(rf"pub const {name}\b.*?=\s*&\[(.*?)\n\];", source, re.DOTALL)
+    if not m:
+        sys.exit(f"check_api: cannot find `pub const {name}` in {path}")
+    return m.group(1)
+
+
+def routes_from_code() -> dict[tuple[str, str], list[str]]:
+    """{(method, path): [aliases]} from the ROUTES declaration."""
+    block = _const_block(MOD_RS.read_text(), "ROUTES", MOD_RS)
+    routes: dict[tuple[str, str], list[str]] = {}
+    for entry in re.finditer(
+        r'method:\s*"([A-Z]+)",\s*path:\s*"([^"]+)",\s*aliases:\s*&\[([^\]]*)\]',
+        block,
+    ):
+        method, path, raw_aliases = entry.groups()
+        aliases = re.findall(r'"([^"]+)"', raw_aliases)
+        routes[(method, path)] = aliases
+    if not routes:
+        sys.exit(f"check_api: parsed zero routes from {MOD_RS}")
+    return routes
+
+
+def error_codes_from_code() -> dict[str, int]:
+    """{code: status} from the ERROR_CODES declaration."""
+    block = _const_block(HTTP_RS.read_text(), "ERROR_CODES", HTTP_RS)
+    codes = {m.group(1): int(m.group(2)) for m in re.finditer(r'\("(\w+)",\s*(\d+),', block)}
+    if not codes:
+        sys.exit(f"check_api: parsed zero error codes from {HTTP_RS}")
+    return codes
+
+
+def api_md_surface() -> tuple[dict[tuple[str, str], list[str]], dict[str, int]]:
+    """(routes-with-aliases, error-code table) as documented in API.md."""
+    if not API_MD.exists():
+        sys.exit(f"check_api: {API_MD} does not exist")
+    routes: dict[tuple[str, str], list[str]] = {}
+    codes: dict[str, int] = {}
+    current: tuple[str, str] | None = None
+    for line in API_MD.read_text().splitlines():
+        heading = re.match(r"^### ([A-Z]+) (/\S+)\s*$", line)
+        if heading:
+            current = (heading.group(1), heading.group(2))
+            routes[current] = []
+            continue
+        alias = re.match(r"^Deprecated alias: `(/\S+)`\.?\s*$", line)
+        if alias:
+            if current is None:
+                sys.exit(f"check_api: alias line outside any endpoint heading: {line!r}")
+            routes[current].append(alias.group(1))
+            continue
+        row = re.match(r"^\|\s*`(\w+)`\s*\|\s*(\d+)\s*\|", line)
+        if row:
+            codes[row.group(1)] = int(row.group(2))
+    return routes, codes
+
+
+def main() -> int:
+    code_routes = routes_from_code()
+    code_errors = error_codes_from_code()
+    doc_routes, doc_errors = api_md_surface()
+    problems: list[str] = []
+
+    for key in sorted(set(code_routes) | set(doc_routes)):
+        method, path = key
+        if key not in doc_routes:
+            problems.append(f"route {method} {path} is in ROUTES but has no heading in API.md")
+        elif key not in code_routes:
+            problems.append(f"API.md documents {method} {path}, which is not in ROUTES")
+        elif sorted(code_routes[key]) != sorted(doc_routes[key]):
+            problems.append(
+                f"alias mismatch for {method} {path}: "
+                f"code={sorted(code_routes[key])} doc={sorted(doc_routes[key])}"
+            )
+
+    for code in sorted(set(code_errors) | set(doc_errors)):
+        if code not in doc_errors:
+            problems.append(f"error code `{code}` is in ERROR_CODES but not in API.md's table")
+        elif code not in code_errors:
+            problems.append(f"API.md's table lists `{code}`, which is not in ERROR_CODES")
+        elif code_errors[code] != doc_errors[code]:
+            problems.append(
+                f"status mismatch for `{code}`: code says {code_errors[code]}, "
+                f"API.md says {doc_errors[code]}"
+            )
+
+    if problems:
+        print("check_api: API.md and the code's API surface have drifted:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(
+        f"check_api: OK — {len(code_routes)} routes "
+        f"({sum(len(a) for a in code_routes.values())} aliases), "
+        f"{len(code_errors)} error codes match API.md"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,83 +1,104 @@
 #!/usr/bin/env bash
 # End-to-end smoke test for the HTTP front door (CI `http-smoke` job).
 #
-# Trains a 1-epoch model, starts `serve --listen 127.0.0.1:0` (release
-# binary) in the background, then over real sockets: POSTs one image and
-# asserts 200 + a well-formed classify response, asserts GET /metrics
-# counted the request, drains via POST /admin/shutdown and verifies the
+# Phase 1 (single server): trains a 1-epoch model, starts
+# `serve --listen 127.0.0.1:0` (release binary) in the background, then
+# over real sockets: POSTs one image and asserts 200 + a well-formed
+# classify response, asserts GET /v1/models and /metrics accounting,
+# asserts the deprecated alias paths still answer (plus `Deprecation:
+# true`), drains via the alias POST /admin/shutdown and verifies the
 # process exits cleanly with its final drained summary.
+#
+# Phase 2 (route tier): starts two `serve` replicas and one `route`
+# process fronting them, drives sequential classify load through the
+# router, SIGKILLs the replica that is actually serving mid-load, and
+# asserts zero dropped and zero non-enveloped responses across the
+# failover, a degraded /healthz, and a clean router drain.
 #
 # Usage: ci/http_smoke.sh [path/to/convcotm]
 set -euo pipefail
 
 BIN=${1:-rust/target/release/convcotm}
 TMP=$(mktemp -d)
-SERVE_PID=""
+PIDS=()
 cleanup() {
-  if [[ -n "$SERVE_PID" ]] && kill -0 "$SERVE_PID" 2>/dev/null; then
-    kill "$SERVE_PID" 2>/dev/null || true
-  fi
+  for pid in "${PIDS[@]:-}"; do
+    if [[ -n "$pid" ]] && kill -0 "$pid" 2>/dev/null; then
+      kill "$pid" 2>/dev/null || true
+    fi
+  done
   rm -rf "$TMP"
 }
 trap cleanup EXIT
+
+# Scrape "<verb> on http://ADDR" from a background process's log.
+wait_for_addr() { # logfile pid verb
+  local log=$1 pid=$2 verb=$3 addr=""
+  for _ in $(seq 1 100); do
+    addr=$(sed -n "s#.*$verb on http://\([0-9.]*:[0-9]*\).*#\1#p" "$log" | head -1)
+    [[ -n "$addr" ]] && break
+    if ! kill -0 "$pid" 2>/dev/null; then
+      echo "process exited before listening:" >&2
+      cat "$log" >&2
+      exit 1
+    fi
+    sleep 0.1
+  done
+  if [[ -z "$addr" ]]; then
+    echo "process never reported its address:" >&2
+    cat "$log" >&2
+    exit 1
+  fi
+  echo "$addr"
+}
 
 echo "== train a quick model =="
 BENCH_TRAIN_JSON="$TMP/bench_train.json" \
   "$BIN" train --dataset mnist --epochs 1 --n-train 300 --n-test 100 \
   --out "$TMP/m.cctm"
 
-echo "== start the front door =="
+echo "== phase 1: single front door =="
 "$BIN" serve --model "smoke=$TMP/m.cctm" --listen 127.0.0.1:0 \
   --shards 2 --http-workers 2 >"$TMP/serve.log" 2>&1 &
 SERVE_PID=$!
-
-ADDR=""
-for _ in $(seq 1 100); do
-  ADDR=$(sed -n 's#.*listening on http://\([0-9.]*:[0-9]*\).*#\1#p' "$TMP/serve.log" | head -1)
-  [[ -n "$ADDR" ]] && break
-  if ! kill -0 "$SERVE_PID" 2>/dev/null; then
-    echo "server exited before listening:" >&2
-    cat "$TMP/serve.log" >&2
-    exit 1
-  fi
-  sleep 0.1
-done
-if [[ -z "$ADDR" ]]; then
-  echo "server never reported its listen address:" >&2
-  cat "$TMP/serve.log" >&2
-  exit 1
-fi
+PIDS+=("$SERVE_PID")
+ADDR=$(wait_for_addr "$TMP/serve.log" "$SERVE_PID" listening)
 echo "front door at $ADDR"
 
-echo "== classify + metrics + drain over the wire =="
 python3 - "$ADDR" <<'PY'
 import json
 import sys
+import urllib.error
 import urllib.request
 
 addr = sys.argv[1]
 base = f"http://{addr}"
 
-def post(path, payload):
-    data = payload if isinstance(payload, bytes) else json.dumps(payload).encode()
-    req = urllib.request.Request(base + path, data=data, method="POST")
+def call(path, payload=None, method=None):
+    data = None
+    if payload is not None:
+        data = payload if isinstance(payload, bytes) else json.dumps(payload).encode()
+    req = urllib.request.Request(base + path, data=data, method=method)
     with urllib.request.urlopen(req, timeout=10) as resp:
-        return resp.status, json.loads(resp.read())
+        return resp.status, dict(resp.headers), json.loads(resp.read())
 
-def get(path):
-    with urllib.request.urlopen(base + path, timeout=10) as resp:
-        return resp.status, json.loads(resp.read())
-
-status, health = get("/healthz")
+status, _, health = call("/healthz")
 assert status == 200 and health["status"] == "ok", health
 assert "smoke" in health["models"], health
+
+# The versioned inventory endpoint.
+status, headers, models = call("/v1/models")
+assert status == 200, models
+assert [m["name"] for m in models["models"]] == ["smoke"], models
+assert models["models"][0]["version"] == 1, models
+assert "deprecation" not in {k.lower() for k in headers}, headers
 
 # One image: a blob of bright pixels, booleanized server-side.
 pixels = [0] * 784
 for y in range(10, 18):
     for x in range(10, 18):
         pixels[y * 28 + x] = 200
-status, out = post("/v1/classify", {"model": "smoke", "image": {"pixels": pixels}})
+status, _, out = call("/v1/classify", {"model": "smoke", "image": {"pixels": pixels}})
 assert status == 200, out
 assert out["count"] == 1, out
 (result,) = out["results"]
@@ -86,19 +107,29 @@ assert result["model_version"] == 1, out
 assert len(result["class_sums"]) == 10, out
 print(f"classified as {result['class']} (model v{result['model_version']})")
 
-status, metrics = get("/metrics")
+# A non-2xx answer must carry the uniform envelope with a stable code.
+try:
+    call("/v1/classify", {"model": "ghost", "image": {"pixels": pixels}})
+    raise AssertionError("classify for an unknown model must fail")
+except urllib.error.HTTPError as e:
+    body = json.loads(e.read())
+    assert e.code == 404 and body["error"]["code"] == "model_not_found", body
+
+status, _, metrics = call("/metrics")
 assert status == 200, metrics
 assert metrics["requests"] >= 1, metrics
 assert metrics["http"]["responses_2xx"] >= 2, metrics
 print(f"metrics: {metrics['requests']} pool request(s), "
       f"{metrics['http']['requests']} http request(s)")
 
-status, out = post("/admin/shutdown", b"")
+# The deprecated alias answers canonically, flagged with Deprecation.
+status, headers, out = call("/admin/shutdown", b"")
 assert status == 200 and out["draining"] is True, out
-print("drain requested")
+assert headers.get("Deprecation", headers.get("deprecation")) == "true", headers
+print("drain requested via the deprecated alias (Deprecation: true)")
 PY
 
-echo "== wait for the drained exit =="
+echo "== phase 1: wait for the drained exit =="
 for _ in $(seq 1 100); do
   kill -0 "$SERVE_PID" 2>/dev/null || break
   sleep 0.1
@@ -109,10 +140,119 @@ if kill -0 "$SERVE_PID" 2>/dev/null; then
   exit 1
 fi
 wait "$SERVE_PID"
-SERVE_PID=""
 grep -q "drained after" "$TMP/serve.log" || {
   echo "missing drained summary:" >&2
   cat "$TMP/serve.log" >&2
+  exit 1
+}
+echo "phase 1: OK"
+
+echo "== phase 2: route tier (2 replicas + router, kill one mid-load) =="
+"$BIN" serve --model "smoke=$TMP/m.cctm" --listen 127.0.0.1:0 \
+  --shards 1 --http-workers 2 >"$TMP/replica1.log" 2>&1 &
+R1_PID=$!
+PIDS+=("$R1_PID")
+"$BIN" serve --model "smoke=$TMP/m.cctm" --listen 127.0.0.1:0 \
+  --shards 1 --http-workers 2 >"$TMP/replica2.log" 2>&1 &
+R2_PID=$!
+PIDS+=("$R2_PID")
+R1_ADDR=$(wait_for_addr "$TMP/replica1.log" "$R1_PID" listening)
+R2_ADDR=$(wait_for_addr "$TMP/replica2.log" "$R2_PID" listening)
+
+"$BIN" route --listen 127.0.0.1:0 --replica "$R1_ADDR" --replica "$R2_ADDR" \
+  --health-interval-ms 100 --http-workers 2 >"$TMP/route.log" 2>&1 &
+ROUTE_PID=$!
+PIDS+=("$ROUTE_PID")
+ROUTE_ADDR=$(wait_for_addr "$TMP/route.log" "$ROUTE_PID" routing)
+echo "router at $ROUTE_ADDR over $R1_ADDR + $R2_ADDR"
+
+python3 - "$ROUTE_ADDR" "$R1_ADDR=$R1_PID" "$R2_ADDR=$R2_PID" <<'PY'
+import json
+import os
+import signal
+import sys
+import urllib.error
+import urllib.request
+
+addr = sys.argv[1]
+base = f"http://{addr}"
+pid_of = dict(kv.rsplit("=", 1) for kv in sys.argv[2:])
+
+def call(path, payload=None):
+    data = None
+    if payload is not None:
+        data = payload if isinstance(payload, bytes) else json.dumps(payload).encode()
+    req = urllib.request.Request(base + path, data=data)
+    with urllib.request.urlopen(req, timeout=10) as resp:
+        return resp.status, json.loads(resp.read())
+
+pixels = [0] * 784
+for y in range(10, 18):
+    for x in range(10, 18):
+        pixels[y * 28 + x] = 200
+body = {"model": "smoke", "image": {"pixels": pixels}}
+
+# Both replicas mirror the model: the union is still one entry.
+status, models = call("/v1/models")
+assert status == 200, models
+assert [m["name"] for m in models["models"]] == ["smoke"], models
+assert len(models["replicas"]) == 2, models
+
+TOTAL, KILL_AT = 300, 100
+outcomes = []  # (status, code-or-None) per request — nothing is dropped
+killed = None
+for i in range(TOTAL):
+    try:
+        status, out = call("/v1/classify", body)
+        assert out["count"] == 1, out
+        outcomes.append((status, None))
+    except urllib.error.HTTPError as e:
+        # Every failure must be the uniform envelope with a stable code.
+        err = json.loads(e.read())["error"]
+        outcomes.append((e.code, err["code"]))
+    if i + 1 == KILL_AT:
+        # Kill whichever replica is actually serving (the rendezvous
+        # owner): the one the router reports forwards on.
+        _, metrics = call("/metrics")
+        owner = max(metrics["router"], key=lambda a: metrics["router"][a]["forwarded"])
+        killed = owner
+        os.kill(int(pid_of[owner]), signal.SIGKILL)
+        print(f"killed owner replica {owner} after {KILL_AT} requests")
+
+assert len(outcomes) == TOTAL, f"dropped {TOTAL - len(outcomes)} responses"
+ok = sum(1 for s, _ in outcomes if s == 200)
+errors = [(s, c) for s, c in outcomes if s != 200]
+for s, c in errors:
+    assert c is not None, f"HTTP {s} without an envelope code"
+    assert c in ("replica_unavailable", "overloaded", "shard_panicked"), (s, c)
+assert ok >= TOTAL - 20, f"only {ok}/{TOTAL} succeeded across the failover: {errors}"
+tail = outcomes[-50:]
+assert all(s == 200 for s, _ in tail), f"traffic did not settle on the survivor: {tail}"
+print(f"failover: {ok}/{TOTAL} ok, {len(errors)} enveloped error(s), 0 dropped")
+
+status, health = call("/healthz")
+assert status == 200 and health["status"] == "degraded", health
+assert health["role"] == "router", health
+
+status, out = call("/v1/admin/shutdown", b"")
+assert status == 200 and out["draining"] is True, out
+print("router drain requested")
+PY
+
+echo "== phase 2: wait for the drained router exit =="
+for _ in $(seq 1 100); do
+  kill -0 "$ROUTE_PID" 2>/dev/null || break
+  sleep 0.1
+done
+if kill -0 "$ROUTE_PID" 2>/dev/null; then
+  echo "router did not exit after /v1/admin/shutdown:" >&2
+  cat "$TMP/route.log" >&2
+  exit 1
+fi
+wait "$ROUTE_PID" || true
+grep -q "drained after .* forwarded request" "$TMP/route.log" || {
+  echo "missing router drained summary:" >&2
+  cat "$TMP/route.log" >&2
   exit 1
 }
 echo "http smoke: OK"

@@ -14,7 +14,7 @@
 use convcotm::cli::Args;
 use convcotm::data::BoolImage;
 use convcotm::server::http::write_request;
-use convcotm::server::proto::classify_request_body;
+use convcotm::server::proto::{classify_request_body, parse_error_body};
 use convcotm::server::{HttpConn, Limits};
 use convcotm::util::{Summary, Xoshiro256ss};
 use std::net::TcpStream;
@@ -41,6 +41,10 @@ struct WorkerReport {
     /// Connections re-opened after the server closed ours (acceptor-level
     /// shed, error close, or drain) — expected under saturation loads.
     reconnects: usize,
+    /// Connect attempts that were refused outright and retried with
+    /// backoff — expected while a router fails over or a replica
+    /// restarts.
+    reconnects_refused: usize,
     /// Backoff sleeps taken after a 503 before retrying.
     retries: usize,
     /// 504 responses — the server gave up on a request's deadline. Counted
@@ -50,13 +54,35 @@ struct WorkerReport {
     latencies_us: Vec<f64>,
 }
 
-fn connect(addr: &str) -> Result<HttpConn<TcpStream>, String> {
-    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
-    stream
-        .set_read_timeout(Some(Duration::from_secs(30)))
-        .map_err(|e| e.to_string())?;
-    stream.set_nodelay(true).map_err(|e| e.to_string())?;
-    Ok(HttpConn::new(stream))
+/// Connect, retrying refused attempts with seeded jittered backoff (a
+/// restarting replica or a server that has not bound yet presents as
+/// ECONNREFUSED — a transient, not a failure). Bounded: a server that
+/// never comes up still fails the run fast. Counts retries into
+/// `refused`.
+fn connect(
+    addr: &str,
+    rng: &mut Xoshiro256ss,
+    refused: &mut usize,
+) -> Result<HttpConn<TcpStream>, String> {
+    let mut attempts = 0u32;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(30)))
+                    .map_err(|e| e.to_string())?;
+                stream.set_nodelay(true).map_err(|e| e.to_string())?;
+                return Ok(HttpConn::new(stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionRefused && attempts < 8 => {
+                *refused += 1;
+                let window_ms = 25u64 << attempts.min(6);
+                attempts += 1;
+                std::thread::sleep(Duration::from_millis(1 + rng.next_u64() % window_ms));
+            }
+            Err(e) => return Err(format!("connect {addr}: {e}")),
+        }
+    }
 }
 
 fn run_connection(
@@ -65,13 +91,13 @@ fn run_connection(
     requests: usize,
     seed: u64,
 ) -> Result<WorkerReport, String> {
-    let mut conn = connect(addr)?;
     let limits = Limits::default();
     let mut report = WorkerReport {
         ok: 0,
         shed: 0,
         failed: 0,
         reconnects: 0,
+        reconnects_refused: 0,
         retries: 0,
         deadline_exceeded: 0,
         latencies_us: Vec::with_capacity(requests),
@@ -80,6 +106,7 @@ fn run_connection(
     // connections' retry storms (all-at-once retries would re-trip the
     // very backpressure that shed them).
     let mut rng = Xoshiro256ss::new(seed);
+    let mut conn = connect(addr, &mut rng, &mut report.reconnects_refused)?;
     let mut backoff_level = 0u32;
     // A saturated server legitimately closes connections (acceptor 503 +
     // close); reconnect and keep measuring rather than aborting the run —
@@ -100,7 +127,7 @@ fn run_connection(
                 .ok_or("server keeps closing connections")?;
             report.reconnects += 1;
             std::thread::sleep(Duration::from_millis(50));
-            conn = connect(addr)?;
+            conn = connect(addr, &mut rng, &mut report.reconnects_refused)?;
             continue;
         };
         done += 1;
@@ -116,12 +143,17 @@ fn run_connection(
             503 => {
                 report.shed += 1;
                 report.retries += 1;
-                let cap_ms = resp
-                    .header("retry-after")
-                    .and_then(|v| v.parse::<u64>().ok())
-                    .unwrap_or(1)
-                    .clamp(1, 5)
-                    * 1000;
+                // Retry hint precedence: the envelope's machine-readable
+                // retry_after_ms, then the Retry-After header, then 1 s.
+                let cap_ms = parse_error_body(&resp.body)
+                    .and_then(|e| e.retry_after_ms)
+                    .or_else(|| {
+                        resp.header("retry-after")
+                            .and_then(|v| v.parse::<u64>().ok())
+                            .map(|s| s * 1000)
+                    })
+                    .unwrap_or(1000)
+                    .clamp(1, 5000);
                 let window_ms = (50u64 << backoff_level.min(10)).min(cap_ms);
                 backoff_level += 1;
                 let ms = 1 + rng.next_u64() % window_ms;
@@ -135,7 +167,16 @@ fn run_connection(
             }
             _ => {
                 report.failed += 1;
-                eprintln!("HTTP {}: {}", resp.status, String::from_utf8_lossy(&resp.body));
+                // The uniform envelope makes failures self-describing; a
+                // non-envelope body is itself a server bug worth seeing.
+                match parse_error_body(&resp.body) {
+                    Some(e) => eprintln!("HTTP {} [{}]: {}", resp.status, e.code, e.message),
+                    None => eprintln!(
+                        "HTTP {} (non-envelope!): {}",
+                        resp.status,
+                        String::from_utf8_lossy(&resp.body)
+                    ),
+                }
             }
         }
         let closing = resp
@@ -147,7 +188,7 @@ fn run_connection(
                 .checked_sub(1)
                 .ok_or("server keeps closing connections")?;
             report.reconnects += 1;
-            conn = connect(addr)?;
+            conn = connect(addr, &mut rng, &mut report.reconnects_refused)?;
         }
     }
     Ok(report)
@@ -187,12 +228,14 @@ fn main() -> anyhow::Result<()> {
 
     let (mut ok, mut shed, mut failed) = (0usize, 0usize, 0usize);
     let (mut reconnects, mut retries, mut deadline_exceeded) = (0usize, 0usize, 0usize);
+    let mut reconnects_refused = 0usize;
     let mut latencies: Vec<f64> = Vec::new();
     for r in &reports {
         ok += r.ok;
         shed += r.shed;
         failed += r.failed;
         reconnects += r.reconnects;
+        reconnects_refused += r.reconnects_refused;
         retries += r.retries;
         deadline_exceeded += r.deadline_exceeded;
         latencies.extend_from_slice(&r.latencies_us);
@@ -201,7 +244,8 @@ fn main() -> anyhow::Result<()> {
     let total = (ok + shed + failed + deadline_exceeded) as f64;
     println!(
         "{:.1} req/s · {:.1} k img/s over {elapsed:.2}s ({ok} ok, {shed} shed 503, \
-         {deadline_exceeded} deadline 504, {failed} failed, {reconnects} reconnect(s))",
+         {deadline_exceeded} deadline 504, {failed} failed, {reconnects} reconnect(s), \
+         {reconnects_refused} refused-then-retried)",
         total / elapsed,
         ok as f64 * batch as f64 / elapsed / 1e3,
     );

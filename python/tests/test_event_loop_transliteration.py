@@ -1,0 +1,192 @@
+"""Transliteration of the event loop's lazy timeout wheel
+(``rust/src/server/poll.rs``): a min-heap of ``(deadline, slot, gen)``
+hints re-validated against the state-derived truth (``deadline_of``) when
+they pop.
+
+With no Rust toolchain in the container, this fake-clock model is the
+executable check on the timer semantics the acceptance tests assume:
+
+- an idle keep-alive connection closes *silently* at ``idle_timeout``;
+- a mid-message stall answers ``408`` at ``last_byte + read_timeout``;
+- drip-feeding bytes re-arms the read deadline but cannot outrun
+  ``msg_start + max_message_time`` (the slow-loris ceiling);
+- busy connections never expire (the pool's own deadlines bound them);
+- stale generations are skipped, so a recycled slot's old timer cannot
+  kill its new tenant.
+"""
+
+import heapq
+from dataclasses import dataclass, field
+
+# Mirrors ServerConfig / Limits defaults and poll.rs constants (seconds).
+IDLE_TIMEOUT = 60.0
+READ_TIMEOUT = 2.0
+MAX_MESSAGE_TIME = 20.0
+WRITE_TIMEOUT = 10.0
+CLOSE_DRAIN_GRACE = 0.5
+BUSY_REARM = 3600.0
+
+
+@dataclass
+class Conn:
+    state: str  # "reading" | "busy" | "writing" | "closing"
+    gen: int
+    since: float
+    msg_start: float | None = None
+    last_byte: float = 0.0
+
+
+@dataclass
+class Wheel:
+    """The timer half of poll.rs's EventLoop, with an explicit clock."""
+
+    conns: dict[int, Conn] = field(default_factory=dict)
+    timers: list[tuple[float, int, int]] = field(default_factory=list)
+    next_gen: int = 0
+    # (slot, action) log: action is "close" (silent) or "408".
+    fired: list[tuple[int, str]] = field(default_factory=list)
+
+    def open_conn(self, slot: int, now: float) -> Conn:
+        self.next_gen += 1
+        conn = Conn(state="reading", gen=self.next_gen, since=now, last_byte=now)
+        self.conns[slot] = conn
+        self.arm(slot)
+        return conn
+
+    def deadline_of(self, conn: Conn) -> float:
+        if conn.state == "reading":
+            if conn.msg_start is None:
+                return conn.since + IDLE_TIMEOUT
+            return min(conn.last_byte + READ_TIMEOUT, conn.msg_start + MAX_MESSAGE_TIME)
+        if conn.state == "busy":
+            return conn.since + BUSY_REARM
+        if conn.state == "writing":
+            return conn.since + WRITE_TIMEOUT
+        return conn.since + CLOSE_DRAIN_GRACE
+
+    def arm(self, slot: int) -> None:
+        conn = self.conns.get(slot)
+        if conn is not None:
+            heapq.heappush(self.timers, (self.deadline_of(conn), slot, conn.gen))
+
+    def bytes_arrived(self, slot: int, now: float) -> None:
+        """A read event: first byte starts the message clock. poll.rs does
+        NOT push a heap entry per byte — the stale hint re-arms lazily."""
+        conn = self.conns[slot]
+        if conn.msg_start is None:
+            conn.msg_start = now
+        conn.last_byte = now
+
+    def expire_timers(self, now: float) -> None:
+        while self.timers and self.timers[0][0] <= now:
+            _, slot, gen = heapq.heappop(self.timers)
+            conn = self.conns.get(slot)
+            if conn is None or conn.gen != gen:
+                continue  # dead or recycled slot: stale hint
+            due = self.deadline_of(conn)
+            if due > now:
+                # Deadline moved (bytes arrived, state changed): re-arm at
+                # the real time instead of expiring.
+                heapq.heappush(self.timers, (due, slot, gen))
+                continue
+            if conn.state == "reading":
+                if conn.msg_start is not None:
+                    self.fired.append((slot, "408"))
+                    del self.conns[slot]
+                else:
+                    self.fired.append((slot, "close"))
+                    del self.conns[slot]
+            elif conn.state == "busy":
+                heapq.heappush(self.timers, (now + BUSY_REARM, slot, gen))
+            else:
+                self.fired.append((slot, "close"))
+                del self.conns[slot]
+
+
+def test_idle_connection_closes_silently_at_idle_timeout():
+    w = Wheel()
+    w.open_conn(0, now=0.0)
+    w.expire_timers(IDLE_TIMEOUT - 0.001)
+    assert w.fired == [] and 0 in w.conns
+    w.expire_timers(IDLE_TIMEOUT)
+    # Silent close — never a 408 for a connection that sent nothing.
+    assert w.fired == [(0, "close")]
+
+
+def test_mid_message_stall_answers_408_at_read_timeout():
+    w = Wheel()
+    w.open_conn(0, now=0.0)
+    w.bytes_arrived(0, now=1.0)
+    # The idle-timeout hint pops at t=60 in real poll.rs ordering, but the
+    # *stall* deadline (1.0 + READ_TIMEOUT) is the truth; drive the wheel
+    # there and the 408 fires.
+    w.arm(0)  # poll.rs re-arms on the read event's state change
+    w.expire_timers(1.0 + READ_TIMEOUT - 0.001)
+    assert w.fired == []
+    w.expire_timers(1.0 + READ_TIMEOUT)
+    assert w.fired == [(0, "408")]
+
+
+def test_drip_feed_cannot_outrun_max_message_time():
+    w = Wheel()
+    w.open_conn(0, now=0.0)
+    # One byte every second: each arrival re-extends last_byte, so the
+    # read deadline never trips...
+    t = 0.0
+    while t < MAX_MESSAGE_TIME + 5.0 and 0 in w.conns:
+        w.bytes_arrived(0, now=t)
+        w.arm(0)
+        w.expire_timers(t)
+        t += 1.0
+    # ...but msg_start + MAX_MESSAGE_TIME is a hard ceiling.
+    assert w.fired == [(0, "408")]
+    assert t - 1.0 <= MAX_MESSAGE_TIME + 1.0
+
+
+def test_stale_hints_rearm_instead_of_firing():
+    w = Wheel()
+    w.open_conn(0, now=0.0)
+    w.bytes_arrived(0, now=0.0)
+    w.arm(0)
+    # Bytes keep arriving *without* re-arming (poll.rs never pushes per
+    # byte): the armed hint at t=2 is stale when it pops.
+    w.bytes_arrived(0, now=1.5)
+    w.expire_timers(2.0)
+    assert w.fired == [] and 0 in w.conns, "stale hint fired instead of re-arming"
+    # The re-armed entry fires at the *real* deadline.
+    w.expire_timers(1.5 + READ_TIMEOUT)
+    assert w.fired == [(0, "408")]
+
+
+def test_busy_connections_never_expire():
+    w = Wheel()
+    conn = w.open_conn(0, now=0.0)
+    conn.state = "busy"
+    w.arm(0)
+    # Far past every other deadline: busy just re-arms, forever.
+    for now in (IDLE_TIMEOUT, BUSY_REARM + 1.0, 3.0 * BUSY_REARM):
+        w.expire_timers(now)
+    assert w.fired == [] and 0 in w.conns
+
+
+def test_recycled_slot_ignores_the_old_generation():
+    w = Wheel()
+    w.open_conn(0, now=0.0)  # gen 1, idle deadline t=60
+    del w.conns[0]  # peer hung up; slot freed (its timer hint remains)
+    w.open_conn(0, now=50.0)  # recycled: gen 2, idle deadline t=110
+    w.expire_timers(60.0)  # gen-1 hint pops — must not kill gen 2
+    assert w.fired == [] and w.conns[0].gen == 2
+    w.expire_timers(110.0)
+    assert w.fired == [(0, "close")]
+
+
+def test_writing_and_closing_deadlines_close_the_connection():
+    w = Wheel()
+    for slot, state, grace in ((0, "writing", WRITE_TIMEOUT), (1, "closing", CLOSE_DRAIN_GRACE)):
+        conn = w.open_conn(slot, now=0.0)
+        conn.state = state
+        w.arm(slot)
+        w.expire_timers(grace - 0.001)
+        assert (slot, "close") not in w.fired
+        w.expire_timers(grace)
+        assert (slot, "close") in w.fired

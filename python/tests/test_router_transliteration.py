@@ -1,0 +1,112 @@
+"""Transliteration of the route tier's rendezvous hash
+(``rust/src/server/router.rs``): FNV-1a 64 seeding one SplitMix64 round.
+
+The Rust and Python implementations must agree bit-for-bit — placement is
+computed independently by every router and by tooling, with no
+coordination — so this file pins the same test vectors as the Rust
+module's ``rendezvous_scores_match_the_pinned_vectors``.
+"""
+
+MASK = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK
+    return h
+
+
+def rotl64(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def splitmix64_next(state: int) -> int:
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return z ^ (z >> 31)
+
+
+def rendezvous_score(model: str, replica: str) -> int:
+    seed = fnv1a(model.encode()) ^ rotl64(fnv1a(replica.encode()), 32)
+    return splitmix64_next(seed)
+
+
+def rank_replicas(model: str, replicas: list[str]) -> list[int]:
+    """Best replica first: descending score, ties broken by address."""
+    return sorted(
+        range(len(replicas)),
+        key=lambda i: (-rendezvous_score(model, replicas[i]), replicas[i]),
+    )
+
+
+# Shared with rust/src/server/router.rs — (model, replica, score).
+VECTORS = [
+    ("", "127.0.0.1:8001", 0x2069AC02FB8DB3F1),
+    ("", "127.0.0.1:8002", 0x6F3A62DCCF1BDD31),
+    ("", "127.0.0.1:8003", 0x1FECB8135189151C),
+    ("mnist-asic", "127.0.0.1:8001", 0x4262AA3952472312),
+    ("mnist-asic", "127.0.0.1:8002", 0xBC7C5FA156D30599),
+    ("mnist-asic", "127.0.0.1:8003", 0x98A5D8C6C3FE2D15),
+    ("cifar10-32x32", "127.0.0.1:8001", 0x316E2294C4583DF1),
+    ("cifar10-32x32", "127.0.0.1:8002", 0x9D410D93C4646BE1),
+    ("cifar10-32x32", "127.0.0.1:8003", 0xBD0D001F02F7D70A),
+]
+
+
+def test_fnv1a_published_vectors():
+    # The FNV authors' own vectors — catches a mistranscribed prime.
+    assert fnv1a(b"") == 0xCBF29CE484222325
+    assert fnv1a(b"a") == 0xAF63DC4C8601EC8C
+
+
+def test_rendezvous_scores_match_the_pinned_vectors():
+    for model, replica, want in VECTORS:
+        assert rendezvous_score(model, replica) == want, (model, replica)
+
+
+def test_ranking_matches_the_rust_side():
+    replicas = ["127.0.0.1:8001", "127.0.0.1:8002", "127.0.0.1:8003"]
+    order = rank_replicas("mnist-asic", replicas)
+    assert sorted(order) == [0, 1, 2]
+    # Per the pinned vectors: 8002 > 8003 > 8001 for mnist-asic.
+    assert order == [1, 2, 0]
+
+
+def test_ranking_ignores_listing_order():
+    replicas = ["127.0.0.1:8001", "127.0.0.1:8002", "127.0.0.1:8003"]
+    shuffled = ["127.0.0.1:8003", "127.0.0.1:8001", "127.0.0.1:8002"]
+    by_addr = [replicas[i] for i in rank_replicas("mnist-asic", replicas)]
+    by_addr_shuffled = [shuffled[i] for i in rank_replicas("mnist-asic", shuffled)]
+    assert by_addr == by_addr_shuffled
+
+
+def test_replica_death_only_moves_the_dead_replicas_models():
+    """The property that makes rendezvous the right choice: removing one
+    replica re-homes only the models it owned; everything else stays put
+    (mod-N hashing would reshuffle nearly all of them)."""
+    replicas = [f"127.0.0.1:{8001 + i}" for i in range(5)]
+    models = [f"model-{i}" for i in range(200)]
+
+    def owner(model, pool):
+        return pool[rank_replicas(model, pool)[0]]
+
+    before = {m: owner(m, replicas) for m in models}
+    dead = replicas[2]
+    survivors = [r for r in replicas if r != dead]
+    moved = 0
+    for m in models:
+        after = owner(m, survivors)
+        if before[m] == dead:
+            moved += 1
+            # A re-homed model lands on its *second* choice from the
+            # original ranking — exactly the failover ladder's pick.
+            ranked = rank_replicas(m, replicas)
+            assert after == replicas[ranked[1]]
+        else:
+            assert after == before[m], f"{m} moved without its owner dying"
+    # Sanity: the dead replica actually owned some share of the models.
+    assert moved > 0

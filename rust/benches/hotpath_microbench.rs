@@ -214,6 +214,187 @@ fn bench_http_rows(
     (rates, single_p50_us)
 }
 
+/// Tier rows: the event-loop acceptance load (16 keep-alive connections
+/// on 4 workers — holding more connections than workers is exactly what
+/// the readiness loop buys) and the route tier (one router fronting two
+/// replicas, traffic rendezvous-split across both owners).
+fn bench_tier_rows(
+    model: &convcotm::tm::Model,
+    images: &[convcotm::data::BoolImage],
+    t: &mut Table,
+    rows: &mut Vec<Row>,
+) {
+    use convcotm::server::http::write_request;
+    use convcotm::server::router::{
+        rank_replicas, spawn_health_checker, RouterConfig, RouterState,
+    };
+    use convcotm::server::{HttpConn, HttpServer, Limits, ServerConfig, ServerState};
+    use std::net::{SocketAddr, TcpStream};
+    use std::sync::Arc;
+
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let batch = 16usize;
+    let refs: Vec<&convcotm::data::BoolImage> = images.iter().take(batch).collect();
+
+    let start_replica = |names: &[&str]| {
+        let registry = ModelRegistry::new();
+        for name in names {
+            registry.insert(name, model.clone()).expect("servable model");
+        }
+        let coord = Arc::new(Coordinator::start_pool(
+            Arc::new(registry),
+            PoolConfig {
+                shards: 1,
+                queue_capacity: 4096,
+                batch: BatchConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_micros(50),
+                },
+                ..PoolConfig::default()
+            },
+        ));
+        let state = ServerState::new(Arc::clone(&coord));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            http_workers: 4,
+            ..ServerConfig::default()
+        };
+        let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind loopback");
+        (server, state, coord)
+    };
+    let stop = |server: HttpServer, state: Arc<ServerState>, coord: Arc<Coordinator>| {
+        server.request_shutdown();
+        server.join();
+        drop(state);
+        if let Ok(coord) = Arc::try_unwrap(coord) {
+            coord.shutdown();
+        }
+    };
+    let connect = |addr: SocketAddr| {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_nodelay(true).expect("nodelay");
+        HttpConn::new(s)
+    };
+    let exchange = |conn: &mut HttpConn<TcpStream>, body: &[u8]| {
+        write_request(conn.get_mut(), "POST", "/v1/classify", body, true).expect("write");
+        let resp = conn
+            .read_response(&Limits::default())
+            .expect("response")
+            .expect("server open");
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    };
+    let emit = |label: &str, rate: f64, t: &mut Table, rows: &mut Vec<Row>| {
+        t.row(&[
+            label.into(),
+            format!("{} img/s", fmt_k(rate)),
+            format!("{:.2} µs/img", 1e6 / rate),
+            "—".into(),
+        ]);
+        rows.push(Row {
+            label: label.to_string(),
+            img_per_s: rate,
+            us_per_img: 1e6 / rate,
+            allocs_per_img: None,
+        });
+    };
+
+    // Row 1: 16 keep-alive connections on 4 HTTP workers. Before the
+    // event-loop redesign this shape meant 16 blocked threads; now the
+    // parked 12 cost a slab slot each while 4 workers drain the ready set.
+    {
+        let conns = 16usize;
+        let reqs_per_conn = if quick { 25 } else { 80 };
+        let (server, state, coord) = start_replica(&["bench"]);
+        let addr = server.local_addr();
+        let body = convcotm::server::proto::classify_request_body(Some("bench"), &refs);
+        exchange(&mut connect(addr), &body);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..conns {
+                let (body, connect, exchange) = (&body, &connect, &exchange);
+                scope.spawn(move || {
+                    let mut conn = connect(addr);
+                    for _ in 0..reqs_per_conn {
+                        exchange(&mut conn, body);
+                    }
+                });
+            }
+        });
+        let rate = (conns * reqs_per_conn * batch) as f64 / t0.elapsed().as_secs_f64();
+        emit("serve http (event loop)", rate, t, rows);
+        stop(server, state, coord);
+    }
+
+    // Row 2: the same load through a router fronting two replicas, the
+    // traffic split across two models whose rendezvous owners differ —
+    // both replicas serve, and the row prices the extra forwarding hop.
+    {
+        let names: Vec<String> = (0..16).map(|i| format!("bench-{i}")).collect();
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let (srv_a, state_a, coord_a) = start_replica(&name_refs);
+        let (srv_b, state_b, coord_b) = start_replica(&name_refs);
+        let (addr_a, addr_b) = (srv_a.local_addr().to_string(), srv_b.local_addr().to_string());
+        let router_state = RouterState::new(RouterConfig {
+            replicas: vec![addr_a.clone(), addr_b.clone()],
+            health_interval: Duration::from_millis(100),
+            ..RouterConfig::default()
+        })
+        .expect("router state");
+        let health = spawn_health_checker(Arc::clone(&router_state));
+        let router = HttpServer::start(
+            &ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                http_workers: 4,
+                ..ServerConfig::default()
+            },
+            Arc::clone(&router_state),
+        )
+        .expect("bind router");
+        let router_addr = router.local_addr();
+
+        // One model homed on each replica (16 candidates make a single-
+        // sided split vanishingly unlikely; fall back to any name if so).
+        let addrs = [addr_a.as_str(), addr_b.as_str()];
+        let pick = |owner: usize| {
+            names
+                .iter()
+                .find(|n| rank_replicas(n, &addrs)[0] == owner)
+                .unwrap_or(&names[0])
+                .clone()
+        };
+        let bodies: Vec<Vec<u8>> = [pick(0), pick(1)]
+            .iter()
+            .map(|n| convcotm::server::proto::classify_request_body(Some(n), &refs))
+            .collect();
+
+        let clients = 4usize;
+        let reqs_per_client = if quick { 40 } else { 150 };
+        exchange(&mut connect(router_addr), &bodies[0]);
+        exchange(&mut connect(router_addr), &bodies[1]);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let (bodies, connect, exchange) = (&bodies, &connect, &exchange);
+                scope.spawn(move || {
+                    let mut conn = connect(router_addr);
+                    let body = &bodies[c % 2];
+                    for _ in 0..reqs_per_client {
+                        exchange(&mut conn, body);
+                    }
+                });
+            }
+        });
+        let rate = (clients * reqs_per_client * batch) as f64 / t0.elapsed().as_secs_f64();
+        emit("route (2 replicas)", rate, t, rows);
+
+        router.request_shutdown();
+        router.join();
+        health.join().expect("health checker");
+        stop(srv_a, state_a, coord_a);
+        stop(srv_b, state_b, coord_b);
+    }
+}
+
 fn main() {
     section("Hot-path microbenchmarks (§Perf)");
     let fixture = FixtureSpec::quick(SynthFamily::Digits).build();
@@ -383,6 +564,11 @@ fn main() {
     // end-to-end rows CI tracks for the transport layer, plus the
     // single-inflight latency that yields `http_overhead_us`.
     let (http_rates, http_p50_us) = bench_http_rows(&model, &images, &mut t, &mut rows);
+
+    // Event-loop and route-tier rows (the ISSUE-8 front-door acceptance
+    // shapes): many keep-alive connections on few workers, and the same
+    // load through a 2-replica route tier.
+    bench_tier_rows(&model, &images, &mut t, &mut rows);
 
     // PJRT artifacts.
     #[cfg(feature = "pjrt")]

@@ -60,18 +60,20 @@ impl<B: Backend + ?Sized> Backend for Box<B> {
     }
 }
 
-/// Reject images whose side does not match the model's geometry.
-fn validate_geometry(name: &str, g: Geometry, imgs: &[&BoolImage]) -> Result<()> {
-    for (i, img) in imgs.iter().enumerate() {
+/// Reject images whose side does not match the model's geometry. The
+/// error is a typed [`BadGeometry`] so the HTTP layer can downcast it
+/// into its `bad_geometry` code. It stays the *outermost* error (no
+/// context wrapper): the typed Display carries the sizes, which callers
+/// and tests match on.
+fn validate_geometry(_name: &str, g: Geometry, imgs: &[&BoolImage]) -> Result<()> {
+    for img in imgs {
         if img.side() != g.img_side {
-            return Err(anyhow!(
-                "backend {name}: image {i} is {}x{} but the loaded model expects {}x{} \
-                 (geometry {g})",
-                img.side(),
-                img.side(),
-                g.img_side,
-                g.img_side
-            ));
+            return Err(anyhow::Error::new(super::BadGeometry {
+                model: None,
+                side: img.side(),
+                expected_side: g.img_side,
+                geometry: g.to_string(),
+            }));
         }
     }
     Ok(())

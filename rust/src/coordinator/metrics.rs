@@ -279,6 +279,45 @@ impl MetricsSnapshot {
     }
 }
 
+/// Counter fields of a `/metrics` snapshot that sum meaningfully across
+/// replicas (percentiles and throughput do not — they stay per replica).
+pub const SUMMED_METRIC_FIELDS: &[&str] = &[
+    "requests",
+    "errors",
+    "batches",
+    "latency_samples_seen",
+    "shard_panics",
+    "respawns",
+];
+
+/// Fold replica `/metrics` snapshots into the route tier's aggregate
+/// view: [`SUMMED_METRIC_FIELDS`] add up at the top level, and each raw
+/// snapshot is preserved verbatim under `"replicas"` keyed by replica
+/// address. A replica snapshot missing a field simply contributes zero —
+/// the aggregation never fails on a skewed or older replica.
+pub fn aggregate_replica_metrics<'a>(
+    snapshots: impl IntoIterator<Item = (&'a str, crate::util::Json)>,
+) -> crate::util::Json {
+    use crate::util::Json;
+    let mut totals = vec![0.0f64; SUMMED_METRIC_FIELDS.len()];
+    let mut replicas: BTreeMap<String, Json> = BTreeMap::new();
+    for (addr, snap) in snapshots {
+        for (i, key) in SUMMED_METRIC_FIELDS.iter().enumerate() {
+            if let Some(x) = snap.get(key).and_then(Json::as_f64) {
+                totals[i] += x;
+            }
+        }
+        replicas.insert(addr.to_string(), snap);
+    }
+    let mut out: BTreeMap<String, Json> = SUMMED_METRIC_FIELDS
+        .iter()
+        .zip(&totals)
+        .map(|(k, &v)| (k.to_string(), Json::num(v)))
+        .collect();
+    out.insert("replicas".to_string(), Json::Obj(replicas));
+    Json::Obj(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,6 +390,43 @@ mod tests {
         assert_eq!(s.shard_requests, vec![3, 1]);
         assert_eq!(s.per_model["m"], ModelStats::new(2, 2));
         assert_eq!(s.latency_us.n, 4);
+    }
+
+    #[test]
+    fn replica_aggregation_sums_counters_and_keeps_raw_snapshots() {
+        use crate::util::Json;
+        let a = Json::obj([
+            ("requests", Json::num(10.0)),
+            ("errors", Json::num(1.0)),
+            ("batches", Json::num(4.0)),
+            ("latency_p99_us", Json::num(120.0)),
+        ]);
+        let b = Json::obj([
+            ("requests", Json::num(5.0)),
+            ("shard_panics", Json::num(2.0)),
+        ]);
+        let agg = aggregate_replica_metrics([("127.0.0.1:8001", a), ("127.0.0.1:8002", b)]);
+        assert_eq!(agg.get("requests").and_then(Json::as_f64), Some(15.0));
+        assert_eq!(agg.get("errors").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(agg.get("batches").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(agg.get("shard_panics").and_then(Json::as_f64), Some(2.0));
+        // Percentiles do not sum; the raw snapshots stay per replica.
+        assert!(agg.get("latency_p99_us").is_none());
+        let replicas = agg.get("replicas").unwrap();
+        assert_eq!(
+            replicas
+                .get("127.0.0.1:8001")
+                .and_then(|r| r.get("latency_p99_us"))
+                .and_then(Json::as_f64),
+            Some(120.0)
+        );
+        assert_eq!(
+            replicas
+                .get("127.0.0.1:8002")
+                .and_then(|r| r.get("requests"))
+                .and_then(Json::as_f64),
+            Some(5.0)
+        );
     }
 
     #[test]

@@ -86,6 +86,44 @@ pub struct DeadlineExceeded {
     pub deadline_ms: u64,
 }
 
+/// Typed per-image rejection: the request image's side does not match the
+/// served model's patch geometry. Carried per result slot so one bad
+/// image in a batch fails alone, and downcast by the HTTP layer into the
+/// `bad_geometry` error code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BadGeometry {
+    /// Resolved model name; `None` for an anonymous single-backend pool.
+    pub model: Option<String>,
+    pub side: usize,
+    pub expected_side: usize,
+    pub geometry: String,
+}
+
+impl std::fmt::Display for BadGeometry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let BadGeometry {
+            side,
+            expected_side,
+            geometry,
+            ..
+        } = self;
+        match &self.model {
+            Some(m) => write!(
+                f,
+                "request image is {side}x{side} but model '{m}' expects \
+                 {expected_side}x{expected_side} (geometry {geometry})"
+            ),
+            None => write!(
+                f,
+                "request image is {side}x{side} but the served model expects \
+                 {expected_side}x{expected_side} (geometry {geometry})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BadGeometry {}
+
 /// A shard's supervision state, as reported by `/healthz` and `/metrics`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShardHealth {
@@ -774,13 +812,12 @@ fn backend_worker<B: Backend>(
                     )));
                     bad += 1;
                 } else if img.side() != geometry.img_side {
-                    let side = img.side();
-                    results[u][i] = Some(Err(anyhow::anyhow!(
-                        "request image is {side}x{side} but the served model expects \
-                         {}x{} (geometry {geometry})",
-                        geometry.img_side,
-                        geometry.img_side
-                    )));
+                    results[u][i] = Some(Err(anyhow::Error::new(BadGeometry {
+                        model: None,
+                        side: img.side(),
+                        expected_side: geometry.img_side,
+                        geometry: geometry.to_string(),
+                    })));
                     bad += 1;
                 } else {
                     work.push((u, i));
@@ -1198,13 +1235,12 @@ fn serve_one(
     };
     let g = entry.plan.geometry();
     if img.side() != g.img_side {
-        let side = img.side();
-        let e = anyhow::anyhow!(
-            "request image is {side}x{side} but model '{}' expects {}x{} (geometry {g})",
-            entry.name,
-            g.img_side,
-            g.img_side
-        );
+        let e = anyhow::Error::new(BadGeometry {
+            model: Some(entry.name.clone()),
+            side: img.side(),
+            expected_side: g.img_side,
+            geometry: g.to_string(),
+        });
         return Err((Some(entry.name.clone()), e));
     }
     let prediction = entry.plan.classify_into(img, scratch);
@@ -1271,13 +1307,12 @@ fn serve_block(
     let mut valid: Vec<&BoolImage> = Vec::with_capacity(imgs.len());
     for (i, img) in imgs.iter().enumerate() {
         if img.side() != g.img_side {
-            let side = img.side();
-            results[i] = Some(Err(anyhow::anyhow!(
-                "request image is {side}x{side} but model '{}' expects {}x{} (geometry {g})",
-                entry.name,
-                g.img_side,
-                g.img_side
-            )));
+            results[i] = Some(Err(anyhow::Error::new(BadGeometry {
+                model: Some(entry.name.clone()),
+                side: img.side(),
+                expected_side: g.img_side,
+                geometry: g.to_string(),
+            })));
         } else {
             valid_idx.push(i);
             valid.push(img);

@@ -30,6 +30,7 @@ use convcotm::coordinator::{
 use convcotm::data::{booleanize_split_for_geometry, load_dataset, BoolImage, Geometry};
 use convcotm::energy::{EnergyModel, OperatingPoint};
 use convcotm::model_io;
+use convcotm::server::router::{spawn_health_checker, RouterConfig, RouterState};
 use convcotm::server::{HttpServer, ServerConfig, ServerState};
 use convcotm::tm::{Engine, Params, Trainer};
 use convcotm::util::fault::{self, FaultPlan};
@@ -50,6 +51,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
         Some("power") => cmd_power(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("info") => cmd_info(&args),
@@ -67,7 +69,7 @@ fn main() {
 fn print_usage() {
     println!(
         "convcotm — ConvCoTM accelerator reproduction\n\n\
-         USAGE: convcotm <train|eval|serve|power|inspect|info> [--flags]\n\n\
+         USAGE: convcotm <train|eval|serve|route|power|inspect|info> [--flags]\n\n\
          train  --dataset mnist|fmnist|kmnist --geometry G --n-train N --n-test N --epochs E --seed S --out FILE\n\
                 --threads N (data-parallel engine; bit-identical for any N)\n\
                 --checkpoint-every E --resume FILE.ckpt (v3 resumable checkpoints)\n\
@@ -77,10 +79,16 @@ fn print_usage() {
          serve  --model NAME=FILE [--model NAME=FILE ...] [--manifest FILE] --shards N --queue-capacity C\n\
                 (repeatable --model / --manifest / --shards selects the sharded registry pool)\n\
          serve  --listen ADDR[:PORT] --http-workers N [pool flags as above]\n\
-                (resident HTTP front door: POST /v1/classify, GET /healthz, GET /metrics,\n\
-                 POST /admin/models, POST /admin/shutdown — see DESIGN.md \u{a7}10)\n\
+                (resident event-driven HTTP front door: POST /v1/classify, GET /v1/models,\n\
+                 GET /healthz, GET /metrics, POST /v1/admin/models, POST /v1/admin/shutdown\n\
+                 — the full v1 surface is documented in API.md; DESIGN.md \u{a7}10/\u{a7}13)\n\
                 --deadline-ms N (default response deadline; per-request deadline_ms overrides)\n\
                 --fault-plan SPEC (deterministic chaos, e.g. seed=42,eval_panic=p0.02 — DESIGN.md \u{a7}12)\n\
+         route  --listen ADDR[:PORT] --replica ADDR [--replica ADDR ...] --http-workers N\n\
+                (one process fronting N serve replicas: rendezvous hashing on the model id,\n\
+                 /healthz-driven failover, per-replica caps — API.md, DESIGN.md \u{a7}13)\n\
+                --replica-outstanding N (per-replica in-flight cap, default 256)\n\
+                --health-interval-ms N (replica probe period, default 500)\n\
          power  --model FILE [--vdd V --freq HZ]\n\
          info   [--geometry G]\n\n\
          Geometries: asic (28x10s1, default), cifar10 (32x10s1), or SIDExWINDOW[sSTRIDE].\n\
@@ -595,8 +603,8 @@ fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
         names.join(", ")
     );
     println!(
-        "endpoints: POST /v1/classify · GET /healthz · GET /metrics · \
-         POST /admin/models · POST /admin/shutdown"
+        "endpoints: POST /v1/classify · GET /v1/models · GET /healthz · GET /metrics · \
+         POST /v1/admin/models · POST /v1/admin/shutdown (see API.md)"
     );
     // Resident until an admin shutdown flips the drain flag.
     server.join();
@@ -610,6 +618,60 @@ fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
     };
     println!("drained after {} request(s); final metrics:", snap.requests);
     println!("{}", snap.to_json().to_string_pretty());
+    Ok(())
+}
+
+/// `route --listen ADDR --replica ADDR...`: the replica tier's front
+/// door. The same event-driven HTTP server as `serve --listen`, but the
+/// `App` behind it forwards by rendezvous hashing on the model id to N
+/// `serve` replicas, with `/healthz`-probe failover and per-replica
+/// outstanding caps (`server::router`).
+fn cmd_route(args: &Args) -> anyhow::Result<()> {
+    let replicas: Vec<String> = args.get_all("replica").to_vec();
+    let http_workers = args.get_usize("http-workers", 4).map_err(anyhow::Error::msg)?;
+    let outstanding_cap = args
+        .get_usize("replica-outstanding", 256)
+        .map_err(anyhow::Error::msg)?;
+    let health_ms = args
+        .get_usize("health-interval-ms", 500)
+        .map_err(anyhow::Error::msg)?;
+    let state = RouterState::new(RouterConfig {
+        replicas,
+        outstanding_cap,
+        health_interval: Duration::from_millis(health_ms as u64),
+        ..RouterConfig::default()
+    })?;
+    let cfg = ServerConfig {
+        addr: args.get_or("listen", "127.0.0.1:0"),
+        http_workers,
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state))?;
+    let health = spawn_health_checker(Arc::clone(&state));
+    println!(
+        "routing on http://{} — {} http worker(s) over {} replica(s): {}",
+        server.local_addr(),
+        http_workers,
+        state.replicas.len(),
+        state
+            .replicas
+            .iter()
+            .map(|r| r.addr.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!(
+        "endpoints: POST /v1/classify · GET /v1/models · GET /healthz · GET /metrics · \
+         POST /v1/admin/models · POST /v1/admin/shutdown (see API.md)"
+    );
+    server.join();
+    let _ = health.join();
+    let forwarded: u64 = state
+        .replicas
+        .iter()
+        .map(|r| r.forwarded.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    println!("drained after {forwarded} forwarded request(s)");
     Ok(())
 }
 

@@ -56,7 +56,38 @@ pub fn metrics(state: &ServerState) -> Response {
     Response::json(200, &snapshot)
 }
 
-/// `POST /admin/models` — apply a manifest body to the live registry.
+/// `GET /v1/models` — the read-only serving inventory: every loaded
+/// model's name, version and patch geometry, plus the pool's shard
+/// health. A single-anonymous-backend server (no registry) answers with
+/// an empty list rather than an error — the route reads the same either
+/// way, and the router's fan-out can merge it without special-casing.
+pub fn list_models(state: &ServerState) -> Response {
+    let models = match &state.registry {
+        Some(r) => Json::arr(r.names().into_iter().filter_map(|name| {
+            let entry = r.get(&name)?;
+            Some(Json::obj([
+                ("name", Json::str(entry.name.clone())),
+                ("version", Json::num(entry.version as f64)),
+                ("geometry", Json::str(entry.plan.geometry().to_string())),
+            ]))
+        })),
+        None => Json::Arr(Vec::new()),
+    };
+    let health = state.coord.shard_health();
+    Response::json(
+        200,
+        &Json::obj([
+            ("models", models),
+            ("shards", Json::num(state.coord.shard_count() as f64)),
+            (
+                "shard_health",
+                Json::arr(health.iter().map(|h| Json::str(h.name()))),
+            ),
+        ]),
+    )
+}
+
+/// `POST /v1/admin/models` — apply a manifest body to the live registry.
 ///
 /// The body is the same `name = path` format as a serving manifest file
 /// (`model_io::read_manifest`), with one addition: the path `-` evicts
@@ -73,21 +104,22 @@ pub fn metrics(state: &ServerState) -> Response {
 /// [`ModelRegistry::publish`]: crate::coordinator::ModelRegistry::publish
 pub fn models(state: &ServerState, req: &Request) -> Response {
     let Some(registry) = &state.registry else {
-        return Response::error(
+        return Response::fail(
             409,
+            "no_registry",
             "this server fronts a single anonymous backend; model administration \
              requires a registry pool (serve with --model NAME=PATH / --manifest)",
         );
     };
     let Ok(text) = std::str::from_utf8(&req.body) else {
-        return Response::error(400, "manifest body is not UTF-8");
+        return Response::fail(400, "bad_manifest", "manifest body is not UTF-8");
     };
     let entries = match model_io::parse_manifest(text, "request body") {
         Ok(entries) => entries,
-        Err(e) => return Response::error(400, &e.to_string()),
+        Err(e) => return Response::fail(400, "bad_manifest", &e.to_string()),
     };
     if entries.is_empty() {
-        return Response::error(400, "manifest body names no models");
+        return Response::fail(400, "bad_manifest", "manifest body names no models");
     }
     let mut published: Vec<(String, u64)> = Vec::new();
     let mut evicted: Vec<String> = Vec::new();
@@ -101,8 +133,9 @@ pub fn models(state: &ServerState, req: &Request) -> Response {
     for (name, path) in entries {
         if path == "-" {
             if registry.evict(&name).is_none() {
-                return Response::error(
+                return Response::fail(
                     404,
+                    "model_not_found",
                     &format!(
                         "cannot evict '{name}': not loaded {}",
                         applied_so_far(&published, &evicted)
@@ -115,8 +148,9 @@ pub fn models(state: &ServerState, req: &Request) -> Response {
         let model = match model_io::load_file_auto(&PathBuf::from(&path)) {
             Ok(m) => m,
             Err(e) => {
-                return Response::error(
+                return Response::fail(
                     400,
+                    "bad_manifest",
                     &format!("'{name}': {e} {}", applied_so_far(&published, &evicted)),
                 );
             }
@@ -124,8 +158,9 @@ pub fn models(state: &ServerState, req: &Request) -> Response {
         match registry.publish(&name, model) {
             Ok(entry) => published.push((entry.name.clone(), entry.version)),
             Err(e) => {
-                return Response::error(
+                return Response::fail(
                     400,
+                    "bad_manifest",
                     &format!("'{name}': {e} {}", applied_so_far(&published, &evicted)),
                 );
             }
@@ -144,7 +179,7 @@ pub fn models(state: &ServerState, req: &Request) -> Response {
     Response::json(200, &body)
 }
 
-/// `POST /admin/shutdown` — begin the drain and confirm. Ordering: the
+/// `POST /v1/admin/shutdown` — begin the drain and confirm. Ordering: the
 /// flag flips before the response is written, the acceptor stops within
 /// its poll interval, every in-flight request finishes, keep-alive
 /// connections close after their current response, workers join. The

@@ -98,6 +98,19 @@ impl HttpError {
             HttpError::Io(_) => None,
         }
     }
+
+    /// The stable envelope code ([`ERROR_CODES`]) this failure maps to.
+    pub fn code(&self) -> &'static str {
+        match self {
+            HttpError::Bad(_) => "bad_request",
+            HttpError::HeadTooLarge(_) => "head_too_large",
+            HttpError::BodyTooLarge { .. } => "body_too_large",
+            HttpError::Version(_) => "unsupported_version",
+            HttpError::NotImplemented(_) => "not_implemented",
+            HttpError::Timeout => "request_timeout",
+            HttpError::Io(_) => "internal",
+        }
+    }
 }
 
 /// One parsed request. Header names are lower-cased at parse time.
@@ -262,71 +275,23 @@ impl<S: Read> HttpConn<S> {
     /// between requests (the peer is done). Errors leave the connection
     /// unusable for further requests: answer [`HttpError::status`] with
     /// `Connection: close` and drop it.
+    ///
+    /// This is the blocking driver around [`try_parse_request`] — the
+    /// event loop calls the incremental parser directly after each
+    /// non-blocking read instead.
     pub fn read_request(&mut self, limits: &Limits) -> Result<Option<Request>, HttpError> {
         let deadline = std::time::Instant::now() + limits.max_message_time;
-        let Some(head_end) = self.buffer_head(limits.max_head_bytes, deadline)? else {
-            return Ok(None);
-        };
-        let head = std::str::from_utf8(&self.buf[..head_end])
-            .map_err(|_| HttpError::Bad("request head is not UTF-8".into()))?;
-        let (request_line, header_block) = match head.split_once("\r\n") {
-            Some((rl, rest)) => (rl, rest),
-            None => (head, ""),
-        };
-        let mut parts = request_line.split(' ');
-        let method = parts.next().unwrap_or("");
-        let target = parts.next().unwrap_or("");
-        let version = parts.next().unwrap_or("");
-        if method.is_empty() || target.is_empty() || parts.next().is_some() {
-            return Err(HttpError::Bad(format!(
-                "bad request line '{}'",
-                truncate_for_log(request_line)
-            )));
+        loop {
+            if let Some(req) = try_parse_request(&mut self.buf, limits)? {
+                return Ok(Some(req));
+            }
+            if self.fill_by(deadline)? == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::Bad("connection closed mid-request".into()));
+            }
         }
-        if !method.bytes().all(|b| b.is_ascii_alphabetic()) {
-            return Err(HttpError::Bad(format!(
-                "bad method '{}'",
-                truncate_for_log(method)
-            )));
-        }
-        let http11 = match version {
-            "HTTP/1.1" => true,
-            "HTTP/1.0" => false,
-            other => return Err(HttpError::Version(truncate_for_log(other))),
-        };
-        if !target.starts_with('/') {
-            return Err(HttpError::Bad(format!(
-                "request target '{}' must be origin-form (start with '/')",
-                truncate_for_log(target)
-            )));
-        }
-        let headers = parse_headers(header_block)?;
-
-        // Connection semantics before the body, so even a body-less parse
-        // error can honour the close request.
-        let conn_header = header_lookup(&headers, "connection").unwrap_or("");
-        let keep_alive = if http11 {
-            !conn_header.eq_ignore_ascii_case("close")
-        } else {
-            conn_header.eq_ignore_ascii_case("keep-alive")
-        };
-
-        let body_len = body_length(&headers, limits)?;
-
-        let (method, target) = (method.to_string(), target.to_string());
-        let (path, query) = match target.split_once('?') {
-            Some((p, q)) => (p.to_string(), Some(q.to_string())),
-            None => (target, None),
-        };
-        let body = self.take_body(head_end, body_len, deadline)?;
-        Ok(Some(Request {
-            method,
-            path,
-            query,
-            headers,
-            body,
-            keep_alive,
-        }))
     }
 
     /// Client side: parse the next response. Same caps and buffering rules
@@ -363,6 +328,97 @@ impl<S: Read> HttpConn<S> {
             body,
         }))
     }
+}
+
+/// Incremental request parse: try to take one complete request off the
+/// front of `buf`. `Ok(None)` means "need more bytes" (the caps have
+/// already been enforced against what is buffered and against the declared
+/// `Content-Length`); `Ok(Some)` consumed the request's bytes, leaving any
+/// pipelined remainder in place; `Err` is fatal for the connection.
+///
+/// Pure buffer-in/request-out so it serves both I/O models: the blocking
+/// [`HttpConn::read_request`] loop (clients, tests) and the event loop's
+/// read handler (`server::poll`), which calls it after every readiness-
+/// driven read and parks the connection when it returns `Ok(None)`.
+pub fn try_parse_request(
+    buf: &mut Vec<u8>,
+    limits: &Limits,
+) -> Result<Option<Request>, HttpError> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > limits.max_head_bytes {
+            return Err(HttpError::HeadTooLarge(limits.max_head_bytes));
+        }
+        return Ok(None);
+    };
+    if head_end > limits.max_head_bytes {
+        return Err(HttpError::HeadTooLarge(limits.max_head_bytes));
+    }
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::Bad("request head is not UTF-8".into()))?;
+    let (request_line, header_block) = match head.split_once("\r\n") {
+        Some((rl, rest)) => (rl, rest),
+        None => (head, ""),
+    };
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || parts.next().is_some() {
+        return Err(HttpError::Bad(format!(
+            "bad request line '{}'",
+            truncate_for_log(request_line)
+        )));
+    }
+    if !method.bytes().all(|b| b.is_ascii_alphabetic()) {
+        return Err(HttpError::Bad(format!(
+            "bad method '{}'",
+            truncate_for_log(method)
+        )));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => return Err(HttpError::Version(truncate_for_log(other))),
+    };
+    if !target.starts_with('/') {
+        return Err(HttpError::Bad(format!(
+            "request target '{}' must be origin-form (start with '/')",
+            truncate_for_log(target)
+        )));
+    }
+    let headers = parse_headers(header_block)?;
+
+    // Connection semantics before the body, so even a body-less parse
+    // error can honour the close request.
+    let conn_header = header_lookup(&headers, "connection").unwrap_or("");
+    let keep_alive = if http11 {
+        !conn_header.eq_ignore_ascii_case("close")
+    } else {
+        conn_header.eq_ignore_ascii_case("keep-alive")
+    };
+
+    // 413 fires off the declared length alone, before the body arrives.
+    let body_len = body_length(&headers, limits)?;
+    let body_start = head_end + 4;
+    if buf.len() < body_start + body_len {
+        return Ok(None);
+    }
+
+    let (method, target) = (method.to_string(), target.to_string());
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target, None),
+    };
+    let body = buf[body_start..body_start + body_len].to_vec();
+    buf.drain(..body_start + body_len);
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+        headers,
+        body,
+        keep_alive,
+    }))
 }
 
 /// Declared body length, validated against the caps *before* any body
@@ -469,10 +525,28 @@ impl Response {
         }
     }
 
-    /// A `{"error": msg}` JSON body with the given status.
-    pub fn error(status: u16, msg: &str) -> Response {
-        let body = crate::util::Json::obj([("error", crate::util::Json::str(msg))]);
-        Response::json(status, &body)
+    /// The uniform v1 error envelope: `{"error": {"code", "message"}}`.
+    /// `code` must come from [`ERROR_CODES`] — the stable, documented
+    /// inventory that clients switch on (`message` is human-oriented and
+    /// free to change).
+    pub fn fail(status: u16, code: &str, msg: &str) -> Response {
+        debug_assert!(
+            ERROR_CODES.iter().any(|(c, s, _)| *c == code && *s == status),
+            "error code '{code}'/{status} is not in ERROR_CODES"
+        );
+        Response::json(status, &error_body(code, msg))
+    }
+
+    /// [`Response::fail`] plus a retry hint, surfaced twice: as
+    /// `retry_after_ms` inside the envelope (machine clients) and as a
+    /// whole-seconds `Retry-After` header (generic HTTP tooling).
+    pub fn fail_retry(status: u16, code: &str, msg: &str, retry_after_ms: u64) -> Response {
+        debug_assert!(
+            ERROR_CODES.iter().any(|(c, s, _)| *c == code && *s == status),
+            "error code '{code}'/{status} is not in ERROR_CODES"
+        );
+        let resp = Response::json(status, &error_body_retry(code, msg, retry_after_ms));
+        resp.with_header("retry-after", &retry_after_ms.div_ceil(1000).max(1).to_string())
     }
 
     pub fn with_header(mut self, name: &str, value: &str) -> Response {
@@ -524,10 +598,60 @@ pub fn reason(status: u16) -> &'static str {
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
+        502 => "Bad Gateway",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         505 => "HTTP Version Not Supported",
         _ => "",
     }
+}
+
+/// The stable error-code inventory: `(code, status, meaning)`. Every
+/// non-2xx body (and every failed per-image batch slot) carries exactly
+/// one of these under `error.code`; the strings are API surface and must
+/// never be renamed, only added to. `ci/check_api.py` diffs this table
+/// against the one documented in `API.md`.
+pub const ERROR_CODES: &[(&str, u16, &str)] = &[
+    ("bad_request", 400, "malformed HTTP or JSON the server cannot act on"),
+    ("bad_geometry", 400, "image size does not match the served model's geometry"),
+    ("bad_manifest", 400, "admin manifest body failed to parse, load or publish"),
+    ("not_found", 404, "no such endpoint"),
+    ("model_not_found", 404, "the named model is not loaded"),
+    ("method_not_allowed", 405, "endpoint exists but not for this method (see Allow)"),
+    ("request_timeout", 408, "the request stalled mid-transfer (slow-loris guard)"),
+    ("no_registry", 409, "model administration requires a registry pool"),
+    ("body_too_large", 413, "declared Content-Length exceeds the body cap"),
+    ("head_too_large", 431, "request head exceeds the head cap"),
+    ("internal", 500, "unexpected server-side failure"),
+    ("not_implemented", 501, "unsupported transfer coding (chunked)"),
+    ("replica_unavailable", 502, "route mode: no alive replica could answer"),
+    ("overloaded", 503, "bounded queues are full; honor Retry-After"),
+    ("shard_panicked", 503, "the evaluating shard died mid-request; safe to retry"),
+    ("deadline_exceeded", 504, "the request's deadline expired before the pool answered"),
+    ("unsupported_version", 505, "only HTTP/1.0 and HTTP/1.1 are spoken"),
+];
+
+/// The envelope body every error response shares:
+/// `{"error": {"code": "<stable>", "message": "<human>"}}`.
+pub fn error_body(code: &str, msg: &str) -> crate::util::Json {
+    use crate::util::Json;
+    Json::obj([(
+        "error",
+        Json::obj([("code", Json::str(code)), ("message", Json::str(msg))]),
+    )])
+}
+
+/// [`error_body`] with the machine-readable retry hint.
+pub fn error_body_retry(code: &str, msg: &str, retry_after_ms: u64) -> crate::util::Json {
+    use crate::util::Json;
+    Json::obj([(
+        "error",
+        Json::obj([
+            ("code", Json::str(code)),
+            ("message", Json::str(msg)),
+            ("retry_after_ms", Json::num(retry_after_ms as f64)),
+        ]),
+    )])
 }
 
 /// Client side: serialize a request (used by the load-generator example,
@@ -726,6 +850,73 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(req.body, b"body");
+    }
+
+    #[test]
+    fn incremental_parse_needs_more_then_consumes_exactly_one_request() {
+        let limits = Limits::default();
+        let full = b"POST /a HTTP/1.1\r\ncontent-length: 2\r\n\r\nxyGET /b HTTP/1.1\r\n\r\n";
+        let mut buf = Vec::new();
+        // Feed byte by byte: every prefix short of the first full request
+        // must report "need more" without consuming anything.
+        let first_len = b"POST /a HTTP/1.1\r\ncontent-length: 2\r\n\r\nxy".len();
+        for (i, &b) in full.iter().enumerate() {
+            buf.push(b);
+            let parsed = try_parse_request(&mut buf, &limits).unwrap();
+            if i + 1 < first_len {
+                assert!(parsed.is_none(), "premature parse at {} bytes", i + 1);
+            } else if i + 1 == first_len {
+                let req = parsed.expect("first request complete");
+                assert_eq!((req.path.as_str(), req.body.as_slice()), ("/a", b"xy".as_slice()));
+                assert!(buf.is_empty(), "nothing pipelined yet");
+            }
+        }
+        // The pipelined second request is now fully buffered.
+        let req = try_parse_request(&mut buf, &limits).unwrap().unwrap();
+        assert_eq!(req.path, "/b");
+        assert!(buf.is_empty());
+        assert!(try_parse_request(&mut buf, &limits).unwrap().is_none());
+    }
+
+    #[test]
+    fn fail_builds_the_uniform_envelope() {
+        let resp = Response::fail(404, "not_found", "no such endpoint '/x'");
+        let v = crate::util::Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let err = v.get("error").expect("error object");
+        assert_eq!(err.get("code").and_then(|c| c.as_str()), Some("not_found"));
+        assert_eq!(
+            err.get("message").and_then(|m| m.as_str()),
+            Some("no such endpoint '/x'")
+        );
+        assert!(err.get("retry_after_ms").is_none());
+
+        let resp = Response::fail_retry(503, "overloaded", "queues full", 1500);
+        let v = crate::util::Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let err = v.get("error").unwrap();
+        assert_eq!(err.get("code").and_then(|c| c.as_str()), Some("overloaded"));
+        assert_eq!(
+            err.get("retry_after_ms").and_then(|r| r.as_f64()),
+            Some(1500.0)
+        );
+        // Header is whole seconds, rounded up.
+        assert_eq!(
+            resp.headers.iter().find(|(n, _)| n == "retry-after").map(|(_, v)| v.as_str()),
+            Some("2")
+        );
+    }
+
+    #[test]
+    fn every_error_code_status_has_a_reason_phrase() {
+        for (code, status, _) in ERROR_CODES {
+            assert!(
+                !reason(*status).is_empty(),
+                "status {status} (code '{code}') lacks a reason phrase"
+            );
+            assert!(
+                code.bytes().all(|b| b.is_ascii_lowercase() || b == b'_'),
+                "code '{code}' is not snake_case"
+            );
+        }
     }
 
     #[test]

@@ -1,56 +1,57 @@
 //! The network front door (L4): a dependency-light HTTP/1.1 server over
 //! the shard-pool coordinator — the software counterpart of the chip's AXI
 //! system-bus interface (§VI), scaled from one memory-mapped stream to
-//! keep-alive TCP clients.
+//! thousands of keep-alive TCP clients.
 //!
-//! Std-only by design (`TcpListener` + a sized worker pool; no async
-//! runtime, no HTTP crate): the serving hot path is already thread-per-
-//! shard, so the front door only needs enough concurrency to keep the
-//! shard queues fed, and a bounded connection-worker pool does that with
-//! backpressure the same way the coordinator's bounded queues do.
+//! Std-only by design (no async runtime, no HTTP crate): connection I/O is
+//! an event-driven readiness loop (`server::poll` over `util::poll`'s
+//! epoll wrapper, `poll(2)` elsewhere) in **one** thread, and only ready,
+//! fully-parsed requests are handed to the sized worker pool. An idle
+//! keep-alive connection costs a buffer and a slab slot, not a thread —
+//! thread count is O(workers), not O(connections).
 //!
 //! ```text
-//!   clients ──► acceptor ──► [conn queue ≤ P] ──► http workers (N threads)
-//!                 │ full? 503 + Retry-After          │ parse → route
-//!                 ▼                                  ▼
-//!              TcpListener                 Coordinator::try_submit_to
-//!                                          (Overloaded → 503 + Retry-After)
+//!   clients ──► event loop (1 thread: accept · read · parse · write)
+//!                 │ ready request?      [request queue ≤ P] ── full? 503
+//!                 ▼                              │
+//!              slab of conns             http workers (N threads)
+//!              + timeout wheel                   │ dispatch via ROUTES
+//!                                                ▼
+//!                                     Coordinator::try_submit_to
+//!                                     (Overloaded → 503 + Retry-After)
 //! ```
 //!
-//! Endpoints (`server::proto` + `server::admin`):
+//! The same server fronts two [`App`]s: [`ServerState`] (`serve` mode, the
+//! shard pool behind it) and `router::RouterState` (`route` mode, N serve
+//! replicas behind it). Both dispatch through the declarative [`ROUTES`]
+//! table, speak the versioned v1 surface documented in `API.md`, and
+//! answer every failure with the uniform envelope
+//! `{"error": {"code", "message", "retry_after_ms"?}}`.
 //!
-//! - `POST /v1/classify` — single image or batch; booleanized bits or raw
-//!   u8 pixels (booleanized server-side via `data::boolean`); optional
-//!   `model` routed through the registry. Responses carry the predicted
-//!   class, per-class sums and the serving model version.
-//! - `GET  /healthz` — liveness + loaded models.
-//! - `GET  /metrics` — the pool's [`MetricsSnapshot`] JSON plus HTTP-layer
-//!   counters.
-//! - `POST /admin/models` — publish/evict models from a manifest body
-//!   (zero-drop hot-swap via `ModelRegistry::publish`).
-//! - `POST /admin/shutdown` — drain: stop accepting, finish in-flight
-//!   work, join the workers.
-//!
-//! Backpressure end-to-end: the connection queue is bounded (overflow is
-//! answered 503 before a worker is tied up), classify submissions use
-//! `try_submit_to` (a full shard pool sheds 503 + `Retry-After` instead of
-//! blocking an HTTP worker), and reads are bounded twice over — a per-read
-//! socket timeout ([`ServerConfig::read_timeout`]) for quiet peers plus a
-//! whole-message deadline ([`Limits::max_message_time`]) that a slow-loris
-//! peer cannot reset by dripping one byte per interval.
+//! Backpressure and abuse limits survive the redesign end-to-end: the
+//! request queue to the workers is bounded (overflow answers 503 +
+//! `Retry-After` from the loop itself), classify submissions use
+//! `try_submit_to` (full shard pool sheds 503), and reads are bounded
+//! three ways — a mid-message stall deadline ([`ServerConfig::read_timeout`]
+//! → 408, the slow-loris guard), a whole-message deadline
+//! ([`Limits::max_message_time`]) that dripped bytes cannot reset, and an
+//! idle deadline ([`ServerConfig::idle_timeout`]) for quiet keep-alive
+//! connections — all driven by the event loop's timeout wheel instead of
+//! per-socket timeouts.
 
 pub mod admin;
 pub mod http;
+pub mod poll;
 pub mod proto;
+pub mod router;
 
 pub use http::{ClientResponse, HttpConn, HttpError, Limits, Request, Response};
 
 use crate::coordinator::{Coordinator, ModelRegistry};
 use crate::util::Json;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -60,17 +61,26 @@ pub struct ServerConfig {
     /// Bind address (`127.0.0.1:0` picks an ephemeral port — read it back
     /// from [`HttpServer::local_addr`]).
     pub addr: String,
-    /// Connection-worker threads (each drives one connection at a time).
+    /// Request-handling worker threads (each runs one parsed request at a
+    /// time; connection I/O never occupies them).
     pub http_workers: usize,
-    /// Bound on accepted-but-unclaimed connections; overflow is answered
-    /// `503` + `Retry-After` without tying up a worker.
+    /// Bound on parsed-but-unclaimed requests queued to the workers;
+    /// overflow is answered `503` + `Retry-After` by the event loop
+    /// without tying up a worker.
     pub max_pending_conns: usize,
-    /// Request head/body size caps.
+    /// Cap on concurrently open connections (slab size); beyond it new
+    /// accepts are answered a direct `503` and closed.
+    pub max_conns: usize,
+    /// Request head/body size caps + whole-message deadline.
     pub limits: Limits,
-    /// Socket read timeout: the longest a slow (or idle keep-alive) peer
-    /// can hold a worker between bytes. Also bounds how long a drain waits
-    /// on idle connections.
+    /// Mid-message stall deadline: the longest a peer that has started a
+    /// request may go without sending another byte before the connection
+    /// is answered `408` (slow-loris guard).
     pub read_timeout: Duration,
+    /// How long a quiet keep-alive connection (no request in flight) is
+    /// kept before being closed silently. This is what lets thousands of
+    /// idle connections stay parked while `read_timeout` stays tight.
+    pub idle_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -79,8 +89,10 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:0".to_string(),
             http_workers: 4,
             max_pending_conns: 64,
+            max_conns: 8192,
             limits: Limits::default(),
             read_timeout: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -91,7 +103,7 @@ impl Default for ServerConfig {
 #[derive(Default)]
 pub struct HttpStats {
     pub connections: AtomicU64,
-    /// Connections shed at the acceptor (connection queue full).
+    /// Connections shed at accept time (connection slab full).
     pub rejected_conns: AtomicU64,
     pub requests: AtomicU64,
     pub responses_2xx: AtomicU64,
@@ -102,8 +114,10 @@ pub struct HttpStats {
     /// Classify requests answered `504` because their deadline expired
     /// before the pool responded (typed `DeadlineExceeded`).
     pub deadline_504: AtomicU64,
-    /// Connections dropped mid-request on a read timeout (slow-loris).
+    /// Connections answered `408` after stalling mid-request (slow-loris).
     pub read_timeouts: AtomicU64,
+    /// Parsed requests shed because the worker request queue was full.
+    pub busy_503: AtomicU64,
 }
 
 impl HttpStats {
@@ -128,15 +142,143 @@ impl HttpStats {
             ("shed_503", n(&self.shed_503)),
             ("deadline_504", n(&self.deadline_504)),
             ("read_timeouts", n(&self.read_timeouts)),
+            ("busy_503", n(&self.busy_503)),
         ])
     }
 }
 
-/// Everything a connection worker needs, shared via `Arc`.
+/// What the front door serves: `serve` mode's [`ServerState`] or `route`
+/// mode's [`router::RouterState`]. The event loop and workers only see
+/// this trait — the whole I/O machine is application-agnostic.
+pub trait App: Send + Sync + 'static {
+    /// Handle one fully-parsed request (runs on a worker thread).
+    fn handle(&self, req: &Request) -> Response;
+    fn stats(&self) -> &HttpStats;
+    /// Flip the drain flag (idempotent).
+    fn request_shutdown(&self);
+    fn shutdown_requested(&self) -> bool;
+}
+
+/// How `route` mode treats an endpoint (the "routable vs local" column of
+/// the route table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteKind {
+    /// Answered by the receiving process itself (health, metrics, drain).
+    Local,
+    /// Forwarded to the one replica that owns the request's model
+    /// (rendezvous hashing).
+    ForwardOne,
+    /// Fanned out to every alive replica (deploys, model listings).
+    ForwardAll,
+}
+
+/// One row of the declarative route table.
+#[derive(Debug)]
+pub struct Route {
+    pub method: &'static str,
+    /// Canonical (versioned) path.
+    pub path: &'static str,
+    /// Deprecated spellings that still answer, plus a `Deprecation: true`
+    /// header (see API.md's deprecation policy).
+    pub aliases: &'static [&'static str],
+    pub kind: RouteKind,
+}
+
+/// The entire v1 surface, in one place. `serve` and `route` mode dispatch
+/// from this same table ([`match_route`]), and `ci/check_api.py` diffs it
+/// against the endpoint reference in `API.md`.
+pub const ROUTES: &[Route] = &[
+    Route {
+        method: "POST",
+        path: "/v1/classify",
+        aliases: &[],
+        kind: RouteKind::ForwardOne,
+    },
+    Route {
+        method: "GET",
+        path: "/v1/models",
+        aliases: &[],
+        kind: RouteKind::ForwardAll,
+    },
+    Route {
+        method: "GET",
+        path: "/healthz",
+        aliases: &[],
+        kind: RouteKind::Local,
+    },
+    Route {
+        method: "GET",
+        path: "/metrics",
+        aliases: &[],
+        kind: RouteKind::Local,
+    },
+    Route {
+        method: "POST",
+        path: "/v1/admin/models",
+        aliases: &["/admin/models"],
+        kind: RouteKind::ForwardAll,
+    },
+    Route {
+        method: "POST",
+        path: "/v1/admin/shutdown",
+        aliases: &["/admin/shutdown"],
+        kind: RouteKind::Local,
+    },
+];
+
+/// A successful route-table lookup.
+pub struct RouteMatch {
+    pub route: &'static Route,
+    /// The request used a deprecated alias path: answer normally but add
+    /// `Deprecation: true`.
+    pub deprecated: bool,
+}
+
+/// Look up `(method, path)` in [`ROUTES`]. `Err` carries the ready-made
+/// `404` (unknown path) or `405` + `Allow` (known path, wrong method)
+/// envelope response.
+pub fn match_route(method: &str, path: &str) -> Result<RouteMatch, Response> {
+    let hit = ROUTES.iter().find_map(|r| {
+        if r.path == path {
+            Some((r, false))
+        } else if r.aliases.contains(&path) {
+            Some((r, true))
+        } else {
+            None
+        }
+    });
+    let Some((route, deprecated)) = hit else {
+        return Err(Response::fail(
+            404,
+            "not_found",
+            &format!("no such endpoint '{path}'"),
+        ));
+    };
+    if method != route.method {
+        return Err(Response::fail(
+            405,
+            "method_not_allowed",
+            &format!("{path} requires {}, got {method}", route.method),
+        )
+        .with_header("allow", route.method));
+    }
+    Ok(RouteMatch { route, deprecated })
+}
+
+/// Stamp the deprecation header on responses to alias-path requests.
+fn finish_dispatch(resp: Response, deprecated: bool) -> Response {
+    if deprecated {
+        resp.with_header("deprecation", "true")
+    } else {
+        resp
+    }
+}
+
+/// Everything a request worker needs in `serve` mode, shared via `Arc`.
 pub struct ServerState {
     pub coord: Arc<Coordinator>,
     /// The pool's registry (None when fronting a single anonymous
-    /// backend — `/admin/models` then answers 409).
+    /// backend — model administration then answers 409).
     pub registry: Option<Arc<ModelRegistry>>,
     pub stats: HttpStats,
     shutdown: AtomicBool,
@@ -155,8 +297,8 @@ impl ServerState {
         })
     }
 
-    /// Begin the drain: the acceptor stops accepting, keep-alive
-    /// connections close after their in-flight request, workers join.
+    /// Begin the drain: the event loop stops accepting, in-flight requests
+    /// finish, keep-alive connections close after their current response.
     pub fn request_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
     }
@@ -166,48 +308,64 @@ impl ServerState {
     }
 }
 
+impl App for ServerState {
+    fn handle(&self, req: &Request) -> Response {
+        let m = match match_route(&req.method, &req.path) {
+            Ok(m) => m,
+            Err(resp) => return resp,
+        };
+        let resp = match m.route.path {
+            "/v1/classify" => proto::classify(self, req),
+            "/v1/models" => admin::list_models(self),
+            "/healthz" => admin::healthz(self),
+            "/metrics" => admin::metrics(self),
+            "/v1/admin/models" => admin::models(self, req),
+            "/v1/admin/shutdown" => admin::shutdown(self),
+            other => Response::fail(404, "not_found", &format!("no such endpoint '{other}'")),
+        };
+        finish_dispatch(resp, m.deprecated)
+    }
+
+    fn stats(&self) -> &HttpStats {
+        &self.stats
+    }
+
+    fn request_shutdown(&self) {
+        ServerState::request_shutdown(self);
+    }
+
+    fn shutdown_requested(&self) -> bool {
+        ServerState::shutdown_requested(self)
+    }
+}
+
 /// A running front door. Dropping it (or calling [`HttpServer::join`]
 /// after a shutdown request) drains and joins every thread.
 pub struct HttpServer {
     local_addr: SocketAddr,
-    state: Arc<ServerState>,
-    acceptor: Option<JoinHandle<()>>,
+    app: Arc<dyn App>,
+    waker: crate::util::poll::Waker,
+    event_loop: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl HttpServer {
-    /// Bind and start the acceptor + worker pool. The server runs until
-    /// `POST /admin/shutdown` or [`ServerState::request_shutdown`].
-    pub fn start(cfg: &ServerConfig, state: Arc<ServerState>) -> anyhow::Result<HttpServer> {
-        let listener = TcpListener::bind(&cfg.addr)
+    /// Bind and start the event loop + worker pool over any [`App`]. The
+    /// server runs until `POST /v1/admin/shutdown` or
+    /// [`HttpServer::request_shutdown`].
+    pub fn start<A: App>(cfg: &ServerConfig, app: Arc<A>) -> anyhow::Result<HttpServer> {
+        let listener = std::net::TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("cannot listen on {}: {e}", cfg.addr))?;
-        // Non-blocking accept so the acceptor can observe the shutdown
-        // flag without a wake-up connection.
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
-        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.max_pending_conns.max(1));
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let workers: Vec<JoinHandle<()>> = (0..cfg.http_workers.max(1))
-            .map(|i| {
-                let rx = Arc::clone(&conn_rx);
-                let st = Arc::clone(&state);
-                let (limits, read_timeout) = (cfg.limits, cfg.read_timeout);
-                std::thread::Builder::new()
-                    .name(format!("convcotm-http-{i}"))
-                    .spawn(move || worker_loop(&rx, &st, &limits, read_timeout))
-                    .expect("spawn http worker")
-            })
-            .collect();
-        let st = Arc::clone(&state);
-        let acceptor = std::thread::Builder::new()
-            .name("convcotm-http-acceptor".into())
-            .spawn(move || acceptor_loop(&listener, &conn_tx, &st))
-            .expect("spawn http acceptor");
+        let app: Arc<dyn App> = app;
+        let handle = poll::start(listener, cfg, Arc::clone(&app))?;
         Ok(HttpServer {
             local_addr,
-            state,
-            acceptor: Some(acceptor),
-            workers,
+            app,
+            waker: handle.waker,
+            event_loop: Some(handle.event_loop),
+            workers: handle.workers,
         })
     }
 
@@ -216,21 +374,22 @@ impl HttpServer {
         self.local_addr
     }
 
-    /// Programmatic equivalent of `POST /admin/shutdown`.
+    /// Programmatic equivalent of `POST /v1/admin/shutdown`.
     pub fn request_shutdown(&self) {
-        self.state.request_shutdown();
+        self.app.request_shutdown();
+        self.waker.wake();
     }
 
     /// Block until the server drains: waits for a shutdown request, then
-    /// joins the acceptor and every worker. In-flight requests finish;
-    /// idle keep-alive connections close within one read-timeout.
+    /// joins the event loop and every worker. In-flight requests finish;
+    /// idle keep-alive connections close immediately.
     pub fn join(mut self) {
         self.join_inner();
     }
 
     fn join_inner(&mut self) {
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
+        if let Some(el) = self.event_loop.take() {
+            let _ = el.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -242,170 +401,8 @@ impl Drop for HttpServer {
     fn drop(&mut self) {
         // Never leak the listener/worker threads: a dropped server drains
         // exactly like an admin shutdown.
-        self.state.request_shutdown();
+        self.app.request_shutdown();
+        self.waker.wake();
         self.join_inner();
-    }
-}
-
-/// Accept loop: pull connections off the listener into the bounded
-/// connection queue; shed with a direct 503 when the queue is full. Exits
-/// (dropping the queue sender, which lets the workers drain and exit) as
-/// soon as shutdown is requested.
-fn acceptor_loop(listener: &TcpListener, conn_tx: &SyncSender<TcpStream>, state: &ServerState) {
-    while !state.shutdown_requested() {
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                state.stats.connections.fetch_add(1, Ordering::Relaxed);
-                match conn_tx.try_send(stream) {
-                    Ok(()) => {}
-                    Err(TrySendError::Full(stream)) | Err(TrySendError::Disconnected(stream)) => {
-                        state.stats.rejected_conns.fetch_add(1, Ordering::Relaxed);
-                        state.stats.count_response(503);
-                        reject_connection(stream);
-                    }
-                }
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(_) => {
-                // Transient accept failure (EMFILE, aborted handshake…):
-                // back off briefly instead of spinning.
-                std::thread::sleep(Duration::from_millis(5));
-            }
-        }
-    }
-}
-
-/// Best-effort 503 to a connection the queue has no room for.
-fn reject_connection(mut stream: TcpStream) {
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-    let resp = Response::error(503, "connection queue full, retry shortly")
-        .with_header("retry-after", "1")
-        .closing();
-    let _ = resp.write_to(&mut stream, false);
-    drain_and_close(&mut stream);
-}
-
-/// Close politely after answering an error on a connection that may still
-/// be sending: half-close the write side, then discard (bounded) whatever
-/// the peer has in flight. Dropping the socket with unread bytes in the
-/// receive queue makes the kernel send RST, which destroys the error
-/// response before the client reads it — a 413 would surface as
-/// "connection reset" instead of a status. Draining is capped (1 MiB /
-/// 500 ms) so a hostile sender cannot pin the worker here either.
-fn drain_and_close(stream: &mut TcpStream) {
-    use std::io::Read as _;
-    let _ = stream.shutdown(std::net::Shutdown::Write);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
-    let mut sink = [0u8; 4096];
-    for _ in 0..256 {
-        match stream.read(&mut sink) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
-        }
-    }
-}
-
-/// Worker loop: claim one connection at a time off the shared queue and
-/// drive its keep-alive request cycle to completion.
-fn worker_loop(
-    rx: &Mutex<Receiver<TcpStream>>,
-    state: &ServerState,
-    limits: &Limits,
-    read_timeout: Duration,
-) {
-    loop {
-        // Hold the lock only for the dequeue; `recv` errors once the
-        // acceptor has exited and the queue is drained — that is the
-        // worker's drain-complete signal.
-        let stream = match rx.lock() {
-            Ok(guard) => match guard.recv() {
-                Ok(s) => s,
-                Err(_) => return,
-            },
-            Err(_) => return,
-        };
-        handle_connection(stream, state, limits, read_timeout);
-    }
-}
-
-/// Drive one connection: parse → route → respond, repeating while the
-/// client keeps the connection alive and no shutdown is in progress.
-fn handle_connection(
-    stream: TcpStream,
-    state: &ServerState,
-    limits: &Limits,
-    read_timeout: Duration,
-) {
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_read_timeout(Some(read_timeout));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let _ = stream.set_nodelay(true);
-    let mut conn = HttpConn::new(stream);
-    loop {
-        match conn.read_request(limits) {
-            Ok(None) => break, // peer closed cleanly between requests
-            Ok(Some(req)) => {
-                state.stats.requests.fetch_add(1, Ordering::Relaxed);
-                let resp = route(&req, state);
-                // The drain closes keep-alive connections after the
-                // response in flight (never mid-response).
-                let keep = req.keep_alive() && !resp.close && !state.shutdown_requested();
-                state.stats.count_response(resp.status);
-                if resp.write_to(conn.get_mut(), keep).is_err() || !keep {
-                    break;
-                }
-            }
-            Err(e) => {
-                if matches!(e, HttpError::Timeout) {
-                    if conn.pending() == 0 {
-                        // Idle keep-alive connection went quiet — close
-                        // silently; nothing was in flight.
-                        break;
-                    }
-                    // Bytes arrived and then stalled: slow-loris shape.
-                    state.stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
-                }
-                if let Some(status) = e.status() {
-                    state.stats.count_response(status);
-                    let resp = Response::error(status, &e.to_string()).closing();
-                    let _ = resp.write_to(conn.get_mut(), false);
-                    // The peer may still be mid-send (oversized body, slow
-                    // drip): drain before dropping so the error response is
-                    // not RST away with the unread bytes.
-                    drain_and_close(conn.get_mut());
-                }
-                break;
-            }
-        }
-    }
-}
-
-/// Dispatch one parsed request. Unknown paths 404; known paths with the
-/// wrong method 405 + `Allow`.
-fn route(req: &Request, state: &ServerState) -> Response {
-    let allowed = match req.path.as_str() {
-        "/v1/classify" | "/admin/models" | "/admin/shutdown" => "POST",
-        "/healthz" | "/metrics" => "GET",
-        _ => {
-            return Response::error(404, &format!("no such endpoint '{}'", req.path));
-        }
-    };
-    if req.method != allowed {
-        return Response::error(
-            405,
-            &format!("{} requires {allowed}, got {}", req.path, req.method),
-        )
-        .with_header("allow", allowed);
-    }
-    match req.path.as_str() {
-        "/v1/classify" => proto::classify(state, req),
-        "/healthz" => admin::healthz(state),
-        "/metrics" => admin::metrics(state),
-        "/admin/models" => admin::models(state, req),
-        "/admin/shutdown" => admin::shutdown(state),
-        _ => unreachable!("path already matched above"),
     }
 }

@@ -1,0 +1,811 @@
+//! The event-driven connection engine behind [`HttpServer`]: one readiness
+//! loop owns every socket; a sized worker pool runs the requests.
+//!
+//! ```text
+//!   epoll wait ──► accept / read / write readiness
+//!       │  read → buffer → http::try_parse_request
+//!       │           complete request? ──try_send──► [job queue ≤ P] ──► workers
+//!       │           queue full? 503 from the loop      (App::handle)
+//!       │                                                   │ serialized bytes
+//!       ◄──────────────── waker + completion channel ───────┘
+//! ```
+//!
+//! Connection state machine (one slab slot each, driven only by readiness
+//! events and the timeout wheel — an idle connection costs zero threads):
+//!
+//! - **Reading** — accumulating bytes; each read attempts an incremental
+//!   parse. Deadlines: `idle_timeout` while no message has started (quiet
+//!   keep-alive), then `read_timeout` per stall and `max_message_time`
+//!   whole-message once bytes arrive (the slow-loris pair → `408`).
+//! - **Busy** — a worker holds the parsed request; read interest is
+//!   removed so pipelined bytes cannot busy-spin the loop, and buffered
+//!   ones wait their turn.
+//! - **Writing** — flushing the serialized response; `EPOLLOUT` only when
+//!   the send buffer pushes back.
+//! - **Closing** — response flushed with `Connection: close`: half-close
+//!   the write side and drain the peer briefly (bounded) so the kernel
+//!   does not RST the error response away with unread request bytes.
+//!
+//! Timers are a lazy binary heap keyed `(deadline, slot, generation)`:
+//! entries are re-validated against the connection's *current* deadline
+//! when they pop (stale generations are skipped), so re-arming is O(log n)
+//! pushes at state transitions only — never per byte.
+
+use super::http::{self, Request, Response};
+use super::{App, ServerConfig};
+use crate::util::poll::{waker_pair, Interest, PollEvent, Poller, Waker};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_BASE: u64 = 2;
+
+/// Flush deadline for a response the peer refuses to read.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Post-close drain grace (mirrors the old `drain_and_close` bound).
+const CLOSE_DRAIN_GRACE: Duration = Duration::from_millis(500);
+/// Busy connections re-arm far out; the coordinator's own deadlines bound
+/// the worker, not the event loop.
+const BUSY_REARM: Duration = Duration::from_secs(3600);
+/// Upper bound on one `wait` so the drain flag is observed promptly even
+/// if a wake is lost.
+const MAX_WAIT: Duration = Duration::from_millis(500);
+/// Per-event read fairness cap: a firehose connection yields after this
+/// many bytes (level-triggered readiness re-fires it).
+const READ_FAIRNESS_BYTES: usize = 64 * 1024;
+
+/// One parsed request on its way to a worker.
+struct Job {
+    slot: usize,
+    gen: u64,
+    req: Request,
+}
+
+/// A serialized response on its way back to the loop.
+struct Completion {
+    slot: usize,
+    gen: u64,
+    bytes: Vec<u8>,
+    keep: bool,
+}
+
+/// What [`start`] hands back to [`HttpServer`].
+pub(crate) struct Handle {
+    pub waker: Waker,
+    pub event_loop: JoinHandle<()>,
+    pub workers: Vec<JoinHandle<()>>,
+}
+
+/// Spawn the event loop + worker pool over an already-bound non-blocking
+/// listener.
+pub(crate) fn start(
+    listener: TcpListener,
+    cfg: &ServerConfig,
+    app: Arc<dyn App>,
+) -> anyhow::Result<Handle> {
+    // Fd budget: every connection is one fd; make the soft limit fit the
+    // slab (best-effort — default soft limits are often 1024).
+    let _ = crate::util::poll::raise_nofile_limit(cfg.max_conns as u64 * 2 + 64);
+    let poller = Poller::new()?;
+    let (waker, waker_rx) = waker_pair()?;
+    poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+    poller.register(waker_rx.as_raw_fd(), TOKEN_WAKER, Interest::READ)?;
+
+    let (job_tx, job_rx) = sync_channel::<Job>(cfg.max_pending_conns.max(1));
+    let (done_tx, done_rx) = channel::<Completion>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+
+    let workers: Vec<JoinHandle<()>> = (0..cfg.http_workers.max(1))
+        .map(|i| {
+            let rx = Arc::clone(&job_rx);
+            let app = Arc::clone(&app);
+            let done = done_tx.clone();
+            let waker = waker.clone();
+            std::thread::Builder::new()
+                .name(format!("convcotm-http-{i}"))
+                .spawn(move || worker_loop(&rx, &app, &done, &waker))
+                .expect("spawn http worker")
+        })
+        .collect();
+    drop(done_tx);
+
+    let mut el = EventLoop {
+        poller,
+        listener,
+        waker_rx,
+        app,
+        limits: cfg.limits,
+        read_timeout: cfg.read_timeout,
+        idle_timeout: cfg.idle_timeout,
+        max_conns: cfg.max_conns.max(1),
+        job_tx,
+        done_rx,
+        conns: Vec::new(),
+        free: Vec::new(),
+        live: 0,
+        next_gen: 0,
+        timers: BinaryHeap::new(),
+        draining: false,
+    };
+    let event_loop = std::thread::Builder::new()
+        .name("convcotm-event-loop".into())
+        .spawn(move || el.run())
+        .expect("spawn event loop");
+    Ok(Handle {
+        waker,
+        event_loop,
+        workers,
+    })
+}
+
+/// Claim parsed requests, run them through the [`App`], hand serialized
+/// responses back. Exits when the loop drops the job sender (drain done).
+fn worker_loop(
+    rx: &Mutex<Receiver<Job>>,
+    app: &Arc<dyn App>,
+    done: &Sender<Completion>,
+    waker: &Waker,
+) {
+    loop {
+        // Hold the lock only for the dequeue; `recv` errors once the
+        // event loop has exited — the worker's drain-complete signal.
+        let job = match rx.lock() {
+            Ok(guard) => match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return,
+            },
+            Err(_) => return,
+        };
+        let resp = app.handle(&job.req);
+        app.stats().count_response(resp.status);
+        // The drain closes keep-alive connections after the response in
+        // flight (never mid-response).
+        let keep = job.req.keep_alive() && !resp.close && !app.shutdown_requested();
+        let mut bytes = Vec::with_capacity(resp.body.len() + 256);
+        let _ = resp.write_to(&mut bytes, keep);
+        if done
+            .send(Completion {
+                slot: job.slot,
+                gen: job.gen,
+                bytes,
+                keep,
+            })
+            .is_err()
+        {
+            return;
+        }
+        waker.wake();
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    Reading,
+    Busy,
+    Writing,
+    Closing,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Unparsed inbound bytes (incremental parse input + pipelined tail).
+    buf: Vec<u8>,
+    /// Serialized response being flushed.
+    out: Vec<u8>,
+    out_pos: usize,
+    state: State,
+    /// Monotone per-request generation: completions and timers carrying a
+    /// stale generation are discarded.
+    gen: u64,
+    keep_after_write: bool,
+    /// When the current state was entered (idle/busy/write/close clocks).
+    since: Instant,
+    /// First byte of the in-progress message (None = between messages).
+    msg_start: Option<Instant>,
+    last_byte: Instant,
+    interest: Interest,
+    peer_eof: bool,
+}
+
+struct EventLoop {
+    poller: Poller,
+    listener: TcpListener,
+    waker_rx: UnixStream,
+    app: Arc<dyn App>,
+    limits: http::Limits,
+    read_timeout: Duration,
+    idle_timeout: Duration,
+    max_conns: usize,
+    job_tx: SyncSender<Job>,
+    done_rx: Receiver<Completion>,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    live: usize,
+    next_gen: u64,
+    /// Lazy timeout wheel: min-heap of (deadline, slot, gen).
+    timers: BinaryHeap<Reverse<(Instant, usize, u64)>>,
+    draining: bool,
+}
+
+impl EventLoop {
+    fn run(&mut self) {
+        let mut events: Vec<PollEvent> = Vec::new();
+        loop {
+            if self.app.shutdown_requested() && !self.draining {
+                self.begin_drain();
+            }
+            if self.draining && self.live == 0 {
+                break;
+            }
+            let timeout = self.next_timeout();
+            if self.poller.wait(&mut events, Some(timeout)).is_err() {
+                // Pathological poller failure: don't spin at 100% CPU.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.drain_waker(),
+                    t => self.conn_event((t - TOKEN_BASE) as usize, ev),
+                }
+            }
+            self.apply_completions();
+            self.expire_timers();
+        }
+        // Dropping self afterwards drops `job_tx`, which is what lets the
+        // workers' `recv` error out and the pool join.
+    }
+
+    /// Stop accepting and close idle connections; everything in flight
+    /// (parsing, busy, writing, closing) finishes under its own deadline.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        let _ = self.poller.deregister(self.listener.as_raw_fd());
+        let idle: Vec<usize> = self
+            .conns
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, c)| match c {
+                Some(c) if c.state == State::Reading && c.buf.is_empty() && c.out.is_empty() => {
+                    Some(slot)
+                }
+                _ => None,
+            })
+            .collect();
+        for slot in idle {
+            self.close_conn(slot);
+        }
+    }
+
+    fn next_timeout(&self) -> Duration {
+        match self.timers.peek() {
+            Some(&Reverse((t, _, _))) => t.saturating_duration_since(Instant::now()).min(MAX_WAIT),
+            None => MAX_WAIT,
+        }
+    }
+
+    /// The connection's current deadline, derived from its state — the
+    /// heap entries are hints; this is the truth they are checked against.
+    fn deadline_of(&self, conn: &Conn) -> Instant {
+        match conn.state {
+            State::Reading => match conn.msg_start {
+                None => conn.since + self.idle_timeout,
+                Some(t0) => {
+                    (conn.last_byte + self.read_timeout).min(t0 + self.limits.max_message_time)
+                }
+            },
+            State::Busy => conn.since + BUSY_REARM,
+            State::Writing => conn.since + WRITE_TIMEOUT,
+            State::Closing => conn.since + CLOSE_DRAIN_GRACE,
+        }
+    }
+
+    fn arm(&mut self, slot: usize) {
+        if let Some(conn) = self.conns.get(slot).and_then(Option::as_ref) {
+            let d = self.deadline_of(conn);
+            self.timers.push(Reverse((d, slot, conn.gen)));
+        }
+    }
+
+    fn expire_timers(&mut self) {
+        let now = Instant::now();
+        while let Some(&Reverse((t, slot, gen))) = self.timers.peek() {
+            if t > now {
+                break;
+            }
+            self.timers.pop();
+            let Some(conn) = self.conns.get(slot).and_then(Option::as_ref) else {
+                continue;
+            };
+            if conn.gen != gen {
+                continue;
+            }
+            let due = self.deadline_of(conn);
+            if due > now {
+                // Deadline moved (bytes arrived, state changed): re-arm at
+                // the real time instead of expiring.
+                self.timers.push(Reverse((due, slot, gen)));
+                continue;
+            }
+            match conn.state {
+                State::Reading => {
+                    if conn.msg_start.is_some() {
+                        // Mid-message stall or whole-message overrun: the
+                        // slow-loris answer.
+                        let stats = self.app.stats();
+                        stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                        stats.count_response(408);
+                        self.enqueue_error(
+                            slot,
+                            408,
+                            "request_timeout",
+                            "timed out reading the request",
+                        );
+                    } else {
+                        // Quiet keep-alive connection: close silently.
+                        self.close_conn(slot);
+                    }
+                }
+                State::Busy => {
+                    self.timers.push(Reverse((now + BUSY_REARM, slot, gen)));
+                }
+                State::Writing | State::Closing => self.close_conn(slot),
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        if self.draining {
+            return;
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    self.app.stats().connections.fetch_add(1, Ordering::Relaxed);
+                    if self.live >= self.max_conns {
+                        let stats = self.app.stats();
+                        stats.rejected_conns.fetch_add(1, Ordering::Relaxed);
+                        stats.count_response(503);
+                        reject_connection(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let now = Instant::now();
+                    self.next_gen += 1;
+                    let conn = Conn {
+                        stream,
+                        buf: Vec::new(),
+                        out: Vec::new(),
+                        out_pos: 0,
+                        state: State::Reading,
+                        gen: self.next_gen,
+                        keep_after_write: false,
+                        since: now,
+                        msg_start: None,
+                        last_byte: now,
+                        interest: Interest::READ,
+                        peer_eof: false,
+                    };
+                    let slot = match self.free.pop() {
+                        Some(s) => s,
+                        None => {
+                            self.conns.push(None);
+                            self.conns.len() - 1
+                        }
+                    };
+                    let fd = conn.stream.as_raw_fd();
+                    if self
+                        .poller
+                        .register(fd, TOKEN_BASE + slot as u64, Interest::READ)
+                        .is_err()
+                    {
+                        self.free.push(slot);
+                        continue;
+                    }
+                    self.conns[slot] = Some(conn);
+                    self.live += 1;
+                    self.arm(slot);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break, // transient (EMFILE, aborted handshake…)
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut sink = [0u8; 256];
+        loop {
+            match (&self.waker_rx).read(&mut sink) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn apply_completions(&mut self) {
+        while let Ok(c) = self.done_rx.try_recv() {
+            let valid = matches!(
+                self.conns.get(c.slot).and_then(Option::as_ref),
+                Some(conn) if conn.gen == c.gen && conn.state == State::Busy
+            );
+            if valid {
+                self.enqueue_response(c.slot, c.bytes, c.keep);
+            }
+        }
+    }
+
+    fn conn_event(&mut self, slot: usize, ev: PollEvent) {
+        let Some(state) = self
+            .conns
+            .get(slot)
+            .and_then(Option::as_ref)
+            .map(|c| c.state)
+        else {
+            return;
+        };
+        if ev.closed {
+            // EPOLLERR/EPOLLHUP: dead both ways; nothing deliverable.
+            self.close_conn(slot);
+            return;
+        }
+        if ev.readable {
+            match state {
+                State::Reading => self.read_ready(slot),
+                State::Closing => self.closing_read(slot),
+                State::Busy | State::Writing => {}
+            }
+        }
+        if ev.writable {
+            let state_now = self
+                .conns
+                .get(slot)
+                .and_then(Option::as_ref)
+                .map(|c| c.state);
+            if matches!(state_now, Some(State::Writing | State::Closing)) {
+                self.flush_ready(slot);
+            }
+        }
+    }
+
+    fn read_ready(&mut self, slot: usize) {
+        let now = Instant::now();
+        let (total, eof, dead) = {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return;
+            };
+            let mut total = 0usize;
+            let mut eof = false;
+            let mut dead = false;
+            let mut chunk = [0u8; 8192];
+            loop {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.buf.extend_from_slice(&chunk[..n]);
+                        total += n;
+                        if total >= READ_FAIRNESS_BYTES {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if total > 0 {
+                conn.last_byte = now;
+                if conn.msg_start.is_none() {
+                    conn.msg_start = Some(now);
+                }
+            }
+            (total, eof, dead)
+        };
+        if dead {
+            self.close_conn(slot);
+            return;
+        }
+        if total > 0 {
+            // A message just started (or progressed): make sure a timer
+            // covers its stall deadline.
+            self.arm(slot);
+            self.try_dispatch(slot);
+        }
+        if eof {
+            let (state, buf_empty, flushed) = {
+                let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                    return;
+                };
+                conn.peer_eof = true;
+                (
+                    conn.state,
+                    conn.buf.is_empty(),
+                    conn.out_pos >= conn.out.len(),
+                )
+            };
+            match state {
+                State::Reading => {
+                    if buf_empty {
+                        // Clean keep-alive close between requests.
+                        self.close_conn(slot);
+                    } else {
+                        self.app.stats().count_response(400);
+                        self.enqueue_error(
+                            slot,
+                            400,
+                            "bad_request",
+                            "connection closed mid-request",
+                        );
+                    }
+                }
+                State::Closing => {
+                    if flushed {
+                        self.close_conn(slot);
+                    }
+                }
+                State::Busy | State::Writing => {}
+            }
+        }
+    }
+
+    /// Try to lift one complete request out of the buffer and hand it to
+    /// the workers. Pipelined follow-ups stay buffered until the response
+    /// cycle returns the connection to `Reading`.
+    fn try_dispatch(&mut self, slot: usize) {
+        let parse = {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return;
+            };
+            if conn.state != State::Reading {
+                return;
+            }
+            http::try_parse_request(&mut conn.buf, &self.limits)
+        };
+        match parse {
+            Ok(None) => {
+                if let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) {
+                    if conn.buf.is_empty() {
+                        conn.msg_start = None;
+                    }
+                }
+            }
+            Ok(Some(req)) => {
+                self.app.stats().requests.fetch_add(1, Ordering::Relaxed);
+                self.next_gen += 1;
+                let gen = self.next_gen;
+                let keep_alive = req.keep_alive();
+                {
+                    let conn = self.conns[slot].as_mut().expect("checked above");
+                    conn.gen = gen;
+                    conn.state = State::Busy;
+                    conn.since = Instant::now();
+                    conn.msg_start = None;
+                }
+                self.set_interest(slot, Interest::NONE);
+                self.arm(slot);
+                match self.job_tx.try_send(Job { slot, gen, req }) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        // Backpressure from the worker queue: answer the
+                        // 503 directly from the loop, keep the connection.
+                        let stats = self.app.stats();
+                        stats.busy_503.fetch_add(1, Ordering::Relaxed);
+                        stats.count_response(503);
+                        let keep = keep_alive && !self.app.shutdown_requested();
+                        let resp = Response::fail_retry(
+                            503,
+                            "overloaded",
+                            "request queue full, retry shortly",
+                            1000,
+                        );
+                        let mut bytes = Vec::with_capacity(256);
+                        let _ = resp.write_to(&mut bytes, keep);
+                        self.enqueue_response(slot, bytes, keep);
+                    }
+                    Err(TrySendError::Disconnected(_)) => self.close_conn(slot),
+                }
+            }
+            Err(e) => match e.status() {
+                None => self.close_conn(slot),
+                Some(status) => {
+                    self.app.stats().count_response(status);
+                    self.enqueue_error(slot, status, e.code(), &e.to_string());
+                }
+            },
+        }
+    }
+
+    /// Queue an enveloped error response and move to the closing drain.
+    /// The caller has already counted the response.
+    fn enqueue_error(&mut self, slot: usize, status: u16, code: &str, msg: &str) {
+        let resp = Response::fail(status, code, msg).closing();
+        let mut bytes = Vec::with_capacity(resp.body.len() + 256);
+        let _ = resp.write_to(&mut bytes, false);
+        self.enqueue_response(slot, bytes, false);
+    }
+
+    fn enqueue_response(&mut self, slot: usize, bytes: Vec<u8>, keep: bool) {
+        {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return;
+            };
+            conn.out = bytes;
+            conn.out_pos = 0;
+            conn.keep_after_write = keep;
+            conn.state = State::Writing;
+            conn.since = Instant::now();
+        }
+        self.arm(slot);
+        self.flush_ready(slot);
+    }
+
+    fn flush_ready(&mut self, slot: usize) {
+        enum Outcome {
+            Flushed(State),
+            Blocked,
+            Dead,
+        }
+        let outcome = {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return;
+            };
+            loop {
+                if conn.out_pos >= conn.out.len() {
+                    conn.out.clear();
+                    conn.out_pos = 0;
+                    break Outcome::Flushed(conn.state);
+                }
+                match conn.stream.write(&conn.out[conn.out_pos..]) {
+                    Ok(0) => break Outcome::Dead,
+                    Ok(n) => conn.out_pos += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break Outcome::Blocked,
+                    Err(_) => break Outcome::Dead,
+                }
+            }
+        };
+        match outcome {
+            Outcome::Dead => self.close_conn(slot),
+            Outcome::Blocked => self.set_interest(slot, Interest::WRITE),
+            Outcome::Flushed(State::Writing) => self.finish_write(slot),
+            Outcome::Flushed(State::Closing) => {
+                let conn = self.conns[slot].as_mut().expect("checked above");
+                let _ = conn.stream.shutdown(Shutdown::Write);
+                if conn.peer_eof {
+                    self.close_conn(slot);
+                } else {
+                    self.set_interest(slot, Interest::READ);
+                }
+            }
+            Outcome::Flushed(_) => {}
+        }
+    }
+
+    /// Response fully flushed: either recycle the connection for the next
+    /// keep-alive request or half-close and drain.
+    fn finish_write(&mut self, slot: usize) {
+        let keep = {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return;
+            };
+            conn.keep_after_write && !self.app.shutdown_requested() && !conn.peer_eof
+        };
+        let now = Instant::now();
+        if keep {
+            {
+                let conn = self.conns[slot].as_mut().expect("checked above");
+                conn.state = State::Reading;
+                conn.since = now;
+                conn.last_byte = now;
+                conn.msg_start = if conn.buf.is_empty() { None } else { Some(now) };
+            }
+            self.set_interest(slot, Interest::READ);
+            self.arm(slot);
+            // A pipelined follow-up may already be fully buffered.
+            self.try_dispatch(slot);
+        } else {
+            {
+                let conn = self.conns[slot].as_mut().expect("checked above");
+                conn.state = State::Closing;
+                conn.since = now;
+                let _ = conn.stream.shutdown(Shutdown::Write);
+                if conn.peer_eof {
+                    self.close_conn(slot);
+                    return;
+                }
+            }
+            self.set_interest(slot, Interest::READ);
+            self.arm(slot);
+        }
+    }
+
+    /// Closing-state reads: discard whatever the peer still sends (so the
+    /// kernel does not RST our final response away) until EOF or the
+    /// drain-grace timer fires.
+    fn closing_read(&mut self, slot: usize) {
+        let done = {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return;
+            };
+            let mut sink = [0u8; 4096];
+            loop {
+                match conn.stream.read(&mut sink) {
+                    Ok(0) => break true,
+                    Ok(_) => continue,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break false,
+                    Err(_) => break true,
+                }
+            }
+        };
+        if done {
+            let flushed = self.conns[slot]
+                .as_ref()
+                .map(|c| c.out_pos >= c.out.len())
+                .unwrap_or(true);
+            if flushed {
+                self.close_conn(slot);
+            } else if let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) {
+                conn.peer_eof = true;
+            }
+        }
+    }
+
+    fn set_interest(&mut self, slot: usize, interest: Interest) {
+        let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+            return;
+        };
+        if conn.interest == interest {
+            return;
+        }
+        let fd = conn.stream.as_raw_fd();
+        if self
+            .poller
+            .modify(fd, TOKEN_BASE + slot as u64, interest)
+            .is_ok()
+        {
+            conn.interest = interest;
+        }
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(conn) = self.conns.get_mut(slot).and_then(Option::take) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.free.push(slot);
+            self.live -= 1;
+        }
+    }
+}
+
+/// Best-effort 503 to a connection the slab has no room for. The brief
+/// blocking write is bounded and only happens past `max_conns`.
+fn reject_connection(stream: TcpStream) {
+    let mut stream = stream;
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let resp =
+        Response::fail_retry(503, "overloaded", "connection limit reached, retry shortly", 1000)
+            .closing();
+    let _ = resp.write_to(&mut stream, false);
+    let _ = stream.shutdown(Shutdown::Write);
+}

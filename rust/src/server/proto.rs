@@ -27,25 +27,33 @@
 //!              ...]}
 //! ```
 //!
-//! Status mapping: invalid body/shape → `400`; unknown model id (single)
-//! → `404`; every shard queue full → `503` + `Retry-After` (the
-//! coordinator's typed `Overloaded` shed, end-to-end); request caught by a
-//! panicking shard worker → `503` + `Retry-After` (typed `ShardPanicked` —
-//! the shard is respawning, retry lands elsewhere); deadline expired
-//! before the response arrived → `504` (typed `DeadlineExceeded`; the
-//! evaluation may still complete server-side); coordinator gone → `500`.
+//! Every non-2xx outcome is the uniform v1 envelope
+//! (`{"error": {"code", "message"[, "retry_after_ms"]}}`, built by
+//! [`super::http::error_body`]); codes map 1:1 from the coordinator's
+//! typed errors. Status/code mapping: invalid body/shape → `400
+//! bad_request`; wrong image size → `400 bad_geometry` (typed
+//! [`BadGeometry`]); unknown model id (single) → `404 model_not_found`;
+//! every shard queue full → `503 overloaded` + `Retry-After` (the
+//! coordinator's typed `Overloaded` shed, end-to-end); request caught by
+//! a panicking shard worker → `503 shard_panicked` + `Retry-After` (the
+//! shard is respawning, retry lands elsewhere); deadline expired before
+//! the response arrived → `504 deadline_exceeded` (typed
+//! [`DeadlineExceeded`]; the evaluation may still complete server-side);
+//! coordinator gone → `500 internal`.
 //! A batch travels as **one** coordinator block
 //! ([`crate::coordinator::Coordinator::try_submit_block_to`]): the pool
 //! evaluates it image-major through the model's `BlockEval` twin, and a
-//! single bad image fails alone — its result slot becomes
-//! `{"error": "..."}` (plus a top-level `"errors"` count) while the rest
-//! of the batch returns `200`. Only when *every* image of a batch fails
-//! does the whole call take the first error's status (`404` unknown
-//! model, `400` otherwise), matching the single-image mapping.
+//! single bad image fails alone — its result slot becomes the same
+//! `{"error": {"code", "message"}}` envelope (plus a top-level
+//! `"errors"` count) while the rest of the batch returns `200`. Only
+//! when *every* image of a batch fails does the whole call take the
+//! first error's status, matching the single-image mapping.
 
-use super::http::{Request, Response};
+use super::http::{error_body, Request, Response};
 use super::ServerState;
-use crate::coordinator::{recv_deadline, DeadlineExceeded, RegistryError, ShardPanicked};
+use crate::coordinator::{
+    recv_deadline, BadGeometry, DeadlineExceeded, RegistryError, ShardPanicked,
+};
 use crate::data::boolean::{BoolImage, Booleanizer};
 use crate::util::Json;
 use std::sync::atomic::Ordering;
@@ -91,6 +99,45 @@ pub fn classify_request_body(model: Option<&str>, imgs: &[&BoolImage]) -> Vec<u8
     body.to_string_compact().into_bytes()
 }
 
+/// Client side: a parsed uniform error envelope
+/// (`{"error": {"code", "message"[, "retry_after_ms"]}}`). The
+/// load-generator example, the bench's HTTP rows and the router all read
+/// error responses through this, so a reply that is *not* the envelope
+/// is detected ([`parse_error_body`] → `None`) instead of silently
+/// tolerated.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ApiError {
+    /// Stable snake_case code from [`super::http::ERROR_CODES`].
+    pub code: String,
+    pub message: String,
+    /// Machine-readable retry hint mirroring the `Retry-After` header.
+    pub retry_after_ms: Option<u64>,
+}
+
+/// Parse a non-2xx body into its [`ApiError`]; `None` when the body is
+/// not the uniform envelope (wrong shape, wrong types, not JSON).
+pub fn parse_error_body(body: &[u8]) -> Option<ApiError> {
+    let text = std::str::from_utf8(body).ok()?;
+    let v = Json::parse(text).ok()?;
+    let err = v.get("error")?;
+    let Some(Json::Str(code)) = err.get("code") else {
+        return None;
+    };
+    let Some(Json::Str(message)) = err.get("message") else {
+        return None;
+    };
+    let retry_after_ms = match err.get("retry_after_ms") {
+        None | Some(Json::Null) => None,
+        Some(Json::Num(x)) if x.fract() == 0.0 && *x >= 0.0 => Some(*x as u64),
+        Some(_) => return None,
+    };
+    Some(ApiError {
+        code: code.clone(),
+        message: message.clone(),
+        retry_after_ms,
+    })
+}
+
 /// One successful backend output as a wire result entry.
 fn result_entry(out: &crate::coordinator::BackendOutput) -> Json {
     let version = match out.model_version {
@@ -105,37 +152,52 @@ fn result_entry(out: &crate::coordinator::BackendOutput) -> Json {
     ])
 }
 
-/// Per-request rejection mapping shared by the single and batch paths:
-/// `503` + `Retry-After` for a request caught by a panicking shard (the
-/// shard is respawning — a retry lands elsewhere), `404` for unknown-model
-/// rejections, `400` for everything else.
-fn rejection_response(e: &anyhow::Error) -> Response {
+/// Per-request rejection mapping shared by the single and batch paths,
+/// expressed as (status, stable code): `503 shard_panicked` for a request
+/// caught by a panicking shard (the shard is respawning — a retry lands
+/// elsewhere), `400 bad_geometry` for a typed image-size mismatch, `404
+/// model_not_found` for unknown-model rejections, `400 bad_request` for
+/// everything else.
+fn rejection_class(e: &anyhow::Error) -> (u16, &'static str) {
     if e.downcast_ref::<ShardPanicked>().is_some() {
-        return Response::error(503, &format!("{e:#}")).with_header("retry-after", "1");
+        return (503, "shard_panicked");
     }
-    let status = match e.downcast_ref::<RegistryError>() {
-        Some(RegistryError::UnknownModel { .. }) => 404,
-        _ => 400,
-    };
-    Response::error(status, &format!("{e:#}"))
+    if e.downcast_ref::<BadGeometry>().is_some() {
+        return (400, "bad_geometry");
+    }
+    match e.downcast_ref::<RegistryError>() {
+        Some(RegistryError::UnknownModel { .. }) => (404, "model_not_found"),
+        _ => (400, "bad_request"),
+    }
+}
+
+/// [`rejection_class`] as a whole-call response (the single-image path and
+/// the all-failed batch path).
+fn rejection_response(e: &anyhow::Error) -> Response {
+    let (status, code) = rejection_class(e);
+    if status == 503 {
+        return Response::fail_retry(status, code, &format!("{e:#}"), 1000);
+    }
+    Response::fail(status, code, &format!("{e:#}"))
 }
 
 /// Map a failed *wait* on the response channel: a typed
-/// [`DeadlineExceeded`] → `504` (the evaluation may still complete
-/// server-side; the client has moved on), a dropped coordinator → `500`.
+/// [`DeadlineExceeded`] → `504 deadline_exceeded` (the evaluation may
+/// still complete server-side; the client has moved on), a dropped
+/// coordinator → `500 internal`.
 fn wait_failure(state: &ServerState, e: &anyhow::Error) -> Response {
     if e.downcast_ref::<DeadlineExceeded>().is_some() {
         state.stats.deadline_504.fetch_add(1, Ordering::Relaxed);
-        return Response::error(504, &format!("{e:#}"));
+        return Response::fail(504, "deadline_exceeded", &format!("{e:#}"));
     }
-    Response::error(500, "server is shutting down")
+    Response::fail(500, "internal", "server is shutting down")
 }
 
 /// `POST /v1/classify` — parse, submit to the shard pool, collect.
 pub fn classify(state: &ServerState, req: &Request) -> Response {
     let call = match parse_body(&req.body) {
         Ok(c) => c,
-        Err(msg) => return Response::error(400, &msg),
+        Err(msg) => return Response::fail(400, "bad_request", &msg),
     };
     let model = match &call.model {
         Some(m) => Json::str(m.clone()),
@@ -152,8 +214,7 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
             Ok(rx) => rx,
             Err(overloaded) => {
                 state.stats.shed_503.fetch_add(1, Ordering::Relaxed);
-                return Response::error(503, &overloaded.to_string())
-                    .with_header("retry-after", "1");
+                return Response::fail_retry(503, "overloaded", &overloaded.to_string(), 1000);
             }
         };
         return match recv_deadline(&rx, deadline) {
@@ -176,7 +237,7 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
         Ok(rx) => rx,
         Err(overloaded) => {
             state.stats.shed_503.fetch_add(1, Ordering::Relaxed);
-            return Response::error(503, &overloaded.to_string()).with_header("retry-after", "1");
+            return Response::fail_retry(503, "overloaded", &overloaded.to_string(), 1000);
         }
     };
     let outcomes = match recv_deadline(&rx, deadline) {
@@ -199,7 +260,8 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
             Ok(out) => result_entry(out),
             Err(e) => {
                 errors += 1;
-                Json::obj([("error", Json::str(format!("{e:#}")))])
+                let (_, code) = rejection_class(e);
+                error_body(code, &format!("{e:#}"))
             }
         })
         .collect();
@@ -411,6 +473,42 @@ mod tests {
         let call = parse_body(&classify_request_body(None, &[&BoolImage::blank()])).unwrap();
         assert_eq!(call.model, None);
         assert_eq!(call.images.len(), 1);
+    }
+
+    #[test]
+    fn error_envelope_roundtrips_through_the_client_parser() {
+        let resp = Response::fail_retry(503, "overloaded", "queue full", 1500);
+        let e = parse_error_body(&resp.body).unwrap();
+        assert_eq!(e.code, "overloaded");
+        assert_eq!(e.message, "queue full");
+        assert_eq!(e.retry_after_ms, Some(1500));
+        let resp = Response::fail(404, "model_not_found", "no such model");
+        let e = parse_error_body(&resp.body).unwrap();
+        assert_eq!(e.code, "model_not_found");
+        assert_eq!(e.retry_after_ms, None);
+        // Anything that is not the envelope is None, not a lossy guess.
+        assert!(parse_error_body(b"oops").is_none());
+        assert!(parse_error_body(br#"{"error":"plain string"}"#).is_none());
+        assert!(parse_error_body(br#"{"error":{"code":7,"message":"x"}}"#).is_none());
+    }
+
+    #[test]
+    fn rejections_map_to_stable_codes() {
+        let bg = anyhow::Error::new(crate::coordinator::BadGeometry {
+            model: Some("m".into()),
+            side: 32,
+            expected_side: 28,
+            geometry: "28x28".into(),
+        });
+        assert_eq!(rejection_class(&bg), (400, "bad_geometry"));
+        let sp = anyhow::Error::new(ShardPanicked { shard: 0 });
+        assert_eq!(rejection_class(&sp), (503, "shard_panicked"));
+        let um = anyhow::Error::new(RegistryError::UnknownModel {
+            requested: "x".into(),
+            loaded: "m".into(),
+        });
+        assert_eq!(rejection_class(&um), (404, "model_not_found"));
+        assert_eq!(rejection_class(&anyhow::anyhow!("weird")), (400, "bad_request"));
     }
 
     #[test]

@@ -1,0 +1,729 @@
+//! `route` mode: one process fronting N `serve` replicas behind the same
+//! v1 surface.
+//!
+//! Placement is rendezvous (highest-random-weight) hashing on the
+//! request's model id: every router ranks `(model, replica)` pairs by
+//! [`rendezvous_score`] and forwards to the highest-ranked **alive**
+//! replica. The scheme needs no shared state and no coordination — any
+//! number of routers agree on the owner — and when a replica dies only
+//! the models it owned move (each re-homes to its second-ranked replica);
+//! every other model keeps its owner, so replica-local caches stay warm.
+//!
+//! Failure policy, in order:
+//! - dead replicas are skipped at ranking time (health-check driven, see
+//!   [`spawn_health_checker`]; a forward-time transport failure also
+//!   marks the replica dead immediately and fails over — classification
+//!   is idempotent, so the retry is safe);
+//! - the chosen *alive* replica at its outstanding cap sheds `503
+//!   overloaded` rather than spilling to the next replica (spilling would
+//!   break the consistent placement exactly when the system is hottest);
+//! - no alive replica left → `502 replica_unavailable`.
+//!
+//! Endpoint treatment follows the route table's [`RouteKind`] column:
+//! `Local` rows (`/healthz`, `/metrics`, `/v1/admin/shutdown`) answer
+//! about/affect the router process itself (`/metrics` additionally
+//! scrapes and sums replica snapshots — see
+//! [`crate::coordinator::metrics::aggregate_replica_metrics`]),
+//! `ForwardOne` rows relay to the model's owner, and `ForwardAll` rows
+//! fan out to every alive replica (deploys, model inventory).
+
+use super::http::{error_body, write_request, ClientResponse, Limits, Response};
+use super::{finish_dispatch, match_route, App, HttpConn, HttpStats, Request, RouteKind};
+use crate::util::prng::SplitMix64;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Consecutive failed health probes before a replica is declared dead.
+/// One lost probe (GC pause, packet loss) should not trigger a re-home.
+const HEALTH_DEAD_AFTER: u32 = 2;
+
+/// Idle keep-alive connections retained per replica.
+const POOL_CAP: usize = 32;
+
+/// FNV-1a 64-bit — a tiny, well-distributed string hash with published
+/// test vectors, used only to seed the rendezvous mix.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The rendezvous score of `(model, replica)`: both strings are hashed
+/// independently (the replica hash rotated so equal strings cannot
+/// cancel), combined, and pushed through one SplitMix64 round to break
+/// FNV's avalanche weakness. Pure and coordination-free: every caller
+/// computes the same ranking from the same inputs. The Python
+/// transliteration in `python/tests/test_router_transliteration.py`
+/// pins the exact values.
+pub fn rendezvous_score(model: &str, replica: &str) -> u64 {
+    let seed = fnv1a(model.as_bytes()) ^ fnv1a(replica.as_bytes()).rotate_left(32);
+    SplitMix64::new(seed).next_u64()
+}
+
+/// Rank replica indices for `model`, best first: descending score, ties
+/// broken by address (deterministic across routers regardless of the
+/// order replicas were listed in).
+pub fn rank_replicas(model: &str, replicas: &[&str]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..replicas.len()).collect();
+    order.sort_by(|&a, &b| {
+        let (sa, sb) = (
+            rendezvous_score(model, replicas[a]),
+            rendezvous_score(model, replicas[b]),
+        );
+        sb.cmp(&sa).then_with(|| replicas[a].cmp(replicas[b]))
+    });
+    order
+}
+
+/// Route-tier sizing and policy.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Replica addresses (`host:port`), as given on the command line.
+    pub replicas: Vec<String>,
+    /// Per-replica cap on concurrently forwarded requests; the chosen
+    /// replica at cap sheds `503 overloaded`.
+    pub outstanding_cap: usize,
+    /// Health probe period.
+    pub health_interval: Duration,
+    /// TCP connect budget for forwards and probes.
+    pub connect_timeout: Duration,
+    /// Read/write budget for one forwarded exchange.
+    pub io_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: Vec::new(),
+            outstanding_cap: 256,
+            health_interval: Duration::from_millis(500),
+            connect_timeout: Duration::from_millis(250),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One backend `serve` process, as the router sees it.
+pub struct Replica {
+    pub addr: String,
+    resolved: SocketAddr,
+    /// Starts `true` (optimistic): the first failed forward or probe
+    /// corrects it within `health_interval`; starting pessimistic would
+    /// black-hole the warm-up window instead.
+    alive: AtomicBool,
+    consecutive_failures: AtomicU32,
+    outstanding: AtomicUsize,
+    /// Idle keep-alive connections for reuse (bounded by [`POOL_CAP`]).
+    pool: Mutex<Vec<HttpConn<TcpStream>>>,
+    pub forwarded: AtomicU64,
+    pub transport_errors: AtomicU64,
+    pub shed: AtomicU64,
+}
+
+impl Replica {
+    fn new(addr: String) -> anyhow::Result<Replica> {
+        let resolved = addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow::anyhow!("replica '{addr}': {e}"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("replica '{addr}' resolves to no address"))?;
+        Ok(Replica {
+            addr,
+            resolved,
+            alive: AtomicBool::new(true),
+            consecutive_failures: AtomicU32::new(0),
+            outstanding: AtomicUsize::new(0),
+            pool: Mutex::new(Vec::new()),
+            forwarded: AtomicU64::new(0),
+            transport_errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        })
+    }
+
+    pub fn alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    fn mark_dead(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+        // A dead replica's pooled connections are stale by definition.
+        self.pool.lock().unwrap().clear();
+    }
+
+    fn mark_alive(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.alive.store(true, Ordering::Relaxed);
+    }
+
+    fn note_probe_failure(&self) {
+        if self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1 >= HEALTH_DEAD_AFTER {
+            self.mark_dead();
+        }
+    }
+
+    fn connect(&self, cfg: &RouterConfig) -> std::io::Result<HttpConn<TcpStream>> {
+        let s = TcpStream::connect_timeout(&self.resolved, cfg.connect_timeout)?;
+        s.set_nodelay(true)?;
+        s.set_read_timeout(Some(cfg.io_timeout))?;
+        s.set_write_timeout(Some(cfg.io_timeout))?;
+        Ok(HttpConn::new(s))
+    }
+
+    fn exchange(
+        conn: &mut HttpConn<TcpStream>,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        limits: &Limits,
+    ) -> anyhow::Result<ClientResponse> {
+        write_request(conn.get_mut(), method, path, body, true)
+            .map_err(|e| anyhow::anyhow!("write to replica failed: {e}"))?;
+        match conn.read_response(limits) {
+            Ok(Some(resp)) => Ok(resp),
+            Ok(None) => Err(anyhow::anyhow!(
+                "replica closed the connection before responding"
+            )),
+            Err(e) => Err(anyhow::anyhow!("replica transport error: {e}")),
+        }
+    }
+
+    /// One forwarded exchange. A pooled keep-alive connection is tried
+    /// first; since the replica may have idle-closed it, a failure there
+    /// falls back to one fresh connection before the call counts as a
+    /// transport error.
+    fn call(
+        &self,
+        cfg: &RouterConfig,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        limits: &Limits,
+    ) -> anyhow::Result<ClientResponse> {
+        let pooled = self.pool.lock().unwrap().pop();
+        if let Some(mut conn) = pooled {
+            if let Ok(resp) = Self::exchange(&mut conn, method, path, body, limits) {
+                self.recycle(conn, &resp);
+                return Ok(resp);
+            }
+        }
+        let mut conn = self
+            .connect(cfg)
+            .map_err(|e| anyhow::anyhow!("connect to replica {} failed: {e}", self.addr))?;
+        let resp = Self::exchange(&mut conn, method, path, body, limits)?;
+        self.recycle(conn, &resp);
+        Ok(resp)
+    }
+
+    fn recycle(&self, conn: HttpConn<TcpStream>, resp: &ClientResponse) {
+        let close = resp
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"));
+        if close || !self.alive() {
+            return;
+        }
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(conn);
+        }
+    }
+
+    /// One health probe: fresh connection, `GET /healthz`, alive iff the
+    /// replica answers HTTP 200 (`ok` or `degraded` — a degraded pool
+    /// still serves; only `dead` answers 503).
+    fn probe(&self, cfg: &RouterConfig, limits: &Limits) -> anyhow::Result<bool> {
+        let probe_cfg = RouterConfig {
+            // A wedged replica must not hold the prober for io_timeout.
+            io_timeout: cfg.connect_timeout.max(Duration::from_millis(250)),
+            ..cfg.clone()
+        };
+        let mut conn = self.connect(&probe_cfg)?;
+        let resp = Self::exchange(&mut conn, "GET", "/healthz", &[], limits)?;
+        Ok(resp.status == 200)
+    }
+
+    fn counters_json(&self) -> Json {
+        let n = |a: &AtomicU64| Json::num(a.load(Ordering::Relaxed) as f64);
+        Json::obj([
+            ("alive", Json::Bool(self.alive())),
+            (
+                "outstanding",
+                Json::num(self.outstanding.load(Ordering::Relaxed) as f64),
+            ),
+            ("forwarded", n(&self.forwarded)),
+            ("transport_errors", n(&self.transport_errors)),
+            ("shed", n(&self.shed)),
+        ])
+    }
+}
+
+/// Everything a request worker needs in `route` mode, shared via `Arc`.
+pub struct RouterState {
+    pub cfg: RouterConfig,
+    pub replicas: Vec<Replica>,
+    pub stats: HttpStats,
+    limits: Limits,
+    shutdown: AtomicBool,
+}
+
+impl RouterState {
+    pub fn new(cfg: RouterConfig) -> anyhow::Result<Arc<RouterState>> {
+        anyhow::ensure!(
+            !cfg.replicas.is_empty(),
+            "route mode needs at least one --replica ADDR"
+        );
+        let replicas = cfg
+            .replicas
+            .iter()
+            .map(|a| Replica::new(a.clone()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Arc::new(RouterState {
+            replicas,
+            stats: HttpStats::default(),
+            limits: Limits::default(),
+            shutdown: AtomicBool::new(false),
+            cfg,
+        }))
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// The placement key: the request's `"model"` field, `""` when absent
+    /// or unparsable (the replica itself produces the 400 for malformed
+    /// bodies — the router only needs a stable key).
+    fn model_key(body: &[u8]) -> String {
+        std::str::from_utf8(body)
+            .ok()
+            .and_then(|t| Json::parse(t).ok())
+            .and_then(|v| v.get("model").and_then(Json::as_str).map(str::to_string))
+            .unwrap_or_default()
+    }
+
+    /// Forward to the model's owner (see the module docs for the
+    /// failover / shed / 502 ladder).
+    fn forward_one(&self, req: &Request, canonical_path: &str) -> Response {
+        let key = Self::model_key(&req.body);
+        let addrs: Vec<&str> = self.replicas.iter().map(|r| r.addr.as_str()).collect();
+        for idx in rank_replicas(&key, &addrs) {
+            let r = &self.replicas[idx];
+            if !r.alive() {
+                continue;
+            }
+            if r.outstanding.fetch_add(1, Ordering::AcqRel) >= self.cfg.outstanding_cap {
+                r.outstanding.fetch_sub(1, Ordering::AcqRel);
+                r.shed.fetch_add(1, Ordering::Relaxed);
+                return Response::fail_retry(
+                    503,
+                    "overloaded",
+                    &format!("replica {} is at its outstanding-request cap", r.addr),
+                    1000,
+                );
+            }
+            let out = r.call(&self.cfg, &req.method, canonical_path, &req.body, &self.limits);
+            r.outstanding.fetch_sub(1, Ordering::AcqRel);
+            match out {
+                Ok(resp) => {
+                    r.forwarded.fetch_add(1, Ordering::Relaxed);
+                    return relay(resp);
+                }
+                Err(_) => {
+                    r.transport_errors.fetch_add(1, Ordering::Relaxed);
+                    r.mark_dead();
+                }
+            }
+        }
+        Response::fail(
+            502,
+            "replica_unavailable",
+            "no alive replica could serve the request",
+        )
+    }
+
+    /// Call every alive replica in turn; transport failures mark the
+    /// replica dead (same policy as the forward path). Admin fan-out is
+    /// not a hot path, so sequential keeps the code observable.
+    fn fan_out(
+        &self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Vec<(usize, anyhow::Result<ClientResponse>)> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.alive())
+            .map(|(i, r)| {
+                r.outstanding.fetch_add(1, Ordering::AcqRel);
+                let out = r.call(&self.cfg, method, path, body, &self.limits);
+                r.outstanding.fetch_sub(1, Ordering::AcqRel);
+                match &out {
+                    Ok(_) => {
+                        r.forwarded.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        r.transport_errors.fetch_add(1, Ordering::Relaxed);
+                        r.mark_dead();
+                    }
+                }
+                (i, out)
+            })
+            .collect()
+    }
+
+    /// `GET /v1/models` across the tier: the union of every alive
+    /// replica's inventory (deduplicated — replicas normally mirror the
+    /// same manifest), plus each raw answer under `"replicas"`.
+    fn forward_models(&self) -> Response {
+        let results = self.fan_out("GET", "/v1/models", &[]);
+        let mut merged: Vec<Json> = Vec::new();
+        let mut seen: Vec<String> = Vec::new();
+        let mut raw: BTreeMap<String, Json> = BTreeMap::new();
+        let mut answered = 0usize;
+        for (i, out) in results {
+            let Ok(resp) = out else { continue };
+            let Some(body) = parse_json_body(&resp.body) else {
+                continue;
+            };
+            answered += 1;
+            if let Some(Json::Arr(models)) = body.get("models") {
+                for m in models {
+                    let key = m.to_string_compact();
+                    if !seen.contains(&key) {
+                        seen.push(key);
+                        merged.push(m.clone());
+                    }
+                }
+            }
+            raw.insert(self.replicas[i].addr.clone(), body);
+        }
+        if answered == 0 {
+            return Response::fail(
+                502,
+                "replica_unavailable",
+                "no alive replica answered the model inventory",
+            );
+        }
+        Response::json(
+            200,
+            &Json::obj([("models", Json::Arr(merged)), ("replicas", Json::Obj(raw))]),
+        )
+    }
+
+    /// `POST /v1/admin/models` across the tier: the manifest is applied
+    /// on every alive replica. All replicas 2xx → 200 with per-replica
+    /// bodies; any failure → the worst failure's status, relaying that
+    /// replica's stable code so the caller still sees one uniform
+    /// envelope.
+    fn forward_admin_models(&self, req: &Request) -> Response {
+        let results = self.fan_out("POST", "/v1/admin/models", &req.body);
+        if results.is_empty() {
+            return Response::fail(
+                502,
+                "replica_unavailable",
+                "no alive replica to apply the manifest to",
+            );
+        }
+        let mut raw: BTreeMap<String, Json> = BTreeMap::new();
+        let mut worst: Option<(u16, String, String)> = None; // status, code, message
+        let total = results.len();
+        let mut failed = 0usize;
+        for (i, out) in results {
+            let addr = self.replicas[i].addr.clone();
+            match out {
+                Ok(resp) if resp.status < 300 => {
+                    raw.insert(addr, parse_json_body(&resp.body).unwrap_or(Json::Null));
+                }
+                Ok(resp) => {
+                    failed += 1;
+                    let e = super::proto::parse_error_body(&resp.body);
+                    let (code, msg) = match e {
+                        Some(e) => (e.code, e.message),
+                        None => ("internal".to_string(), "non-envelope replica error".into()),
+                    };
+                    let better = match &worst {
+                        Some((s, _, _)) => resp.status > *s,
+                        None => true,
+                    };
+                    if better {
+                        worst = Some((resp.status, code.clone(), format!("replica {addr}: {msg}")));
+                    }
+                    raw.insert(addr, error_body(&code, &msg));
+                }
+                Err(e) => {
+                    failed += 1;
+                    let msg = format!("{e:#}");
+                    let better = match &worst {
+                        Some((s, _, _)) => 502 > *s,
+                        None => true,
+                    };
+                    if better {
+                        worst = Some((
+                            502,
+                            "replica_unavailable".to_string(),
+                            format!("replica {addr}: {msg}"),
+                        ));
+                    }
+                    raw.insert(addr, error_body("replica_unavailable", &msg));
+                }
+            }
+        }
+        match worst {
+            None => Response::json(200, &Json::obj([("replicas", Json::Obj(raw))])),
+            Some((status, code, msg)) => Response::fail(
+                status,
+                leak_code(&code),
+                &format!("{msg} ({failed}/{total} replica(s) failed)"),
+            ),
+        }
+    }
+
+    /// Router liveness: `ok` when every replica is alive, `degraded`
+    /// while some are, `dead` (503) when none is.
+    fn healthz(&self) -> Response {
+        let alive = self.replicas.iter().filter(|r| r.alive()).count();
+        let (status_code, status) = if alive == 0 {
+            (503, "dead")
+        } else if alive < self.replicas.len() {
+            (200, "degraded")
+        } else {
+            (200, "ok")
+        };
+        let replicas = Json::Obj(
+            self.replicas
+                .iter()
+                .map(|r| (r.addr.clone(), r.counters_json()))
+                .collect(),
+        );
+        Response::json(
+            status_code,
+            &Json::obj([
+                ("status", Json::str(status)),
+                ("role", Json::str("router")),
+                ("replicas", replicas),
+                ("draining", Json::Bool(self.shutdown_requested())),
+            ]),
+        )
+    }
+
+    /// Scrape every alive replica's `/metrics`, sum the counters
+    /// ([`crate::coordinator::metrics::aggregate_replica_metrics`]), and
+    /// attach the router's own HTTP stats and per-replica forward
+    /// counters.
+    fn metrics(&self) -> Response {
+        let results = self.fan_out("GET", "/metrics", &[]);
+        let snaps: Vec<(usize, Json)> = results
+            .into_iter()
+            .filter_map(|(i, out)| Some((i, parse_json_body(&out.ok()?.body)?)))
+            .collect();
+        let mut agg = crate::coordinator::metrics::aggregate_replica_metrics(
+            snaps
+                .iter()
+                .map(|(i, snap)| (self.replicas[*i].addr.as_str(), snap.clone())),
+        );
+        if let Json::Obj(map) = &mut agg {
+            map.insert("http".to_string(), self.stats.to_json());
+            map.insert(
+                "router".to_string(),
+                Json::Obj(
+                    self.replicas
+                        .iter()
+                        .map(|r| (r.addr.clone(), r.counters_json()))
+                        .collect(),
+                ),
+            );
+        }
+        Response::json(200, &agg)
+    }
+}
+
+impl App for RouterState {
+    fn handle(&self, req: &Request) -> Response {
+        let m = match match_route(&req.method, &req.path) {
+            Ok(m) => m,
+            Err(resp) => return resp,
+        };
+        // Forwards always use the canonical path: an alias request is
+        // translated at this tier, not propagated.
+        let resp = match (m.route.path, m.route.kind) {
+            ("/healthz", _) => self.healthz(),
+            ("/metrics", _) => self.metrics(),
+            ("/v1/admin/shutdown", _) => {
+                self.request_shutdown();
+                Response::json(200, &Json::obj([("draining", Json::Bool(true))])).closing()
+            }
+            ("/v1/models", _) => self.forward_models(),
+            ("/v1/admin/models", _) => self.forward_admin_models(req),
+            (path, RouteKind::ForwardOne) => self.forward_one(req, path),
+            (path, _) => Response::fail(404, "not_found", &format!("no such endpoint '{path}'")),
+        };
+        finish_dispatch(resp, m.deprecated)
+    }
+
+    fn stats(&self) -> &HttpStats {
+        &self.stats
+    }
+
+    fn request_shutdown(&self) {
+        RouterState::request_shutdown(self);
+    }
+
+    fn shutdown_requested(&self) -> bool {
+        RouterState::shutdown_requested(self)
+    }
+}
+
+/// Poll `/healthz` on every replica each `health_interval`:
+/// [`HEALTH_DEAD_AFTER`] consecutive failures → dead, one success →
+/// alive. Joins when the router drains.
+pub fn spawn_health_checker(state: Arc<RouterState>) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("convcotm-health".to_string())
+        .spawn(move || {
+            while !state.shutdown_requested() {
+                for r in &state.replicas {
+                    match r.probe(&state.cfg, &state.limits) {
+                        Ok(true) => r.mark_alive(),
+                        Ok(false) | Err(_) => r.note_probe_failure(),
+                    }
+                }
+                std::thread::sleep(state.cfg.health_interval);
+            }
+        })
+        .expect("spawn health checker thread")
+}
+
+/// Relay a replica's response verbatim: status and body pass through
+/// untouched (error bodies are already the uniform envelope), plus the
+/// retry hint when the replica set one.
+fn relay(resp: ClientResponse) -> Response {
+    let retry = resp.header("retry-after").map(str::to_string);
+    let mut out = Response {
+        status: resp.status,
+        content_type: "application/json",
+        headers: Vec::new(),
+        body: resp.body,
+        close: false,
+    };
+    if let Some(v) = retry {
+        out = out.with_header("retry-after", &v);
+    }
+    out
+}
+
+fn parse_json_body(body: &[u8]) -> Option<Json> {
+    Json::parse(std::str::from_utf8(body).ok()?).ok()
+}
+
+/// Map a replica-reported code back to its `'static` table entry so it
+/// can flow through [`Response::fail`]; anything unknown degrades to
+/// `internal` rather than inventing a code outside the table.
+fn leak_code(code: &str) -> &'static str {
+    super::http::ERROR_CODES
+        .iter()
+        .map(|(c, _, _)| *c)
+        .find(|c| *c == code)
+        .unwrap_or("internal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared with `python/tests/test_router_transliteration.py` — the
+    /// two implementations must agree bit-for-bit or routers and tooling
+    /// would disagree on placement.
+    const VECTORS: &[(&str, &str, u64)] = &[
+        ("", "127.0.0.1:8001", 0x2069ac02fb8db3f1),
+        ("", "127.0.0.1:8002", 0x6f3a62dccf1bdd31),
+        ("", "127.0.0.1:8003", 0x1fecb8135189151c),
+        ("mnist-asic", "127.0.0.1:8001", 0x4262aa3952472312),
+        ("mnist-asic", "127.0.0.1:8002", 0xbc7c5fa156d30599),
+        ("mnist-asic", "127.0.0.1:8003", 0x98a5d8c6c3fe2d15),
+        ("cifar10-32x32", "127.0.0.1:8001", 0x316e2294c4583df1),
+        ("cifar10-32x32", "127.0.0.1:8002", 0x9d410d93c4646be1),
+        ("cifar10-32x32", "127.0.0.1:8003", 0xbd0d001f02f7d70a),
+    ];
+
+    #[test]
+    fn rendezvous_scores_match_the_pinned_vectors() {
+        // FNV-1a's published vectors first (catches a transcribed prime).
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        for &(model, replica, want) in VECTORS {
+            assert_eq!(
+                rendezvous_score(model, replica),
+                want,
+                "score({model:?}, {replica:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn ranking_is_deterministic_and_complete() {
+        let replicas = ["127.0.0.1:8001", "127.0.0.1:8002", "127.0.0.1:8003"];
+        let order = rank_replicas("mnist-asic", &replicas);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2], "a permutation of all replicas");
+        assert_eq!(order, rank_replicas("mnist-asic", &replicas));
+        // Per the pinned vectors: 8002 > 8003 > 8001 for mnist-asic.
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn replica_death_moves_only_the_dead_replicas_models() {
+        let full = ["127.0.0.1:8001", "127.0.0.1:8002", "127.0.0.1:8003"];
+        let dead = "127.0.0.1:8002";
+        let survivors: Vec<&str> = full.iter().copied().filter(|a| *a != dead).collect();
+        let mut moved = 0usize;
+        let mut kept = 0usize;
+        for i in 0..200 {
+            let model = format!("model-{i}");
+            let owner_full = full[rank_replicas(&model, &full)[0]];
+            let owner_after = survivors[rank_replicas(&model, &survivors)[0]];
+            if owner_full == dead {
+                moved += 1;
+                assert_ne!(owner_after, dead);
+            } else {
+                kept += 1;
+                assert_eq!(
+                    owner_full, owner_after,
+                    "model {model} moved although its owner survived"
+                );
+            }
+        }
+        // Placement is roughly balanced, so both classes must be
+        // well-populated for the test to mean anything.
+        assert!(moved > 30, "only {moved}/200 models on the dead replica");
+        assert!(kept > 80, "only {kept}/200 models kept their owner");
+    }
+
+    #[test]
+    fn model_key_extraction_is_total() {
+        assert_eq!(RouterState::model_key(br#"{"model":"m1"}"#), "m1");
+        assert_eq!(RouterState::model_key(br#"{"images":[]}"#), "");
+        assert_eq!(RouterState::model_key(b"not json at all"), "");
+        assert_eq!(RouterState::model_key(&[0xff, 0xfe]), "");
+        assert_eq!(RouterState::model_key(br#"{"model":7}"#), "");
+    }
+
+    #[test]
+    fn unknown_replica_codes_degrade_to_internal() {
+        assert_eq!(leak_code("overloaded"), "overloaded");
+        assert_eq!(leak_code("bad_manifest"), "bad_manifest");
+        assert_eq!(leak_code("made_up_code"), "internal");
+    }
+}

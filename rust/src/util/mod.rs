@@ -6,6 +6,7 @@ pub mod bitvec;
 pub mod crc;
 pub mod fault;
 pub mod json;
+pub mod poll;
 pub mod prng;
 pub mod quick;
 pub mod stats;

@@ -1,0 +1,603 @@
+//! Readiness polling for the event-driven front door — a thin, std-only
+//! wrapper over the OS readiness API (`server::poll` drives it).
+//!
+//! No `libc` crate: std already links libc on every unix target, so the
+//! three epoll entry points (`epoll_create1` / `epoll_ctl` / `epoll_wait`)
+//! are declared directly with `extern "C"` and owned through
+//! `std::os::fd::OwnedFd`. On Linux the backend is epoll (O(ready) wakeups,
+//! the whole point of the redesign); every other unix falls back to
+//! `poll(2)`, which is O(registered) per wait but semantically identical —
+//! both are level-triggered, which is what the connection state machine in
+//! `server::poll` assumes.
+//!
+//! The surface is the minimal mio-shaped triple the event loop needs:
+//! [`Poller::register`] / [`Poller::modify`] / [`Poller::deregister`] with a
+//! `u64` token per fd, and [`Poller::wait`] filling a caller-owned
+//! [`PollEvent`] buffer. Tokens are opaque to this module; the event loop
+//! maps them to slab slots.
+
+use std::io;
+use std::os::fd::RawFd;
+use std::time::Duration;
+
+/// What readiness to watch an fd for. `NONE` keeps the fd registered but
+/// silent (except errors/hangup, which level-triggered backends always
+/// report) — the event loop parks connections there while a worker holds
+/// their request, so a pipelining client cannot busy-spin the loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const NONE: Interest = Interest {
+        readable: false,
+        writable: false,
+    };
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const WRITE: Interest = Interest {
+        readable: false,
+        writable: true,
+    };
+}
+
+/// One readiness event out of [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error or hangup (`EPOLLERR`/`EPOLLHUP`, or the peer's write side
+    /// closed): the connection is (half-)dead; reads will observe EOF or
+    /// the error.
+    pub closed: bool,
+}
+
+/// A readiness poller over the platform backend.
+pub struct Poller {
+    inner: sys::Poller,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            inner: sys::Poller::new()?,
+        })
+    }
+
+    /// Start watching `fd` under `token`. The fd must outlive its
+    /// registration (deregister before closing).
+    pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.inner.register(fd, token, interest)
+    }
+
+    /// Change what an already-registered fd is watched for.
+    pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.inner.modify(fd, token, interest)
+    }
+
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        self.inner.deregister(fd)
+    }
+
+    /// Block until readiness or `timeout` (None = forever), appending into
+    /// `events` (cleared first). A signal interruption returns an empty
+    /// set rather than an error — callers just re-loop.
+    pub fn wait(&self, events: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        self.inner.wait(events, timeout)
+    }
+}
+
+/// Wakes a blocked [`Poller::wait`] from another thread — the classic
+/// self-pipe trick over a `UnixStream` pair (std-only; no `pipe(2)`
+/// declaration needed). The read end is registered in the poller under a
+/// reserved token; [`Waker::wake`] makes it readable. Both ends are
+/// non-blocking, so a burst of wakes that fills the socket buffer is
+/// simply dropped — a pending wake is already guaranteed.
+#[derive(Clone)]
+pub struct Waker {
+    tx: std::sync::Arc<std::os::unix::net::UnixStream>,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        use std::io::Write;
+        let _ = (&*self.tx).write(&[1]);
+    }
+}
+
+/// Build a waker and the readable end to register in the poller. The
+/// owner should drain the read end (until `WouldBlock`) each time it
+/// fires, then check whatever queues the wakes announce.
+pub fn waker_pair() -> io::Result<(Waker, std::os::unix::net::UnixStream)> {
+    let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((
+        Waker {
+            tx: std::sync::Arc::new(tx),
+        },
+        rx,
+    ))
+}
+
+/// Clamp a wait timeout to the millisecond `int` the syscalls take.
+/// Rounds up so a 0.4 ms deadline does not become a busy-loop of 0 ms
+/// waits; `None` maps to -1 (infinite).
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis();
+            if d.is_zero() {
+                0
+            } else {
+                ms.clamp(1, i32::MAX as u128) as i32
+            }
+        }
+    }
+}
+
+/// Raise the soft `RLIMIT_NOFILE` toward `want` (capped at the hard
+/// limit), returning the soft limit now in effect. Best-effort: any
+/// failure just reports the status quo. The front door calls this so a
+/// default 1024-fd soft limit (GitHub runners, most distro defaults) does
+/// not cap a server meant to hold thousands of idle keep-alive sockets.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    #[cfg(target_os = "macos")]
+    const RLIMIT_NOFILE: i32 = 8;
+    #[cfg(not(target_os = "macos"))]
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    let mut lim = RLimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 0;
+    }
+    if lim.cur >= want {
+        return lim.cur;
+    }
+    let new_cur = want.min(lim.max);
+    let raised = RLimit {
+        cur: new_cur,
+        max: lim.max,
+    };
+    if unsafe { setrlimit(RLIMIT_NOFILE, &raised) } == 0 {
+        new_cur
+    } else {
+        lim.cur
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! epoll backend. `epoll_event` is packed on x86_64 only (glibc's
+    //! `__EPOLL_PACKED`); the struct below matches the kernel ABI on both
+    //! layouts.
+
+    use super::{timeout_ms, Interest, PollEvent};
+    use std::io;
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    }
+
+    fn interest_bits(interest: Interest) -> u32 {
+        // RDHUP rides along with read interest (a half-close is an EOF the
+        // reader must see) but is deliberately NOT set for a parked
+        // (interest-NONE) fd: level-triggered RDHUP would re-fire every
+        // wait and busy-spin the loop while a worker holds the request.
+        let mut bits = 0;
+        if interest.readable {
+            bits |= EPOLLIN | EPOLLRDHUP;
+        }
+        if interest.writable {
+            bits |= EPOLLOUT;
+        }
+        bits
+    }
+
+    pub struct Poller {
+        ep: OwnedFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller {
+                ep: unsafe { OwnedFd::from_raw_fd(fd) },
+            })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, event: Option<EpollEvent>) -> io::Result<()> {
+            let mut ev = event.unwrap_or(EpollEvent { events: 0, data: 0 });
+            let ptr = if event.is_some() {
+                &mut ev as *mut EpollEvent
+            } else {
+                std::ptr::null_mut()
+            };
+            if unsafe { epoll_ctl(self.ep.as_raw_fd(), op, fd, ptr) } != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(
+                EPOLL_CTL_ADD,
+                fd,
+                Some(EpollEvent {
+                    events: interest_bits(interest),
+                    data: token,
+                }),
+            )
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(
+                EPOLL_CTL_MOD,
+                fd,
+                Some(EpollEvent {
+                    events: interest_bits(interest),
+                    data: token,
+                }),
+            )
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, None)
+        }
+
+        pub fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
+            let n = unsafe {
+                epoll_wait(
+                    self.ep.as_raw_fd(),
+                    buf.as_mut_ptr(),
+                    buf.len() as i32,
+                    timeout_ms(timeout),
+                )
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // By-value copies: field refs into a packed struct are UB.
+                let (bits, data) = (ev.events, ev.data);
+                out.push(PollEvent {
+                    token: data,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    closed: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    //! Portable `poll(2)` backend: the registration table lives in user
+    //! space and the pollfd array is rebuilt per wait — O(registered), but
+    //! correct on any unix.
+
+    use super::{timeout_ms, Interest, PollEvent};
+    use std::collections::BTreeMap;
+    use std::io;
+    use std::os::fd::RawFd;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    pub struct Poller {
+        interests: Mutex<BTreeMap<RawFd, (u64, Interest)>>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                interests: Mutex::new(BTreeMap::new()),
+            })
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.interests
+                .lock()
+                .expect("poller lock")
+                .insert(fd, (token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.register(fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.interests.lock().expect("poller lock").remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+            let snapshot: Vec<(RawFd, u64, Interest)> = {
+                let map = self.interests.lock().expect("poller lock");
+                map.iter().map(|(&fd, &(t, i))| (fd, t, i)).collect()
+            };
+            let mut fds: Vec<PollFd> = snapshot
+                .iter()
+                .map(|&(fd, _, interest)| {
+                    let mut events = 0i16;
+                    if interest.readable {
+                        events |= POLLIN;
+                    }
+                    if interest.writable {
+                        events |= POLLOUT;
+                    }
+                    PollFd {
+                        fd,
+                        events,
+                        revents: 0,
+                    }
+                })
+                .collect();
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms(timeout)) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pfd, &(_, token, _)) in fds.iter().zip(snapshot.iter()) {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                out.push(PollEvent {
+                    token,
+                    readable: pfd.revents & POLLIN != 0,
+                    writable: pfd.revents & POLLOUT != 0,
+                    closed: pfd.revents & (POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn timeout_expires_with_no_events() {
+        let poller = Poller::new().unwrap();
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(30)))
+            .unwrap();
+        assert!(events.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn readable_event_fires_on_loopback_data() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller
+            .register(server.as_raw_fd(), 7, Interest::READ)
+            .unwrap();
+        let mut events = Vec::new();
+
+        // Quiet socket: no events inside the timeout.
+        poller
+            .wait(&mut events, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert!(events.is_empty(), "no data yet, no event expected");
+
+        client.write_all(b"ping").unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(2)))
+            .unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+
+        // Level-triggered: unread data keeps firing…
+        poller
+            .wait(&mut events, Some(Duration::from_millis(100)))
+            .unwrap();
+        assert_eq!(events.len(), 1, "level-triggered readiness must re-fire");
+
+        // …until consumed.
+        let mut sink = [0u8; 16];
+        let mut s = &server;
+        assert_eq!(s.read(&mut sink).unwrap(), 4);
+        poller
+            .wait(&mut events, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert!(events.is_empty(), "drained socket must go quiet");
+    }
+
+    #[test]
+    fn interest_none_parks_and_modify_rearms() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller
+            .register(server.as_raw_fd(), 1, Interest::NONE)
+            .unwrap();
+        client.write_all(b"pipelined bytes").unwrap();
+
+        let mut events = Vec::new();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(50)))
+            .unwrap();
+        assert!(
+            events.iter().all(|e| !e.readable),
+            "parked fd must not report readable"
+        );
+
+        poller
+            .modify(server.as_raw_fd(), 1, Interest::READ)
+            .unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(2)))
+            .unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 1 && e.readable),
+            "re-armed fd must report the buffered bytes"
+        );
+
+        poller.deregister(server.as_raw_fd()).unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert!(events.is_empty(), "deregistered fd must go silent");
+    }
+
+    #[test]
+    fn peer_close_reports_readable_or_closed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller
+            .register(server.as_raw_fd(), 3, Interest::READ)
+            .unwrap();
+        drop(client);
+        let mut events = Vec::new();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(2)))
+            .unwrap();
+        assert!(
+            events
+                .iter()
+                .any(|e| e.token == 3 && (e.readable || e.closed)),
+            "peer close must produce an event: {events:?}"
+        );
+    }
+
+    #[test]
+    fn writable_fires_once_send_buffer_drains() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (_server, _) = listener.accept().unwrap();
+        client.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller
+            .register(client.as_raw_fd(), 9, Interest::WRITE)
+            .unwrap();
+        let mut events = Vec::new();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(2)))
+            .unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 9 && e.writable),
+            "fresh socket must be writable"
+        );
+    }
+
+    #[test]
+    fn waker_unblocks_a_wait_from_another_thread() {
+        let poller = Poller::new().unwrap();
+        let (waker, rx) = waker_pair().unwrap();
+        poller.register(rx.as_raw_fd(), 42, Interest::READ).unwrap();
+        let w2 = waker.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            w2.wake();
+        });
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(10)))
+            .unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 42 && e.readable),
+            "waker must surface as a readable event: {events:?}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(5), "wake, not timeout");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn raise_nofile_limit_reports_a_sane_limit() {
+        let lim = raise_nofile_limit(1);
+        assert!(lim >= 1, "soft nofile limit should be at least 1: {lim}");
+    }
+}

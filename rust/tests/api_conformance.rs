@@ -1,0 +1,377 @@
+//! API conformance over real sockets: every route in the declarative
+//! [`ROUTES`] table answers wrong methods with `405` + `Allow`, every
+//! deprecated alias answers canonically plus `Deprecation: true`, and
+//! every induced failure — malformed wire bytes, bad payloads, a wedged
+//! or panicking backend (via `util::fault`), a registry-less server —
+//! speaks the uniform envelope with a stable code from [`ERROR_CODES`].
+//!
+//! [`ROUTES`]: convcotm::server::ROUTES
+//! [`ERROR_CODES`]: convcotm::server::http::ERROR_CODES
+
+use convcotm::coordinator::{
+    Backend, BackendOutput, BatchConfig, Coordinator, ModelRegistry, PoolConfig,
+};
+use convcotm::data::{BoolImage, Geometry};
+use convcotm::server::http::{write_request, ERROR_CODES};
+use convcotm::server::proto::{classify_request_body, parse_error_body, ApiError};
+use convcotm::server::{
+    ClientResponse, HttpConn, HttpServer, Limits, ServerConfig, ServerState, ROUTES,
+};
+use convcotm::tm::{Model, Params};
+use convcotm::util::fault::{self, FaultPlan};
+use convcotm::util::Json;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Socket tests are timing-sensitive; keep them serial within this binary.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn heavy_guard() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fixed_class_model(class: usize) -> Model {
+    let p = Params::asic();
+    let mut m = Model::blank(p.clone());
+    m.set_include(0, p.geometry.num_features(), true);
+    m.set_weight(class, 0, 5);
+    m
+}
+
+fn start_pool_server() -> (HttpServer, Arc<ServerState>, Arc<Coordinator>) {
+    let coord = Arc::new(Coordinator::start_pool(
+        ModelRegistry::single("m", fixed_class_model(2)),
+        PoolConfig {
+            shards: 1,
+            queue_capacity: 256,
+            batch: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+            },
+            ..PoolConfig::default()
+        },
+    ));
+    let state = ServerState::new(Arc::clone(&coord));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 2,
+        read_timeout: Duration::from_millis(250),
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind loopback");
+    (server, state, coord)
+}
+
+fn drain(server: HttpServer, state: Arc<ServerState>, coord: Arc<Coordinator>) {
+    server.request_shutdown();
+    server.join();
+    drop(state);
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+}
+
+fn connect(addr: SocketAddr) -> HttpConn<TcpStream> {
+    let stream = TcpStream::connect(addr).expect("connect to loopback server");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    HttpConn::new(stream)
+}
+
+fn roundtrip(
+    conn: &mut HttpConn<TcpStream>,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> ClientResponse {
+    write_request(conn.get_mut(), method, path, body, true).expect("write request");
+    conn.read_response(&Limits::default())
+        .expect("read response")
+        .expect("server closed connection before responding")
+}
+
+/// The conformance core: a non-2xx response must be the uniform envelope
+/// and its `(code, status)` pair must be in the documented inventory.
+fn assert_envelope(resp: &ClientResponse) -> ApiError {
+    assert!(
+        resp.status >= 400,
+        "assert_envelope on a {} response",
+        resp.status
+    );
+    let e = parse_error_body(&resp.body).unwrap_or_else(|| {
+        panic!(
+            "HTTP {} body is not the uniform envelope: {}",
+            resp.status,
+            String::from_utf8_lossy(&resp.body)
+        )
+    });
+    assert!(
+        ERROR_CODES.iter().any(|(c, s, _)| *c == e.code && *s == resp.status),
+        "({}, {}) is not a documented (code, status) pair",
+        e.code,
+        resp.status
+    );
+    e
+}
+
+/// Every route × every spelling × a wrong method: `405` with the `Allow`
+/// header naming the right method and the `method_not_allowed` envelope;
+/// alias spellings additionally carry `Deprecation: true`.
+#[test]
+fn every_route_rejects_wrong_methods_with_allow_and_envelope() {
+    let _serial = heavy_guard();
+    let (server, state, coord) = start_pool_server();
+    let mut conn = connect(server.local_addr());
+    for route in ROUTES {
+        let wrong = if route.method == "GET" { "POST" } else { "GET" };
+        let spellings =
+            std::iter::once((route.path, false)).chain(route.aliases.iter().map(|&a| (a, true)));
+        for (path, is_alias) in spellings {
+            let resp = roundtrip(&mut conn, wrong, path, b"");
+            assert_eq!(resp.status, 405, "{wrong} {path}");
+            assert_eq!(resp.header("allow"), Some(route.method), "{wrong} {path}");
+            let e = assert_envelope(&resp);
+            assert_eq!(e.code, "method_not_allowed", "{wrong} {path}");
+            let dep = resp.header("deprecation");
+            assert_eq!(dep, if is_alias { Some("true") } else { None }, "{wrong} {path}");
+        }
+    }
+    drain(server, state, coord);
+}
+
+/// Deprecated alias paths answer byte-identically to their canonical
+/// spelling, modulo the `Deprecation: true` header.
+#[test]
+fn aliases_answer_canonically_plus_deprecation_header() {
+    let _serial = heavy_guard();
+    let (server, state, coord) = start_pool_server();
+    let mut conn = connect(server.local_addr());
+
+    // An empty manifest is a clean, side-effect-free 400 on both paths.
+    let canon = roundtrip(&mut conn, "POST", "/v1/admin/models", b"");
+    let alias = roundtrip(&mut conn, "POST", "/admin/models", b"");
+    assert_eq!(canon.status, 400);
+    assert_eq!(alias.status, 400);
+    assert_eq!(canon.body, alias.body, "alias and canonical bodies diverge");
+    assert_eq!(canon.header("deprecation"), None);
+    assert_eq!(alias.header("deprecation"), Some("true"));
+    assert_eq!(assert_envelope(&alias).code, "bad_manifest");
+
+    // The deprecated shutdown spelling still drains — and is marked.
+    let resp = roundtrip(&mut conn, "POST", "/admin/shutdown", b"");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("deprecation"), Some("true"));
+    let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_eq!(v.get("draining").and_then(Json::as_bool), Some(true));
+    drain(server, state, coord);
+}
+
+/// `GET /v1/models` — the read-only inventory added with the v1 surface.
+#[test]
+fn v1_models_lists_the_serving_inventory() {
+    let _serial = heavy_guard();
+    let (server, state, coord) = start_pool_server();
+    let mut conn = connect(server.local_addr());
+    let resp = roundtrip(&mut conn, "GET", "/v1/models", b"");
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let models = v.get("models").and_then(Json::as_arr).unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("name").and_then(Json::as_str), Some("m"));
+    assert_eq!(models[0].get("version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(models[0].get("geometry").and_then(Json::as_str), Some("28x28"));
+    assert_eq!(v.get("shards").and_then(Json::as_f64), Some(1.0));
+    drain(server, state, coord);
+}
+
+/// Structured payload failures: each maps to its stable code.
+#[test]
+fn payload_failures_map_to_stable_codes() {
+    let _serial = heavy_guard();
+    let (server, state, coord) = start_pool_server();
+    let addr = server.local_addr();
+    let mut conn = connect(addr);
+
+    let resp = roundtrip(&mut conn, "GET", "/no/such/endpoint", b"");
+    assert_eq!(resp.status, 404);
+    assert_eq!(assert_envelope(&resp).code, "not_found");
+
+    let resp = roundtrip(&mut conn, "POST", "/v1/classify", b"{not json");
+    assert_eq!(resp.status, 400);
+    assert_eq!(assert_envelope(&resp).code, "bad_request");
+
+    // Wrong image size against the 28x28 model: the typed BadGeometry.
+    let img32 = BoolImage::blank_sized(32);
+    let body = classify_request_body(Some("m"), &[&img32]);
+    let resp = roundtrip(&mut conn, "POST", "/v1/classify", &body);
+    assert_eq!(resp.status, 400);
+    let e = assert_envelope(&resp);
+    assert_eq!(e.code, "bad_geometry");
+    assert!(e.message.contains("32x32"), "{}", e.message);
+
+    let img = BoolImage::blank();
+    let body = classify_request_body(Some("ghost"), &[&img]);
+    let resp = roundtrip(&mut conn, "POST", "/v1/classify", &body);
+    assert_eq!(resp.status, 404);
+    assert_eq!(assert_envelope(&resp).code, "model_not_found");
+
+    drain(server, state, coord);
+}
+
+/// Wire-level failures: each raw byte pattern maps to its stable code,
+/// with the connection closed after the error response.
+#[test]
+fn wire_failures_map_to_stable_codes() {
+    let _serial = heavy_guard();
+    let (server, state, coord) = start_pool_server();
+    let addr = server.local_addr();
+
+    let raw_cases: [(&str, Vec<u8>, u16, &str); 4] = [
+        (
+            "http/2 preamble",
+            b"GET / HTTP/2.0\r\n\r\n".to_vec(),
+            505,
+            "unsupported_version",
+        ),
+        (
+            "chunked transfer",
+            b"POST /v1/classify HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n".to_vec(),
+            501,
+            "not_implemented",
+        ),
+        (
+            "oversized declared body",
+            b"POST /v1/classify HTTP/1.1\r\ncontent-length: 999999999999\r\n\r\n".to_vec(),
+            413,
+            "body_too_large",
+        ),
+        ("oversized head", oversized_head(), 431, "head_too_large"),
+    ];
+    for (label, bytes, status, code) in raw_cases {
+        let mut conn = connect(addr);
+        conn.get_mut().write_all(&bytes).unwrap();
+        let resp = conn
+            .read_response(&Limits::default())
+            .unwrap_or_else(|e| panic!("{label}: {e}"))
+            .unwrap_or_else(|| panic!("{label}: closed before responding"));
+        assert_eq!(resp.status, status, "{label}");
+        assert_eq!(assert_envelope(&resp).code, code, "{label}");
+        assert_eq!(resp.header("connection"), Some("close"), "{label}");
+    }
+
+    // Mid-request stall: the 408 slow-loris answer, also enveloped.
+    let mut conn = connect(addr);
+    conn.get_mut().write_all(b"POST /v1/cl").unwrap();
+    let resp = conn
+        .read_response(&Limits::default())
+        .expect("a 408 response")
+        .expect("a response before close");
+    assert_eq!(resp.status, 408);
+    assert_eq!(assert_envelope(&resp).code, "request_timeout");
+
+    drain(server, state, coord);
+}
+
+fn oversized_head() -> Vec<u8> {
+    let mut bytes = b"GET /healthz HTTP/1.1\r\nx-pad: ".to_vec();
+    bytes.extend_from_slice(&vec![b'a'; 64 * 1024]);
+    bytes.extend_from_slice(b"\r\n\r\n");
+    bytes
+}
+
+/// A trivial registry-less backend for the `no_registry` case.
+struct EchoBackend;
+
+impl Backend for EchoBackend {
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+    fn max_batch(&self) -> usize {
+        4
+    }
+    fn geometry(&self) -> Geometry {
+        Geometry::asic()
+    }
+    fn classify(&mut self, imgs: &[&BoolImage]) -> anyhow::Result<Vec<BackendOutput>> {
+        Ok(imgs
+            .iter()
+            .map(|_| BackendOutput {
+                prediction: 0,
+                class_sums: vec![0; 10],
+                sim_cycles: None,
+                model_version: None,
+            })
+            .collect())
+    }
+}
+
+/// Backend-induced failures: a panicking shard (`shard_panicked` + retry
+/// hint), a wedged shard past a request deadline (`deadline_exceeded`),
+/// and model administration without a registry (`no_registry`). The
+/// fault plans are armed through `util::fault`; the guard serializes
+/// them process-wide.
+#[test]
+fn backend_failures_map_to_typed_envelope_codes() {
+    let _serial = heavy_guard();
+
+    // Shard panic: typed ShardPanicked → 503 shard_panicked, retryable.
+    {
+        let _armed = fault::arm(FaultPlan::parse("seed=3,eval_panic=n1").unwrap());
+        let (server, state, coord) = start_pool_server();
+        let mut conn = connect(server.local_addr());
+        let img = BoolImage::blank();
+        let body = classify_request_body(Some("m"), &[&img]);
+        let resp = roundtrip(&mut conn, "POST", "/v1/classify", &body);
+        assert_eq!(resp.status, 503, "{}", String::from_utf8_lossy(&resp.body));
+        let e = assert_envelope(&resp);
+        assert_eq!(e.code, "shard_panicked");
+        assert_eq!(e.retry_after_ms, Some(1000));
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        drain(server, state, coord);
+    }
+
+    // Wedged shard + tight per-request deadline: 504 deadline_exceeded.
+    {
+        let _armed = fault::arm(FaultPlan::parse("seed=5,shard_wedge=n1:500").unwrap());
+        let (server, state, coord) = start_pool_server();
+        let mut conn = connect(server.local_addr());
+        let bits = vec!["0"; 784].join(",");
+        let body =
+            format!("{{\"model\":\"m\",\"deadline_ms\":50,\"image\":{{\"bits\":[{bits}]}}}}");
+        let resp = roundtrip(&mut conn, "POST", "/v1/classify", body.as_bytes());
+        assert_eq!(resp.status, 504, "{}", String::from_utf8_lossy(&resp.body));
+        assert_eq!(assert_envelope(&resp).code, "deadline_exceeded");
+        drain(server, state, coord);
+    }
+
+    // No registry: model administration is a typed 409.
+    {
+        let coord = Arc::new(Coordinator::start_with_capacity(
+            || EchoBackend,
+            BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(50),
+            },
+            64,
+        ));
+        let state = ServerState::new(Arc::clone(&coord));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            http_workers: 2,
+            ..ServerConfig::default()
+        };
+        let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind loopback");
+        let mut conn = connect(server.local_addr());
+        let resp = roundtrip(&mut conn, "POST", "/v1/admin/models", b"m = x.cctm\n");
+        assert_eq!(resp.status, 409);
+        assert_eq!(assert_envelope(&resp).code, "no_registry");
+        // The registry-less inventory is an empty list, not an error.
+        let resp = roundtrip(&mut conn, "GET", "/v1/models", b"");
+        assert_eq!(resp.status, 200);
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("models").and_then(Json::as_arr).map(|m| m.len()), Some(0));
+        drain(server, state, coord);
+    }
+}

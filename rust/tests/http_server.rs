@@ -423,8 +423,12 @@ fn bad_image_in_batch_fails_alone_with_200() {
     assert_eq!(results.len(), 10);
     for (i, res) in results.iter().enumerate() {
         if i == 4 {
-            let err = res.get("error").and_then(Json::as_str).unwrap();
-            assert!(err.contains("32x32"), "{err}");
+            // The slot carries the same uniform envelope a whole-call
+            // failure would: a stable code plus a human message.
+            let err = res.get("error").expect("error envelope in the bad slot");
+            assert_eq!(err.get("code").and_then(Json::as_str), Some("bad_geometry"));
+            let msg = err.get("message").and_then(Json::as_str).unwrap();
+            assert!(msg.contains("32x32"), "{msg}");
         } else {
             assert!(res.get("error").is_none());
             let class = res.get("class").and_then(Json::as_f64).unwrap() as u8;
@@ -519,9 +523,9 @@ fn saturated_queues_shed_503_with_retry_after() {
     let resp = roundtrip(&mut conn, "POST", "/v1/classify", &classify_body(None, &refs));
     assert_eq!(resp.status, 503, "{}", String::from_utf8_lossy(&resp.body));
     assert_eq!(resp.header("retry-after"), Some("1"));
-    let v = body_json(&resp);
-    let err = v.get("error").and_then(Json::as_str).unwrap();
-    assert!(err.contains("overloaded"), "{err}");
+    let err = convcotm::server::proto::parse_error_body(&resp.body).expect("uniform envelope");
+    assert_eq!(err.code, "overloaded");
+    assert_eq!(err.retry_after_ms, Some(1000));
     assert!(t0.elapsed() < Duration::from_secs(2), "shedding must not block the HTTP worker");
 
     // /metrics (registry-less mode) reports the shed; /admin/models 409s.

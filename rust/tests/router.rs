@@ -1,0 +1,343 @@
+//! Route-tier integration over real sockets: one router process fronting
+//! live `serve` replicas. Covers rendezvous placement (every request for
+//! a model lands on its one owner), tier-wide inventory and metrics
+//! aggregation, admin fan-out error relay, and the acceptance property:
+//! killing a replica mid-load loses zero requests and emits zero
+//! non-envelope errors.
+
+use convcotm::coordinator::{BatchConfig, Coordinator, ModelRegistry, PoolConfig};
+use convcotm::data::BoolImage;
+use convcotm::server::http::write_request;
+use convcotm::server::proto::{classify_request_body, parse_error_body};
+use convcotm::server::router::{rank_replicas, spawn_health_checker, RouterConfig, RouterState};
+use convcotm::server::{
+    ClientResponse, HttpConn, HttpServer, Limits, ServerConfig, ServerState,
+};
+use convcotm::tm::{Model, Params};
+use convcotm::util::Json;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Socket tests are timing-sensitive; keep them serial within this binary.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn heavy_guard() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fixed_class_model(class: usize) -> Model {
+    let p = Params::asic();
+    let mut m = Model::blank(p.clone());
+    m.set_include(0, p.geometry.num_features(), true);
+    m.set_weight(class, 0, 5);
+    m
+}
+
+/// One live `serve` replica over a single-model registry.
+struct TestReplica {
+    server: HttpServer,
+    state: Arc<ServerState>,
+    coord: Arc<Coordinator>,
+    addr: String,
+}
+
+fn start_replica(registry: Arc<ModelRegistry>) -> TestReplica {
+    let coord = Arc::new(Coordinator::start_pool(
+        registry,
+        PoolConfig {
+            shards: 1,
+            queue_capacity: 256,
+            batch: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+            },
+            ..PoolConfig::default()
+        },
+    ));
+    let state = ServerState::new(Arc::clone(&coord));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 2,
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind replica");
+    let addr = server.local_addr().to_string();
+    TestReplica {
+        server,
+        state,
+        coord,
+        addr,
+    }
+}
+
+fn kill_replica(r: TestReplica) {
+    r.server.request_shutdown();
+    r.server.join();
+    drop(r.state);
+    if let Ok(coord) = Arc::try_unwrap(r.coord) {
+        coord.shutdown();
+    }
+}
+
+/// One router in front of `replicas`, with its health checker running.
+struct TestRouter {
+    server: HttpServer,
+    state: Arc<RouterState>,
+    health: JoinHandle<()>,
+}
+
+fn start_router(replicas: Vec<String>, health_interval: Duration) -> TestRouter {
+    let state = RouterState::new(RouterConfig {
+        replicas,
+        health_interval,
+        ..RouterConfig::default()
+    })
+    .expect("router state");
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 2,
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind router");
+    let health = spawn_health_checker(Arc::clone(&state));
+    TestRouter {
+        server,
+        state,
+        health,
+    }
+}
+
+fn kill_router(r: TestRouter) {
+    r.server.request_shutdown();
+    r.server.join();
+    r.health.join().expect("health checker panicked");
+}
+
+fn connect(addr: &str) -> HttpConn<TcpStream> {
+    let stream = TcpStream::connect(addr).expect("connect to loopback server");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    HttpConn::new(stream)
+}
+
+fn roundtrip(
+    conn: &mut HttpConn<TcpStream>,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> ClientResponse {
+    write_request(conn.get_mut(), method, path, body, true).expect("write request");
+    conn.read_response(&Limits::default())
+        .expect("read response")
+        .expect("server closed connection before responding")
+}
+
+fn body_json(resp: &ClientResponse) -> Json {
+    Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+}
+
+/// Rendezvous placement end to end: every classify for one model lands on
+/// the same single owner; the other replica never sees a forward.
+#[test]
+fn classify_requests_route_consistently_to_one_owner() {
+    let _serial = heavy_guard();
+    let registry = || ModelRegistry::single("live", fixed_class_model(3));
+    let (a, b) = (start_replica(registry()), start_replica(registry()));
+    let router = start_router(vec![a.addr.clone(), b.addr.clone()], Duration::from_millis(50));
+
+    let img = BoolImage::blank();
+    let body = classify_request_body(Some("live"), &[&img]);
+    let mut conn = connect(&router.server.local_addr().to_string());
+    for _ in 0..20 {
+        let resp = roundtrip(&mut conn, "POST", "/v1/classify", &body);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        let class = v.get("results").and_then(Json::as_arr).unwrap()[0]
+            .get("class")
+            .and_then(Json::as_f64);
+        assert_eq!(class, Some(3.0));
+    }
+
+    let forwards: Vec<u64> = router
+        .state
+        .replicas
+        .iter()
+        .map(|r| r.forwarded.load(Ordering::Relaxed))
+        .collect();
+    assert_eq!(forwards.iter().sum::<u64>(), 20);
+    assert!(
+        forwards.contains(&20) && forwards.contains(&0),
+        "placement split across replicas: {forwards:?}"
+    );
+
+    let resp = roundtrip(&mut conn, "GET", "/healthz", b"");
+    assert_eq!(resp.status, 200);
+    let v = body_json(&resp);
+    assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(v.get("role").and_then(Json::as_str), Some("router"));
+
+    kill_router(router);
+    kill_replica(a);
+    kill_replica(b);
+}
+
+/// Tier-wide read paths: `/v1/models` unions disjoint inventories,
+/// `/metrics` sums replica counters under a `"replicas"` breakdown, and
+/// fan-out admin failures relay the worst replica's stable code.
+#[test]
+fn inventory_metrics_and_admin_errors_aggregate_across_the_tier() {
+    let _serial = heavy_guard();
+    let a = start_replica(ModelRegistry::single("alpha", fixed_class_model(1)));
+    let b = start_replica(ModelRegistry::single("beta", fixed_class_model(2)));
+    let router = start_router(vec![a.addr.clone(), b.addr.clone()], Duration::from_millis(50));
+    let mut conn = connect(&router.server.local_addr().to_string());
+
+    // Inventory union of two disjoint single-model replicas.
+    let resp = roundtrip(&mut conn, "GET", "/v1/models", b"");
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let v = body_json(&resp);
+    let mut names: Vec<&str> = v
+        .get("models")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(|m| m.get("name").and_then(Json::as_str))
+        .collect();
+    names.sort_unstable();
+    assert_eq!(names, ["alpha", "beta"]);
+    let raw = v.get("replicas").unwrap();
+    assert!(raw.get(&a.addr).is_some() && raw.get(&b.addr).is_some());
+
+    // One classify directly at each replica, then the router's /metrics
+    // must show the summed count plus the raw breakdown.
+    for (replica, model) in [(&a, "alpha"), (&b, "beta")] {
+        let img = BoolImage::blank();
+        let body = classify_request_body(Some(model), &[&img]);
+        let mut direct = connect(&replica.addr);
+        let resp = roundtrip(&mut direct, "POST", "/v1/classify", &body);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    }
+    let resp = roundtrip(&mut conn, "GET", "/metrics", b"");
+    assert_eq!(resp.status, 200);
+    let v = body_json(&resp);
+    assert_eq!(v.get("requests").and_then(Json::as_f64), Some(2.0));
+    for key in ["replicas", "http", "router"] {
+        assert!(v.get(key).is_some(), "router /metrics missing '{key}'");
+    }
+
+    // Fan-out admin failure: both replicas reject the empty manifest, the
+    // router relays the worst status and its stable code.
+    let resp = roundtrip(&mut conn, "POST", "/v1/admin/models", b"");
+    assert_eq!(resp.status, 400);
+    let e = parse_error_body(&resp.body).expect("uniform envelope from the router");
+    assert_eq!(e.code, "bad_manifest");
+    assert!(e.message.contains("2/2 replica(s) failed"), "{}", e.message);
+
+    // Unknown path: the router speaks the same envelope as a replica.
+    let resp = roundtrip(&mut conn, "GET", "/nope", b"");
+    assert_eq!(resp.status, 404);
+    assert_eq!(parse_error_body(&resp.body).unwrap().code, "not_found");
+
+    kill_router(router);
+    kill_replica(a);
+    kill_replica(b);
+}
+
+/// The acceptance property: killing the owning replica mid-load drops
+/// zero requests — every response is either `200` or a well-formed
+/// envelope, and traffic re-homes to the survivor.
+#[test]
+fn replica_death_fails_over_with_zero_drops() {
+    let _serial = heavy_guard();
+    let registry = || ModelRegistry::single("live", fixed_class_model(3));
+    let (a, b) = (start_replica(registry()), start_replica(registry()));
+    let router = start_router(vec![a.addr.clone(), b.addr.clone()], Duration::from_millis(25));
+    let router_addr = router.server.local_addr().to_string();
+
+    // Which replica owns "live" is a pure function of the addresses.
+    let addrs = [a.addr.as_str(), b.addr.as_str()];
+    let owner_is_a = rank_replicas("live", &addrs)[0] == 0;
+
+    const TOTAL: usize = 300;
+    let progress = Arc::new(AtomicUsize::new(0));
+    let loader = {
+        let progress = Arc::clone(&progress);
+        let addr = router_addr.clone();
+        std::thread::spawn(move || -> Vec<ClientResponse> {
+            let img = BoolImage::blank();
+            let body = classify_request_body(Some("live"), &[&img]);
+            let mut conn = connect(&addr);
+            let mut out = Vec::with_capacity(TOTAL);
+            let mut reconnect_budget = 16usize;
+            while out.len() < TOTAL {
+                let wrote = write_request(conn.get_mut(), "POST", "/v1/classify", &body, true);
+                let resp = match wrote {
+                    Ok(()) => conn.read_response(&Limits::default()).ok().flatten(),
+                    Err(_) => None,
+                };
+                match resp {
+                    Some(resp) => {
+                        out.push(resp);
+                        progress.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        // The router itself never drops a request silently;
+                        // a closed connection is re-dialed, bounded.
+                        reconnect_budget -= 1;
+                        assert!(reconnect_budget > 0, "router keeps closing the connection");
+                        conn = connect(&addr);
+                    }
+                }
+            }
+            out
+        })
+    };
+
+    // Let traffic establish on the owner, then kill it mid-load.
+    let t0 = Instant::now();
+    while progress.load(Ordering::Relaxed) < 100 {
+        assert!(t0.elapsed() < Duration::from_secs(30), "loader stalled");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let (owner, survivor) = if owner_is_a { (a, b) } else { (b, a) };
+    kill_replica(owner);
+
+    let responses = loader.join().expect("loader thread panicked");
+    assert_eq!(responses.len(), TOTAL);
+    let mut ok = 0usize;
+    for (i, resp) in responses.iter().enumerate() {
+        if resp.status == 200 {
+            ok += 1;
+        } else {
+            // Zero non-enveloped failures, even in the kill window.
+            let e = parse_error_body(&resp.body).unwrap_or_else(|| {
+                panic!(
+                    "response {i}: HTTP {} without envelope: {}",
+                    resp.status,
+                    String::from_utf8_lossy(&resp.body)
+                )
+            });
+            assert!(
+                ["replica_unavailable", "overloaded", "shard_panicked"]
+                    .contains(&e.code.as_str()),
+                "response {i}: unexpected failover code {}",
+                e.code
+            );
+        }
+    }
+    assert!(ok >= 250, "only {ok}/{TOTAL} requests succeeded across the failover");
+    let tail_ok = responses[TOTAL - 50..].iter().all(|r| r.status == 200);
+    assert!(tail_ok, "traffic did not settle on the survivor after failover");
+
+    // The router noticed: health reports a degraded tier.
+    let mut conn = connect(&router_addr);
+    let resp = roundtrip(&mut conn, "GET", "/healthz", b"");
+    assert_eq!(resp.status, 200);
+    assert_eq!(body_json(&resp).get("status").and_then(Json::as_str), Some("degraded"));
+
+    kill_router(router);
+    kill_replica(survivor);
+}
