@@ -34,6 +34,11 @@ import sys
 # the scalar compiled plan or it has no reason to exist.
 FLOOR_KEYS = ("block_speedup_vs_plan",)
 
+# Scalar keys whose baseline value is a hard ceiling for the fresh run:
+# the disarmed observability hooks must stay free (≤1% of request time)
+# or they are not allowed to live on the hot path.
+CEILING_KEYS = ("trace_overhead_pct",)
+
 # Normalized paths whose fresh allocs_per_img must be exactly 0.0. The
 # blocked hot path's zero-alloc invariant is absolute — 0.4 allocs/img
 # would pass the generic >0.5 alloc gate while still meaning a per-block
@@ -139,6 +144,7 @@ def main(argv):
         ("pool_speedup_4v1_shards", "×"),
         ("http_speedup_4v1_shards", "×"),
         ("http_overhead_us", " µs"),
+        ("trace_overhead_pct", "%"),
         ("train_speedup_4v1", "×"),
     ):
         value = fresh_doc.get(key)
@@ -153,6 +159,14 @@ def main(argv):
             failures.append(f"{key}: missing from the fresh run (baseline floor {b_val:.2f})")
         elif f_val < b_val:
             failures.append(f"{key}: {f_val:.2f} below the baseline floor {b_val:.2f}")
+    for key in CEILING_KEYS:
+        b_val, f_val = baseline_doc.get(key), fresh_doc.get(key)
+        if not isinstance(b_val, (int, float)):
+            continue
+        if not isinstance(f_val, (int, float)):
+            failures.append(f"{key}: missing from the fresh run (baseline ceiling {b_val:.2f})")
+        elif f_val > b_val:
+            failures.append(f"{key}: {f_val:.2f} above the baseline ceiling {b_val:.2f}")
 
     report = "\n".join(lines) + "\n"
     print(report)

@@ -1,0 +1,196 @@
+#!/usr/bin/env python3
+"""Prometheus text-exposition linter for the hand-rolled renderer.
+
+The server's `/v1/metrics?format=prometheus` output comes from
+`rust/src/obs/promtext.rs`, which renders the text format by hand (the
+repo is std-only — no client library). This linter is the contract that
+keeps that renderer honest: CI scrapes a live server in
+`ci/http_smoke.sh` and pipes the body through here, and
+`tests/observability.rs` asserts the same invariants from Rust.
+
+Checked (text format v0.0.4):
+  - every sample belongs to a family declared with `# HELP` and `# TYPE`
+    *before* its first sample;
+  - metric names match `[a-zA-Z_:][a-zA-Z0-9_:]*`;
+  - declared types are one of counter | gauge | histogram;
+  - counter family names end in `_total`;
+  - histogram families expose `_bucket`/`_sum`/`_count` series whose
+    `le` edges parse, ascend, and carry cumulative non-decreasing
+    counts, with a `+Inf` bucket equal to `_count`;
+  - every sample value parses as a float;
+  - no duplicate (name, labels) series.
+
+Usage: check_promtext.py [FILE]   (reads stdin when FILE is omitted)
+"""
+
+import math
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>.*)\})?\s+(?P<value>\S+)(?:\s+\S+)?$"
+)
+TYPES = {"counter", "gauge", "histogram"}
+HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def parse_value(raw):
+    if raw == "+Inf":
+        return math.inf
+    if raw == "-Inf":
+        return -math.inf
+    return float(raw)
+
+
+def family_of(name, types):
+    """Map a sample name to its declared family (histogram suffix-aware)."""
+    if name in types:
+        return name
+    for suffix in HIST_SUFFIXES:
+        base = name.removesuffix(suffix)
+        if base != name and types.get(base) == "histogram":
+            return base
+    return None
+
+
+def lint(text):
+    errors = []
+    types = {}  # family -> declared type
+    helped = set()
+    seen_series = set()  # (name, labels) duplicates
+    # histogram family -> {series-key -> [(le, count)]} and sums/counts
+    hist_buckets = {}
+    hist_scalars = {}
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        def err(msg):
+            errors.append(f"line {lineno}: {msg} | {line}")
+
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or not NAME_RE.match(parts[2]):
+                err("malformed HELP line")
+                continue
+            helped.add(parts[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4 or not NAME_RE.match(parts[2]):
+                err("malformed TYPE line")
+                continue
+            name, kind = parts[2], parts[3]
+            if kind not in TYPES:
+                err(f"type '{kind}' not in {sorted(TYPES)}")
+                continue
+            if name in types:
+                err(f"duplicate TYPE declaration for {name}")
+            if name not in helped:
+                err(f"TYPE for {name} without a preceding HELP")
+            if kind == "counter" and not name.endswith("_total"):
+                err(f"counter {name} must end in _total")
+            types[name] = kind
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment
+
+        m = SAMPLE_RE.match(line)
+        if not m:
+            err("unparseable sample line")
+            continue
+        name, labels, raw = m.group("name"), m.group("labels") or "", m.group("value")
+        try:
+            value = parse_value(raw)
+        except ValueError:
+            err(f"value '{raw}' is not a float")
+            continue
+        family = family_of(name, types)
+        if family is None:
+            err(f"sample {name} has no preceding HELP/TYPE declaration")
+            continue
+        series = (name, labels)
+        if series in seen_series:
+            err(f"duplicate series {name}{{{labels}}}")
+        seen_series.add(series)
+
+        if types[family] == "histogram":
+            scalars = hist_scalars.setdefault(family, {})
+            if name == family + "_bucket":
+                pairs = [p for p in labels.split(",") if p and not p.startswith("le=")]
+                le = None
+                for part in labels.split(","):
+                    if part.startswith('le="') and part.endswith('"'):
+                        le = part[4:-1]
+                if le is None:
+                    err("histogram bucket without an le label")
+                    continue
+                try:
+                    edge = parse_value(le)
+                except ValueError:
+                    err(f"le edge '{le}' is not a float")
+                    continue
+                key = ",".join(pairs)
+                hist_buckets.setdefault(family, {}).setdefault(key, []).append(
+                    (lineno, edge, value)
+                )
+            elif name == family + "_sum":
+                scalars[("sum", labels)] = value
+            elif name == family + "_count":
+                scalars[("count", labels)] = value
+            elif name == family:
+                err(f"histogram {family} exposes a bare sample")
+
+    # Cross-line histogram invariants.
+    for family, by_series in hist_buckets.items():
+        for key, buckets in by_series.items():
+            where = f"{family}{{{key}}}" if key else family
+            edges = [e for _, e, _ in buckets]
+            if edges != sorted(edges):
+                errors.append(f"{where}: le edges are not ascending: {edges}")
+            counts = [c for _, _, c in buckets]
+            if any(later < earlier for earlier, later in zip(counts, counts[1:])):
+                errors.append(f"{where}: bucket counts are not cumulative: {counts}")
+            if not edges or not math.isinf(edges[-1]):
+                errors.append(f"{where}: missing +Inf bucket")
+                continue
+            count = hist_scalars.get(family, {}).get(("count", key))
+            if count is None:
+                errors.append(f"{where}: no matching {family}_count series")
+            elif counts[-1] != count:
+                errors.append(
+                    f"{where}: +Inf bucket {counts[-1]} != _count {count}"
+                )
+    for family, kind in types.items():
+        if kind == "histogram" and family not in hist_buckets:
+            errors.append(f"{family}: declared histogram has no _bucket series")
+
+    return errors, len(seen_series)
+
+
+def main(argv):
+    if len(argv) > 2:
+        print(__doc__)
+        return 2
+    if len(argv) == 2:
+        with open(argv[1], encoding="utf-8") as f:
+            text = f.read()
+    else:
+        text = sys.stdin.read()
+    errors, n_series = lint(text)
+    if errors:
+        print(f"promtext lint: {len(errors)} error(s)", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    if n_series == 0:
+        print("promtext lint: no samples found", file=sys.stderr)
+        return 1
+    print(f"promtext lint: OK ({n_series} series)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

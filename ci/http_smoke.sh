@@ -4,16 +4,21 @@
 # Phase 1 (single server): trains a 1-epoch model, starts
 # `serve --listen 127.0.0.1:0` (release binary) in the background, then
 # over real sockets: POSTs one image and asserts 200 + a well-formed
-# classify response, asserts GET /v1/models and /metrics accounting,
-# asserts the deprecated alias paths still answer (plus `Deprecation:
-# true`), drains via the alias POST /admin/shutdown and verifies the
-# process exits cleanly with its final drained summary.
+# classify response, asserts GET /v1/models and /v1/metrics accounting,
+# asserts the X-Request-Id contract (supplied ids echoed, absent ids
+# minted as 32-hex), scrapes `/v1/metrics?format=prometheus` and lints
+# it with ci/check_promtext.py, asserts /v1/debug/slow holds span
+# trees, asserts the deprecated alias paths still answer (plus
+# `Deprecation: true`), drains via the alias POST /admin/shutdown and
+# verifies the process exits cleanly with its final drained summary.
 #
 # Phase 2 (route tier): starts two `serve` replicas and one `route`
-# process fronting them, drives sequential classify load through the
-# router, SIGKILLs the replica that is actually serving mid-load, and
-# asserts zero dropped and zero non-enveloped responses across the
-# failover, a degraded /healthz, and a clean router drain.
+# process fronting them, asserts a request id round-trips router →
+# replica (span trees on both tiers via /v1/debug/slow), drives
+# sequential classify load through the router, SIGKILLs the replica
+# that is actually serving mid-load, and asserts zero dropped and zero
+# non-enveloped responses across the failover, a lint-clean router
+# Prometheus scrape, a degraded /healthz, and a clean router drain.
 #
 # Usage: ci/http_smoke.sh [path/to/convcotm]
 set -euo pipefail
@@ -65,13 +70,15 @@ PIDS+=("$SERVE_PID")
 ADDR=$(wait_for_addr "$TMP/serve.log" "$SERVE_PID" listening)
 echo "front door at $ADDR"
 
-python3 - "$ADDR" <<'PY'
+python3 - "$ADDR" "$TMP" <<'PY'
 import json
+import os
 import sys
 import urllib.error
 import urllib.request
 
 addr = sys.argv[1]
+tmp = sys.argv[2]
 base = f"http://{addr}"
 
 def call(path, payload=None, method=None):
@@ -115,12 +122,44 @@ except urllib.error.HTTPError as e:
     body = json.loads(e.read())
     assert e.code == 404 and body["error"]["code"] == "model_not_found", body
 
-status, _, metrics = call("/metrics")
+status, headers, metrics = call("/v1/metrics")
 assert status == 200, metrics
+assert "deprecation" not in {k.lower() for k in headers}, headers
 assert metrics["requests"] >= 1, metrics
 assert metrics["http"]["responses_2xx"] >= 2, metrics
+assert metrics["latency_hist"]["count"] >= 1, metrics["latency_hist"]
 print(f"metrics: {metrics['requests']} pool request(s), "
       f"{metrics['http']['requests']} http request(s)")
+
+# Request-id contract: a supplied X-Request-Id is echoed verbatim; an
+# absent one is replaced by a minted 32-char lowercase-hex id.
+req = urllib.request.Request(base + "/healthz", headers={"X-Request-Id": "smoke-req-1"})
+with urllib.request.urlopen(req, timeout=10) as resp:
+    assert resp.headers.get("X-Request-Id") == "smoke-req-1", dict(resp.headers)
+with urllib.request.urlopen(base + "/healthz", timeout=10) as resp:
+    minted = resp.headers.get("X-Request-Id")
+assert minted and len(minted) == 32, minted
+assert all(c in "0123456789abcdef" for c in minted), minted
+print(f"request ids: supplied id echoed, absent id minted ({minted})")
+
+# The Prometheus rendering of the same snapshot, linted after this block.
+req = urllib.request.Request(base + "/v1/metrics?format=prometheus")
+with urllib.request.urlopen(req, timeout=10) as resp:
+    ctype = resp.headers.get("Content-Type", "")
+    prom = resp.read().decode()
+assert ctype.startswith("text/plain; version=0.0.4"), ctype
+assert "# TYPE convcotm_requests_total counter" in prom, prom[:400]
+assert "convcotm_request_latency_seconds_bucket" in prom, prom[:400]
+with open(os.path.join(tmp, "prom_serve.txt"), "w") as f:
+    f.write(prom)
+
+# The slow-request ring: `serve` runs with the default --trace-slow-us 0,
+# so every request competes and the classify span tree must be present.
+status, _, slow = call("/v1/debug/slow")
+assert status == 200 and slow["armed"] is True, slow
+stages = {s["stage"] for e in slow["slow"] for s in e["stages"]}
+assert {"parse", "eval"} <= stages, slow
+print(f"debug/slow: {slow['count']} trace(s), stages {sorted(stages)}")
 
 # The deprecated alias answers canonically, flagged with Deprecation.
 status, headers, out = call("/admin/shutdown", b"")
@@ -128,6 +167,7 @@ assert status == 200 and out["draining"] is True, out
 assert headers.get("Deprecation", headers.get("deprecation")) == "true", headers
 print("drain requested via the deprecated alias (Deprecation: true)")
 PY
+python3 ci/check_promtext.py "$TMP/prom_serve.txt"
 
 echo "== phase 1: wait for the drained exit =="
 for _ in $(seq 1 100); do
@@ -166,7 +206,7 @@ PIDS+=("$ROUTE_PID")
 ROUTE_ADDR=$(wait_for_addr "$TMP/route.log" "$ROUTE_PID" routing)
 echo "router at $ROUTE_ADDR over $R1_ADDR + $R2_ADDR"
 
-python3 - "$ROUTE_ADDR" "$R1_ADDR=$R1_PID" "$R2_ADDR=$R2_PID" <<'PY'
+python3 - "$ROUTE_ADDR" "$TMP" "$R1_ADDR=$R1_PID" "$R2_ADDR=$R2_PID" <<'PY'
 import json
 import os
 import signal
@@ -175,8 +215,9 @@ import urllib.error
 import urllib.request
 
 addr = sys.argv[1]
+tmp = sys.argv[2]
 base = f"http://{addr}"
-pid_of = dict(kv.rsplit("=", 1) for kv in sys.argv[2:])
+pid_of = dict(kv.rsplit("=", 1) for kv in sys.argv[3:])
 
 def call(path, payload=None):
     data = None
@@ -198,6 +239,33 @@ assert status == 200, models
 assert [m["name"] for m in models["models"]] == ["smoke"], models
 assert len(models["replicas"]) == 2, models
 
+# A request id round-trips client → router → replica: the router echoes
+# it, and both tiers' slow rings hold a span tree under that id.
+req = urllib.request.Request(
+    base + "/v1/classify",
+    data=json.dumps(body).encode(),
+    headers={"X-Request-Id": "smoke-trace-e2e"},
+)
+with urllib.request.urlopen(req, timeout=10) as resp:
+    assert resp.status == 200, resp.status
+    assert resp.headers.get("X-Request-Id") == "smoke-trace-e2e", dict(resp.headers)
+status, slow = call("/v1/debug/slow")
+assert status == 200 and slow["armed"] is True, slow
+mine = [e for e in slow["slow"] if e["request_id"] == "smoke-trace-e2e"]
+assert mine, [e["request_id"] for e in slow["slow"]]
+router_stages = {s["stage"] for e in mine for s in e["stages"]}
+assert "forward" in router_stages, mine
+assert len(slow["replicas"]) == 2, sorted(slow["replicas"])
+replica_stages = {
+    s["stage"]
+    for rep in slow["replicas"].values()
+    for e in rep.get("slow", [])
+    if e["request_id"] == "smoke-trace-e2e"
+    for s in e["stages"]
+}
+assert {"parse", "eval"} <= replica_stages, slow["replicas"]
+print("span tree: router forward + replica parse/eval under one request id")
+
 TOTAL, KILL_AT = 300, 100
 outcomes = []  # (status, code-or-None) per request — nothing is dropped
 killed = None
@@ -213,7 +281,7 @@ for i in range(TOTAL):
     if i + 1 == KILL_AT:
         # Kill whichever replica is actually serving (the rendezvous
         # owner): the one the router reports forwards on.
-        _, metrics = call("/metrics")
+        _, metrics = call("/v1/metrics")
         owner = max(metrics["router"], key=lambda a: metrics["router"][a]["forwarded"])
         killed = owner
         os.kill(int(pid_of[owner]), signal.SIGKILL)
@@ -230,6 +298,22 @@ tail = outcomes[-50:]
 assert all(s == 200 for s, _ in tail), f"traffic did not settle on the survivor: {tail}"
 print(f"failover: {ok}/{TOTAL} ok, {len(errors)} enveloped error(s), 0 dropped")
 
+# Fleet metrics after the failover: percentiles derived from the merged
+# histograms, plus the Prometheus rendering (linted after this block).
+# (The killed owner's counts died with it; only the survivor reports.)
+_, metrics = call("/v1/metrics")
+assert metrics["latency_hist"]["count"] > 0, metrics["latency_hist"]
+assert metrics["latency_p50_us"] > 0, metrics
+assert "debug" in metrics, sorted(metrics)
+req = urllib.request.Request(base + "/v1/metrics?format=prometheus")
+with urllib.request.urlopen(req, timeout=10) as resp:
+    ctype = resp.headers.get("Content-Type", "")
+    prom = resp.read().decode()
+assert ctype.startswith("text/plain; version=0.0.4"), ctype
+assert "convcotm_request_latency_seconds_bucket" in prom, prom[:400]
+with open(os.path.join(tmp, "prom_route.txt"), "w") as f:
+    f.write(prom)
+
 status, health = call("/healthz")
 assert status == 200 and health["status"] == "degraded", health
 assert health["role"] == "router", health
@@ -238,6 +322,7 @@ status, out = call("/v1/admin/shutdown", b"")
 assert status == 200 and out["draining"] is True, out
 print("router drain requested")
 PY
+python3 ci/check_promtext.py "$TMP/prom_route.txt"
 
 echo "== phase 2: wait for the drained router exit =="
 for _ in $(seq 1 100); do

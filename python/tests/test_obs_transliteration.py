@@ -1,0 +1,124 @@
+"""Transliteration of the mergeable latency-histogram bucket map
+(``rust/src/obs/hist.rs``): 64 half-octave log2 buckets over integer
+nanoseconds, with a half-up µs→ns conversion both languages can express
+identically (``int(us * 1000 + 0.5)``).
+
+The bucket layout is a cross-fleet wire contract: every shard, replica
+and tool must map a duration to the *same* bucket or merged histograms
+stop being exact. This file pins the same vectors as the Rust module's
+``bucket_index_pinned_vectors`` and re-proves the merge/percentile
+invariants on the Python side.
+"""
+
+HIST_BUCKETS = 64
+RAW_OFFSET = 16
+
+
+def duration_ns(us: float) -> int:
+    if us <= 0.0:
+        return 0
+    return min(int(us * 1000.0 + 0.5), (1 << 64) - 1)
+
+
+def bucket_index(us: float) -> int:
+    ns = max(duration_ns(us), 1)
+    msb = ns.bit_length() - 1
+    half = 0 if msb == 0 else (ns >> (msb - 1)) & 1
+    raw = 2 * msb + half
+    return min(max(raw - RAW_OFFSET, 0), HIST_BUCKETS - 1)
+
+
+def bucket_lower_us(k: int) -> float:
+    if k == 0:
+        return 0.0
+    raw = min(k, HIST_BUCKETS - 1) + RAW_OFFSET
+    msb, half = raw // 2, raw % 2
+    ns = (1 << msb) + half * (1 << (msb - 1))
+    return ns / 1000.0
+
+
+def bucket_upper_us(k: int) -> float:
+    if k + 1 >= HIST_BUCKETS:
+        return bucket_lower_us(HIST_BUCKETS - 1) * 2.0
+    return bucket_lower_us(k + 1)
+
+
+def record(hist: list[int], us: float) -> None:
+    hist[bucket_index(us)] += 1
+
+
+def percentile(hist: list[int], q: float) -> float:
+    count = sum(hist)
+    if count == 0:
+        return 0.0
+    rank = min(max(q, 0.0), 1.0) * count
+    cum = 0
+    for k, c in enumerate(hist):
+        if c == 0:
+            continue
+        prev = cum
+        cum += c
+        if cum >= rank:
+            lo, hi = bucket_lower_us(k), bucket_upper_us(k)
+            frac = min(max((rank - prev) / c, 0.0), 1.0)
+            return lo + frac * (hi - lo)
+    return bucket_upper_us(HIST_BUCKETS - 1)
+
+
+def test_bucket_index_pinned_vectors():
+    # Mirrors rust/src/obs/hist.rs::bucket_index_pinned_vectors exactly.
+    vectors = [
+        (0.0, 0),
+        (0.1, 0),  # 100 ns: sub-µs underflow
+        (0.383, 0),  # 383 ns: last underflow value
+        (0.384, 1),  # 384 ns: first half-octave above 256·1.5
+        (1.0, 3),  # 1 µs = 1000 ns: msb 9, half 1 → raw 19
+        (25.4, 13),  # the paper's per-classification latency
+        (1_000.0, 23),  # 1 ms
+        (1_000_000.0, 43),  # 1 s
+        (10_000_000.0, 50),  # 10 s
+        (1e12, 63),  # absurd → overflow bucket
+    ]
+    for us, idx in vectors:
+        assert bucket_index(us) == idx, f"us={us}"
+
+
+def test_edges_are_consistent_with_indexing():
+    for k in range(1, HIST_BUCKETS):
+        lo = bucket_lower_us(k)
+        assert bucket_index(lo) == k, f"lower edge of {k} must land in {k}"
+        assert bucket_index(lo - 0.001) == k - 1, f"below edge of {k}"
+        assert bucket_upper_us(k - 1) == lo
+
+
+def test_merge_is_exact_bucket_addition():
+    a = [0] * HIST_BUCKETS
+    b = [0] * HIST_BUCKETS
+    union = [0] * HIST_BUCKETS
+    for i in range(2000):
+        us = 0.5 * 1.01 ** (i % 1500)
+        record(a if i % 3 == 0 else b, us)
+        record(union, us)
+    merged = [x + y for x, y in zip(a, b)]
+    assert merged == union, "merge must equal recording the union"
+    assert sum(merged) == 2000
+
+
+def test_percentiles_track_the_distribution():
+    hist = [0] * HIST_BUCKETS
+    for i in range(1, 10_001):
+        record(hist, float(i))  # uniform 1 µs..10 ms
+    p50 = percentile(hist, 0.5)
+    p99 = percentile(hist, 0.99)
+    # Half-octave buckets bound the relative error by ~sqrt(2).
+    assert 3_300.0 <= p50 <= 7_200.0, p50
+    assert 6_800.0 <= p99 <= 14_200.0, p99
+    assert p50 < p99
+
+
+if __name__ == "__main__":
+    test_bucket_index_pinned_vectors()
+    test_edges_are_consistent_with_indexing()
+    test_merge_is_exact_bucket_addition()
+    test_percentiles_track_the_distribution()
+    print("ok")

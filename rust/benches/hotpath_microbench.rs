@@ -395,6 +395,93 @@ fn bench_tier_rows(
     }
 }
 
+/// Traced (disarmed hooks) vs untraced hot path. The traced run performs
+/// the full per-request observability sequence the server executes when
+/// tracing is *disarmed* — mint an id, open the scope, one `Instant` read
+/// (the unconditional parse clock), three `record_stage` early-returns,
+/// close the scope — amortized over a batch-16 request, exactly like the
+/// front door. The overhead must stay ≤1% (`check_bench.py` gates
+/// `trace_overhead_pct`); `tests/obs_alloc.rs` holds the allocation half
+/// of the same claim. Median of alternating fixed-work trials, so a
+/// scheduler hiccup in one trial cannot fake a regression.
+fn bench_trace_overhead(
+    model: &convcotm::tm::Model,
+    images: &[convcotm::data::BoolImage],
+    t: &mut Table,
+    rows: &mut Vec<Row>,
+) -> f64 {
+    use convcotm::obs::{self, Stage, TraceId};
+    assert!(!obs::armed(), "benches measure the disarmed discipline");
+    let engine = Engine::new();
+    let plan = ClausePlan::compile(model);
+    let mut scratch = EvalScratch::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_images = if quick { 4_000 } else { 20_000 };
+    let batch = 16usize;
+
+    let untraced = |scratch: &mut EvalScratch| {
+        let t0 = Instant::now();
+        for i in 0..n_images {
+            let img = &images[i % images.len()];
+            std::hint::black_box(engine.classify_with(&plan, img, scratch));
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let traced = |scratch: &mut EvalScratch| {
+        let t0 = Instant::now();
+        let mut i = 0usize;
+        while i < n_images {
+            obs::begin_request(TraceId::mint());
+            let parse_t0 = Instant::now();
+            obs::record_stage(Stage::Parse, parse_t0.elapsed().as_secs_f64() * 1e6);
+            let end = (i + batch).min(n_images);
+            while i < end {
+                let img = &images[i % images.len()];
+                std::hint::black_box(engine.classify_with(&plan, img, scratch));
+                i += 1;
+            }
+            obs::record_stage(Stage::QueueWait, 0.0);
+            obs::record_stage(Stage::Eval, 0.0);
+            obs::end_request(200);
+        }
+        t0.elapsed().as_secs_f64()
+    };
+
+    // Warm both shapes, then alternate fixed-work trials.
+    let _ = untraced(&mut scratch);
+    let _ = traced(&mut scratch);
+    let trials = if quick { 3 } else { 5 };
+    let mut overheads = Vec::with_capacity(trials);
+    let (mut last_u, mut last_t) = (0.0f64, 0.0f64);
+    for _ in 0..trials {
+        last_u = untraced(&mut scratch);
+        last_t = traced(&mut scratch);
+        overheads.push((last_t - last_u) / last_u * 100.0);
+    }
+    overheads.sort_by(f64::total_cmp);
+    let pct = overheads[overheads.len() / 2];
+
+    for (label, secs) in [
+        ("classify untraced (no hooks)", last_u),
+        ("classify traced (disarmed hooks)", last_t),
+    ] {
+        let rate = n_images as f64 / secs;
+        t.row(&[
+            label.into(),
+            format!("{} img/s", fmt_k(rate)),
+            format!("{:.2} µs/img", 1e6 / rate),
+            "—".into(),
+        ]);
+        rows.push(Row {
+            label: label.to_string(),
+            img_per_s: rate,
+            us_per_img: 1e6 / rate,
+            allocs_per_img: None,
+        });
+    }
+    pct
+}
+
 fn main() {
     section("Hot-path microbenchmarks (§Perf)");
     let fixture = FixtureSpec::quick(SynthFamily::Digits).build();
@@ -570,6 +657,10 @@ fn main() {
     // load through a 2-replica route tier.
     bench_tier_rows(&model, &images, &mut t, &mut rows);
 
+    // Traced vs untraced: the disarmed per-request hook sequence amortized
+    // over batch-16 requests must be free to within the ≤1% CI gate.
+    let trace_overhead_pct = bench_trace_overhead(&model, &images, &mut t, &mut rows);
+
     // PJRT artifacts.
     #[cfg(feature = "pjrt")]
     let artifact_dir =
@@ -655,6 +746,11 @@ fn main() {
         } else {
             "MISSED"
         }
+    );
+    println!(
+        "traced vs untraced (disarmed hooks, batch-16 amortized): {trace_overhead_pct:+.3}% \
+         (gate ≤1%) — {}",
+        if trace_overhead_pct <= 1.0 { "HOLDS" } else { "MISSED" }
     );
     let pool_speedup = pool_rates[1] / pool_rates[0];
     println!(
@@ -766,6 +862,7 @@ fn main() {
         ("block_speedup_vs_plan", Json::num(block_speedup)),
         ("pool_speedup_4v1_shards", Json::num(pool_speedup)),
         ("http_overhead_us", Json::num(http_overhead_us)),
+        ("trace_overhead_pct", Json::num(trace_overhead_pct)),
         ("http_speedup_4v1_shards", Json::num(http_rates[1] / http_rates[0])),
         ("train_speedup_4v1", Json::num(train_speedup)),
         ("train_hw_samples_per_s_27m8", Json::num(hw_rate)),

@@ -11,6 +11,7 @@
 use crate::asic::{Accelerator, ChipConfig};
 use crate::data::boolean::BoolImage;
 use crate::data::Geometry;
+use crate::obs::StageTiming;
 use crate::tm::{BlockEval, ClausePlan, EvalScratch, Model, DEFAULT_BLOCK, MIN_BLOCK};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -29,6 +30,14 @@ pub struct BackendOutput {
     /// invariant the hot-swap tests pin is "prediction and version always
     /// agree".
     pub model_version: Option<u64>,
+    /// Coordinator-side stage split (queue wait / eval, and whether the
+    /// blocked evaluator served the request), measured by the shard
+    /// worker that owns the clocks and carried back in-band so the HTTP
+    /// thread can assemble the request's span tree without cross-thread
+    /// trace plumbing. `None` from plain backends (they never see the
+    /// queue), and always `None` in backend unit tests — full-struct
+    /// equality there stays meaningful.
+    pub timing: Option<StageTiming>,
 }
 
 /// A batched classification backend.
@@ -120,6 +129,7 @@ fn plan_classify_one(
         class_sums: scratch.class_sums().to_vec(),
         sim_cycles: None,
         model_version: None,
+        timing: None,
     }
 }
 
@@ -214,6 +224,7 @@ fn block_outputs(scratch: &EvalScratch, n: usize) -> Vec<BackendOutput> {
             class_sums: block.class_sums(i).to_vec(),
             sim_cycles: None,
             model_version: None,
+            timing: None,
         })
         .collect()
 }
@@ -339,6 +350,7 @@ impl Backend for AsicBackend {
                 class_sums: res.class_sums,
                 sim_cycles: Some(res.report.phases.latency() as u64),
                 model_version: None,
+                timing: None,
             });
         }
         Ok(out)
@@ -404,6 +416,7 @@ impl Backend for PjrtBackend {
                 class_sums: o.class_sums.iter().map(|&x| x as i32).collect(),
                 sim_cycles: None,
                 model_version: None,
+                timing: None,
             })
             .collect())
     }

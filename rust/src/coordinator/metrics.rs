@@ -6,12 +6,24 @@
 //! on the hot path); [`Metrics::merged`] folds any number of sinks into a
 //! single [`MetricsSnapshot`] with per-shard request counts preserved.
 //!
-//! Latencies are kept in a **fixed-capacity reservoir sample** (Vitter's
-//! Algorithm R over [`crate::util::prng::Xoshiro256ss`]) instead of an
-//! unbounded `Vec`: under sustained traffic the old buffer was a slow
-//! leak — gigabytes per day at the paper's 60.3 k req/s — while the
-//! reservoir keeps percentiles statistically faithful at bounded memory.
+//! Latency is tracked two ways, with distinct jobs:
+//!
+//! - **Mergeable histograms** ([`crate::obs::hist`]): fixed-layout
+//!   half-octave log₂ buckets recorded lock-free outside the mutex. These
+//!   are the *authoritative* percentile source — bucket counts sum
+//!   exactly across shards and replicas, so fleet percentiles computed
+//!   from the summed histogram are statistically sound. Per-stage
+//!   histograms (`queue_wait`, `eval`) ride alongside the end-to-end one.
+//! - **A fixed-capacity reservoir sample** (Vitter's Algorithm R over
+//!   [`crate::util::prng::Xoshiro256ss`]) kept as an **exemplar source
+//!   only**: real latency values for humans to eyeball, not a percentile
+//!   input. (Uniform reservoirs with different `seen` counts are not
+//!   mergeable — concatenating them skews fleet percentiles toward
+//!   low-traffic shards, the router bug this layout fixed.) It also still
+//!   bounds memory: the old unbounded buffer was a slow leak — gigabytes
+//!   per day at the paper's 60.3 k req/s.
 
+use crate::obs::hist::{AtomicLogHist, HistSnapshot};
 use crate::util::prng::Xoshiro256ss;
 use crate::util::stats::{Histogram, Summary};
 use std::collections::BTreeMap;
@@ -22,6 +34,20 @@ use std::time::Instant;
 /// p99 estimate within a fraction of a percentile rank of the true value;
 /// memory stays at 32 KiB per shard forever.
 pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// Base reservoir seed; per-shard sinks derive distinct seeds from it via
+/// [`Metrics::for_shard`]. Identical seeds across shards would correlate
+/// which observations the exemplar reservoirs keep.
+pub const RESERVOIR_SEED: u64 = 0x5EED_CA7;
+
+/// Exemplar latency values surfaced per snapshot (humans eyeball these;
+/// percentiles come from the histograms).
+pub const EXEMPLAR_COUNT: usize = 8;
+
+/// Snapshot fields holding mergeable stage histograms, in the order
+/// `[end-to-end, queue_wait, eval]` (shared with the replica aggregation
+/// and the Prometheus renderer).
+pub const HIST_FIELDS: &[&str] = &["latency_hist", "queue_wait_hist", "eval_hist"];
 
 /// Fixed-capacity uniform reservoir (Algorithm R): after `n` pushes the
 /// buffer holds a uniform sample of all `n` observations.
@@ -81,9 +107,15 @@ struct Inner {
     per_model: BTreeMap<String, ModelStats>,
 }
 
-/// Thread-safe metrics sink (one per shard worker).
+/// Thread-safe metrics sink (one per shard worker). The mergeable stage
+/// histograms live outside the mutex — recording into them is lock-free
+/// (relaxed `fetch_add`s), so they can be fed from the shard worker's hot
+/// path without joining the reservoir's lock.
 pub struct Metrics {
     inner: Mutex<Inner>,
+    latency_hist: AtomicLogHist,
+    queue_wait_hist: AtomicLogHist,
+    eval_hist: AtomicLogHist,
 }
 
 impl Default for Metrics {
@@ -94,21 +126,48 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Metrics {
+        Metrics::with_seed(RESERVOIR_SEED)
+    }
+
+    /// The sink for shard `i`: reservoir seed decorrelated from every
+    /// other shard's by a golden-ratio multiply, so the exemplar
+    /// reservoirs across a pool don't all keep/evict the same ranks.
+    pub fn for_shard(i: usize) -> Metrics {
+        Metrics::with_seed(
+            RESERVOIR_SEED ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+    }
+
+    pub fn with_seed(seed: u64) -> Metrics {
         Metrics {
             inner: Mutex::new(Inner {
                 started: Instant::now(),
                 requests: 0,
                 errors: 0,
-                latency: Reservoir::new(LATENCY_RESERVOIR_CAP, 0x5EED_CA7),
+                latency: Reservoir::new(LATENCY_RESERVOIR_CAP, seed),
                 batch_hist: Histogram::new(vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0]),
                 per_model: BTreeMap::new(),
             }),
+            latency_hist: AtomicLogHist::new(),
+            queue_wait_hist: AtomicLogHist::new(),
+            eval_hist: AtomicLogHist::new(),
         }
+    }
+
+    /// Record one request's coordinator-stage split (admission→pickup and
+    /// pickup→evaluated, µs). Lock-free; called per served image by the
+    /// shard workers.
+    pub fn record_stage_times(&self, queue_wait_us: f64, eval_us: f64) {
+        self.queue_wait_hist.record(queue_wait_us);
+        self.eval_hist.record(eval_us);
     }
 
     /// Record a completed batch of model-less requests (the single-backend
     /// coordinator path).
     pub fn record_batch(&self, batch_size: usize, latencies_us: &[f64]) {
+        for &l in latencies_us {
+            self.latency_hist.record(l);
+        }
         let mut g = self.inner.lock().unwrap();
         g.requests += latencies_us.len() as u64;
         g.batch_hist.record(batch_size as f64);
@@ -132,6 +191,9 @@ impl Metrics {
             return;
         }
         let n = latencies_us.len() as u64;
+        for &l in latencies_us {
+            self.latency_hist.record(l);
+        }
         let mut g = self.inner.lock().unwrap();
         g.requests += n;
         for &l in latencies_us {
@@ -162,10 +224,11 @@ impl Metrics {
     }
 
     /// Fold any number of per-shard sinks into one aggregate snapshot.
-    /// Latency percentiles are computed over the concatenated reservoirs
-    /// (exact when shards see similar traffic volumes, which the
-    /// least-outstanding router ensures); counters sum; throughput is
-    /// total requests over the longest-lived shard's uptime.
+    /// Counters and histogram buckets sum exactly; the authoritative
+    /// latency percentiles come from the summed end-to-end histogram.
+    /// Reservoir samples are concatenated only to pick exemplars and an
+    /// exemplar-side [`Summary`]; throughput is total requests over the
+    /// longest-lived shard's uptime.
     pub fn merged<'a>(parts: impl IntoIterator<Item = &'a Metrics>) -> MetricsSnapshot {
         let mut requests = 0u64;
         let mut errors = 0u64;
@@ -175,7 +238,13 @@ impl Metrics {
         let mut samples: Vec<f64> = Vec::new();
         let mut shard_requests: Vec<u64> = Vec::new();
         let mut per_model: BTreeMap<String, ModelStats> = BTreeMap::new();
+        let mut latency_hist = HistSnapshot::default();
+        let mut queue_wait_hist = HistSnapshot::default();
+        let mut eval_hist = HistSnapshot::default();
         for m in parts {
+            latency_hist.merge(&m.latency_hist.snapshot());
+            queue_wait_hist.merge(&m.queue_wait_hist.snapshot());
+            eval_hist.merge(&m.eval_hist.snapshot());
             let g = m.inner.lock().unwrap();
             requests += g.requests;
             errors += g.errors;
@@ -190,6 +259,7 @@ impl Metrics {
                 agg.errors += stats.errors;
             }
         }
+        let latency_exemplars = samples.iter().copied().take(EXEMPLAR_COUNT).collect();
         MetricsSnapshot {
             requests,
             errors,
@@ -200,6 +270,10 @@ impl Metrics {
             },
             latency_us: Summary::of(&samples),
             latency_seen,
+            latency_hist,
+            queue_wait_hist,
+            eval_hist,
+            latency_exemplars,
             batches,
             per_model,
             shard_requests,
@@ -219,11 +293,21 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub errors: u64,
     pub throughput_rps: f64,
-    /// Percentiles over the retained reservoir samples.
+    /// Summary over the retained reservoir samples — **exemplar-side
+    /// only**. Authoritative percentiles come from [`Self::latency_hist`]
+    /// (reservoirs with different `seen` counts don't merge soundly).
     pub latency_us: Summary,
     /// Total latency observations seen (≥ `latency_us.n`: the reservoir
     /// bounds memory, not the count).
     pub latency_seen: u64,
+    /// End-to-end latency histogram (exact sum over shards).
+    pub latency_hist: HistSnapshot,
+    /// Admission→worker-pickup histogram.
+    pub queue_wait_hist: HistSnapshot,
+    /// Worker-pickup→evaluated histogram.
+    pub eval_hist: HistSnapshot,
+    /// Up to [`EXEMPLAR_COUNT`] real latency values from the reservoirs.
+    pub latency_exemplars: Vec<f64>,
     pub batches: u64,
     /// Per-model request/error breakdown (empty for model-less serving).
     pub per_model: BTreeMap<String, ModelStats>,
@@ -259,10 +343,18 @@ impl MetricsSnapshot {
             ("requests", Json::num(self.requests as f64)),
             ("errors", Json::num(self.errors as f64)),
             ("throughput_rps", Json::num(self.throughput_rps)),
-            ("latency_p50_us", Json::num(self.latency_us.p50)),
-            ("latency_p95_us", Json::num(self.latency_us.p95)),
-            ("latency_p99_us", Json::num(self.latency_us.p99)),
+            // Histogram-derived (mergeable, fleet-correct) percentiles.
+            ("latency_p50_us", Json::num(self.latency_hist.percentile(0.5))),
+            ("latency_p95_us", Json::num(self.latency_hist.percentile(0.95))),
+            ("latency_p99_us", Json::num(self.latency_hist.percentile(0.99))),
             ("latency_samples_seen", Json::num(self.latency_seen as f64)),
+            ("latency_hist", self.latency_hist.to_json()),
+            ("queue_wait_hist", self.queue_wait_hist.to_json()),
+            ("eval_hist", self.eval_hist.to_json()),
+            (
+                "latency_exemplars_us",
+                Json::arr(self.latency_exemplars.iter().map(|&x| Json::num(x))),
+            ),
             ("batches", Json::num(self.batches as f64)),
             (
                 "shard_requests",
@@ -291,30 +383,52 @@ pub const SUMMED_METRIC_FIELDS: &[&str] = &[
 ];
 
 /// Fold replica `/metrics` snapshots into the route tier's aggregate
-/// view: [`SUMMED_METRIC_FIELDS`] add up at the top level, and each raw
-/// snapshot is preserved verbatim under `"replicas"` keyed by replica
-/// address. A replica snapshot missing a field simply contributes zero —
-/// the aggregation never fails on a skewed or older replica.
+/// view: [`SUMMED_METRIC_FIELDS`] add up at the top level, the stage
+/// histograms ([`HIST_FIELDS`]) merge **exactly** (elementwise bucket
+/// sums) and yield fleet-correct `latency_p50_us`/`p95`/`p99` at the top
+/// level. Raw per-replica snapshots are kept under a clearly-labeled
+/// `"debug"` section keyed by replica address — they are diagnostics, not
+/// fleet statistics (concatenating reservoir percentiles across replicas
+/// with different traffic volumes is statistically wrong, which is why
+/// the old top-level treatment of them was a bug). A replica snapshot
+/// missing a field simply contributes zero — the aggregation never fails
+/// on a skewed or older replica.
 pub fn aggregate_replica_metrics<'a>(
     snapshots: impl IntoIterator<Item = (&'a str, crate::util::Json)>,
 ) -> crate::util::Json {
     use crate::util::Json;
     let mut totals = vec![0.0f64; SUMMED_METRIC_FIELDS.len()];
-    let mut replicas: BTreeMap<String, Json> = BTreeMap::new();
+    let mut hists: Vec<Option<HistSnapshot>> = vec![None; HIST_FIELDS.len()];
+    let mut debug: BTreeMap<String, Json> = BTreeMap::new();
     for (addr, snap) in snapshots {
         for (i, key) in SUMMED_METRIC_FIELDS.iter().enumerate() {
             if let Some(x) = snap.get(key).and_then(Json::as_f64) {
                 totals[i] += x;
             }
         }
-        replicas.insert(addr.to_string(), snap);
+        for (i, key) in HIST_FIELDS.iter().enumerate() {
+            if let Some(h) = snap.get(key).and_then(HistSnapshot::from_json) {
+                hists[i].get_or_insert_with(HistSnapshot::default).merge(&h);
+            }
+        }
+        debug.insert(addr.to_string(), snap);
     }
     let mut out: BTreeMap<String, Json> = SUMMED_METRIC_FIELDS
         .iter()
         .zip(&totals)
         .map(|(k, &v)| (k.to_string(), Json::num(v)))
         .collect();
-    out.insert("replicas".to_string(), Json::Obj(replicas));
+    if let Some(latency) = &hists[0] {
+        out.insert("latency_p50_us".to_string(), Json::num(latency.percentile(0.5)));
+        out.insert("latency_p95_us".to_string(), Json::num(latency.percentile(0.95)));
+        out.insert("latency_p99_us".to_string(), Json::num(latency.percentile(0.99)));
+    }
+    for (key, hist) in HIST_FIELDS.iter().zip(&hists) {
+        if let Some(h) = hist {
+            out.insert(key.to_string(), h.to_json());
+        }
+    }
+    out.insert("debug".to_string(), Json::Obj(debug));
     Json::Obj(out)
 }
 
@@ -410,23 +524,102 @@ mod tests {
         assert_eq!(agg.get("errors").and_then(Json::as_f64), Some(1.0));
         assert_eq!(agg.get("batches").and_then(Json::as_f64), Some(4.0));
         assert_eq!(agg.get("shard_panics").and_then(Json::as_f64), Some(2.0));
-        // Percentiles do not sum; the raw snapshots stay per replica.
+        // Reservoir percentiles do not merge: without histograms there is
+        // no top-level fleet percentile, and the raw snapshots are
+        // demoted to the debug section.
         assert!(agg.get("latency_p99_us").is_none());
-        let replicas = agg.get("replicas").unwrap();
+        assert!(agg.get("replicas").is_none(), "old top-level key is gone");
+        let debug = agg.get("debug").unwrap();
         assert_eq!(
-            replicas
+            debug
                 .get("127.0.0.1:8001")
                 .and_then(|r| r.get("latency_p99_us"))
                 .and_then(Json::as_f64),
             Some(120.0)
         );
         assert_eq!(
-            replicas
+            debug
                 .get("127.0.0.1:8002")
                 .and_then(|r| r.get("requests"))
                 .and_then(Json::as_f64),
             Some(5.0)
         );
+    }
+
+    #[test]
+    fn replica_aggregation_derives_fleet_percentiles_from_summed_histograms() {
+        use crate::util::Json;
+        // A fast replica and a slow one with very different volumes: the
+        // merged histogram must reflect the union, not an average of the
+        // replicas (and certainly not sample concatenation).
+        let fast = Metrics::new();
+        let slow = Metrics::new();
+        for _ in 0..900 {
+            fast.record_batch(1, &[10.0]);
+        }
+        for _ in 0..100 {
+            slow.record_batch(1, &[10_000.0]);
+        }
+        let agg = aggregate_replica_metrics([
+            ("a", fast.snapshot().to_json()),
+            ("b", slow.snapshot().to_json()),
+        ]);
+        let merged = HistSnapshot::from_json(agg.get("latency_hist").unwrap()).unwrap();
+        assert_eq!(merged.count, 1000);
+        // 90% of the union is ~10 µs, so fleet p50 is near 10 µs and
+        // fleet p95 lands in the slow replica's 10 ms mode.
+        let p50 = agg.get("latency_p50_us").and_then(Json::as_f64).unwrap();
+        let p95 = agg.get("latency_p95_us").and_then(Json::as_f64).unwrap();
+        assert!(p50 < 30.0, "fleet p50 {p50} must sit in the fast mode");
+        assert!(p95 > 5_000.0, "fleet p95 {p95} must sit in the slow mode");
+    }
+
+    #[test]
+    fn shard_seeds_decorrelate_exemplar_reservoirs() {
+        // Overflow the reservoirs with identical streams: distinct shard
+        // seeds must retain different samples (identical seeds — the old
+        // bug — retain byte-identical reservoirs).
+        let n = 5 * LATENCY_RESERVOIR_CAP;
+        let run = |m: &Metrics| {
+            for i in 0..n {
+                m.record_batch(1, &[i as f64]);
+            }
+            m.snapshot()
+        };
+        let a = run(&Metrics::for_shard(0));
+        let b = run(&Metrics::for_shard(1));
+        let a2 = run(&Metrics::for_shard(0));
+        assert_ne!(
+            a.latency_exemplars, b.latency_exemplars,
+            "distinct shards must not keep correlated exemplars"
+        );
+        assert_eq!(
+            a.latency_exemplars, a2.latency_exemplars,
+            "the per-shard seed is deterministic"
+        );
+        // Histograms are seed-independent: identical streams, identical buckets.
+        assert_eq!(a.latency_hist, b.latency_hist);
+    }
+
+    #[test]
+    fn merged_histogram_equals_sum_of_shard_histograms() {
+        let shards: Vec<Metrics> = (0..4).map(Metrics::for_shard).collect();
+        for (i, m) in shards.iter().enumerate() {
+            for j in 0..200 {
+                m.record_batch(1, &[(i * 977 + j) as f64 + 0.5]);
+            }
+            m.record_stage_times(3.0 + i as f64, 20.0);
+        }
+        let merged = Metrics::merged(shards.iter()).latency_hist;
+        let mut manual = HistSnapshot::default();
+        for m in &shards {
+            manual.merge(&m.snapshot().latency_hist);
+        }
+        assert_eq!(merged, manual, "merge must be exact, bucket for bucket");
+        assert_eq!(merged.count, 800);
+        let stage = Metrics::merged(shards.iter());
+        assert_eq!(stage.queue_wait_hist.count, 4);
+        assert_eq!(stage.eval_hist.count, 4);
     }
 
     #[test]
@@ -437,6 +630,14 @@ mod tests {
         let j = m.snapshot().to_json();
         assert_eq!(j.get("requests").and_then(|v| v.as_f64()), Some(2.0));
         assert!(j.get("latency_p99_us").is_some());
+        let hist = HistSnapshot::from_json(j.get("latency_hist").unwrap()).unwrap();
+        assert_eq!(hist.count, 2);
+        assert!(j.get("queue_wait_hist").is_some());
+        assert!(j.get("eval_hist").is_some());
+        assert_eq!(
+            j.get("latency_exemplars_us").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
         assert!(j.get("per_model").is_some());
         assert!(j.get("shard_requests").is_some());
         assert_eq!(j.get("shard_panics").and_then(|v| v.as_f64()), Some(0.0));

@@ -41,8 +41,10 @@ pub use registry::{ModelEntry, ModelRegistry, RegistryError};
 pub use sysproc::SysProc;
 
 use crate::data::boolean::BoolImage;
+use crate::obs::{self, StageTiming, TraceId};
 use crate::tm::{EvalScratch, DEFAULT_BLOCK, MIN_BLOCK};
 use crate::util::fault::{self, Site};
+use crate::util::Json;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{
@@ -233,6 +235,10 @@ struct Request {
     /// the single backend in backend mode).
     model: Option<String>,
     enqueued: Instant,
+    /// The submitting thread's active trace id ([`TraceId::NONE`] outside
+    /// a request scope) — the id follows the request onto the shard
+    /// worker so failure logs over there stay attributable.
+    trace: TraceId,
     payload: Payload,
 }
 
@@ -433,7 +439,9 @@ impl Coordinator {
         let mut runtimes = Vec::new();
         for i in 0..cfg.shards.max(1) {
             let (tx, rx) = sync_channel(queue_capacity);
-            let metrics = Arc::new(Metrics::new());
+            // Distinct per-shard reservoir seeds: identical seeds would
+            // correlate which exemplars the shards keep.
+            let metrics = Arc::new(Metrics::for_shard(i));
             let outstanding = Arc::new(AtomicUsize::new(0));
             let state = Arc::new(ShardState::new());
             runtimes.push(PoolShardRuntime {
@@ -581,6 +589,7 @@ impl Coordinator {
         let mut req = Request {
             model: model.map(str::to_string),
             enqueued: Instant::now(),
+            trace: obs::current_trace(),
             payload: Payload::Block(imgs, resp_tx),
         };
         for i in self.routing_order() {
@@ -625,6 +634,7 @@ impl Coordinator {
         let req = Request {
             model: model.map(str::to_string),
             enqueued: Instant::now(),
+            trace: obs::current_trace(),
             payload: Payload::Block(imgs, resp_tx),
         };
         let i = self.least_loaded();
@@ -716,6 +726,7 @@ impl Coordinator {
             Request {
                 model: model.map(str::to_string),
                 enqueued: Instant::now(),
+                trace: obs::current_trace(),
                 payload: Payload::One(img, resp_tx),
             },
             resp_rx,
@@ -831,6 +842,7 @@ fn backend_worker<B: Backend>(
         // chunk the flat work list to the effective batch bound.
         for chunk in work.chunks(effective.max_batch.max(1)) {
             let imgs: Vec<&BoolImage> = chunk.iter().map(|&(u, i)| &batch[u].images()[i]).collect();
+            let picked = Instant::now();
             let outcome = catch_unwind(AssertUnwindSafe(|| {
                 fault::panic_point(Site::EvalPanic);
                 fault::delay_point(Site::EvalDelay);
@@ -840,12 +852,21 @@ fn backend_worker<B: Backend>(
             match outcome {
                 Ok(Ok(outputs)) => {
                     let now = Instant::now();
+                    let eval_us = (now - picked).as_secs_f64() * 1e6;
                     let lat: Vec<f64> = chunk
                         .iter()
                         .map(|&(u, _)| (now - batch[u].enqueued).as_secs_f64() * 1e6)
                         .collect();
                     m.record_batch(chunk.len(), &lat);
-                    for (&(u, i), out) in chunk.iter().zip(outputs) {
+                    for (&(u, i), mut out) in chunk.iter().zip(outputs) {
+                        let queue_wait_us =
+                            (picked - batch[u].enqueued).as_secs_f64() * 1e6;
+                        out.timing = Some(StageTiming {
+                            queue_wait_us,
+                            eval_us,
+                            blocked: false,
+                        });
+                        m.record_stage_times(queue_wait_us, eval_us);
                         results[u][i] = Some(Ok(out));
                     }
                 }
@@ -952,8 +973,12 @@ fn pool_worker_loop(rt: &PoolShardRuntime) -> WorkerExit {
             let Request {
                 model,
                 enqueued,
+                trace,
                 payload,
             } = req;
+            // Pickup instant: everything before it is queue wait,
+            // everything after (until the outcome) is evaluation.
+            let picked = Instant::now();
             match payload {
                 Payload::One(img, resp) => {
                     // The reply sender stays outside the closure: on a
@@ -966,8 +991,17 @@ fn pool_worker_loop(rt: &PoolShardRuntime) -> WorkerExit {
                         serve_one(&rt.registry, &mut cached, &model, &img, &mut scratch)
                     }));
                     match outcome {
-                        Ok(Ok((entry, out))) => {
-                            let lat = (Instant::now() - enqueued).as_secs_f64() * 1e6;
+                        Ok(Ok((entry, mut out))) => {
+                            let now = Instant::now();
+                            let lat = (now - enqueued).as_secs_f64() * 1e6;
+                            let queue_wait_us = (picked - enqueued).as_secs_f64() * 1e6;
+                            let eval_us = (now - picked).as_secs_f64() * 1e6;
+                            out.timing = Some(StageTiming {
+                                queue_wait_us,
+                                eval_us,
+                                blocked: false,
+                            });
+                            rt.metrics.record_stage_times(queue_wait_us, eval_us);
                             match &run {
                                 Some(r) if Arc::ptr_eq(r, &entry) => run_lat.push(lat),
                                 _ => {
@@ -995,6 +1029,13 @@ fn pool_worker_loop(rt: &PoolShardRuntime) -> WorkerExit {
                         }
                         Err(_) => {
                             rt.state.panics.fetch_add(1, Ordering::Relaxed);
+                            obs::log::warn(
+                                "evaluation panic contained; request failed, shard respawning",
+                                [
+                                    ("shard", Json::num(rt.index as f64)),
+                                    ("request_id", Json::str(trace.as_str())),
+                                ],
+                            );
                             match &model {
                                 Some(name) => rt.metrics.record_model_error(name, 1),
                                 None => rt.metrics.record_error(1),
@@ -1023,10 +1064,18 @@ fn pool_worker_loop(rt: &PoolShardRuntime) -> WorkerExit {
                         fault::delay_point(Site::ShardWedge);
                         serve_block(&rt.registry, &mut cached, &model, &imgs, &mut scratch)
                     }));
-                    let (served, outcomes) = match outcome {
+                    let (served, mut outcomes) = match outcome {
                         Ok(v) => v,
                         Err(_) => {
                             rt.state.panics.fetch_add(1, Ordering::Relaxed);
+                            obs::log::warn(
+                                "evaluation panic contained; block failed, shard respawning",
+                                [
+                                    ("shard", Json::num(rt.index as f64)),
+                                    ("images", Json::num(n as f64)),
+                                    ("request_id", Json::str(trace.as_str())),
+                                ],
+                            );
                             match &model {
                                 Some(name) => rt.metrics.record_model_error(name, n as u64),
                                 None => rt.metrics.record_error(n as u64),
@@ -1071,9 +1120,24 @@ fn pool_worker_loop(rt: &PoolShardRuntime) -> WorkerExit {
                             }
                         }
                     }
-                    let lat = (Instant::now() - enqueued).as_secs_f64() * 1e6;
+                    let evaled = Instant::now();
+                    let lat = (evaled - enqueued).as_secs_f64() * 1e6;
                     let ok = outcomes.iter().filter(|r| r.is_ok()).count();
                     let errs = (outcomes.len() - ok) as u64;
+                    // `serve_block` takes the image-major path exactly when
+                    // the valid-image count reaches MIN_BLOCK, and valid
+                    // images are exactly the Ok outcomes — so the tag can
+                    // be reconstructed out here where the clocks live.
+                    let timing = StageTiming {
+                        queue_wait_us: (picked - enqueued).as_secs_f64() * 1e6,
+                        eval_us: (evaled - picked).as_secs_f64() * 1e6,
+                        blocked: ok >= MIN_BLOCK,
+                    };
+                    for r in outcomes.iter_mut().flatten() {
+                        r.timing = Some(timing);
+                        rt.metrics
+                            .record_stage_times(timing.queue_wait_us, timing.eval_us);
+                    }
                     match &served {
                         Some(entry) => {
                             if ok > 0 {
@@ -1252,6 +1316,8 @@ fn serve_one(
         // hot-swap this is exactly the version whose plan evaluated the
         // image, so prediction and version can never disagree.
         model_version: Some(entry.version),
+        // The worker fills this in — it owns the pickup clock.
+        timing: None,
     };
     Ok((entry, out))
 }
@@ -1328,6 +1394,7 @@ fn serve_block(
                 class_sums: scratch.block.class_sums(slot).to_vec(),
                 sim_cycles: None,
                 model_version: Some(entry.version),
+                timing: None,
             }));
         }
     } else {
@@ -1338,6 +1405,7 @@ fn serve_block(
                 class_sums: scratch.class_sums().to_vec(),
                 sim_cycles: None,
                 model_version: Some(entry.version),
+                timing: None,
             }));
         }
     }

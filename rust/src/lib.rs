@@ -22,6 +22,7 @@ pub mod data;
 pub mod asic;
 pub mod energy;
 pub mod model_io;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;

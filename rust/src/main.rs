@@ -30,6 +30,7 @@ use convcotm::coordinator::{
 use convcotm::data::{booleanize_split_for_geometry, load_dataset, BoolImage, Geometry};
 use convcotm::energy::{EnergyModel, OperatingPoint};
 use convcotm::model_io;
+use convcotm::obs;
 use convcotm::server::router::{spawn_health_checker, RouterConfig, RouterState};
 use convcotm::server::{HttpServer, ServerConfig, ServerState};
 use convcotm::tm::{Engine, Params, Trainer};
@@ -80,15 +81,19 @@ fn print_usage() {
                 (repeatable --model / --manifest / --shards selects the sharded registry pool)\n\
          serve  --listen ADDR[:PORT] --http-workers N [pool flags as above]\n\
                 (resident event-driven HTTP front door: POST /v1/classify, GET /v1/models,\n\
-                 GET /healthz, GET /metrics, POST /v1/admin/models, POST /v1/admin/shutdown\n\
-                 — the full v1 surface is documented in API.md; DESIGN.md \u{a7}10/\u{a7}13)\n\
+                 GET /healthz, GET /v1/metrics, GET /v1/debug/slow, POST /v1/admin/models,\n\
+                 POST /v1/admin/shutdown — the full v1 surface is documented in API.md;\n\
+                 DESIGN.md \u{a7}10/\u{a7}13/\u{a7}14)\n\
                 --deadline-ms N (default response deadline; per-request deadline_ms overrides)\n\
                 --fault-plan SPEC (deterministic chaos, e.g. seed=42,eval_panic=p0.02 — DESIGN.md \u{a7}12)\n\
+                --log-level error|warn|info|debug (stderr JSON log threshold, default info)\n\
+                --trace-slow-us N (slow-ring admission threshold; 0 = every request competes)\n\
          route  --listen ADDR[:PORT] --replica ADDR [--replica ADDR ...] --http-workers N\n\
                 (one process fronting N serve replicas: rendezvous hashing on the model id,\n\
                  /healthz-driven failover, per-replica caps — API.md, DESIGN.md \u{a7}13)\n\
                 --replica-outstanding N (per-replica in-flight cap, default 256)\n\
                 --health-interval-ms N (replica probe period, default 500)\n\
+                --log-level / --trace-slow-us (as for serve --listen)\n\
          power  --model FILE [--vdd V --freq HZ]\n\
          info   [--geometry G]\n\n\
          Geometries: asic (28x10s1, default), cifar10 (32x10s1), or SIDExWINDOW[sSTRIDE].\n\
@@ -401,10 +406,34 @@ fn arm_fault_plan(args: &Args) -> anyhow::Result<()> {
     };
     if let Some(plan) = plan {
         if !plan.is_empty() {
-            eprintln!("fault injection ARMED: {}", plan.spec());
+            obs::log::warn(
+                "fault injection ARMED",
+                [("plan", Json::str(plan.spec()))],
+            );
             fault::arm_process(plan);
         }
     }
+    Ok(())
+}
+
+/// Arm the observability layer for the resident server modes (`serve
+/// --listen`, `route`): set the structured-log threshold from
+/// `--log-level` and arm request tracing process-wide. `--trace-slow-us`
+/// is the slow-ring admission threshold in microseconds — the default 0
+/// admits every request, so the worst-64 ring is populated from the first
+/// request (what `ci/http_smoke.sh` asserts against); raise it in
+/// production so only genuinely slow requests compete.
+fn arm_observability(args: &Args) -> anyhow::Result<()> {
+    if let Some(level) = args.get("log-level") {
+        let parsed = obs::log::Level::parse(level).ok_or_else(|| {
+            anyhow::anyhow!("--log-level expects error|warn|info|debug, got '{level}'")
+        })?;
+        obs::log::set_level(parsed);
+    }
+    let slow_us = args
+        .get_usize("trace-slow-us", 0)
+        .map_err(anyhow::Error::msg)?;
+    obs::trace::arm_process(slow_us as u64);
     Ok(())
 }
 
@@ -559,6 +588,7 @@ fn cmd_serve_pool(args: &Args) -> anyhow::Result<()> {
 /// process stays up serving `POST /v1/classify` (and the admin surface)
 /// until `POST /admin/shutdown` drains it.
 fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
+    arm_observability(args)?;
     let backend_name = args.get_or("backend", "native");
     anyhow::ensure!(
         backend_name == "native",
@@ -603,8 +633,8 @@ fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
         names.join(", ")
     );
     println!(
-        "endpoints: POST /v1/classify · GET /v1/models · GET /healthz · GET /metrics · \
-         POST /v1/admin/models · POST /v1/admin/shutdown (see API.md)"
+        "endpoints: POST /v1/classify · GET /v1/models · GET /healthz · GET /v1/metrics · \
+         GET /v1/debug/slow · POST /v1/admin/models · POST /v1/admin/shutdown (see API.md)"
     );
     // Resident until an admin shutdown flips the drain flag.
     server.join();
@@ -627,6 +657,7 @@ fn cmd_serve_http(args: &Args) -> anyhow::Result<()> {
 /// `serve` replicas, with `/healthz`-probe failover and per-replica
 /// outstanding caps (`server::router`).
 fn cmd_route(args: &Args) -> anyhow::Result<()> {
+    arm_observability(args)?;
     let replicas: Vec<String> = args.get_all("replica").to_vec();
     let http_workers = args.get_usize("http-workers", 4).map_err(anyhow::Error::msg)?;
     let outstanding_cap = args
@@ -661,8 +692,8 @@ fn cmd_route(args: &Args) -> anyhow::Result<()> {
             .join(", ")
     );
     println!(
-        "endpoints: POST /v1/classify · GET /v1/models · GET /healthz · GET /metrics · \
-         POST /v1/admin/models · POST /v1/admin/shutdown (see API.md)"
+        "endpoints: POST /v1/classify · GET /v1/models · GET /healthz · GET /v1/metrics · \
+         GET /v1/debug/slow · POST /v1/admin/models · POST /v1/admin/shutdown (see API.md)"
     );
     server.join();
     let _ = health.join();

@@ -1,0 +1,316 @@
+//! Mergeable fixed-layout latency histograms.
+//!
+//! Reservoir samples (coordinator::metrics) are *not* mergeable: two
+//! uniform reservoirs with different `seen` counts cannot be concatenated
+//! into a uniform sample of the union, so fleet percentiles computed that
+//! way are statistically wrong. These histograms are the mergeable
+//! companion: 64 half-octave (√2-ratio) log₂ buckets over nanoseconds,
+//! covering ~384 ns to beyond 10 s with sub-µs underflow and a saturating
+//! overflow bucket. Bucket edges are *fixed across the fleet*, so
+//! histograms from any number of shards, replicas or processes sum
+//! **exactly** — bucket counts, totals and duration sums are all plain
+//! integer additions — and percentiles of the sum are percentiles of the
+//! union (to within one bucket's resolution).
+//!
+//! Recording is lock-free: one relaxed `fetch_add` per bucket/count/sum,
+//! safe to call from every shard worker with zero contention cost on the
+//! hot path. The bucket-index function is transliterated in
+//! `python/tests/test_obs_transliteration.py` with pinned cross-language
+//! vectors — change one side only in lockstep with the other.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets. 64 half-octave buckets span ~2³² ns (≈4.3 s of
+/// dynamic range above the 256 ns floor; the top bucket saturates).
+pub const HIST_BUCKETS: usize = 64;
+
+/// `raw = 2·msb(ns) + half` is offset by this so bucket 0 starts at
+/// sub-µs values (raw 16 ⇔ 256 ns).
+const RAW_OFFSET: u32 = 16;
+
+/// Bucket index for a duration in microseconds. Half-octave log₂ layout:
+/// `msb` is the highest set bit of the duration in integer nanoseconds,
+/// `half` its next bit, giving two buckets per power of two.
+#[inline]
+pub fn bucket_index(us: f64) -> usize {
+    let ns = duration_ns(us).max(1);
+    let msb = 63 - ns.leading_zeros();
+    let half = if msb == 0 {
+        0
+    } else {
+        ((ns >> (msb - 1)) & 1) as u32
+    };
+    let raw = 2 * msb + half;
+    raw.saturating_sub(RAW_OFFSET).min(HIST_BUCKETS as u32 - 1) as usize
+}
+
+/// Microseconds → integer nanoseconds, rounding half-up (`floor(x+0.5)`,
+/// saturating at u64::MAX — the float-to-int cast saturates). Half-up
+/// rather than `f64::round` or Python's banker's rounding because both
+/// languages can express it identically: `int(us * 1000 + 0.5)`.
+#[inline]
+fn duration_ns(us: f64) -> u64 {
+    if us <= 0.0 {
+        0
+    } else {
+        (us * 1000.0 + 0.5) as u64
+    }
+}
+
+/// Inclusive lower edge of bucket `k`, in µs (0 for the underflow bucket).
+pub fn bucket_lower_us(k: usize) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let raw = k.min(HIST_BUCKETS - 1) as u32 + RAW_OFFSET;
+    let msb = raw / 2;
+    let half = (raw % 2) as u64;
+    let ns = (1u64 << msb) + half * (1u64 << (msb - 1));
+    ns as f64 / 1000.0
+}
+
+/// Exclusive upper edge of bucket `k`, in µs. The top bucket is open; its
+/// nominal edge (2× its lower edge) only shapes within-bucket
+/// interpolation.
+pub fn bucket_upper_us(k: usize) -> f64 {
+    if k + 1 >= HIST_BUCKETS {
+        bucket_lower_us(HIST_BUCKETS - 1) * 2.0
+    } else {
+        bucket_lower_us(k + 1)
+    }
+}
+
+/// Lock-free recording side: one instance per (shard, stage).
+pub struct AtomicLogHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for AtomicLogHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicLogHist {
+    pub const fn new() -> AtomicLogHist {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        AtomicLogHist {
+            buckets: [ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration (µs). Three relaxed `fetch_add`s, no locks.
+    #[inline]
+    pub fn record(&self, us: f64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(duration_ns(us), Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a histogram: the mergeable, serializable form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket counts, [`HIST_BUCKETS`] long.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+        }
+    }
+}
+
+impl HistSnapshot {
+    /// Exact merge: elementwise bucket sums plus count/sum totals.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (a, &b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+    }
+
+    /// Percentile estimate in µs (q ∈ [0,1]): walk the cumulative counts
+    /// to the target rank, then interpolate linearly within the bucket.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (k, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let prev = cum as f64;
+            cum += c;
+            if cum as f64 >= rank {
+                let lo = bucket_lower_us(k);
+                let hi = bucket_upper_us(k);
+                let frac = ((rank - prev) / c as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo);
+            }
+        }
+        bucket_upper_us(HIST_BUCKETS - 1)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 / 1000.0
+        }
+    }
+
+    pub fn sum_us(&self) -> f64 {
+        self.sum_ns as f64 / 1000.0
+    }
+
+    /// Wire form: `{"buckets": [u64; 64], "count": n, "sum_us": x}`.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj([
+            (
+                "buckets",
+                Json::arr(self.buckets.iter().map(|&c| Json::num(c as f64))),
+            ),
+            ("count", Json::num(self.count as f64)),
+            ("sum_us", Json::num(self.sum_us())),
+        ])
+    }
+
+    /// Parse the wire form; `None` on shape mismatch (an older replica
+    /// without histograms simply contributes nothing to a merge).
+    pub fn from_json(j: &crate::util::Json) -> Option<HistSnapshot> {
+        let arr = j.get("buckets")?.as_arr()?;
+        let mut buckets: Vec<u64> = Vec::with_capacity(arr.len());
+        for v in arr {
+            buckets.push(v.as_f64()? as u64);
+        }
+        if buckets.len() > HIST_BUCKETS {
+            return None;
+        }
+        buckets.resize(HIST_BUCKETS, 0);
+        let count = j.get("count")?.as_f64()? as u64;
+        let sum_us = j.get("sum_us")?.as_f64()?;
+        Some(HistSnapshot {
+            buckets,
+            count,
+            sum_ns: (sum_us * 1000.0) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Cross-language pinned vectors — mirrored in
+    /// python/tests/test_obs_transliteration.py.
+    #[test]
+    fn bucket_index_pinned_vectors() {
+        for (us, idx) in [
+            (0.0, 0),
+            (0.1, 0),      // 100 ns: sub-µs underflow
+            (0.383, 0),    // 383 ns: last underflow value
+            (0.384, 1),    // 384 ns: first half-octave above 256·1.5
+            (1.0, 3),      // 1 µs = 1000 ns: msb 9, half 1 → raw 19
+            (25.4, 13),    // the paper's per-classification latency
+            (1_000.0, 23), // 1 ms
+            (1_000_000.0, 43),     // 1 s
+            (10_000_000.0, 50),    // 10 s
+            (1e12, 63),            // absurd → overflow bucket
+        ] {
+            assert_eq!(bucket_index(us), idx, "us={us}");
+        }
+    }
+
+    #[test]
+    fn edges_are_consistent_with_indexing() {
+        for k in 1..HIST_BUCKETS {
+            let lo = bucket_lower_us(k);
+            assert_eq!(bucket_index(lo), k, "lower edge of {k} must land in {k}");
+            // Just below the edge lands in the previous bucket.
+            assert_eq!(bucket_index(lo - 0.001), k - 1, "below edge of {k}");
+            assert!(bucket_upper_us(k - 1) == lo);
+        }
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let a = AtomicLogHist::new();
+        let b = AtomicLogHist::new();
+        let all = AtomicLogHist::new();
+        for i in 0..2000 {
+            let us = 0.5 * 1.01f64.powi(i % 1500);
+            if i % 3 == 0 {
+                a.record(us);
+            } else {
+                b.record(us);
+            }
+            all.record(us);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, all.snapshot(), "merge must equal recording the union");
+    }
+
+    #[test]
+    fn percentiles_track_the_distribution() {
+        let h = AtomicLogHist::new();
+        for i in 1..=10_000 {
+            h.record(i as f64); // uniform 1 µs..10 ms
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10_000);
+        let p50 = s.percentile(0.5);
+        let p99 = s.percentile(0.99);
+        // Half-octave buckets bound the relative error by ~√2.
+        assert!((3_300.0..=7_200.0).contains(&p50), "p50 {p50}");
+        assert!((6_800.0..=14_200.0).contains(&p99), "p99 {p99}");
+        assert!(p50 < p99);
+        assert!((s.mean_us() - 5_000.0).abs() < 2_000.0, "{}", s.mean_us());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let h = AtomicLogHist::new();
+        for us in [0.2, 13.0, 420.0, 1e6] {
+            h.record(us);
+        }
+        let snap = h.snapshot();
+        let back = HistSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back.buckets, snap.buckets);
+        assert_eq!(back.count, snap.count);
+        // sum goes through f64 µs on the wire: equal to within rounding.
+        assert!((back.sum_ns as i64 - snap.sum_ns as i64).abs() <= 1);
+        assert!(HistSnapshot::from_json(&crate::util::Json::Null).is_none());
+    }
+}

@@ -1,0 +1,213 @@
+//! Structured, leveled, rate-limited JSON logging to stderr.
+//!
+//! Replaces the ad-hoc `eprintln!` calls scattered through the serving
+//! stack. Every line is one compact JSON object — machine-parseable,
+//! deterministically keyed (the `Json` writer sorts keys) — stamped with
+//! a wall-clock timestamp, the level, and the active request id when the
+//! calling thread is inside a request scope ([`crate::obs::trace`]).
+//!
+//! The logger is **rate-limited** ([`MAX_LINES_PER_SEC`] lines per
+//! wall-clock second, process-wide): a misbehaving client or a crash loop
+//! cannot turn the telemetry channel into its own outage. Dropped lines
+//! are counted and the count is attached (`dropped_lines`) to the first
+//! line admitted in the next second, so the gap is visible rather than
+//! silent. Logs go to **stderr** only — stdout carries the server's
+//! startup lines (`listening on http://…`) that `ci/http_smoke.sh`
+//! scrapes, and the two streams must not interleave.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::Json;
+
+/// Process-wide ceiling on emitted lines per wall-clock second.
+pub const MAX_LINES_PER_SEC: u64 = 200;
+
+/// Log severities, most severe first. `--log-level` picks the threshold;
+/// lines *above* the threshold (numerically greater) are skipped before
+/// any formatting work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `--log-level` value (case-insensitive). `None` on unknown
+    /// names so the CLI can report the valid set.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+// Rate-limiter state: the wall-clock second the current window belongs
+// to, how many lines it admitted, and how many it dropped.
+static WINDOW_SEC: AtomicU64 = AtomicU64::new(0);
+static EMITTED: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    Level::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// True when a line at `at` would pass the threshold — callers with
+/// expensive field construction can gate on this first.
+#[inline]
+pub fn enabled(at: Level) -> bool {
+    (at as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Rate-limiter admission for a line at wall-clock second `now_s`.
+/// Returns `(admitted, dropped_from_closed_window)`; the drop count is
+/// nonzero only on the first admitted line after a lossy window closes.
+fn admit_at(now_s: u64) -> (bool, u64) {
+    let window = WINDOW_SEC.load(Ordering::Relaxed);
+    let mut carried = 0;
+    if window != now_s
+        && WINDOW_SEC
+            .compare_exchange(window, now_s, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    {
+        // This thread rolled the window: reset the budget and claim any
+        // drops from the previous window for reporting.
+        EMITTED.store(0, Ordering::Relaxed);
+        carried = DROPPED.swap(0, Ordering::Relaxed);
+    }
+    if EMITTED.fetch_add(1, Ordering::Relaxed) < MAX_LINES_PER_SEC {
+        (true, carried)
+    } else {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        // A denied roller still carries the count forward.
+        if carried > 0 {
+            DROPPED.fetch_add(carried, Ordering::Relaxed);
+        }
+        (false, 0)
+    }
+}
+
+/// Emit one structured line at `at` with message `msg` plus extra fields.
+/// Skipped lines (level or rate limit) cost one atomic load / a couple of
+/// atomic ops — no formatting, no allocation.
+pub fn log(at: Level, msg: &str, fields: impl IntoIterator<Item = (&'static str, Json)>) {
+    if !enabled(at) {
+        return;
+    }
+    let now = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    let (admitted, dropped) = admit_at(now.as_secs());
+    if !admitted {
+        return;
+    }
+    let mut map = std::collections::BTreeMap::new();
+    map.insert("ts_ms".to_string(), Json::num(now.as_millis() as f64));
+    map.insert("level".to_string(), Json::str(at.name()));
+    map.insert("msg".to_string(), Json::str(msg));
+    let rid = crate::obs::current_trace();
+    if !rid.is_none() {
+        map.insert("request_id".to_string(), Json::str(rid.as_str()));
+    }
+    if dropped > 0 {
+        map.insert("dropped_lines".to_string(), Json::num(dropped as f64));
+    }
+    for (k, v) in fields {
+        map.insert(k.to_string(), v);
+    }
+    eprintln!("{}", Json::Obj(map).to_string_compact());
+}
+
+pub fn error(msg: &str, fields: impl IntoIterator<Item = (&'static str, Json)>) {
+    log(Level::Error, msg, fields);
+}
+
+pub fn warn(msg: &str, fields: impl IntoIterator<Item = (&'static str, Json)>) {
+    log(Level::Warn, msg, fields);
+}
+
+pub fn info(msg: &str, fields: impl IntoIterator<Item = (&'static str, Json)>) {
+    log(Level::Info, msg, fields);
+}
+
+pub fn debug(msg: &str, fields: impl IntoIterator<Item = (&'static str, Json)>) {
+    log(Level::Debug, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_ordering() {
+        assert_eq!(Level::parse("INFO"), Some(Level::Info));
+        assert_eq!(Level::parse(" warn "), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn threshold_gates_levels() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(prev);
+    }
+
+    #[test]
+    fn rate_limiter_admits_caps_and_reports_drops() {
+        // Fake epoch seconds far from real time so concurrent tests that
+        // actually log (real clock) cannot collide with these windows.
+        let s0 = 7_777_001u64;
+        let mut admitted = 0;
+        for _ in 0..(MAX_LINES_PER_SEC + 50) {
+            if admit_at(s0).0 {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, MAX_LINES_PER_SEC);
+        // First line of the next second reports the 50 drops.
+        let (ok, dropped) = admit_at(s0 + 1);
+        assert!(ok);
+        assert_eq!(dropped, 50);
+        // Subsequent lines report nothing.
+        let (ok, dropped) = admit_at(s0 + 1);
+        assert!(ok);
+        assert_eq!(dropped, 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability: request-scoped tracing, mergeable latency histograms,
+//! structured logging, and Prometheus exposition — std-only, wired
+//! through every tier (DESIGN.md §14).
+//!
+//! - [`trace`]: 128-bit request ids (minted or adopted from
+//!   `X-Request-Id`), per-request span trees with stage timings, bounded
+//!   per-thread rings plus a worst-request ring behind `/v1/debug/slow`.
+//!   Disarmed cost: one relaxed atomic load, zero allocations.
+//! - [`hist`]: fixed-layout half-octave log₂ histograms that sum
+//!   **exactly** across shards and replicas — the statistically sound
+//!   source for fleet percentiles (reservoirs are exemplar-only).
+//! - [`log`]: leveled, rate-limited JSON lines on stderr, stamped with
+//!   the active request id.
+//! - [`promtext`]: the `/v1/metrics?format=prometheus` renderer, shared
+//!   by replica and router tiers.
+
+pub mod hist;
+pub mod log;
+pub mod promtext;
+pub mod trace;
+
+pub use hist::{AtomicLogHist, HistSnapshot, HIST_BUCKETS};
+pub use log::Level;
+pub use trace::{
+    arm, arm_process, armed, begin_request, current_trace, elapsed_us, end_request, record_stage,
+    record_stage_at, recent_snapshot, slow_snapshot, CompletedTrace, Stage, StageTiming,
+    TraceGuard, TraceId, SLOW_RING_CAP,
+};

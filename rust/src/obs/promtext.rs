@@ -1,0 +1,298 @@
+//! Hand-rolled Prometheus text-format exposition.
+//!
+//! Renders a metrics snapshot (the same JSON served by `/v1/metrics`)
+//! into the Prometheus text format (version 0.0.4): `# HELP`/`# TYPE`
+//! headers, `_total`-suffixed counters, gauges, and the three stage
+//! histograms with cumulative `le` buckets in **seconds** (Prometheus
+//! base unit) plus `_sum`/`_count`. Both tiers share this renderer — the
+//! replica passes its own snapshot, the router passes the merged
+//! aggregate — which is exactly why fleet latency comes out
+//! histogram-derived: the router's aggregate carries summed buckets, not
+//! concatenated reservoir samples.
+//!
+//! The renderer is tolerant: fields absent from the snapshot are simply
+//! not exposed (an older replica without histograms still renders its
+//! counters). Output conformance is linted by `ci/check_promtext.py`.
+
+use std::fmt::Write as _;
+
+use super::hist::{bucket_upper_us, HistSnapshot, HIST_BUCKETS};
+use crate::util::Json;
+
+/// Plain counters: snapshot field → (metric name, help).
+const COUNTERS: &[(&str, &str, &str)] = &[
+    ("requests", "convcotm_requests_total", "Classification requests served."),
+    ("errors", "convcotm_errors_total", "Requests that failed."),
+    ("batches", "convcotm_batches_total", "Evaluation batches executed."),
+    (
+        "latency_samples_seen",
+        "convcotm_latency_samples_seen_total",
+        "Latency samples offered to the exemplar reservoir.",
+    ),
+    (
+        "shard_panics",
+        "convcotm_shard_panics_total",
+        "Shard worker panics caught by the supervisor.",
+    ),
+    ("respawns", "convcotm_respawns_total", "Shard workers respawned."),
+];
+
+/// Plain gauges: snapshot field → (metric name, help).
+const GAUGES: &[(&str, &str, &str)] = &[
+    (
+        "throughput_rps",
+        "convcotm_throughput_rps",
+        "Requests per second since process start.",
+    ),
+    (
+        "latency_p50_us",
+        "convcotm_latency_p50_us",
+        "Histogram-derived request latency p50 (microseconds).",
+    ),
+    (
+        "latency_p95_us",
+        "convcotm_latency_p95_us",
+        "Histogram-derived request latency p95 (microseconds).",
+    ),
+    (
+        "latency_p99_us",
+        "convcotm_latency_p99_us",
+        "Histogram-derived request latency p99 (microseconds).",
+    ),
+];
+
+/// Stage histograms: snapshot field → (metric name, help).
+const HISTOGRAMS: &[(&str, &str, &str)] = &[
+    (
+        "latency_hist",
+        "convcotm_request_latency_seconds",
+        "End-to-end request latency.",
+    ),
+    (
+        "queue_wait_hist",
+        "convcotm_queue_wait_seconds",
+        "Admission to shard-worker pickup.",
+    ),
+    (
+        "eval_hist",
+        "convcotm_eval_seconds",
+        "Clause evaluation (scalar and block paths).",
+    ),
+];
+
+/// Render a metrics snapshot as Prometheus text.
+pub fn render(snapshot: &Json) -> String {
+    let mut out = String::new();
+    for &(field, name, help) in COUNTERS {
+        if let Some(v) = snapshot.get(field).and_then(Json::as_f64) {
+            header(&mut out, name, "counter", help);
+            sample(&mut out, name, &[], v);
+        }
+    }
+    for &(field, name, help) in GAUGES {
+        if let Some(v) = snapshot.get(field).and_then(Json::as_f64) {
+            header(&mut out, name, "gauge", help);
+            sample(&mut out, name, &[], v);
+        }
+    }
+    if let Some(shards) = snapshot.get("shard_requests").and_then(Json::as_arr) {
+        if !shards.is_empty() {
+            let name = "convcotm_shard_requests_total";
+            header(&mut out, name, "counter", "Requests served per shard.");
+            for (i, v) in shards.iter().enumerate() {
+                if let Some(v) = v.as_f64() {
+                    sample(&mut out, name, &[("shard", &i.to_string())], v);
+                }
+            }
+        }
+    }
+    if let Some(Json::Obj(models)) = snapshot.get("per_model") {
+        if !models.is_empty() {
+            for (field, name, help) in [
+                ("requests", "convcotm_model_requests_total", "Requests per model."),
+                ("errors", "convcotm_model_errors_total", "Errors per model."),
+            ] {
+                header(&mut out, name, "counter", help);
+                for (model, stats) in models {
+                    if let Some(v) = stats.get(field).and_then(Json::as_f64) {
+                        sample(&mut out, name, &[("model", model)], v);
+                    }
+                }
+            }
+        }
+    }
+    for &(field, name, help) in HISTOGRAMS {
+        if let Some(h) = snapshot.get(field).and_then(HistSnapshot::from_json) {
+            histogram(&mut out, name, help, &h);
+        }
+    }
+    if let Some(Json::Obj(http)) = snapshot.get("http") {
+        for (k, v) in http {
+            if let Some(v) = v.as_f64() {
+                let name = format!("convcotm_http_{k}");
+                header(&mut out, &name, "gauge", "HTTP front-door statistic.");
+                sample(&mut out, &name, &[], v);
+            }
+        }
+    }
+    out
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    push_value(out, value);
+    out.push('\n');
+}
+
+/// One histogram: cumulative `le` buckets (seconds) + `_sum`/`_count`.
+fn histogram(out: &mut String, name: &str, help: &str, h: &HistSnapshot) {
+    header(out, name, "histogram", help);
+    let mut cum = 0u64;
+    for (k, &c) in h.buckets.iter().enumerate().take(HIST_BUCKETS - 1) {
+        cum += c;
+        // Skip interior empty-prefix noise? No: Prometheus histograms are
+        // fixed-layout; every bucket must appear so scrapes from
+        // different processes align. 64 lines per metric is cheap.
+        let le = bucket_upper_us(k) / 1e6;
+        out.push_str(name);
+        let _ = write!(out, "_bucket{{le=\"{le}\"}} {cum}");
+        out.push('\n');
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+    out.push_str(name);
+    out.push_str("_sum ");
+    push_value(out, h.sum_us() / 1e6);
+    out.push('\n');
+    let _ = writeln!(out, "{name}_count {}", h.count);
+}
+
+fn push_value(out: &mut String, v: f64) {
+    if !v.is_finite() {
+        out.push_str(if v.is_nan() {
+            "NaN"
+        } else if v > 0.0 {
+            "+Inf"
+        } else {
+            "-Inf"
+        });
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::AtomicLogHist;
+
+    fn snapshot_fixture() -> Json {
+        let h = AtomicLogHist::new();
+        for us in [12.0, 25.4, 90.0, 400.0, 2_000.0] {
+            h.record(us);
+        }
+        let mut per_model = std::collections::BTreeMap::new();
+        per_model.insert(
+            "mnist\"v1".to_string(),
+            Json::obj([("requests", Json::num(4)), ("errors", Json::num(1))]),
+        );
+        Json::obj([
+            ("requests", Json::num(5)),
+            ("errors", Json::num(1)),
+            ("batches", Json::num(2)),
+            ("latency_samples_seen", Json::num(5)),
+            ("shard_panics", Json::num(0)),
+            ("respawns", Json::num(0)),
+            ("throughput_rps", Json::num(123.5)),
+            ("latency_p50_us", Json::num(95.0)),
+            ("latency_p95_us", Json::num(1800.0)),
+            ("latency_p99_us", Json::num(1990.0)),
+            (
+                "shard_requests",
+                Json::arr([Json::num(3), Json::num(2)]),
+            ),
+            ("per_model", Json::Obj(per_model)),
+            ("latency_hist", h.snapshot().to_json()),
+        ])
+    }
+
+    #[test]
+    fn renders_counters_gauges_and_labels() {
+        let text = render(&snapshot_fixture());
+        assert!(text.contains("# TYPE convcotm_requests_total counter"));
+        assert!(text.contains("convcotm_requests_total 5\n"));
+        assert!(text.contains("# TYPE convcotm_throughput_rps gauge"));
+        assert!(text.contains("convcotm_throughput_rps 123.5\n"));
+        assert!(text.contains("convcotm_shard_requests_total{shard=\"0\"} 3\n"));
+        assert!(text.contains("convcotm_shard_requests_total{shard=\"1\"} 2\n"));
+        // Label values are escaped, not emitted raw.
+        assert!(text.contains("convcotm_model_requests_total{model=\"mnist\\\"v1\"} 4\n"));
+        // Every HELP precedes its TYPE which precedes its samples.
+        let help_at = text.find("# HELP convcotm_requests_total").unwrap();
+        let type_at = text.find("# TYPE convcotm_requests_total").unwrap();
+        let sample_at = text.find("\nconvcotm_requests_total 5").unwrap();
+        assert!(help_at < type_at && type_at < sample_at);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_capped_by_inf() {
+        let text = render(&snapshot_fixture());
+        assert!(text.contains("# TYPE convcotm_request_latency_seconds histogram"));
+        let mut prev = 0u64;
+        let mut bucket_lines = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("convcotm_request_latency_seconds_bucket{le=\"")
+            {
+                let (le, count) = rest.split_once("\"} ").unwrap();
+                let count: u64 = count.parse().unwrap();
+                assert!(count >= prev, "cumulative counts must not decrease");
+                prev = count;
+                if le != "+Inf" {
+                    let _: f64 = le.parse().expect("le parses as a float");
+                }
+                bucket_lines += 1;
+            }
+        }
+        assert_eq!(bucket_lines, HIST_BUCKETS, "63 finite edges + +Inf");
+        assert!(text.contains("convcotm_request_latency_seconds_count 5\n"));
+        assert!(text.contains("convcotm_request_latency_seconds_bucket{le=\"+Inf\"} 5\n"));
+    }
+
+    #[test]
+    fn absent_fields_are_skipped_not_zeroed() {
+        let text = render(&Json::obj([("requests", Json::num(1))]));
+        assert!(text.contains("convcotm_requests_total 1\n"));
+        assert!(!text.contains("convcotm_errors_total"));
+        assert!(!text.contains("_bucket"));
+    }
+}

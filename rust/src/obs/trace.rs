@@ -1,0 +1,584 @@
+//! Request-scoped tracing with a zero-allocation disarmed hot path.
+//!
+//! A [`TraceId`] is minted at the front door (or adopted from an inbound
+//! `X-Request-Id` header after validation/truncation), echoed on every
+//! response, propagated by the router to replicas over the same header,
+//! and threaded through `Coordinator` submission — one id follows a
+//! request across processes. While a request is being handled, the worker
+//! thread holds an *active request scope* (fixed-size, stack-friendly)
+//! into which stage timings are recorded: `parse`, `queue_wait`, `eval`
+//! (scalar vs block path tagged), `serialize`, and on the router
+//! `forward`/`failover`.
+//!
+//! Arming follows the `util::fault` discipline: the layer is compiled in
+//! always and **disarmed by default** — [`record_stage`] and
+//! [`end_request`] start with one relaxed atomic load and return without
+//! touching a ring, a lock or the allocator. When armed (CLI `serve`/
+//! `route` arm at startup; tests use the [`arm`] guard, which also holds
+//! the process-wide arm lock), completed traces land in per-thread
+//! bounded ring buffers plus a global ring of the [`SLOW_RING_CAP`] worst
+//! requests over the armed threshold — the span trees `/v1/debug/slow`
+//! serves.
+
+use std::cell::{OnceCell, RefCell};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Longest request id we store or echo (a minted id is exactly this long:
+/// 128 bits as 32 hex chars). Longer inbound ids are truncated here.
+pub const TRACE_ID_MAX_LEN: usize = 32;
+
+/// Per-thread ring capacity (completed traces retained per worker).
+pub const RING_CAP: usize = 128;
+
+/// Worst-request ring capacity (the `/v1/debug/slow` surface).
+pub const SLOW_RING_CAP: usize = 64;
+
+/// Most stages one request can record; later stages are dropped silently
+/// (a trace is diagnostics, never an error source).
+pub const MAX_STAGES: usize = 8;
+
+/// A request id: inline bytes, `Copy`, no heap. Minted ids are 32
+/// lowercase hex chars; adopted ids keep the client's bytes verbatim
+/// (validated charset, truncated to [`TRACE_ID_MAX_LEN`]).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct TraceId {
+    len: u8,
+    bytes: [u8; TRACE_ID_MAX_LEN],
+}
+
+impl TraceId {
+    /// The absent id (no active request).
+    pub const NONE: TraceId = TraceId {
+        len: 0,
+        bytes: [0; TRACE_ID_MAX_LEN],
+    };
+
+    pub fn is_none(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.bytes[..self.len as usize]).unwrap_or("")
+    }
+
+    /// Mint a fresh 128-bit id: a per-process random seed (wall clock ×
+    /// pid, mixed) combined with a relaxed counter, formatted as 32 hex
+    /// chars. No allocation, no locks.
+    pub fn mint() -> TraceId {
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        static SEED: OnceLock<u64> = OnceLock::new();
+        let seed = *SEED.get_or_init(|| {
+            let t = SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0);
+            mix64(t ^ (u64::from(std::process::id())).rotate_left(32))
+        });
+        let c = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let hi = mix64(seed ^ c);
+        let lo = mix64(hi ^ c.rotate_left(17) ^ seed.rotate_left(7));
+        let mut id = TraceId {
+            len: TRACE_ID_MAX_LEN as u8,
+            bytes: [0; TRACE_ID_MAX_LEN],
+        };
+        const HEX: &[u8; 16] = b"0123456789abcdef";
+        for i in 0..16 {
+            id.bytes[i] = HEX[((hi >> (60 - 4 * i)) & 0xF) as usize];
+            id.bytes[16 + i] = HEX[((lo >> (60 - 4 * i)) & 0xF) as usize];
+        }
+        id
+    }
+
+    /// Adopt an inbound `X-Request-Id` value. Accepted charset is
+    /// `[0-9A-Za-z_-]`; anything else (or an empty value) returns `None`
+    /// and the caller mints instead. Values longer than
+    /// [`TRACE_ID_MAX_LEN`] bytes are truncated, not rejected.
+    pub fn parse(raw: &str) -> Option<TraceId> {
+        let raw = raw.trim();
+        if raw.is_empty()
+            || !raw
+                .bytes()
+                .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+        {
+            return None;
+        }
+        let take = raw.len().min(TRACE_ID_MAX_LEN);
+        let mut id = TraceId {
+            len: take as u8,
+            bytes: [0; TRACE_ID_MAX_LEN],
+        };
+        id.bytes[..take].copy_from_slice(&raw.as_bytes()[..take]);
+        Some(id)
+    }
+}
+
+impl fmt::Display for TraceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl fmt::Debug for TraceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TraceId({})", self.as_str())
+    }
+}
+
+/// SplitMix64 finalizer (self-contained; no PRNG state needed).
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The span taxonomy (DESIGN.md §14). One request records a subset of
+/// these, in completion order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// HTTP request parsing (front-door event loop).
+    Parse,
+    /// Admission → shard-worker pickup, measured in the coordinator.
+    QueueWait,
+    /// Clause evaluation (scalar vs block path tagged via `blocked`).
+    Eval,
+    /// Response serialization in the server worker.
+    Serialize,
+    /// Router → replica exchange (the chosen owner).
+    Forward,
+    /// Router failover ladder after the preferred replica failed.
+    Failover,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::QueueWait => "queue_wait",
+            Stage::Eval => "eval",
+            Stage::Serialize => "serialize",
+            Stage::Forward => "forward",
+            Stage::Failover => "failover",
+        }
+    }
+}
+
+/// One recorded stage of a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct StageRec {
+    pub stage: Stage,
+    /// Start offset from the request's admission, µs.
+    pub offset_us: f64,
+    pub dur_us: f64,
+    /// Eval-path tag: true when the image-major blocked evaluator served
+    /// the stage (meaningful for [`Stage::Eval`] only).
+    pub blocked: bool,
+}
+
+impl Default for StageRec {
+    fn default() -> Self {
+        StageRec {
+            stage: Stage::Parse,
+            offset_us: 0.0,
+            dur_us: 0.0,
+            blocked: false,
+        }
+    }
+}
+
+/// Coordinator-side stage timing carried back to the front door on each
+/// `BackendOutput`, so the server worker can assemble the full span tree
+/// without cross-thread trace plumbing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageTiming {
+    /// Admission → worker pickup, µs.
+    pub queue_wait_us: f64,
+    /// Pickup → evaluation complete, µs.
+    pub eval_us: f64,
+    /// True when the blocked (image-major) evaluator served the request.
+    pub blocked: bool,
+}
+
+/// A finished request's span tree: fixed-size and `Copy`, so ring
+/// recording never allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct CompletedTrace {
+    pub id: TraceId,
+    /// Wall-clock completion time, ms since the Unix epoch.
+    pub unix_ms: u64,
+    pub total_us: f64,
+    pub status: u16,
+    n_stages: u8,
+    stages: [StageRec; MAX_STAGES],
+}
+
+impl CompletedTrace {
+    pub fn stages(&self) -> &[StageRec] {
+        &self.stages[..self.n_stages as usize]
+    }
+
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let stages = Json::arr(self.stages().iter().map(|s| {
+            let mut pairs = vec![
+                ("stage", Json::str(s.stage.name())),
+                ("offset_us", Json::num(s.offset_us)),
+                ("dur_us", Json::num(s.dur_us)),
+            ];
+            if s.stage == Stage::Eval {
+                pairs.push(("path", Json::str(if s.blocked { "block" } else { "scalar" })));
+            }
+            Json::obj(pairs)
+        }));
+        Json::obj([
+            ("request_id", Json::str(self.id.as_str())),
+            ("unix_ms", Json::num(self.unix_ms as f64)),
+            ("status", Json::num(self.status as f64)),
+            ("total_us", Json::num(self.total_us)),
+            ("stages", stages),
+        ])
+    }
+}
+
+/// The in-flight request scope (thread-local, fixed size).
+struct Active {
+    id: TraceId,
+    start: Instant,
+    n: u8,
+    stages: [StageRec; MAX_STAGES],
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Active>> = const { RefCell::new(None) };
+    static RING: OnceCell<Arc<Mutex<Ring>>> = const { OnceCell::new() };
+}
+
+struct Ring {
+    entries: Vec<CompletedTrace>,
+    next: usize,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Completed requests at or above this total duration (µs) are candidates
+/// for the slow ring. Stored as integer µs so the armed check stays one
+/// relaxed load.
+static SLOW_THRESHOLD_US: AtomicU64 = AtomicU64::new(0);
+static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+static SLOW: Mutex<Vec<CompletedTrace>> = Mutex::new(Vec::new());
+/// Serializes armers (process-wide state), exactly like `util::fault`.
+static ARM_LOCK: Mutex<()> = Mutex::new(());
+
+/// True when span recording is armed. The only check on the hot path.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Guard from [`arm`]: disarms on drop.
+pub struct TraceGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Arm span recording for the guard's lifetime (tests). Clears the rings
+/// so assertions observe only the guarded window; holds the process-wide
+/// arm lock so concurrent tests serialize.
+#[must_use = "tracing disarms when the guard drops"]
+pub fn arm(slow_threshold_us: u64) -> TraceGuard {
+    let lock = ARM_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    SLOW.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    for ring in RINGS.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+        let mut g = ring.lock().unwrap_or_else(|p| p.into_inner());
+        g.entries.clear();
+        g.next = 0;
+    }
+    SLOW_THRESHOLD_US.store(slow_threshold_us, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    TraceGuard { _lock: lock }
+}
+
+/// Arm for the rest of the process (the CLI path — never disarms).
+pub fn arm_process(slow_threshold_us: u64) {
+    std::mem::forget(arm(slow_threshold_us));
+}
+
+/// Open a request scope on the current thread. Always maintained (the id
+/// feeds the response echo, coordinator submission and log stamping);
+/// span-recording work happens only when armed. Zero allocations.
+pub fn begin_request(id: TraceId) {
+    ACTIVE.with(|a| {
+        *a.borrow_mut() = Some(Active {
+            id,
+            start: Instant::now(),
+            n: 0,
+            stages: [StageRec::default(); MAX_STAGES],
+        });
+    });
+}
+
+/// The current thread's active request id ([`TraceId::NONE`] outside a
+/// request scope). Zero allocations.
+pub fn current_trace() -> TraceId {
+    ACTIVE.with(|a| a.borrow().as_ref().map(|x| x.id).unwrap_or(TraceId::NONE))
+}
+
+/// Elapsed µs since the current request scope opened (`0.0` outside a
+/// scope) — the anchor for placing externally-measured stages
+/// ([`StageTiming`]) on the request's timeline.
+pub fn elapsed_us() -> f64 {
+    ACTIVE.with(|a| {
+        a.borrow()
+            .as_ref()
+            .map(|x| x.start.elapsed().as_secs_f64() * 1e6)
+            .unwrap_or(0.0)
+    })
+}
+
+/// Record a stage that ended now and lasted `dur_us`. One relaxed load
+/// and an early return when disarmed.
+#[inline]
+pub fn record_stage(stage: Stage, dur_us: f64) {
+    if !armed() {
+        return;
+    }
+    ACTIVE.with(|a| {
+        if let Some(x) = a.borrow_mut().as_mut() {
+            let end_us = x.start.elapsed().as_secs_f64() * 1e6;
+            push_stage(x, stage, (end_us - dur_us).max(0.0), dur_us, false);
+        }
+    });
+}
+
+/// Record a stage at an explicit offset from request admission — used for
+/// coordinator timings ([`StageTiming`]) that were measured on a shard
+/// worker thread and carried back with the response.
+#[inline]
+pub fn record_stage_at(stage: Stage, offset_us: f64, dur_us: f64, blocked: bool) {
+    if !armed() {
+        return;
+    }
+    ACTIVE.with(|a| {
+        if let Some(x) = a.borrow_mut().as_mut() {
+            push_stage(x, stage, offset_us, dur_us, blocked);
+        }
+    });
+}
+
+fn push_stage(x: &mut Active, stage: Stage, offset_us: f64, dur_us: f64, blocked: bool) {
+    if (x.n as usize) < MAX_STAGES {
+        x.stages[x.n as usize] = StageRec {
+            stage,
+            offset_us,
+            dur_us,
+            blocked,
+        };
+        x.n += 1;
+    }
+}
+
+/// Close the current request scope. When armed, the completed trace goes
+/// to this thread's ring and (if at or over the threshold) competes for a
+/// slow-ring slot; the copy is returned for callers that want it. When
+/// disarmed this is the relaxed load plus a `take()` of the scope —
+/// no allocation, no locks.
+pub fn end_request(status: u16) -> Option<CompletedTrace> {
+    let active = ACTIVE.with(|a| a.borrow_mut().take())?;
+    if !armed() {
+        return None;
+    }
+    let done = CompletedTrace {
+        id: active.id,
+        unix_ms: SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0),
+        total_us: active.start.elapsed().as_secs_f64() * 1e6,
+        status,
+        n_stages: active.n,
+        stages: active.stages,
+    };
+    record_completed(&done);
+    Some(done)
+}
+
+fn record_completed(t: &CompletedTrace) {
+    RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            // First armed record on this thread: allocate its ring once
+            // and register it for snapshotting. Never runs disarmed.
+            let r = Arc::new(Mutex::new(Ring {
+                entries: Vec::with_capacity(RING_CAP),
+                next: 0,
+            }));
+            RINGS
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(Arc::clone(&r));
+            r
+        });
+        let mut g = ring.lock().unwrap_or_else(|p| p.into_inner());
+        if g.entries.len() < RING_CAP {
+            g.entries.push(*t);
+        } else {
+            let i = g.next % RING_CAP;
+            g.entries[i] = *t;
+            g.next = (g.next + 1) % RING_CAP;
+        }
+    });
+    if t.total_us >= SLOW_THRESHOLD_US.load(Ordering::Relaxed) as f64 {
+        let mut slow = SLOW.lock().unwrap_or_else(|p| p.into_inner());
+        if slow.len() < SLOW_RING_CAP {
+            slow.push(*t);
+        } else {
+            // Bounded: evict the fastest resident iff the newcomer is
+            // slower, keeping the worst SLOW_RING_CAP requests.
+            let (i, min_us) = slow
+                .iter()
+                .enumerate()
+                .fold((0usize, f64::INFINITY), |acc, (i, e)| {
+                    if e.total_us < acc.1 {
+                        (i, e.total_us)
+                    } else {
+                        acc
+                    }
+                });
+            if t.total_us > min_us {
+                slow[i] = *t;
+            }
+        }
+    }
+}
+
+/// The slow ring, worst first.
+pub fn slow_snapshot() -> Vec<CompletedTrace> {
+    let mut out = SLOW.lock().unwrap_or_else(|p| p.into_inner()).clone();
+    out.sort_by(|a, b| b.total_us.partial_cmp(&a.total_us).unwrap_or(std::cmp::Ordering::Equal));
+    out
+}
+
+/// Most recently completed traces across every thread's ring, newest
+/// first, capped at `limit`.
+pub fn recent_snapshot(limit: usize) -> Vec<CompletedTrace> {
+    let rings: Vec<Arc<Mutex<Ring>>> = RINGS
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .iter()
+        .map(Arc::clone)
+        .collect();
+    let mut out = Vec::new();
+    for ring in rings {
+        out.extend(ring.lock().unwrap_or_else(|p| p.into_inner()).entries.iter().copied());
+    }
+    out.sort_by(|a, b| b.unix_ms.cmp(&a.unix_ms));
+    out.truncate(limit);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minted_ids_are_32_hex_and_distinct() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        for id in [&a, &b] {
+            assert_eq!(id.as_str().len(), 32);
+            assert!(id.as_str().bytes().all(|c| c.is_ascii_hexdigit()));
+        }
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn parse_validates_and_truncates() {
+        let id = TraceId::parse("abc-DEF_123").unwrap();
+        assert_eq!(id.as_str(), "abc-DEF_123");
+        // Truncation, not rejection, past the cap.
+        let long = "x".repeat(100);
+        assert_eq!(TraceId::parse(&long).unwrap().as_str().len(), TRACE_ID_MAX_LEN);
+        // Whitespace trimmed; invalid bytes and empties rejected.
+        assert_eq!(TraceId::parse("  ok  ").unwrap().as_str(), "ok");
+        assert!(TraceId::parse("").is_none());
+        assert!(TraceId::parse("   ").is_none());
+        assert!(TraceId::parse("no spaces").is_none());
+        assert!(TraceId::parse("semi;colon").is_none());
+        assert!(TraceId::parse("új-id").is_none());
+    }
+
+    #[test]
+    fn disarmed_scope_keeps_id_but_records_nothing() {
+        assert!(!armed());
+        let id = TraceId::parse("t-disarmed").unwrap();
+        begin_request(id);
+        assert_eq!(current_trace(), id);
+        record_stage(Stage::Parse, 5.0);
+        assert!(end_request(200).is_none());
+        assert!(current_trace().is_none());
+    }
+
+    #[test]
+    fn armed_scope_builds_span_tree_and_slow_ring() {
+        let _g = arm(0);
+        begin_request(TraceId::parse("t-armed").unwrap());
+        record_stage(Stage::Parse, 3.0);
+        record_stage_at(Stage::QueueWait, 3.0, 11.0, false);
+        record_stage_at(Stage::Eval, 14.0, 20.0, true);
+        record_stage(Stage::Serialize, 2.0);
+        let done = end_request(200).expect("armed end returns the trace");
+        assert_eq!(done.status, 200);
+        let names: Vec<&str> = done.stages().iter().map(|s| s.stage.name()).collect();
+        assert_eq!(names, ["parse", "queue_wait", "eval", "serialize"]);
+        assert!(done.stages()[2].blocked);
+        let slow = slow_snapshot();
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].id.as_str(), "t-armed");
+        let j = slow[0].to_json();
+        assert_eq!(
+            j.get("request_id").and_then(|v| v.as_str()),
+            Some("t-armed")
+        );
+        let stages = j.get("stages").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(stages.len(), 4);
+        assert_eq!(
+            stages[2].get("path").and_then(|v| v.as_str()),
+            Some("block")
+        );
+        let recent = recent_snapshot(16);
+        assert!(recent.iter().any(|t| t.id.as_str() == "t-armed"));
+    }
+
+    #[test]
+    fn slow_ring_keeps_the_worst_and_stays_bounded() {
+        let _g = arm(0);
+        for i in 0..(SLOW_RING_CAP + 40) {
+            begin_request(TraceId::mint());
+            // Synthetic totals: monotonically later requests are slower.
+            std::thread::sleep(std::time::Duration::from_micros(1 + i as u64 % 3));
+            end_request(200);
+        }
+        let slow = slow_snapshot();
+        assert_eq!(slow.len(), SLOW_RING_CAP);
+        // Worst-first ordering.
+        for w in slow.windows(2) {
+            assert!(w[0].total_us >= w[1].total_us);
+        }
+    }
+
+    #[test]
+    fn threshold_filters_the_slow_ring() {
+        let _g = arm(60_000_000); // 60 s: nothing in a test qualifies
+        begin_request(TraceId::mint());
+        end_request(200);
+        assert!(slow_snapshot().is_empty());
+        // …but the per-thread ring still records it.
+        assert!(!recent_snapshot(4).is_empty());
+    }
+}

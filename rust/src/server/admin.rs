@@ -5,8 +5,31 @@ use super::http::{Request, Response};
 use super::ServerState;
 use crate::coordinator::ShardHealth;
 use crate::model_io;
+use crate::obs;
 use crate::util::Json;
 use std::path::PathBuf;
+
+/// The Prometheus text exposition format's content type.
+pub(crate) const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Did the request ask for `?format=prometheus`? Any other `format` value
+/// (or none) selects the JSON snapshot — tolerant, not an error.
+pub(crate) fn wants_prometheus(query: Option<&str>) -> bool {
+    query.is_some_and(|q| q.split('&').any(|kv| kv == "format=prometheus"))
+}
+
+/// A metrics snapshot as the Prometheus text format (shared by the
+/// replica and router tiers — both hand their JSON aggregate to the same
+/// renderer).
+pub(crate) fn prometheus_response(snapshot: &Json) -> Response {
+    Response {
+        status: 200,
+        content_type: PROMETHEUS_CONTENT_TYPE,
+        headers: Vec::new(),
+        body: obs::promtext::render(snapshot).into_bytes(),
+        close: false,
+    }
+}
 
 /// `GET /healthz` — liveness, what the process is serving, and per-shard
 /// supervision state. Status: `"ok"` (every shard healthy, HTTP `200`),
@@ -43,17 +66,39 @@ pub fn healthz(state: &ServerState) -> Response {
     )
 }
 
-/// `GET /metrics` — the pool's aggregate [`MetricsSnapshot`] JSON (the
+/// `GET /v1/metrics` — the pool's aggregate [`MetricsSnapshot`] JSON (the
 /// same `to_json` the CLI summary prints) plus the HTTP-layer counters
-/// under `"http"`.
+/// under `"http"`. `?format=prometheus` renders the same snapshot as the
+/// Prometheus text exposition format instead (linted by
+/// `ci/check_promtext.py`).
 ///
 /// [`MetricsSnapshot`]: crate::coordinator::MetricsSnapshot
-pub fn metrics(state: &ServerState) -> Response {
+pub fn metrics(state: &ServerState, req: &Request) -> Response {
     let mut snapshot = state.coord.metrics().to_json();
     if let Json::Obj(map) = &mut snapshot {
         map.insert("http".to_string(), state.stats.to_json());
     }
+    if wants_prometheus(req.query.as_deref()) {
+        return prometheus_response(&snapshot);
+    }
     Response::json(200, &snapshot)
+}
+
+/// `GET /v1/debug/slow` — the span trees of the worst
+/// [`obs::SLOW_RING_CAP`] requests over the armed threshold, worst first.
+/// Tracing is armed by `serve`/`route` at startup (`--trace-slow-us`);
+/// a disarmed process answers an empty ring with `"armed": false` rather
+/// than an error, so the endpoint is always probeable.
+pub fn debug_slow() -> Response {
+    let slow = obs::slow_snapshot();
+    Response::json(
+        200,
+        &Json::obj([
+            ("armed", Json::Bool(obs::armed())),
+            ("count", Json::num(slow.len() as f64)),
+            ("slow", Json::arr(slow.iter().map(|t| t.to_json()))),
+        ]),
+    )
 }
 
 /// `GET /v1/models` — the read-only serving inventory: every loaded

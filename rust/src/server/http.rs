@@ -663,6 +663,20 @@ pub fn write_request<W: Write>(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_request_with_headers(w, method, path, body, keep_alive, &[])
+}
+
+/// [`write_request`] with extra headers — the router uses this to
+/// propagate `x-request-id` to replicas so one trace id follows a request
+/// across the tier.
+pub fn write_request_with_headers<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
     let mut head = format!("{method} {path} HTTP/1.1\r\nhost: convcotm\r\n");
     if !body.is_empty() {
         head.push_str("content-type: application/json\r\n");
@@ -670,6 +684,12 @@ pub fn write_request<W: Write>(
     head.push_str(&format!("content-length: {}\r\n", body.len()));
     if !keep_alive {
         head.push_str("connection: close\r\n");
+    }
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
     }
     head.push_str("\r\n");
     w.write_all(head.as_bytes())?;

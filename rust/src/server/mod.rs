@@ -208,9 +208,15 @@ pub const ROUTES: &[Route] = &[
     },
     Route {
         method: "GET",
-        path: "/metrics",
-        aliases: &[],
+        path: "/v1/metrics",
+        aliases: &["/metrics"],
         kind: RouteKind::Local,
+    },
+    Route {
+        method: "GET",
+        path: "/v1/debug/slow",
+        aliases: &[],
+        kind: RouteKind::ForwardAll,
     },
     Route {
         method: "POST",
@@ -318,7 +324,8 @@ impl App for ServerState {
             "/v1/classify" => proto::classify(self, req),
             "/v1/models" => admin::list_models(self),
             "/healthz" => admin::healthz(self),
-            "/metrics" => admin::metrics(self),
+            "/v1/metrics" => admin::metrics(self, req),
+            "/v1/debug/slow" => admin::debug_slow(),
             "/v1/admin/models" => admin::models(self, req),
             "/v1/admin/shutdown" => admin::shutdown(self),
             other => Response::fail(404, "not_found", &format!("no such endpoint '{other}'")),

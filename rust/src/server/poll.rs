@@ -33,6 +33,7 @@
 
 use super::http::{self, Request, Response};
 use super::{App, ServerConfig};
+use crate::obs::{self, Stage, TraceId};
 use crate::util::poll::{waker_pair, Interest, PollEvent, Poller, Waker};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -166,13 +167,31 @@ fn worker_loop(
             },
             Err(_) => return,
         };
+        // Open the request scope: adopt the client's X-Request-Id
+        // (validated/truncated) or mint a fresh 128-bit id. The id is
+        // echoed on the response and follows the request through the
+        // coordinator (and, in route mode, across the wire to replicas).
+        let id = job
+            .req
+            .header("x-request-id")
+            .and_then(TraceId::parse)
+            .unwrap_or_else(TraceId::mint);
+        obs::begin_request(id);
         let resp = app.handle(&job.req);
         app.stats().count_response(resp.status);
         // The drain closes keep-alive connections after the response in
         // flight (never mid-response).
         let keep = job.req.keep_alive() && !resp.close && !app.shutdown_requested();
+        let resp = resp.with_header("x-request-id", id.as_str());
         let mut bytes = Vec::with_capacity(resp.body.len() + 256);
-        let _ = resp.write_to(&mut bytes, keep);
+        if obs::armed() {
+            let t0 = Instant::now();
+            let _ = resp.write_to(&mut bytes, keep);
+            obs::record_stage(Stage::Serialize, t0.elapsed().as_secs_f64() * 1e6);
+        } else {
+            let _ = resp.write_to(&mut bytes, keep);
+        }
+        obs::end_request(resp.status);
         if done
             .send(Completion {
                 slot: job.slot,
@@ -605,19 +624,26 @@ impl EventLoop {
                 self.arm(slot);
                 match self.job_tx.try_send(Job { slot, gen, req }) {
                     Ok(()) => {}
-                    Err(TrySendError::Full(_)) => {
+                    Err(TrySendError::Full(job)) => {
                         // Backpressure from the worker queue: answer the
                         // 503 directly from the loop, keep the connection.
                         let stats = self.app.stats();
                         stats.busy_503.fetch_add(1, Ordering::Relaxed);
                         stats.count_response(503);
                         let keep = keep_alive && !self.app.shutdown_requested();
-                        let resp = Response::fail_retry(
+                        let mut resp = Response::fail_retry(
                             503,
                             "overloaded",
                             "request queue full, retry shortly",
                             1000,
                         );
+                        // Best-effort id echo: the loop-side shed never
+                        // opens a request scope, but a client that sent an
+                        // id still gets it back.
+                        if let Some(id) = job.req.header("x-request-id").and_then(TraceId::parse)
+                        {
+                            resp = resp.with_header("x-request-id", id.as_str());
+                        }
                         let mut bytes = Vec::with_capacity(256);
                         let _ = resp.write_to(&mut bytes, keep);
                         self.enqueue_response(slot, bytes, keep);

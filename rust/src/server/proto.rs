@@ -55,9 +55,10 @@ use crate::coordinator::{
     recv_deadline, BadGeometry, DeadlineExceeded, RegistryError, ShardPanicked,
 };
 use crate::data::boolean::{BoolImage, Booleanizer};
+use crate::obs::{self, Stage, StageTiming};
 use crate::util::Json;
 use std::sync::atomic::Ordering;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Cap on images per classify call. Bounds per-request fan-out the same
 /// way `Limits::max_body_bytes` bounds bytes (a request held below both
@@ -193,12 +194,30 @@ fn wait_failure(state: &ServerState, e: &anyhow::Error) -> Response {
     Response::fail(500, "internal", "server is shutting down")
 }
 
+/// Attach the coordinator's stage timings (measured on the shard worker
+/// that owns the pickup clock, carried back on the output) to the current
+/// trace. The offsets anchor against "the evaluation ended just before
+/// this response was received" — exact durations, approximate placement.
+fn record_coordinator_stages(timing: Option<StageTiming>) {
+    let Some(t) = timing else { return };
+    if !obs::armed() {
+        return;
+    }
+    let now_us = obs::elapsed_us();
+    let eval_off = (now_us - t.eval_us).max(0.0);
+    let queue_off = (eval_off - t.queue_wait_us).max(0.0);
+    obs::record_stage_at(Stage::QueueWait, queue_off, t.queue_wait_us, false);
+    obs::record_stage_at(Stage::Eval, eval_off, t.eval_us, t.blocked);
+}
+
 /// `POST /v1/classify` — parse, submit to the shard pool, collect.
 pub fn classify(state: &ServerState, req: &Request) -> Response {
+    let parse_t0 = Instant::now();
     let call = match parse_body(&req.body) {
         Ok(c) => c,
         Err(msg) => return Response::fail(400, "bad_request", &msg),
     };
+    obs::record_stage(Stage::Parse, parse_t0.elapsed().as_secs_f64() * 1e6);
     let model = match &call.model {
         Some(m) => Json::str(m.clone()),
         None => Json::Null,
@@ -218,14 +237,17 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
             }
         };
         return match recv_deadline(&rx, deadline) {
-            Ok(Ok(out)) => Response::json(
-                200,
-                &Json::obj([
-                    ("model", model),
-                    ("count", Json::num(1.0)),
-                    ("results", Json::Arr(vec![result_entry(&out)])),
-                ]),
-            ),
+            Ok(Ok(out)) => {
+                record_coordinator_stages(out.timing);
+                Response::json(
+                    200,
+                    &Json::obj([
+                        ("model", model),
+                        ("count", Json::num(1.0)),
+                        ("results", Json::Arr(vec![result_entry(&out)])),
+                    ]),
+                )
+            }
             Ok(Err(e)) => rejection_response(&e),
             Err(e) => wait_failure(state, &e),
         };
@@ -244,6 +266,8 @@ pub fn classify(state: &ServerState, req: &Request) -> Response {
         Ok(outcomes) => outcomes,
         Err(e) => return wait_failure(state, &e),
     };
+    // A block shares one queue-wait/eval measurement; any Ok slot carries it.
+    record_coordinator_stages(outcomes.iter().flatten().next().and_then(|o| o.timing));
     // Every image failed: surface the first error with its status, the
     // same shape a failed single-image call produces.
     if outcomes.iter().all(|r| r.is_err()) {

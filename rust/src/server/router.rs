@@ -20,15 +20,17 @@
 //! - no alive replica left → `502 replica_unavailable`.
 //!
 //! Endpoint treatment follows the route table's [`RouteKind`] column:
-//! `Local` rows (`/healthz`, `/metrics`, `/v1/admin/shutdown`) answer
-//! about/affect the router process itself (`/metrics` additionally
+//! `Local` rows (`/healthz`, `/v1/metrics`, `/v1/admin/shutdown`) answer
+//! about/affect the router process itself (`/v1/metrics` additionally
 //! scrapes and sums replica snapshots — see
 //! [`crate::coordinator::metrics::aggregate_replica_metrics`]),
 //! `ForwardOne` rows relay to the model's owner, and `ForwardAll` rows
-//! fan out to every alive replica (deploys, model inventory).
+//! fan out to every alive replica (deploys, model inventory, the
+//! `/v1/debug/slow` span-tree rings).
 
-use super::http::{error_body, write_request, ClientResponse, Limits, Response};
+use super::http::{error_body, write_request_with_headers, ClientResponse, Limits, Response};
 use super::{finish_dispatch, match_route, App, HttpConn, HttpStats, Request, RouteKind};
+use crate::obs::{self, Stage};
 use crate::util::prng::SplitMix64;
 use crate::util::Json;
 use std::collections::BTreeMap;
@@ -36,7 +38,7 @@ use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Consecutive failed health probes before a replica is declared dead.
 /// One lost probe (GC pause, packet loss) should not trigger a re-home.
@@ -153,14 +155,26 @@ impl Replica {
     }
 
     fn mark_dead(&self) {
-        self.alive.store(false, Ordering::Relaxed);
+        // `swap` detects the alive→dead transition so the log line fires
+        // once per death, not once per failed request against a corpse.
+        if self.alive.swap(false, Ordering::Relaxed) {
+            obs::log::warn(
+                "replica marked dead; its models re-home to their next-ranked replica",
+                [("replica", Json::str(self.addr.clone()))],
+            );
+        }
         // A dead replica's pooled connections are stale by definition.
         self.pool.lock().unwrap().clear();
     }
 
     fn mark_alive(&self) {
         self.consecutive_failures.store(0, Ordering::Relaxed);
-        self.alive.store(true, Ordering::Relaxed);
+        if !self.alive.swap(true, Ordering::Relaxed) {
+            obs::log::info(
+                "replica back alive",
+                [("replica", Json::str(self.addr.clone()))],
+            );
+        }
     }
 
     fn note_probe_failure(&self) {
@@ -183,8 +197,9 @@ impl Replica {
         path: &str,
         body: &[u8],
         limits: &Limits,
+        extra_headers: &[(&str, &str)],
     ) -> anyhow::Result<ClientResponse> {
-        write_request(conn.get_mut(), method, path, body, true)
+        write_request_with_headers(conn.get_mut(), method, path, body, true, extra_headers)
             .map_err(|e| anyhow::anyhow!("write to replica failed: {e}"))?;
         match conn.read_response(limits) {
             Ok(Some(resp)) => Ok(resp),
@@ -207,9 +222,16 @@ impl Replica {
         body: &[u8],
         limits: &Limits,
     ) -> anyhow::Result<ClientResponse> {
+        // Propagate the active request id so the replica's spans and log
+        // lines correlate with the router's. Request workers always have
+        // a scope (the poll loop opens one per request); the health
+        // prober has none and sends no header.
+        let rid = obs::current_trace();
+        let id_header = [("x-request-id", rid.as_str())];
+        let extra: &[(&str, &str)] = if rid.is_none() { &[] } else { &id_header };
         let pooled = self.pool.lock().unwrap().pop();
         if let Some(mut conn) = pooled {
-            if let Ok(resp) = Self::exchange(&mut conn, method, path, body, limits) {
+            if let Ok(resp) = Self::exchange(&mut conn, method, path, body, limits, extra) {
                 self.recycle(conn, &resp);
                 return Ok(resp);
             }
@@ -217,7 +239,7 @@ impl Replica {
         let mut conn = self
             .connect(cfg)
             .map_err(|e| anyhow::anyhow!("connect to replica {} failed: {e}", self.addr))?;
-        let resp = Self::exchange(&mut conn, method, path, body, limits)?;
+        let resp = Self::exchange(&mut conn, method, path, body, limits, extra)?;
         self.recycle(conn, &resp);
         Ok(resp)
     }
@@ -245,7 +267,7 @@ impl Replica {
             ..cfg.clone()
         };
         let mut conn = self.connect(&probe_cfg)?;
-        let resp = Self::exchange(&mut conn, "GET", "/healthz", &[], limits)?;
+        let resp = Self::exchange(&mut conn, "GET", "/healthz", &[], limits, &[])?;
         Ok(resp.status == 200)
     }
 
@@ -332,14 +354,24 @@ impl RouterState {
                     1000,
                 );
             }
+            // `forward` spans cover successful relays; each failed
+            // attempt becomes a `failover` span instead, so a slow
+            // request's tree shows exactly where the time went.
+            let t0 = obs::armed().then(Instant::now);
             let out = r.call(&self.cfg, &req.method, canonical_path, &req.body, &self.limits);
             r.outstanding.fetch_sub(1, Ordering::AcqRel);
             match out {
                 Ok(resp) => {
+                    if let Some(t0) = t0 {
+                        obs::record_stage(Stage::Forward, t0.elapsed().as_secs_f64() * 1e6);
+                    }
                     r.forwarded.fetch_add(1, Ordering::Relaxed);
                     return relay(resp);
                 }
                 Err(_) => {
+                    if let Some(t0) = t0 {
+                        obs::record_stage(Stage::Failover, t0.elapsed().as_secs_f64() * 1e6);
+                    }
                     r.transport_errors.fetch_add(1, Ordering::Relaxed);
                     r.mark_dead();
                 }
@@ -518,12 +550,16 @@ impl RouterState {
         )
     }
 
-    /// Scrape every alive replica's `/metrics`, sum the counters
-    /// ([`crate::coordinator::metrics::aggregate_replica_metrics`]), and
-    /// attach the router's own HTTP stats and per-replica forward
-    /// counters.
-    fn metrics(&self) -> Response {
-        let results = self.fan_out("GET", "/metrics", &[]);
+    /// Scrape every alive replica's `/v1/metrics`, sum the counters and
+    /// latency histograms exactly
+    /// ([`crate::coordinator::metrics::aggregate_replica_metrics`] — the
+    /// fleet percentiles come from the *merged* histograms, never from
+    /// averaging per-replica percentiles), and attach the router's own
+    /// HTTP stats and per-replica forward counters.
+    /// `?format=prometheus` renders the same aggregate through the shared
+    /// text-exposition renderer.
+    fn metrics(&self, req: &Request) -> Response {
+        let results = self.fan_out("GET", "/v1/metrics", &[]);
         let snaps: Vec<(usize, Json)> = results
             .into_iter()
             .filter_map(|(i, out)| Some((i, parse_json_body(&out.ok()?.body)?)))
@@ -545,7 +581,35 @@ impl RouterState {
                 ),
             );
         }
+        if super::admin::wants_prometheus(req.query.as_deref()) {
+            return super::admin::prometheus_response(&agg);
+        }
         Response::json(200, &agg)
+    }
+
+    /// `GET /v1/debug/slow` across the tier: the router's own
+    /// worst-request ring (its spans carry `forward`/`failover` stages)
+    /// plus each alive replica's ring, keyed by replica address.
+    fn debug_slow(&self) -> Response {
+        let results = self.fan_out("GET", "/v1/debug/slow", &[]);
+        let mut replicas: BTreeMap<String, Json> = BTreeMap::new();
+        for (i, out) in results {
+            let Ok(resp) = out else { continue };
+            let Some(body) = parse_json_body(&resp.body) else {
+                continue;
+            };
+            replicas.insert(self.replicas[i].addr.clone(), body);
+        }
+        let slow = obs::slow_snapshot();
+        Response::json(
+            200,
+            &Json::obj([
+                ("armed", Json::Bool(obs::armed())),
+                ("count", Json::num(slow.len() as f64)),
+                ("slow", Json::arr(slow.iter().map(|t| t.to_json()))),
+                ("replicas", Json::Obj(replicas)),
+            ]),
+        )
     }
 }
 
@@ -559,7 +623,8 @@ impl App for RouterState {
         // translated at this tier, not propagated.
         let resp = match (m.route.path, m.route.kind) {
             ("/healthz", _) => self.healthz(),
-            ("/metrics", _) => self.metrics(),
+            ("/v1/metrics", _) => self.metrics(req),
+            ("/v1/debug/slow", _) => self.debug_slow(),
             ("/v1/admin/shutdown", _) => {
                 self.request_shutdown();
                 Response::json(200, &Json::obj([("draining", Json::Bool(true))])).closing()

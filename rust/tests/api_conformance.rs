@@ -302,6 +302,7 @@ impl Backend for EchoBackend {
                 class_sums: vec![0; 10],
                 sim_cycles: None,
                 model_version: None,
+                timing: None,
             })
             .collect())
     }

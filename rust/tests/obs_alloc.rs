@@ -1,0 +1,72 @@
+//! Disarmed-tracing allocation discipline: with tracing disarmed (the
+//! default), the per-request hook sequence — mint/adopt an id, open the
+//! scope, record stages, close the scope — must allocate **nothing**.
+//! This is the property that makes it safe to leave the hooks compiled
+//! into the serving hot path; the `trace_overhead_pct` bench gate bounds
+//! the time side of the same claim.
+//!
+//! This binary holds exactly one test so no concurrent test thread can
+//! allocate during the measured window (the allocator count is global).
+
+use convcotm::obs::{self, Stage, TraceId};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disarmed_request_scope_allocates_nothing() {
+    assert!(!obs::armed(), "this binary must not arm tracing");
+
+    // Warm up one full cycle: thread-local scope slot, the mint seed's
+    // OnceLock, any lazy ring registration — one-time costs are fine.
+    for _ in 0..8 {
+        obs::begin_request(TraceId::mint());
+        obs::record_stage(Stage::Parse, 1.0);
+        obs::record_stage(Stage::Eval, 2.0);
+        obs::record_stage(Stage::Serialize, 0.5);
+        let done = obs::end_request(200);
+        assert!(done.is_none(), "disarmed end_request must not complete traces");
+    }
+
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for i in 0..100_000u32 {
+        let id = if i % 2 == 0 {
+            TraceId::mint()
+        } else {
+            TraceId::parse("adopted-client-id-1234").expect("valid id")
+        };
+        obs::begin_request(id);
+        obs::record_stage(Stage::Parse, 1.0);
+        obs::record_stage(Stage::QueueWait, 3.0);
+        obs::record_stage(Stage::Eval, 2.0);
+        obs::record_stage(Stage::Serialize, 0.5);
+        obs::end_request(200);
+    }
+    let delta = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "disarmed tracing allocated {delta} time(s) across 100k request scopes"
+    );
+}

@@ -1,0 +1,494 @@
+//! Observability end to end (DESIGN.md §14): request ids mint/adopt and
+//! echo on every response, trace ids propagate router → replica and show
+//! up in `/v1/debug/slow` span trees, latency histograms sum exactly
+//! across shards and replicas (fleet percentiles come from merged
+//! buckets, never averaged percentiles), the coordinator measures
+//! `queue_wait` for backlogged requests, and the Prometheus exposition is
+//! conformant over a live scrape.
+
+use convcotm::coordinator::{
+    metrics::aggregate_replica_metrics, Backend, BackendOutput, BatchConfig, Coordinator, Metrics,
+    ModelRegistry, PoolConfig,
+};
+use convcotm::data::{BoolImage, Geometry};
+use convcotm::obs::{self, AtomicLogHist, HistSnapshot};
+use convcotm::server::http::{write_request, write_request_with_headers};
+use convcotm::server::proto::classify_request_body;
+use convcotm::server::router::{spawn_health_checker, RouterConfig, RouterState};
+use convcotm::server::{
+    ClientResponse, HttpConn, HttpServer, Limits, ServerConfig, ServerState,
+};
+use convcotm::tm::{Model, Params};
+use convcotm::util::Json;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Socket tests are timing-sensitive; keep them serial within this binary.
+static HEAVY: Mutex<()> = Mutex::new(());
+
+fn heavy_guard() -> std::sync::MutexGuard<'static, ()> {
+    HEAVY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fixed_class_model(class: usize) -> Model {
+    let p = Params::asic();
+    let mut m = Model::blank(p.clone());
+    m.set_include(0, p.geometry.num_features(), true);
+    m.set_weight(class, 0, 5);
+    m
+}
+
+fn start_pool_server() -> (HttpServer, Arc<ServerState>, Arc<Coordinator>) {
+    let coord = Arc::new(Coordinator::start_pool(
+        ModelRegistry::single("m", fixed_class_model(2)),
+        PoolConfig {
+            shards: 1,
+            queue_capacity: 256,
+            batch: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+            },
+            ..PoolConfig::default()
+        },
+    ));
+    let state = ServerState::new(Arc::clone(&coord));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 2,
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind loopback");
+    (server, state, coord)
+}
+
+fn drain(server: HttpServer, state: Arc<ServerState>, coord: Arc<Coordinator>) {
+    server.request_shutdown();
+    server.join();
+    drop(state);
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+}
+
+fn connect(addr: &str) -> HttpConn<TcpStream> {
+    let stream = TcpStream::connect(addr).expect("connect to loopback server");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    HttpConn::new(stream)
+}
+
+fn roundtrip(
+    conn: &mut HttpConn<TcpStream>,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> ClientResponse {
+    write_request(conn.get_mut(), method, path, body, true).expect("write request");
+    conn.read_response(&Limits::default())
+        .expect("read response")
+        .expect("server closed connection before responding")
+}
+
+fn roundtrip_with_headers(
+    conn: &mut HttpConn<TcpStream>,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    headers: &[(&str, &str)],
+) -> ClientResponse {
+    write_request_with_headers(conn.get_mut(), method, path, body, true, headers)
+        .expect("write request");
+    conn.read_response(&Limits::default())
+        .expect("read response")
+        .expect("server closed connection before responding")
+}
+
+fn body_json(resp: &ClientResponse) -> Json {
+    Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+}
+
+fn is_minted_id(id: &str) -> bool {
+    id.len() == 32 && id.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
+}
+
+/// Every response carries `X-Request-Id`: minted (32 lowercase hex) when
+/// the client sent none or garbage, adopted verbatim when the client's id
+/// is well-formed, truncated when over-long. Tracing stays *disarmed*
+/// here — the id contract must hold without any arming.
+#[test]
+fn request_ids_mint_adopt_and_echo_on_every_response() {
+    let _serial = heavy_guard();
+    let (server, state, coord) = start_pool_server();
+    let mut conn = connect(&server.local_addr().to_string());
+
+    let a = roundtrip(&mut conn, "GET", "/healthz", b"");
+    let id_a = a.header("x-request-id").expect("minted id").to_string();
+    assert!(is_minted_id(&id_a), "minted id not 32-hex: {id_a:?}");
+    let b = roundtrip(&mut conn, "GET", "/healthz", b"");
+    let id_b = b.header("x-request-id").unwrap().to_string();
+    assert!(is_minted_id(&id_b));
+    assert_ne!(id_a, id_b, "minted ids must be unique");
+
+    // A well-formed client id is adopted verbatim — on errors too.
+    for (path, body) in [("/healthz", &b""[..]), ("/v1/classify", &b"{not json"[..])] {
+        let method = if body.is_empty() { "GET" } else { "POST" };
+        let resp = roundtrip_with_headers(
+            &mut conn,
+            method,
+            path,
+            body,
+            &[("x-request-id", "client-id_42")],
+        );
+        assert_eq!(
+            resp.header("x-request-id"),
+            Some("client-id_42"),
+            "{method} {path} did not echo the client id"
+        );
+    }
+
+    // Garbage (illegal characters) is replaced with a minted id.
+    let resp =
+        roundtrip_with_headers(&mut conn, "GET", "/healthz", b"", &[("x-request-id", "a b\"c")]);
+    let echoed = resp.header("x-request-id").unwrap();
+    assert!(is_minted_id(echoed), "garbage id must be re-minted: {echoed:?}");
+
+    // Over-long ids are truncated to the 32-char cap, not rejected.
+    let long = "x".repeat(48);
+    let resp =
+        roundtrip_with_headers(&mut conn, "GET", "/healthz", b"", &[("x-request-id", &long)]);
+    assert_eq!(resp.header("x-request-id"), Some(&long[..32]));
+
+    drain(server, state, coord);
+}
+
+/// The acceptance round-trip: a client id sent to the *router* is echoed
+/// by the router and propagated to the replica, so the shared slow ring
+/// holds two span trees under the same id — the router's (with a
+/// `forward` stage) and the replica's (with `parse`/`eval`/`serialize`).
+#[test]
+fn trace_ids_round_trip_router_to_replica_span_trees() {
+    let _serial = heavy_guard();
+    let _armed = obs::arm(0); // every request competes for the slow ring
+
+    let registry = || ModelRegistry::single("live", fixed_class_model(3));
+    let (a, b) = (start_pool_server_with(registry()), start_pool_server_with(registry()));
+    let router = start_router(vec![a.3.clone(), b.3.clone()]);
+
+    let img = BoolImage::blank();
+    let body = classify_request_body(Some("live"), &[&img]);
+    let mut conn = connect(&router.server.local_addr().to_string());
+    let resp = roundtrip_with_headers(
+        &mut conn,
+        "POST",
+        "/v1/classify",
+        &body,
+        &[("x-request-id", "e2e-trace-1")],
+    );
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(resp.header("x-request-id"), Some("e2e-trace-1"));
+
+    let resp = roundtrip(&mut conn, "GET", "/v1/debug/slow", b"");
+    assert_eq!(resp.status, 200);
+    let v = body_json(&resp);
+    assert_eq!(v.get("armed").and_then(Json::as_bool), Some(true));
+    let slow = v.get("slow").and_then(Json::as_arr).expect("slow ring");
+    let stage_sets: Vec<Vec<&str>> = slow
+        .iter()
+        .filter(|t| t.get("request_id").and_then(Json::as_str) == Some("e2e-trace-1"))
+        .map(|t| {
+            t.get("stages")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .filter_map(|s| s.get("stage").and_then(Json::as_str))
+                .collect()
+        })
+        .collect();
+    assert!(
+        stage_sets.iter().any(|s| s.contains(&"forward")),
+        "no router-side span tree for the propagated id: {stage_sets:?}"
+    );
+    assert!(
+        stage_sets
+            .iter()
+            .any(|s| s.contains(&"eval") && s.contains(&"parse") && s.contains(&"serialize")),
+        "no replica-side span tree for the propagated id: {stage_sets:?}"
+    );
+    // The fan-out also collects each replica's ring under its address.
+    assert!(v.get("replicas").is_some());
+
+    kill_router(router);
+    for r in [a, b] {
+        drain(r.0, r.1, r.2);
+    }
+}
+
+type PoolParts = (HttpServer, Arc<ServerState>, Arc<Coordinator>, String);
+
+fn start_pool_server_with(registry: Arc<ModelRegistry>) -> PoolParts {
+    let coord = Arc::new(Coordinator::start_pool(
+        registry,
+        PoolConfig {
+            shards: 1,
+            queue_capacity: 256,
+            batch: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+            },
+            ..PoolConfig::default()
+        },
+    ));
+    let state = ServerState::new(Arc::clone(&coord));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 2,
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind replica");
+    let addr = server.local_addr().to_string();
+    (server, state, coord, addr)
+}
+
+struct TestRouter {
+    server: HttpServer,
+    state: Arc<RouterState>,
+    health: JoinHandle<()>,
+}
+
+fn start_router(replicas: Vec<String>) -> TestRouter {
+    let state = RouterState::new(RouterConfig {
+        replicas,
+        health_interval: Duration::from_millis(50),
+        ..RouterConfig::default()
+    })
+    .expect("router state");
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 2,
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(&cfg, Arc::clone(&state)).expect("bind router");
+    let health = spawn_health_checker(Arc::clone(&state));
+    TestRouter {
+        server,
+        state,
+        health,
+    }
+}
+
+fn kill_router(r: TestRouter) {
+    r.server.request_shutdown();
+    r.server.join();
+    r.health.join().expect("health checker panicked");
+    drop(r.state);
+}
+
+/// The merge invariant that makes fleet percentiles sound: merging
+/// snapshots is *exactly* elementwise bucket addition, and a merged
+/// histogram equals the histogram of the concatenated stream.
+#[test]
+fn histogram_merge_is_exact_bucket_addition() {
+    let streams: [&[f64]; 3] = [
+        &[3.0, 17.0, 250.0, 4096.0],
+        &[0.4, 0.9, 12.5, 12.5, 1e6],
+        &[55.0, 777.0, 9.1],
+    ];
+    let combined = AtomicLogHist::new();
+    let mut merged = HistSnapshot::default();
+    let mut total = 0u64;
+    for s in streams {
+        let h = AtomicLogHist::new();
+        for &us in s {
+            h.record(us);
+            combined.record(us);
+            total += 1;
+        }
+        merged.merge(&h.snapshot());
+    }
+    assert_eq!(merged, combined.snapshot(), "merge ≠ concatenated stream");
+    assert_eq!(merged.count, total);
+    let bucket_total: u64 = merged.buckets.iter().sum();
+    assert_eq!(bucket_total, total, "every sample lands in exactly one bucket");
+    // Percentiles bracket the data: p0 ≤ min sample's bucket top, p100 ≥ max.
+    assert!(merged.percentile(0.0) <= 0.5);
+    assert!(merged.percentile(1.0) >= 1e6);
+    // Round-trip through the wire form loses nothing.
+    assert_eq!(HistSnapshot::from_json(&merged.to_json()), Some(merged.clone()));
+}
+
+/// Replica aggregation (the satellite bug fix): fleet percentiles must
+/// come from the *merged* histogram, raw per-replica snapshots are
+/// demoted to a labeled `debug` section. Averaging the two replicas'
+/// p99s here would give ~5000 µs; the merged histogram knows better.
+#[test]
+fn fleet_percentiles_come_from_merged_histograms_not_averaged_percentiles() {
+    let fast = Metrics::for_shard(0);
+    let slow = Metrics::for_shard(1);
+    // 99 fast samples at ~100 µs, 1 slow at ~10 ms → fleet p50 must stay
+    // near 100 µs even though the slow replica's own p50 is 10 ms.
+    let fast_lat: Vec<f64> = (0..99).map(|_| 100.0).collect();
+    fast.record_batch(1, &fast_lat);
+    slow.record_batch(1, &[10_000.0]);
+    let agg = aggregate_replica_metrics([
+        ("127.0.0.1:9001", fast.snapshot().to_json()),
+        ("127.0.0.1:9002", slow.snapshot().to_json()),
+    ]);
+    assert_eq!(agg.get("requests").and_then(Json::as_f64), Some(100.0));
+    let p50 = agg
+        .get("latency_p50_us")
+        .and_then(Json::as_f64)
+        .expect("fleet p50");
+    assert!(p50 < 300.0, "fleet p50 {p50} polluted by the slow replica");
+    let p99 = agg
+        .get("latency_p99_us")
+        .and_then(Json::as_f64)
+        .expect("fleet p99");
+    assert!(p99 > 5_000.0, "fleet p99 {p99} must see the slow tail");
+    // The merged wire histogram counts the full fleet.
+    let hist = HistSnapshot::from_json(agg.get("latency_hist").expect("merged hist")).unwrap();
+    assert_eq!(hist.count, 100);
+    // Raw snapshots live under "debug" now, not a top-level "replicas".
+    assert!(agg.get("debug").is_some(), "per-replica snapshots not demoted");
+    assert!(
+        agg.get("debug").unwrap().get("127.0.0.1:9002").is_some(),
+        "debug section not keyed by replica address"
+    );
+}
+
+/// A backend that holds each batch long enough to back the queue up.
+struct SlowBackend;
+
+impl Backend for SlowBackend {
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+    fn max_batch(&self) -> usize {
+        1
+    }
+    fn geometry(&self) -> Geometry {
+        Geometry::asic()
+    }
+    fn classify(&mut self, imgs: &[&BoolImage]) -> anyhow::Result<Vec<BackendOutput>> {
+        std::thread::sleep(Duration::from_millis(3));
+        Ok(imgs
+            .iter()
+            .map(|_| BackendOutput {
+                prediction: 0,
+                class_sums: vec![0; 10],
+                sim_cycles: None,
+                model_version: None,
+                timing: None,
+            })
+            .collect())
+    }
+}
+
+/// `queue_wait` is measured at the coordinator (admission → worker
+/// pickup): back a single-shard queue up behind a slow backend and the
+/// later requests must report a growing, positive queue wait.
+#[test]
+fn queue_wait_is_positive_for_backlogged_requests() {
+    let coord = Coordinator::start_with_capacity(
+        || SlowBackend,
+        BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+        },
+        64,
+    );
+    let rxs: Vec<_> = (0..6).map(|_| coord.submit(BoolImage::blank())).collect();
+    let outputs: Vec<BackendOutput> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("worker alive").expect("classify ok"))
+        .collect();
+    coord.shutdown();
+    for out in &outputs {
+        let t = out.timing.expect("worker stamps stage timings");
+        assert!(t.eval_us > 0.0, "eval time must be positive");
+        assert!(t.queue_wait_us >= 0.0);
+    }
+    // With a 3 ms serial backend, the last of 6 requests queued ≥ 10 ms.
+    let worst = outputs
+        .iter()
+        .map(|o| o.timing.unwrap().queue_wait_us)
+        .fold(0.0f64, f64::max);
+    assert!(
+        worst > 5_000.0,
+        "backlogged requests reported only {worst} µs of queue wait"
+    );
+}
+
+/// A live `?format=prometheus` scrape is conformant: right content type,
+/// `# HELP`/`# TYPE` for every family, counters end in `_total`,
+/// histograms carry cumulative `le` buckets ending at `+Inf` == `_count`.
+/// (`ci/check_promtext.py` lints the same properties in CI; this is the
+/// in-tree mirror so `cargo test` catches drift first.)
+#[test]
+fn prometheus_scrape_is_conformant_over_http() {
+    let _serial = heavy_guard();
+    let (server, state, coord) = start_pool_server();
+    let mut conn = connect(&server.local_addr().to_string());
+
+    // Some traffic so the counters and histograms are non-trivial.
+    let img = BoolImage::blank();
+    let body = classify_request_body(Some("m"), &[&img]);
+    for _ in 0..3 {
+        let resp = roundtrip(&mut conn, "POST", "/v1/classify", &body);
+        assert_eq!(resp.status, 200);
+    }
+
+    let resp = roundtrip(&mut conn, "GET", "/v1/metrics?format=prometheus", b"");
+    assert_eq!(resp.status, 200);
+    assert!(
+        resp.header("content-type")
+            .is_some_and(|ct| ct.starts_with("text/plain; version=0.0.4")),
+        "wrong exposition content type: {:?}",
+        resp.header("content-type")
+    );
+    let text = std::str::from_utf8(&resp.body).unwrap();
+
+    for family in [
+        "convcotm_requests_total",
+        "convcotm_errors_total",
+        "convcotm_batches_total",
+        "convcotm_request_latency_seconds",
+        "convcotm_queue_wait_seconds",
+        "convcotm_eval_seconds",
+    ] {
+        assert!(text.contains(&format!("# HELP {family} ")), "no HELP for {family}");
+        assert!(text.contains(&format!("# TYPE {family} ")), "no TYPE for {family}");
+    }
+    // Histogram shape: +Inf bucket equals _count.
+    for family in ["convcotm_request_latency_seconds"] {
+        let inf = sample_value(text, &format!("{family}_bucket{{le=\"+Inf\"}}"));
+        let count = sample_value(text, &format!("{family}_count"));
+        assert_eq!(inf, count, "{family}: +Inf bucket must equal _count");
+        assert!(count >= 3.0, "{family}: scrape missed the traffic");
+    }
+    // Counter naming convention: every TYPE counter family ends _total.
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, kind) = (it.next().unwrap(), it.next().unwrap());
+            if kind == "counter" {
+                assert!(name.ends_with("_total"), "counter {name} must end in _total");
+            }
+        }
+    }
+    // The JSON spelling still answers on the same canonical path.
+    let resp = roundtrip(&mut conn, "GET", "/v1/metrics", b"");
+    assert_eq!(resp.status, 200);
+    assert!(body_json(&resp).get("latency_hist").is_some());
+
+    drain(server, state, coord);
+}
+
+/// First value of the sample whose line starts with `prefix` followed by
+/// a space (exact family+labels match).
+fn sample_value(text: &str, prefix: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(prefix)?.strip_prefix(' ')?.parse().ok())
+        .unwrap_or_else(|| panic!("no sample {prefix}"))
+}

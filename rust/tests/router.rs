@@ -185,8 +185,10 @@ fn classify_requests_route_consistently_to_one_owner() {
 }
 
 /// Tier-wide read paths: `/v1/models` unions disjoint inventories,
-/// `/metrics` sums replica counters under a `"replicas"` breakdown, and
-/// fan-out admin failures relay the worst replica's stable code.
+/// `/v1/metrics` sums replica counters (raw per-replica snapshots are
+/// demoted to a `"debug"` breakdown — fleet percentiles come from the
+/// merged histograms), and fan-out admin failures relay the worst
+/// replica's stable code.
 #[test]
 fn inventory_metrics_and_admin_errors_aggregate_across_the_tier() {
     let _serial = heavy_guard();
@@ -220,13 +222,17 @@ fn inventory_metrics_and_admin_errors_aggregate_across_the_tier() {
         let resp = roundtrip(&mut direct, "POST", "/v1/classify", &body);
         assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
     }
-    let resp = roundtrip(&mut conn, "GET", "/metrics", b"");
+    let resp = roundtrip(&mut conn, "GET", "/v1/metrics", b"");
     assert_eq!(resp.status, 200);
     let v = body_json(&resp);
     assert_eq!(v.get("requests").and_then(Json::as_f64), Some(2.0));
-    for key in ["replicas", "http", "router"] {
-        assert!(v.get(key).is_some(), "router /metrics missing '{key}'");
+    for key in ["debug", "http", "router"] {
+        assert!(v.get(key).is_some(), "router /v1/metrics missing '{key}'");
     }
+    // The deprecated alias spelling still answers the same body.
+    let resp = roundtrip(&mut conn, "GET", "/metrics", b"");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("deprecation"), Some("true"));
 
     // Fan-out admin failure: both replicas reject the empty manifest, the
     // router relays the worst status and its stable code.

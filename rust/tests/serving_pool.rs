@@ -237,6 +237,7 @@ impl Backend for GateBackend {
                 class_sums: vec![0; 10],
                 sim_cycles: None,
                 model_version: None,
+                timing: None,
             })
             .collect())
     }
